@@ -1,0 +1,97 @@
+//! Quickstart: the smallest end-to-end tour of the stack.
+//!
+//! 1. builds a tiny DNS ground truth in-process (seconds);
+//! 2. loads the AOT-compiled policy artifact via PJRT;
+//! 3. runs one LES episode where the (untrained) policy controls the
+//!    per-element Smagorinsky coefficient;
+//! 4. prints the reward trace and the spectrum vs the DNS target.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once beforehand).
+
+use anyhow::Result;
+use relexi::config::{CaseConfig, RunConfig};
+use relexi::rl::{gaussian, LesEnv};
+use relexi::runtime::{PolicyRuntime, Registry, Runtime};
+use relexi::solver::dns::{generate, TruthParams};
+use relexi::util::bench::Table;
+use relexi::util::Rng;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    // A reduced 24-DOF-style case: 12^3 LES (2^3 elements of 6^3 points)
+    // against a 24^3 DNS, so the whole example runs in ~a minute.
+    let mut cfg = RunConfig::default();
+    cfg.case = CaseConfig {
+        name: "quickstart".into(),
+        n: 5,
+        elems_per_dir: 2,
+        k_max: 4,
+        alpha: 0.4,
+    };
+    cfg.solver.t_end = 1.0; // 10 actions
+    cfg.solver.dns_points = 24;
+
+    println!("[1/4] generating a small DNS ground truth (24^3)...");
+    let truth = Arc::new(generate(
+        &TruthParams {
+            n_dns: cfg.solver.dns_points,
+            n_les: cfg.case.points_per_dir(),
+            nu: cfg.solver.nu,
+            ke_target: cfg.solver.ke_target,
+            spinup_time: 2.0,
+            n_states: 4,
+            sample_interval: 0.4,
+            seed: 7,
+        },
+        |i, n| println!("      DNS sample {i}/{n}"),
+    ));
+
+    println!("[2/4] loading the AOT policy artifact via PJRT...");
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open(Path::new("artifacts"))?;
+    let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+    let theta = reg.initial_params(cfg.case.n)?;
+    println!("      platform: {}, {} parameters", rt.platform(), theta.len());
+
+    println!("[3/4] running one RL-controlled LES episode...");
+    let mut env = LesEnv::new(&cfg.case, &cfg.solver, truth.clone())?;
+    let mut rng = Rng::new(2022);
+    let mut obs = env.reset(&mut rng, false);
+    let n_elems = env.n_elems();
+    let mut rewards = Vec::new();
+    loop {
+        let out = policy.forward(&theta, &obs, n_elems)?;
+        let act = gaussian::sample(&out.mean, out.log_std, &mut rng);
+        let step = env.step(&act.iter().map(|&a| a as f64).collect::<Vec<_>>());
+        rewards.push(step.reward);
+        println!(
+            "      t={:.1}  reward {:+.4}  spectrum error {:.4}",
+            env.solver.t, step.reward, step.spec_error
+        );
+        if step.done {
+            break;
+        }
+        obs = env.observe();
+    }
+
+    println!("[4/4] final spectrum vs DNS target:");
+    let spec = env.spectrum();
+    let mut t = Table::new(&["k", "E_LES", "E_DNS", "ratio"]);
+    for k in 1..=cfg.case.k_max {
+        t.row(vec![
+            k.to_string(),
+            format!("{:.4e}", spec[k]),
+            format!("{:.4e}", truth.mean_spectrum[k]),
+            format!("{:.3}", spec[k] / truth.mean_spectrum[k]),
+        ]);
+    }
+    t.print("Quickstart spectrum");
+    println!(
+        "mean reward over the episode: {:+.4} (untrained policy)",
+        rewards.iter().sum::<f64>() / rewards.len() as f64
+    );
+    println!("\nNext: examples/train_hit.rs trains this policy with PPO.");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Turbulence-model comparison on the held-out test state (Fig. 5 bottom
+//! row): RL policy (optionally a trained checkpoint) vs Smagorinsky vs
+//! implicit LES, with the DNS min/max band, plus the Cs histogram.
+//!
+//! ```text
+//! cargo run --release --example spectrum_compare -- \
+//!     --truth runs/truth_24dof.bin [--checkpoint runs/train_hit/policy_final.bin]
+//! ```
+
+use anyhow::{Context, Result};
+use relexi::config::RunConfig;
+use relexi::coordinator::{eval_baseline, eval_policy};
+use relexi::runtime::{PolicyRuntime, Registry, Runtime};
+use relexi::solver::dns::Truth;
+use relexi::util::bench::Table;
+use relexi::util::cli::Args;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut cfg = RunConfig::default();
+    cfg.solver.t_end = args.get_parse("t-end", 2.0f64)?;
+    let truth_path = args.get_or("truth", "runs/truth_24dof.bin");
+    let truth = Arc::new(
+        Truth::load(Path::new(&truth_path))
+            .with_context(|| format!("load {truth_path}; run relexi gen-truth"))?,
+    );
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open(Path::new(&cfg.artifacts_dir))?;
+    let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+    let (theta, label) = match args.get("checkpoint") {
+        Some(p) => (
+            relexi::util::binio::read_f32_vec(Path::new(p))?,
+            format!("RL trained ({p})"),
+        ),
+        None => (reg.initial_params(cfg.case.n)?, "RL untrained".to_string()),
+    };
+
+    println!("evaluating {label} + baselines on the test state...");
+    let rl = eval_policy(&cfg, &truth, &policy, &theta, None)?;
+    let smag = eval_baseline(&cfg, &truth, cfg.solver.smagorinsky_cs)?;
+    let implicit = eval_baseline(&cfg, &truth, 0.0)?;
+
+    let mut t = Table::new(&["model", "normalized return", "final spectrum err"]);
+    let spec_err = |spec: &[f64]| {
+        relexi::solver::spectrum::spectrum_error(&truth.mean_spectrum, spec, cfg.case.k_max)
+    };
+    t.row(vec![
+        label.clone(),
+        format!("{:+.4}", rl.normalized_return),
+        format!("{:.4}", spec_err(&rl.final_spectrum)),
+    ]);
+    t.row(vec![
+        "Smagorinsky Cs=0.17".into(),
+        format!("{:+.4}", smag.normalized_return),
+        format!("{:.4}", spec_err(&smag.final_spectrum)),
+    ]);
+    t.row(vec![
+        "implicit (Cs=0)".into(),
+        format!("{:+.4}", implicit.normalized_return),
+        format!("{:.4}", spec_err(&implicit.final_spectrum)),
+    ]);
+    t.print("Model comparison (Fig. 5)");
+
+    let mut s = Table::new(&["k", "DNS mean", "DNS band", "RL", "Smagorinsky", "implicit"]);
+    for k in 1..=cfg.case.k_max {
+        s.row(vec![
+            k.to_string(),
+            format!("{:.3e}", truth.mean_spectrum[k]),
+            format!("[{:.2e}, {:.2e}]", truth.min_spectrum[k], truth.max_spectrum[k]),
+            format!("{:.3e}", rl.final_spectrum[k]),
+            format!("{:.3e}", smag.final_spectrum[k]),
+            format!("{:.3e}", implicit.final_spectrum[k]),
+        ]);
+    }
+    s.print("Energy spectra at t_end with DNS band (Fig. 5c)");
+
+    // Fig. 5c as a log-log terminal plot with the DNS band.
+    use relexi::util::plot::{render, Scale, Series};
+    let ks: Vec<f64> = (1..=cfg.case.k_max).map(|k| k as f64).collect();
+    let pick = |spec: &[f64]| ks.iter().map(|&k| spec[k as usize]).collect::<Vec<_>>();
+    println!(
+        "\n{}",
+        render(
+            "Energy spectra at t_end (Fig. 5c, log-log)",
+            &[
+                Series::new("DNS mean", ks.clone(), pick(&truth.mean_spectrum)),
+                Series::new(&label, ks.clone(), pick(&rl.final_spectrum)),
+                Series::new("Smagorinsky", ks.clone(), pick(&smag.final_spectrum)),
+                Series::new("implicit", ks.clone(), pick(&implicit.final_spectrum)),
+                Series::new("DNS min", ks.clone(), pick(&truth.min_spectrum)),
+                Series::new("DNS max", ks.clone(), pick(&truth.max_spectrum)),
+            ],
+            64,
+            16,
+            Scale::Log10,
+            Scale::Log10,
+        )
+    );
+
+    println!("\n{label} — Cs prediction distribution (Fig. 5d):");
+    println!(
+        "{}",
+        relexi::util::stats::ascii_histogram(&rl.cs_samples, 0.0, 0.5, 20, 40)
+    );
+    Ok(())
+}

@@ -1,0 +1,207 @@
+"""AOT bridge: lower the L2 JAX functions to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime (``rust/src/runtime``)
+loads the text with ``HloModuleProto::from_text_file``, compiles it on the
+PJRT CPU client and executes it on the training hot path.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted into ``artifacts/``:
+
+  policy_fwd_n{N}_b{B}.hlo.txt   (theta, obs[B,...]) -> (mean, log_std, value)
+  train_step_n{N}_b{M}.hlo.txt   full PPO+Adam minibatch update
+  params0_n{N}.bin               initial flat parameter vector (f32 LE)
+  manifest.json                  layouts, shapes, hyperparameters
+  testvec.json                   deterministic vectors for Rust round-trip
+                                 tests (inputs + expected outputs)
+"""
+
+import argparse
+import json
+import math
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+POLICY_BATCHES = (64, 256, 1024)
+TRAIN_BATCHES = (256, 1024)
+NS = (5, 7)
+SEED = 2022  # paper year; fixed for reproducible params0
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def obs_spec(n: int, b: int):
+    return jax.ShapeDtypeStruct((b, n + 1, n + 1, n + 1, 3), jnp.float32)
+
+
+def vec_spec(k: int):
+    return jax.ShapeDtypeStruct((k,), jnp.float32)
+
+
+def lower_policy(n: int, b: int, total: int) -> str:
+    fn = partial(model.policy_apply, n=n)
+    lowered = jax.jit(fn).lower(vec_spec(total), obs_spec(n, b))
+    return to_hlo_text(lowered)
+
+
+def lower_train(n: int, mb: int, total: int) -> str:
+    fn = partial(model.train_step, n=n)
+    lowered = jax.jit(fn).lower(
+        vec_spec(total),                     # theta
+        vec_spec(total),                     # adam m
+        vec_spec(total),                     # adam v
+        jax.ShapeDtypeStruct((), jnp.float32),  # step
+        obs_spec(n, mb),
+        vec_spec(mb),                        # act
+        vec_spec(mb),                        # old_logp
+        vec_spec(mb),                        # adv
+        vec_spec(mb),                        # ret
+    )
+    return to_hlo_text(lowered)
+
+
+def write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def make_testvec(n: int, theta: np.ndarray, out_dir: str) -> dict:
+    """Deterministic inputs + expected outputs for the Rust runtime tests."""
+    b = 256  # a batch size lowered for BOTH policy_fwd and train_step
+    rng = np.random.default_rng(7)
+    obs = rng.standard_normal((b, n + 1, n + 1, n + 1, 3)).astype(np.float32)
+    obs.reshape(-1).tofile(os.path.join(out_dir, f"testvec_obs_n{n}.bin"))
+    mean, log_std, value = jax.jit(partial(model.policy_apply, n=n))(
+        jnp.asarray(theta), jnp.asarray(obs)
+    )
+    act = np.clip(np.asarray(mean) + 0.01, 0.0, 0.5).astype(np.float32)
+    old_logp = np.asarray(
+        model.gaussian_logp(jnp.asarray(act), mean, log_std[0])
+    ).astype(np.float32)
+    adv = rng.standard_normal(b).astype(np.float32)
+    ret = rng.standard_normal(b).astype(np.float32)
+    zeros = np.zeros_like(theta)
+    out = jax.jit(partial(model.train_step, n=n))(
+        jnp.asarray(theta), jnp.asarray(zeros), jnp.asarray(zeros),
+        jnp.float32(0.0), jnp.asarray(obs), jnp.asarray(act),
+        jnp.asarray(old_logp), jnp.asarray(adv), jnp.asarray(ret),
+    )
+    (theta2, _m2, _v2, step2, loss, pg, vf, ent, clipfrac, akl) = out
+    return {
+        "n": n,
+        "batch": b,
+        "obs_first8": [float(x) for x in obs.reshape(-1)[:8]],
+        "obs_seed": 7,
+        "mean": [float(x) for x in np.asarray(mean)],
+        "value": [float(x) for x in np.asarray(value)],
+        "log_std": float(np.asarray(log_std)[0]),
+        "act": [float(x) for x in act],
+        "old_logp": [float(x) for x in old_logp],
+        "adv": [float(x) for x in adv],
+        "ret": [float(x) for x in ret],
+        "train_loss": float(loss),
+        "train_pg": float(pg),
+        "train_vf": float(vf),
+        "train_entropy": float(ent),
+        "train_clipfrac": float(clipfrac),
+        "train_approx_kl": float(akl),
+        "train_step_out": float(step2),
+        "theta2_first8": [float(x) for x in np.asarray(theta2)[:8]],
+        "theta2_l2": float(np.linalg.norm(np.asarray(theta2))),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only N=5, B=64/M=256 (for CI-style smoke runs)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    ns = (5,) if args.quick else NS
+    pbs = (64,) if args.quick else POLICY_BATCHES
+    tbs = (256,) if args.quick else TRAIN_BATCHES
+
+    manifest = {
+        "seed": SEED,
+        "hyperparameters": {
+            "learning_rate": model.LEARNING_RATE,
+            "clip_eps": model.CLIP_EPS,
+            "vf_coef": model.VF_COEF,
+            "ent_coef": model.ENT_COEF,
+            "adam_b1": model.ADAM_B1,
+            "adam_b2": model.ADAM_B2,
+            "adam_eps": model.ADAM_EPS,
+            "log_std_init": model.LOG_STD_INIT,
+        },
+        "models": {},
+        "artifacts": [],
+    }
+
+    for n in ns:
+        layout, total = model.param_layout(n)
+        theta0 = np.asarray(
+            model.init_params(jax.random.PRNGKey(SEED), n), dtype=np.float32
+        )
+        pbin = os.path.join(args.out_dir, f"params0_n{n}.bin")
+        theta0.tofile(pbin)
+        print(f"  wrote {pbin} ({total} params)")
+        manifest["models"][str(n)] = {
+            "obs_shape": [n + 1, n + 1, n + 1, 3],
+            "param_count": total,
+            "trunk_param_count": model.trunk_param_count(n),
+            "layout": [
+                {"name": name, "shape": list(shape), "offset": off}
+                for name, shape, off in layout
+            ],
+            "arch": [
+                {"kernel": k, "filters": f, "padding": p} for k, f, p in model.ARCH[n]
+            ],
+        }
+        for b in pbs:
+            path = os.path.join(args.out_dir, f"policy_fwd_n{n}_b{b}.hlo.txt")
+            write(path, lower_policy(n, b, total))
+            manifest["artifacts"].append(
+                {"kind": "policy_fwd", "n": n, "batch": b,
+                 "file": os.path.basename(path)}
+            )
+        for mb in tbs:
+            path = os.path.join(args.out_dir, f"train_step_n{n}_b{mb}.hlo.txt")
+            write(path, lower_train(n, mb, total))
+            manifest["artifacts"].append(
+                {"kind": "train_step", "n": n, "batch": mb,
+                 "file": os.path.basename(path)}
+            )
+
+    testvec = {str(n): make_testvec(n, np.fromfile(
+        os.path.join(args.out_dir, f"params0_n{n}.bin"), dtype=np.float32),
+        args.out_dir)
+        for n in ns}
+    with open(os.path.join(args.out_dir, "testvec.json"), "w") as f:
+        json.dump(testvec, f)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("AOT artifacts complete.")
+
+
+if __name__ == "__main__":
+    main()

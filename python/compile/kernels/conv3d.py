@@ -1,0 +1,128 @@
+"""L1 — Pallas 3-D convolution kernel for the Relexi policy CNN (Table 2).
+
+The policy network convolves each DG element's nodal velocity field
+(``(N+1)^3 x 3``) down to a single Smagorinsky coefficient.  The spatial
+extent is tiny (6^3 or 8^3), so the parallel axis is the *batch* of
+elements (``n_envs * n_elems``).  The kernel therefore:
+
+* maps the Pallas ``grid`` over batch tiles — one program instance owns a
+  contiguous slab of elements whose activations fit comfortably in VMEM
+  (``6^3 * 8 ch * 4 B = 6.9 KiB`` per element, far below the ~16 MiB VMEM
+  budget even for 512-element tiles);
+* expresses the convolution as a sum of **shifted matmuls**: for every
+  static kernel offset ``(i, j, l)`` the input slab is sliced and contracted
+  against the ``(Cin, Cout)`` filter plane.  Each contraction is a dense
+  ``(B*Do*Ho*Wo, Cin) @ (Cin, Cout)`` matmul, i.e. MXU work, instead of the
+  CUDA-style thread-per-output gather the paper's A100 setup would use.
+  This is the GPU->TPU adaptation described in DESIGN.md §3.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness is what the build-time pytest checks.  The
+real-TPU resource estimate for the chosen tiling lives in EXPERIMENTS.md
+§Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of elements per Pallas program instance.  Chosen so the
+# widest activation (6^3 x 8 f32) of a full tile stays < 1 MiB in VMEM while
+# still giving the MXU a tall matmul operand. See EXPERIMENTS.md §Perf-L1.
+DEFAULT_BLOCK_B = 64
+
+
+def _out_spatial(in_dim: int, k: int, padding: str) -> int:
+    if padding == "same":
+        return in_dim
+    if padding == "valid":
+        return in_dim - k + 1
+    raise ValueError(f"unsupported padding {padding!r}")
+
+
+def _conv3d_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, padding: str):
+    """One batch-tile of direct 3-D convolution as shifted matmuls.
+
+    x_ref: (Bt, D, H, W, Cin)   w_ref: (k, k, k, Cin, Cout)
+    b_ref: (Cout,)              o_ref: (Bt, Do, Ho, Wo, Cout)
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    bias = b_ref[...]
+    bt, d, h, wd, cin = x.shape
+    cout = w.shape[-1]
+
+    if padding == "same":
+        # zero padding, matching the paper's first conv layer
+        lo = (k - 1) // 2
+        hi = k - 1 - lo
+        x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (lo, hi), (0, 0)))
+
+    do = _out_spatial(d, k, padding)
+    ho = _out_spatial(h, k, padding)
+    wo = _out_spatial(wd, k, padding)
+
+    acc = jnp.zeros((bt * do * ho * wo, cout), dtype=jnp.float32)
+    # k is a static Python int (2 or 3): the offset loop fully unrolls at
+    # trace time into k^3 shifted (rows, Cin) @ (Cin, Cout) matmuls.
+    for i in range(k):
+        for j in range(k):
+            for l in range(k):
+                sl = x[:, i : i + do, j : j + ho, l : l + wo, :]
+                rows = sl.reshape(bt * do * ho * wo, cin)
+                acc = acc + jnp.dot(
+                    rows, w[i, j, l], preferred_element_type=jnp.float32
+                )
+    out = acc.reshape(bt, do, ho, wo, cout) + bias
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def conv3d(x, w, b, *, padding: str = "valid", block_b: int | None = None):
+    """Batched 3-D convolution (stride 1) via a Pallas kernel.
+
+    Args:
+      x: ``(B, D, H, W, Cin)`` input activations.
+      w: ``(k, k, k, Cin, Cout)`` filters.
+      b: ``(Cout,)`` bias.
+      padding: ``"same"`` (zero padding) or ``"valid"``.
+      block_b: elements per program instance; must divide ``B``.  Defaults to
+        ``min(B, DEFAULT_BLOCK_B)``.
+
+    Returns:
+      ``(B, Do, Ho, Wo, Cout)`` output, f32.
+    """
+    bsz, d, h, wd, cin = x.shape
+    k = int(w.shape[0])
+    if w.shape[:3] != (k, k, k):
+        raise ValueError(f"anisotropic kernels unsupported: {w.shape}")
+    if w.shape[3] != cin:
+        raise ValueError(f"Cin mismatch: x has {cin}, w has {w.shape[3]}")
+    cout = int(w.shape[-1])
+
+    if block_b is None:
+        block_b = min(bsz, DEFAULT_BLOCK_B)
+    if bsz % block_b != 0:
+        # Fall back to one tile; shapes here are small and static.
+        block_b = bsz
+
+    do = _out_spatial(d, k, padding)
+    ho = _out_spatial(h, k, padding)
+    wo = _out_spatial(wd, k, padding)
+
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        partial(_conv3d_kernel, k=k, padding=padding),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d, h, wd, cin), lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((k, k, k, cin, cout), lambda i: (0, 0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, do, ho, wo, cout), lambda i: (i, 0, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, do, ho, wo, cout), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Pallas conv3d kernel.
+
+Uses ``lax.conv_general_dilated`` with NDHWC/DHWIO dimension numbers — a
+completely independent code path from the shifted-matmul Pallas kernel, so
+agreement is a meaningful correctness signal.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv3d_ref(x, w, b, *, padding: str = "valid"):
+    """Reference 3-D convolution. Shapes as in ``conv3d.conv3d``."""
+    pad = {"same": "SAME", "valid": "VALID"}[padding]
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1, 1),
+        padding=pad,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+    return out + b.astype(jnp.float32)

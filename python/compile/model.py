@@ -1,0 +1,286 @@
+"""L2 — the Relexi policy/value networks and the PPO train step in JAX.
+
+Everything here exists only at *build time*: ``aot.py`` lowers these
+functions to HLO text once, and the Rust coordinator executes the compiled
+artifacts via PJRT on the training hot path.  Python never runs during
+training.
+
+The actor is exactly Table 2 of the paper (for N=5; the N=7 variant adds
+one valid conv so the 8^3 element reduces to a scalar):
+
+    Input  (B, N+1, N+1, N+1, 3)        nodal velocities of one DG element
+    Conv3D k=3, 8 filters, zero pad     ReLU
+    Conv3D k=3, 8 filters, no pad       ReLU
+    Conv3D k=3, 4 filters, no pad       ReLU
+    Conv3D k=2, 1 filter,  no pad       linear
+    Scale  y = 0.5 * sigmoid(x)         -> Cs in [0, 0.5]
+
+The actor's trunk has 3,293 parameters for N=5, matching the paper's
+"around 3,300".  A scalar learnable log-sigma turns the mean into a
+Gaussian policy; a structurally identical critic (linear output head, no
+scale layer) provides the value baseline used by the PPO implementation in
+TF-Agents that the paper trains with.
+
+All convolutions run through the Pallas kernel in ``kernels/conv3d.py``
+(L1), so the kernel lowers into the same HLO modules Rust loads.
+
+Parameter convention: a single flat f32 vector.  The order is
+``[actor w1, b1, ..., wn, bn, log_std, critic w1, b1, ..., wn, bn]``;
+offsets are published in the artifact manifest so the Rust side can
+(de)serialize checkpoints.  Optimizer state (Adam m, v) uses the same flat
+layout.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv3d import conv3d
+from .kernels.ref import conv3d_ref
+
+# ---------------------------------------------------------------------------
+# Architecture (Table 2 and its N=7 generalization)
+# ---------------------------------------------------------------------------
+
+# (kernel, filters, padding) per layer; input channels = 3 velocities.
+ARCH = {
+    5: [(3, 8, "same"), (3, 8, "valid"), (3, 4, "valid"), (2, 1, "valid")],
+    7: [
+        (3, 8, "same"),
+        (3, 8, "valid"),
+        (3, 4, "valid"),
+        (3, 4, "valid"),
+        (2, 1, "valid"),
+    ],
+}
+
+# PPO hyperparameters (paper §5.3): lr 1e-4, Adam, clip 0.2, entropy coeff 0.
+LEARNING_RATE = 1e-4
+CLIP_EPS = 0.2
+VF_COEF = 0.5
+ENT_COEF = 0.0
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+LOG_STD_INIT = math.log(0.05)
+
+
+def layer_shapes(n: int):
+    """[(w_shape, b_shape), ...] for one trunk (actor or critic)."""
+    shapes = []
+    cin = 3
+    for k, cout, _pad in ARCH[n]:
+        shapes.append(((k, k, k, cin, cout), (cout,)))
+        cin = cout
+    return shapes
+
+
+def param_layout(n: int):
+    """Flat-vector layout: list of (name, shape, offset); total size."""
+    layout = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        size = int(math.prod(shape))
+        layout.append((name, shape, off))
+        off += size
+
+    for i, (ws, bs) in enumerate(layer_shapes(n)):
+        add(f"actor/w{i}", ws)
+        add(f"actor/b{i}", bs)
+    add("log_std", (1,))
+    for i, (ws, bs) in enumerate(layer_shapes(n)):
+        add(f"critic/w{i}", ws)
+        add(f"critic/b{i}", bs)
+    return layout, off
+
+
+def trunk_param_count(n: int) -> int:
+    """Parameters of one trunk — 3,293 for N=5 (paper: 'around 3,300')."""
+    return sum(
+        int(math.prod(ws)) + int(math.prod(bs)) for ws, bs in layer_shapes(n)
+    )
+
+
+def unflatten(theta, n: int):
+    """Flat f32 vector -> dict of named parameter arrays."""
+    layout, total = param_layout(n)
+    assert theta.shape == (total,), (theta.shape, total)
+    params = {}
+    for name, shape, off in layout:
+        size = int(math.prod(shape))
+        params[name] = jax.lax.dynamic_slice(theta, (off,), (size,)).reshape(shape)
+    return params
+
+
+def init_params(key, n: int):
+    """He-normal trunk init + LOG_STD_INIT, as one flat vector."""
+    layout, total = param_layout(n)
+    chunks = []
+    for name, shape, _off in layout:
+        key, sub = jax.random.split(key)
+        if name == "log_std":
+            chunks.append(jnp.full((1,), LOG_STD_INIT, dtype=jnp.float32))
+        elif name.endswith(tuple(f"b{i}" for i in range(8))) and "/b" in name:
+            chunks.append(jnp.zeros(shape, dtype=jnp.float32).reshape(-1))
+        else:
+            fan_in = int(math.prod(shape[:-1]))
+            std = math.sqrt(2.0 / fan_in)
+            chunks.append(
+                (jax.random.normal(sub, shape, dtype=jnp.float32) * std).reshape(-1)
+            )
+    theta = jnp.concatenate(chunks)
+    assert theta.shape == (total,)
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# Differentiable conv: Pallas forward, custom VJP
+# ---------------------------------------------------------------------------
+#
+# ``pallas_call`` has no transpose rule in interpret mode, so the PPO
+# backward pass needs an explicit VJP.  dx is itself a convolution (flipped,
+# in/out-swapped filters; 'valid' forward <-> 'full' backward, 'same' is
+# self-adjoint for odd k) and reuses the Pallas kernel; dw/db are small
+# dense contractions done with jnp (they still lower to HLO dots).
+
+
+def _conv_full(x, w, b):
+    k = w.shape[0]
+    p = k - 1
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (p, p), (0, 0)))
+    return conv3d(xp, w, b, padding="valid")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def conv3d_ad(x, w, b, padding: str):
+    return conv3d(x, w, b, padding=padding)
+
+
+def _conv3d_ad_fwd(x, w, b, padding):
+    return conv3d(x, w, b, padding=padding), (x, w)
+
+
+def _conv3d_ad_bwd(padding, res, g):
+    x, w = res
+    k = w.shape[0]
+    wt = jnp.flip(w, axis=(0, 1, 2)).swapaxes(3, 4)  # (k,k,k,Cout,Cin)
+    zb = jnp.zeros((wt.shape[-1],), dtype=jnp.float32)
+    if padding == "valid":
+        dx = _conv_full(g, wt, zb)
+        xe = x
+    elif padding == "same":
+        dx = conv3d(g, wt, zb, padding="same")
+        lo = (k - 1) // 2
+        hi = k - 1 - lo
+        xe = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (lo, hi), (0, 0)))
+    else:  # pragma: no cover
+        raise ValueError(padding)
+    do, ho, wo = g.shape[1:4]
+    # dw[i,j,l,ci,co] = sum_{b,o} x[b, o+ijl, ci] * g[b, o, co]
+    dw = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    jnp.stack(
+                        [
+                            jnp.einsum(
+                                "bdhwc,bdhwo->co",
+                                xe[:, i : i + do, j : j + ho, l : l + wo, :],
+                                g,
+                            )
+                            for l in range(k)
+                        ]
+                    )
+                    for j in range(k)
+                ]
+            )
+            for i in range(k)
+        ]
+    )
+    db = jnp.sum(g, axis=(0, 1, 2, 3))
+    return dx, dw, db
+
+
+conv3d_ad.defvjp(_conv3d_ad_fwd, _conv3d_ad_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _trunk(params, prefix, obs, n, conv_fn):
+    h = obs
+    for i, (_k, _f, pad) in enumerate(ARCH[n]):
+        h = conv_fn(h, params[f"{prefix}/w{i}"], params[f"{prefix}/b{i}"], pad)
+        if i < len(ARCH[n]) - 1:
+            h = jax.nn.relu(h)
+    return h.reshape(obs.shape[0])  # (B,1,1,1,1) -> (B,)
+
+
+def policy_apply(theta, obs, n: int, use_pallas: bool = True):
+    """(theta, obs[B, N+1, N+1, N+1, 3]) -> (mean[B], log_std[1], value[B]).
+
+    mean is the scale-layer output 0.5*sigmoid(x) in [0, 0.5] (Table 2).
+    """
+    conv_fn = (
+        (lambda x, w, b, pad: conv3d_ad(x, w, b, pad))
+        if use_pallas
+        else (lambda x, w, b, pad: conv3d_ref(x, w, b, padding=pad))
+    )
+    params = unflatten(theta, n)
+    logits = _trunk(params, "actor", obs, n, conv_fn)
+    mean = 0.5 * jax.nn.sigmoid(logits)
+    value = _trunk(params, "critic", obs, n, conv_fn)
+    return mean, params["log_std"], value
+
+
+def gaussian_logp(act, mean, log_std):
+    """Elementwise diagonal-Gaussian log density."""
+    sigma = jnp.exp(log_std)
+    z = (act - mean) / sigma
+    return -0.5 * z * z - log_std - 0.5 * math.log(2.0 * math.pi)
+
+
+# ---------------------------------------------------------------------------
+# PPO train step (clipping variant, paper §5.3)
+# ---------------------------------------------------------------------------
+
+
+def ppo_loss(theta, obs, act, old_logp, adv, ret, n: int, use_pallas: bool = True):
+    mean, log_std, value = policy_apply(theta, obs, n, use_pallas)
+    logp = gaussian_logp(act, mean, log_std[0])
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS)
+    pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    v_loss = 0.5 * jnp.mean((value - ret) ** 2)
+    entropy = jnp.mean(0.5 * math.log(2.0 * math.pi * math.e) + log_std)
+    loss = pg_loss + VF_COEF * v_loss - ENT_COEF * entropy
+    clipfrac = jnp.mean((jnp.abs(ratio - 1.0) > CLIP_EPS).astype(jnp.float32))
+    approx_kl = jnp.mean(old_logp - logp)
+    return loss, (pg_loss, v_loss, entropy, clipfrac, approx_kl)
+
+
+def train_step(theta, m, v, step, obs, act, old_logp, adv, ret, n: int,
+               use_pallas: bool = True):
+    """One Adam step of the PPO objective on one minibatch.
+
+    All state (params + Adam moments + step counter) is explicit, so the
+    Rust coordinator owns it between calls.  Returns
+    ``(theta', m', v', step', loss, pg, vf, entropy, clipfrac, approx_kl)``.
+    """
+    (loss, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        theta, obs, act, old_logp, adv, ret, n, use_pallas
+    )
+    step = step + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    theta = theta - LEARNING_RATE * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    pg, vf, ent, clipfrac, akl = aux
+    return (theta, m, v, step, loss, pg, vf, ent, clipfrac, akl)

@@ -1,0 +1,56 @@
+"""AOT path sanity: the HLO-text emission used by the Rust runtime.
+
+Kept light (one tiny lowering) — the heavyweight artifact round-trip is
+covered by the Rust integration test against testvec.json.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_emits_parseable_module():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    # HLO text, not a serialized proto: must be human-readable and name a
+    # module with an entry computation.
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_obs_spec_shapes():
+    s = aot.obs_spec(5, 64)
+    assert s.shape == (64, 6, 6, 6, 3)
+    assert s.dtype == jnp.float32
+    assert aot.obs_spec(7, 8).shape == (8, 8, 8, 8, 3)
+
+
+def test_manifest_param_counts_consistent():
+    for n in (5, 7):
+        _layout, total = model.param_layout(n)
+        assert total == 2 * model.trunk_param_count(n) + 1
+
+
+def test_testvec_roundtrip_values(tmp_path):
+    """make_testvec must be reproducible and self-consistent."""
+    n = 5
+    theta = np.asarray(
+        model.init_params(jax.random.PRNGKey(aot.SEED), n), dtype=np.float32
+    )
+    tv = aot.make_testvec(n, theta, str(tmp_path))
+    obs = np.fromfile(tmp_path / f"testvec_obs_n{n}.bin", dtype=np.float32)
+    assert obs.shape == (tv["batch"] * 6 * 6 * 6 * 3,)
+    np.testing.assert_allclose(obs[:8], tv["obs_first8"], rtol=1e-6)
+    # log_std must be the configured init.
+    assert tv["log_std"] == pytest.approx(model.LOG_STD_INIT, rel=1e-5)
+    # Expected outputs are finite and within the scale layer's range.
+    assert all(0.0 <= m <= 0.5 for m in tv["mean"])
+    assert np.isfinite(tv["train_loss"])
+    assert tv["train_step_out"] == 1.0

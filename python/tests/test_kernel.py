@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas conv3d kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel that ends up inside
+every HLO artifact the Rust coordinator executes.  Hypothesis sweeps the
+shape/padding space; fixed tests pin the exact Table-2 layer shapes.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv3d import conv3d, _out_spatial
+from compile.kernels.ref import conv3d_ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def check(b, d, k, cin, cout, padding, key=0, block_b=None, rtol=1e-5, atol=1e-5):
+    x = rand(key, (b, d, d, d, cin))
+    w = rand(key + 1, (k, k, k, cin, cout)) * (1.0 / math.sqrt(k**3 * cin))
+    bias = rand(key + 2, (cout,))
+    got = conv3d(x, w, bias, padding=padding, block_b=block_b)
+    want = conv3d_ref(x, w, bias, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# --- fixed shapes: the exact Table-2 layers (N=5) and the N=7 variant -----
+
+TABLE2_LAYERS_N5 = [
+    (6, 3, 3, 8, "same"),
+    (6, 3, 8, 8, "valid"),
+    (4, 3, 8, 4, "valid"),
+    (2, 2, 4, 1, "valid"),
+]
+
+TABLE2_LAYERS_N7 = [
+    (8, 3, 3, 8, "same"),
+    (8, 3, 8, 8, "valid"),
+    (6, 3, 8, 4, "valid"),
+    (4, 3, 4, 4, "valid"),
+    (2, 2, 4, 1, "valid"),
+]
+
+
+@pytest.mark.parametrize("d,k,cin,cout,padding", TABLE2_LAYERS_N5)
+def test_table2_n5_layers(d, k, cin, cout, padding):
+    check(64, d, k, cin, cout, padding)
+
+
+@pytest.mark.parametrize("d,k,cin,cout,padding", TABLE2_LAYERS_N7)
+def test_table2_n7_layers(d, k, cin, cout, padding):
+    check(32, d, k, cin, cout, padding)
+
+
+def test_output_spatial_dims_match_table2():
+    # Table 2 dimension column: 6 -> 6 -> 4 -> 2 -> 1
+    assert _out_spatial(6, 3, "same") == 6
+    assert _out_spatial(6, 3, "valid") == 4
+    assert _out_spatial(4, 3, "valid") == 2
+    assert _out_spatial(2, 2, "valid") == 1
+
+
+def test_block_b_tiling_equivalence():
+    """Grid tiling must not change the numbers."""
+    x = rand(3, (128, 6, 6, 6, 3))
+    w = rand(4, (3, 3, 3, 3, 8)) * 0.1
+    bias = rand(5, (8,))
+    full = conv3d(x, w, bias, padding="same", block_b=128)
+    for bb in (16, 32, 64):
+        tiled = conv3d(x, w, bias, padding="same", block_b=bb)
+        np.testing.assert_allclose(np.asarray(tiled), np.asarray(full), rtol=1e-6)
+
+
+def test_bias_is_applied():
+    x = jnp.zeros((4, 4, 4, 4, 2), dtype=jnp.float32)
+    w = jnp.zeros((3, 3, 3, 2, 5), dtype=jnp.float32)
+    bias = jnp.arange(5, dtype=jnp.float32)
+    out = conv3d(x, w, bias, padding="valid")
+    np.testing.assert_allclose(
+        np.asarray(out), np.broadcast_to(np.arange(5, dtype=np.float32), out.shape)
+    )
+
+
+def test_identity_kernel_same_padding():
+    """A centered delta kernel with 'same' padding is the identity."""
+    x = rand(9, (2, 5, 5, 5, 1))
+    w = jnp.zeros((3, 3, 3, 1, 1), dtype=jnp.float32).at[1, 1, 1, 0, 0].set(1.0)
+    out = conv3d(x, w, jnp.zeros((1,), jnp.float32), padding="same")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+
+def test_rejects_bad_shapes():
+    x = jnp.zeros((2, 4, 4, 4, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        conv3d(x, jnp.zeros((2, 3, 3, 3, 4), jnp.float32), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        conv3d(x, jnp.zeros((3, 3, 3, 5, 4), jnp.float32), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        conv3d(x, jnp.zeros((3, 3, 3, 3, 4), jnp.float32), jnp.zeros((4,)),
+               padding="reflect")
+
+
+# --- hypothesis sweep over the shape space ---------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(1, 6),            # batch
+    st.integers(2, 7),            # spatial
+    st.sampled_from([2, 3]),      # kernel
+    st.integers(1, 5),            # cin
+    st.integers(1, 6),            # cout
+    st.sampled_from(["same", "valid"]),
+    st.integers(0, 10_000),       # seed
+).filter(lambda t: t[1] >= t[2])  # valid conv needs d >= k
+
+
+@settings(max_examples=60, deadline=None)
+@given(shape_strategy)
+def test_hypothesis_matches_ref(params):
+    b, d, k, cin, cout, padding, seed = params
+    check(b, d, k, cin, cout, padding, key=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_hypothesis_gradients_match_ref(seed):
+    """custom_vjp (Pallas fwd) must agree with jax.grad of the oracle."""
+    from compile.model import conv3d_ad
+
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (3, 5, 5, 5, 2), dtype=jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 3, 2, 4), dtype=jnp.float32) * 0.2
+    b = jax.random.normal(k3, (4,), dtype=jnp.float32)
+    ct = jax.random.normal(k4, (3, 5, 5, 5, 4), dtype=jnp.float32)
+
+    for padding in ("same", "valid"):
+        ct_p = ct if padding == "same" else ct[:, :3, :3, :3, :]
+
+        def loss_pallas(x, w, b):
+            return jnp.sum(conv3d_ad(x, w, b, padding) * ct_p)
+
+        def loss_ref(x, w, b):
+            return jnp.sum(conv3d_ref(x, w, b, padding=padding) * ct_p)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, e in zip(gp, gr):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(e), rtol=2e-4, atol=2e-4
+            )

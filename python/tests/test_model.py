@@ -1,0 +1,178 @@
+"""L2 correctness: Table-2 architecture, flat-param conventions, PPO math."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def theta_for(n, seed=0):
+    return model.init_params(jax.random.PRNGKey(seed), n)
+
+
+# --- Table 2 ----------------------------------------------------------------
+
+
+def test_table2_trunk_param_count():
+    # 656 + 1736 + 868 + 33 = 3293 — the paper's "around 3,300 parameters"
+    assert model.trunk_param_count(5) == 3293
+
+
+def test_table2_layer_dims_n5():
+    dims = [6]
+    for k, _f, pad in model.ARCH[5]:
+        dims.append(dims[-1] if pad == "same" else dims[-1] - k + 1)
+    assert dims == [6, 6, 4, 2, 1]
+
+
+def test_n7_reduces_to_scalar():
+    dims = [8]
+    for k, _f, pad in model.ARCH[7]:
+        dims.append(dims[-1] if pad == "same" else dims[-1] - k + 1)
+    assert dims[-1] == 1
+
+
+def test_param_layout_is_dense_and_ordered():
+    for n in (5, 7):
+        layout, total = model.param_layout(n)
+        off = 0
+        for name, shape, o in layout:
+            assert o == off, name
+            off += int(math.prod(shape))
+        assert off == total
+        # actor trunk + log_std + critic trunk
+        assert total == 2 * model.trunk_param_count(n) + 1
+
+
+def test_unflatten_roundtrip():
+    n = 5
+    _layout, total = model.param_layout(n)
+    theta = jnp.arange(total, dtype=jnp.float32)
+    params = model.unflatten(theta, n)
+    w0 = params["actor/w0"]
+    assert w0.shape == (3, 3, 3, 3, 8)
+    np.testing.assert_allclose(np.asarray(w0).reshape(-1), np.arange(648))
+    assert float(params["log_std"][0]) == 3293.0
+
+
+# --- policy head ------------------------------------------------------------
+
+
+def test_policy_mean_in_admissible_range():
+    """Scale layer y = 0.5*sigmoid(x): Cs in [0, 0.5] (paper §6.2)."""
+    n = 5
+    theta = theta_for(n)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (32, 6, 6, 6, 3)) * 10.0
+    mean, log_std, value = model.policy_apply(theta, obs, n)
+    m = np.asarray(mean)
+    assert (m >= 0.0).all() and (m <= 0.5).all()
+    assert float(log_std[0]) == pytest.approx(model.LOG_STD_INIT)
+    assert value.shape == (32,)
+
+
+def test_policy_pallas_matches_ref_path():
+    n = 5
+    theta = theta_for(n, seed=3)
+    obs = jax.random.normal(jax.random.PRNGKey(2), (16, 6, 6, 6, 3))
+    mp, lp, vp = model.policy_apply(theta, obs, n, use_pallas=True)
+    mr, lr, vr = model.policy_apply(theta, obs, n, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(mp), np.asarray(mr), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vp), np.asarray(vr), rtol=1e-4, atol=1e-4)
+
+
+def test_gaussian_logp_matches_closed_form():
+    logp = model.gaussian_logp(jnp.float32(0.3), jnp.float32(0.25), jnp.float32(-3.0))
+    sigma = math.exp(-3.0)
+    want = -0.5 * ((0.3 - 0.25) / sigma) ** 2 - (-3.0) - 0.5 * math.log(2 * math.pi)
+    assert float(logp) == pytest.approx(want, rel=1e-5)
+
+
+# --- PPO train step ----------------------------------------------------------
+
+
+def make_batch(n, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    obs = jax.random.normal(ks[0], (b, n + 1, n + 1, n + 1, 3))
+    act = jax.random.uniform(ks[1], (b,), minval=0.0, maxval=0.5)
+    adv = jax.random.normal(ks[2], (b,))
+    ret = jax.random.normal(ks[3], (b,))
+    return obs, act, adv, ret
+
+
+def test_train_step_adam_matches_manual():
+    """One train_step must equal a hand-rolled Adam update of jax.grad."""
+    n = 5
+    theta = theta_for(n, seed=5)
+    obs, act, adv, ret = make_batch(n, 8, seed=6)
+    mean, log_std, _ = model.policy_apply(theta, obs, n)
+    old_logp = model.gaussian_logp(act, mean, log_std[0])
+
+    zeros = jnp.zeros_like(theta)
+    out = model.train_step(theta, zeros, zeros, jnp.float32(0.0),
+                           obs, act, old_logp, adv, ret, n)
+    theta2 = out[0]
+
+    (loss, _aux), g = jax.value_and_grad(model.ppo_loss, has_aux=True)(
+        theta, obs, act, old_logp, adv, ret, n
+    )
+    m = (1 - model.ADAM_B1) * g
+    v = (1 - model.ADAM_B2) * g * g
+    mhat = m / (1 - model.ADAM_B1)
+    vhat = v / (1 - model.ADAM_B2)
+    want = theta - model.LEARNING_RATE * mhat / (jnp.sqrt(vhat) + model.ADAM_EPS)
+    np.testing.assert_allclose(np.asarray(theta2), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert float(out[4]) == pytest.approx(float(loss), rel=1e-5)
+
+
+def test_train_step_improves_objective():
+    """Repeated steps on a fixed batch must reduce the PPO loss."""
+    n = 5
+    theta = theta_for(n, seed=9)
+    obs, act, adv, ret = make_batch(n, 32, seed=10)
+    mean, log_std, _ = model.policy_apply(theta, obs, n)
+    old_logp = model.gaussian_logp(act, mean, log_std[0])
+
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    step = jnp.float32(0.0)
+    losses = []
+    fn = jax.jit(lambda *a: model.train_step(*a, n=n))
+    for _ in range(30):
+        theta, m, v, step, loss, *_ = fn(theta, m, v, step, obs, act,
+                                         old_logp, adv, ret)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_ppo_ratio_is_one_on_fresh_batch():
+    """With old_logp from the current policy, clipfrac=0 and kl~0."""
+    n = 5
+    theta = theta_for(n, seed=11)
+    obs, act, adv, ret = make_batch(n, 16, seed=12)
+    mean, log_std, _ = model.policy_apply(theta, obs, n)
+    old_logp = model.gaussian_logp(act, mean, log_std[0])
+    _loss, (pg, _vf, _ent, clipfrac, akl) = model.ppo_loss(
+        theta, obs, act, old_logp, adv, ret, n
+    )
+    assert float(clipfrac) == 0.0
+    assert abs(float(akl)) < 1e-6
+    # with ratio == 1, pg loss is exactly -mean(adv)
+    assert float(pg) == pytest.approx(-float(jnp.mean(adv)), rel=1e-4, abs=1e-5)
+
+
+def test_entropy_constant_in_mean():
+    """Gaussian entropy depends only on log_std."""
+    ent = 0.5 * math.log(2 * math.pi * math.e) + model.LOG_STD_INIT
+    n = 5
+    theta = theta_for(n)
+    obs, act, adv, ret = make_batch(n, 8)
+    _loss, (_pg, _vf, entropy, _cf, _kl) = model.ppo_loss(
+        theta, obs, act, jnp.zeros(8), adv, ret, n
+    )
+    assert float(entropy) == pytest.approx(ent, rel=1e-5)

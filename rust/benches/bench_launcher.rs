@@ -1,0 +1,66 @@
+//! Bench A2 — the §3.3 launch-path optimizations: MPMD vs individual
+//! mpirun, RAM-drive vs Lustre staging ("for some configurations, the time
+//! required for starting the simulations exceeded the actual simulation
+//! time... with these improvements in place, the performance penalty...
+//! became negligible"), plus the real cost of rankfile generation.
+
+use relexi::hpc::Topology;
+use relexi::launcher::{place, LaunchMode, Launcher, StagingMode};
+use relexi::util::bench::{Bench, Table};
+
+fn main() {
+    let launcher = Launcher::new(Topology::hawk(16));
+
+    let mut table = Table::new(&[
+        "n_envs",
+        "ranks",
+        "individual+lustre [s]",
+        "mpmd+ram [s]",
+        "reduction",
+    ]);
+    for (n_envs, ranks) in [(16usize, 8usize), (64, 8), (256, 4), (512, 4), (1024, 2)] {
+        let slow_plan = launcher
+            .plan(n_envs, ranks, LaunchMode::Individual, StagingMode::Lustre)
+            .unwrap();
+        let fast_plan = launcher
+            .plan(n_envs, ranks, LaunchMode::Mpmd, StagingMode::RamDrive)
+            .unwrap();
+        let slow = launcher.startup_time(&slow_plan, 6, 2e6);
+        let fast = launcher.startup_time(&fast_plan, 6, 2e6);
+        table.row(vec![
+            n_envs.to_string(),
+            ranks.to_string(),
+            format!("{slow:.2}"),
+            format!("{fast:.2}"),
+            format!("{:.0}x", slow / fast),
+        ]);
+    }
+    table.print("§3.3 — launch overhead: naive vs optimized (exp. A2)");
+
+    // The paper's qualitative claim: at hundreds of envs, naive launch
+    // exceeds the ~15-20 s sampling time; optimized launch is negligible.
+    let slow_plan = launcher
+        .plan(512, 4, LaunchMode::Individual, StagingMode::Lustre)
+        .unwrap();
+    let fast_plan = launcher
+        .plan(512, 4, LaunchMode::Mpmd, StagingMode::RamDrive)
+        .unwrap();
+    assert!(launcher.startup_time(&slow_plan, 6, 2e6) > 20.0);
+    assert!(launcher.startup_time(&fast_plan, 6, 2e6) < 15.0);
+    println!("\nshape check passed: naive launch dominates sampling; MPMD+RAM negligible");
+
+    // Real cost of the placement/rankfile machinery itself.
+    let topo = Topology::hawk(16);
+    let mut b = Bench::new("launcher");
+    b.run("place 1024 x 2-rank instances", || {
+        std::hint::black_box(place(&topo, 1024, 2).unwrap());
+    });
+    b.run("rankfile text for 2048 ranks", || {
+        let p = place(&topo, 1024, 2).unwrap();
+        std::hint::black_box(p.rankfile_text());
+    });
+    b.run("die occupancy for 2048 ranks", || {
+        let p = place(&topo, 1024, 2).unwrap();
+        std::hint::black_box(p.die_occupancy());
+    });
+}

@@ -1,0 +1,83 @@
+//! Bench S — the environment substrate's hot path: FFT, RHS/step costs at
+//! the Table-1 resolutions, SGS overhead, and observation gathering.
+//! These numbers calibrate the HPC cost model (EnvCostModel) and are the
+//! §Perf-L3 baseline in EXPERIMENTS.md.
+
+use relexi::fft::{fft3d, Cpx, Plan};
+use relexi::solver::forcing::LinearForcing;
+use relexi::solver::init::random_solenoidal;
+use relexi::solver::Solver;
+use relexi::util::bench::{Bench, Table};
+use relexi::util::Rng;
+use std::time::Duration;
+
+fn prepared_solver(n: usize, elems: usize, cs: f64, seed: u64) -> Solver {
+    let mut s = Solver::new(n, elems, 1.0 / 400.0, 0.5);
+    let mut rng = Rng::new(seed);
+    s.set_state(random_solenoidal(&s.grid, 1.5, 4.0, &mut rng));
+    s.forcing = Some(LinearForcing::new(1.5, 1.0));
+    if cs > 0.0 {
+        s.set_cs_uniform(cs);
+    }
+    // Prime vmax for stable_dt.
+    s.advance(1e-3);
+    s
+}
+
+fn main() {
+    let mut b = Bench::new("solver").with_target(Duration::from_secs(2));
+
+    // --- FFT ---------------------------------------------------------------
+    for n in [24usize, 32, 48] {
+        let plan = Plan::new(n);
+        let mut data = vec![Cpx::new(1.0, 0.5); n * n * n];
+        b.run(&format!("fft3d {n}^3"), || {
+            fft3d(&mut data, &plan, false);
+        });
+    }
+
+    // --- solver step at Table-1 resolutions --------------------------------
+    let mut table = Table::new(&["case", "grid", "SGS", "ms/step", "steps per dt_RL", "s per action"]);
+    for (name, n, cs) in [
+        ("24 DOF implicit", 24usize, 0.0),
+        ("24 DOF smagorinsky", 24, 0.17),
+        ("32 DOF implicit", 32, 0.0),
+        ("32 DOF smagorinsky", 32, 0.17),
+    ] {
+        let mut s = prepared_solver(n, 4, cs, 1);
+        let dt = s.stable_dt();
+        let m = b.run(&format!("step {name}"), || {
+            s.step(dt.min(1e-4)); // tiny dt: cost is dt-independent
+        });
+        let steps_per_action = (0.1 / dt).ceil();
+        table.row(vec![
+            name.to_string(),
+            format!("{n}^3"),
+            if cs > 0.0 { "on" } else { "off" }.to_string(),
+            format!("{:.2}", m.mean_s * 1e3),
+            format!("{steps_per_action:.0}"),
+            format!("{:.3}", m.mean_s * steps_per_action),
+        ]);
+    }
+    table.print("Solver cost at Table-1 resolutions (calibrates EnvCostModel)");
+
+    // --- full RL action interval (the per-step cost during training) -------
+    let mut s24 = prepared_solver(24, 4, 0.1, 2);
+    b.run("advance dt_RL=0.1 @ 24^3 (SGS on)", || {
+        s24.advance(0.1);
+    });
+
+    // --- observation gather (state extraction for the orchestrator) --------
+    let mut s = prepared_solver(24, 4, 0.0, 3);
+    b.run("gather observations 64 x 6^3 x 3", || {
+        std::hint::black_box(s.observations());
+    });
+
+    // --- spectrum (reward path) --------------------------------------------
+    let s = prepared_solver(24, 4, 0.0, 4);
+    b.run("energy spectrum 24^3", || {
+        std::hint::black_box(s.spectrum());
+    });
+
+    println!("\ntransform count so far: {}", s24.stats.transforms);
+}

@@ -1,0 +1,54 @@
+//! Bench F4 — regenerates both panels of the paper's Fig. 4 (strong
+//! scaling of FLEXI within Relexi: 2/8/32/128 parallel envs, 2->16 ranks
+//! per env, 24 and 32 DOF) on the simulated cluster.
+//!
+//! Expected shape (paper §6.1): near-ideal FLEXI scaling recovered while
+//! the per-core load is healthy; efficiency drops at 16 ranks/env where
+//! the load per core falls "quite below the optimal load"; the head-node
+//! work makes high-env-count curves saturate earlier.
+
+use relexi::hpc::{steps_per_action_for, strong_scaling, ClusterSim};
+use relexi::util::bench::{Bench, Table};
+
+fn main() {
+    let sim = ClusterSim::hawk(16);
+    let ranks = [2usize, 4, 8, 16];
+
+    for dof in [24usize, 32] {
+        let spa = steps_per_action_for(dof);
+        let mut table = Table::new(&["n_envs", "ranks/env", "time [s]", "speedup", "ideal", "efficiency"]);
+        for envs in [2usize, 8, 32, 128] {
+            for p in strong_scaling(&sim, dof, envs, &ranks, spa).unwrap() {
+                table.row(vec![
+                    envs.to_string(),
+                    p.ranks_per_env.to_string(),
+                    format!("{:.2}", p.total_s),
+                    format!("{:.2}", p.speedup),
+                    p.ranks_per_env.to_string(),
+                    format!("{:.3}", p.efficiency),
+                ]);
+            }
+        }
+        table.print(&format!("Fig. 4 — strong scaling, {dof} DOF"));
+    }
+
+    // Shape assertions.
+    let pts = strong_scaling(&sim, 24, 8, &ranks, 3.0).unwrap();
+    assert!(pts.windows(2).all(|w| w[1].speedup > w[0].speedup),
+            "SHAPE VIOLATION: speedup must grow with ranks");
+    assert!(pts.last().unwrap().efficiency < 0.75,
+            "SHAPE VIOLATION: 16 ranks/env should be clearly sub-ideal");
+    assert!(pts[1].efficiency > pts.last().unwrap().efficiency,
+            "SHAPE VIOLATION: efficiency must decay with ranks");
+    println!("\nshape checks passed: monotone speedup, 16-rank saturation");
+
+    let mut b = Bench::new("strong-scaling-sim");
+    b.run("full Fig.4 sweep (both DOF, 4 env counts)", || {
+        for dof in [24usize, 32] {
+            let spa = steps_per_action_for(dof);
+            for envs in [2usize, 8, 32, 128] {
+                std::hint::black_box(strong_scaling(&sim, dof, envs, &ranks, spa).unwrap());
+            }
+        }
+    });
+}

@@ -1,0 +1,153 @@
+//! Bench W1 — the paper's §6.2 wall-clock split: "Sampling the
+//! trajectories took 15 and 18 seconds per iteration [16 vs 64 envs],
+//! while updating the policy ... took 0.5 and 2 seconds".
+//!
+//! Measures the REAL system: policy-inference latency per compiled batch
+//! size, the compiled PPO train-step latency, a full sampling phase
+//! (parallel LES env workers through the orchestrator) at growing env
+//! counts, and the sampling/update split of one complete iteration.
+//!
+//! Requires `make artifacts`.  Uses a reduced 12^3 environment so the
+//! bench completes in ~2 minutes; the *ratios* are the experiment.
+
+use relexi::config::{CaseConfig, RunConfig};
+use relexi::coordinator::EnvPool;
+use relexi::orchestrator::{Orchestrator, Protocol};
+use relexi::rl::flatten;
+use relexi::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
+use relexi::solver::dns::{generate, TruthParams};
+use relexi::util::bench::{Bench, Table};
+use relexi::util::Rng;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_training: artifacts missing, run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::open(dir).unwrap();
+    let policy = PolicyRuntime::load(&rt, &reg, 5).unwrap();
+    let theta = reg.initial_params(5).unwrap();
+    let feat = policy.features();
+
+    // --- policy inference latency per batch ---------------------------------
+    let mut b = Bench::new("policy-fwd").with_target(Duration::from_secs(2));
+    let mut rng = Rng::new(1);
+    let mut table = Table::new(&["batch (elements)", "latency", "us/element"]);
+    for batch in [64usize, 256, 1024, 4096] {
+        let obs: Vec<f32> = (0..batch * feat).map(|_| rng.normal() as f32).collect();
+        let m = b.run(&format!("forward b={batch}"), || {
+            std::hint::black_box(policy.forward(&theta, &obs, batch).unwrap());
+        });
+        table.row(vec![
+            batch.to_string(),
+            relexi::util::bench::fmt_duration(m.mean_s),
+            format!("{:.2}", m.mean_s * 1e6 / batch as f64),
+        ]);
+    }
+    table.print("Policy inference (compiled Pallas CNN via PJRT)");
+
+    // --- compiled PPO train step ---------------------------------------------
+    let mut trainer = TrainerRuntime::load(&rt, &reg, 5, 256).unwrap();
+    let mb = trainer.minibatch;
+    let obs: Vec<f32> = (0..mb * feat).map(|_| rng.normal() as f32).collect();
+    let act: Vec<f32> = (0..mb).map(|_| rng.uniform_f32() * 0.5).collect();
+    let logp = vec![-1.0f32; mb];
+    let adv: Vec<f32> = (0..mb).map(|_| rng.normal() as f32).collect();
+    let ret: Vec<f32> = (0..mb).map(|_| rng.normal() as f32).collect();
+    let m_train = b.run(&format!("train_step b={mb} (loss+grad+Adam)"), || {
+        std::hint::black_box(
+            trainer
+                .train_minibatch(&Minibatch {
+                    obs: &obs,
+                    act: &act,
+                    old_logp: &logp,
+                    adv: &adv,
+                    ret: &ret,
+                })
+                .unwrap(),
+        );
+    });
+
+    // --- full sampling phase at growing env counts ---------------------------
+    // Reduced environment (12^3, 8 elements) so the bench stays short.
+    let mut cfg = RunConfig::default();
+    cfg.case = CaseConfig {
+        name: "bench".into(),
+        n: 5,
+        elems_per_dir: 2,
+        k_max: 3,
+        alpha: 0.4,
+    };
+    cfg.solver.t_end = 0.5; // 5 actions
+    cfg.solver.dns_points = 24;
+    let truth = Arc::new(generate(
+        &TruthParams {
+            n_dns: 24,
+            n_les: 12,
+            nu: cfg.solver.nu,
+            ke_target: cfg.solver.ke_target,
+            spinup_time: 1.0,
+            n_states: 4,
+            sample_interval: 0.25,
+            seed: 5,
+        },
+        |_, _| {},
+    ));
+
+    let mut split = Table::new(&[
+        "n_envs",
+        "sampling [s]",
+        "policy share [s]",
+        "update (5 epochs) [s]",
+        "sample:update ratio",
+    ]);
+    for n_envs in [4usize, 8, 16] {
+        let mut cfg_n = cfg.clone();
+        cfg_n.rl.n_envs = n_envs;
+        let pool = EnvPool::new(cfg_n.clone(), truth.clone());
+        let orch = Orchestrator::launch(cfg_n.hpc.db_shards);
+        let mut rng_s = Rng::new(100 + n_envs as u64);
+        let proto = Protocol::new(&format!("bench{n_envs}"));
+        let rollouts = pool
+            .collect(&orch, &proto, &policy, &theta, &mut rng_s, false)
+            .unwrap();
+
+        // Update phase on the collected data (5 epochs, as in the paper).
+        let ds = flatten(&rollouts.episodes, feat, 0.995, 1.0);
+        let t0 = std::time::Instant::now();
+        for _epoch in 0..5 {
+            for idx in ds.minibatch_indices(trainer.minibatch, &mut rng_s) {
+                let (obs, act, logp, adv, ret) = ds.gather(&idx);
+                trainer
+                    .train_minibatch(&Minibatch {
+                        obs: &obs,
+                        act: &act,
+                        old_logp: &logp,
+                        adv: &adv,
+                        ret: &ret,
+                    })
+                    .unwrap();
+            }
+        }
+        let update_s = t0.elapsed().as_secs_f64();
+        split.row(vec![
+            n_envs.to_string(),
+            format!("{:.2}", rollouts.sample_time_s),
+            format!("{:.3}", rollouts.policy_time_s),
+            format!("{update_s:.2}"),
+            format!("{:.1}", rollouts.sample_time_s / update_s),
+        ]);
+    }
+    split.print("§6.2 — sampling vs update wall-clock split (exp. W1)");
+    println!(
+        "Paper's shape: sampling grows sublinearly with envs (parallel) and\n\
+         dominates the update time; the update grows with collected samples.\n\
+         Single train_step: {}",
+        relexi::util::bench::fmt_duration(m_train.mean_s)
+    );
+}

@@ -1,0 +1,57 @@
+//! Bench F3 — regenerates BOTH panels of the paper's Fig. 3 (weak scaling
+//! of Relexi, 24 DOF and 32 DOF, 2/4/8/16 ranks per env, 2..full-partition
+//! environments on 16 Hawk nodes) on the discrete-event cluster simulator,
+//! and times the simulator itself.
+//!
+//! Expected shape (paper §6.1): near-ideal speedup at moderate counts;
+//! efficiency decays toward the full partition; fewer ranks/env scale
+//! better; a visible 1->2-env dip for 2-rank envs (die bandwidth sharing).
+
+use relexi::hpc::{steps_per_action_for, weak_scaling, ClusterSim};
+use relexi::util::bench::{Bench, Table};
+
+fn main() {
+    let sim = ClusterSim::hawk(16);
+
+    for dof in [24usize, 32] {
+        let spa = steps_per_action_for(dof);
+        let mut table = Table::new(&["ranks/env", "n_envs", "cores", "speedup", "ideal", "efficiency"]);
+        for ranks in [2usize, 4, 8, 16] {
+            let pts = weak_scaling(&sim, dof, ranks, spa).unwrap();
+            for p in &pts {
+                table.row(vec![
+                    ranks.to_string(),
+                    p.n_envs.to_string(),
+                    (p.n_envs * ranks).to_string(),
+                    format!("{:.1}", p.speedup),
+                    p.n_envs.to_string(),
+                    format!("{:.3}", p.efficiency),
+                ]);
+            }
+        }
+        table.print(&format!("Fig. 3 — weak scaling, {dof} DOF"));
+    }
+
+    // Shape assertions: the qualitative claims of §6.1 must hold.
+    let e2 = weak_scaling(&sim, 24, 2, 3.0).unwrap();
+    let e16 = weak_scaling(&sim, 24, 16, 3.0).unwrap();
+    let eff = |pts: &[relexi::hpc::ScalingPoint], n: usize| {
+        pts.iter().find(|p| p.n_envs == n).map(|p| p.efficiency)
+    };
+    assert!(eff(&e2, 128).unwrap() > eff(&e16, 128).unwrap(),
+            "SHAPE VIOLATION: fewer ranks/env should scale better");
+    assert!(eff(&e2, 1024).unwrap() < eff(&e2, 32).unwrap(),
+            "SHAPE VIOLATION: efficiency should decay toward full partition");
+    println!("\nshape checks passed: fewer-ranks-scale-better, efficiency decay");
+
+    // Timing of the simulator itself (it backs every scaling experiment).
+    let mut b = Bench::new("weak-scaling-sim");
+    b.run("full Fig.3 sweep (both DOF, 4 rank counts)", || {
+        for dof in [24usize, 32] {
+            let spa = steps_per_action_for(dof);
+            for ranks in [2usize, 4, 8, 16] {
+                std::hint::black_box(weak_scaling(&sim, dof, ranks, spa).unwrap());
+            }
+        }
+    });
+}

@@ -1,0 +1,69 @@
+//! Table 1 of the paper as code: the two investigated LES configurations.
+//!
+//! | name   | N | #Elems | #DOF   | k_max | alpha |
+//! |--------|---|--------|--------|-------|-------|
+//! | 24 DOF | 5 | 4^3    | 13,824 | 9     | 0.4   |
+//! | 32 DOF | 7 | 4^3    | 32,768 | 12    | 0.2   |
+
+use super::CaseConfig;
+use anyhow::{bail, Result};
+
+/// The "24 DOF" configuration (Table 1, row 1).
+pub fn dof24() -> CaseConfig {
+    CaseConfig {
+        name: "24dof".to_string(),
+        n: 5,
+        elems_per_dir: 4,
+        k_max: 9,
+        alpha: 0.4,
+    }
+}
+
+/// The "32 DOF" configuration (Table 1, row 2).
+pub fn dof32() -> CaseConfig {
+    CaseConfig {
+        name: "32dof".to_string(),
+        n: 7,
+        elems_per_dir: 4,
+        k_max: 12,
+        alpha: 0.2,
+    }
+}
+
+/// Look up a preset by name ("24dof" / "32dof").
+pub fn by_name(name: &str) -> Result<CaseConfig> {
+    match name {
+        "24dof" | "24" => Ok(dof24()),
+        "32dof" | "32" => Ok(dof32()),
+        _ => bail!("unknown case preset {name:?} (expected 24dof or 32dof)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_dof_counts() {
+        // #DOF = #Elems * (N+1)^3
+        assert_eq!(dof24().total_dof(), 13_824);
+        assert_eq!(dof32().total_dof(), 32_768);
+        assert_eq!(dof24().points_per_dir(), 24);
+        assert_eq!(dof32().points_per_dir(), 32);
+    }
+
+    #[test]
+    fn table1_hyperparameters() {
+        assert_eq!(dof24().k_max, 9);
+        assert_eq!(dof32().k_max, 12);
+        assert!((dof24().alpha - 0.4).abs() < 1e-12);
+        assert!((dof32().alpha - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("24dof").unwrap(), dof24());
+        assert_eq!(by_name("32").unwrap(), dof32());
+        assert!(by_name("48dof").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! TOML-subset parser for run configuration files (no `serde`/`toml` crates
+//! in the image).  Supported: `[section]` / `[a.b]` headers, `key = value`
+//! with strings, integers, floats, booleans, and flat arrays; `#` comments.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// Integer accessor (also accepts exact floats).
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) if f.fract() == 0.0 => Ok(*f as i64),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    /// Float accessor (accepts ints).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    /// String accessor.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    /// Boolean accessor.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    /// Array-of-integers accessor.
+    pub fn as_int_vec(&self) -> Result<Vec<i64>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| x.as_int()).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    fn parse_scalar(text: &str) -> Result<Value> {
+        let t = text.trim();
+        if t.is_empty() {
+            bail!("empty value");
+        }
+        if let Some(inner) = t.strip_prefix('"') {
+            let inner = inner
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow!("unterminated string: {t}"))?;
+            return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+        }
+        if t == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if t == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = t.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value: {t:?}")
+    }
+
+    fn parse(text: &str) -> Result<Value> {
+        let t = text.trim();
+        if let Some(inner) = t.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("unterminated array: {t}"))?;
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    items.push(Value::parse_scalar(&part)?);
+                }
+            }
+            return Ok(Value::Array(items));
+        }
+        Value::parse_scalar(t)
+    }
+}
+
+/// Split a flat array body on commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    parts
+}
+
+/// A parsed TOML document: dotted keys -> values.
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let name = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section {raw:?}", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value: {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = Value::parse(v)
+                .with_context(|| format!("line {}: {raw:?}", lineno + 1))?;
+            doc.entries.insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Toml> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Toml::parse(&text)
+    }
+
+    /// Look up a dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Set / override a dotted key.
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    /// Override from a raw string (CLI overlay); value syntax as in TOML.
+    pub fn set_raw(&mut self, key: &str, raw: &str) -> Result<()> {
+        // Allow bare strings from the CLI (no quotes needed).
+        let v = Value::parse(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.entries.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    /// Typed getters with defaults.
+    pub fn int_or(&self, key: &str, default: i64) -> Result<i64> {
+        self.get(key).map(|v| v.as_int()).unwrap_or(Ok(default))
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map(|v| v.as_float()).unwrap_or(Ok(default))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        self.get(key)
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .unwrap_or(Ok(default.to_string()))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.get(key).map(|v| v.as_bool()).unwrap_or(Ok(default))
+    }
+
+    /// All keys (for validation / debugging).
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# run configuration
+title = "hit24"            # inline comment
+[env]
+n = 5
+elems = 4
+t_end = 5.0
+deterministic = false
+ranks = [2, 4, 8, 16]
+[rl.ppo]
+lr = 1e-4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(DOC).unwrap();
+        assert_eq!(t.get("title").unwrap().as_str().unwrap(), "hit24");
+        assert_eq!(t.get("env.n").unwrap().as_int().unwrap(), 5);
+        assert_eq!(t.get("env.t_end").unwrap().as_float().unwrap(), 5.0);
+        assert!(!t.get("env.deterministic").unwrap().as_bool().unwrap());
+        assert_eq!(
+            t.get("env.ranks").unwrap().as_int_vec().unwrap(),
+            vec![2, 4, 8, 16]
+        );
+        assert_eq!(t.get("rl.ppo.lr").unwrap().as_float().unwrap(), 1e-4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = Toml::parse(DOC).unwrap();
+        assert_eq!(t.int_or("missing.key", 7).unwrap(), 7);
+        assert_eq!(t.float_or("env.n", 0.0).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut t = Toml::parse(DOC).unwrap();
+        t.set_raw("env.n", "7").unwrap();
+        assert_eq!(t.get("env.n").unwrap().as_int().unwrap(), 7);
+        t.set_raw("title", "other").unwrap();
+        assert_eq!(t.get("title").unwrap().as_str().unwrap(), "other");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("x = ").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let t = Toml::parse("s = \"a # b\"").unwrap();
+        assert_eq!(t.get("s").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let t = Toml::parse("n = 13_824").unwrap();
+        assert_eq!(t.get("n").unwrap().as_int().unwrap(), 13_824);
+    }
+}

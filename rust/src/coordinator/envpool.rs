@@ -1,0 +1,188 @@
+//! Parallel environment execution through the orchestrator — the heart of
+//! the Relexi dataflow (paper Fig. 2 / Algorithm 1):
+//!
+//! 1. a batch of environment workers ("FLEXI instances") is started;
+//! 2. each writes its state tensor to the orchestrator and polls for its
+//!    action; the trainer polls states, evaluates the policy once for the
+//!    whole batch, samples actions and writes them back;
+//! 3. every env advances `dt_RL` and the loop repeats until `t_end`
+//!    (synchronous PPO: the iteration waits for all envs).
+//!
+//! Workers are real OS threads running the real LES solver; all traffic
+//! goes through the in-memory store exactly as in the paper (states and
+//! spectrum errors in, actions out, done-flags at termination).
+
+use crate::config::RunConfig;
+use crate::orchestrator::{Orchestrator, Protocol};
+use crate::rl::{gaussian, reward_from_error, Episode, LesEnv, StepRecord};
+use crate::runtime::PolicyRuntime;
+use crate::solver::dns::Truth;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Timeout for any single poll; generous because env steps include real
+/// CFD work.
+const POLL_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Result of one sampling phase.
+pub struct Rollouts {
+    pub episodes: Vec<Episode>,
+    /// Wall-clock seconds spent sampling (the paper's §6.2 metric).
+    pub sample_time_s: f64,
+    /// Wall-clock seconds the trainer spent inside policy inference.
+    pub policy_time_s: f64,
+}
+
+/// Collects rollouts from `n_envs` parallel environments.
+pub struct EnvPool {
+    cfg: RunConfig,
+    truth: Arc<Truth>,
+}
+
+impl EnvPool {
+    /// Build a pool for a run configuration and its ground truth.
+    pub fn new(cfg: RunConfig, truth: Arc<Truth>) -> EnvPool {
+        EnvPool { cfg, truth }
+    }
+
+    /// Elements per env (actions per step per env).
+    pub fn n_elems(&self) -> usize {
+        self.cfg.case.total_elems()
+    }
+
+    /// Run one synchronous sampling phase: `n_envs` episodes under the
+    /// current policy (`theta`), exchanging all data via `orch`.
+    ///
+    /// `run_tag` namespaces the keys (one per iteration); `rng` drives
+    /// initial-state draws and action sampling.
+    pub fn collect(
+        &self,
+        orch: &Orchestrator,
+        proto: &Protocol,
+        policy: &PolicyRuntime,
+        theta: &[f32],
+        rng: &mut Rng,
+        deterministic: bool,
+    ) -> Result<Rollouts> {
+        let t_start = Instant::now();
+        let n_envs = self.cfg.rl.n_envs;
+        let n_actions = self.cfg.steps_per_episode();
+        let n_elems = self.n_elems();
+        let feat = policy.features();
+
+        // --- start the environment workers (the "FLEXI instances") -----
+        let mut workers = Vec::with_capacity(n_envs);
+        for i in 0..n_envs {
+            let client = orch.client();
+            let proto = proto.clone();
+            let case = self.cfg.case.clone();
+            let scfg = self.cfg.solver.clone();
+            let truth = self.truth.clone();
+            let mut env_rng = rng.split(i as u64);
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                let mut env = LesEnv::new(&case, &scfg, truth)?;
+                let obs = env.reset(&mut env_rng, false);
+                client.put_tensor(&proto.state_key(i, 0), vec![obs.len()], obs);
+                for t in 0..n_actions {
+                    let act = client
+                        .poll_take(&proto.action_key(i, t), POLL_TIMEOUT)
+                        .with_context(|| format!("env {i}: no action at step {t}"))?;
+                    let cs: Vec<f64> = act
+                        .as_tensor()
+                        .context("action must be a tensor")?
+                        .1
+                        .iter()
+                        .map(|&a| a as f64)
+                        .collect();
+                    let out = env.step(&cs);
+                    client.put_scalar(&proto.error_key(i, t), out.spec_error);
+                    if out.done {
+                        client.put_flag(&proto.done_key(i), true);
+                        break;
+                    }
+                    let obs = env.observe();
+                    client.put_tensor(&proto.state_key(i, t + 1), vec![obs.len()], obs);
+                }
+                Ok(())
+            }));
+        }
+
+        // --- trainer side: poll states, act, collect rewards ------------
+        let trainer = orch.client();
+        let mut episodes = vec![Episode::default(); n_envs];
+        let mut policy_time = 0.0f64;
+        let mut batch_obs = vec![0f32; n_envs * n_elems * feat];
+
+        for t in 0..n_actions {
+            // Gather all env states (blocking poll per env).
+            for (i, _ep) in episodes.iter().enumerate() {
+                let state = trainer
+                    .poll(&proto.state_key(i, t), POLL_TIMEOUT)
+                    .with_context(|| format!("trainer: no state from env {i} step {t}"))?;
+                let (_, data) = state.as_tensor().context("state must be a tensor")?;
+                anyhow::ensure!(
+                    data.len() == n_elems * feat,
+                    "env {i} state has {} floats, expected {}",
+                    data.len(),
+                    n_elems * feat
+                );
+                batch_obs[i * n_elems * feat..(i + 1) * n_elems * feat]
+                    .copy_from_slice(data);
+            }
+
+            // One batched policy evaluation for all envs.
+            let tp = Instant::now();
+            let out = policy.forward(theta, &batch_obs, n_envs * n_elems)?;
+            policy_time += tp.elapsed().as_secs_f64();
+
+            // Sample actions, write them back, record the step.
+            for (i, ep) in episodes.iter_mut().enumerate() {
+                let mean = &out.mean[i * n_elems..(i + 1) * n_elems];
+                let value = &out.value[i * n_elems..(i + 1) * n_elems];
+                let act = if deterministic {
+                    mean.to_vec()
+                } else {
+                    gaussian::sample(mean, out.log_std, rng)
+                };
+                let logp = gaussian::log_prob(&act, mean, out.log_std);
+                trainer.put_tensor(&proto.action_key(i, t), vec![n_elems], act.clone());
+                ep.steps.push(StepRecord {
+                    obs: batch_obs[i * n_elems * feat..(i + 1) * n_elems * feat].to_vec(),
+                    act,
+                    logp,
+                    value: value.to_vec(),
+                    reward: 0.0, // filled in below
+                });
+            }
+
+            // Collect the spectrum errors -> rewards (Eqs. 4-5).
+            for (i, ep) in episodes.iter_mut().enumerate() {
+                let err = trainer
+                    .poll(&proto.error_key(i, t), POLL_TIMEOUT)
+                    .with_context(|| format!("trainer: no error from env {i} step {t}"))?
+                    .as_scalar()
+                    .context("error must be a scalar")?;
+                ep.steps[t].reward = reward_from_error(err, self.cfg.case.alpha);
+            }
+        }
+
+        // All envs must have signalled termination.
+        for i in 0..n_envs {
+            trainer
+                .poll(&proto.done_key(i), POLL_TIMEOUT)
+                .with_context(|| format!("env {i} never signalled done"))?;
+        }
+        for (i, w) in workers.into_iter().enumerate() {
+            w.join()
+                .map_err(|_| anyhow::anyhow!("env worker {i} panicked"))??;
+        }
+
+        Ok(Rollouts {
+            episodes,
+            sample_time_s: t_start.elapsed().as_secs_f64(),
+            policy_time_s: policy_time,
+        })
+    }
+}

@@ -1,0 +1,146 @@
+//! Training metrics: per-iteration records, console logging and CSV
+//! emission (the data behind Fig. 5 top row).
+
+use crate::util::binio::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+
+/// One training iteration's record.
+#[derive(Debug, Clone, Default)]
+pub struct IterationMetrics {
+    pub iteration: usize,
+    /// Mean / min / max normalized return over the training envs.
+    pub return_mean: f64,
+    pub return_min: f64,
+    pub return_max: f64,
+    /// Normalized return on the held-out test state (eval iterations).
+    pub test_return: Option<f64>,
+    /// Wall-clock split (paper §6.2: sampling vs update time).
+    pub sample_time_s: f64,
+    pub train_time_s: f64,
+    pub policy_time_s: f64,
+    /// PPO diagnostics (averaged over the iteration's minibatches).
+    pub loss: f64,
+    pub clip_frac: f64,
+    pub approx_kl: f64,
+}
+
+/// Collects records and mirrors them to CSV + console.
+pub struct MetricsLog {
+    pub history: Vec<IterationMetrics>,
+    csv: Option<CsvWriter>,
+}
+
+const HEADER: [&str; 11] = [
+    "iteration",
+    "return_mean",
+    "return_min",
+    "return_max",
+    "test_return",
+    "sample_time_s",
+    "train_time_s",
+    "policy_time_s",
+    "loss",
+    "clip_frac",
+    "approx_kl",
+];
+
+impl MetricsLog {
+    /// Log to memory only.
+    pub fn in_memory() -> MetricsLog {
+        MetricsLog { history: Vec::new(), csv: None }
+    }
+
+    /// Log to memory + a CSV file.
+    pub fn with_csv(path: &Path) -> Result<MetricsLog> {
+        Ok(MetricsLog {
+            history: Vec::new(),
+            csv: Some(CsvWriter::create(path, &HEADER)?),
+        })
+    }
+
+    /// Record one iteration (also prints a console line).
+    pub fn record(&mut self, m: IterationMetrics) -> Result<()> {
+        let test = m
+            .test_return
+            .map(|t| format!("{t:.4}"))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "[it {:>5}] return {:+.4} [{:+.4}, {:+.4}]  test {}  sample {:.2}s  train {:.2}s  kl {:.2e}",
+            m.iteration,
+            m.return_mean,
+            m.return_min,
+            m.return_max,
+            test,
+            m.sample_time_s,
+            m.train_time_s,
+            m.approx_kl,
+        );
+        if let Some(csv) = &mut self.csv {
+            csv.row(&[
+                m.iteration.to_string(),
+                format!("{}", m.return_mean),
+                format!("{}", m.return_min),
+                format!("{}", m.return_max),
+                m.test_return.map(|t| format!("{t}")).unwrap_or_default(),
+                format!("{}", m.sample_time_s),
+                format!("{}", m.train_time_s),
+                format!("{}", m.policy_time_s),
+                format!("{}", m.loss),
+                format!("{}", m.clip_frac),
+                format!("{}", m.approx_kl),
+            ])?;
+        }
+        self.history.push(m);
+        Ok(())
+    }
+
+    /// Best mean return seen so far.
+    pub fn best_return(&self) -> f64 {
+        self.history
+            .iter()
+            .map(|m| m.return_mean)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_tracks_best() {
+        let mut log = MetricsLog::in_memory();
+        for (i, r) in [(0usize, -0.5), (1, 0.1), (2, 0.05)] {
+            log.record(IterationMetrics {
+                iteration: i,
+                return_mean: r,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        assert_eq!(log.history.len(), 3);
+        assert!((log.best_return() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("relexi_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        {
+            let mut log = MetricsLog::with_csv(&path).unwrap();
+            log.record(IterationMetrics {
+                iteration: 7,
+                return_mean: 0.25,
+                test_return: Some(0.3),
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iteration,"));
+        assert!(text.contains("7,0.25"));
+        assert!(text.contains("0.3"));
+    }
+}

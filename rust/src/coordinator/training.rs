@@ -1,0 +1,154 @@
+//! The Relexi training loop (Algorithm 1): launch orchestrator, repeat
+//! {start env batch -> sample synchronously -> PPO update}, evaluating on
+//! the held-out state every `eval_every` iterations.
+
+use super::envpool::EnvPool;
+use super::evaluate::eval_policy;
+use super::metrics::{IterationMetrics, MetricsLog};
+use crate::config::RunConfig;
+use crate::orchestrator::{Orchestrator, Protocol};
+use crate::rl::{flatten, max_return};
+use crate::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
+use crate::solver::dns::Truth;
+use crate::util::binio::write_f32_vec;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The assembled training system.
+pub struct TrainingLoop {
+    pub cfg: RunConfig,
+    pub truth: Arc<Truth>,
+    pub policy: PolicyRuntime,
+    pub trainer: TrainerRuntime,
+    pub orch: Orchestrator,
+    pool: EnvPool,
+    rng: Rng,
+}
+
+impl TrainingLoop {
+    /// Wire up runtime, artifacts, orchestrator and env pool.
+    pub fn new(cfg: RunConfig, truth: Arc<Truth>) -> Result<TrainingLoop> {
+        cfg.validate()?;
+        let rt = Runtime::cpu()?;
+        let reg = Registry::open(Path::new(&cfg.artifacts_dir))
+            .context("open artifact registry")?;
+        let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+        let trainer = TrainerRuntime::load(&rt, &reg, cfg.case.n, cfg.rl.minibatch)?;
+        let orch = Orchestrator::launch(cfg.hpc.db_shards);
+        let pool = EnvPool::new(cfg.clone(), truth.clone());
+        let rng = Rng::new(cfg.rl.seed);
+        Ok(TrainingLoop {
+            cfg,
+            truth,
+            policy,
+            trainer,
+            orch,
+            pool,
+            rng,
+        })
+    }
+
+    /// Run `iterations` training iterations; returns the metrics log.
+    pub fn run(&mut self, log: &mut MetricsLog) -> Result<()> {
+        let n_actions = self.cfg.steps_per_episode();
+        let norm = max_return(n_actions, self.cfg.rl.gamma);
+        let out_dir = PathBuf::from(&self.cfg.out_dir);
+        std::fs::create_dir_all(&out_dir)?;
+
+        for it in 0..self.cfg.rl.iterations {
+            // --- sampling phase (Algorithm 1, lines 4-13) ---------------
+            let proto = Protocol::new(&format!("it{it}"));
+            let rollouts = self.pool.collect(
+                &self.orch,
+                &proto,
+                &self.policy,
+                self.trainer.theta(),
+                &mut self.rng,
+                false,
+            )?;
+            self.orch.clear(); // drop this iteration's keys
+
+            let returns: Vec<f64> = rollouts
+                .episodes
+                .iter()
+                .map(|e| e.discounted_return(self.cfg.rl.gamma) / norm)
+                .collect();
+
+            // --- update phase (lines 14-16) ------------------------------
+            let t_train = Instant::now();
+            let ds = flatten(
+                &rollouts.episodes,
+                self.policy.features(),
+                self.cfg.rl.gamma,
+                self.cfg.rl.gae_lambda,
+            );
+            let mut loss_acc = 0.0;
+            let mut clip_acc = 0.0;
+            let mut kl_acc = 0.0;
+            let mut n_mb = 0usize;
+            for _epoch in 0..self.cfg.rl.epochs {
+                for idx in ds.minibatch_indices(self.trainer.minibatch, &mut self.rng) {
+                    let (obs, act, logp, adv, ret) = ds.gather(&idx);
+                    let m = self.trainer.train_minibatch(&Minibatch {
+                        obs: &obs,
+                        act: &act,
+                        old_logp: &logp,
+                        adv: &adv,
+                        ret: &ret,
+                    })?;
+                    loss_acc += m.loss as f64;
+                    clip_acc += m.clip_frac as f64;
+                    kl_acc += m.approx_kl as f64;
+                    n_mb += 1;
+                }
+            }
+            let train_time_s = t_train.elapsed().as_secs_f64();
+
+            // --- evaluation on the held-out state -----------------------
+            let test_return = if self.cfg.rl.eval_every > 0
+                && it % self.cfg.rl.eval_every == 0
+            {
+                Some(
+                    eval_policy(&self.cfg, &self.truth, &self.policy,
+                                self.trainer.theta(), None)?
+                    .normalized_return,
+                )
+            } else {
+                None
+            };
+
+            log.record(IterationMetrics {
+                iteration: it,
+                return_mean: crate::util::stats::mean(&returns),
+                return_min: crate::util::stats::min(&returns),
+                return_max: crate::util::stats::max(&returns),
+                test_return,
+                sample_time_s: rollouts.sample_time_s,
+                train_time_s,
+                policy_time_s: rollouts.policy_time_s,
+                loss: loss_acc / n_mb.max(1) as f64,
+                clip_frac: clip_acc / n_mb.max(1) as f64,
+                approx_kl: kl_acc / n_mb.max(1) as f64,
+            })?;
+        }
+
+        // Final checkpoint.
+        self.save_checkpoint(&out_dir.join("policy_final.bin"))?;
+        Ok(())
+    }
+
+    /// Persist the current flat parameter vector.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        write_f32_vec(path, self.trainer.theta())
+    }
+
+    /// Restore parameters from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let theta = crate::util::binio::read_f32_vec(path)?;
+        self.trainer.set_theta(theta);
+        Ok(())
+    }
+}

@@ -1,0 +1,440 @@
+//! Mixed-radix complex FFT, built from scratch (no FFT crate in the image).
+//!
+//! The pseudo-spectral solver (DESIGN.md S1/S2) needs sizes 24, 32, 48, 64,
+//! 96 — products of 2, 3 and 5 — so a recursive Cooley–Tukey with small
+//! radices covers everything; other prime factors fall back to an O(n·p)
+//! in-level DFT which is still exact.
+//!
+//! [`Plan`] precomputes the twiddle table for one length and is reused
+//! across the many transforms per solver step (plan reuse is one of the
+//! §Perf items in EXPERIMENTS.md).
+
+/// Complex number (f64) with the handful of ops the FFT and solver need.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Cpx {
+        Cpx { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Cpx {
+        Cpx { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Cpx {
+        Cpx { re: self.re * s, im: self.im * s }
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Multiply by i (used for spectral derivatives).
+    #[inline]
+    pub fn mul_i(self) -> Cpx {
+        Cpx { re: -self.im, im: self.re }
+    }
+}
+
+impl std::ops::Add for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::Sub for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl std::ops::AddAssign for Cpx {
+    #[inline]
+    fn add_assign(&mut self, o: Cpx) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+/// Precomputed FFT plan for one transform length.
+pub struct Plan {
+    n: usize,
+    /// Factorization of n into radices (smallest first).
+    factors: Vec<usize>,
+    /// exp(-2*pi*i*k/n) for k in 0..n (forward sign convention).
+    twiddles: Vec<Cpx>,
+    /// Reused scratch for out-of-place recursion.
+    scratch: std::cell::RefCell<Vec<Cpx>>,
+}
+
+fn factorize(mut n: usize) -> Vec<usize> {
+    let mut fs = Vec::new();
+    for r in [4usize, 2, 3, 5] {
+        while n % r == 0 {
+            fs.push(r);
+            n /= r;
+        }
+    }
+    let mut p = 7;
+    while n > 1 {
+        while n % p == 0 {
+            fs.push(p);
+            n /= p;
+        }
+        p += 2;
+    }
+    fs
+}
+
+impl Plan {
+    /// Build a plan for length `n` (any n >= 1).
+    pub fn new(n: usize) -> Plan {
+        assert!(n >= 1);
+        let twiddles = (0..n)
+            .map(|k| {
+                let a = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                Cpx::new(a.cos(), a.sin())
+            })
+            .collect();
+        Plan {
+            n,
+            factors: factorize(n),
+            twiddles,
+            scratch: std::cell::RefCell::new(vec![Cpx::ZERO; n]),
+        }
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether this plan is for length 1 (identity).
+    pub fn is_empty(&self) -> bool {
+        self.n == 1
+    }
+
+    /// In-place forward DFT: X[k] = sum_j x[j] e^{-2 pi i jk/n}.
+    pub fn forward(&self, data: &mut [Cpx]) {
+        self.transform(data, false)
+    }
+
+    /// In-place inverse DFT with 1/n normalization.
+    pub fn inverse(&self, data: &mut [Cpx]) {
+        self.transform(data, true);
+        let s = 1.0 / self.n as f64;
+        for x in data.iter_mut() {
+            *x = x.scale(s);
+        }
+    }
+
+    fn transform(&self, data: &mut [Cpx], inverse: bool) {
+        assert_eq!(data.len(), self.n);
+        if self.n == 1 {
+            return;
+        }
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_from_slice(data);
+        self.rec(&scratch, 1, data, self.n, 1, 0, inverse);
+    }
+
+    #[inline]
+    fn tw(&self, idx: usize, inverse: bool) -> Cpx {
+        let t = self.twiddles[idx % self.n];
+        if inverse {
+            t.conj()
+        } else {
+            t
+        }
+    }
+
+    /// Recursive decimation-in-time.  `inp` is strided (`stride`), `out` is
+    /// contiguous of length `n`; `tw_stride = N/n`; `depth` indexes factors.
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        &self,
+        inp: &[Cpx],
+        stride: usize,
+        out: &mut [Cpx],
+        n: usize,
+        tw_stride: usize,
+        depth: usize,
+        inverse: bool,
+    ) {
+        if n == 1 {
+            out[0] = inp[0];
+            return;
+        }
+        let r = self.factors[depth];
+        let m = n / r;
+        for l in 0..r {
+            self.rec(
+                &inp[l * stride..],
+                stride * r,
+                &mut out[l * m..(l + 1) * m],
+                m,
+                tw_stride * r,
+                depth + 1,
+                inverse,
+            );
+        }
+        // Combine r sub-transforms: butterflies per output column q.
+        // Stack buffer for the common small radices; heap for large primes.
+        let mut tmp_stack = [Cpx::ZERO; 16];
+        let mut tmp_heap;
+        let tmp: &mut [Cpx] = if r <= 16 {
+            &mut tmp_stack[..r]
+        } else {
+            tmp_heap = vec![Cpx::ZERO; r];
+            &mut tmp_heap[..]
+        };
+        for q in 0..m {
+            for (l, t) in tmp.iter_mut().enumerate() {
+                *t = out[l * m + q];
+            }
+            for s in 0..r {
+                let kout = q + s * m;
+                let mut acc = tmp[0];
+                for (l, t) in tmp.iter().enumerate().skip(1) {
+                    acc += self.tw(l * kout * tw_stride, inverse) * *t;
+                }
+                out[kout] = acc;
+            }
+        }
+    }
+}
+
+/// Naive O(n^2) DFT used as the correctness oracle in tests.
+pub fn dft_naive(x: &[Cpx], inverse: bool) -> Vec<Cpx> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out = vec![Cpx::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Cpx::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            let a = sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+            acc += Cpx::new(a.cos(), a.sin()) * xj;
+        }
+        *o = if inverse { acc.scale(1.0 / n as f64) } else { acc };
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// 3-D helpers over cube-shaped fields (layout: idx = (z*n + y)*n + x)
+// ---------------------------------------------------------------------------
+
+/// In-place 3-D FFT over an `n^3` cube using one shared 1-D plan.
+pub fn fft3d(data: &mut [Cpx], plan: &Plan, inverse: bool) {
+    let n = plan.len();
+    assert_eq!(data.len(), n * n * n);
+    let mut line = vec![Cpx::ZERO; n];
+    let run = |plan: &Plan, line: &mut [Cpx]| {
+        if inverse {
+            plan.inverse(line);
+        } else {
+            plan.forward(line);
+        }
+    };
+    // x-lines (contiguous)
+    for zy in 0..n * n {
+        let base = zy * n;
+        line.copy_from_slice(&data[base..base + n]);
+        run(plan, &mut line);
+        data[base..base + n].copy_from_slice(&line);
+    }
+    // y-lines (stride n)
+    for z in 0..n {
+        for x in 0..n {
+            let base = z * n * n + x;
+            for (y, l) in line.iter_mut().enumerate() {
+                *l = data[base + y * n];
+            }
+            run(plan, &mut line);
+            for (y, l) in line.iter().enumerate() {
+                data[base + y * n] = *l;
+            }
+        }
+    }
+    // z-lines (stride n^2)
+    for y in 0..n {
+        for x in 0..n {
+            let base = y * n + x;
+            for (z, l) in line.iter_mut().enumerate() {
+                *l = data[base + z * n * n];
+            }
+            run(plan, &mut line);
+            for (z, l) in line.iter().enumerate() {
+                data[base + z * n * n] = *l;
+            }
+        }
+    }
+}
+
+/// Signed integer wavenumber for FFT bin `i` of length `n`
+/// (0, 1, ..., n/2, -(n/2-1), ..., -1).
+#[inline]
+pub fn wavenumber(i: usize, n: usize) -> i64 {
+    if i <= n / 2 {
+        i as i64
+    } else {
+        i as i64 - n as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Cpx> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn assert_close(a: &[Cpx], b: &[Cpx], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (*x - *y).norm_sq().sqrt() < tol,
+                "bin {i}: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_for_solver_sizes() {
+        for n in [1usize, 2, 3, 4, 5, 6, 8, 12, 16, 20, 24, 30, 32, 48, 64, 96] {
+            let plan = Plan::new(n);
+            let x = rand_signal(n, n as u64);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            let want = dft_naive(&x, false);
+            assert_close(&got, &want, 1e-9 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_prime_lengths() {
+        for n in [7usize, 11, 13, 17] {
+            let plan = Plan::new(n);
+            let x = rand_signal(n, 100 + n as u64);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            assert_close(&got, &dft_naive(&x, false), 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for n in [24usize, 32, 48] {
+            let plan = Plan::new(n);
+            let x = rand_signal(n, 7);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            assert_close(&y, &x, 1e-10 * n as f64);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 48;
+        let plan = Plan::new(n);
+        let x = rand_signal(n, 9);
+        let phys: f64 = x.iter().map(|c| c.norm_sq()).sum();
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        let spec: f64 = y.iter().map(|c| c.norm_sq()).sum::<f64>() / n as f64;
+        assert!((phys - spec).abs() < 1e-8 * phys);
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 30;
+        let plan = Plan::new(n);
+        let a = rand_signal(n, 1);
+        let b = rand_signal(n, 2);
+        let sum: Vec<Cpx> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        let mut fs = sum.clone();
+        plan.forward(&mut fa);
+        plan.forward(&mut fb);
+        plan.forward(&mut fs);
+        let combined: Vec<Cpx> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+        assert_close(&fs, &combined, 1e-9 * n as f64);
+    }
+
+    #[test]
+    fn delta_transforms_to_ones() {
+        let n = 24;
+        let plan = Plan::new(n);
+        let mut x = vec![Cpx::ZERO; n];
+        x[0] = Cpx::new(1.0, 0.0);
+        plan.forward(&mut x);
+        for c in &x {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft3d_roundtrip_and_single_mode() {
+        let n = 12;
+        let plan = Plan::new(n);
+        // A single Fourier mode k=(2,1,3) should produce one spectral peak.
+        let mut data = vec![Cpx::ZERO; n * n * n];
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let phase = 2.0 * std::f64::consts::PI
+                        * (2.0 * x as f64 + 1.0 * y as f64 + 3.0 * z as f64)
+                        / n as f64;
+                    data[(z * n + y) * n + x] = Cpx::new(phase.cos(), phase.sin());
+                }
+            }
+        }
+        let orig = data.clone();
+        fft3d(&mut data, &plan, false);
+        // Expect peak at (x=2, y=1, z=3) with magnitude n^3.
+        let idx = (3 * n + 1) * n + 2;
+        assert!((data[idx].re - (n * n * n) as f64).abs() < 1e-6);
+        let total: f64 = data.iter().map(|c| c.norm_sq()).sum();
+        assert!((total - ((n * n * n) as f64).powi(2)).abs() < 1e-4 * total);
+        fft3d(&mut data, &plan, true);
+        assert_close(&data, &orig, 1e-9);
+    }
+
+    #[test]
+    fn wavenumber_convention() {
+        assert_eq!(wavenumber(0, 8), 0);
+        assert_eq!(wavenumber(4, 8), 4);
+        assert_eq!(wavenumber(5, 8), -3);
+        assert_eq!(wavenumber(7, 8), -1);
+    }
+}

@@ -1,0 +1,76 @@
+//! Memory-bandwidth contention on shared dies.
+//!
+//! Paper §6.1, footnote 5: "The used EPYC CPUs comprise several dies, which
+//! contain 8 cores each.  All cores on a single die share the available
+//! memory bandwidth."  A memory-bound CFD kernel saturates a die's
+//! bandwidth with a few active cores; beyond that, per-core throughput
+//! falls proportionally.
+
+/// Die-bandwidth contention model.
+#[derive(Debug, Clone)]
+pub struct ContentionModel {
+    /// How many fully-active cores a die's bandwidth can feed at full
+    /// speed (EPYC Rome CCD with a memory-bound spectral/DG kernel: ~3).
+    pub bw_cores: f64,
+    /// Sub-linear exponent: a DG/spectral kernel is only partly
+    /// bandwidth-bound (L3-resident working sets soften the contention).
+    pub exponent: f64,
+}
+
+impl Default for ContentionModel {
+    fn default() -> Self {
+        ContentionModel {
+            bw_cores: 3.0,
+            exponent: 0.3,
+        }
+    }
+}
+
+impl ContentionModel {
+    /// Multiplicative slowdown for a rank on a die with `active` busy
+    /// cores: 1.0 while the die's bandwidth covers them, then
+    /// `(active/bw_cores)^exponent`.
+    pub fn slowdown(&self, active: usize) -> f64 {
+        (active as f64 / self.bw_cores).powf(self.exponent).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn light_occupancy_full_speed() {
+        let m = ContentionModel::default();
+        assert_eq!(m.slowdown(1), 1.0);
+        assert_eq!(m.slowdown(2), 1.0);
+        assert_eq!(m.slowdown(3), 1.0);
+    }
+
+    #[test]
+    fn saturated_die_slows_down() {
+        let m = ContentionModel::default();
+        // Mild at 4 active cores, clearly visible at 8 (full die).
+        assert!(m.slowdown(4) > 1.05 && m.slowdown(4) < 1.2);
+        assert!(m.slowdown(8) > 1.25 && m.slowdown(8) < 1.5);
+    }
+
+    #[test]
+    fn monotone() {
+        let m = ContentionModel::default();
+        for a in 1..8 {
+            assert!(m.slowdown(a + 1) >= m.slowdown(a));
+        }
+    }
+
+    #[test]
+    fn reproduces_the_paper_dip_structure() {
+        // Two 2-rank envs packed on one die (occupancy 4) run slower than
+        // one alone (occupancy 2): the paper's 1->2 env dip...
+        let m = ContentionModel::default();
+        assert!(m.slowdown(4) > m.slowdown(2));
+        // ...while a 16-rank env already fills its dies (occupancy 8)
+        // whether or not a neighbour instance exists: no dip.
+        assert_eq!(m.slowdown(8), m.slowdown(8));
+    }
+}

@@ -1,0 +1,216 @@
+//! Discrete-event simulation of one Relexi training iteration on the
+//! modelled cluster (DESIGN.md S10).  This is the substitute for the
+//! paper's 2,048-core Hawk testbed (repro band 0 — no such machine here):
+//! it composes the launcher, contention, environment and head-node cost
+//! models into the synchronous iteration timeline of Algorithm 1 and
+//! Figure 2, from which the scaling studies (Figs. 3–4) are regenerated.
+
+use super::contention::ContentionModel;
+use super::costmodel::{EnvCostModel, HeadCostModel};
+use super::topology::Topology;
+use crate::launcher::{LaunchMode, Launcher, StagingMode};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Workload description for one simulated iteration.
+#[derive(Debug, Clone)]
+pub struct IterationParams {
+    /// Total solver DOF per environment (Table 1: 13,824 / 32,768).
+    pub dof: usize,
+    /// Elements per environment (Table 1: 64).
+    pub n_elems: usize,
+    /// Bytes of one state tensor sent to the orchestrator.
+    pub state_bytes: f64,
+    /// Parallel environments this iteration.
+    pub n_envs: usize,
+    /// MPI ranks per environment.
+    pub ranks_per_env: usize,
+    /// RL actions per episode (paper: 50).
+    pub n_actions: usize,
+    /// Launch mode (MPMD vs individual mpirun).
+    pub launch_mode: LaunchMode,
+    /// File staging mode (RAM drive vs Lustre).
+    pub staging: StagingMode,
+    /// Input files per instance and total bytes (staging model).
+    pub input_files: usize,
+    pub input_bytes: f64,
+    /// Interconnect-jitter scale at full partition (paper §6.1 attributes
+    /// outliers at 2,048 cores to interconnect load fluctuations).
+    pub jitter_sigma_full: f64,
+    /// RNG seed for the jitter draws.
+    pub seed: u64,
+}
+
+impl IterationParams {
+    /// Defaults for a Table-1 case on the paper's workload shape.
+    pub fn for_case(dof_per_dir: usize, n_envs: usize, ranks_per_env: usize) -> Self {
+        let dof = dof_per_dir.pow(3);
+        IterationParams {
+            dof,
+            n_elems: 64,
+            state_bytes: (dof * 3 * 4) as f64,
+            n_envs,
+            ranks_per_env,
+            n_actions: 50,
+            launch_mode: LaunchMode::Mpmd,
+            staging: StagingMode::RamDrive,
+            input_files: 6,
+            input_bytes: 2e6,
+            jitter_sigma_full: 0.08,
+            seed: 2022,
+        }
+    }
+}
+
+/// The cluster + cost-model bundle.
+pub struct ClusterSim {
+    pub launcher: Launcher,
+    pub env_model: EnvCostModel,
+    pub head_model: HeadCostModel,
+    pub contention: ContentionModel,
+}
+
+/// Timing breakdown of one simulated iteration.
+#[derive(Debug, Clone)]
+pub struct IterationTiming {
+    pub launch_s: f64,
+    pub sampling_s: f64,
+    /// Slowest / mean environment action time (contention + jitter).
+    pub env_max_s: f64,
+    pub env_mean_s: f64,
+    /// Head-node serialized time per RL step.
+    pub head_step_s: f64,
+}
+
+impl IterationTiming {
+    /// Total measured execution time (paper: launch + run to termination).
+    pub fn total_s(&self) -> f64 {
+        self.launch_s + self.sampling_s
+    }
+}
+
+impl ClusterSim {
+    /// A simulator for a Hawk-like partition of `nodes` worker nodes.
+    pub fn hawk(nodes: usize) -> ClusterSim {
+        ClusterSim {
+            launcher: Launcher::new(Topology::hawk(nodes)),
+            env_model: EnvCostModel::default(),
+            head_model: HeadCostModel::default(),
+            contention: ContentionModel::default(),
+        }
+    }
+
+    /// Simulate one synchronous training iteration.
+    pub fn simulate(&self, p: &IterationParams) -> Result<IterationTiming> {
+        let plan = self
+            .launcher
+            .plan(p.n_envs, p.ranks_per_env, p.launch_mode, p.staging)?;
+        let launch_s = self
+            .launcher
+            .startup_time(&plan, p.input_files, p.input_bytes);
+
+        // Per-env action time: die contention (from the actual placement)
+        // plus a per-episode interconnect jitter factor that grows with
+        // the occupied fraction of the partition.
+        let total_ranks = (p.n_envs * p.ranks_per_env) as f64;
+        let frac = total_ranks / self.launcher.topology.total_cores() as f64;
+        let sigma = p.jitter_sigma_full * frac.sqrt();
+        let mut rng = Rng::new(p.seed ^ (p.n_envs as u64) << 16 ^ p.ranks_per_env as u64);
+
+        let mut env_times = Vec::with_capacity(p.n_envs);
+        for i in 0..p.n_envs {
+            let occ = plan.placement.max_die_occupancy_of_instance(i);
+            let slow = self.contention.slowdown(occ);
+            let jitter = (sigma * rng.normal()).exp();
+            env_times.push(self.env_model.action_time(p.dof, p.ranks_per_env, slow) * jitter);
+        }
+        let env_max_s = env_times.iter().cloned().fold(0.0, f64::max);
+        let env_mean_s = env_times.iter().sum::<f64>() / env_times.len() as f64;
+
+        let head_step_s = self
+            .head_model
+            .step_time(p.n_envs, p.n_elems, p.state_bytes);
+
+        // Synchronous algorithm: every RL step waits for the slowest env,
+        // then the head does its serialized work.
+        let sampling_s = p.n_actions as f64 * (env_max_s + head_step_s);
+
+        Ok(IterationTiming {
+            launch_s,
+            sampling_s,
+            env_max_s,
+            env_mean_s,
+            head_step_s,
+        })
+    }
+
+    /// The paper's speedup metric (§6.1): time to run `n_envs` envs
+    /// sequentially over the parallel execution time.
+    pub fn speedup(&self, p: &IterationParams) -> Result<f64> {
+        let parallel = self.simulate(p)?;
+        let mut single = p.clone();
+        single.n_envs = 1;
+        let t1 = self.simulate(&single)?;
+        Ok(p.n_envs as f64 * t1.total_s() / parallel.total_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_timing_composes() {
+        let sim = ClusterSim::hawk(16);
+        let p = IterationParams::for_case(24, 16, 8);
+        let t = sim.simulate(&p).unwrap();
+        assert!(t.launch_s > 0.0);
+        assert!(t.sampling_s > t.launch_s, "launch should be negligible (MPMD)");
+        assert!(t.env_max_s >= t.env_mean_s);
+        // §6.2 ballpark: sampling ~ 15 s for 16 envs x 8 ranks at 24 DOF.
+        assert!(
+            (5.0..40.0).contains(&t.sampling_s),
+            "sampling={:.1}s",
+            t.sampling_s
+        );
+    }
+
+    #[test]
+    fn speedup_reasonable_and_below_ideal() {
+        let sim = ClusterSim::hawk(16);
+        for n_envs in [2usize, 8, 32] {
+            let p = IterationParams::for_case(24, n_envs, 8);
+            let s = sim.speedup(&p).unwrap();
+            assert!(s > 0.5 * n_envs as f64, "n={n_envs}: speedup {s:.2} too low");
+            assert!(s <= 1.05 * n_envs as f64, "n={n_envs}: speedup {s:.2} superlinear");
+        }
+    }
+
+    #[test]
+    fn fewer_ranks_scale_better() {
+        // Paper §6.1: "runs with fewer ranks per FLEXI instance scale
+        // better than the runs using more ranks" (relative efficiency).
+        let sim = ClusterSim::hawk(16);
+        let e = |ranks: usize, envs: usize| {
+            let p = IterationParams::for_case(24, envs, ranks);
+            sim.speedup(&p).unwrap() / envs as f64
+        };
+        assert!(e(2, 128) > e(16, 128) - 0.02);
+    }
+
+    #[test]
+    fn oversubscription_is_an_error() {
+        let sim = ClusterSim::hawk(16);
+        let p = IterationParams::for_case(24, 1024, 16);
+        assert!(sim.simulate(&p).is_err());
+    }
+
+    #[test]
+    fn jitter_deterministic_per_seed() {
+        let sim = ClusterSim::hawk(16);
+        let p = IterationParams::for_case(24, 64, 4);
+        let a = sim.simulate(&p).unwrap();
+        let b = sim.simulate(&p).unwrap();
+        assert_eq!(a.env_max_s, b.env_max_s);
+    }
+}

@@ -1,0 +1,17 @@
+//! The HPC-system substrate (DESIGN.md S10): a model of the paper's Hawk
+//! testbed — node/die topology, memory-bandwidth contention, launch and
+//! head-node cost models — and a discrete-event simulator that regenerates
+//! the weak/strong scaling studies (Figs. 3–4) without the 2,048-core
+//! machine.
+
+pub mod contention;
+pub mod costmodel;
+pub mod desim;
+pub mod scaling;
+pub mod topology;
+
+pub use contention::ContentionModel;
+pub use costmodel::{EnvCostModel, HeadCostModel};
+pub use desim::{ClusterSim, IterationParams, IterationTiming};
+pub use scaling::{steps_per_action_for, strong_scaling, weak_scaling, ScalingPoint};
+pub use topology::Topology;

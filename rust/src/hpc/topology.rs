@@ -1,0 +1,84 @@
+//! Cluster topology model: HLRS Hawk worker nodes (paper §4.1).
+//!
+//! A node = 2 x 64-core AMD EPYC 7742; each EPYC is built from 8-core dies
+//! (CCDs) whose cores share memory bandwidth — the micro-architectural fact
+//! behind the paper's counterintuitive 1->2-environment slowdown (§6.1,
+//! footnote 5).  Core ids are flat per node: die = core / cores_per_die.
+
+/// Static description of the worker partition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Worker nodes available to the launcher (paper benchmarks: 16).
+    pub nodes: usize,
+    /// Cores per node (Hawk: 128).
+    pub cores_per_node: usize,
+    /// Cores per die sharing memory bandwidth (EPYC Rome: 8).
+    pub cores_per_die: usize,
+}
+
+impl Topology {
+    /// Hawk worker partition as used in the paper's benchmarks.
+    pub fn hawk(nodes: usize) -> Topology {
+        Topology {
+            nodes,
+            cores_per_node: 128,
+            cores_per_die: 8,
+        }
+    }
+
+    /// Total cores across the partition.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Dies per node.
+    pub fn dies_per_node(&self) -> usize {
+        self.cores_per_node / self.cores_per_die
+    }
+
+    /// Global die id for (node, core).
+    pub fn die_of(&self, node: usize, core: usize) -> usize {
+        node * self.dies_per_node() + core / self.cores_per_die
+    }
+
+    /// Total dies across the partition.
+    pub fn total_dies(&self) -> usize {
+        self.nodes * self.dies_per_node()
+    }
+}
+
+/// One MPI rank pinned to one core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankPin {
+    /// Environment-instance id.
+    pub instance: usize,
+    /// Rank within the instance.
+    pub rank: usize,
+    /// Node id.
+    pub node: usize,
+    /// Core id within the node.
+    pub core: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hawk_node_shape() {
+        let t = Topology::hawk(16);
+        assert_eq!(t.total_cores(), 2048); // the paper's max worker cores
+        assert_eq!(t.dies_per_node(), 16);
+        assert_eq!(t.total_dies(), 256);
+    }
+
+    #[test]
+    fn die_mapping() {
+        let t = Topology::hawk(2);
+        assert_eq!(t.die_of(0, 0), 0);
+        assert_eq!(t.die_of(0, 7), 0);
+        assert_eq!(t.die_of(0, 8), 1);
+        assert_eq!(t.die_of(0, 127), 15);
+        assert_eq!(t.die_of(1, 0), 16);
+    }
+}

@@ -1,0 +1,108 @@
+//! The launcher substrate: the SmartSim-Infrastructure-Library analogue
+//! (DESIGN.md S9).  Owns instance placement (rankfiles against the cluster
+//! topology), the launch-overhead model (individual vs MPMD starts) and
+//! the file-staging model (Lustre vs RAM drive) — the two §3.3
+//! optimizations the paper implemented to make environment startup
+//! negligible.
+
+pub mod mpmd;
+pub mod rankfile;
+pub mod staging;
+
+pub use mpmd::{LaunchMode, LaunchModel};
+pub use rankfile::{place, Placement};
+pub use staging::{StagingMode, StagingModel};
+
+use crate::hpc::topology::Topology;
+use anyhow::Result;
+
+/// Launch configuration for a batch of environment instances.
+#[derive(Debug, Clone)]
+pub struct LaunchPlan {
+    pub placement: Placement,
+    pub mode: LaunchMode,
+    pub staging: StagingMode,
+}
+
+/// The launcher: builds placements and accounts for startup costs.
+pub struct Launcher {
+    pub topology: Topology,
+    pub launch_model: LaunchModel,
+    pub staging_model: StagingModel,
+}
+
+impl Launcher {
+    /// A launcher for the given worker topology with default cost models.
+    pub fn new(topology: Topology) -> Launcher {
+        Launcher {
+            topology,
+            launch_model: LaunchModel::default(),
+            staging_model: StagingModel::default(),
+        }
+    }
+
+    /// Plan a batch launch: place instances and record the modes.
+    pub fn plan(
+        &self,
+        n_instances: usize,
+        ranks_per_instance: usize,
+        mode: LaunchMode,
+        staging: StagingMode,
+    ) -> Result<LaunchPlan> {
+        Ok(LaunchPlan {
+            placement: place(&self.topology, n_instances, ranks_per_instance)?,
+            mode,
+            staging,
+        })
+    }
+
+    /// Simulated startup time for a plan: mpirun wireup + input staging.
+    /// `files` / `bytes` describe each instance's input set (parameter
+    /// file, mesh, restart file — paper §3.3).
+    pub fn startup_time(&self, plan: &LaunchPlan, files: usize, bytes: f64) -> f64 {
+        let launch = self.launch_model.launch_time(
+            plan.mode,
+            plan.placement.n_instances,
+            plan.placement.ranks_per_instance,
+        );
+        let staging = self.staging_model.launch_read_time(
+            plan.staging,
+            plan.placement.n_instances,
+            plan.placement.nodes_used(),
+            files,
+            bytes,
+        );
+        launch + staging
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_and_startup_time() {
+        let l = Launcher::new(Topology::hawk(16));
+        let fast = l
+            .plan(128, 8, LaunchMode::Mpmd, StagingMode::RamDrive)
+            .unwrap();
+        let slow = l
+            .plan(128, 8, LaunchMode::Individual, StagingMode::Lustre)
+            .unwrap();
+        let t_fast = l.startup_time(&fast, 6, 2e6);
+        let t_slow = l.startup_time(&slow, 6, 2e6);
+        // Both §3.3 improvements together: order-of-magnitude reduction.
+        assert!(
+            t_fast * 10.0 < t_slow,
+            "fast={t_fast:.3}s slow={t_slow:.3}s"
+        );
+    }
+
+    #[test]
+    fn oversubscription_rejected() {
+        let l = Launcher::new(Topology::hawk(1));
+        assert!(l
+            .plan(1025, 2, LaunchMode::Mpmd, StagingMode::RamDrive)
+            .is_err());
+    }
+}

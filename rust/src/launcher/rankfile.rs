@@ -1,0 +1,199 @@
+//! Rankfile generation: topology-aware placement of environment instances.
+//!
+//! The paper (§3.3): "To ensure that each MPI rank is placed correctly on
+//! the available hardware and to avoid double occupancy, Relexi generates
+//! rankfiles on-the-fly based on the available hardware resources."
+//!
+//! Placement policy: instances are packed onto nodes in order, consecutive
+//! cores per instance, never straddling a node boundary (a 2..16-rank
+//! instance always fits inside a 128-core node).
+
+use crate::hpc::topology::{RankPin, Topology};
+use anyhow::{bail, Result};
+
+/// Full placement of a batch of instances.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub pins: Vec<RankPin>,
+    pub topology: Topology,
+    /// Ranks per instance (uniform, as in the paper's benchmarks).
+    pub ranks_per_instance: usize,
+    pub n_instances: usize,
+}
+
+/// Pack `n_instances` x `ranks_per_instance` onto the topology.
+pub fn place(topology: &Topology, n_instances: usize, ranks_per_instance: usize) -> Result<Placement> {
+    if ranks_per_instance == 0 || n_instances == 0 {
+        bail!("placement needs at least one instance with one rank");
+    }
+    if ranks_per_instance > topology.cores_per_node {
+        bail!(
+            "instance of {ranks_per_instance} ranks exceeds node size {}",
+            topology.cores_per_node
+        );
+    }
+    let per_node = topology.cores_per_node / ranks_per_instance;
+    let capacity = per_node * topology.nodes;
+    if n_instances > capacity {
+        bail!(
+            "{n_instances} instances x {ranks_per_instance} ranks exceed capacity \
+             ({capacity} instances on {} nodes)",
+            topology.nodes
+        );
+    }
+    let mut pins = Vec::with_capacity(n_instances * ranks_per_instance);
+    let mut node = 0usize;
+    let mut next_core = 0usize;
+    for instance in 0..n_instances {
+        if next_core + ranks_per_instance > topology.cores_per_node {
+            node += 1;
+            next_core = 0;
+        }
+        for rank in 0..ranks_per_instance {
+            pins.push(RankPin {
+                instance,
+                rank,
+                node,
+                core: next_core + rank,
+            });
+        }
+        next_core += ranks_per_instance;
+    }
+    Ok(Placement {
+        pins,
+        topology: topology.clone(),
+        ranks_per_instance,
+        n_instances,
+    })
+}
+
+impl Placement {
+    /// Number of active ranks on every die (contention model input).
+    pub fn die_occupancy(&self) -> Vec<usize> {
+        let mut occ = vec![0usize; self.topology.total_dies()];
+        for p in &self.pins {
+            occ[self.topology.die_of(p.node, p.core)] += 1;
+        }
+        occ
+    }
+
+    /// Max die occupancy seen by any rank of one instance — the rank that
+    /// limits the (synchronous) instance under bandwidth contention.
+    pub fn max_die_occupancy_of_instance(&self, instance: usize) -> usize {
+        let occ = self.die_occupancy();
+        self.pins
+            .iter()
+            .filter(|p| p.instance == instance)
+            .map(|p| occ[self.topology.die_of(p.node, p.core)])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Nodes actually used.
+    pub fn nodes_used(&self) -> usize {
+        self.pins.iter().map(|p| p.node).max().map(|n| n + 1).unwrap_or(0)
+    }
+
+    /// Render the OpenMPI-style rankfile (`rank N=host slot=core`).
+    pub fn rankfile_text(&self) -> String {
+        let mut out = String::new();
+        for (global_rank, p) in self.pins.iter().enumerate() {
+            out.push_str(&format!(
+                "rank {}=node{:03} slot={}\n",
+                global_rank, p.node, p.core
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn no_double_occupancy() {
+        let t = Topology::hawk(4);
+        let p = place(&t, 60, 8).unwrap();
+        let mut seen = HashSet::new();
+        for pin in &p.pins {
+            assert!(seen.insert((pin.node, pin.core)), "double occupancy {pin:?}");
+            assert!(pin.core < t.cores_per_node);
+            assert!(pin.node < t.nodes);
+        }
+        assert_eq!(p.pins.len(), 480);
+    }
+
+    #[test]
+    fn instances_do_not_straddle_nodes() {
+        let t = Topology::hawk(4);
+        // 48-rank instances: 2 per node with 32 cores spare.
+        let p = place(&t, 8, 48).unwrap();
+        for i in 0..8 {
+            let nodes: HashSet<usize> = p
+                .pins
+                .iter()
+                .filter(|x| x.instance == i)
+                .map(|x| x.node)
+                .collect();
+            assert_eq!(nodes.len(), 1, "instance {i} straddles nodes");
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let t = Topology::hawk(1);
+        assert!(place(&t, 65, 2).is_err()); // 64 x 2-rank fit on one node
+        assert!(place(&t, 64, 2).is_ok());
+        assert!(place(&t, 1, 200).is_err());
+        assert!(place(&t, 0, 4).is_err());
+    }
+
+    #[test]
+    fn two_rank_instances_share_a_die() {
+        // The micro-architecture behind the paper's 1->2 env dip: two
+        // 2-rank instances land on the same 8-core die.
+        let t = Topology::hawk(1);
+        let p1 = place(&t, 1, 2).unwrap();
+        assert_eq!(p1.max_die_occupancy_of_instance(0), 2);
+        let p2 = place(&t, 2, 2).unwrap();
+        assert_eq!(p2.max_die_occupancy_of_instance(0), 4);
+        assert_eq!(p2.max_die_occupancy_of_instance(1), 4);
+    }
+
+    #[test]
+    fn sixteen_rank_instances_own_their_dies() {
+        // 16-rank instances fill two dies regardless of neighbours, so
+        // adding a second instance does not change their die occupancy.
+        let t = Topology::hawk(1);
+        let p1 = place(&t, 1, 16).unwrap();
+        let p2 = place(&t, 2, 16).unwrap();
+        assert_eq!(
+            p1.max_die_occupancy_of_instance(0),
+            p2.max_die_occupancy_of_instance(0)
+        );
+        assert_eq!(p1.max_die_occupancy_of_instance(0), 8);
+    }
+
+    #[test]
+    fn rankfile_format() {
+        let t = Topology::hawk(1);
+        let p = place(&t, 1, 2).unwrap();
+        let text = p.rankfile_text();
+        assert!(text.contains("rank 0=node000 slot=0"));
+        assert!(text.contains("rank 1=node000 slot=1"));
+    }
+
+    #[test]
+    fn full_partition_fills_all_cores() {
+        // The paper's largest weak-scaling point: 1024 x 2-rank envs on
+        // 16 nodes = all 2048 cores.
+        let t = Topology::hawk(16);
+        let p = place(&t, 1024, 2).unwrap();
+        assert_eq!(p.pins.len(), 2048);
+        assert_eq!(p.nodes_used(), 16);
+        let occ = p.die_occupancy();
+        assert!(occ.iter().all(|&o| o == 8), "all dies fully occupied");
+    }
+}

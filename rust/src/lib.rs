@@ -1,0 +1,36 @@
+//! # relexi-rs
+//!
+//! Rust + JAX + Pallas reproduction of *"Deep Reinforcement Learning for
+//! Computational Fluid Dynamics on HPC Systems"* (Kurz, Offenhäuser, Viola,
+//! Shcherbakov, Resch, Beck — J. Computational Science, 2022).
+//!
+//! The crate hosts the Layer-3 coordinator (the paper's Relexi framework)
+//! and every substrate it depends on, built from scratch:
+//!
+//! * [`solver`] — the FLEXI-substitute LES environment (pseudo-spectral
+//!   incompressible NS, linear forcing, per-element Smagorinsky).
+//! * [`orchestrator`] — the SmartSim-Orchestrator-substitute in-memory
+//!   tensor store (sharded KeyDB-like and single-lock Redis-like backends).
+//! * [`launcher`] — the SmartSim-IL-substitute instance manager (rankfiles,
+//!   MPMD vs individual launch, file-staging models).
+//! * [`hpc`] — the Hawk cluster model + discrete-event scaling simulator
+//!   that regenerates the paper's Figs. 3–4.
+//! * [`rl`] — PPO trajectory machinery, Gaussian policy head, reward.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs at training time.
+//! * [`coordinator`] — the synchronous training loop tying it all together.
+//! * [`config`], [`fft`], [`util`] — config system, FFT, and foundations.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping each paper table/figure to a bench or example.
+
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod hpc;
+pub mod launcher;
+pub mod orchestrator;
+pub mod rl;
+pub mod runtime;
+pub mod solver;
+pub mod util;

@@ -1,0 +1,241 @@
+//! `relexi` — the leader binary: truth generation, training, evaluation
+//! and scaling studies from one CLI.
+//!
+//! ```text
+//! relexi gen-truth  [--config cfg.toml] [--out truth.bin] [--case.preset 24dof]
+//! relexi train      [--config cfg.toml] [--truth truth.bin] [--rl.iterations N] ...
+//! relexi eval       --truth truth.bin --checkpoint policy.bin
+//! relexi scaling    [--mode weak|strong] [--case.preset 24dof]
+//! relexi info
+//! ```
+//!
+//! Any dotted config key (`--rl.n_envs 16`, `--solver.t_end 2.0`) can be
+//! passed as a CLI override.
+
+use anyhow::{bail, Context, Result};
+use relexi::config::RunConfig;
+use relexi::coordinator::{eval_baseline, eval_policy, MetricsLog, TrainingLoop};
+use relexi::hpc::{steps_per_action_for, strong_scaling, weak_scaling, ClusterSim};
+use relexi::solver::dns::{generate, Truth, TruthParams};
+use relexi::util::bench::Table;
+use relexi::util::cli::Args;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let overrides = args
+        .overrides()
+        .map(|(k, v)| (k.clone(), v.clone()));
+    RunConfig::load(args.get("config"), overrides)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("gen-truth") => cmd_gen_truth(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("scaling") => cmd_scaling(&args),
+        Some("info") => cmd_info(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "relexi — RL for CFD on HPC systems (Kurz et al. 2022 reproduction)\n\n\
+         USAGE: relexi <subcommand> [--config file.toml] [--dotted.key value ...]\n\n\
+         SUBCOMMANDS:\n\
+           gen-truth   run the DNS, build the ground-truth package (--out)\n\
+           train       run the PPO training loop (--truth, --rl.iterations, ...)\n\
+           eval        evaluate a checkpoint vs the baselines (--checkpoint)\n\
+           scaling     regenerate the Fig. 3/4 scaling studies (--mode weak|strong)\n\
+           info        print artifact/runtime diagnostics"
+    );
+}
+
+fn cmd_gen_truth(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get_or("out", &format!("runs/truth_{}.bin", cfg.case.name));
+    let params = TruthParams {
+        n_dns: cfg.solver.dns_points,
+        n_les: cfg.case.points_per_dir(),
+        nu: cfg.solver.nu,
+        ke_target: cfg.solver.ke_target,
+        spinup_time: args.get_parse("spinup", 4.0f64)?,
+        n_states: args.get_parse("states", 10usize)?,
+        sample_interval: args.get_parse("interval", 0.5f64)?,
+        seed: cfg.rl.seed,
+    };
+    println!(
+        "generating truth: DNS {}^3 -> LES {}^3, {} states + 1 test",
+        params.n_dns, params.n_les, params.n_states
+    );
+    let t0 = std::time::Instant::now();
+    let truth = generate(&params, |i, total| {
+        println!("  sample {i}/{total} ({:.1}s)", t0.elapsed().as_secs_f64());
+    });
+    truth.save(Path::new(&out))?;
+    println!("wrote {out} ({:.1}s)", t0.elapsed().as_secs_f64());
+    println!("DNS mean spectrum (k: E):");
+    for (k, e) in truth.mean_spectrum.iter().enumerate().skip(1) {
+        println!("  {k:>3}: {e:.6e}");
+    }
+    Ok(())
+}
+
+fn default_truth_path(cfg: &RunConfig) -> String {
+    format!("runs/truth_{}.bin", cfg.case.name)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let truth_path = args.get_or("truth", &default_truth_path(&cfg));
+    let truth = Arc::new(
+        Truth::load(Path::new(&truth_path))
+            .with_context(|| format!("load {truth_path}; run `relexi gen-truth` first"))?,
+    );
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let csv = Path::new(&cfg.out_dir).join("training.csv");
+    let mut log = MetricsLog::with_csv(&csv)?;
+    println!(
+        "training: case {} | {} envs x {} actions | {} iterations | artifacts {}",
+        cfg.case.name,
+        cfg.rl.n_envs,
+        cfg.steps_per_episode(),
+        cfg.rl.iterations,
+        cfg.artifacts_dir
+    );
+    let mut lp = TrainingLoop::new(cfg, truth)?;
+    if let Some(ckpt) = args.get("checkpoint") {
+        lp.load_checkpoint(Path::new(ckpt))?;
+        println!("resumed from {ckpt}");
+    }
+    lp.run(&mut log)?;
+    println!(
+        "done: best normalized return {:.4}; metrics -> {}",
+        log.best_return(),
+        csv.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let truth_path = args.get_or("truth", &default_truth_path(&cfg));
+    let truth = Arc::new(Truth::load(Path::new(&truth_path))?);
+
+    let rt = relexi::runtime::Runtime::cpu()?;
+    let reg = relexi::runtime::Registry::open(Path::new(&cfg.artifacts_dir))?;
+    let policy = relexi::runtime::PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+    let theta = match args.get("checkpoint") {
+        Some(p) => relexi::util::binio::read_f32_vec(Path::new(p))?,
+        None => reg.initial_params(cfg.case.n)?,
+    };
+
+    let rl = eval_policy(&cfg, &truth, &policy, &theta, None)?;
+    let smag = eval_baseline(&cfg, &truth, cfg.solver.smagorinsky_cs)?;
+    let implicit = eval_baseline(&cfg, &truth, 0.0)?;
+
+    let mut t = Table::new(&["model", "normalized return"]);
+    t.row(vec!["RL policy".into(), format!("{:+.4}", rl.normalized_return)]);
+    t.row(vec![
+        format!("Smagorinsky Cs={}", cfg.solver.smagorinsky_cs),
+        format!("{:+.4}", smag.normalized_return),
+    ]);
+    t.row(vec!["implicit (Cs=0)".into(), format!("{:+.4}", implicit.normalized_return)]);
+    t.print("Test-state returns (Fig. 5 style)");
+
+    let mut s = Table::new(&["k", "E_DNS", "E_RL", "E_Smag", "E_implicit"]);
+    for k in 1..=cfg.case.k_max {
+        s.row(vec![
+            k.to_string(),
+            format!("{:.4e}", truth.mean_spectrum[k]),
+            format!("{:.4e}", rl.final_spectrum[k]),
+            format!("{:.4e}", smag.final_spectrum[k]),
+            format!("{:.4e}", implicit.final_spectrum[k]),
+        ]);
+    }
+    s.print("Final energy spectra at t_end (Fig. 5c)");
+
+    println!("\nCs prediction distribution (Fig. 5d):");
+    println!(
+        "{}",
+        relexi::util::stats::ascii_histogram(&rl.cs_samples, 0.0, 0.5, 20, 40)
+    );
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let mode = args.get_or("mode", "weak");
+    let nodes = args.get_parse("nodes", 16usize)?;
+    let sim = ClusterSim::hawk(nodes);
+    for dof in [24usize, 32] {
+        let spa = steps_per_action_for(dof);
+        match mode.as_str() {
+            "weak" => {
+                let mut t = Table::new(&["ranks/env", "n_envs", "time [s]", "speedup", "efficiency"]);
+                for ranks in [2usize, 4, 8, 16] {
+                    for p in weak_scaling(&sim, dof, ranks, spa)? {
+                        t.row(vec![
+                            ranks.to_string(),
+                            p.n_envs.to_string(),
+                            format!("{:.2}", p.total_s),
+                            format!("{:.1}", p.speedup),
+                            format!("{:.3}", p.efficiency),
+                        ]);
+                    }
+                }
+                t.print(&format!("Weak scaling, {dof} DOF (Fig. 3)"));
+            }
+            "strong" => {
+                let mut t = Table::new(&["n_envs", "ranks/env", "time [s]", "speedup", "efficiency"]);
+                for envs in [2usize, 8, 32, 128] {
+                    for p in strong_scaling(&sim, dof, envs, &[2, 4, 8, 16], spa)? {
+                        t.row(vec![
+                            envs.to_string(),
+                            p.ranks_per_env.to_string(),
+                            format!("{:.2}", p.total_s),
+                            format!("{:.2}", p.speedup),
+                            format!("{:.3}", p.efficiency),
+                        ]);
+                    }
+                }
+                t.print(&format!("Strong scaling, {dof} DOF (Fig. 4)"));
+            }
+            other => bail!("unknown scaling mode {other:?} (weak|strong)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = relexi::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    match relexi::runtime::Registry::open(Path::new("artifacts")) {
+        Ok(reg) => {
+            println!("artifacts:");
+            for e in &reg.entries {
+                println!("  {:?} n={} batch={} -> {}", e.kind, e.n, e.batch, e.path.display());
+            }
+            for (n, c) in &reg.param_counts {
+                println!("  params N={n}: {c} floats");
+            }
+        }
+        Err(e) => println!("no artifact registry: {e:#}"),
+    }
+    Ok(())
+}

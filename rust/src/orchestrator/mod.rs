@@ -1,0 +1,154 @@
+//! The orchestrator substrate: the SmartSim-Orchestrator analogue
+//! (DESIGN.md S8).  An in-memory tensor datastore deployed by the
+//! coordinator ("head node"), through which environment workers and the
+//! trainer exchange states, actions and done-flags — the same dataflow and
+//! the same central-bottleneck architecture as the paper's Redis/KeyDB
+//! database, with client handles playing the role of SmartRedis.
+
+pub mod protocol;
+pub mod store;
+pub mod value;
+
+pub use protocol::Protocol;
+pub use store::{ShardedStore, StatsSnapshot};
+pub use value::Value;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The orchestrator: a launched store plus client factory.
+pub struct Orchestrator {
+    store: Arc<ShardedStore>,
+}
+
+impl Orchestrator {
+    /// "Launch" the datastore (paper: on the head node, before training).
+    /// `shards = 1` gives the single-threaded-Redis behaviour; more shards
+    /// give the KeyDB behaviour.
+    pub fn launch(shards: usize) -> Orchestrator {
+        Orchestrator {
+            store: Arc::new(ShardedStore::new(shards)),
+        }
+    }
+
+    /// A client handle (cheap to clone across worker threads).
+    pub fn client(&self) -> Client {
+        Client {
+            store: self.store.clone(),
+        }
+    }
+
+    /// Direct store access (benches, tests).
+    pub fn store(&self) -> &Arc<ShardedStore> {
+        &self.store
+    }
+
+    /// Drop all keys (between iterations).
+    pub fn clear(&self) {
+        self.store.clear();
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.store.stats()
+    }
+}
+
+/// Client handle — the SmartRedis-client analogue used by both the
+/// environment side (Fortran client in the paper) and the trainer side
+/// (Python client in the paper).
+#[derive(Clone)]
+pub struct Client {
+    store: Arc<ShardedStore>,
+}
+
+impl Client {
+    /// Write a tensor.
+    pub fn put_tensor(&self, key: &str, shape: Vec<usize>, data: Vec<f32>) {
+        self.store.put(key, Value::tensor(shape, data));
+    }
+
+    /// Write a flag.
+    pub fn put_flag(&self, key: &str, v: bool) {
+        self.store.put(key, Value::Flag(v));
+    }
+
+    /// Write a scalar.
+    pub fn put_scalar(&self, key: &str, v: f64) {
+        self.store.put(key, Value::Scalar(v));
+    }
+
+    /// Non-blocking read.
+    pub fn get(&self, key: &str) -> Option<Value> {
+        self.store.get(key)
+    }
+
+    /// Blocking poll until the key appears (SmartRedis `poll_tensor`).
+    pub fn poll(&self, key: &str, timeout: Duration) -> Option<Value> {
+        self.store.wait_for(key, timeout)
+    }
+
+    /// Blocking poll that consumes the value.
+    pub fn poll_take(&self, key: &str, timeout: Duration) -> Option<Value> {
+        self.store.wait_take(key, timeout)
+    }
+
+    /// Delete a key.
+    pub fn delete(&self, key: &str) -> bool {
+        self.store.delete(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_state_action_exchange() {
+        // One simulated env worker and one trainer exchanging one step.
+        let orch = Orchestrator::launch(4);
+        let proto = Protocol::new("t");
+        let env_client = orch.client();
+        let trainer_client = orch.client();
+        let p = proto.clone();
+
+        let worker = std::thread::spawn(move || {
+            // env writes its state, then waits for the action
+            env_client.put_tensor(&p.state_key(0, 0), vec![2], vec![1.0, 2.0]);
+            let act = env_client
+                .poll_take(&p.action_key(0, 0), Duration::from_secs(5))
+                .expect("no action");
+            let data = act.as_tensor().unwrap().1.to_vec();
+            env_client.put_flag(&p.done_key(0), true);
+            data
+        });
+
+        let state = trainer_client
+            .poll(&proto.state_key(0, 0), Duration::from_secs(5))
+            .expect("no state");
+        assert_eq!(state.as_tensor().unwrap().1, &[1.0, 2.0]);
+        trainer_client.put_tensor(&proto.action_key(0, 0), vec![1], vec![0.17]);
+        let act = worker.join().unwrap();
+        assert_eq!(act, vec![0.17]);
+        assert_eq!(
+            trainer_client
+                .poll(&proto.done_key(0), Duration::from_secs(5))
+                .unwrap()
+                .as_flag(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn client_helpers() {
+        let orch = Orchestrator::launch(1);
+        let c = orch.client();
+        c.put_scalar("s", 2.0);
+        assert_eq!(c.get("s").unwrap().as_scalar(), Some(2.0));
+        assert!(c.delete("s"));
+        assert!(c.get("s").is_none());
+        assert!(orch.stats().puts >= 1);
+        orch.clear();
+        assert!(orch.store().is_empty());
+    }
+}

@@ -1,0 +1,66 @@
+//! Key protocol between the coordinator and the environment workers —
+//! the Relexi <-> FLEXI dataflow of paper §3.1/§3.3:
+//!
+//! * env writes   `e{env}:s{step}:state`  (obs tensor)  + `e{env}:done`
+//! * trainer writes `e{env}:s{step}:action`
+//! * env reads the action, advances `dt_RL`, writes the next state
+//!
+//! Step indices in the keys prevent stale reads without needing message
+//! queues, mirroring how Relexi names tensors in the SmartSim database.
+
+/// Key builder for one training run.
+#[derive(Debug, Clone)]
+pub struct Protocol {
+    run_tag: String,
+}
+
+impl Protocol {
+    /// Namespacing tag keeps concurrent runs apart in one store.
+    pub fn new(run_tag: &str) -> Protocol {
+        Protocol {
+            run_tag: run_tag.to_string(),
+        }
+    }
+
+    /// State tensor written by env `env` after RL step `step`.
+    pub fn state_key(&self, env: usize, step: usize) -> String {
+        format!("{}:e{}:s{}:state", self.run_tag, env, step)
+    }
+
+    /// Action tensor for env `env` at RL step `step`.
+    pub fn action_key(&self, env: usize, step: usize) -> String {
+        format!("{}:e{}:s{}:action", self.run_tag, env, step)
+    }
+
+    /// Spectrum-error scalar accompanying a state (reward input).
+    pub fn error_key(&self, env: usize, step: usize) -> String {
+        format!("{}:e{}:s{}:err", self.run_tag, env, step)
+    }
+
+    /// Terminal flag for env `env` ("will terminate", §3.1).
+    pub fn done_key(&self, env: usize) -> String {
+        format!("{}:e{}:done", self.run_tag, env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_distinct_and_stable() {
+        let p = Protocol::new("it3");
+        assert_eq!(p.state_key(0, 0), "it3:e0:s0:state");
+        assert_ne!(p.state_key(1, 0), p.state_key(0, 0));
+        assert_ne!(p.state_key(0, 1), p.state_key(0, 0));
+        assert_ne!(p.action_key(0, 0), p.state_key(0, 0));
+        assert_ne!(p.error_key(0, 0), p.state_key(0, 0));
+    }
+
+    #[test]
+    fn runs_are_namespaced() {
+        let a = Protocol::new("runA");
+        let b = Protocol::new("runB");
+        assert_ne!(a.state_key(0, 0), b.state_key(0, 0));
+    }
+}

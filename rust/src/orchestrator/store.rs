@@ -1,0 +1,321 @@
+//! The in-memory datastore backing the orchestrator.
+//!
+//! Two backends mirror the paper's observation (§3.1) that swapping Redis
+//! for its multithreaded fork KeyDB "provided significantly more
+//! performance":
+//!
+//! * [`ShardedStore`] — N independently locked shards (KeyDB analogue):
+//!   concurrent clients hitting different keys proceed in parallel.
+//! * a 1-shard store — every operation serializes on one lock, the
+//!   single-threaded-Redis analogue.
+//!
+//! `bench_db` regenerates the comparison (experiment A1 in DESIGN.md §6).
+
+use super::value::Value;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Operation counters (throughput metrics for the §Perf pass).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub hits: AtomicU64,
+    pub poll_misses: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+/// Snapshot of the counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub puts: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub poll_misses: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+struct Shard {
+    map: Mutex<HashMap<String, Value>>,
+    cv: Condvar,
+}
+
+/// Sharded in-memory key-value store.
+pub struct ShardedStore {
+    shards: Vec<Shard>,
+    stats: StoreStats,
+}
+
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl ShardedStore {
+    /// Create a store with `shards` independent locks (1 = Redis-like).
+    pub fn new(shards: usize) -> ShardedStore {
+        assert!(shards >= 1);
+        ShardedStore {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    map: Mutex::new(HashMap::new()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        let i = (fnv1a(key) as usize) % self.shards.len();
+        &self.shards[i]
+    }
+
+    /// Number of shards (1 = single-lock backend).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Store a value under a key (overwrites), waking pollers.
+    pub fn put(&self, key: &str, value: Value) {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_in
+            .fetch_add(value.size_bytes() as u64, Ordering::Relaxed);
+        let shard = self.shard(key);
+        let mut map = shard.map.lock().unwrap();
+        map.insert(key.to_string(), value);
+        shard.cv.notify_all();
+    }
+
+    /// Fetch a clone of the value, if present.
+    pub fn get(&self, key: &str) -> Option<Value> {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard(key);
+        let map = shard.map.lock().unwrap();
+        let v = map.get(key).cloned();
+        if let Some(ref val) = v {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .bytes_out
+                .fetch_add(val.size_bytes() as u64, Ordering::Relaxed);
+        }
+        v
+    }
+
+    /// Atomically fetch and remove (consume a message).
+    pub fn take(&self, key: &str) -> Option<Value> {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard(key);
+        let mut map = shard.map.lock().unwrap();
+        let v = map.remove(key);
+        if let Some(ref val) = v {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .bytes_out
+                .fetch_add(val.size_bytes() as u64, Ordering::Relaxed);
+        }
+        v
+    }
+
+    /// Does the key exist?
+    pub fn exists(&self, key: &str) -> bool {
+        self.shard(key).map.lock().unwrap().contains_key(key)
+    }
+
+    /// Remove a key; true if it existed.
+    pub fn delete(&self, key: &str) -> bool {
+        self.shard(key).map.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Remove everything (between training iterations).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.map.lock().unwrap().clear();
+        }
+    }
+
+    /// Total number of stored keys.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+    }
+
+    /// True if no keys are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking poll: wait until `key` appears (condvar-backed, the
+    /// SmartRedis `poll_tensor` analogue) or `timeout` elapses.
+    pub fn wait_for(&self, key: &str, timeout: Duration) -> Option<Value> {
+        let deadline = Instant::now() + timeout;
+        let shard = self.shard(key);
+        let mut map = shard.map.lock().unwrap();
+        loop {
+            if let Some(v) = map.get(key) {
+                self.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .bytes_out
+                    .fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
+                return Some(v.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
+            let (m, res) = shard.cv.wait_timeout(map, deadline - now).unwrap();
+            map = m;
+            if res.timed_out() && !map.contains_key(key) {
+                return None;
+            }
+        }
+    }
+
+    /// Blocking poll-and-take: wait until `key` appears, then consume it.
+    pub fn wait_take(&self, key: &str, timeout: Duration) -> Option<Value> {
+        let deadline = Instant::now() + timeout;
+        let shard = self.shard(key);
+        let mut map = shard.map.lock().unwrap();
+        loop {
+            if let Some(v) = map.remove(key) {
+                self.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .bytes_out
+                    .fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
+                return Some(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
+            let (m, res) = shard.cv.wait_timeout(map, deadline - now).unwrap();
+            map = m;
+            if res.timed_out() && !map.contains_key(key) {
+                return None;
+            }
+        }
+    }
+
+    /// Snapshot the op counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            puts: self.stats.puts.load(Ordering::Relaxed),
+            gets: self.stats.gets.load(Ordering::Relaxed),
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            poll_misses: self.stats.poll_misses.load(Ordering::Relaxed),
+            bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn put_get_take() {
+        let s = ShardedStore::new(4);
+        s.put("a", Value::Scalar(1.5));
+        assert_eq!(s.get("a"), Some(Value::Scalar(1.5)));
+        assert_eq!(s.take("a"), Some(Value::Scalar(1.5)));
+        assert_eq!(s.get("a"), None);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn overwrite_and_delete() {
+        let s = ShardedStore::new(2);
+        s.put("k", Value::Flag(false));
+        s.put("k", Value::Flag(true));
+        assert_eq!(s.get("k").unwrap().as_flag(), Some(true));
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+    }
+
+    #[test]
+    fn wait_for_times_out() {
+        let s = ShardedStore::new(1);
+        let t0 = Instant::now();
+        assert!(s.wait_for("nope", Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn wait_for_sees_concurrent_put() {
+        let s = Arc::new(ShardedStore::new(4));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.put("late", Value::Scalar(7.0));
+        });
+        let v = s.wait_for("late", Duration::from_secs(2));
+        h.join().unwrap();
+        assert_eq!(v, Some(Value::Scalar(7.0)));
+    }
+
+    #[test]
+    fn wait_take_consumes() {
+        let s = Arc::new(ShardedStore::new(4));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            s2.put("x", Value::Scalar(1.0));
+        });
+        assert!(s.wait_take("x", Duration::from_secs(2)).is_some());
+        h.join().unwrap();
+        assert!(!s.exists("x"));
+    }
+
+    #[test]
+    fn concurrent_clients_consistent() {
+        let s = Arc::new(ShardedStore::new(8));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    s.put(&format!("t{t}:k{i}"), Value::Scalar(i as f64));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 800);
+        let st = s.stats();
+        assert_eq!(st.puts, 800);
+        for t in 0..8 {
+            for i in (0..100).step_by(17) {
+                assert_eq!(
+                    s.get(&format!("t{t}:k{i}")).unwrap().as_scalar(),
+                    Some(i as f64)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_track_bytes() {
+        let s = ShardedStore::new(2);
+        s.put("t", Value::tensor(vec![8], vec![0.0; 8]));
+        s.get("t");
+        let st = s.stats();
+        assert_eq!(st.bytes_in, 8 + 32);
+        assert_eq!(st.bytes_out, 8 + 32);
+        assert_eq!(st.hits, 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Values stored in the orchestrator: tensors (flow states, actions),
+//! scalars and flags (the done-flag protocol of paper §3.1).
+
+/// A value in the in-memory datastore.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Dense f32 tensor with shape (the SmartRedis `put_tensor` analogue).
+    Tensor { shape: Vec<usize>, data: Vec<f32> },
+    /// Scalar (timings, rewards).
+    Scalar(f64),
+    /// Boolean flag ("FLEXI has reached its final state and will terminate").
+    Flag(bool),
+    /// Opaque bytes (checkpoints, metadata).
+    Bytes(Vec<u8>),
+}
+
+impl Value {
+    /// Build a tensor value; panics if shape and data disagree.
+    pub fn tensor(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "tensor shape {shape:?} != data len {}", data.len());
+        Value::Tensor { shape, data }
+    }
+
+    /// Approximate payload size in bytes (for the throughput metrics).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::Tensor { shape, data } => shape.len() * 8 + data.len() * 4,
+            Value::Scalar(_) => 8,
+            Value::Flag(_) => 1,
+            Value::Bytes(b) => b.len(),
+        }
+    }
+
+    /// Tensor accessor.
+    pub fn as_tensor(&self) -> Option<(&[usize], &[f32])> {
+        match self {
+            Value::Tensor { shape, data } => Some((shape, data)),
+            _ => None,
+        }
+    }
+
+    /// Flag accessor.
+    pub fn as_flag(&self) -> Option<bool> {
+        match self {
+            Value::Flag(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Scalar accessor.
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            Value::Scalar(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_construction_checks_shape() {
+        let v = Value::tensor(vec![2, 3], vec![0.0; 6]);
+        let (shape, data) = v.as_tensor().unwrap();
+        assert_eq!(shape, &[2, 3]);
+        assert_eq!(data.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Value::tensor(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn size_accounting() {
+        assert_eq!(Value::Scalar(1.0).size_bytes(), 8);
+        assert_eq!(Value::Flag(true).size_bytes(), 1);
+        assert_eq!(Value::tensor(vec![4], vec![0.0; 4]).size_bytes(), 8 + 16);
+    }
+
+    #[test]
+    fn accessors_reject_wrong_kind() {
+        assert!(Value::Scalar(1.0).as_tensor().is_none());
+        assert!(Value::Flag(true).as_scalar().is_none());
+        assert_eq!(Value::Flag(true).as_flag(), Some(true));
+    }
+}

@@ -1,0 +1,221 @@
+//! The RL environment (paper §5.2): an LES episode on the HIT test case.
+//!
+//! State: the coarse-scale velocity field, observed element-locally
+//! (`(N+1)^3 x 3` per element).  Action: one Smagorinsky Cs per element.
+//! Transition: the flow solver advances `dt_RL = 0.1`.  Reward: spectrum
+//! error vs the DNS mean spectrum through Eqs. (4)-(5).  Episodes run to
+//! `t_end = 5` (50 actions); initial states are drawn from the filtered
+//! DNS pool with one held-out test state.
+
+use super::reward::reward_from_error;
+use crate::config::{CaseConfig, SolverConfig};
+use crate::solver::dns::{unpack_state, Truth};
+use crate::solver::forcing::LinearForcing;
+use crate::solver::spectrum::spectrum_error;
+use crate::solver::Solver;
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Result of one environment step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    /// Mean relative spectrum error, Eq. (4).
+    pub spec_error: f64,
+    /// Reward, Eq. (5).
+    pub reward: f64,
+    /// Episode finished (t reached t_end).
+    pub done: bool,
+}
+
+/// One LES environment instance (the paper's "FLEXI instance").
+pub struct LesEnv {
+    pub solver: Solver,
+    truth: Arc<Truth>,
+    k_max: usize,
+    alpha: f64,
+    dt_rl: f64,
+    n_actions: usize,
+    ke_target: f64,
+    forcing_tau: f64,
+    /// Actions taken in the current episode.
+    pub step_idx: usize,
+}
+
+impl LesEnv {
+    /// Build an environment for a Table-1 case.
+    pub fn new(case: &CaseConfig, scfg: &SolverConfig, truth: Arc<Truth>) -> Result<LesEnv> {
+        anyhow::ensure!(
+            truth.n_les == case.points_per_dir(),
+            "truth built for n={}, case needs n={}",
+            truth.n_les,
+            case.points_per_dir()
+        );
+        let solver = Solver::new(
+            case.points_per_dir(),
+            case.elems_per_dir,
+            scfg.nu,
+            scfg.cfl,
+        );
+        Ok(LesEnv {
+            solver,
+            truth,
+            k_max: case.k_max,
+            alpha: case.alpha,
+            dt_rl: scfg.dt_rl,
+            n_actions: (scfg.t_end / scfg.dt_rl).round() as usize,
+            ke_target: scfg.ke_target,
+            forcing_tau: scfg.forcing_tau,
+            step_idx: 0,
+        })
+    }
+
+    /// Number of elements (= actions per step).
+    pub fn n_elems(&self) -> usize {
+        self.solver.emap.n_elems()
+    }
+
+    /// Actions per episode.
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    /// Reset to a random pool state (or the held-out test state); returns
+    /// the initial observation.
+    pub fn reset(&mut self, rng: &mut Rng, test: bool) -> Vec<f32> {
+        let flat = if test {
+            &self.truth.test_state
+        } else {
+            &self.truth.states[rng.below(self.truth.states.len())]
+        };
+        let state = unpack_state(&self.solver.grid, flat);
+        self.solver.set_state(state);
+        self.solver.t = 0.0;
+        self.solver.forcing = Some(LinearForcing::new(self.ke_target, self.forcing_tau));
+        self.solver.set_cs_uniform(0.0);
+        self.step_idx = 0;
+        self.solver.observations()
+    }
+
+    /// Apply per-element Cs actions and advance one RL interval.
+    pub fn step(&mut self, cs: &[f64]) -> StepOut {
+        self.solver.set_cs(cs);
+        self.solver.advance(self.dt_rl);
+        self.step_idx += 1;
+        let spec = self.solver.spectrum();
+        let spec_error = spectrum_error(&self.truth.mean_spectrum, &spec, self.k_max);
+        StepOut {
+            spec_error,
+            reward: reward_from_error(spec_error, self.alpha),
+            done: self.step_idx >= self.n_actions,
+        }
+    }
+
+    /// Current observation.
+    pub fn observe(&mut self) -> Vec<f32> {
+        self.solver.observations()
+    }
+
+    /// Current LES energy spectrum.
+    pub fn spectrum(&self) -> Vec<f64> {
+        self.solver.spectrum()
+    }
+
+    /// The DNS mean spectrum this env is rewarded against.
+    pub fn target_spectrum(&self) -> &[f64] {
+        &self.truth.mean_spectrum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::solver::dns::{generate, TruthParams};
+
+    /// A small truth + case for fast tests (12^3 LES, 2^3 elements).
+    pub fn tiny_setup() -> (CaseConfig, SolverConfig, Arc<Truth>) {
+        let case = CaseConfig {
+            name: "tiny".into(),
+            n: 5,
+            elems_per_dir: 2,
+            k_max: 3,
+            alpha: 0.4,
+        };
+        let scfg = SolverConfig {
+            nu: 1.0 / 45.0,
+            dns_points: 24,
+            t_end: 0.3,
+            dt_rl: 0.1,
+            ..Default::default()
+        };
+        let truth = generate(
+            &TruthParams {
+                n_dns: 24,
+                n_les: 12,
+                nu: scfg.nu,
+                ke_target: scfg.ke_target,
+                spinup_time: 0.5,
+                n_states: 3,
+                sample_interval: 0.2,
+                seed: 42,
+            },
+            |_, _| {},
+        );
+        (case, scfg, Arc::new(truth))
+    }
+
+    #[test]
+    fn episode_runs_to_done() {
+        let (case, scfg, truth) = tiny_setup();
+        let mut env = LesEnv::new(&case, &scfg, truth).unwrap();
+        let mut rng = Rng::new(1);
+        let obs = env.reset(&mut rng, false);
+        assert_eq!(obs.len(), 8 * 216 * 3); // 2^3 elems x 6^3 points x 3 comps
+        assert_eq!(obs.len(), env.n_elems() * 648);
+        let cs = vec![0.1; env.n_elems()];
+        let mut done = false;
+        let mut steps = 0;
+        while !done {
+            let out = env.step(&cs);
+            assert!(out.reward <= 1.0 && out.reward > -1.0);
+            assert!(out.spec_error >= 0.0);
+            done = out.done;
+            steps += 1;
+            assert!(steps <= 3);
+        }
+        assert_eq!(steps, 3); // t_end/dt_rl
+    }
+
+    #[test]
+    fn test_state_is_deterministic() {
+        let (case, scfg, truth) = tiny_setup();
+        let mut env1 = LesEnv::new(&case, &scfg, truth.clone()).unwrap();
+        let mut env2 = LesEnv::new(&case, &scfg, truth).unwrap();
+        let mut rng1 = Rng::new(1);
+        let mut rng2 = Rng::new(999); // different RNG must not matter for test state
+        let o1 = env1.reset(&mut rng1, true);
+        let o2 = env2.reset(&mut rng2, true);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn mismatched_truth_rejected() {
+        let (_case, scfg, truth) = tiny_setup();
+        let case32 = presets::dof32();
+        assert!(LesEnv::new(&case32, &scfg, truth).is_err());
+    }
+
+    #[test]
+    fn reward_reflects_spectrum_quality() {
+        // An env stepped from a filtered-DNS state should start with a
+        // reward well above -1 (its spectrum matches the DNS by
+        // construction at resolved scales).
+        let (case, scfg, truth) = tiny_setup();
+        let mut env = LesEnv::new(&case, &scfg, truth).unwrap();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng, false);
+        let out = env.step(&vec![0.1; env.n_elems()]);
+        assert!(out.reward > -0.5, "reward={}", out.reward);
+    }
+}

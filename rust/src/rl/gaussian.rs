@@ -1,0 +1,75 @@
+//! Gaussian policy head: action sampling and log-densities on the Rust
+//! side, numerically identical to the JAX `gaussian_logp` inside the
+//! train-step artifact (same formula, f32-compatible magnitudes).
+
+use crate::util::Rng;
+
+/// ln(2*pi)/2, the normalization constant of the standard normal.
+const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
+
+/// Sample `a ~ N(mean, exp(log_std))` per element.
+pub fn sample(mean: &[f32], log_std: f32, rng: &mut Rng) -> Vec<f32> {
+    let sigma = (log_std as f64).exp();
+    mean.iter()
+        .map(|&m| (m as f64 + sigma * rng.normal()) as f32)
+        .collect()
+}
+
+/// Elementwise log density of `act` under `N(mean, exp(log_std))`.
+pub fn log_prob(act: &[f32], mean: &[f32], log_std: f32) -> Vec<f32> {
+    debug_assert_eq!(act.len(), mean.len());
+    let ls = log_std as f64;
+    let sigma = ls.exp();
+    act.iter()
+        .zip(mean)
+        .map(|(&a, &m)| {
+            let z = (a as f64 - m as f64) / sigma;
+            (-0.5 * z * z - ls - HALF_LN_2PI) as f32
+        })
+        .collect()
+}
+
+/// Entropy of the diagonal Gaussian (per element).
+pub fn entropy(log_std: f32) -> f64 {
+    0.5 + HALF_LN_2PI + log_std as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_prob_matches_closed_form() {
+        let lp = log_prob(&[0.3], &[0.25], -3.0)[0] as f64;
+        let sigma = (-3.0f64).exp();
+        let want = -0.5 * ((0.3 - 0.25) / sigma).powi(2) + 3.0 - HALF_LN_2PI;
+        assert!((lp - want).abs() < 1e-5, "{lp} vs {want}");
+    }
+
+    #[test]
+    fn sample_statistics() {
+        let mut rng = Rng::new(7);
+        let mean = vec![0.25f32; 20_000];
+        let acts = sample(&mean, (0.05f64).ln() as f32, &mut rng);
+        let m: f64 = acts.iter().map(|&a| a as f64).sum::<f64>() / acts.len() as f64;
+        let v: f64 = acts.iter().map(|&a| (a as f64 - m).powi(2)).sum::<f64>()
+            / acts.len() as f64;
+        assert!((m - 0.25).abs() < 2e-3, "mean={m}");
+        assert!((v.sqrt() - 0.05).abs() < 2e-3, "std={}", v.sqrt());
+    }
+
+    #[test]
+    fn log_prob_peaks_at_mean() {
+        let lp_at_mean = log_prob(&[0.2], &[0.2], -2.0)[0];
+        let lp_off = log_prob(&[0.3], &[0.2], -2.0)[0];
+        assert!(lp_at_mean > lp_off);
+    }
+
+    #[test]
+    fn entropy_grows_with_sigma() {
+        assert!(entropy(-1.0) > entropy(-2.0));
+        // sigma = 0.05 (the init): H = 0.5 + 0.5 ln(2 pi) + ln 0.05
+        let want = 0.5 + HALF_LN_2PI + (0.05f64).ln();
+        assert!((entropy((0.05f64).ln() as f32) - want).abs() < 1e-6);
+    }
+}

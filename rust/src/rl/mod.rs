@@ -1,0 +1,12 @@
+//! RL machinery (DESIGN.md S11): the LES environment, the Gaussian policy
+//! head, reward shaping (Eqs. 4–5), and trajectory/advantage processing
+//! for the clipping-PPO algorithm of paper §5.3.
+
+pub mod env;
+pub mod gaussian;
+pub mod reward;
+pub mod trajectory;
+
+pub use env::{LesEnv, StepOut};
+pub use reward::{max_return, reward_from_error};
+pub use trajectory::{flatten, Dataset, Episode, StepRecord};

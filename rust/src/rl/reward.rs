@@ -1,0 +1,63 @@
+//! Reward shaping, Eqs. (4)–(5) of the paper.
+//!
+//! Note (also in DESIGN.md §1): the paper prints `r = 2 e^{(l/alpha)} - 1`,
+//! which is unbounded and *increases* with the spectrum error; the stated
+//! normalization `r in [-1, 1]` implies the intended sign `r = 2
+//! e^{-l/alpha} - 1`, which we implement: zero spectrum error gives reward
+//! 1, large errors approach -1.
+
+/// Map the mean relative spectrum error `l` (Eq. 4) to a reward in
+/// `(-1, 1]` with scaling factor `alpha` (Table 1: 0.4 / 0.2).
+pub fn reward_from_error(l: f64, alpha: f64) -> f64 {
+    debug_assert!(l >= 0.0, "spectrum error must be non-negative, got {l}");
+    debug_assert!(alpha > 0.0);
+    2.0 * (-l / alpha).exp() - 1.0
+}
+
+/// Maximum achievable return for an episode of `n` steps (used to report
+/// the normalized return of Fig. 5).
+pub fn max_return(n_steps: usize, gamma: f64) -> f64 {
+    // r = 1 every step, discounted as in Eq. (2).
+    (1..=n_steps).map(|t| gamma.powi(t as i32)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_spectrum_gives_reward_one() {
+        assert!((reward_from_error(0.0, 0.4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_error_approaches_minus_one() {
+        assert!(reward_from_error(100.0, 0.4) >= -1.0);
+        assert!(reward_from_error(100.0, 0.4) < -0.999);
+        assert!(reward_from_error(2.0, 0.4) > -1.0);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_error() {
+        let mut last = f64::INFINITY;
+        for i in 0..20 {
+            let r = reward_from_error(i as f64 * 0.1, 0.4);
+            assert!(r < last);
+            last = r;
+        }
+    }
+
+    #[test]
+    fn alpha_scales_tolerance() {
+        // Larger alpha forgives larger errors (Table 1: 24 DOF uses 0.4,
+        // the better-resolved 32 DOF case uses the stricter 0.2).
+        assert!(reward_from_error(0.2, 0.4) > reward_from_error(0.2, 0.2));
+    }
+
+    #[test]
+    fn max_return_matches_geometric_sum() {
+        let g: f64 = 0.995;
+        let want = g * (1.0 - g.powi(50)) / (1.0 - g);
+        assert!((max_return(50, g) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,287 @@
+//! Trajectory storage and advantage estimation.
+//!
+//! The policy is element-local (one shared network, one action per DG
+//! element — the multi-agent view of Novati et al. that the paper builds
+//! on), so one env step yields `n_elems` samples sharing the env-level
+//! reward.  Returns are plain discounted sums (Eq. 2); GAE(lambda) against
+//! the critic is available with `lambda < 1`, and `lambda = 1` recovers
+//! `return - V(s)` advantages.
+
+use crate::util::{stats, Rng};
+
+/// Data recorded at one env step (all elements of one env).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    /// `n_elems * features` observation block.
+    pub obs: Vec<f32>,
+    /// Per-element actions.
+    pub act: Vec<f32>,
+    /// Per-element behaviour log-probs.
+    pub logp: Vec<f32>,
+    /// Per-element critic values.
+    pub value: Vec<f32>,
+    /// Env-level reward r_{t+1} received after this action.
+    pub reward: f64,
+}
+
+/// One environment episode.
+#[derive(Debug, Clone, Default)]
+pub struct Episode {
+    pub steps: Vec<StepRecord>,
+}
+
+impl Episode {
+    /// Total (undiscounted-gamma) discounted return, Eq. (2).
+    pub fn discounted_return(&self, gamma: f64) -> f64 {
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(t, s)| gamma.powi(t as i32 + 1) * s.reward)
+            .sum()
+    }
+
+    /// Plain sum of rewards.
+    pub fn total_reward(&self) -> f64 {
+        self.steps.iter().map(|s| s.reward).sum()
+    }
+}
+
+/// Flattened training dataset (one row per element-sample).
+#[derive(Debug, Default)]
+pub struct Dataset {
+    pub features: usize,
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub ret: Vec<f32>,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.act.len()
+    }
+
+    /// True if no samples were collected.
+    pub fn is_empty(&self) -> bool {
+        self.act.is_empty()
+    }
+
+    /// Shuffled minibatch index sets of exactly `mb` samples each; the
+    /// tail wraps around (sampling a few rows twice) so every batch fits
+    /// the static shape of the compiled train-step artifact.
+    pub fn minibatch_indices(&self, mb: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        assert!(mb > 0);
+        let n = self.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let perm = rng.permutation(n);
+        let n_batches = n.div_ceil(mb);
+        let mut out = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut idx = Vec::with_capacity(mb);
+            for k in 0..mb {
+                idx.push(perm[(b * mb + k) % n]);
+            }
+            out.push(idx);
+        }
+        out
+    }
+
+    /// Gather one minibatch into dense arrays (obs, act, logp, adv, ret).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let f = self.features;
+        let mut obs = Vec::with_capacity(idx.len() * f);
+        let mut act = Vec::with_capacity(idx.len());
+        let mut logp = Vec::with_capacity(idx.len());
+        let mut adv = Vec::with_capacity(idx.len());
+        let mut ret = Vec::with_capacity(idx.len());
+        for &i in idx {
+            obs.extend_from_slice(&self.obs[i * f..(i + 1) * f]);
+            act.push(self.act[i]);
+            logp.push(self.logp[i]);
+            adv.push(self.adv[i]);
+            ret.push(self.ret[i]);
+        }
+        (obs, act, logp, adv, ret)
+    }
+}
+
+/// Flatten a set of episodes into a dataset with GAE(lambda) advantages
+/// (normalized) and discounted returns as critic targets.
+pub fn flatten(episodes: &[Episode], features: usize, gamma: f64, lambda: f64) -> Dataset {
+    let mut ds = Dataset {
+        features,
+        ..Default::default()
+    };
+    for ep in episodes {
+        let t_max = ep.steps.len();
+        if t_max == 0 {
+            continue;
+        }
+        let n_elems = ep.steps[0].act.len();
+        // Per-element backward pass: returns and GAE.
+        let mut ret_t = vec![0.0f64; n_elems]; // R_{t} accumulator
+        let mut gae_t = vec![0.0f64; n_elems];
+        let mut rows: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::with_capacity(t_max);
+        for t in (0..t_max).rev() {
+            let s = &ep.steps[t];
+            let v_next: Vec<f64> = if t + 1 < t_max {
+                ep.steps[t + 1].value.iter().map(|&v| v as f64).collect()
+            } else {
+                vec![0.0; n_elems] // terminal bootstrap = 0 (finite episode)
+            };
+            let mut ret_row = vec![0f32; n_elems];
+            let mut adv_row = vec![0f32; n_elems];
+            for e in 0..n_elems {
+                ret_t[e] = s.reward + gamma * ret_t[e];
+                let delta = s.reward + gamma * v_next[e] - s.value[e] as f64;
+                gae_t[e] = delta + gamma * lambda * gae_t[e];
+                ret_row[e] = ret_t[e] as f32;
+                adv_row[e] = gae_t[e] as f32;
+            }
+            rows.push((t, ret_row, adv_row));
+        }
+        rows.reverse();
+        for (t, ret_row, adv_row) in rows {
+            let s = &ep.steps[t];
+            ds.obs.extend_from_slice(&s.obs);
+            ds.act.extend_from_slice(&s.act);
+            ds.logp.extend_from_slice(&s.logp);
+            ds.ret.extend_from_slice(&ret_row);
+            ds.adv.extend_from_slice(&adv_row);
+        }
+    }
+    // Advantage normalization (standard PPO practice).
+    if !ds.adv.is_empty() {
+        let advs: Vec<f64> = ds.adv.iter().map(|&a| a as f64).collect();
+        let m = stats::mean(&advs);
+        let sd = stats::std_dev(&advs).max(1e-8);
+        for a in ds.adv.iter_mut() {
+            *a = ((*a as f64 - m) / sd) as f32;
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn episode(rewards: &[f64], values: &[f32], n_elems: usize, feat: usize) -> Episode {
+        Episode {
+            steps: rewards
+                .iter()
+                .zip(values)
+                .map(|(&r, &v)| StepRecord {
+                    obs: vec![0.5; n_elems * feat],
+                    act: vec![0.1; n_elems],
+                    logp: vec![-1.0; n_elems],
+                    value: vec![v; n_elems],
+                    reward: r,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn discounted_return_hand_computed() {
+        let ep = episode(&[1.0, 0.5, -0.25], &[0.0; 3], 2, 4);
+        let g: f64 = 0.9;
+        let want = g * 1.0 + g * g * 0.5 + g * g * g * (-0.25);
+        assert!((ep.discounted_return(g) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn returns_per_step_decay_correctly() {
+        let ep = episode(&[1.0, 1.0], &[0.0, 0.0], 1, 2);
+        let ds = flatten(&[ep], 2, 0.5, 1.0);
+        // Step 0 return: 1 + 0.5*1 = 1.5; step 1: 1.0
+        assert_eq!(ds.len(), 2);
+        assert!((ds.ret[0] - 1.5).abs() < 1e-6);
+        assert!((ds.ret[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_lambda1_equals_return_minus_value() {
+        let ep = episode(&[1.0, -0.5, 0.25], &[0.3, -0.1, 0.2], 3, 2);
+        let g = 0.95;
+        let ds = flatten(&[ep.clone()], 2, g, 1.0);
+        // Un-normalize by recomputing mean/std from raw values.
+        let raw: Vec<f64> = {
+            let mut raws = Vec::new();
+            let t_max = 3;
+            for t in 0..t_max {
+                let mut ret = 0.0;
+                for (k, s) in ep.steps[t..].iter().enumerate() {
+                    ret += g.powi(k as i32) * s.reward;
+                }
+                for e in 0..3 {
+                    raws.push(ret - ep.steps[t].value[e] as f64);
+                }
+            }
+            raws
+        };
+        let m = crate::util::stats::mean(&raw);
+        let sd = crate::util::stats::std_dev(&raw).max(1e-8);
+        for (i, &r) in raw.iter().enumerate() {
+            let want = ((r - m) / sd) as f32;
+            assert!(
+                (ds.adv[i] - want).abs() < 1e-4,
+                "sample {i}: {} vs {want}",
+                ds.adv[i]
+            );
+        }
+    }
+
+    #[test]
+    fn advantages_are_normalized() {
+        let eps: Vec<Episode> = (0..4)
+            .map(|i| episode(&[i as f64, 1.0 - i as f64], &[0.1, 0.2], 2, 3))
+            .collect();
+        let ds = flatten(&eps, 3, 0.99, 0.95);
+        let advs: Vec<f64> = ds.adv.iter().map(|&a| a as f64).collect();
+        assert!(stats::mean(&advs).abs() < 1e-5);
+        assert!((stats::std_dev(&advs) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn minibatches_cover_everything_with_wraparound() {
+        let ep = episode(&[1.0; 7], &[0.0; 7], 3, 2);
+        let ds = flatten(&[ep], 2, 0.99, 1.0);
+        assert_eq!(ds.len(), 21);
+        let mut rng = Rng::new(5);
+        let batches = ds.minibatch_indices(8, &mut rng);
+        assert_eq!(batches.len(), 3); // ceil(21/8)
+        assert!(batches.iter().all(|b| b.len() == 8));
+        let mut seen = vec![false; 21];
+        for b in &batches {
+            for &i in b {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some samples never visited");
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let ep = episode(&[1.0, 2.0], &[0.0, 0.0], 2, 3);
+        let ds = flatten(&[ep], 3, 0.9, 1.0);
+        let (obs, act, logp, adv, ret) = ds.gather(&[0, 3, 1]);
+        assert_eq!(obs.len(), 9);
+        assert_eq!(act.len(), 3);
+        assert_eq!(logp.len(), 3);
+        assert_eq!(adv.len(), 3);
+        assert_eq!(ret.len(), 3);
+    }
+
+    #[test]
+    fn empty_dataset_behaves() {
+        let ds = flatten(&[], 4, 0.99, 1.0);
+        assert!(ds.is_empty());
+        let mut rng = Rng::new(1);
+        assert!(ds.minibatch_indices(8, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Artifact registry: locates and describes the AOT outputs emitted by
+//! `python/compile/aot.py` into `artifacts/` (manifest, parameter vectors,
+//! HLO-text modules per batch size).
+
+use crate::util::binio::{read_f32_vec, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What a compiled module computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(theta, obs[B]) -> (mean[B], log_std, value[B])`
+    PolicyFwd,
+    /// Full PPO + Adam minibatch update.
+    TrainStep,
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    /// Polynomial degree N of the case the module was lowered for.
+    pub n: usize,
+    /// Static batch size the module was lowered with.
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.json` + artifact directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    /// Flat parameter count per N.
+    pub param_counts: std::collections::HashMap<usize, usize>,
+    /// Hyperparameters recorded at lowering time (lr, clip, ...).
+    pub hyper: Json,
+}
+
+impl Registry {
+    /// Load the registry from an artifacts directory.
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+
+        let mut entries = Vec::new();
+        for e in j.get("artifacts")?.arr()? {
+            let kind = match e.get("kind")?.str()? {
+                "policy_fwd" => ArtifactKind::PolicyFwd,
+                "train_step" => ArtifactKind::TrainStep,
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            entries.push(ArtifactEntry {
+                kind,
+                n: e.get("n")?.num()? as usize,
+                batch: e.get("batch")?.num()? as usize,
+                path: dir.join(e.get("file")?.str()?),
+            });
+        }
+
+        let mut param_counts = std::collections::HashMap::new();
+        if let Json::Obj(models) = j.get("models")? {
+            for (k, v) in models {
+                param_counts.insert(
+                    k.parse::<usize>().context("model key")?,
+                    v.get("param_count")?.num()? as usize,
+                );
+            }
+        }
+
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            entries,
+            param_counts,
+            hyper: j.get("hyperparameters")?.clone(),
+        })
+    }
+
+    /// All batch sizes available for (kind, n), ascending.
+    pub fn batches(&self, kind: ArtifactKind, n: usize) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && e.n == n)
+            .map(|e| e.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Artifact path for (kind, n, batch).
+    pub fn path(&self, kind: ArtifactKind, n: usize, batch: usize) -> Result<&Path> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.n == n && e.batch == batch)
+            .map(|e| e.path.as_path())
+            .with_context(|| format!("no artifact for {kind:?} n={n} b={batch}"))
+    }
+
+    /// Initial parameter vector for degree N.
+    pub fn initial_params(&self, n: usize) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("params0_n{n}.bin"));
+        let theta = read_f32_vec(&path)?;
+        if let Some(&count) = self.param_counts.get(&n) {
+            anyhow::ensure!(
+                theta.len() == count,
+                "params0_n{n}.bin has {} params, manifest says {count}",
+                theta.len()
+            );
+        }
+        Ok(theta)
+    }
+
+    /// Test vectors emitted at lowering time (for round-trip tests).
+    pub fn testvec(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.dir.join("testvec.json"))?;
+        Json::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn registry_opens_and_lists() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let r = Registry::open(&dir).unwrap();
+        let b = r.batches(ArtifactKind::PolicyFwd, 5);
+        assert!(b.contains(&64), "expected b64 policy artifact, got {b:?}");
+        assert!(!r.batches(ArtifactKind::TrainStep, 5).is_empty());
+        // Table 2: ~3,300-parameter trunk, x2 (actor+critic) + log_std.
+        assert_eq!(r.param_counts[&5], 2 * 3293 + 1);
+        let theta = r.initial_params(5).unwrap();
+        assert_eq!(theta.len(), 6587);
+        assert!(r.path(ArtifactKind::PolicyFwd, 5, 64).is_ok());
+        assert!(r.path(ArtifactKind::PolicyFwd, 5, 7).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! PJRT execution of AOT artifacts: load HLO *text*, compile once on the
+//! CPU client, execute many times from the coordinator's hot path.
+//!
+//! This is the Rust end of the AOT bridge (see `python/compile/aot.py` and
+//! /opt/xla-example/load_hlo): HLO text — not serialized protos — is the
+//! interchange format because jax >= 0.5 emits 64-bit instruction ids that
+//! the image's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().to_string(),
+        })
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// A host-side tensor handed to / returned by an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Rank-1 tensor.
+    pub fn vec(data: Vec<f32>) -> HostTensor {
+        HostTensor { shape: vec![data.len() as i64], data }
+    }
+
+    /// Scalar.
+    pub fn scalar(x: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    /// Shaped tensor; checks element count.
+    pub fn new(shape: Vec<i64>, data: Vec<f32>) -> HostTensor {
+        let n: i64 = shape.iter().product();
+        assert_eq!(n as usize, data.len(), "shape {shape:?} vs {} elems", data.len());
+        HostTensor { shape, data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&self.shape)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        Ok(HostTensor {
+            shape: shape.dims().to_vec(),
+            data: lit.to_vec::<f32>()?,
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 host tensors; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Artifact name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let v = HostTensor::vec(vec![1.0, 2.0]);
+        assert_eq!(v.shape, vec![2]);
+        let s = HostTensor::scalar(3.0);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_shape_mismatch() {
+        HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime (DESIGN.md S12): loads the HLO-text artifacts that
+//! `make artifacts` produced from the JAX/Pallas layers and executes them
+//! from the coordinator's hot path.  Python never runs at training time —
+//! the compiled policy and train-step modules are the only ML code paths.
+
+pub mod artifact;
+pub mod executor;
+pub mod policy;
+pub mod trainer;
+
+pub use artifact::{ArtifactKind, Registry};
+pub use executor::{Executable, HostTensor, Runtime};
+pub use policy::{PolicyOut, PolicyRuntime};
+pub use trainer::{Minibatch, TrainMetrics, TrainerRuntime};

@@ -1,0 +1,117 @@
+//! Policy-inference runtime: batched evaluation of the compiled
+//! `policy_fwd` artifacts with automatic chunking/padding across the
+//! available static batch sizes.
+
+use super::artifact::{ArtifactKind, Registry};
+use super::executor::{Executable, HostTensor, Runtime};
+use anyhow::{Context, Result};
+
+/// Output of a policy evaluation over a batch of element observations.
+#[derive(Debug, Clone)]
+pub struct PolicyOut {
+    /// Gaussian mean per element (the Cs suggestion, in [0, 0.5]).
+    pub mean: Vec<f32>,
+    /// Global log standard deviation.
+    pub log_std: f32,
+    /// Critic value per element.
+    pub value: Vec<f32>,
+}
+
+/// Compiled policy for one polynomial degree N.
+pub struct PolicyRuntime {
+    /// (batch, executable), ascending by batch.
+    exes: Vec<(usize, Executable)>,
+    /// Features per sample: (N+1)^3 * 3.
+    feat: usize,
+    /// Obs tensor trailing dims.
+    dims: [i64; 4],
+}
+
+impl PolicyRuntime {
+    /// Compile every available `policy_fwd` batch size for degree `n`.
+    pub fn load(rt: &Runtime, reg: &Registry, n: usize) -> Result<PolicyRuntime> {
+        let batches = reg.batches(ArtifactKind::PolicyFwd, n);
+        anyhow::ensure!(!batches.is_empty(), "no policy_fwd artifacts for N={n}");
+        let mut exes = Vec::new();
+        for b in batches {
+            let exe = rt.load_hlo(reg.path(ArtifactKind::PolicyFwd, n, b)?)?;
+            exes.push((b, exe));
+        }
+        let p = (n + 1) as i64;
+        Ok(PolicyRuntime {
+            exes,
+            feat: ((n + 1).pow(3) * 3),
+            dims: [p, p, p, 3],
+        })
+    }
+
+    /// Features per sample.
+    pub fn features(&self) -> usize {
+        self.feat
+    }
+
+    /// Evaluate the policy on `n_samples` element observations
+    /// (`obs.len() == n_samples * features()`), chunking over the
+    /// compiled batch sizes and zero-padding the tail chunk.
+    pub fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+        anyhow::ensure!(
+            obs.len() == n_samples * self.feat,
+            "obs len {} != {n_samples} x {}",
+            obs.len(),
+            self.feat
+        );
+        let theta_t = HostTensor::vec(theta.to_vec());
+        let mut mean = Vec::with_capacity(n_samples);
+        let mut value = Vec::with_capacity(n_samples);
+        let mut log_std = 0.0f32;
+        let mut done = 0usize;
+        while done < n_samples {
+            let remaining = n_samples - done;
+            let (b, exe) = self.pick(remaining);
+            let take = remaining.min(b);
+            let mut chunk = vec![0f32; b * self.feat];
+            chunk[..take * self.feat]
+                .copy_from_slice(&obs[done * self.feat..(done + take) * self.feat]);
+            let shape = vec![
+                b as i64,
+                self.dims[0],
+                self.dims[1],
+                self.dims[2],
+                self.dims[3],
+            ];
+            let out = exe
+                .run(&[theta_t.clone(), HostTensor::new(shape, chunk)])
+                .with_context(|| format!("policy_fwd b={b}"))?;
+            anyhow::ensure!(out.len() == 3, "policy_fwd returned {} outputs", out.len());
+            mean.extend_from_slice(&out[0].data[..take]);
+            log_std = out[1].data[0];
+            value.extend_from_slice(&out[2].data[..take]);
+            done += take;
+        }
+        Ok(PolicyOut { mean, log_std, value })
+    }
+
+    /// Smallest compiled batch covering `remaining`, else the largest.
+    fn pick(&self, remaining: usize) -> (usize, &Executable) {
+        for (b, exe) in &self.exes {
+            if *b >= remaining {
+                return (*b, exe);
+            }
+        }
+        let (b, exe) = self.exes.last().unwrap();
+        (*b, exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn feature_arithmetic() {
+        // The chunking invariants are covered by the integration test
+        // against testvec.json (requires artifacts). Here: feature math.
+        let p = 6usize;
+        assert_eq!(p.pow(3) * 3, 648); // N=5 obs features per element
+        let p7 = 8usize;
+        assert_eq!(p7.pow(3) * 3, 1536); // N=7
+    }
+}

@@ -1,0 +1,124 @@
+//! Training runtime: owns the flat parameter vector and Adam state and
+//! applies the compiled `train_step` artifact (PPO loss + gradients +
+//! Adam, all inside one XLA module) minibatch by minibatch.
+
+use super::artifact::{ArtifactKind, Registry};
+use super::executor::{Executable, HostTensor, Runtime};
+use anyhow::{Context, Result};
+
+/// Metrics returned by one train step (paper-standard PPO diagnostics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub clip_frac: f32,
+    pub approx_kl: f32,
+}
+
+/// One PPO minibatch in the layout the artifact expects.
+pub struct Minibatch<'a> {
+    /// `batch * features` observation block.
+    pub obs: &'a [f32],
+    pub act: &'a [f32],
+    pub old_logp: &'a [f32],
+    pub adv: &'a [f32],
+    pub ret: &'a [f32],
+}
+
+/// Compiled trainer for one polynomial degree N.
+pub struct TrainerRuntime {
+    exe: Executable,
+    /// Static minibatch size the artifact was lowered with.
+    pub minibatch: usize,
+    feat: usize,
+    dims: [i64; 4],
+    theta: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: f32,
+}
+
+impl TrainerRuntime {
+    /// Load the train_step artifact closest to the requested minibatch
+    /// size and initialize parameters from `params0_n{n}.bin`.
+    pub fn load(rt: &Runtime, reg: &Registry, n: usize, want_batch: usize) -> Result<TrainerRuntime> {
+        let batches = reg.batches(ArtifactKind::TrainStep, n);
+        anyhow::ensure!(!batches.is_empty(), "no train_step artifacts for N={n}");
+        let minibatch = *batches
+            .iter()
+            .filter(|&&b| b <= want_batch)
+            .max()
+            .unwrap_or(&batches[0]);
+        let exe = rt.load_hlo(reg.path(ArtifactKind::TrainStep, n, minibatch)?)?;
+        let theta = reg.initial_params(n)?;
+        let len = theta.len();
+        let p = (n + 1) as i64;
+        Ok(TrainerRuntime {
+            exe,
+            minibatch,
+            feat: (n + 1).pow(3) * 3,
+            dims: [p, p, p, 3],
+            theta,
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+            step: 0.0,
+        })
+    }
+
+    /// Current parameters (shared with the policy runtime each call).
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Optimizer step counter.
+    pub fn opt_step(&self) -> f32 {
+        self.step
+    }
+
+    /// Restore parameters (checkpoint load); resets Adam state.
+    pub fn set_theta(&mut self, theta: Vec<f32>) {
+        assert_eq!(theta.len(), self.theta.len());
+        self.theta = theta;
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0.0;
+    }
+
+    /// Apply one compiled PPO+Adam step on a minibatch of exactly
+    /// `self.minibatch` samples.
+    pub fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics> {
+        let b = self.minibatch;
+        anyhow::ensure!(mb.act.len() == b, "minibatch size {} != {b}", mb.act.len());
+        anyhow::ensure!(mb.obs.len() == b * self.feat);
+        let shape = vec![b as i64, self.dims[0], self.dims[1], self.dims[2], self.dims[3]];
+        let out = self
+            .exe
+            .run(&[
+                HostTensor::vec(self.theta.clone()),
+                HostTensor::vec(self.m.clone()),
+                HostTensor::vec(self.v.clone()),
+                HostTensor::scalar(self.step),
+                HostTensor::new(shape, mb.obs.to_vec()),
+                HostTensor::vec(mb.act.to_vec()),
+                HostTensor::vec(mb.old_logp.to_vec()),
+                HostTensor::vec(mb.adv.to_vec()),
+                HostTensor::vec(mb.ret.to_vec()),
+            ])
+            .context("train_step")?;
+        anyhow::ensure!(out.len() == 10, "train_step returned {} outputs", out.len());
+        self.theta = out[0].data.clone();
+        self.m = out[1].data.clone();
+        self.v = out[2].data.clone();
+        self.step = out[3].data[0];
+        Ok(TrainMetrics {
+            loss: out[4].data[0],
+            pg_loss: out[5].data[0],
+            v_loss: out[6].data[0],
+            entropy: out[7].data[0],
+            clip_frac: out[8].data[0],
+            approx_kl: out[9].data[0],
+        })
+    }
+}

@@ -1,0 +1,388 @@
+//! DNS ground truth for the RL task (paper §5.2): the mean energy spectrum
+//! `E_DNS(k)` the reward compares against, plus a pool of spectrally
+//! filtered DNS snapshots used as randomized LES initial states — with one
+//! held-out test state, exactly as in the paper.
+
+use super::grid::Grid;
+use super::init::random_solenoidal;
+use super::spectral::SpecVec;
+use super::timestep::Solver;
+use crate::fft::{wavenumber, Cpx};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A spectral state serialized as interleaved f32 (re, im) per component.
+pub type FlatState = Vec<f32>;
+
+/// Ground-truth package consumed by training.
+pub struct Truth {
+    /// LES resolution this truth was filtered for.
+    pub n_les: usize,
+    /// Time-averaged DNS spectrum on LES shell bins.
+    pub mean_spectrum: Vec<f64>,
+    /// Min/max observed DNS spectrum (the shaded band of Fig. 5c).
+    pub min_spectrum: Vec<f64>,
+    pub max_spectrum: Vec<f64>,
+    /// Training pool of filtered initial states.
+    pub states: Vec<FlatState>,
+    /// Held-out test state ("kept hidden to evaluate ... on unseen data").
+    pub test_state: FlatState,
+}
+
+/// Parameters for truth generation.
+pub struct TruthParams {
+    pub n_dns: usize,
+    pub n_les: usize,
+    pub nu: f64,
+    pub ke_target: f64,
+    pub spinup_time: f64,
+    pub n_states: usize,
+    pub sample_interval: f64,
+    pub seed: u64,
+}
+
+impl Default for TruthParams {
+    fn default() -> Self {
+        TruthParams {
+            n_dns: 48,
+            n_les: 24,
+            nu: 1.0 / 45.0, // resolved at 48^3 (see SolverConfig::default)
+            ke_target: 1.5,
+            spinup_time: 4.0,
+            n_states: 10,
+            sample_interval: 0.5,
+            seed: 2022,
+        }
+    }
+}
+
+/// Pack a spectral state into flat f32 (re, im interleaved, 3 components).
+pub fn pack_state(u: &SpecVec) -> FlatState {
+    let mut out = Vec::with_capacity(u[0].len() * 6);
+    for c in u.iter() {
+        for v in c.iter() {
+            out.push(v.re as f32);
+            out.push(v.im as f32);
+        }
+    }
+    out
+}
+
+/// Unpack a flat f32 state onto a grid.
+pub fn unpack_state(grid: &Grid, flat: &[f32]) -> SpecVec {
+    let n3 = grid.len();
+    assert_eq!(flat.len(), n3 * 6, "state size mismatch for n={}", grid.n);
+    let mut u: SpecVec = [grid.zeros(), grid.zeros(), grid.zeros()];
+    for (c, comp) in u.iter_mut().enumerate() {
+        let base = c * n3 * 2;
+        for i in 0..n3 {
+            comp[i] = Cpx::new(flat[base + 2 * i] as f64, flat[base + 2 * i + 1] as f64);
+        }
+    }
+    u
+}
+
+/// Sharp spectral filter: truncate a DNS state to the LES grid.
+///
+/// Copies all modes with |k_i| < n_les/2 (Nyquist planes zeroed) and
+/// rescales by `(n_les/n_dns)^3` for the unnormalized-FFT convention.
+pub fn filter_to_les(dns_grid: &Grid, u_dns: &SpecVec, les_grid: &Grid) -> SpecVec {
+    let (nd, nl) = (dns_grid.n, les_grid.n);
+    assert!(nl <= nd, "LES grid must be coarser than DNS");
+    let scale = (nl as f64 / nd as f64).powi(3);
+    let half = nl / 2;
+    let mut out: SpecVec = [les_grid.zeros(), les_grid.zeros(), les_grid.zeros()];
+    for lz in 0..nl {
+        let kz = wavenumber(lz, nl);
+        if kz.unsigned_abs() as usize >= half {
+            continue;
+        }
+        let dz = if kz >= 0 { kz as usize } else { (nd as i64 + kz) as usize };
+        for ly in 0..nl {
+            let ky = wavenumber(ly, nl);
+            if ky.unsigned_abs() as usize >= half {
+                continue;
+            }
+            let dy = if ky >= 0 { ky as usize } else { (nd as i64 + ky) as usize };
+            for lx in 0..nl {
+                let kx = wavenumber(lx, nl);
+                if kx.unsigned_abs() as usize >= half {
+                    continue;
+                }
+                let dx = if kx >= 0 { kx as usize } else { (nd as i64 + kx) as usize };
+                let li = (lz * nl + ly) * nl + lx;
+                let di = (dz * nd + dy) * nd + dx;
+                for c in 0..3 {
+                    out[c][li] = u_dns[c][di].scale(scale);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the DNS and build the truth package.  `progress` is called after
+/// every sample with (sample_index, total).
+pub fn generate(p: &TruthParams, mut progress: impl FnMut(usize, usize)) -> Truth {
+    let mut rng = Rng::new(p.seed);
+    let mut dns = Solver::new(p.n_dns, 1, p.nu, 0.5);
+    dns.forcing = Some(super::forcing::LinearForcing::new(p.ke_target, 1.0));
+    dns.set_state(random_solenoidal(&dns.grid, p.ke_target, 4.0, &mut rng));
+    dns.advance(p.spinup_time);
+
+    let les_grid = Grid::new(p.n_les);
+    let nbins = les_grid.k_nyquist() + 1;
+    let mut mean = vec![0.0; nbins];
+    let mut minb = vec![f64::INFINITY; nbins];
+    let mut maxb = vec![f64::NEG_INFINITY; nbins];
+    let mut states = Vec::new();
+
+    let total = p.n_states + 1; // +1 for the held-out test state
+    for s in 0..total {
+        dns.advance(p.sample_interval);
+        // DNS spectrum restricted to LES bins.
+        let spec_dns = dns.spectrum();
+        for k in 0..nbins {
+            let e = spec_dns[k.min(spec_dns.len() - 1)];
+            mean[k] += e / total as f64;
+            minb[k] = minb[k].min(e);
+            maxb[k] = maxb[k].max(e);
+        }
+        let filtered = filter_to_les(&dns.grid, &dns.uhat, &les_grid);
+        states.push(pack_state(&filtered));
+        progress(s + 1, total);
+    }
+    let test_state = states.pop().unwrap();
+
+    Truth {
+        n_les: p.n_les,
+        mean_spectrum: mean,
+        min_spectrum: minb,
+        max_spectrum: maxb,
+        states,
+        test_state,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary serialization (custom format; no serde in the image)
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"RLXTRUTH";
+const VERSION: u32 = 1;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated truth file at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let b = self.take(n * 8)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl Truth {
+    /// Serialize to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = Writer { buf: Vec::new() };
+        w.buf.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        w.u32(self.n_les as u32);
+        w.f64s(&self.mean_spectrum);
+        w.f64s(&self.min_spectrum);
+        w.f64s(&self.max_spectrum);
+        w.f32s(&self.test_state);
+        w.u32(self.states.len() as u32);
+        for s in &self.states {
+            w.f32s(s);
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, &w.buf).with_context(|| format!("write {path:?}"))?;
+        Ok(())
+    }
+
+    /// Deserialize from a file.
+    pub fn load(path: &Path) -> Result<Truth> {
+        let buf = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        let mut r = Reader { buf: &buf, pos: 0 };
+        if r.take(8)? != MAGIC {
+            bail!("{path:?} is not a truth file");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("truth file version {version}, expected {VERSION}");
+        }
+        let n_les = r.u32()? as usize;
+        let mean_spectrum = r.f64s()?;
+        let min_spectrum = r.f64s()?;
+        let max_spectrum = r.f64s()?;
+        let test_state = r.f32s()?;
+        let n_states = r.u32()? as usize;
+        let mut states = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            states.push(r.f32s()?);
+        }
+        Ok(Truth {
+            n_les,
+            mean_spectrum,
+            min_spectrum,
+            max_spectrum,
+            states,
+            test_state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::spectral::kinetic_energy;
+    use crate::solver::spectrum::energy_spectrum;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let grid = Grid::new(8);
+        let mut rng = Rng::new(3);
+        let u = random_solenoidal(&grid, 1.0, 2.0, &mut rng);
+        let flat = pack_state(&u);
+        let back = unpack_state(&grid, &flat);
+        for c in 0..3 {
+            for i in 0..grid.len() {
+                let scale = u[c][i].norm_sq().sqrt().max(1.0);
+                assert!((u[c][i] - back[c][i]).norm_sq().sqrt() < 1e-5 * scale);
+            }
+        }
+    }
+
+    #[test]
+    fn filter_preserves_low_modes_kills_high() {
+        let dns_grid = Grid::new(16);
+        let les_grid = Grid::new(8);
+        let mut u: SpecVec = [dns_grid.zeros(), dns_grid.zeros(), dns_grid.zeros()];
+        let n3 = dns_grid.len() as f64;
+        // Low mode k=(2,0,0) and high mode k=(6,0,0).
+        u[0][dns_grid.idx(2, 0, 0)] = Cpx::new(n3, 0.0);
+        u[0][dns_grid.idx(6, 0, 0)] = Cpx::new(n3, 0.0);
+        let f = filter_to_les(&dns_grid, &u, &les_grid);
+        let l3 = les_grid.len() as f64;
+        // Low mode survives with rescaled coefficient...
+        let got = f[0][les_grid.idx(2, 0, 0)];
+        assert!((got.re - l3).abs() < 1e-9, "got {got:?}");
+        // ...high mode (beyond LES Nyquist) is gone:
+        let total: f64 = f[0].iter().map(|c| c.norm_sq()).sum();
+        assert!((total - l3 * l3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn filter_preserves_resolved_spectrum() {
+        let dns_grid = Grid::new(24);
+        let les_grid = Grid::new(12);
+        let mut rng = Rng::new(4);
+        let u = random_solenoidal(&dns_grid, 1.5, 3.0, &mut rng);
+        let f = filter_to_les(&dns_grid, &u, &les_grid);
+        let s_dns = energy_spectrum(&dns_grid, &u);
+        let s_les = energy_spectrum(&les_grid, &f);
+        // Shells well below the LES Nyquist must carry identical energy.
+        for k in 1..5 {
+            assert!(
+                (s_dns[k] - s_les[k]).abs() < 1e-9 * s_dns[k].max(1e-30),
+                "shell {k}: {} vs {}",
+                s_dns[k],
+                s_les[k]
+            );
+        }
+        // Filtered KE <= DNS KE.
+        assert!(kinetic_energy(&les_grid, &f) <= kinetic_energy(&dns_grid, &u));
+    }
+
+    #[test]
+    fn generate_and_save_load_roundtrip() {
+        // Tiny configuration to keep the test fast.
+        let p = TruthParams {
+            n_dns: 12,
+            n_les: 6,
+            nu: 0.02,
+            ke_target: 1.0,
+            spinup_time: 0.2,
+            n_states: 2,
+            sample_interval: 0.1,
+            seed: 7,
+        };
+        let truth = generate(&p, |_, _| {});
+        assert_eq!(truth.states.len(), 2);
+        assert_eq!(truth.mean_spectrum.len(), 4); // n_les/2 + 1
+        assert!(truth.mean_spectrum[1] > 0.0);
+        for k in 1..truth.mean_spectrum.len() {
+            assert!(truth.min_spectrum[k] <= truth.mean_spectrum[k]);
+            assert!(truth.mean_spectrum[k] <= truth.max_spectrum[k]);
+        }
+
+        let dir = std::env::temp_dir().join("relexi_truth_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        truth.save(&path).unwrap();
+        let back = Truth::load(&path).unwrap();
+        assert_eq!(back.n_les, truth.n_les);
+        assert_eq!(back.states.len(), truth.states.len());
+        assert_eq!(back.test_state, truth.test_state);
+        assert_eq!(back.mean_spectrum, truth.mean_spectrum);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("relexi_truth_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTTRUTHFILE....").unwrap();
+        assert!(Truth::load(&path).is_err());
+    }
+}

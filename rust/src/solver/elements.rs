@@ -1,0 +1,177 @@
+//! Element view of the spectral grid: the paper's DG structure (Table 1).
+//!
+//! The flow state lives on an `n^3` collocation grid; for the RL task it is
+//! tiled into `elems^3` cubic elements of `(N+1)^3` points each — exactly
+//! the `#Elems x (N+1)^3` decomposition of Table 1.  The agent observes one
+//! element (its local velocity field, `(N+1)^3 x 3` features, Table 2 input)
+//! and acts per element (one Cs each).
+
+use super::grid::Grid;
+use crate::fft::Cpx;
+
+/// Mapping between grid points and elements.
+pub struct ElementMap {
+    /// Grid points per direction.
+    pub n: usize,
+    /// Elements per direction.
+    pub elems_per_dir: usize,
+    /// Points per element and direction (N+1).
+    pub p: usize,
+    /// Element id per flat grid index.
+    point_to_elem: Vec<usize>,
+}
+
+impl ElementMap {
+    /// Build the map; `n` must be divisible by `elems_per_dir`.
+    pub fn new(grid: &Grid, elems_per_dir: usize) -> ElementMap {
+        let n = grid.n;
+        assert!(
+            n % elems_per_dir == 0,
+            "grid {n} not divisible into {elems_per_dir} elements/dir"
+        );
+        let p = n / elems_per_dir;
+        let mut point_to_elem = vec![0usize; n * n * n];
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let (ex, ey, ez) = (x / p, y / p, z / p);
+                    point_to_elem[(z * n + y) * n + x] =
+                        (ez * elems_per_dir + ey) * elems_per_dir + ex;
+                }
+            }
+        }
+        ElementMap {
+            n,
+            elems_per_dir,
+            p,
+            point_to_elem,
+        }
+    }
+
+    /// Total number of elements.
+    pub fn n_elems(&self) -> usize {
+        self.elems_per_dir.pow(3)
+    }
+
+    /// Element id owning a flat grid index.
+    #[inline]
+    pub fn elem_of_point(&self, idx: usize) -> usize {
+        self.point_to_elem[idx]
+    }
+
+    /// Points per element (= (N+1)^3).
+    pub fn points_per_elem(&self) -> usize {
+        self.p.pow(3)
+    }
+
+    /// Gather the observation tensor for ALL elements from physical-space
+    /// velocities: layout `(n_elems, p, p, p, 3)` flattened, f32 — the
+    /// policy artifact's input order.
+    pub fn gather_observations(&self, u: &[Vec<Cpx>; 3]) -> Vec<f32> {
+        let (n, p, e) = (self.n, self.p, self.elems_per_dir);
+        let mut obs = vec![0f32; self.n_elems() * p * p * p * 3];
+        let mut w = 0usize;
+        for ez in 0..e {
+            for ey in 0..e {
+                for ex in 0..e {
+                    for lz in 0..p {
+                        for ly in 0..p {
+                            for lx in 0..p {
+                                let gi = ((ez * p + lz) * n + (ey * p + ly)) * n
+                                    + (ex * p + lx);
+                                obs[w] = u[0][gi].re as f32;
+                                obs[w + 1] = u[1][gi].re as f32;
+                                obs[w + 2] = u[2][gi].re as f32;
+                                w += 3;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        obs
+    }
+
+    /// Element ids in the order `gather_observations` emits them
+    /// (row-major over (ez, ey, ex)) — documents/tests the convention.
+    pub fn gather_order(&self) -> Vec<usize> {
+        let e = self.elems_per_dir;
+        let mut order = Vec::with_capacity(self.n_elems());
+        for ez in 0..e {
+            for ey in 0..e {
+                for ex in 0..e {
+                    order.push((ez * e + ey) * e + ex);
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_element_counts() {
+        let grid = Grid::new(24);
+        let m = ElementMap::new(&grid, 4);
+        assert_eq!(m.n_elems(), 64);
+        assert_eq!(m.p, 6);
+        assert_eq!(m.points_per_elem(), 216);
+    }
+
+    #[test]
+    fn point_ownership() {
+        let grid = Grid::new(8);
+        let m = ElementMap::new(&grid, 2);
+        assert_eq!(m.elem_of_point(grid.idx(0, 0, 0)), 0);
+        assert_eq!(m.elem_of_point(grid.idx(7, 0, 0)), 1);
+        assert_eq!(m.elem_of_point(grid.idx(0, 7, 0)), 2);
+        assert_eq!(m.elem_of_point(grid.idx(0, 0, 7)), 4);
+        assert_eq!(m.elem_of_point(grid.idx(7, 7, 7)), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_grid_panics() {
+        let grid = Grid::new(10);
+        ElementMap::new(&grid, 4);
+    }
+
+    #[test]
+    fn gather_obs_layout() {
+        let grid = Grid::new(4);
+        let m = ElementMap::new(&grid, 2); // p = 2
+        // velocity components encode the grid position:
+        let mut u = [grid.zeros(), grid.zeros(), grid.zeros()];
+        for z in 0..4 {
+            for y in 0..4 {
+                for x in 0..4 {
+                    let i = grid.idx(x, y, z);
+                    u[0][i] = Cpx::new(x as f64, 0.0);
+                    u[1][i] = Cpx::new(y as f64, 0.0);
+                    u[2][i] = Cpx::new(z as f64, 0.0);
+                }
+            }
+        }
+        let obs = m.gather_observations(&u);
+        assert_eq!(obs.len(), 8 * 8 * 3);
+        // Element 0, local point (0,0,0) -> features (0,0,0)
+        assert_eq!(&obs[0..3], &[0.0, 0.0, 0.0]);
+        // Element 0, local (lx=1) is the second feature triple
+        assert_eq!(&obs[3..6], &[1.0, 0.0, 0.0]);
+        // Element 1 (ex=1) starts at offset 8*3: its first point is x=2
+        assert_eq!(&obs[24..27], &[2.0, 0.0, 0.0]);
+        // Last element (ex=ey=ez=1), last local point = grid (3,3,3)
+        let last = obs.len() - 3;
+        assert_eq!(&obs[last..], &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn gather_order_matches_elem_ids() {
+        let grid = Grid::new(8);
+        let m = ElementMap::new(&grid, 2);
+        assert_eq!(m.gather_order(), (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,70 @@
+//! Isotropic linear forcing (Lundgren 2003; de Laage de Meux et al. 2015).
+//!
+//! The paper (§5.2) keeps the HIT quasi-stationary with linear forcing
+//! `f = A u` that balances the dissipation of the turbulence model.  We use
+//! the controller form: a base rate plus a relaxation term that nudges the
+//! kinetic energy toward its target,
+//!
+//!   A(K) = A0 + (K_target - K) / (2 K_target tau),
+//!
+//! clamped to `[0, A_MAX]`.  In equilibrium `eps = 2 A K`, so `A0` sets the
+//! eddy-turnover time `T = K/eps = 1/(2 A0)`.
+
+/// Linear-forcing controller state.
+#[derive(Debug, Clone)]
+pub struct LinearForcing {
+    /// Target kinetic energy.
+    pub ke_target: f64,
+    /// Relaxation time of the energy controller.
+    pub tau: f64,
+    /// Base forcing rate (sets the equilibrium eddy-turnover time).
+    pub a0: f64,
+    /// Clamp for the forcing coefficient.
+    pub a_max: f64,
+}
+
+impl LinearForcing {
+    /// Controller with the solver-config target and relaxation time.
+    pub fn new(ke_target: f64, tau: f64) -> LinearForcing {
+        LinearForcing {
+            ke_target,
+            tau,
+            a0: 0.25,
+            a_max: 2.0,
+        }
+    }
+
+    /// Forcing coefficient A for the current kinetic energy.
+    pub fn coefficient(&self, ke: f64) -> f64 {
+        let relax = (self.ke_target - ke) / (2.0 * self.ke_target * self.tau);
+        (self.a0 + relax).clamp(0.0, self.a_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_target_returns_base_rate() {
+        let f = LinearForcing::new(1.5, 1.0);
+        assert!((f.coefficient(1.5) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_energy_forces_harder() {
+        let f = LinearForcing::new(1.5, 1.0);
+        assert!(f.coefficient(0.5) > f.coefficient(1.5));
+    }
+
+    #[test]
+    fn high_energy_backs_off_and_clamps() {
+        let f = LinearForcing::new(1.5, 1.0);
+        assert!(f.coefficient(3.0) < f.coefficient(1.5));
+        // Extremely high energy: clamped at zero, never negative.
+        assert_eq!(f.coefficient(100.0), 0.0);
+        // Extremely low energy: clamped at a_max.
+        let tight = LinearForcing { tau: 1e-3, ..f };
+        assert_eq!(tight.coefficient(0.0), tight.a_max);
+    }
+}

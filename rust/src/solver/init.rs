@@ -1,0 +1,174 @@
+//! Initial conditions: random solenoidal fields with a prescribed energy
+//! spectrum (for DNS spin-up) and the Taylor–Green vortex (for validation).
+
+use super::grid::Grid;
+use super::spectral::{project, to_spectral, SpecVec};
+use super::spectrum::energy_spectrum;
+use crate::fft::Cpx;
+use crate::util::Rng;
+
+/// Model spectrum E(k) ~ (k/k0)^4 exp(-2 (k/k0)^2) — the standard
+/// von-Karman-like initial distribution peaking near `k0`.
+pub fn model_spectrum(k: f64, k0: f64) -> f64 {
+    let r = k / k0;
+    r.powi(4) * (-2.0 * r * r).exp()
+}
+
+/// Random divergence-free velocity field with shell energies matching
+/// `model_spectrum`, scaled to total kinetic energy `ke_target`.
+///
+/// Construction: white Gaussian noise in *physical* space (guarantees a
+/// real field / Hermitian spectrum), projected solenoidal, then each shell
+/// rescaled to the target spectrum.  Modes beyond the 2/3 cutoff are
+/// zeroed so the state starts dealiased.
+pub fn random_solenoidal(grid: &Grid, ke_target: f64, k0: f64, rng: &mut Rng) -> SpecVec {
+    let mut u: SpecVec = [grid.zeros(), grid.zeros(), grid.zeros()];
+    let mut phys = grid.zeros();
+    for c in u.iter_mut() {
+        for p in phys.iter_mut() {
+            *p = Cpx::new(rng.normal(), 0.0);
+        }
+        to_spectral(grid, &phys, c);
+    }
+    project(grid, &mut u);
+    for c in u.iter_mut() {
+        grid.dealias(c);
+    }
+
+    // Current and target shell energies.
+    let current = energy_spectrum(grid, &u);
+    let nbins = current.len();
+    let kcut = grid.n as f64 / 3.0;
+    let mut target: Vec<f64> = (0..nbins)
+        .map(|k| {
+            if k == 0 || k as f64 > kcut {
+                0.0
+            } else {
+                model_spectrum(k as f64, k0)
+            }
+        })
+        .collect();
+    let sum: f64 = target.iter().sum();
+    assert!(sum > 0.0, "empty target spectrum (k0={k0}, n={})", grid.n);
+    for t in target.iter_mut() {
+        *t *= ke_target / sum;
+    }
+
+    // Per-shell rescale.
+    let scale: Vec<f64> = (0..nbins)
+        .map(|k| {
+            if current[k] > 1e-300 && target[k] > 0.0 {
+                (target[k] / current[k]).sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for i in 0..grid.len() {
+        let bin = grid.k_sq(i).sqrt().round() as usize;
+        let s = if bin < nbins { scale[bin] } else { 0.0 };
+        for c in u.iter_mut() {
+            c[i] = c[i].scale(s);
+        }
+    }
+    u
+}
+
+/// 2-D Taylor–Green vortex (z-invariant): u = (sin x cos y, -cos x sin y, 0).
+/// An exact Navier–Stokes solution decaying as `exp(-2 nu t)`.
+pub fn taylor_green(grid: &Grid) -> SpecVec {
+    let n = grid.n;
+    let mut ux = grid.zeros();
+    let mut uy = grid.zeros();
+    let dx = grid.dx();
+    let mut phys_x = grid.zeros();
+    let mut phys_y = grid.zeros();
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let (xx, yy) = (x as f64 * dx, y as f64 * dx);
+                let i = grid.idx(x, y, z);
+                phys_x[i] = Cpx::new(xx.sin() * yy.cos(), 0.0);
+                phys_y[i] = Cpx::new(-xx.cos() * yy.sin(), 0.0);
+            }
+        }
+    }
+    to_spectral(grid, &phys_x, &mut ux);
+    to_spectral(grid, &phys_y, &mut uy);
+    [ux, uy, grid.zeros()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::spectral::{divergence, kinetic_energy};
+
+    #[test]
+    fn random_field_hits_target_energy() {
+        let grid = Grid::new(24);
+        let mut rng = Rng::new(11);
+        let u = random_solenoidal(&grid, 1.5, 4.0, &mut rng);
+        let ke = kinetic_energy(&grid, &u);
+        assert!((ke - 1.5).abs() < 1e-9, "ke={ke}");
+    }
+
+    #[test]
+    fn random_field_is_solenoidal_and_dealiased() {
+        let grid = Grid::new(24);
+        let mut rng = Rng::new(12);
+        let u = random_solenoidal(&grid, 1.0, 4.0, &mut rng);
+        let mut div = grid.zeros();
+        divergence(&grid, &u, &mut div);
+        let maxdiv = div.iter().map(|c| c.norm_sq().sqrt()).fold(0.0, f64::max);
+        assert!(maxdiv < 1e-9, "maxdiv={maxdiv}");
+        for c in u.iter() {
+            for (i, v) in c.iter().enumerate() {
+                if !grid.keep(i) {
+                    assert_eq!(v.norm_sq(), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_field_is_real_in_physical_space() {
+        let grid = Grid::new(16);
+        let mut rng = Rng::new(13);
+        let u = random_solenoidal(&grid, 1.0, 3.0, &mut rng);
+        let mut phys = grid.zeros();
+        super::super::spectral::to_physical(&grid, &u[0], &mut phys);
+        let max_imag = phys.iter().map(|c| c.im.abs()).fold(0.0, f64::max);
+        let max_real = phys.iter().map(|c| c.re.abs()).fold(0.0, f64::max);
+        assert!(max_imag < 1e-10 * max_real.max(1.0), "imag leak {max_imag}");
+    }
+
+    #[test]
+    fn spectrum_peaks_near_k0() {
+        let grid = Grid::new(32);
+        let mut rng = Rng::new(14);
+        let u = random_solenoidal(&grid, 1.0, 4.0, &mut rng);
+        let spec = energy_spectrum(&grid, &u);
+        let peak = spec
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((3..=5).contains(&peak), "peak at k={peak}");
+    }
+
+    #[test]
+    fn different_seeds_different_fields() {
+        let grid = Grid::new(12);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let a = random_solenoidal(&grid, 1.0, 3.0, &mut r1);
+        let b = random_solenoidal(&grid, 1.0, 3.0, &mut r2);
+        let diff: f64 = a[0]
+            .iter()
+            .zip(&b[0])
+            .map(|(x, y)| (*x - *y).norm_sq())
+            .sum();
+        assert!(diff > 1e-6);
+    }
+}

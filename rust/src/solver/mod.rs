@@ -1,0 +1,19 @@
+//! The flow-solver substrate (FLEXI analogue; DESIGN.md §2): a from-scratch
+//! pseudo-spectral incompressible Navier–Stokes solver for the forced
+//! homogeneous-isotropic-turbulence test case of the paper, with the
+//! element-structured state/action view of Table 1 and DNS ground-truth
+//! generation for the reward.
+
+pub mod dns;
+pub mod elements;
+pub mod forcing;
+pub mod grid;
+pub mod init;
+pub mod sgs;
+pub mod spectral;
+pub mod spectrum;
+pub mod timestep;
+
+pub use elements::ElementMap;
+pub use grid::Grid;
+pub use timestep::{Solver, SolverStats};

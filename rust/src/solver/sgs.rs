@@ -1,0 +1,128 @@
+//! Subgrid-scale (SGS) closure: Smagorinsky with a *per-element* Cs field.
+//!
+//! This is the actuator the RL agent controls (paper §5.1–5.2): the policy
+//! predicts one Cs per DG element; the eddy viscosity follows Eq. (3)
+//!   nu_t = (Cs * Delta)^2 * sqrt(2 S_ij S_ij),
+//! with Delta the grid spacing.  `Cs = const` gives the classic Smagorinsky
+//! baseline; `Cs = 0` is the implicit-LES baseline.
+
+use super::elements::ElementMap;
+use super::grid::Grid;
+use crate::fft::Cpx;
+
+/// Physical-space symmetric strain-rate tensor components, order
+/// (S11, S22, S33, S12, S13, S23).
+pub struct Strain {
+    pub comps: [Vec<Cpx>; 6],
+}
+
+/// Component index pairs for the symmetric strain tensor.
+pub const STRAIN_PAIRS: [(usize, usize); 6] = [(0, 0), (1, 1), (2, 2), (0, 1), (0, 2), (1, 2)];
+
+impl Strain {
+    /// Allocate zeroed strain storage.
+    pub fn zeros(grid: &Grid) -> Strain {
+        Strain {
+            comps: [
+                grid.zeros(),
+                grid.zeros(),
+                grid.zeros(),
+                grid.zeros(),
+                grid.zeros(),
+                grid.zeros(),
+            ],
+        }
+    }
+
+    /// Strain magnitude |S| = sqrt(2 S_ij S_ij) at a flat physical index.
+    #[inline]
+    pub fn magnitude(&self, i: usize) -> f64 {
+        let d = &self.comps;
+        let diag = d[0][i].re * d[0][i].re + d[1][i].re * d[1][i].re + d[2][i].re * d[2][i].re;
+        let off = d[3][i].re * d[3][i].re + d[4][i].re * d[4][i].re + d[5][i].re * d[5][i].re;
+        (2.0 * (diag + 2.0 * off)).sqrt()
+    }
+}
+
+/// Pointwise eddy viscosity from the per-element Cs field, Eq. (3).
+///
+/// `cs` has one entry per element; `emap` maps grid points to elements.
+/// Returns nu_t on the grid and its maximum (for the viscous CFL limit).
+pub fn eddy_viscosity(
+    grid: &Grid,
+    strain: &Strain,
+    emap: &ElementMap,
+    cs: &[f64],
+    out: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(cs.len(), emap.n_elems());
+    let delta = grid.dx();
+    let mut nu_max: f64 = 0.0;
+    for i in 0..grid.len() {
+        let c = cs[emap.elem_of_point(i)];
+        let nu = (c * delta) * (c * delta) * strain.magnitude(i);
+        out[i] = nu;
+        nu_max = nu_max.max(nu);
+    }
+    nu_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::elements::ElementMap;
+
+    #[test]
+    fn magnitude_of_unit_diagonal() {
+        let grid = Grid::new(4);
+        let mut s = Strain::zeros(&grid);
+        s.comps[0][7] = Cpx::new(1.0, 0.0);
+        // |S| = sqrt(2 * 1) = sqrt(2)
+        assert!((s.magnitude(7) - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(s.magnitude(3), 0.0);
+    }
+
+    #[test]
+    fn off_diagonal_counts_twice() {
+        let grid = Grid::new(4);
+        let mut s = Strain::zeros(&grid);
+        s.comps[3][0] = Cpx::new(1.0, 0.0); // S12 = S21 = 1
+        assert!((s.magnitude(0) - 2.0).abs() < 1e-12); // sqrt(2*(2*1)) = 2
+    }
+
+    #[test]
+    fn eddy_viscosity_elementwise() {
+        let grid = Grid::new(8);
+        let emap = ElementMap::new(&grid, 2); // 2^3 = 8 elements of 4^3
+        let mut s = Strain::zeros(&grid);
+        for i in 0..grid.len() {
+            s.comps[0][i] = Cpx::new(1.0, 0.0); // |S| = sqrt(2) everywhere
+        }
+        let mut cs = vec![0.0; 8];
+        cs[0] = 0.2;
+        let mut nut = vec![0.0; grid.len()];
+        let numax = eddy_viscosity(&grid, &s, &emap, &cs, &mut nut);
+        let delta = grid.dx();
+        let want = (0.2 * delta) * (0.2 * delta) * 2f64.sqrt();
+        // First element's corner point:
+        assert!((nut[grid.idx(0, 0, 0)] - want).abs() < 1e-12);
+        // Point inside another element (x >= 4):
+        assert_eq!(nut[grid.idx(5, 0, 0)], 0.0);
+        assert!((numax - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cs_gives_zero_nut_everywhere() {
+        let grid = Grid::new(8);
+        let emap = ElementMap::new(&grid, 2);
+        let mut s = Strain::zeros(&grid);
+        for i in 0..grid.len() {
+            s.comps[4][i] = Cpx::new(3.0, 0.0);
+        }
+        let cs = vec![0.0; 8];
+        let mut nut = vec![1.0; grid.len()];
+        let numax = eddy_viscosity(&grid, &s, &emap, &cs, &mut nut);
+        assert_eq!(numax, 0.0);
+        assert!(nut.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,284 @@
+//! Spectral-space operators: derivatives, curl, divergence-free projection,
+//! and physical<->spectral conversions for vector fields.
+
+use super::grid::Grid;
+use crate::fft::{fft3d, Cpx};
+
+/// A velocity field in spectral space: three complex components.
+pub type SpecVec = [Vec<Cpx>; 3];
+
+/// Allocate a zeroed spectral vector field.
+pub fn zeros_vec(grid: &Grid) -> SpecVec {
+    [grid.zeros(), grid.zeros(), grid.zeros()]
+}
+
+/// Deep-copy a spectral vector field.
+pub fn clone_vec(v: &SpecVec) -> SpecVec {
+    [v[0].clone(), v[1].clone(), v[2].clone()]
+}
+
+/// `out = i * k_axis * f` (spectral derivative along one axis).
+pub fn derivative(grid: &Grid, f: &[Cpx], axis: usize, out: &mut [Cpx]) {
+    for i in 0..f.len() {
+        let (kx, ky, kz) = grid.kvec(i);
+        let k = [kx, ky, kz][axis];
+        out[i] = f[i].mul_i().scale(k);
+    }
+}
+
+/// Curl of a spectral vector field: `omega = i k x u`.
+pub fn curl(grid: &Grid, u: &SpecVec, out: &mut SpecVec) {
+    for i in 0..grid.len() {
+        let (kx, ky, kz) = grid.kvec(i);
+        let (ux, uy, uz) = (u[0][i], u[1][i], u[2][i]);
+        // (i k) x u
+        out[0][i] = (uz.scale(ky) - uy.scale(kz)).mul_i();
+        out[1][i] = (ux.scale(kz) - uz.scale(kx)).mul_i();
+        out[2][i] = (uy.scale(kx) - ux.scale(ky)).mul_i();
+    }
+}
+
+/// Divergence `i k . u` (diagnostic; the state should keep this ~0).
+pub fn divergence(grid: &Grid, u: &SpecVec, out: &mut [Cpx]) {
+    for i in 0..grid.len() {
+        let (kx, ky, kz) = grid.kvec(i);
+        out[i] = (u[0][i].scale(kx) + u[1][i].scale(ky) + u[2][i].scale(kz)).mul_i();
+    }
+}
+
+/// Leray projection `u <- (I - k k^T / k^2) u`; zeroes the mean mode.
+pub fn project(grid: &Grid, u: &mut SpecVec) {
+    for i in 0..grid.len() {
+        let k2 = grid.k_sq(i);
+        if k2 == 0.0 {
+            u[0][i] = Cpx::ZERO;
+            u[1][i] = Cpx::ZERO;
+            u[2][i] = Cpx::ZERO;
+            continue;
+        }
+        let (kx, ky, kz) = grid.kvec(i);
+        let kdotu = u[0][i].scale(kx) + u[1][i].scale(ky) + u[2][i].scale(kz);
+        let s = kdotu.scale(1.0 / k2);
+        u[0][i] = u[0][i] - s.scale(kx);
+        u[1][i] = u[1][i] - s.scale(ky);
+        u[2][i] = u[2][i] - s.scale(kz);
+    }
+}
+
+/// Spectral -> physical for one component (in-place on a copy).
+pub fn to_physical(grid: &Grid, fhat: &[Cpx], out: &mut [Cpx]) {
+    out.copy_from_slice(fhat);
+    fft3d(out, &grid.plan, true);
+}
+
+/// Inverse-transform TWO spectral fields of real physical signals with a
+/// single complex FFT (the classic Hermitian pairing; §Perf-L3): since
+/// ifft(a) is real and ifft(b) is real, `ifft(a + i b) = ifft(a) +
+/// i*ifft(b)` — the real/imag parts of one inverse transform.
+/// Outputs have zero imaginary parts.
+pub fn ifft_pair(
+    grid: &Grid,
+    ahat: &[Cpx],
+    bhat: &[Cpx],
+    scratch: &mut [Cpx],
+    out_a: &mut [Cpx],
+    out_b: &mut [Cpx],
+) {
+    for i in 0..grid.len() {
+        scratch[i] = ahat[i] + bhat[i].mul_i();
+    }
+    fft3d(scratch, &grid.plan, true);
+    for i in 0..grid.len() {
+        out_a[i] = Cpx::new(scratch[i].re, 0.0);
+        out_b[i] = Cpx::new(scratch[i].im, 0.0);
+    }
+}
+
+/// Forward-transform TWO real physical fields (stored in the `.re` parts)
+/// with a single complex FFT, splitting the Hermitian-symmetric result:
+/// `ahat(k) = (H(k) + conj(H(-k)))/2`, `bhat(k) = -i (H(k) - conj(H(-k)))/2`.
+/// In-place: `a` and `b` are replaced by their transforms.
+pub fn fft_pair_real(grid: &Grid, scratch: &mut [Cpx], a: &mut [Cpx], b: &mut [Cpx]) {
+    for i in 0..grid.len() {
+        scratch[i] = Cpx::new(a[i].re, b[i].re);
+    }
+    fft3d(scratch, &grid.plan, false);
+    for i in 0..grid.len() {
+        let h = scratch[i];
+        let hn = scratch[grid.neg_index[i] as usize].conj();
+        a[i] = (h + hn).scale(0.5);
+        b[i] = (h - hn).scale(0.5).mul_i().scale(-1.0);
+    }
+}
+
+/// Physical -> spectral for one component.
+pub fn to_spectral(grid: &Grid, f: &[Cpx], out: &mut [Cpx]) {
+    out.copy_from_slice(f);
+    fft3d(out, &grid.plan, false);
+}
+
+/// Volume-mean kinetic energy `0.5 <|u|^2>` from the spectral state.
+/// With unnormalized forward FFT the coefficients are `uhat / n^3`.
+pub fn kinetic_energy(grid: &Grid, u: &SpecVec) -> f64 {
+    let n3 = grid.len() as f64;
+    let mut sum = 0.0;
+    for c in u.iter() {
+        for v in c.iter() {
+            sum += v.norm_sq();
+        }
+    }
+    0.5 * sum / (n3 * n3)
+}
+
+/// Max pointwise |u| in physical space (for the CFL timestep).
+pub fn max_velocity(grid: &Grid, u: &SpecVec) -> f64 {
+    let mut bufs = [grid.zeros(), grid.zeros(), grid.zeros()];
+    for (c, buf) in u.iter().zip(bufs.iter_mut()) {
+        to_physical(grid, c, buf);
+    }
+    let mut vmax: f64 = 0.0;
+    for i in 0..grid.len() {
+        let v2 = bufs[0][i].re * bufs[0][i].re
+            + bufs[1][i].re * bufs[1][i].re
+            + bufs[2][i].re * bufs[2][i].re;
+        vmax = vmax.max(v2);
+    }
+    vmax.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build u = (sin z, 0, 0): curl = (0, cos z, 0).
+    fn single_mode_field(grid: &Grid) -> SpecVec {
+        let n = grid.n;
+        let mut ux = grid.zeros();
+        // sin(z) = (e^{iz} - e^{-iz}) / 2i -> bins kz=+1: -i/2, kz=-1: +i/2
+        let scale = (n * n * n) as f64;
+        ux[grid.idx(0, 0, 1)] = Cpx::new(0.0, -0.5).scale(scale);
+        ux[grid.idx(0, 0, n - 1)] = Cpx::new(0.0, 0.5).scale(scale);
+        [ux, grid.zeros(), grid.zeros()]
+    }
+
+    #[test]
+    fn curl_of_shear_is_cos() {
+        let grid = Grid::new(16);
+        let u = single_mode_field(&grid);
+        let mut w = zeros_vec(&grid);
+        curl(&grid, &u, &mut w);
+        let mut wy = grid.zeros();
+        to_physical(&grid, &w[1], &mut wy);
+        for z in 0..grid.n {
+            let want = (z as f64 * grid.dx()).cos();
+            let got = wy[grid.idx(3, 5, z)].re;
+            assert!((got - want).abs() < 1e-9, "z={z}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn projection_removes_divergence() {
+        let grid = Grid::new(12);
+        let mut rng = crate::util::Rng::new(3);
+        let mut u = zeros_vec(&grid);
+        for c in u.iter_mut() {
+            for v in c.iter_mut() {
+                *v = Cpx::new(rng.normal(), rng.normal());
+            }
+        }
+        project(&grid, &mut u);
+        let mut div = grid.zeros();
+        divergence(&grid, &u, &mut div);
+        let max_div = div.iter().map(|c| c.norm_sq().sqrt()).fold(0.0, f64::max);
+        assert!(max_div < 1e-10, "max_div={max_div}");
+    }
+
+    #[test]
+    fn projection_idempotent() {
+        let grid = Grid::new(8);
+        let mut rng = crate::util::Rng::new(4);
+        let mut u = zeros_vec(&grid);
+        for c in u.iter_mut() {
+            for v in c.iter_mut() {
+                *v = Cpx::new(rng.normal(), rng.normal());
+            }
+        }
+        project(&grid, &mut u);
+        let once = clone_vec(&u);
+        project(&grid, &mut u);
+        for c in 0..3 {
+            for i in 0..grid.len() {
+                assert!((u[c][i] - once[c][i]).norm_sq() < 1e-24);
+            }
+        }
+    }
+
+    #[test]
+    fn kinetic_energy_of_sine_mode() {
+        // u = (sin z, 0, 0): <u^2>/2 = 1/4.
+        let grid = Grid::new(16);
+        let u = single_mode_field(&grid);
+        let ke = kinetic_energy(&grid, &u);
+        assert!((ke - 0.25).abs() < 1e-12, "ke={ke}");
+    }
+
+    #[test]
+    fn max_velocity_of_sine_mode() {
+        let grid = Grid::new(16);
+        let u = single_mode_field(&grid);
+        let vmax = max_velocity(&grid, &u);
+        assert!((vmax - 1.0).abs() < 1e-6, "vmax={vmax}");
+    }
+
+    #[test]
+    fn paired_transforms_match_singles() {
+        let grid = Grid::new(12);
+        let mut rng = crate::util::Rng::new(21);
+        // Two random REAL physical fields.
+        let mut a = grid.zeros();
+        let mut b = grid.zeros();
+        for i in 0..grid.len() {
+            a[i] = Cpx::new(rng.normal(), 0.0);
+            b[i] = Cpx::new(rng.normal(), 0.0);
+        }
+        // Reference forward transforms.
+        let mut ar = grid.zeros();
+        let mut br = grid.zeros();
+        to_spectral(&grid, &a, &mut ar);
+        to_spectral(&grid, &b, &mut br);
+        // Paired forward.
+        let mut scratch = grid.zeros();
+        let mut ap = a.clone();
+        let mut bp = b.clone();
+        fft_pair_real(&grid, &mut scratch, &mut ap, &mut bp);
+        for i in 0..grid.len() {
+            assert!((ap[i] - ar[i]).norm_sq().sqrt() < 1e-9, "ahat[{i}]");
+            assert!((bp[i] - br[i]).norm_sq().sqrt() < 1e-9, "bhat[{i}]");
+        }
+        // Paired inverse round-trips to the original real fields.
+        let mut ia = grid.zeros();
+        let mut ib = grid.zeros();
+        ifft_pair(&grid, &ap, &bp, &mut scratch, &mut ia, &mut ib);
+        for i in 0..grid.len() {
+            assert!((ia[i].re - a[i].re).abs() < 1e-9);
+            assert!((ib[i].re - b[i].re).abs() < 1e-9);
+            assert_eq!(ia[i].im, 0.0);
+            assert_eq!(ib[i].im, 0.0);
+        }
+    }
+
+    #[test]
+    fn derivative_of_mode() {
+        let grid = Grid::new(16);
+        let u = single_mode_field(&grid);
+        let mut d = grid.zeros();
+        derivative(&grid, &u[0], 2, &mut d);
+        let mut phys = grid.zeros();
+        to_physical(&grid, &d, &mut phys);
+        // d/dz sin z = cos z
+        for z in 0..grid.n {
+            let want = (z as f64 * grid.dx()).cos();
+            assert!((phys[grid.idx(1, 1, z)].re - want).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Shell-binned turbulent kinetic-energy spectrum E(k) and the spectrum
+//! error that drives the reward, Eq. (4) of the paper.
+
+use super::grid::Grid;
+use super::spectral::SpecVec;
+
+/// Shell-binned energy spectrum.  Bin `k` collects modes with
+/// `round(|k_vec|) == k`; the sum over bins equals the mean kinetic energy.
+pub fn energy_spectrum(grid: &Grid, u: &SpecVec) -> Vec<f64> {
+    let nbins = grid.k_nyquist() + 1;
+    let n3 = grid.len() as f64;
+    let norm = 1.0 / (n3 * n3);
+    let mut spec = vec![0.0; nbins];
+    for i in 0..grid.len() {
+        let kmag = grid.k_sq(i).sqrt();
+        let bin = kmag.round() as usize;
+        if bin >= nbins {
+            continue;
+        }
+        let e = 0.5 * (u[0][i].norm_sq() + u[1][i].norm_sq() + u[2][i].norm_sq());
+        spec[bin] += e * norm;
+    }
+    spec
+}
+
+/// Mean relative squared spectrum error, Eq. (4):
+/// `l = mean_k [ ((E_dns(k) - E_les(k)) / E_dns(k))^2 ]` over `k in [1, k_max]`.
+pub fn spectrum_error(e_dns: &[f64], e_les: &[f64], k_max: usize) -> f64 {
+    assert!(k_max >= 1, "k_max must be >= 1");
+    assert!(
+        e_dns.len() > k_max && e_les.len() > k_max,
+        "spectra too short for k_max={k_max}: dns={}, les={}",
+        e_dns.len(),
+        e_les.len()
+    );
+    let mut acc = 0.0;
+    for k in 1..=k_max {
+        debug_assert!(e_dns[k] > 0.0, "DNS spectrum empty at k={k}");
+        let rel = (e_dns[k] - e_les[k]) / e_dns[k];
+        acc += rel * rel;
+    }
+    acc / k_max as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Cpx;
+    use crate::solver::spectral::{kinetic_energy, zeros_vec};
+
+    #[test]
+    fn spectrum_sums_to_kinetic_energy() {
+        let grid = Grid::new(16);
+        let mut rng = crate::util::Rng::new(5);
+        let mut u = zeros_vec(&grid);
+        for c in u.iter_mut() {
+            for v in c.iter_mut() {
+                *v = Cpx::new(rng.normal(), rng.normal());
+            }
+        }
+        let spec = energy_spectrum(&grid, &u);
+        let ke = kinetic_energy(&grid, &u);
+        // Bins only cover round(|k|) <= n/2; modes in the corner shells
+        // (|k| > n/2) are excluded, so compare against the binned subset.
+        let n3 = grid.len() as f64;
+        let mut ke_binned = 0.0;
+        for i in 0..grid.len() {
+            if (grid.k_sq(i).sqrt().round() as usize) < spec.len() {
+                ke_binned += 0.5
+                    * (u[0][i].norm_sq() + u[1][i].norm_sq() + u[2][i].norm_sq())
+                    / (n3 * n3);
+            }
+        }
+        let total: f64 = spec.iter().sum();
+        assert!((total - ke_binned).abs() < 1e-10 * ke.max(1.0));
+        assert!(total <= ke + 1e-12);
+    }
+
+    #[test]
+    fn single_mode_lands_in_right_shell() {
+        let grid = Grid::new(16);
+        let mut u = zeros_vec(&grid);
+        let n3 = grid.len() as f64;
+        // Mode k = (3, 0, 0), coefficient chosen for E = 0.5 in that shell.
+        u[0][grid.idx(3, 0, 0)] = Cpx::new(n3, 0.0);
+        let spec = energy_spectrum(&grid, &u);
+        assert!((spec[3] - 0.5).abs() < 1e-12);
+        for (k, &e) in spec.iter().enumerate() {
+            if k != 3 {
+                assert_eq!(e, 0.0, "unexpected energy in shell {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn spectrum_error_zero_for_identical() {
+        let e = vec![1.0, 0.5, 0.25, 0.125];
+        assert_eq!(spectrum_error(&e, &e, 3), 0.0);
+    }
+
+    #[test]
+    fn spectrum_error_matches_hand_computation() {
+        let dns = vec![9.9, 1.0, 2.0];
+        let les = vec![9.9, 0.5, 3.0];
+        // k=1: (0.5/1)^2 = 0.25 ; k=2: (-1/2)^2 = 0.25 ; mean = 0.25
+        assert!((spectrum_error(&dns, &les, 2) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn spectrum_error_rejects_short_input() {
+        spectrum_error(&[1.0, 1.0], &[1.0, 1.0], 5);
+    }
+}

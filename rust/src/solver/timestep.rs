@@ -1,0 +1,478 @@
+//! The LES solver: incompressible Navier–Stokes on the periodic box,
+//! pseudo-spectral in space (rotational form, 2/3 dealiasing, Leray
+//! projection), SSP-RK3 in time, with linear forcing and the per-element
+//! Smagorinsky closure.  This is the FLEXI-substitute environment
+//! (DESIGN.md §2): it provides the energy cascade, the eddy-viscosity
+//! actuator and the element structure the RL task needs.
+
+use super::elements::ElementMap;
+use super::forcing::LinearForcing;
+use super::grid::Grid;
+use super::sgs::{eddy_viscosity, Strain, STRAIN_PAIRS};
+use super::spectral::{
+    curl, fft_pair_real, ifft_pair, kinetic_energy, max_velocity, project, to_physical,
+    zeros_vec, SpecVec,
+};
+#[cfg(test)]
+use super::spectral::clone_vec;
+use super::spectrum::energy_spectrum;
+use crate::fft::{fft3d, Cpx};
+
+/// Scratch buffers reused across RHS evaluations (no allocation on the hot
+/// path — §Perf-L3 item in EXPERIMENTS.md).
+struct Workspace {
+    omega_hat: SpecVec,
+    fhat: SpecVec,
+    u_phys: SpecVec,
+    w_phys: SpecVec,
+    f_phys: SpecVec,
+    strain: Strain,
+    nut: Vec<f64>,
+    /// Scratch for the paired real-field transforms (§Perf-L3).
+    pair: Vec<Cpx>,
+    /// Preallocated RK stage buffers (avoids per-step allocation).
+    u0: SpecVec,
+    u1: SpecVec,
+}
+
+/// Counters for profiling and the HPC cost model calibration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolverStats {
+    /// Completed RK steps.
+    pub steps: u64,
+    /// 3-D transforms executed.
+    pub transforms: u64,
+    /// RHS evaluations.
+    pub rhs_evals: u64,
+}
+
+/// Pseudo-spectral LES solver state.
+pub struct Solver {
+    pub grid: Grid,
+    pub emap: ElementMap,
+    /// Spectral velocity (the environment state `s_t`).
+    pub uhat: SpecVec,
+    /// Per-element Smagorinsky coefficient (the agent's action `a_t`).
+    pub cs: Vec<f64>,
+    /// Molecular viscosity.
+    pub nu: f64,
+    /// CFL number.
+    pub cfl: f64,
+    /// Energy-maintaining linear forcing (None for decaying turbulence).
+    pub forcing: Option<LinearForcing>,
+    /// Simulation time.
+    pub t: f64,
+    pub stats: SolverStats,
+    vmax: f64,
+    numax: f64,
+    ws: Workspace,
+}
+
+impl Solver {
+    /// Build a solver on an `n^3` grid with `elems_per_dir^3` elements.
+    pub fn new(n: usize, elems_per_dir: usize, nu: f64, cfl: f64) -> Solver {
+        let grid = Grid::new(n);
+        let emap = ElementMap::new(&grid, elems_per_dir);
+        let uhat = zeros_vec(&grid);
+        let ws = Workspace {
+            omega_hat: zeros_vec(&grid),
+            fhat: zeros_vec(&grid),
+            u_phys: zeros_vec(&grid),
+            w_phys: zeros_vec(&grid),
+            f_phys: zeros_vec(&grid),
+            strain: Strain::zeros(&grid),
+            nut: vec![0.0; grid.len()],
+            pair: grid.zeros(),
+            u0: zeros_vec(&grid),
+            u1: zeros_vec(&grid),
+        };
+        let n_elems = emap.n_elems();
+        Solver {
+            grid,
+            emap,
+            uhat,
+            cs: vec![0.0; n_elems],
+            nu,
+            cfl,
+            forcing: None,
+            t: 0.0,
+            stats: SolverStats::default(),
+            vmax: 0.0,
+            numax: 0.0,
+            ws,
+        }
+    }
+
+    /// Replace the state (dealiases and projects it for consistency).
+    pub fn set_state(&mut self, mut uhat: SpecVec) {
+        for c in uhat.iter_mut() {
+            self.grid.dealias(c);
+        }
+        project(&self.grid, &mut uhat);
+        self.uhat = uhat;
+        self.vmax = max_velocity(&self.grid, &self.uhat);
+        self.stats.transforms += 3;
+    }
+
+    /// Set the per-element Cs action, clamped to the admissible [0, 0.5].
+    pub fn set_cs(&mut self, cs: &[f64]) {
+        assert_eq!(cs.len(), self.cs.len());
+        for (dst, &c) in self.cs.iter_mut().zip(cs) {
+            *dst = c.clamp(0.0, 0.5);
+        }
+    }
+
+    /// Uniform Cs (Smagorinsky baseline / 0.0 for implicit LES).
+    pub fn set_cs_uniform(&mut self, cs: f64) {
+        let v = vec![cs; self.cs.len()];
+        self.set_cs(&v);
+    }
+
+    /// Mean kinetic energy of the current state.
+    pub fn kinetic_energy(&self) -> f64 {
+        kinetic_energy(&self.grid, &self.uhat)
+    }
+
+    /// Shell-binned energy spectrum of the current state.
+    pub fn spectrum(&self) -> Vec<f64> {
+        energy_spectrum(&self.grid, &self.uhat)
+    }
+
+    /// Element observations of the current state, `(n_elems, p, p, p, 3)` f32.
+    pub fn observations(&mut self) -> Vec<f32> {
+        for c in 0..3 {
+            to_physical(&self.grid, &self.uhat[c], &mut self.ws.u_phys[c]);
+        }
+        self.stats.transforms += 3;
+        self.emap.gather_observations(&self.ws.u_phys)
+    }
+
+    /// Max divergence magnitude (diagnostic; should stay at round-off).
+    pub fn max_divergence(&self) -> f64 {
+        let mut div = self.grid.zeros();
+        super::spectral::divergence(&self.grid, &self.uhat, &mut div);
+        div.iter().map(|c| c.norm_sq().sqrt()).fold(0.0, f64::max)
+    }
+
+    /// Evaluate the RHS at `uin` into `self.ws.fhat`; updates vmax/numax.
+    fn rhs(&mut self, uin: &SpecVec) {
+        let grid = &self.grid;
+        let ws = &mut self.ws;
+        self.stats.rhs_evals += 1;
+
+        // Vorticity and physical-space velocity / vorticity.  Real fields
+        // are inverse-transformed in Hermitian pairs: 3 FFTs for 6 fields
+        // (§Perf-L3 optimization 1).
+        curl(grid, uin, &mut ws.omega_hat);
+        {
+            let (ua, rest) = ws.u_phys.split_at_mut(1);
+            let (ub, uc) = rest.split_at_mut(1);
+            let (wa, wrest) = ws.w_phys.split_at_mut(1);
+            let (wb, wc) = wrest.split_at_mut(1);
+            ifft_pair(grid, &uin[0], &uin[1], &mut ws.pair, &mut ua[0], &mut ub[0]);
+            ifft_pair(
+                grid,
+                &uin[2],
+                &ws.omega_hat[0],
+                &mut ws.pair,
+                &mut uc[0],
+                &mut wa[0],
+            );
+            ifft_pair(
+                grid,
+                &ws.omega_hat[1],
+                &ws.omega_hat[2],
+                &mut ws.pair,
+                &mut wb[0],
+                &mut wc[0],
+            );
+        }
+        self.stats.transforms += 3;
+
+        // CFL bookkeeping from the velocity we already have.
+        let mut v2max: f64 = 0.0;
+        for i in 0..grid.len() {
+            let v2 = ws.u_phys[0][i].re * ws.u_phys[0][i].re
+                + ws.u_phys[1][i].re * ws.u_phys[1][i].re
+                + ws.u_phys[2][i].re * ws.u_phys[2][i].re;
+            v2max = v2max.max(v2);
+        }
+        self.vmax = v2max.sqrt();
+
+        // Rotational-form nonlinear term F = u x omega.
+        for i in 0..grid.len() {
+            let (ux, uy, uz) = (ws.u_phys[0][i].re, ws.u_phys[1][i].re, ws.u_phys[2][i].re);
+            let (wx, wy, wz) = (ws.w_phys[0][i].re, ws.w_phys[1][i].re, ws.w_phys[2][i].re);
+            ws.f_phys[0][i] = Cpx::new(uy * wz - uz * wy, 0.0);
+            ws.f_phys[1][i] = Cpx::new(uz * wx - ux * wz, 0.0);
+            ws.f_phys[2][i] = Cpx::new(ux * wy - uy * wx, 0.0);
+        }
+        {
+            // Forward-transform F in a Hermitian pair + one single.
+            let (f01, f2) = ws.f_phys.split_at_mut(2);
+            let (f0, f1) = f01.split_at_mut(1);
+            fft_pair_real(grid, &mut ws.pair, &mut f0[0], &mut f1[0]);
+            ws.fhat[0].copy_from_slice(&f0[0]);
+            ws.fhat[1].copy_from_slice(&f1[0]);
+            ws.fhat[2].copy_from_slice(&f2[0]);
+            fft3d(&mut ws.fhat[2], &grid.plan, false);
+        }
+        self.stats.transforms += 2;
+
+        // SGS term: div(2 nu_t(x) S) with per-element Cs (skipped entirely
+        // for the implicit model, Cs = 0 — the paper's cheap baseline).
+        let sgs_active = self.cs.iter().any(|&c| c > 0.0);
+        if sgs_active {
+            // Strain in spectral space, then to physical — inverse
+            // transforms done in Hermitian pairs (6 fields, 3 FFTs).
+            for (m, &(a, b)) in STRAIN_PAIRS.iter().enumerate() {
+                let comp = &mut ws.strain.comps[m];
+                for i in 0..grid.len() {
+                    let (kx, ky, kz) = grid.kvec(i);
+                    let k = [kx, ky, kz];
+                    let v = (uin[a][i].scale(k[b]) + uin[b][i].scale(k[a])).mul_i();
+                    comp[i] = v.scale(0.5);
+                }
+            }
+            for m in [0usize, 2, 4] {
+                let (lo, hi) = ws.strain.comps.split_at_mut(m + 1);
+                let a = &mut lo[m];
+                let b = &mut hi[0];
+                // ifft_pair needs separate in/out; reuse f_phys as temp out.
+                let (ta, tb) = ws.f_phys.split_at_mut(1);
+                ifft_pair(grid, a, b, &mut ws.pair, &mut ta[0], &mut tb[0]);
+                a.copy_from_slice(&ta[0]);
+                b.copy_from_slice(&tb[0]);
+            }
+            self.stats.transforms += 3;
+
+            self.numax = eddy_viscosity(grid, &ws.strain, &self.emap, &self.cs, &mut ws.nut);
+
+            // tau_ij = 2 nu_t S_ij, in place, then back to spectral —
+            // forward transforms in Hermitian pairs (6 fields, 3 FFTs).
+            for m in 0..6 {
+                let comp = &mut ws.strain.comps[m];
+                for i in 0..grid.len() {
+                    comp[i] = Cpx::new(2.0 * ws.nut[i] * comp[i].re, 0.0);
+                }
+            }
+            for m in [0usize, 2, 4] {
+                let (lo, hi) = ws.strain.comps.split_at_mut(m + 1);
+                fft_pair_real(grid, &mut ws.pair, &mut lo[m], &mut hi[0]);
+            }
+            self.stats.transforms += 3;
+
+            // fhat_a += i k_b tau_ab (tau symmetric; component map).
+            // Row a uses tau components: a=0 -> (S11,S12,S13)=(0,3,4),
+            // a=1 -> (3,1,5), a=2 -> (4,5,2).
+            const ROWS: [[usize; 3]; 3] = [[0, 3, 4], [3, 1, 5], [4, 5, 2]];
+            for a in 0..3 {
+                for i in 0..grid.len() {
+                    let (kx, ky, kz) = grid.kvec(i);
+                    let k = [kx, ky, kz];
+                    let mut acc = Cpx::ZERO;
+                    for b in 0..3 {
+                        acc += ws.strain.comps[ROWS[a][b]][i].scale(k[b]);
+                    }
+                    ws.fhat[a][i] += acc.mul_i();
+                }
+            }
+        } else {
+            self.numax = 0.0;
+        }
+
+        // Linear terms: molecular viscosity (explicit) + linear forcing.
+        let a_coef = self
+            .forcing
+            .as_ref()
+            .map(|f| f.coefficient(kinetic_energy(grid, uin)))
+            .unwrap_or(0.0);
+        for c in 0..3 {
+            for i in 0..grid.len() {
+                let k2 = grid.k_sq(i);
+                ws.fhat[c][i] += uin[c][i].scale(a_coef - self.nu * k2);
+            }
+        }
+
+        // Dealias and project.
+        for c in 0..3 {
+            grid.dealias(&mut ws.fhat[c]);
+        }
+        project(grid, &mut ws.fhat);
+    }
+
+    /// Stable timestep from the most recent vmax/numax.
+    pub fn stable_dt(&self) -> f64 {
+        let dx = self.grid.dx();
+        let adv = self.cfl * dx / self.vmax.max(1e-8);
+        let visc_nu = self.nu + self.numax;
+        let visc = 0.3 * dx * dx / visc_nu.max(1e-12);
+        adv.min(visc)
+    }
+
+    /// One SSP-RK3 step of size `dt` (preallocated stage buffers; no
+    /// allocation on the hot path — §Perf-L3 optimization 2).
+    pub fn step(&mut self, dt: f64) {
+        let grid_len = self.grid.len();
+        let mut u0 = std::mem::take(&mut self.ws.u0);
+        let mut u1 = std::mem::take(&mut self.ws.u1);
+
+        // Stage 1: u1 = u0 + dt L(u0)
+        for c in 0..3 {
+            u0[c].copy_from_slice(&self.uhat[c]);
+        }
+        self.rhs(&u0);
+        for c in 0..3 {
+            for i in 0..grid_len {
+                u1[c][i] = u0[c][i] + self.ws.fhat[c][i].scale(dt);
+            }
+        }
+
+        // Stage 2: u2 = 3/4 u0 + 1/4 (u1 + dt L(u1)), stored back into u1.
+        self.rhs(&u1);
+        for c in 0..3 {
+            for i in 0..grid_len {
+                u1[c][i] = u0[c][i].scale(0.75)
+                    + (u1[c][i] + self.ws.fhat[c][i].scale(dt)).scale(0.25);
+            }
+        }
+
+        // Stage 3: u = 1/3 u0 + 2/3 (u2 + dt L(u2))
+        self.rhs(&u1);
+        for c in 0..3 {
+            for i in 0..grid_len {
+                self.uhat[c][i] = u0[c][i].scale(1.0 / 3.0)
+                    + (u1[c][i] + self.ws.fhat[c][i].scale(dt)).scale(2.0 / 3.0);
+            }
+        }
+
+        self.ws.u0 = u0;
+        self.ws.u1 = u1;
+        self.t += dt;
+        self.stats.steps += 1;
+    }
+
+    /// Advance by `interval` (an RL action interval), choosing stable
+    /// timesteps; returns the number of RK steps taken.
+    pub fn advance(&mut self, interval: f64) -> usize {
+        if self.vmax == 0.0 {
+            self.vmax = max_velocity(&self.grid, &self.uhat);
+            self.stats.transforms += 3;
+        }
+        let t_stop = self.t + interval;
+        let mut steps = 0;
+        while self.t < t_stop - 1e-12 {
+            let dt = self.stable_dt().min(t_stop - self.t);
+            self.step(dt);
+            steps += 1;
+            assert!(
+                steps < 100_000,
+                "timestep collapse: dt={} at t={}",
+                self.stable_dt(),
+                self.t
+            );
+        }
+        steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::init::taylor_green;
+
+    /// 2-D Taylor–Green (z-invariant) is an exact NS solution:
+    /// u(t) = u(0) * exp(-2 nu t).  The nonlinear term is a pure gradient,
+    /// absorbed by the projection, so this tests advection + projection +
+    /// viscosity + RK3 together against an analytic solution.
+    #[test]
+    fn taylor_green_decay_matches_analytic() {
+        let nu = 0.05;
+        let mut s = Solver::new(16, 2, nu, 0.4);
+        s.set_state(taylor_green(&s.grid));
+        let ke0 = s.kinetic_energy();
+        assert!((ke0 - 0.25).abs() < 1e-10, "ke0={ke0}");
+        let t_end = 0.5;
+        s.advance(t_end);
+        let ke = s.kinetic_energy();
+        let want = ke0 * (-4.0 * nu * s.t).exp(); // KE ~ u^2 -> factor e^{-4 nu t}
+        assert!(
+            (ke - want).abs() < 1e-6 * want,
+            "ke={ke} want={want} (t={})",
+            s.t
+        );
+    }
+
+    #[test]
+    fn divergence_stays_zero() {
+        let mut s = Solver::new(12, 2, 0.01, 0.4);
+        let mut rng = crate::util::Rng::new(1);
+        s.set_state(crate::solver::init::random_solenoidal(&s.grid, 1.0, 4.0, &mut rng));
+        s.advance(0.2);
+        assert!(s.max_divergence() < 1e-8, "div={}", s.max_divergence());
+    }
+
+    #[test]
+    fn unforced_energy_decays() {
+        let mut s = Solver::new(12, 2, 0.02, 0.4);
+        let mut rng = crate::util::Rng::new(2);
+        s.set_state(crate::solver::init::random_solenoidal(&s.grid, 1.0, 3.0, &mut rng));
+        let ke0 = s.kinetic_energy();
+        s.advance(0.3);
+        assert!(s.kinetic_energy() < ke0);
+    }
+
+    #[test]
+    fn forcing_sustains_energy() {
+        let mut s = Solver::new(12, 2, 0.02, 0.4);
+        let mut rng = crate::util::Rng::new(3);
+        s.set_state(crate::solver::init::random_solenoidal(&s.grid, 1.0, 3.0, &mut rng));
+        s.forcing = Some(LinearForcing::new(1.0, 0.5));
+        s.advance(2.0);
+        let ke = s.kinetic_energy();
+        assert!((0.5..2.0).contains(&ke), "ke={ke} drifted from target 1.0");
+    }
+
+    #[test]
+    fn smagorinsky_dissipates_more_than_implicit() {
+        let mut rng = crate::util::Rng::new(4);
+        let grid = Grid::new(12);
+        let state = crate::solver::init::random_solenoidal(&grid, 1.0, 3.0, &mut rng);
+
+        let mut implicit = Solver::new(12, 2, 0.01, 0.4);
+        implicit.set_state(clone_vec(&state));
+        implicit.advance(0.3);
+
+        let mut smag = Solver::new(12, 2, 0.01, 0.4);
+        smag.set_state(state);
+        smag.set_cs_uniform(0.17);
+        smag.advance(0.3);
+
+        assert!(
+            smag.kinetic_energy() < implicit.kinetic_energy(),
+            "smag={} implicit={}",
+            smag.kinetic_energy(),
+            implicit.kinetic_energy()
+        );
+    }
+
+    #[test]
+    fn cs_actions_are_clamped() {
+        let mut s = Solver::new(8, 2, 0.01, 0.4);
+        s.set_cs(&vec![-1.0, 0.3, 2.0, 0.0, 0.1, 0.2, 0.5, 0.05]);
+        assert_eq!(s.cs[0], 0.0);
+        assert_eq!(s.cs[1], 0.3);
+        assert_eq!(s.cs[2], 0.5);
+    }
+
+    #[test]
+    fn advance_hits_exact_interval() {
+        let mut s = Solver::new(12, 2, 0.02, 0.4);
+        let mut rng = crate::util::Rng::new(5);
+        s.set_state(crate::solver::init::random_solenoidal(&s.grid, 1.0, 3.0, &mut rng));
+        s.advance(0.1);
+        assert!((s.t - 0.1).abs() < 1e-9, "t={}", s.t);
+        s.advance(0.1);
+        assert!((s.t - 0.2).abs() < 1e-9);
+    }
+}

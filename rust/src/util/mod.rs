@@ -1,0 +1,12 @@
+//! Foundation utilities built from scratch for this repo (the image's crate
+//! registry only carries `xla` + `anyhow`): PRNG, statistics, binary/JSON IO,
+//! a criterion-style bench harness, and a CLI parser.
+
+pub mod bench;
+pub mod binio;
+pub mod cli;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

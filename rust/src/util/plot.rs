@@ -1,0 +1,160 @@
+//! Terminal line plots for the paper's figures: training-return curves
+//! (Fig. 5a/b) and log-log energy spectra (Fig. 5c) without any plotting
+//! dependency.  Multiple labelled series share one canvas.
+
+/// One labelled data series.
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    /// Build a series; x/y lengths must match.
+    pub fn new(label: &str, xs: Vec<f64>, ys: Vec<f64>) -> Series {
+        assert_eq!(xs.len(), ys.len(), "series {label}: x/y length mismatch");
+        Series {
+            label: label.to_string(),
+            xs,
+            ys,
+        }
+    }
+}
+
+/// Axis scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log10,
+}
+
+fn tx(v: f64, scale: Scale) -> f64 {
+    match scale {
+        Scale::Linear => v,
+        Scale::Log10 => v.max(1e-300).log10(),
+    }
+}
+
+/// Render labelled series onto a `width x height` character canvas.
+/// Each series gets a distinct glyph; a legend and axis ranges are
+/// appended below the canvas.
+pub fn render(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    xscale: Scale,
+    yscale: Scale,
+) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let (px, py) = (tx(x, xscale), tx(y, yscale));
+            xmin = xmin.min(px);
+            xmax = xmax.max(px);
+            ymin = ymin.min(py);
+            ymax = ymax.max(py);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        xmax = xmin + 1.0;
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let px = ((tx(x, xscale) - xmin) / (xmax - xmin) * (width - 1) as f64).round();
+            let py = ((tx(y, yscale) - ymin) / (ymax - ymin) * (height - 1) as f64).round();
+            let (cx, cy) = (px as usize, height - 1 - py as usize);
+            if cx < width && cy < height {
+                canvas[cy][cx] = g;
+            }
+        }
+    }
+
+    let fmt = |v: f64, scale: Scale| match scale {
+        Scale::Linear => format!("{v:.3}"),
+        Scale::Log10 => format!("1e{v:.1}"),
+    };
+    let mut out = format!("## {title}\n");
+    for row in &canvas {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  +{}\n   x: [{} .. {}]  y: [{} .. {}]\n",
+        "-".repeat(width),
+        fmt(xmin, xscale),
+        fmt(xmax, xscale),
+        fmt(ymin, yscale),
+        fmt(ymax, yscale),
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_legend() {
+        let s = Series::new("linear", vec![0.0, 1.0, 2.0], vec![0.0, 1.0, 2.0]);
+        let r = render("t", &[s], 21, 7, Scale::Linear, Scale::Linear);
+        assert!(r.contains("## t"));
+        assert!(r.contains("* linear"));
+        // Diagonal: first and last rows contain the glyph.
+        let rows: Vec<&str> = r.lines().collect();
+        assert!(rows[1].contains('*')); // top row = max y
+        assert!(rows[7].contains('*')); // bottom row = min y
+    }
+
+    #[test]
+    fn log_scale_compresses_decades() {
+        let s = Series::new("spec", vec![1.0, 10.0, 100.0], vec![1.0, 0.01, 1e-4]);
+        let r = render("spectrum", &[s], 30, 8, Scale::Log10, Scale::Log10);
+        assert!(r.contains("1e0.0"));
+        assert!(r.contains("1e-4.0"));
+    }
+
+    #[test]
+    fn multiple_series_distinct_glyphs() {
+        let a = Series::new("a", vec![0.0, 1.0], vec![0.0, 1.0]);
+        let b = Series::new("b", vec![0.0, 1.0], vec![1.0, 0.0]);
+        let r = render("two", &[a, b], 11, 5, Scale::Linear, Scale::Linear);
+        assert!(r.contains("* a"));
+        assert!(r.contains("o b"));
+        assert!(r.contains('o'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        Series::new("bad", vec![0.0], vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn degenerate_ranges_do_not_crash() {
+        let s = Series::new("const", vec![1.0, 1.0], vec![2.0, 2.0]);
+        let r = render("c", &[s], 10, 4, Scale::Linear, Scale::Linear);
+        assert!(r.contains("const"));
+        let empty = Series::new("e", vec![], vec![]);
+        let r2 = render("e", &[empty], 10, 4, Scale::Linear, Scale::Linear);
+        assert!(r2.contains("## e"));
+    }
+}

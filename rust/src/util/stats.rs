@@ -1,0 +1,121 @@
+//! Small statistics helpers shared by benches, metrics and tests.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Minimum (NaN-free input assumed); +inf for empty.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Maximum; -inf for empty.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Fixed-width histogram over `[lo, hi)`; values outside clamp to edge bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if xs.is_empty() || bins == 0 || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+/// Render a histogram as a terminal bar chart (used by spectrum_compare).
+pub fn ascii_histogram(xs: &[f64], lo: f64, hi: f64, bins: usize, width: usize) -> String {
+    let h = histogram(xs, lo, hi, bins);
+    let maxc = h.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    let w = (hi - lo) / bins as f64;
+    for (i, &c) in h.iter().enumerate() {
+        let bar = "#".repeat(c * width / maxc);
+        out.push_str(&format!(
+            "{:>8.3} | {:<width$} {}\n",
+            lo + (i as f64 + 0.5) * w,
+            bar,
+            c,
+            width = width
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamps() {
+        let h = histogram(&[-1.0, 0.1, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: orchestrator under realistic concurrent load — many env
+//! workers exchanging full-size state/action tensors with one trainer, on
+//! both backends (single-shard Redis-like, sharded KeyDB-like).
+
+use relexi::orchestrator::{Orchestrator, Protocol};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn run_exchange(shards: usize, n_envs: usize, steps: usize, state_len: usize) {
+    let orch = Arc::new(Orchestrator::launch(shards));
+    let proto = Protocol::new("x");
+    let mut workers = Vec::new();
+    for i in 0..n_envs {
+        let c = orch.client();
+        let p = proto.clone();
+        workers.push(std::thread::spawn(move || {
+            for t in 0..steps {
+                let payload: Vec<f32> = (0..state_len).map(|k| (i * 1000 + t + k) as f32).collect();
+                c.put_tensor(&p.state_key(i, t), vec![state_len], payload);
+                let act = c
+                    .poll_take(&p.action_key(i, t), Duration::from_secs(30))
+                    .expect("action");
+                let (_, data) = act.as_tensor().unwrap();
+                // Action payload must be the one addressed to this env+step.
+                assert_eq!(data[0], (i * 7 + t) as f32, "env {i} step {t} got wrong action");
+            }
+            c.put_flag(&p.done_key(i), true);
+        }));
+    }
+
+    let trainer = orch.client();
+    for t in 0..steps {
+        for i in 0..n_envs {
+            let st = trainer
+                .poll(&proto.state_key(i, t), Duration::from_secs(30))
+                .expect("state");
+            let (shape, data) = st.as_tensor().unwrap();
+            assert_eq!(shape, &[state_len]);
+            assert_eq!(data[0], (i * 1000 + t) as f32);
+        }
+        for i in 0..n_envs {
+            trainer.put_tensor(&proto.action_key(i, t), vec![4], vec![(i * 7 + t) as f32; 4]);
+        }
+    }
+    for i in 0..n_envs {
+        assert_eq!(
+            trainer
+                .poll(&proto.done_key(i), Duration::from_secs(30))
+                .unwrap()
+                .as_flag(),
+            Some(true)
+        );
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let stats = orch.stats();
+    // Every state and action was written exactly once, plus done flags.
+    assert_eq!(stats.puts as usize, 2 * n_envs * steps + n_envs);
+    assert!(stats.bytes_in > 0 && stats.bytes_out > 0);
+}
+
+#[test]
+fn lockstep_exchange_single_shard() {
+    run_exchange(1, 8, 10, 1024);
+}
+
+#[test]
+fn lockstep_exchange_sharded() {
+    run_exchange(16, 8, 10, 1024);
+}
+
+#[test]
+fn lockstep_exchange_many_envs() {
+    run_exchange(8, 32, 5, 512);
+}
+
+#[test]
+fn clear_between_iterations_isolates_runs() {
+    let orch = Orchestrator::launch(4);
+    let c = orch.client();
+    let p0 = Protocol::new("it0");
+    let p1 = Protocol::new("it1");
+    c.put_tensor(&p0.state_key(0, 0), vec![2], vec![1.0, 2.0]);
+    orch.clear();
+    assert!(c.get(&p0.state_key(0, 0)).is_none());
+    c.put_tensor(&p1.state_key(0, 0), vec![2], vec![3.0, 4.0]);
+    assert_eq!(
+        c.get(&p1.state_key(0, 0)).unwrap().as_tensor().unwrap().1,
+        &[3.0, 4.0]
+    );
+}
+
+#[test]
+fn poll_timeout_does_not_wedge_under_load() {
+    let orch = Arc::new(Orchestrator::launch(2));
+    // A writer hammers unrelated keys while a reader waits for a key that
+    // never arrives: the reader must still time out promptly.
+    let w = {
+        let orch = orch.clone();
+        std::thread::spawn(move || {
+            let c = orch.client();
+            for i in 0..10_000 {
+                c.put_scalar(&format!("noise{i}"), i as f64);
+            }
+        })
+    };
+    let c = orch.client();
+    let t0 = std::time::Instant::now();
+    assert!(c.poll("never", Duration::from_millis(100)).is_none());
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    w.join().unwrap();
+}

@@ -1,0 +1,133 @@
+//! Integration: the scaling experiments (Figs. 3-4) regenerate with the
+//! paper's qualitative shape on the simulated Hawk partition.
+
+use relexi::hpc::{
+    steps_per_action_for, strong_scaling, weak_scaling, ClusterSim, IterationParams,
+};
+use relexi::launcher::{LaunchMode, StagingMode};
+
+#[test]
+fn fig3_weak_scaling_shape_both_cases() {
+    let sim = ClusterSim::hawk(16);
+    for dof in [24usize, 32] {
+        let spa = steps_per_action_for(dof);
+        for ranks in [2usize, 4, 8, 16] {
+            let pts = weak_scaling(&sim, dof, ranks, spa).unwrap();
+            // Covers 2 envs up to the full partition.
+            assert_eq!(pts.first().unwrap().n_envs, 2);
+            assert_eq!(pts.last().unwrap().n_envs, 2048 / ranks);
+            // Speedup grows monotonically with envs (parallelism wins) ...
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].speedup > w[0].speedup,
+                    "{dof} DOF, {ranks} ranks: speedup not monotone"
+                );
+            }
+            // ... while efficiency never exceeds ideal and decays overall.
+            for p in &pts {
+                assert!(p.efficiency <= 1.05, "superlinear at {p:?}");
+            }
+            assert!(pts.last().unwrap().efficiency < pts.first().unwrap().efficiency);
+        }
+    }
+}
+
+#[test]
+fn fig3_two_rank_dip_from_die_sharing() {
+    // The paper's counterintuitive §6.1 observation: going from one to two
+    // 2-rank envs slows the envs down (shared die bandwidth), visible as a
+    // sub-ideal 2-env speedup, while 16-rank envs show (almost) none of it.
+    let sim = ClusterSim::hawk(16);
+    let sp2 = sim
+        .speedup(&IterationParams::for_case(24, 2, 2))
+        .unwrap();
+    let sp16 = sim
+        .speedup(&IterationParams::for_case(24, 2, 16))
+        .unwrap();
+    let dip2 = 2.0 - sp2;
+    let dip16 = 2.0 - sp16;
+    assert!(
+        dip2 > dip16,
+        "2-rank dip ({dip2:.3}) should exceed 16-rank dip ({dip16:.3})"
+    );
+}
+
+#[test]
+fn fig4_strong_scaling_shape_both_cases() {
+    let sim = ClusterSim::hawk(16);
+    for dof in [24usize, 32] {
+        let spa = steps_per_action_for(dof);
+        for envs in [2usize, 8, 32, 128] {
+            let pts = strong_scaling(&sim, dof, envs, &[2, 4, 8, 16], spa).unwrap();
+            assert!(!pts.is_empty());
+            // Baseline point is ideal by definition.
+            assert!((pts[0].speedup - pts[0].ranks_per_env as f64).abs() < 1e-9);
+            // Efficiency decays with ranks (per-core load shrinks).
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].efficiency <= w[0].efficiency + 0.02,
+                    "{dof} DOF {envs} envs: efficiency should not grow with ranks"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn head_work_hurts_high_env_counts_more() {
+    // §6.1: "if the necessary time to compute the FLEXI simulation
+    // decreases [more ranks], the sequential work of Relexi becomes more
+    // dominant, which decreases the scaling efficiency."
+    let sim = ClusterSim::hawk(16);
+    let eff = |envs: usize, ranks: usize| {
+        sim.speedup(&IterationParams::for_case(24, envs, ranks)).unwrap() / envs as f64
+    };
+    assert!(eff(128, 2) > eff(128, 16));
+}
+
+#[test]
+fn launch_overhead_negligible_only_with_mpmd() {
+    let sim = ClusterSim::hawk(16);
+    let mut p = IterationParams::for_case(24, 256, 4);
+    p.launch_mode = LaunchMode::Mpmd;
+    p.staging = StagingMode::RamDrive;
+    let fast = sim.simulate(&p).unwrap();
+    assert!(
+        fast.launch_s < 0.3 * fast.sampling_s,
+        "MPMD launch should be small vs sampling: {:.1}s vs {:.1}s",
+        fast.launch_s,
+        fast.sampling_s
+    );
+
+    p.launch_mode = LaunchMode::Individual;
+    p.staging = StagingMode::Lustre;
+    let slow = sim.simulate(&p).unwrap();
+    assert!(
+        slow.launch_s > fast.launch_s * 10.0,
+        "naive launch should dominate: {:.1}s vs {:.1}s",
+        slow.launch_s,
+        fast.launch_s
+    );
+}
+
+#[test]
+fn paper_wallclock_scale_16_and_64_envs() {
+    // §6.2: sampling 15 s (16 envs) and 18 s (64 envs) per iteration at
+    // 8 ranks/env — the simulated times must land in that neighbourhood
+    // and grow sublinearly (parallel envs).
+    let sim = ClusterSim::hawk(16);
+    let t16 = sim
+        .simulate(&IterationParams::for_case(24, 16, 8))
+        .unwrap()
+        .sampling_s;
+    let t64 = sim
+        .simulate(&IterationParams::for_case(24, 64, 8))
+        .unwrap()
+        .sampling_s;
+    assert!((8.0..35.0).contains(&t16), "t16={t16:.1}s");
+    assert!(t64 > t16, "more envs => slightly slower iteration");
+    assert!(
+        t64 < 2.0 * t16,
+        "sampling must grow sublinearly: {t16:.1}s -> {t64:.1}s"
+    );
+}

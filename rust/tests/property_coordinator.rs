@@ -1,0 +1,177 @@
+//! Property tests on coordinator invariants (proptest-style with our own
+//! deterministic generators): rank placement, trajectory math, dataset
+//! batching, config round-trips, and the key protocol.
+
+use relexi::config::toml::Toml;
+use relexi::hpc::Topology;
+use relexi::launcher::place;
+use relexi::orchestrator::Protocol;
+use relexi::rl::{flatten, Episode, StepRecord};
+use relexi::util::Rng;
+use std::collections::HashSet;
+
+/// Deterministic pseudo-random cases (seeded sweep = reproducible).
+fn cases(n: usize, seed: u64) -> impl Iterator<Item = Rng> {
+    (0..n).map(move |i| Rng::new(seed.wrapping_add(i as u64 * 0x9E37)))
+}
+
+// --- placement invariants ----------------------------------------------------
+
+#[test]
+fn placement_never_double_occupies_and_never_straddles() {
+    for mut rng in cases(200, 1) {
+        let nodes = 1 + rng.below(16);
+        let topo = Topology::hawk(nodes);
+        let ranks = [1usize, 2, 4, 8, 16, 32][rng.below(6)];
+        let max_inst = (topo.cores_per_node / ranks) * nodes;
+        let n_inst = 1 + rng.below(max_inst);
+        let p = match place(&topo, n_inst, ranks) {
+            Ok(p) => p,
+            Err(e) => panic!("capacity said ok but place failed: {e}"),
+        };
+        // No double occupancy:
+        let mut seen = HashSet::new();
+        for pin in &p.pins {
+            assert!(seen.insert((pin.node, pin.core)));
+        }
+        // All ranks of an instance on one node:
+        let mut node_of = vec![usize::MAX; n_inst];
+        for pin in &p.pins {
+            if node_of[pin.instance] == usize::MAX {
+                node_of[pin.instance] = pin.node;
+            }
+            assert_eq!(node_of[pin.instance], pin.node);
+        }
+        // Every instance has exactly `ranks` pins:
+        let mut counts = vec![0usize; n_inst];
+        for pin in &p.pins {
+            counts[pin.instance] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == ranks));
+        // Die occupancy sums to total ranks:
+        assert_eq!(p.die_occupancy().iter().sum::<usize>(), n_inst * ranks);
+    }
+}
+
+#[test]
+fn placement_rejects_what_capacity_forbids() {
+    for mut rng in cases(100, 2) {
+        let topo = Topology::hawk(1 + rng.below(4));
+        let ranks = 1 + rng.below(128);
+        let capacity = (topo.cores_per_node / ranks) * topo.nodes;
+        assert!(place(&topo, capacity + 1, ranks).is_err());
+        if capacity > 0 {
+            assert!(place(&topo, capacity, ranks).is_ok());
+        }
+    }
+}
+
+// --- trajectory invariants ----------------------------------------------------
+
+fn random_episode(rng: &mut Rng, n_steps: usize, n_elems: usize, feat: usize) -> Episode {
+    Episode {
+        steps: (0..n_steps)
+            .map(|_| StepRecord {
+                obs: (0..n_elems * feat).map(|_| rng.normal() as f32).collect(),
+                act: (0..n_elems).map(|_| rng.uniform_f32() * 0.5).collect(),
+                logp: (0..n_elems).map(|_| -rng.uniform_f32()).collect(),
+                value: (0..n_elems).map(|_| rng.normal() as f32 * 0.1).collect(),
+                reward: rng.range(-1.0, 1.0),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn flatten_sample_count_and_normalization() {
+    for mut rng in cases(50, 3) {
+        let n_eps = 1 + rng.below(5);
+        let n_steps = 1 + rng.below(10);
+        let n_elems = 1 + rng.below(8);
+        let feat = 3 * (1 + rng.below(4));
+        let eps: Vec<Episode> = (0..n_eps)
+            .map(|_| random_episode(&mut rng, n_steps, n_elems, feat))
+            .collect();
+        let ds = flatten(&eps, feat, 0.99, 0.95);
+        assert_eq!(ds.len(), n_eps * n_steps * n_elems);
+        assert_eq!(ds.obs.len(), ds.len() * feat);
+        // Advantages normalized (when more than one distinct sample):
+        if ds.len() > 1 {
+            let advs: Vec<f64> = ds.adv.iter().map(|&a| a as f64).collect();
+            assert!(relexi::util::stats::mean(&advs).abs() < 1e-4);
+        }
+        // Returns bounded by reward bounds: |R| <= sum gamma^k <= n_steps.
+        for &r in &ds.ret {
+            assert!((r as f64).abs() <= n_steps as f64 + 1e-5);
+        }
+    }
+}
+
+#[test]
+fn minibatch_partition_properties() {
+    for mut rng in cases(50, 4) {
+        let n_steps = 1 + rng.below(6);
+        let n_elems = 1 + rng.below(6);
+        let ep = random_episode(&mut rng, n_steps, n_elems, 3);
+        let ds = flatten(&[ep], 3, 0.9, 1.0);
+        let mb = 1 + rng.below(2 * ds.len());
+        let batches = ds.minibatch_indices(mb, &mut rng);
+        // Every batch exactly mb indices; all indices valid; full coverage.
+        let mut seen = vec![false; ds.len()];
+        for b in &batches {
+            assert_eq!(b.len(), mb);
+            for &i in b {
+                assert!(i < ds.len());
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "minibatches must cover the dataset");
+        assert_eq!(batches.len(), ds.len().div_ceil(mb));
+    }
+}
+
+#[test]
+fn discounted_return_is_gamma_contraction() {
+    // |R(tau)| <= r_max * gamma (1-gamma^n)/(1-gamma)
+    for mut rng in cases(50, 5) {
+        let n_steps = 1 + rng.below(50);
+        let ep = random_episode(&mut rng, n_steps, 2, 3);
+        let gamma: f64 = 0.995;
+        let bound = gamma * (1.0 - gamma.powi(n_steps as i32)) / (1.0 - gamma);
+        assert!(ep.discounted_return(gamma).abs() <= bound + 1e-9);
+    }
+}
+
+// --- config + protocol invariants ---------------------------------------------
+
+#[test]
+fn toml_roundtrip_for_generated_configs() {
+    for mut rng in cases(100, 6) {
+        let n_envs = 1 + rng.below(1024);
+        let t_end = (1 + rng.below(50)) as f64 / 10.0;
+        let seed = rng.next_u64() % 100_000;
+        let text = format!(
+            "[rl]\nn_envs = {n_envs}\nseed = {seed}\n[solver]\nt_end = {t_end}\n"
+        );
+        let doc = Toml::parse(&text).unwrap();
+        let cfg = relexi::config::RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.rl.n_envs, n_envs);
+        assert_eq!(cfg.rl.seed, seed);
+        assert!((cfg.solver.t_end - t_end).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn protocol_keys_unique_across_space() {
+    // No two (env, step, kind) combinations may collide.
+    let p = Protocol::new("run");
+    let mut seen = HashSet::new();
+    for env in 0..32 {
+        for step in 0..64 {
+            assert!(seen.insert(p.state_key(env, step)));
+            assert!(seen.insert(p.action_key(env, step)));
+            assert!(seen.insert(p.error_key(env, step)));
+        }
+        assert!(seen.insert(p.done_key(env)));
+    }
+}

@@ -1,0 +1,172 @@
+//! Property tests on solver invariants across randomized states and
+//! parameters: conservation structure, projection, spectra, filtering,
+//! and element gather consistency.
+
+use relexi::fft::Cpx;
+use relexi::solver::dns::{filter_to_les, pack_state, unpack_state};
+use relexi::solver::init::random_solenoidal;
+use relexi::solver::spectral::{divergence, kinetic_energy};
+use relexi::solver::spectrum::energy_spectrum;
+use relexi::solver::{ElementMap, Grid, Solver};
+use relexi::util::Rng;
+
+fn cases(n: usize, seed: u64) -> impl Iterator<Item = Rng> {
+    (0..n).map(move |i| Rng::new(seed.wrapping_add(i as u64 * 77)))
+}
+
+#[test]
+fn stepping_preserves_incompressibility() {
+    for (i, mut rng) in cases(6, 1).enumerate() {
+        let n = [8usize, 12, 16][i % 3];
+        let mut s = Solver::new(n, 2, 0.01 + rng.uniform() * 0.02, 0.4);
+        s.set_state(random_solenoidal(&s.grid, 0.5 + rng.uniform(), 3.0, &mut rng));
+        if rng.uniform() > 0.5 {
+            s.set_cs_uniform(rng.uniform() * 0.3);
+        }
+        s.advance(0.05 + rng.uniform() * 0.1);
+        let mut div = s.grid.zeros();
+        divergence(&s.grid, &s.uhat, &mut div);
+        let max_div = div.iter().map(|c| c.norm_sq().sqrt()).fold(0.0, f64::max);
+        let scale = kinetic_energy(&s.grid, &s.uhat).sqrt().max(1e-6)
+            * (s.grid.len() as f64);
+        assert!(max_div < 1e-8 * scale, "case {i}: div {max_div}");
+    }
+}
+
+#[test]
+fn unforced_viscous_flow_dissipates_monotonically() {
+    for (i, mut rng) in cases(5, 2).enumerate() {
+        let mut s = Solver::new(12, 2, 0.02 + rng.uniform() * 0.05, 0.4);
+        s.set_state(random_solenoidal(&s.grid, 1.0, 3.0, &mut rng));
+        let mut last = s.kinetic_energy();
+        for _ in 0..4 {
+            s.advance(0.05);
+            let ke = s.kinetic_energy();
+            assert!(ke < last * (1.0 + 1e-9), "case {i}: KE must not grow");
+            last = ke;
+        }
+    }
+}
+
+#[test]
+fn higher_cs_dissipates_at_least_as_much() {
+    for (i, mut rng) in cases(4, 3).enumerate() {
+        let grid = Grid::new(12);
+        let state = random_solenoidal(&grid, 1.0, 3.0, &mut rng);
+        let mut ke_by_cs = Vec::new();
+        for cs in [0.0, 0.1, 0.3] {
+            let mut s = Solver::new(12, 2, 0.01, 0.4);
+            s.set_state(relexi::solver::spectral::clone_vec(&state));
+            s.set_cs_uniform(cs);
+            s.advance(0.15);
+            ke_by_cs.push(s.kinetic_energy());
+        }
+        assert!(
+            ke_by_cs[0] >= ke_by_cs[1] && ke_by_cs[1] >= ke_by_cs[2],
+            "case {i}: KE should fall with Cs: {ke_by_cs:?}"
+        );
+    }
+}
+
+#[test]
+fn spectrum_never_negative_and_sums_below_ke() {
+    for mut rng in cases(20, 4) {
+        let n = 8 + 4 * rng.below(3);
+        let grid = Grid::new(n);
+        let u = random_solenoidal(&grid, 0.1 + rng.uniform() * 2.0, 2.5, &mut rng);
+        let spec = energy_spectrum(&grid, &u);
+        assert!(spec.iter().all(|&e| e >= 0.0));
+        let ke = kinetic_energy(&grid, &u);
+        assert!(spec.iter().sum::<f64>() <= ke * (1.0 + 1e-9));
+    }
+}
+
+#[test]
+fn pack_unpack_is_identity_within_f32() {
+    for mut rng in cases(20, 5) {
+        let n = 6 + 2 * rng.below(5);
+        let grid = Grid::new(n);
+        let u = random_solenoidal(&grid, 1.0, 2.0, &mut rng);
+        let back = unpack_state(&grid, &pack_state(&u));
+        for c in 0..3 {
+            for i in 0..grid.len() {
+                let err = (u[c][i] - back[c][i]).norm_sq().sqrt();
+                let mag = u[c][i].norm_sq().sqrt().max(1.0);
+                assert!(err < 1e-5 * mag);
+            }
+        }
+    }
+}
+
+#[test]
+fn filtering_is_projection_idempotent_and_energy_decreasing() {
+    for mut rng in cases(10, 6) {
+        let nd = 16 + 8 * rng.below(2); // 16 or 24
+        let nl = 8;
+        let dns = Grid::new(nd);
+        let les = Grid::new(nl);
+        let u = random_solenoidal(&dns, 1.0, 3.0, &mut rng);
+        let f1 = filter_to_les(&dns, &u, &les);
+        // Idempotence: filtering the filtered field (same grid) = identity.
+        let f2 = filter_to_les(&les, &f1, &les);
+        for c in 0..3 {
+            for i in 0..les.len() {
+                assert!((f1[c][i] - f2[c][i]).norm_sq() < 1e-18);
+            }
+        }
+        // Energy decreases under sharp truncation.
+        assert!(kinetic_energy(&les, &f1) <= kinetic_energy(&dns, &u) + 1e-12);
+    }
+}
+
+#[test]
+fn observation_gather_matches_pointwise_lookup() {
+    for mut rng in cases(10, 7) {
+        let e = 2 + rng.below(2); // 2 or 3 elems/dir
+        let p = 3 + rng.below(3); // 3..5 points/elem
+        let n = e * p;
+        let grid = Grid::new(n);
+        let emap = ElementMap::new(&grid, e);
+        let mut u = [grid.zeros(), grid.zeros(), grid.zeros()];
+        for c in 0..3 {
+            for v in u[c].iter_mut() {
+                *v = Cpx::new(rng.normal(), 0.0);
+            }
+        }
+        let obs = emap.gather_observations(&u);
+        assert_eq!(obs.len(), emap.n_elems() * p * p * p * 3);
+        // Spot-check random entries against direct indexing.
+        for _ in 0..20 {
+            let (ex, ey, ez) = (rng.below(e), rng.below(e), rng.below(e));
+            let (lx, ly, lz) = (rng.below(p), rng.below(p), rng.below(p));
+            let c = rng.below(3);
+            let elem_row = (ez * e + ey) * e + ex;
+            let local = (lz * p + ly) * p + lx;
+            let obs_idx = (elem_row * p * p * p + local) * 3 + c;
+            let gi = grid.idx(ex * p + lx, ey * p + ly, ez * p + lz);
+            assert!((obs[obs_idx] as f64 - u[c][gi].re).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn element_cs_only_affects_owned_region_dissipation() {
+    // Eddy viscosity with Cs > 0 in ONE element must dissipate energy
+    // relative to the implicit run, but less than Cs > 0 everywhere.
+    let mut rng = Rng::new(8);
+    let grid = Grid::new(12);
+    let state = random_solenoidal(&grid, 1.0, 3.0, &mut rng);
+    let run = |cs: Vec<f64>| {
+        let mut s = Solver::new(12, 2, 0.01, 0.4);
+        s.set_state(relexi::solver::spectral::clone_vec(&state));
+        s.set_cs(&cs);
+        s.advance(0.15);
+        s.kinetic_energy()
+    };
+    let ke_none = run(vec![0.0; 8]);
+    let mut one = vec![0.0; 8];
+    one[3] = 0.3;
+    let ke_one = run(one);
+    let ke_all = run(vec![0.3; 8]);
+    assert!(ke_all < ke_one && ke_one < ke_none, "{ke_all} < {ke_one} < {ke_none}");
+}
