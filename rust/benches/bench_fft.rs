@@ -1,0 +1,97 @@
+//! Bench F — the FFT engines head to head: the frozen seed path
+//! (recursive per-line Cooley–Tukey, element-wise strided gather/scatter)
+//! vs the batched iterative Stockham engine behind `fft3d_ws`.  The 3-D
+//! transform dominates every solver step, so this ratio bounds the whole
+//! training loop (ISSUE 1 acceptance: >= 2x at n = 48).
+//!
+//! Emits `BENCH_fft.json` for the perf-trajectory log (ROADMAP §Perf log).
+
+use relexi::fft::{fft3d_ws, seed, Cpx, FftScratch, Plan};
+use relexi::util::bench::{Bench, Table};
+use relexi::util::Rng;
+use std::time::Duration;
+
+fn random_cube(n: usize, seed_v: u64) -> Vec<Cpx> {
+    let mut rng = Rng::new(seed_v);
+    (0..n * n * n)
+        .map(|_| Cpx::new(rng.normal(), rng.normal()))
+        .collect()
+}
+
+/// Never benchmark a wrong transform: both engines must agree first.
+fn verify_engines_agree(n: usize) {
+    let plan = Plan::new(n);
+    let seed_plan = seed::Plan::new(n);
+    let mut ws = FftScratch::new(n);
+    let cube = random_cube(n, 999);
+    let mut a = cube.clone();
+    let mut b = cube;
+    fft3d_ws(&mut a, &plan, false, &mut ws);
+    seed::fft3d(&mut b, &seed_plan, false);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (*x - *y).norm_sq().sqrt())
+        .fold(0.0, f64::max);
+    assert!(
+        max_err < 1e-6 * (n * n * n) as f64,
+        "engines disagree at n={n}: max_err={max_err}"
+    );
+}
+
+fn main() {
+    let mut b = Bench::new("fft").with_target(Duration::from_secs(2));
+
+    for n in [24usize, 48] {
+        verify_engines_agree(n);
+    }
+
+    // --- 3-D: seed per-line vs batched, forward+inverse per iteration ---
+    let mut table = Table::new(&["n", "seed ms", "batched ms", "speedup"]);
+    for n in [24usize, 32, 48, 64, 96] {
+        let seed_plan = seed::Plan::new(n);
+        let plan = Plan::new(n);
+        let mut ws = FftScratch::new(n);
+
+        let mut cube_seed = random_cube(n, 1);
+        let m_seed = b.run(&format!("seed fft3d {n}^3 (fwd+inv)"), || {
+            seed::fft3d(&mut cube_seed, &seed_plan, false);
+            seed::fft3d(&mut cube_seed, &seed_plan, true);
+        });
+
+        let mut cube_new = random_cube(n, 2);
+        let m_new = b.run(&format!("batched fft3d {n}^3 (fwd+inv)"), || {
+            fft3d_ws(&mut cube_new, &plan, false, &mut ws);
+            fft3d_ws(&mut cube_new, &plan, true, &mut ws);
+        });
+
+        table.row(vec![
+            format!("{n}"),
+            format!("{:.3}", m_seed.mean_s * 1e3),
+            format!("{:.3}", m_new.mean_s * 1e3),
+            format!("{:.2}x", m_seed.mean_s / m_new.mean_s),
+        ]);
+    }
+    table.print("Seed vs batched 3-D FFT (one forward + one inverse)");
+
+    // --- 1-D batch scaling: how much the contiguous batch loop buys -----
+    let n = 48usize;
+    let plan = Plan::new(n);
+    for batch in [1usize, 7, n, n * n] {
+        let mut rng = Rng::new(batch as u64);
+        let mut data: Vec<Cpx> = (0..n * batch)
+            .map(|_| Cpx::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut scratch = vec![Cpx::ZERO; n * batch];
+        b.run(&format!("1-D n={n} batch={batch} (whole batch, fwd+inv)"), || {
+            plan.forward_batch(&mut data, batch, &mut scratch);
+            plan.inverse_batch(&mut data, batch, &mut scratch);
+        });
+    }
+
+    if let Err(e) = b.write_json("BENCH_fft.json") {
+        eprintln!("warning: could not write BENCH_fft.json: {e}");
+    } else {
+        println!("\nwrote BENCH_fft.json");
+    }
+}

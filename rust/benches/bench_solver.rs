@@ -3,7 +3,7 @@
 //! These numbers calibrate the HPC cost model (EnvCostModel) and are the
 //! §Perf-L3 baseline in EXPERIMENTS.md.
 
-use relexi::fft::{fft3d, Cpx, Plan};
+use relexi::fft::{fft3d_ws, Cpx, FftScratch, Plan};
 use relexi::solver::forcing::LinearForcing;
 use relexi::solver::init::random_solenoidal;
 use relexi::solver::Solver;
@@ -27,12 +27,14 @@ fn prepared_solver(n: usize, elems: usize, cs: f64, seed: u64) -> Solver {
 fn main() {
     let mut b = Bench::new("solver").with_target(Duration::from_secs(2));
 
-    // --- FFT ---------------------------------------------------------------
+    // --- FFT (batched engine through the solver's workspace path) ----------
     for n in [24usize, 32, 48] {
         let plan = Plan::new(n);
+        let mut ws = FftScratch::new(n);
         let mut data = vec![Cpx::new(1.0, 0.5); n * n * n];
-        b.run(&format!("fft3d {n}^3"), || {
-            fft3d(&mut data, &plan, false);
+        b.run(&format!("fft3d {n}^3 (fwd+inv)"), || {
+            fft3d_ws(&mut data, &plan, false, &mut ws);
+            fft3d_ws(&mut data, &plan, true, &mut ws);
         });
     }
 
@@ -80,4 +82,10 @@ fn main() {
     });
 
     println!("\ntransform count so far: {}", s24.stats.transforms);
+
+    if let Err(e) = b.write_json("BENCH_solver.json") {
+        eprintln!("warning: could not write BENCH_solver.json: {e}");
+    } else {
+        println!("wrote BENCH_solver.json");
+    }
 }

@@ -17,6 +17,7 @@ use crate::orchestrator::{Orchestrator, Protocol};
 use crate::rl::{gaussian, reward_from_error, Episode, LesEnv, StepRecord};
 use crate::runtime::PolicyRuntime;
 use crate::solver::dns::Truth;
+use crate::solver::Grid;
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -73,6 +74,10 @@ impl EnvPool {
         let feat = policy.features();
 
         // --- start the environment workers (the "FLEXI instances") -----
+        // One shared spectral grid for the whole pool: `fft::Plan` is
+        // `Send + Sync`, so every worker reuses the same twiddle tables
+        // instead of rebuilding them per environment.
+        let grid = Arc::new(Grid::new(self.cfg.case.points_per_dir()));
         let mut workers = Vec::with_capacity(n_envs);
         for i in 0..n_envs {
             let client = orch.client();
@@ -80,9 +85,10 @@ impl EnvPool {
             let case = self.cfg.case.clone();
             let scfg = self.cfg.solver.clone();
             let truth = self.truth.clone();
+            let grid = grid.clone();
             let mut env_rng = rng.split(i as u64);
             workers.push(std::thread::spawn(move || -> Result<()> {
-                let mut env = LesEnv::new(&case, &scfg, truth)?;
+                let mut env = LesEnv::with_grid(&case, &scfg, truth, grid)?;
                 let obs = env.reset(&mut env_rng, false);
                 client.put_tensor(&proto.state_key(i, 0), vec![obs.len()], obs);
                 for t in 0..n_actions {

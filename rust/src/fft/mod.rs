@@ -1,13 +1,46 @@
 //! Mixed-radix complex FFT, built from scratch (no FFT crate in the image).
 //!
-//! The pseudo-spectral solver (DESIGN.md S1/S2) needs sizes 24, 32, 48, 64,
-//! 96 — products of 2, 3 and 5 — so a recursive Cooley–Tukey with small
-//! radices covers everything; other prime factors fall back to an O(n·p)
-//! in-level DFT which is still exact.
+//! # Architecture (batched iterative engine)
 //!
-//! [`Plan`] precomputes the twiddle table for one length and is reused
-//! across the many transforms per solver step (plan reuse is one of the
-//! §Perf items in EXPERIMENTS.md).
+//! The pseudo-spectral solver (DESIGN.md S1/S2) needs sizes 24, 32, 48, 64,
+//! 96 — products of 2, 3 and 5 — with other prime factors handled by an
+//! exact O(n·p) generic-radix stage.  The engine is a **Stockham autosort**
+//! FFT: an iterative decimation-in-frequency ladder that ping-pongs between
+//! the data buffer and a caller-owned scratch buffer and needs no bit
+//! reversal.  Three design points carry the performance:
+//!
+//! 1. **Batching.**  [`Plan::forward_batch`] transforms `batch` lines at
+//!    once, stored transposed (`data[t * batch + b]` = element `t` of line
+//!    `b`), so the innermost loop runs over the *batch* index with stride
+//!    one.  Every butterfly then becomes a long contiguous elementwise
+//!    loop the compiler can vectorize; a whole Stockham stage for one
+//!    twiddle index `j` is a single pass over `r` contiguous input blocks
+//!    into `r` contiguous output blocks.
+//! 2. **Precomputed per-stage twiddle tables.**  [`Plan::new`] stores one
+//!    forward and one conjugated inverse table per stage, so the kernels do
+//!    no `% n` index arithmetic and no branchy `conj` — the
+//!    forward/inverse decision only selects a table (and is a compile-time
+//!    `const` parameter of each kernel, so the butterflies themselves are
+//!    branch-free).
+//! 3. **Caller-owned scratch.**  All working memory lives in
+//!    [`FftScratch`], owned by the solver workspace; `Plan` is immutable
+//!    after construction and therefore `Send + Sync`, so one plan can be
+//!    shared by every environment worker thread.
+//!
+//! The 3-D transform [`fft3d_ws`] is built from three *plane-batched*
+//! passes over the `idx = (z*n + y)*n + x` cube:
+//!
+//! * **x-pass** — each z-plane is transposed (blocked, cache-friendly) into
+//!   the scratch plane so the x-lines land in batched layout (`batch = n`),
+//!   transformed, and transposed back;
+//! * **y-pass** — each z-plane already *is* a batched set of y-lines with
+//!   `batch = n` (x is the contiguous inner index), so it is transformed in
+//!   place with no data movement at all;
+//! * **z-pass** — the whole cube is one batched set of z-lines with
+//!   `batch = n²`, transformed in a single call.
+//!
+//! The original recursive per-line engine is preserved verbatim in
+//! [`seed`] as the frozen baseline for `benches/bench_fft.rs`.
 
 /// Complex number (f64) with the handful of ops the FFT and solver need.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -18,6 +51,7 @@ pub struct Cpx {
 
 impl Cpx {
     pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+    pub const ONE: Cpx = Cpx { re: 1.0, im: 0.0 };
 
     #[inline]
     pub fn new(re: f64, im: f64) -> Cpx {
@@ -43,6 +77,12 @@ impl Cpx {
     #[inline]
     pub fn mul_i(self) -> Cpx {
         Cpx { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by -i (the forward-transform twin of [`Cpx::mul_i`]).
+    #[inline]
+    pub fn mul_neg_i(self) -> Cpx {
+        Cpx { re: self.im, im: -self.re }
     }
 }
 
@@ -81,17 +121,6 @@ impl std::ops::AddAssign for Cpx {
     }
 }
 
-/// Precomputed FFT plan for one transform length.
-pub struct Plan {
-    n: usize,
-    /// Factorization of n into radices (smallest first).
-    factors: Vec<usize>,
-    /// exp(-2*pi*i*k/n) for k in 0..n (forward sign convention).
-    twiddles: Vec<Cpx>,
-    /// Reused scratch for out-of-place recursion.
-    scratch: std::cell::RefCell<Vec<Cpx>>,
-}
-
 fn factorize(mut n: usize) -> Vec<usize> {
     let mut fs = Vec::new();
     for r in [4usize, 2, 3, 5] {
@@ -111,22 +140,248 @@ fn factorize(mut n: usize) -> Vec<usize> {
     fs
 }
 
+/// One Stockham stage: radix `r`, remaining sub-transform length `l`
+/// (after this stage) and interleaved group count `m` (before it).
+///
+/// For input viewed as `m`-interleaved sub-transforms of length `r*l`, the
+/// stage computes, for every `j < l` and output row `u < r`:
+/// `out[(r*j + u)*m + k] = w(rl)^(j*u) * sum_s in[(j + s*l)*m + k] * w(r)^(s*u)`
+/// with `w(q) = exp(-2*pi*i/q)` — the classic DIF butterfly, autosorted.
+struct Stage {
+    radix: usize,
+    l: usize,
+    m: usize,
+    /// `w(r*l)^(j*u)` for `j in 0..l`, `u in 1..r`, forward sign, laid out
+    /// `[j][u-1]` (the `u = 0` column is identically one and omitted).
+    fwd: Vec<Cpx>,
+    /// Conjugate of `fwd` (inverse transform); a separate table so the
+    /// kernels never branch on direction per butterfly.
+    inv: Vec<Cpx>,
+    /// `w(r)^(s*u)` laid out `[u][s]` — only populated for the generic
+    /// (prime > 5) radix path; the hardcoded radices bake these in.
+    fwd_radix: Vec<Cpx>,
+    inv_radix: Vec<Cpx>,
+}
+
+impl Stage {
+    fn new(radix: usize, l: usize, m: usize) -> Stage {
+        let rl = radix * l;
+        let mut fwd = Vec::with_capacity(l * (radix - 1));
+        for j in 0..l {
+            for u in 1..radix {
+                let a = -2.0 * std::f64::consts::PI * ((j * u) % rl) as f64 / rl as f64;
+                fwd.push(Cpx::new(a.cos(), a.sin()));
+            }
+        }
+        let inv = fwd.iter().map(|c| c.conj()).collect();
+        let (fwd_radix, inv_radix) = if matches!(radix, 2 | 3 | 4 | 5) {
+            (Vec::new(), Vec::new())
+        } else {
+            let mut t = Vec::with_capacity(radix * radix);
+            for u in 0..radix {
+                for s in 0..radix {
+                    let a = -2.0 * std::f64::consts::PI * ((s * u) % radix) as f64
+                        / radix as f64;
+                    t.push(Cpx::new(a.cos(), a.sin()));
+                }
+            }
+            let ti = t.iter().map(|c: &Cpx| c.conj()).collect();
+            (t, ti)
+        };
+        Stage { radix, l, m, fwd, inv, fwd_radix, inv_radix }
+    }
+
+    fn apply(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize, inverse: bool) {
+        match (self.radix, inverse) {
+            (2, false) => self.radix2::<false>(src, dst, batch),
+            (2, true) => self.radix2::<true>(src, dst, batch),
+            (3, false) => self.radix3::<false>(src, dst, batch),
+            (3, true) => self.radix3::<true>(src, dst, batch),
+            (4, false) => self.radix4::<false>(src, dst, batch),
+            (4, true) => self.radix4::<true>(src, dst, batch),
+            (5, false) => self.radix5::<false>(src, dst, batch),
+            (5, true) => self.radix5::<true>(src, dst, batch),
+            (_, false) => self.radix_any::<false>(src, dst, batch),
+            (_, true) => self.radix_any::<true>(src, dst, batch),
+        }
+    }
+
+    fn radix2<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+        let (l, m) = (self.l, self.m);
+        let mb = m * batch;
+        let tw = if INV { &self.inv } else { &self.fwd };
+        for j in 0..l {
+            let w = tw[j];
+            let x0 = &src[j * mb..(j + 1) * mb];
+            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
+            let (y0, y1) = dst[2 * j * mb..(2 * j + 2) * mb].split_at_mut(mb);
+            for i in 0..mb {
+                let a = x0[i];
+                let b = x1[i];
+                y0[i] = a + b;
+                y1[i] = (a - b) * w;
+            }
+        }
+    }
+
+    fn radix3<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+        const SQRT3_2: f64 = 0.866_025_403_784_438_6;
+        let (l, m) = (self.l, self.m);
+        let mb = m * batch;
+        let tw = if INV { &self.inv } else { &self.fwd };
+        for j in 0..l {
+            let w1 = tw[2 * j];
+            let w2 = tw[2 * j + 1];
+            let x0 = &src[j * mb..(j + 1) * mb];
+            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
+            let x2 = &src[(j + 2 * l) * mb..(j + 2 * l + 1) * mb];
+            let out = &mut dst[3 * j * mb..(3 * j + 3) * mb];
+            let (y0, rest) = out.split_at_mut(mb);
+            let (y1, y2) = rest.split_at_mut(mb);
+            for i in 0..mb {
+                let a = x0[i];
+                let s = x1[i] + x2[i];
+                let d = (x1[i] - x2[i]).scale(SQRT3_2);
+                let e = a - s.scale(0.5);
+                let di = if INV { d.mul_i() } else { d.mul_neg_i() };
+                y0[i] = a + s;
+                y1[i] = (e + di) * w1;
+                y2[i] = (e - di) * w2;
+            }
+        }
+    }
+
+    fn radix4<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+        let (l, m) = (self.l, self.m);
+        let mb = m * batch;
+        let tw = if INV { &self.inv } else { &self.fwd };
+        for j in 0..l {
+            let w1 = tw[3 * j];
+            let w2 = tw[3 * j + 1];
+            let w3 = tw[3 * j + 2];
+            let x0 = &src[j * mb..(j + 1) * mb];
+            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
+            let x2 = &src[(j + 2 * l) * mb..(j + 2 * l + 1) * mb];
+            let x3 = &src[(j + 3 * l) * mb..(j + 3 * l + 1) * mb];
+            let out = &mut dst[4 * j * mb..(4 * j + 4) * mb];
+            let (y0, rest) = out.split_at_mut(mb);
+            let (y1, rest) = rest.split_at_mut(mb);
+            let (y2, y3) = rest.split_at_mut(mb);
+            for i in 0..mb {
+                let t0 = x0[i] + x2[i];
+                let t2 = x0[i] - x2[i];
+                let t1 = x1[i] + x3[i];
+                let t3 = x1[i] - x3[i];
+                let t3r = if INV { t3.mul_i() } else { t3.mul_neg_i() };
+                y0[i] = t0 + t1;
+                y1[i] = (t2 + t3r) * w1;
+                y2[i] = (t0 - t1) * w2;
+                y3[i] = (t2 - t3r) * w3;
+            }
+        }
+    }
+
+    fn radix5<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+        // cos/sin of 2*pi/5 and 4*pi/5.
+        const C72: f64 = 0.309_016_994_374_947_45;
+        const C144: f64 = -0.809_016_994_374_947_5;
+        const S72: f64 = 0.951_056_516_295_153_5;
+        const S144: f64 = 0.587_785_252_292_473_1;
+        let (l, m) = (self.l, self.m);
+        let mb = m * batch;
+        let tw = if INV { &self.inv } else { &self.fwd };
+        for j in 0..l {
+            let w1 = tw[4 * j];
+            let w2 = tw[4 * j + 1];
+            let w3 = tw[4 * j + 2];
+            let w4 = tw[4 * j + 3];
+            let x0 = &src[j * mb..(j + 1) * mb];
+            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
+            let x2 = &src[(j + 2 * l) * mb..(j + 2 * l + 1) * mb];
+            let x3 = &src[(j + 3 * l) * mb..(j + 3 * l + 1) * mb];
+            let x4 = &src[(j + 4 * l) * mb..(j + 4 * l + 1) * mb];
+            let out = &mut dst[5 * j * mb..(5 * j + 5) * mb];
+            let (y0, rest) = out.split_at_mut(mb);
+            let (y1, rest) = rest.split_at_mut(mb);
+            let (y2, rest) = rest.split_at_mut(mb);
+            let (y3, y4) = rest.split_at_mut(mb);
+            for i in 0..mb {
+                let a = x0[i];
+                let t1 = x1[i] + x4[i];
+                let t2 = x2[i] + x3[i];
+                let t3 = x1[i] - x4[i];
+                let t4 = x2[i] - x3[i];
+                let m1 = a + t1.scale(C72) + t2.scale(C144);
+                let m2 = a + t1.scale(C144) + t2.scale(C72);
+                let v1 = t3.scale(S72) + t4.scale(S144);
+                let v2 = t3.scale(S144) - t4.scale(S72);
+                let iv1 = if INV { v1.mul_i() } else { v1.mul_neg_i() };
+                let iv2 = if INV { v2.mul_i() } else { v2.mul_neg_i() };
+                y0[i] = a + t1 + t2;
+                y1[i] = (m1 + iv1) * w1;
+                y2[i] = (m2 + iv2) * w2;
+                y3[i] = (m2 - iv2) * w3;
+                y4[i] = (m1 - iv1) * w4;
+            }
+        }
+    }
+
+    /// Exact O(n·r) fallback for prime radices > 5.
+    fn radix_any<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+        let (r, l, m) = (self.radix, self.l, self.m);
+        let mb = m * batch;
+        let tw = if INV { &self.inv } else { &self.fwd };
+        let rt = if INV { &self.inv_radix } else { &self.fwd_radix };
+        for j in 0..l {
+            let jb = j * mb;
+            let out = &mut dst[r * j * mb..(r * j + r) * mb];
+            for (u, y) in out.chunks_exact_mut(mb).enumerate() {
+                let row = &rt[u * r..(u + 1) * r];
+                let w = if u == 0 { Cpx::ONE } else { tw[j * (r - 1) + (u - 1)] };
+                for (i, yv) in y.iter_mut().enumerate() {
+                    let mut acc = Cpx::ZERO;
+                    for (s, &c) in row.iter().enumerate() {
+                        acc += src[jb + s * l * mb + i] * c;
+                    }
+                    *yv = acc * w;
+                }
+            }
+        }
+    }
+}
+
+/// Precomputed FFT plan for one transform length.
+///
+/// Immutable after construction (all scratch is caller-owned), hence
+/// `Send + Sync`: one plan is safely shared across environment worker
+/// threads.
+pub struct Plan {
+    n: usize,
+    stages: Vec<Stage>,
+}
+
+// Compile-time proof that plans and scratch can be shared/sent across the
+// env-worker threads (the seed plan's RefCell scratch made Plan !Sync).
+#[allow(dead_code)]
+fn assert_plan_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<Plan>();
+    check::<FftScratch>();
+}
+
 impl Plan {
     /// Build a plan for length `n` (any n >= 1).
     pub fn new(n: usize) -> Plan {
         assert!(n >= 1);
-        let twiddles = (0..n)
-            .map(|k| {
-                let a = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-                Cpx::new(a.cos(), a.sin())
-            })
-            .collect();
-        Plan {
-            n,
-            factors: factorize(n),
-            twiddles,
-            scratch: std::cell::RefCell::new(vec![Cpx::ZERO; n]),
+        let mut stages = Vec::new();
+        let mut l = n;
+        let mut m = 1;
+        for r in factorize(n) {
+            l /= r;
+            stages.push(Stage::new(r, l, m));
+            m *= r;
         }
+        Plan { n, stages }
     }
 
     /// Transform length.
@@ -139,94 +394,188 @@ impl Plan {
         self.n == 1
     }
 
-    /// In-place forward DFT: X[k] = sum_j x[j] e^{-2 pi i jk/n}.
+    /// In-place forward DFT of one line: X[k] = sum_j x[j] e^{-2 pi i jk/n}.
+    ///
+    /// Convenience wrapper that allocates its own scratch; hot paths should
+    /// use [`Plan::forward_batch`] with caller-owned scratch instead.
     pub fn forward(&self, data: &mut [Cpx]) {
-        self.transform(data, false)
+        let mut scratch = vec![Cpx::ZERO; self.n];
+        self.forward_batch(data, 1, &mut scratch);
     }
 
-    /// In-place inverse DFT with 1/n normalization.
+    /// In-place inverse DFT of one line with 1/n normalization
+    /// (allocating convenience wrapper, see [`Plan::forward`]).
     pub fn inverse(&self, data: &mut [Cpx]) {
-        self.transform(data, true);
-        let s = 1.0 / self.n as f64;
-        for x in data.iter_mut() {
-            *x = x.scale(s);
-        }
+        let mut scratch = vec![Cpx::ZERO; self.n];
+        self.inverse_batch(data, 1, &mut scratch);
     }
 
-    fn transform(&self, data: &mut [Cpx], inverse: bool) {
-        assert_eq!(data.len(), self.n);
-        if self.n == 1 {
-            return;
-        }
-        let mut scratch = self.scratch.borrow_mut();
-        scratch.copy_from_slice(data);
-        self.rec(&scratch, 1, data, self.n, 1, 0, inverse);
+    /// Forward-transform `batch` lines at once, zero allocations.
+    ///
+    /// Batched layout: `data[t * batch + b]` holds element `t` of line `b`
+    /// (line index outer, batch index inner/contiguous), `data.len() ==
+    /// n * batch`.  `scratch` must hold at least `n * batch` elements.
+    pub fn forward_batch(&self, data: &mut [Cpx], batch: usize, scratch: &mut [Cpx]) {
+        self.transform_batch(data, batch, scratch, false);
     }
 
-    #[inline]
-    fn tw(&self, idx: usize, inverse: bool) -> Cpx {
-        let t = self.twiddles[idx % self.n];
-        if inverse {
-            t.conj()
-        } else {
-            t
-        }
+    /// Inverse-transform `batch` lines at once (1/n normalization each),
+    /// zero allocations.  Layout as in [`Plan::forward_batch`].
+    pub fn inverse_batch(&self, data: &mut [Cpx], batch: usize, scratch: &mut [Cpx]) {
+        self.transform_batch(data, batch, scratch, true);
     }
 
-    /// Recursive decimation-in-time.  `inp` is strided (`stride`), `out` is
-    /// contiguous of length `n`; `tw_stride = N/n`; `depth` indexes factors.
-    #[allow(clippy::too_many_arguments)]
-    fn rec(
+    fn transform_batch(
         &self,
-        inp: &[Cpx],
-        stride: usize,
-        out: &mut [Cpx],
-        n: usize,
-        tw_stride: usize,
-        depth: usize,
+        data: &mut [Cpx],
+        batch: usize,
+        scratch: &mut [Cpx],
         inverse: bool,
     ) {
-        if n == 1 {
-            out[0] = inp[0];
+        let total = self.n * batch;
+        assert_eq!(data.len(), total, "data is not {} lines of length {}", batch, self.n);
+        assert!(scratch.len() >= total, "scratch too small: {} < {total}", scratch.len());
+        if total == 0 || self.n == 1 {
             return;
         }
-        let r = self.factors[depth];
-        let m = n / r;
-        for l in 0..r {
-            self.rec(
-                &inp[l * stride..],
-                stride * r,
-                &mut out[l * m..(l + 1) * m],
-                m,
-                tw_stride * r,
-                depth + 1,
-                inverse,
-            );
+        let scratch = &mut scratch[..total];
+        // Ping-pong between the two buffers; track which one holds the
+        // newest result so at most one copy-back is ever needed.
+        let mut src: &mut [Cpx] = data;
+        let mut dst: &mut [Cpx] = scratch;
+        let mut in_data = true;
+        for st in &self.stages {
+            st.apply(src, dst, batch, inverse);
+            std::mem::swap(&mut src, &mut dst);
+            in_data = !in_data;
         }
-        // Combine r sub-transforms: butterflies per output column q.
-        // Stack buffer for the common small radices; heap for large primes.
-        let mut tmp_stack = [Cpx::ZERO; 16];
-        let mut tmp_heap;
-        let tmp: &mut [Cpx] = if r <= 16 {
-            &mut tmp_stack[..r]
-        } else {
-            tmp_heap = vec![Cpx::ZERO; r];
-            &mut tmp_heap[..]
-        };
-        for q in 0..m {
-            for (l, t) in tmp.iter_mut().enumerate() {
-                *t = out[l * m + q];
-            }
-            for s in 0..r {
-                let kout = q + s * m;
-                let mut acc = tmp[0];
-                for (l, t) in tmp.iter().enumerate().skip(1) {
-                    acc += self.tw(l * kout * tw_stride, inverse) * *t;
+        if inverse {
+            let s = 1.0 / self.n as f64;
+            if in_data {
+                for v in src.iter_mut() {
+                    *v = v.scale(s);
                 }
-                out[kout] = acc;
+            } else {
+                // Fuse the normalization with the copy back into `data`.
+                for (d, v) in dst.iter_mut().zip(src.iter()) {
+                    *d = v.scale(s);
+                }
+                in_data = true;
             }
+        }
+        if !in_data {
+            dst.copy_from_slice(src);
         }
     }
+}
+
+/// Caller-owned workspace arena for the batched 3-D transforms.
+///
+/// Sized for one `n^3` cube; owned by the solver workspace (one per
+/// environment) so the steady-state step loop performs no heap
+/// allocations.  Fields are public so layers above (`solver::spectral`)
+/// can split-borrow them.
+pub struct FftScratch {
+    /// Stockham ping-pong buffer (`n^3`, the z-pass transforms the whole
+    /// cube as one batch).
+    pub buf: Vec<Cpx>,
+    /// Transpose staging plane for the x-pass (`n^2`).
+    pub plane: Vec<Cpx>,
+    /// Packing buffer for the Hermitian-pair trick in `solver::spectral`.
+    /// Starts empty and is grown to `n^3` on first pair transform, so
+    /// callers that never pair (init, benches, diagnostics) don't pay for
+    /// it; steady-state it is reused without reallocation.
+    pub pair: Vec<Cpx>,
+}
+
+impl FftScratch {
+    /// Allocate scratch for an `n^3` cube.
+    pub fn new(n: usize) -> FftScratch {
+        FftScratch {
+            buf: vec![Cpx::ZERO; n * n * n],
+            plane: vec![Cpx::ZERO; n * n],
+            pair: Vec::new(),
+        }
+    }
+}
+
+/// Blocked (cache-friendly) transpose of an `n x n` plane: `dst[j*n + i] =
+/// src[i*n + j]`.
+fn transpose(src: &[Cpx], dst: &mut [Cpx], n: usize) {
+    const B: usize = 16;
+    debug_assert!(src.len() == n * n && dst.len() == n * n);
+    let mut ib = 0;
+    while ib < n {
+        let imax = (ib + B).min(n);
+        let mut jb = 0;
+        while jb < n {
+            let jmax = (jb + B).min(n);
+            for i in ib..imax {
+                for j in jb..jmax {
+                    dst[j * n + i] = src[i * n + j];
+                }
+            }
+            jb += B;
+        }
+        ib += B;
+    }
+}
+
+/// In-place 3-D FFT over an `n^3` cube (layout `idx = (z*n + y)*n + x`)
+/// using one shared 1-D plan and a caller-owned workspace — the
+/// zero-allocation hot path used by the solver.
+pub fn fft3d_ws(data: &mut [Cpx], plan: &Plan, inverse: bool, ws: &mut FftScratch) {
+    fft3d_with(data, plan, inverse, &mut ws.buf, &mut ws.plane);
+}
+
+/// In-place 3-D FFT with explicitly provided buffers (`buf` >= n^3,
+/// `plane` >= n^2); the engine behind [`fft3d_ws`], exposed so callers
+/// holding a split-borrowed [`FftScratch`] can reach it.
+pub fn fft3d_with(
+    data: &mut [Cpx],
+    plan: &Plan,
+    inverse: bool,
+    buf: &mut [Cpx],
+    plane: &mut [Cpx],
+) {
+    let n = plan.len();
+    let n2 = n * n;
+    assert_eq!(data.len(), n2 * n);
+    assert!(buf.len() >= n2 * n, "buf too small");
+    assert!(plane.len() >= n2, "plane too small");
+    let plane = &mut plane[..n2];
+    let run = |p: &mut [Cpx], batch: usize, buf: &mut [Cpx]| {
+        if inverse {
+            plan.inverse_batch(p, batch, buf);
+        } else {
+            plan.forward_batch(p, batch, buf);
+        }
+    };
+    // x-pass: transpose each z-plane so the x-lines are batch-inner
+    // (batch = n over y), transform, transpose back.
+    for z in 0..n {
+        let p = &mut data[z * n2..(z + 1) * n2];
+        transpose(p, plane, n);
+        run(plane, n, buf);
+        transpose(plane, p, n);
+    }
+    // y-pass: each z-plane already holds y-lines in batched layout
+    // (batch = n over contiguous x) — transform in place.
+    for z in 0..n {
+        run(&mut data[z * n2..(z + 1) * n2], n, buf);
+    }
+    // z-pass: the whole cube is one batched set of z-lines (batch = n^2
+    // over the contiguous (y, x) planes).
+    run(data, n2, buf);
+}
+
+/// In-place 3-D FFT, allocating its own scratch — convenience for tests
+/// and cold paths; hot paths use [`fft3d_ws`].
+pub fn fft3d(data: &mut [Cpx], plan: &Plan, inverse: bool) {
+    let n = plan.len();
+    let mut buf = vec![Cpx::ZERO; n * n * n];
+    let mut plane = vec![Cpx::ZERO; n * n];
+    fft3d_with(data, plan, inverse, &mut buf, &mut plane);
 }
 
 /// Naive O(n^2) DFT used as the correctness oracle in tests.
@@ -245,57 +594,6 @@ pub fn dft_naive(x: &[Cpx], inverse: bool) -> Vec<Cpx> {
     out
 }
 
-// ---------------------------------------------------------------------------
-// 3-D helpers over cube-shaped fields (layout: idx = (z*n + y)*n + x)
-// ---------------------------------------------------------------------------
-
-/// In-place 3-D FFT over an `n^3` cube using one shared 1-D plan.
-pub fn fft3d(data: &mut [Cpx], plan: &Plan, inverse: bool) {
-    let n = plan.len();
-    assert_eq!(data.len(), n * n * n);
-    let mut line = vec![Cpx::ZERO; n];
-    let run = |plan: &Plan, line: &mut [Cpx]| {
-        if inverse {
-            plan.inverse(line);
-        } else {
-            plan.forward(line);
-        }
-    };
-    // x-lines (contiguous)
-    for zy in 0..n * n {
-        let base = zy * n;
-        line.copy_from_slice(&data[base..base + n]);
-        run(plan, &mut line);
-        data[base..base + n].copy_from_slice(&line);
-    }
-    // y-lines (stride n)
-    for z in 0..n {
-        for x in 0..n {
-            let base = z * n * n + x;
-            for (y, l) in line.iter_mut().enumerate() {
-                *l = data[base + y * n];
-            }
-            run(plan, &mut line);
-            for (y, l) in line.iter().enumerate() {
-                data[base + y * n] = *l;
-            }
-        }
-    }
-    // z-lines (stride n^2)
-    for y in 0..n {
-        for x in 0..n {
-            let base = y * n + x;
-            for (z, l) in line.iter_mut().enumerate() {
-                *l = data[base + z * n * n];
-            }
-            run(plan, &mut line);
-            for (z, l) in line.iter().enumerate() {
-                data[base + z * n * n] = *l;
-            }
-        }
-    }
-}
-
 /// Signed integer wavenumber for FFT bin `i` of length `n`
 /// (0, 1, ..., n/2, -(n/2-1), ..., -1).
 #[inline]
@@ -304,6 +602,193 @@ pub fn wavenumber(i: usize, n: usize) -> i64 {
         i as i64
     } else {
         i as i64 - n as i64
+    }
+}
+
+pub mod seed {
+    //! The seed FFT engine, frozen verbatim: a recursive per-line
+    //! Cooley–Tukey with `RefCell` scratch (hence `!Sync`) and per-element
+    //! strided gather/scatter in `fft3d`.  Kept **only** as the baseline
+    //! for the head-to-head comparison in `benches/bench_fft.rs`; new code
+    //! must use the batched engine in the parent module.
+
+    use super::{factorize, Cpx};
+
+    /// Seed plan: recursive engine + interior scratch (the design the
+    /// batched engine replaces).
+    pub struct Plan {
+        n: usize,
+        factors: Vec<usize>,
+        /// exp(-2*pi*i*k/n) for k in 0..n (forward sign convention).
+        twiddles: Vec<Cpx>,
+        /// Reused scratch for out-of-place recursion (makes Plan !Sync).
+        scratch: std::cell::RefCell<Vec<Cpx>>,
+    }
+
+    impl Plan {
+        /// Build a plan for length `n` (any n >= 1).
+        pub fn new(n: usize) -> Plan {
+            assert!(n >= 1);
+            let twiddles = (0..n)
+                .map(|k| {
+                    let a = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                    Cpx::new(a.cos(), a.sin())
+                })
+                .collect();
+            Plan {
+                n,
+                factors: factorize(n),
+                twiddles,
+                scratch: std::cell::RefCell::new(vec![Cpx::ZERO; n]),
+            }
+        }
+
+        /// Transform length.
+        pub fn len(&self) -> usize {
+            self.n
+        }
+
+        /// Whether this plan is for length 1 (identity).
+        pub fn is_empty(&self) -> bool {
+            self.n == 1
+        }
+
+        /// In-place forward DFT.
+        pub fn forward(&self, data: &mut [Cpx]) {
+            self.transform(data, false)
+        }
+
+        /// In-place inverse DFT with 1/n normalization.
+        pub fn inverse(&self, data: &mut [Cpx]) {
+            self.transform(data, true);
+            let s = 1.0 / self.n as f64;
+            for x in data.iter_mut() {
+                *x = x.scale(s);
+            }
+        }
+
+        fn transform(&self, data: &mut [Cpx], inverse: bool) {
+            assert_eq!(data.len(), self.n);
+            if self.n == 1 {
+                return;
+            }
+            let mut scratch = self.scratch.borrow_mut();
+            scratch.copy_from_slice(data);
+            self.rec(&scratch, 1, data, self.n, 1, 0, inverse);
+        }
+
+        #[inline]
+        fn tw(&self, idx: usize, inverse: bool) -> Cpx {
+            let t = self.twiddles[idx % self.n];
+            if inverse {
+                t.conj()
+            } else {
+                t
+            }
+        }
+
+        /// Recursive decimation-in-time.  `inp` is strided (`stride`),
+        /// `out` is contiguous of length `n`; `tw_stride = N/n`; `depth`
+        /// indexes factors.
+        #[allow(clippy::too_many_arguments)]
+        fn rec(
+            &self,
+            inp: &[Cpx],
+            stride: usize,
+            out: &mut [Cpx],
+            n: usize,
+            tw_stride: usize,
+            depth: usize,
+            inverse: bool,
+        ) {
+            if n == 1 {
+                out[0] = inp[0];
+                return;
+            }
+            let r = self.factors[depth];
+            let m = n / r;
+            for l in 0..r {
+                self.rec(
+                    &inp[l * stride..],
+                    stride * r,
+                    &mut out[l * m..(l + 1) * m],
+                    m,
+                    tw_stride * r,
+                    depth + 1,
+                    inverse,
+                );
+            }
+            // Combine r sub-transforms: butterflies per output column q.
+            let mut tmp_stack = [Cpx::ZERO; 16];
+            let mut tmp_heap;
+            let tmp: &mut [Cpx] = if r <= 16 {
+                &mut tmp_stack[..r]
+            } else {
+                tmp_heap = vec![Cpx::ZERO; r];
+                &mut tmp_heap[..]
+            };
+            for q in 0..m {
+                for (l, t) in tmp.iter_mut().enumerate() {
+                    *t = out[l * m + q];
+                }
+                for s in 0..r {
+                    let kout = q + s * m;
+                    let mut acc = tmp[0];
+                    for (l, t) in tmp.iter().enumerate().skip(1) {
+                        acc += self.tw(l * kout * tw_stride, inverse) * *t;
+                    }
+                    out[kout] = acc;
+                }
+            }
+        }
+    }
+
+    /// Seed 3-D FFT: one line at a time, element-wise gather/scatter for
+    /// the strided y/z passes.
+    pub fn fft3d(data: &mut [Cpx], plan: &Plan, inverse: bool) {
+        let n = plan.len();
+        assert_eq!(data.len(), n * n * n);
+        let mut line = vec![Cpx::ZERO; n];
+        let run = |plan: &Plan, line: &mut [Cpx]| {
+            if inverse {
+                plan.inverse(line);
+            } else {
+                plan.forward(line);
+            }
+        };
+        // x-lines (contiguous)
+        for zy in 0..n * n {
+            let base = zy * n;
+            line.copy_from_slice(&data[base..base + n]);
+            run(plan, &mut line);
+            data[base..base + n].copy_from_slice(&line);
+        }
+        // y-lines (stride n)
+        for z in 0..n {
+            for x in 0..n {
+                let base = z * n * n + x;
+                for (y, l) in line.iter_mut().enumerate() {
+                    *l = data[base + y * n];
+                }
+                run(plan, &mut line);
+                for (y, l) in line.iter().enumerate() {
+                    data[base + y * n] = *l;
+                }
+            }
+        }
+        // z-lines (stride n^2)
+        for y in 0..n {
+            for x in 0..n {
+                let base = y * n + x;
+                for (z, l) in line.iter_mut().enumerate() {
+                    *l = data[base + z * n * n];
+                }
+                run(plan, &mut line);
+                for (z, l) in line.iter().enumerate() {
+                    data[base + z * n * n] = *l;
+                }
+            }
+        }
     }
 }
 
@@ -327,6 +812,11 @@ mod tests {
         }
     }
 
+    /// Gather line `b` out of the batched `[t][b]` layout.
+    fn extract_line(data: &[Cpx], n: usize, batch: usize, b: usize) -> Vec<Cpx> {
+        (0..n).map(|t| data[t * batch + b]).collect()
+    }
+
     #[test]
     fn matches_naive_dft_for_solver_sizes() {
         for n in [1usize, 2, 3, 4, 5, 6, 8, 12, 16, 20, 24, 30, 32, 48, 64, 96] {
@@ -341,12 +831,119 @@ mod tests {
 
     #[test]
     fn matches_naive_dft_prime_lengths() {
-        for n in [7usize, 11, 13, 17] {
+        for n in [7usize, 11, 13, 17, 31] {
             let plan = Plan::new(n);
             let x = rand_signal(n, 100 + n as u64);
             let mut got = x.clone();
             plan.forward(&mut got);
             assert_close(&got, &dft_naive(&x, false), 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn batched_matches_naive_paper_sizes() {
+        // Paper-relevant sizes at batch 1 and 7; each line checked
+        // independently against the O(n^2) oracle.
+        for n in [24usize, 32, 48, 64, 96] {
+            for batch in [1usize, 7] {
+                let plan = Plan::new(n);
+                let mut data = rand_signal(n * batch, (n * 1000 + batch) as u64);
+                let orig = data.clone();
+                let mut scratch = vec![Cpx::ZERO; n * batch];
+                plan.forward_batch(&mut data, batch, &mut scratch);
+                for b in 0..batch {
+                    let line = extract_line(&orig, n, batch, b);
+                    let want = dft_naive(&line, false);
+                    let got = extract_line(&data, n, batch, b);
+                    assert_close(&got, &want, 1e-9 * n as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_naive_generic_radix() {
+        // Prime length exercises the generic-radix fallback stage.
+        for (n, batch) in [(31usize, 1usize), (31, 7), (35, 4)] {
+            let plan = Plan::new(n);
+            let mut data = rand_signal(n * batch, (n + batch) as u64);
+            let orig = data.clone();
+            let mut scratch = vec![Cpx::ZERO; n * batch];
+            plan.forward_batch(&mut data, batch, &mut scratch);
+            for b in 0..batch {
+                let want = dft_naive(&extract_line(&orig, n, batch, b), false);
+                assert_close(&extract_line(&data, n, batch, b), &want, 1e-9 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_full_plane_batch() {
+        // batch = n^2 is exactly the z-pass of fft3d: every line must
+        // still match the oracle.
+        let n = 24;
+        let batch = n * n;
+        let plan = Plan::new(n);
+        let mut data = rand_signal(n * batch, 77);
+        let orig = data.clone();
+        let mut scratch = vec![Cpx::ZERO; n * batch];
+        plan.forward_batch(&mut data, batch, &mut scratch);
+        for b in [0usize, 1, 17, batch / 2, batch - 1] {
+            let want = dft_naive(&extract_line(&orig, n, batch, b), false);
+            assert_close(&extract_line(&data, n, batch, b), &want, 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn batched_roundtrip_property() {
+        // forward_batch . inverse_batch == identity across radix mixes
+        // (including prime and prime-power lengths) and batch sizes.
+        for n in [24usize, 31, 35, 48, 49, 96] {
+            for batch in [1usize, 7] {
+                let plan = Plan::new(n);
+                let orig = rand_signal(n * batch, (3 * n + batch) as u64);
+                let mut data = orig.clone();
+                let mut scratch = vec![Cpx::ZERO; n * batch];
+                plan.forward_batch(&mut data, batch, &mut scratch);
+                plan.inverse_batch(&mut data, batch, &mut scratch);
+                assert_close(&data, &orig, 1e-10 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_agrees_with_per_line() {
+        // The batched engine and the single-line convenience API are the
+        // same transform.
+        let (n, batch) = (48usize, 7usize);
+        let plan = Plan::new(n);
+        let mut data = rand_signal(n * batch, 11);
+        let orig = data.clone();
+        let mut scratch = vec![Cpx::ZERO; n * batch];
+        plan.forward_batch(&mut data, batch, &mut scratch);
+        for b in 0..batch {
+            let mut line = extract_line(&orig, n, batch, b);
+            plan.forward(&mut line);
+            assert_close(&extract_line(&data, n, batch, b), &line, 1e-10 * n as f64);
+        }
+    }
+
+    #[test]
+    fn batched_3d_matches_seed_engine() {
+        // The frozen seed engine is the head-to-head bench baseline; the
+        // two engines must compute the same transform, both directions.
+        for n in [12usize, 24] {
+            let plan = Plan::new(n);
+            let seed_plan = seed::Plan::new(n);
+            let mut ws = FftScratch::new(n);
+            for inverse in [false, true] {
+                let orig = rand_signal(n * n * n, n as u64 + inverse as u64);
+                let mut a = orig.clone();
+                let mut b = orig.clone();
+                fft3d_ws(&mut a, &plan, inverse, &mut ws);
+                seed::fft3d(&mut b, &seed_plan, inverse);
+                assert_close(&a, &b, 1e-8 * (n * n * n) as f64);
+            }
         }
     }
 
@@ -420,14 +1017,47 @@ mod tests {
             }
         }
         let orig = data.clone();
-        fft3d(&mut data, &plan, false);
+        let mut ws = FftScratch::new(n);
+        fft3d_ws(&mut data, &plan, false, &mut ws);
         // Expect peak at (x=2, y=1, z=3) with magnitude n^3.
         let idx = (3 * n + 1) * n + 2;
         assert!((data[idx].re - (n * n * n) as f64).abs() < 1e-6);
         let total: f64 = data.iter().map(|c| c.norm_sq()).sum();
         assert!((total - ((n * n * n) as f64).powi(2)).abs() < 1e-4 * total);
-        fft3d(&mut data, &plan, true);
+        fft3d_ws(&mut data, &plan, true, &mut ws);
         assert_close(&data, &orig, 1e-9);
+    }
+
+    #[test]
+    fn fft3d_alloc_wrapper_matches_ws() {
+        let n = 8;
+        let plan = Plan::new(n);
+        let orig = rand_signal(n * n * n, 5);
+        let mut a = orig.clone();
+        let mut b = orig;
+        let mut ws = FftScratch::new(n);
+        fft3d(&mut a, &plan, false);
+        fft3d_ws(&mut b, &plan, false, &mut ws);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let n = 20; // not a multiple of the blocking factor
+        let src = rand_signal(n * n, 3);
+        let mut t = vec![Cpx::ZERO; n * n];
+        let mut back = vec![Cpx::ZERO; n * n];
+        transpose(&src, &mut t, n);
+        assert_eq!(t[3 * n + 5], src[5 * n + 3]);
+        transpose(&t, &mut back, n);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn plan_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Plan>();
+        check::<FftScratch>();
     }
 
     #[test]

@@ -11,8 +11,8 @@ use super::reward::reward_from_error;
 use crate::config::{CaseConfig, SolverConfig};
 use crate::solver::dns::{unpack_state, Truth};
 use crate::solver::forcing::LinearForcing;
-use crate::solver::spectrum::spectrum_error;
-use crate::solver::Solver;
+use crate::solver::spectrum::{energy_spectrum_into, spectrum_error};
+use crate::solver::{Grid, Solver};
 use crate::util::Rng;
 use anyhow::Result;
 use std::sync::Arc;
@@ -40,23 +40,40 @@ pub struct LesEnv {
     forcing_tau: f64,
     /// Actions taken in the current episode.
     pub step_idx: usize,
+    /// Reused spectrum bins for the per-step reward (no per-step alloc).
+    spec: Vec<f64>,
 }
 
 impl LesEnv {
-    /// Build an environment for a Table-1 case.
+    /// Build an environment for a Table-1 case (private grid).
     pub fn new(case: &CaseConfig, scfg: &SolverConfig, truth: Arc<Truth>) -> Result<LesEnv> {
+        let grid = Arc::new(Grid::new(case.points_per_dir()));
+        LesEnv::with_grid(case, scfg, truth, grid)
+    }
+
+    /// Build an environment on a shared grid: the env pool constructs one
+    /// `Arc<Grid>` per case so all workers reuse one FFT plan
+    /// (`fft::Plan` is `Send + Sync`; twiddle tables are built once).
+    pub fn with_grid(
+        case: &CaseConfig,
+        scfg: &SolverConfig,
+        truth: Arc<Truth>,
+        grid: Arc<Grid>,
+    ) -> Result<LesEnv> {
         anyhow::ensure!(
             truth.n_les == case.points_per_dir(),
             "truth built for n={}, case needs n={}",
             truth.n_les,
             case.points_per_dir()
         );
-        let solver = Solver::new(
-            case.points_per_dir(),
-            case.elems_per_dir,
-            scfg.nu,
-            scfg.cfl,
+        anyhow::ensure!(
+            grid.n == case.points_per_dir(),
+            "shared grid has n={}, case needs n={}",
+            grid.n,
+            case.points_per_dir()
         );
+        let solver = Solver::with_grid(grid, case.elems_per_dir, scfg.nu, scfg.cfl);
+        let nbins = solver.grid.k_nyquist() + 1;
         Ok(LesEnv {
             solver,
             truth,
@@ -67,6 +84,7 @@ impl LesEnv {
             ke_target: scfg.ke_target,
             forcing_tau: scfg.forcing_tau,
             step_idx: 0,
+            spec: vec![0.0; nbins],
         })
     }
 
@@ -102,8 +120,8 @@ impl LesEnv {
         self.solver.set_cs(cs);
         self.solver.advance(self.dt_rl);
         self.step_idx += 1;
-        let spec = self.solver.spectrum();
-        let spec_error = spectrum_error(&self.truth.mean_spectrum, &spec, self.k_max);
+        energy_spectrum_into(&self.solver.grid, &self.solver.uhat, &mut self.spec);
+        let spec_error = spectrum_error(&self.truth.mean_spectrum, &self.spec, self.k_max);
         StepOut {
             spec_error,
             reward: reward_from_error(spec_error, self.alpha),

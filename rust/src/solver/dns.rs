@@ -137,12 +137,14 @@ pub fn generate(p: &TruthParams, mut progress: impl FnMut(usize, usize)) -> Trut
     let mut minb = vec![f64::INFINITY; nbins];
     let mut maxb = vec![f64::NEG_INFINITY; nbins];
     let mut states = Vec::new();
+    // Reused spectrum buffer (zero-allocation sampling loop).
+    let mut spec_dns = vec![0.0; dns.grid.k_nyquist() + 1];
 
     let total = p.n_states + 1; // +1 for the held-out test state
     for s in 0..total {
         dns.advance(p.sample_interval);
         // DNS spectrum restricted to LES bins.
-        let spec_dns = dns.spectrum();
+        super::spectrum::energy_spectrum_into(&dns.grid, &dns.uhat, &mut spec_dns);
         for k in 0..nbins {
             let e = spec_dns[k.min(spec_dns.len() - 1)];
             mean[k] += e / total as f64;

@@ -1,9 +1,11 @@
 //! Spectral grid for the triply periodic `[0, 2*pi)^3` HIT domain.
 //!
 //! Precomputes the signed wavenumber tables, |k|^2, the 2/3-rule dealiasing
-//! mask and the shared FFT plan for one resolution.
+//! mask and the shared FFT plan for one resolution.  The grid is immutable
+//! after construction and `Send + Sync` (the plan keeps no interior
+//! scratch), so one `Arc<Grid>` is shared by all env worker threads.
 
-use crate::fft::{wavenumber, Cpx, Plan};
+use crate::fft::{wavenumber, Cpx, FftScratch, Plan};
 
 /// Cubic spectral grid of `n^3` points on `[0, 2*pi)^3`.
 pub struct Grid {
@@ -101,6 +103,11 @@ impl Grid {
         vec![Cpx::ZERO; self.len()]
     }
 
+    /// Allocate an FFT workspace sized for this grid.
+    pub fn make_scratch(&self) -> FftScratch {
+        FftScratch::new(self.n)
+    }
+
     /// Apply the 2/3-rule mask in place.
     pub fn dealias(&self, f: &mut [Cpx]) {
         debug_assert_eq!(f.len(), self.len());
@@ -148,6 +155,14 @@ mod tests {
         g.dealias(&mut f);
         assert_eq!(f[g.idx(9, 0, 0)], Cpx::ZERO);
         assert_eq!(f[g.idx(2, 2, 2)], Cpx::new(1.0, 0.0));
+    }
+
+    #[test]
+    fn grid_is_send_sync() {
+        // One Arc<Grid> (and its embedded Plan) is shared across env
+        // worker threads; this must never regress.
+        fn check<T: Send + Sync>() {}
+        check::<Grid>();
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use super::grid::Grid;
 use super::spectral::{project, to_spectral, SpecVec};
 use super::spectrum::energy_spectrum;
-use crate::fft::Cpx;
+use crate::fft::{Cpx, FftScratch};
 use crate::util::Rng;
 
 /// Model spectrum E(k) ~ (k/k0)^4 exp(-2 (k/k0)^2) — the standard
@@ -24,11 +24,12 @@ pub fn model_spectrum(k: f64, k0: f64) -> f64 {
 pub fn random_solenoidal(grid: &Grid, ke_target: f64, k0: f64, rng: &mut Rng) -> SpecVec {
     let mut u: SpecVec = [grid.zeros(), grid.zeros(), grid.zeros()];
     let mut phys = grid.zeros();
+    let mut ws = FftScratch::new(grid.n);
     for c in u.iter_mut() {
         for p in phys.iter_mut() {
             *p = Cpx::new(rng.normal(), 0.0);
         }
-        to_spectral(grid, &phys, c);
+        to_spectral(grid, &phys, c, &mut ws);
     }
     project(grid, &mut u);
     for c in u.iter_mut() {
@@ -93,8 +94,9 @@ pub fn taylor_green(grid: &Grid) -> SpecVec {
             }
         }
     }
-    to_spectral(grid, &phys_x, &mut ux);
-    to_spectral(grid, &phys_y, &mut uy);
+    let mut ws = FftScratch::new(grid.n);
+    to_spectral(grid, &phys_x, &mut ux, &mut ws);
+    to_spectral(grid, &phys_y, &mut uy, &mut ws);
     [ux, uy, grid.zeros()]
 }
 
@@ -136,7 +138,8 @@ mod tests {
         let mut rng = Rng::new(13);
         let u = random_solenoidal(&grid, 1.0, 3.0, &mut rng);
         let mut phys = grid.zeros();
-        super::super::spectral::to_physical(&grid, &u[0], &mut phys);
+        let mut ws = grid.make_scratch();
+        super::super::spectral::to_physical(&grid, &u[0], &mut phys, &mut ws);
         let max_imag = phys.iter().map(|c| c.im.abs()).fold(0.0, f64::max);
         let max_real = phys.iter().map(|c| c.re.abs()).fold(0.0, f64::max);
         assert!(max_imag < 1e-10 * max_real.max(1.0), "imag leak {max_imag}");

@@ -1,8 +1,12 @@
 //! Spectral-space operators: derivatives, curl, divergence-free projection,
 //! and physical<->spectral conversions for vector fields.
+//!
+//! All transforms route through a caller-owned [`FftScratch`] so the solver
+//! step loop performs no heap allocations (the workspace is held by
+//! `Solver`); only explicitly documented cold paths allocate.
 
 use super::grid::Grid;
-use crate::fft::{fft3d, Cpx};
+use crate::fft::{fft3d_with, fft3d_ws, Cpx, FftScratch};
 
 /// A velocity field in spectral space: three complex components.
 pub type SpecVec = [Vec<Cpx>; 3];
@@ -66,31 +70,41 @@ pub fn project(grid: &Grid, u: &mut SpecVec) {
 }
 
 /// Spectral -> physical for one component (in-place on a copy).
-pub fn to_physical(grid: &Grid, fhat: &[Cpx], out: &mut [Cpx]) {
+pub fn to_physical(grid: &Grid, fhat: &[Cpx], out: &mut [Cpx], ws: &mut FftScratch) {
     out.copy_from_slice(fhat);
-    fft3d(out, &grid.plan, true);
+    fft3d_ws(out, &grid.plan, true, ws);
+}
+
+/// Physical -> spectral for one component.
+pub fn to_spectral(grid: &Grid, f: &[Cpx], out: &mut [Cpx], ws: &mut FftScratch) {
+    out.copy_from_slice(f);
+    fft3d_ws(out, &grid.plan, false, ws);
 }
 
 /// Inverse-transform TWO spectral fields of real physical signals with a
 /// single complex FFT (the classic Hermitian pairing; §Perf-L3): since
 /// ifft(a) is real and ifft(b) is real, `ifft(a + i b) = ifft(a) +
 /// i*ifft(b)` — the real/imag parts of one inverse transform.
-/// Outputs have zero imaginary parts.
+/// Outputs have zero imaginary parts.  Packing goes through `ws.pair`.
 pub fn ifft_pair(
     grid: &Grid,
     ahat: &[Cpx],
     bhat: &[Cpx],
-    scratch: &mut [Cpx],
+    ws: &mut FftScratch,
     out_a: &mut [Cpx],
     out_b: &mut [Cpx],
 ) {
-    for i in 0..grid.len() {
-        scratch[i] = ahat[i] + bhat[i].mul_i();
+    let FftScratch { buf, plane, pair } = ws;
+    if pair.len() < grid.len() {
+        pair.resize(grid.len(), Cpx::ZERO);
     }
-    fft3d(scratch, &grid.plan, true);
     for i in 0..grid.len() {
-        out_a[i] = Cpx::new(scratch[i].re, 0.0);
-        out_b[i] = Cpx::new(scratch[i].im, 0.0);
+        pair[i] = ahat[i] + bhat[i].mul_i();
+    }
+    fft3d_with(&mut pair[..grid.len()], &grid.plan, true, buf, plane);
+    for i in 0..grid.len() {
+        out_a[i] = Cpx::new(pair[i].re, 0.0);
+        out_b[i] = Cpx::new(pair[i].im, 0.0);
     }
 }
 
@@ -98,23 +112,21 @@ pub fn ifft_pair(
 /// with a single complex FFT, splitting the Hermitian-symmetric result:
 /// `ahat(k) = (H(k) + conj(H(-k)))/2`, `bhat(k) = -i (H(k) - conj(H(-k)))/2`.
 /// In-place: `a` and `b` are replaced by their transforms.
-pub fn fft_pair_real(grid: &Grid, scratch: &mut [Cpx], a: &mut [Cpx], b: &mut [Cpx]) {
-    for i in 0..grid.len() {
-        scratch[i] = Cpx::new(a[i].re, b[i].re);
+pub fn fft_pair_real(grid: &Grid, ws: &mut FftScratch, a: &mut [Cpx], b: &mut [Cpx]) {
+    let FftScratch { buf, plane, pair } = ws;
+    if pair.len() < grid.len() {
+        pair.resize(grid.len(), Cpx::ZERO);
     }
-    fft3d(scratch, &grid.plan, false);
     for i in 0..grid.len() {
-        let h = scratch[i];
-        let hn = scratch[grid.neg_index[i] as usize].conj();
+        pair[i] = Cpx::new(a[i].re, b[i].re);
+    }
+    fft3d_with(&mut pair[..grid.len()], &grid.plan, false, buf, plane);
+    for i in 0..grid.len() {
+        let h = pair[i];
+        let hn = pair[grid.neg_index[i] as usize].conj();
         a[i] = (h + hn).scale(0.5);
         b[i] = (h - hn).scale(0.5).mul_i().scale(-1.0);
     }
-}
-
-/// Physical -> spectral for one component.
-pub fn to_spectral(grid: &Grid, f: &[Cpx], out: &mut [Cpx]) {
-    out.copy_from_slice(f);
-    fft3d(out, &grid.plan, false);
 }
 
 /// Volume-mean kinetic energy `0.5 <|u|^2>` from the spectral state.
@@ -130,20 +142,33 @@ pub fn kinetic_energy(grid: &Grid, u: &SpecVec) -> f64 {
     0.5 * sum / (n3 * n3)
 }
 
-/// Max pointwise |u| in physical space (for the CFL timestep).
-pub fn max_velocity(grid: &Grid, u: &SpecVec) -> f64 {
-    let mut bufs = [grid.zeros(), grid.zeros(), grid.zeros()];
-    for (c, buf) in u.iter().zip(bufs.iter_mut()) {
-        to_physical(grid, c, buf);
+/// Max pointwise |u| in physical space (for the CFL timestep), through
+/// caller-owned scratch: `phys` receives the physical-space velocity.
+pub fn max_velocity_ws(
+    grid: &Grid,
+    u: &SpecVec,
+    ws: &mut FftScratch,
+    phys: &mut SpecVec,
+) -> f64 {
+    for (c, buf) in u.iter().zip(phys.iter_mut()) {
+        to_physical(grid, c, buf, ws);
     }
     let mut vmax: f64 = 0.0;
     for i in 0..grid.len() {
-        let v2 = bufs[0][i].re * bufs[0][i].re
-            + bufs[1][i].re * bufs[1][i].re
-            + bufs[2][i].re * bufs[2][i].re;
+        let v2 = phys[0][i].re * phys[0][i].re
+            + phys[1][i].re * phys[1][i].re
+            + phys[2][i].re * phys[2][i].re;
         vmax = vmax.max(v2);
     }
     vmax.sqrt()
+}
+
+/// Allocating convenience wrapper around [`max_velocity_ws`] (tests and
+/// one-off diagnostics; the solver uses its workspace).
+pub fn max_velocity(grid: &Grid, u: &SpecVec) -> f64 {
+    let mut ws = FftScratch::new(grid.n);
+    let mut phys = zeros_vec(grid);
+    max_velocity_ws(grid, u, &mut ws, &mut phys)
 }
 
 #[cfg(test)]
@@ -164,11 +189,12 @@ mod tests {
     #[test]
     fn curl_of_shear_is_cos() {
         let grid = Grid::new(16);
+        let mut ws = FftScratch::new(grid.n);
         let u = single_mode_field(&grid);
         let mut w = zeros_vec(&grid);
         curl(&grid, &u, &mut w);
         let mut wy = grid.zeros();
-        to_physical(&grid, &w[1], &mut wy);
+        to_physical(&grid, &w[1], &mut wy, &mut ws);
         for z in 0..grid.n {
             let want = (z as f64 * grid.dx()).cos();
             let got = wy[grid.idx(3, 5, z)].re;
@@ -233,6 +259,7 @@ mod tests {
     #[test]
     fn paired_transforms_match_singles() {
         let grid = Grid::new(12);
+        let mut ws = FftScratch::new(grid.n);
         let mut rng = crate::util::Rng::new(21);
         // Two random REAL physical fields.
         let mut a = grid.zeros();
@@ -244,13 +271,12 @@ mod tests {
         // Reference forward transforms.
         let mut ar = grid.zeros();
         let mut br = grid.zeros();
-        to_spectral(&grid, &a, &mut ar);
-        to_spectral(&grid, &b, &mut br);
+        to_spectral(&grid, &a, &mut ar, &mut ws);
+        to_spectral(&grid, &b, &mut br, &mut ws);
         // Paired forward.
-        let mut scratch = grid.zeros();
         let mut ap = a.clone();
         let mut bp = b.clone();
-        fft_pair_real(&grid, &mut scratch, &mut ap, &mut bp);
+        fft_pair_real(&grid, &mut ws, &mut ap, &mut bp);
         for i in 0..grid.len() {
             assert!((ap[i] - ar[i]).norm_sq().sqrt() < 1e-9, "ahat[{i}]");
             assert!((bp[i] - br[i]).norm_sq().sqrt() < 1e-9, "bhat[{i}]");
@@ -258,7 +284,7 @@ mod tests {
         // Paired inverse round-trips to the original real fields.
         let mut ia = grid.zeros();
         let mut ib = grid.zeros();
-        ifft_pair(&grid, &ap, &bp, &mut scratch, &mut ia, &mut ib);
+        ifft_pair(&grid, &ap, &bp, &mut ws, &mut ia, &mut ib);
         for i in 0..grid.len() {
             assert!((ia[i].re - a[i].re).abs() < 1e-9);
             assert!((ib[i].re - b[i].re).abs() < 1e-9);
@@ -268,13 +294,48 @@ mod tests {
     }
 
     #[test]
+    fn ifft_pair_matches_single_inverse_transforms() {
+        // Hermitian-pairing equivalence on random real fields: ifft_pair
+        // must reproduce two independent single inverse transforms.
+        let grid = Grid::new(16);
+        let mut ws = FftScratch::new(grid.n);
+        let mut rng = crate::util::Rng::new(33);
+        // Spectra of real fields: start from random REAL physical fields
+        // and forward-transform them so a/b have Hermitian symmetry.
+        let mut a = grid.zeros();
+        let mut b = grid.zeros();
+        for i in 0..grid.len() {
+            a[i] = Cpx::new(rng.normal(), 0.0);
+            b[i] = Cpx::new(rng.normal(), 0.0);
+        }
+        let mut ahat = grid.zeros();
+        let mut bhat = grid.zeros();
+        to_spectral(&grid, &a, &mut ahat, &mut ws);
+        to_spectral(&grid, &b, &mut bhat, &mut ws);
+        // Singles.
+        let mut sa = grid.zeros();
+        let mut sb = grid.zeros();
+        to_physical(&grid, &ahat, &mut sa, &mut ws);
+        to_physical(&grid, &bhat, &mut sb, &mut ws);
+        // Paired.
+        let mut pa = grid.zeros();
+        let mut pb = grid.zeros();
+        ifft_pair(&grid, &ahat, &bhat, &mut ws, &mut pa, &mut pb);
+        for i in 0..grid.len() {
+            assert!((pa[i].re - sa[i].re).abs() < 1e-9, "a[{i}]");
+            assert!((pb[i].re - sb[i].re).abs() < 1e-9, "b[{i}]");
+        }
+    }
+
+    #[test]
     fn derivative_of_mode() {
         let grid = Grid::new(16);
+        let mut ws = FftScratch::new(grid.n);
         let u = single_mode_field(&grid);
         let mut d = grid.zeros();
         derivative(&grid, &u[0], 2, &mut d);
         let mut phys = grid.zeros();
-        to_physical(&grid, &d, &mut phys);
+        to_physical(&grid, &d, &mut phys, &mut ws);
         // d/dz sin z = cos z
         for z in 0..grid.n {
             let want = (z as f64 * grid.dx()).cos();

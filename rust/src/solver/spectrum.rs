@@ -7,10 +7,19 @@ use super::spectral::SpecVec;
 /// Shell-binned energy spectrum.  Bin `k` collects modes with
 /// `round(|k_vec|) == k`; the sum over bins equals the mean kinetic energy.
 pub fn energy_spectrum(grid: &Grid, u: &SpecVec) -> Vec<f64> {
+    let mut spec = vec![0.0; grid.k_nyquist() + 1];
+    energy_spectrum_into(grid, u, &mut spec);
+    spec
+}
+
+/// Zero-allocation variant of [`energy_spectrum`]: accumulates into a
+/// caller-owned buffer of `grid.k_nyquist() + 1` bins (reward hot path).
+pub fn energy_spectrum_into(grid: &Grid, u: &SpecVec, spec: &mut [f64]) {
     let nbins = grid.k_nyquist() + 1;
+    assert_eq!(spec.len(), nbins, "spectrum buffer has wrong bin count");
     let n3 = grid.len() as f64;
     let norm = 1.0 / (n3 * n3);
-    let mut spec = vec![0.0; nbins];
+    spec.fill(0.0);
     for i in 0..grid.len() {
         let kmag = grid.k_sq(i).sqrt();
         let bin = kmag.round() as usize;
@@ -20,7 +29,6 @@ pub fn energy_spectrum(grid: &Grid, u: &SpecVec) -> Vec<f64> {
         let e = 0.5 * (u[0][i].norm_sq() + u[1][i].norm_sq() + u[2][i].norm_sq());
         spec[bin] += e * norm;
     }
-    spec
 }
 
 /// Mean relative squared spectrum error, Eq. (4):

@@ -107,6 +107,43 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Write every measurement as machine-readable JSON (`BENCH_*.json`)
+    /// so successive PRs can track the perf trajectory.  Hand-rolled
+    /// serialization — no serde in the image.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str("  \"results\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
+                 \"std_s\": {:e}, \"median_s\": {:e}, \"min_s\": {:e}}}{}\n",
+                json_escape(&m.label),
+                m.iters,
+                m.mean_s,
+                m.std_s,
+                m.median_s,
+                m.min_s,
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path.as_ref(), s)
+    }
+}
+
+/// Minimal JSON string escaping for bench labels.
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
 }
 
 /// Human-friendly duration formatting.
@@ -207,6 +244,24 @@ mod tests {
         assert!(r.contains("| a | bb |"));
         assert!(r.contains("| 1 | 2  |"));
         assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn write_json_emits_all_measurements() {
+        let mut b = Bench::new("jsontest")
+            .with_warmup(Duration::from_millis(1))
+            .with_target(Duration::from_millis(5));
+        b.run("case \"a\"", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let dir = std::env::temp_dir().join("relexi_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        b.write_json(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"bench\": \"jsontest\""));
+        assert!(s.contains("case \\\"a\\\""));
+        assert!(s.contains("\"mean_s\""));
     }
 
     #[test]

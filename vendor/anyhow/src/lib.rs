@@ -1,0 +1,200 @@
+//! Offline stand-in for the `anyhow` crate, implementing exactly the
+//! subset relexi uses: `Error`, `Result`, the `Context` extension trait
+//! (on `Result` and `Option`), and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  The build image ships no crates.io registry, so this lives in
+//! `vendor/` as a path dependency.
+//!
+//! Semantics follow the real crate where it matters to relexi:
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole cause chain joined by `": "` (used by `main.rs`).
+//! * Any `E: std::error::Error + Send + Sync + 'static` converts via `?`;
+//!   the source chain is captured as messages.
+//! * `Error` deliberately does NOT implement `std::error::Error`, exactly
+//!   like the real crate, so the blanket `From` impl stays coherent.
+
+use std::fmt;
+
+/// Error: an outermost message plus the flattened cause chain.
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context(...)` does).
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` with the customary default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: Result<()> = Err(io_err()).context("outer");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing");
+        assert_eq!(format!("{}", r.unwrap_err()), "missing");
+        let r: Result<i32> = Some(3).context("missing");
+        assert_eq!(r.unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
