@@ -50,9 +50,11 @@ fn run_traffic(orch: &Arc<Orchestrator>, n_envs: usize, state_len: usize, rounds
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     // 24-DOF state tensor: 13,824 DOF x 3 components.
-    let state_len = 13_824 * 3;
-    let rounds = 20;
+    let state_len = if smoke { 4096 } else { 13_824 * 3 };
+    let rounds = if smoke { 3 } else { 20 };
+    let env_counts: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 64] };
 
     let mut table = Table::new(&[
         "n_envs",
@@ -62,7 +64,7 @@ fn main() {
         "MB/s",
         "speedup vs 1-shard",
     ]);
-    for n_envs in [4usize, 16, 64] {
+    for &n_envs in env_counts {
         let mut single_time = 0.0;
         for (shards, label) in [(1usize, "redis-like (1 shard)"), (16, "keydb-like (16 shards)")] {
             let orch = Arc::new(Orchestrator::launch(shards));
@@ -98,14 +100,25 @@ fn main() {
     let orch = Orchestrator::launch(16);
     let c = orch.client();
     let mut b = Bench::new("store-ops");
-    b.run("put_tensor 166 KB", || {
+    b.run("put_tensor state", || {
         c.put_tensor("k", vec![state_len], vec![0.5; state_len]);
     });
-    b.run("get 166 KB", || {
+    b.run("get state", || {
         std::hint::black_box(c.get("k"));
     });
     b.run("put+take scalar", || {
         c.put_scalar("s", 1.0);
         std::hint::black_box(c.poll_take("s", Duration::from_secs(1)));
     });
+    // The event-driven collector's primitive: one subscription scan over
+    // a 64-key wave with a single hot key.
+    let names: Vec<String> = (0..64).map(|i| format!("wave{i}")).collect();
+    let keys: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    b.run("poll_any_take over 64 keys", || {
+        c.put_scalar(&names[63], 1.0);
+        std::hint::black_box(c.poll_any_take(&keys, Duration::from_secs(1)));
+    });
+
+    b.write_json("BENCH_db.json").expect("write BENCH_db.json");
+    println!("wrote BENCH_db.json");
 }

@@ -2,30 +2,156 @@
 //! trajectories took 15 and 18 seconds per iteration [16 vs 64 envs],
 //! while updating the policy ... took 0.5 and 2 seconds".
 //!
-//! Measures the REAL system: policy-inference latency per compiled batch
-//! size, the compiled PPO train-step latency, a full sampling phase
-//! (parallel LES env workers through the orchestrator) at growing env
-//! counts, and the sampling/update split of one complete iteration.
+//! Two parts:
 //!
-//! Requires `make artifacts`.  Uses a reduced 12^3 environment so the
-//! bench completes in ~2 minutes; the *ratios* are the experiment.
+//! 1. **Collector-mode comparison** (no artifacts needed): the persistent
+//!    worker pool sampled lock-step (the paper's synchronous gather, one
+//!    blocking poll per env) vs event-driven at full batch vs event-driven
+//!    at `min_batch = 1`, with the trainer's policy/idle wall-clock
+//!    breakdown per mode.  A deterministic closure stands in for the
+//!    policy so the comparison isolates the collection machinery.
+//! 2. **Compiled-runtime section** (requires `make artifacts`): policy
+//!    inference latency per batch size, the compiled PPO train step, and
+//!    the full sampling/update split with the real policy.
+//!
+//! Results are written to `BENCH_training.json` (`Bench::write_json`) so
+//! successive PRs can track the trajectory.  `BENCH_SMOKE=1` shrinks the
+//! workload for CI.
 
 use relexi::config::{CaseConfig, RunConfig};
 use relexi::coordinator::EnvPool;
 use relexi::orchestrator::{Orchestrator, Protocol};
 use relexi::rl::flatten;
-use relexi::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
-use relexi::solver::dns::{generate, TruthParams};
+use relexi::runtime::{
+    stub_policy, Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime,
+};
+use relexi::solver::dns::{generate, Truth, TruthParams};
 use relexi::util::bench::{Bench, Table};
 use relexi::util::Rng;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+#[derive(Clone, Copy)]
+enum Mode {
+    Lockstep,
+    EventFull,
+    EventMb1,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Lockstep => "lockstep",
+            Mode::EventFull => "event (full batch)",
+            Mode::EventMb1 => "event (min_batch=1)",
+        }
+    }
+}
+
+fn bench_cfg(smoke: bool) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.case = CaseConfig {
+        name: "bench".into(),
+        n: 5,
+        elems_per_dir: 2,
+        k_max: 3,
+        alpha: 0.4,
+    };
+    cfg.solver.t_end = if smoke { 0.2 } else { 0.5 };
+    cfg.solver.dns_points = 24;
+    cfg
+}
+
+fn bench_truth(cfg: &RunConfig, smoke: bool) -> Arc<Truth> {
+    Arc::new(generate(
+        &TruthParams {
+            n_dns: 24,
+            n_les: 12,
+            nu: cfg.solver.nu,
+            ke_target: cfg.solver.ke_target,
+            spinup_time: if smoke { 0.3 } else { 1.0 },
+            n_states: 4,
+            sample_interval: 0.25,
+            seed: 5,
+        },
+        |_, _| {},
+    ))
+}
+
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut bench = Bench::new("training")
+        .with_warmup(Duration::from_millis(0))
+        .with_max_samples(if smoke { 1 } else { 3 });
+
+    // --- part 1: collector-mode comparison (worker pool machinery) ----------
+    let cfg = bench_cfg(smoke);
+    let truth = bench_truth(&cfg, smoke);
+    let env_counts: &[usize] = if smoke { &[2, 4] } else { &[4, 8, 16] };
+
+    let mut modes = Table::new(&[
+        "n_envs",
+        "collector",
+        "sample [s]",
+        "policy share [s]",
+        "idle share [s]",
+    ]);
+    for &n_envs in env_counts {
+        for mode in [Mode::Lockstep, Mode::EventFull, Mode::EventMb1] {
+            let mut cfg_n = cfg.clone();
+            cfg_n.rl.n_envs = n_envs;
+            let orch = Orchestrator::launch(cfg_n.hpc.db_shards);
+            let mut pool = EnvPool::new(cfg_n, truth.clone(), &orch)
+                .expect("bench pool construction");
+            let mut rng = Rng::new(100 + n_envs as u64);
+            let mut it = 0usize;
+            // Accumulate the breakdown over every measured sample so the
+            // shares are means over the same runs as `m.mean_s`.
+            let (mut policy_acc, mut idle_acc, mut runs) = (0.0f64, 0.0f64, 0usize);
+            let m = bench.run(&format!("sample {} n_envs={n_envs}", mode.label()), || {
+                let proto = Protocol::new(&format!("b{it}"));
+                it += 1;
+                let r = match mode {
+                    Mode::Lockstep => pool
+                        .collect_lockstep_with(&orch, &proto, stub_policy, &mut rng, false),
+                    Mode::EventFull => pool
+                        .collect_with(&orch, &proto, stub_policy, &mut rng, false, n_envs),
+                    Mode::EventMb1 => {
+                        pool.collect_with(&orch, &proto, stub_policy, &mut rng, false, 1)
+                    }
+                }
+                .expect("sampling phase");
+                orch.clear();
+                policy_acc += r.policy_time_s;
+                idle_acc += r.idle_time_s;
+                runs += 1;
+            });
+            modes.row(vec![
+                n_envs.to_string(),
+                mode.label().to_string(),
+                format!("{:.3}", m.mean_s),
+                format!("{:.3}", policy_acc / runs.max(1) as f64),
+                format!("{:.3}", idle_acc / runs.max(1) as f64),
+            ]);
+        }
+    }
+    modes.print("Collector modes — persistent pool, sampling phase (exp. W1a)");
+    println!(
+        "Expected shape: all modes within noise here (homogeneous envs on\n\
+         one host); the event-driven collector pays no per-env poll\n\
+         ordering cost, which is what widens the gap once env runtimes\n\
+         disperse (heterogeneous variants / loaded nodes)."
+    );
+
+    // --- part 2: compiled-runtime sections (need artifacts) ------------------
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("bench_training: artifacts missing, run `make artifacts` first");
+        println!("\nbench_training: artifacts missing, skipping compiled-policy sections");
+        bench
+            .write_json("BENCH_training.json")
+            .expect("write BENCH_training.json");
+        println!("wrote BENCH_training.json");
         return;
     }
     let rt = Runtime::cpu().unwrap();
@@ -34,13 +160,12 @@ fn main() {
     let theta = reg.initial_params(5).unwrap();
     let feat = policy.features();
 
-    // --- policy inference latency per batch ---------------------------------
-    let mut b = Bench::new("policy-fwd").with_target(Duration::from_secs(2));
+    // Policy inference latency per batch.
     let mut rng = Rng::new(1);
     let mut table = Table::new(&["batch (elements)", "latency", "us/element"]);
     for batch in [64usize, 256, 1024, 4096] {
         let obs: Vec<f32> = (0..batch * feat).map(|_| rng.normal() as f32).collect();
-        let m = b.run(&format!("forward b={batch}"), || {
+        let m = bench.run(&format!("forward b={batch}"), || {
             std::hint::black_box(policy.forward(&theta, &obs, batch).unwrap());
         });
         table.row(vec![
@@ -51,7 +176,7 @@ fn main() {
     }
     table.print("Policy inference (compiled Pallas CNN via PJRT)");
 
-    // --- compiled PPO train step ---------------------------------------------
+    // Compiled PPO train step.
     let mut trainer = TrainerRuntime::load(&rt, &reg, 5, 256).unwrap();
     let mb = trainer.minibatch;
     let obs: Vec<f32> = (0..mb * feat).map(|_| rng.normal() as f32).collect();
@@ -59,7 +184,7 @@ fn main() {
     let logp = vec![-1.0f32; mb];
     let adv: Vec<f32> = (0..mb).map(|_| rng.normal() as f32).collect();
     let ret: Vec<f32> = (0..mb).map(|_| rng.normal() as f32).collect();
-    let m_train = b.run(&format!("train_step b={mb} (loss+grad+Adam)"), || {
+    let m_train = bench.run(&format!("train_step b={mb} (loss+grad+Adam)"), || {
         std::hint::black_box(
             trainer
                 .train_minibatch(&Minibatch {
@@ -73,49 +198,26 @@ fn main() {
         );
     });
 
-    // --- full sampling phase at growing env counts ---------------------------
-    // Reduced environment (12^3, 8 elements) so the bench stays short.
-    let mut cfg = RunConfig::default();
-    cfg.case = CaseConfig {
-        name: "bench".into(),
-        n: 5,
-        elems_per_dir: 2,
-        k_max: 3,
-        alpha: 0.4,
-    };
-    cfg.solver.t_end = 0.5; // 5 actions
-    cfg.solver.dns_points = 24;
-    let truth = Arc::new(generate(
-        &TruthParams {
-            n_dns: 24,
-            n_les: 12,
-            nu: cfg.solver.nu,
-            ke_target: cfg.solver.ke_target,
-            spinup_time: 1.0,
-            n_states: 4,
-            sample_interval: 0.25,
-            seed: 5,
-        },
-        |_, _| {},
-    ));
-
+    // Full §6.2 split with the real policy through the persistent pool.
     let mut split = Table::new(&[
         "n_envs",
         "sampling [s]",
         "policy share [s]",
+        "idle share [s]",
         "update (5 epochs) [s]",
         "sample:update ratio",
     ]);
-    for n_envs in [4usize, 8, 16] {
+    for &n_envs in env_counts {
         let mut cfg_n = cfg.clone();
         cfg_n.rl.n_envs = n_envs;
-        let pool = EnvPool::new(cfg_n.clone(), truth.clone());
         let orch = Orchestrator::launch(cfg_n.hpc.db_shards);
+        let mut pool = EnvPool::new(cfg_n, truth.clone(), &orch).unwrap();
         let mut rng_s = Rng::new(100 + n_envs as u64);
-        let proto = Protocol::new(&format!("bench{n_envs}"));
+        let proto = Protocol::new(&format!("w1-{n_envs}"));
         let rollouts = pool
             .collect(&orch, &proto, &policy, &theta, &mut rng_s, false)
             .unwrap();
+        orch.clear();
 
         // Update phase on the collected data (5 epochs, as in the paper).
         let ds = flatten(&rollouts.episodes, feat, 0.995, 1.0);
@@ -139,6 +241,7 @@ fn main() {
             n_envs.to_string(),
             format!("{:.2}", rollouts.sample_time_s),
             format!("{:.3}", rollouts.policy_time_s),
+            format!("{:.3}", rollouts.idle_time_s),
             format!("{update_s:.2}"),
             format!("{:.1}", rollouts.sample_time_s / update_s),
         ]);
@@ -150,4 +253,9 @@ fn main() {
          Single train_step: {}",
         relexi::util::bench::fmt_duration(m_train.mean_s)
     );
+
+    bench
+        .write_json("BENCH_training.json")
+        .expect("write BENCH_training.json");
+    println!("wrote BENCH_training.json");
 }

@@ -4,7 +4,7 @@
 pub mod presets;
 pub mod toml;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use toml::Toml;
 
 /// One LES case from Table 1 of the paper.
@@ -84,6 +84,55 @@ impl Default for SolverConfig {
     }
 }
 
+/// One scenario family in a heterogeneous environment pool.
+///
+/// A variant perturbs the base case/solver configuration without changing
+/// the spatial resolution, so every env in the pool shares one `Grid`, one
+/// ground-truth package and one policy artifact set, and their element
+/// observations batch together in a single policy forward.  Envs are
+/// assigned round-robin: env `i` runs variant `i % n_variants`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvVariant {
+    /// Display name ("base", "re_low", ...).
+    pub name: String,
+    /// Viscosity multiplier vs `solver.nu` (the Reynolds-number family).
+    pub nu_scale: f64,
+    /// Episode-horizon multiplier vs `solver.t_end`: variants with scale
+    /// < 1 terminate early, exercising the done-flag path mid-iteration.
+    pub t_end_scale: f64,
+    /// Reward scaling override, Eq. (5) (`None` = case alpha).
+    pub alpha: Option<f64>,
+    /// Reward cutoff override, Eq. (4) (`None` = case k_max).
+    pub k_max: Option<usize>,
+}
+
+impl Default for EnvVariant {
+    fn default() -> Self {
+        EnvVariant {
+            name: "base".to_string(),
+            nu_scale: 1.0,
+            t_end_scale: 1.0,
+            alpha: None,
+            k_max: None,
+        }
+    }
+}
+
+/// A variant resolved against the base configuration: the exact case and
+/// solver parameters one environment worker is constructed with.
+#[derive(Debug, Clone)]
+pub struct ResolvedVariant {
+    /// Index into `rl.variants` (0 for the homogeneous pool).
+    pub index: usize,
+    pub name: String,
+    pub case: CaseConfig,
+    pub solver: SolverConfig,
+    /// `Some((family, n_families))`: restrict initial-state draws to pool
+    /// indices congruent to `family` mod `n_families` (disjoint
+    /// initial-state families per variant).
+    pub init_family: Option<(usize, usize)>,
+}
+
 /// PPO / training-loop parameters (paper §5.3).
 #[derive(Debug, Clone)]
 pub struct RlConfig {
@@ -103,6 +152,16 @@ pub struct RlConfig {
     pub seed: u64,
     /// GAE lambda (1.0 = plain discounted returns, as in the paper).
     pub gae_lambda: f64,
+    /// Event-driven collector: evaluate the policy as soon as this many
+    /// env states have arrived.  `0` (default) = wait for the full batch,
+    /// which reproduces the paper's synchronous PPO bit-for-bit.
+    pub min_batch: usize,
+    /// Scenario families sampled by one pool (empty = homogeneous base
+    /// case).  Env `i` runs variant `i % variants.len()`.
+    pub variants: Vec<EnvVariant>,
+    /// Give each variant a disjoint family of initial states from the
+    /// truth pool (index mod n_variants) instead of the shared pool.
+    pub split_init_pool: bool,
 }
 
 impl Default for RlConfig {
@@ -116,6 +175,9 @@ impl Default for RlConfig {
             eval_every: 10,
             seed: 2022,
             gae_lambda: 1.0,
+            min_batch: 0,
+            variants: Vec::new(),
+            split_init_pool: false,
         }
     }
 }
@@ -218,6 +280,48 @@ impl RunConfig {
         cfg.rl.eval_every = t.int_or("rl.eval_every", cfg.rl.eval_every as i64)? as usize;
         cfg.rl.seed = t.int_or("rl.seed", cfg.rl.seed as i64)? as u64;
         cfg.rl.gae_lambda = t.float_or("rl.gae_lambda", cfg.rl.gae_lambda)?;
+        cfg.rl.min_batch = t.int_or("rl.min_batch", cfg.rl.min_batch as i64)? as usize;
+        cfg.rl.split_init_pool = t.bool_or("rl.split_init_pool", cfg.rl.split_init_pool)?;
+        if let Some(v) = t.get("rl.variant_preset") {
+            cfg.rl.variants = presets::variant_preset(v.as_str()?, &cfg.case)?;
+        }
+        if let Some(v) = t.get("rl.variant_names") {
+            // Parallel flat arrays (the TOML subset has no array-of-tables):
+            // names define the variant count; the optional per-field arrays
+            // must match it.  A non-positive alpha/k_max entry means "no
+            // override" (keep the base case's value).
+            let names = v.as_str_vec().context("rl.variant_names")?;
+            let n = names.len();
+            let floats = |key: &str, default: f64| -> Result<Vec<f64>> {
+                match t.get(key) {
+                    Some(v) => {
+                        let xs = v.as_float_vec().with_context(|| key.to_string())?;
+                        anyhow::ensure!(
+                            xs.len() == n,
+                            "{key} has {} entries, expected {n} (one per variant_names entry)",
+                            xs.len()
+                        );
+                        Ok(xs)
+                    }
+                    None => Ok(vec![default; n]),
+                }
+            };
+            let nu_scale = floats("rl.variant_nu_scale", 1.0)?;
+            let t_end_scale = floats("rl.variant_t_end_scale", 1.0)?;
+            let alpha = floats("rl.variant_alpha", 0.0)?;
+            let k_max = floats("rl.variant_k_max", 0.0)?;
+            cfg.rl.variants = names
+                .into_iter()
+                .enumerate()
+                .map(|(i, name)| EnvVariant {
+                    name,
+                    nu_scale: nu_scale[i],
+                    t_end_scale: t_end_scale[i],
+                    alpha: (alpha[i] > 0.0).then_some(alpha[i]),
+                    k_max: (k_max[i] > 0.0).then_some(k_max[i] as usize),
+                })
+                .collect();
+        }
 
         cfg.hpc.worker_nodes =
             t.int_or("hpc.worker_nodes", cfg.hpc.worker_nodes as i64)? as usize;
@@ -271,6 +375,42 @@ impl RunConfig {
         );
         anyhow::ensure!(self.solver.dt_rl > 0.0 && self.solver.t_end > 0.0);
         anyhow::ensure!(self.rl.n_envs >= 1 && self.rl.minibatch >= 1);
+        anyhow::ensure!(self.steps_per_episode() >= 1, "t_end/dt_rl rounds to 0 steps");
+        anyhow::ensure!(
+            self.rl.min_batch <= self.rl.n_envs,
+            "rl.min_batch {} exceeds rl.n_envs {} (use 0 for full batch)",
+            self.rl.min_batch,
+            self.rl.n_envs
+        );
+        anyhow::ensure!(
+            self.rl.variants.len() <= self.rl.n_envs,
+            "{} env variants but only {} envs (round-robin would starve some variants)",
+            self.rl.variants.len(),
+            self.rl.n_envs
+        );
+        for (i, v) in self.rl.variants.iter().enumerate() {
+            anyhow::ensure!(
+                v.nu_scale > 0.0 && v.t_end_scale > 0.0,
+                "variant {i} ({}): nu_scale and t_end_scale must be positive",
+                v.name
+            );
+            if let Some(k) = v.k_max {
+                anyhow::ensure!(
+                    k >= 1 && k <= self.case.points_per_dir() / 2,
+                    "variant {i} ({}): k_max {k} beyond Nyquist {}",
+                    v.name,
+                    self.case.points_per_dir() / 2
+                );
+            }
+            if let Some(a) = v.alpha {
+                anyhow::ensure!(a > 0.0, "variant {i} ({}): alpha must be positive", v.name);
+            }
+            anyhow::ensure!(
+                (self.solver.t_end * v.t_end_scale / self.solver.dt_rl).round() as usize >= 1,
+                "variant {i} ({}): horizon rounds to 0 steps",
+                v.name
+            );
+        }
         anyhow::ensure!(
             self.hpc.cores_per_node % self.hpc.cores_per_die == 0,
             "cores_per_node must be a multiple of cores_per_die"
@@ -278,9 +418,51 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Actions per episode = t_end / dt_rl (paper: 50).
+    /// Actions per episode = t_end / dt_rl (paper: 50) for the base case;
+    /// variants with `t_end_scale != 1` deviate (see
+    /// [`RunConfig::variant_for`]).
     pub fn steps_per_episode(&self) -> usize {
         (self.solver.t_end / self.solver.dt_rl).round() as usize
+    }
+
+    /// Number of scenario families in the pool (1 = homogeneous).
+    pub fn n_variants(&self) -> usize {
+        self.rl.variants.len().max(1)
+    }
+
+    /// Effective arrival-batch threshold: `rl.min_batch`, with `0`
+    /// meaning the full synchronous batch of `n_envs` states.
+    pub fn min_batch_effective(&self) -> usize {
+        if self.rl.min_batch == 0 {
+            self.rl.n_envs
+        } else {
+            self.rl.min_batch
+        }
+    }
+
+    /// Resolve the scenario variant env `env` runs (round-robin).
+    pub fn variant_for(&self, env: usize) -> ResolvedVariant {
+        let n_var = self.n_variants();
+        let index = env % n_var;
+        let base = EnvVariant::default();
+        let v = self.rl.variants.get(index).unwrap_or(&base);
+        let mut case = self.case.clone();
+        if let Some(a) = v.alpha {
+            case.alpha = a;
+        }
+        if let Some(k) = v.k_max {
+            case.k_max = k;
+        }
+        let mut solver = self.solver.clone();
+        solver.nu *= v.nu_scale;
+        solver.t_end *= v.t_end_scale;
+        ResolvedVariant {
+            index,
+            name: v.name.clone(),
+            case,
+            solver,
+            init_family: self.rl.split_init_pool.then_some((index, n_var)),
+        }
     }
 }
 
@@ -317,6 +499,83 @@ mod tests {
     #[test]
     fn invalid_n_rejected() {
         let doc = Toml::parse("[case]\nn = 6\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn variants_from_parallel_arrays() {
+        let doc = Toml::parse(
+            "[rl]\n\
+             n_envs = 4\n\
+             min_batch = 2\n\
+             split_init_pool = true\n\
+             variant_names = [\"a\", \"b\"]\n\
+             variant_nu_scale = [1.0, 2.0]\n\
+             variant_t_end_scale = [1.0, 0.5]\n\
+             variant_alpha = [0, 0.8]\n\
+             variant_k_max = [0, 4]\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.rl.min_batch, 2);
+        assert_eq!(c.n_variants(), 2);
+        // Non-positive entries mean "no override".
+        assert_eq!(c.rl.variants[0].alpha, None);
+        assert_eq!(c.rl.variants[0].k_max, None);
+        assert_eq!(c.rl.variants[1].alpha, Some(0.8));
+        assert_eq!(c.rl.variants[1].k_max, Some(4));
+
+        // Round-robin resolution applies the overrides.
+        let v0 = c.variant_for(0);
+        let v1 = c.variant_for(1);
+        let v2 = c.variant_for(2); // wraps back to variant 0
+        assert_eq!(v0.name, "a");
+        assert_eq!(v2.index, 0);
+        assert_eq!(v1.solver.nu, c.solver.nu * 2.0);
+        assert_eq!(v1.solver.t_end, c.solver.t_end * 0.5);
+        assert_eq!(v1.case.alpha, 0.8);
+        assert_eq!(v1.case.k_max, 4);
+        assert_eq!(v0.init_family, Some((0, 2)));
+        assert_eq!(v1.init_family, Some((1, 2)));
+    }
+
+    #[test]
+    fn variant_preset_key_and_homogeneous_defaults() {
+        let doc = Toml::parse("[rl]\nvariant_preset = \"re-sweep\"\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.n_variants(), 3);
+
+        let base = RunConfig::default();
+        assert_eq!(base.n_variants(), 1);
+        assert_eq!(base.min_batch_effective(), base.rl.n_envs);
+        let v = base.variant_for(5);
+        assert_eq!(v.index, 0);
+        assert_eq!(v.case, base.case);
+        assert_eq!(v.init_family, None);
+    }
+
+    #[test]
+    fn invalid_variants_rejected() {
+        // Length mismatch between parallel arrays.
+        let doc = Toml::parse(
+            "[rl]\nvariant_names = [\"a\", \"b\"]\nvariant_nu_scale = [1.0]\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // min_batch beyond the pool.
+        let doc = Toml::parse("[rl]\nn_envs = 2\nmin_batch = 3\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // More variants than envs.
+        let doc = Toml::parse(
+            "[rl]\nn_envs = 2\nvariant_names = [\"a\", \"b\", \"c\"]\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // Variant k_max beyond Nyquist.
+        let doc = Toml::parse(
+            "[rl]\nvariant_names = [\"a\"]\nvariant_k_max = [100]\n",
+        )
+        .unwrap();
         assert!(RunConfig::from_toml(&doc).is_err());
     }
 }

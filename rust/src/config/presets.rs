@@ -1,11 +1,12 @@
-//! Table 1 of the paper as code: the two investigated LES configurations.
+//! Table 1 of the paper as code: the two investigated LES configurations,
+//! plus named scenario-family presets for heterogeneous pools.
 //!
 //! | name   | N | #Elems | #DOF   | k_max | alpha |
 //! |--------|---|--------|--------|-------|-------|
 //! | 24 DOF | 5 | 4^3    | 13,824 | 9     | 0.4   |
 //! | 32 DOF | 7 | 4^3    | 32,768 | 12    | 0.2   |
 
-use super::CaseConfig;
+use super::{CaseConfig, EnvVariant};
 use anyhow::{bail, Result};
 
 /// The "24 DOF" configuration (Table 1, row 1).
@@ -39,6 +40,59 @@ pub fn by_name(name: &str) -> Result<CaseConfig> {
     }
 }
 
+/// Reynolds-number sweep: one pool training across three viscosity
+/// families around the base case (nu x2 / x1 / x0.5).
+pub fn re_sweep() -> Vec<EnvVariant> {
+    [("re_low", 2.0), ("re_base", 1.0), ("re_high", 0.5)]
+        .into_iter()
+        .map(|(name, nu_scale)| EnvVariant {
+            name: name.to_string(),
+            nu_scale,
+            ..EnvVariant::default()
+        })
+        .collect()
+}
+
+/// Mixed-horizon pool: half the envs run full episodes, half terminate at
+/// t_end/2 — a standing exercise of the early-done protocol path.
+pub fn horizon_mix() -> Vec<EnvVariant> {
+    vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "short".to_string(),
+            t_end_scale: 0.5,
+            ..EnvVariant::default()
+        },
+    ]
+}
+
+/// Reward-shaping mix: the base reward plus a stricter family (larger
+/// alpha, lower cutoff) sharing the same physics.
+pub fn reward_mix(base: &CaseConfig) -> Vec<EnvVariant> {
+    vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "strict".to_string(),
+            alpha: Some(base.alpha * 2.0),
+            k_max: Some((base.k_max / 2).max(1)),
+            ..EnvVariant::default()
+        },
+    ]
+}
+
+/// Look up a scenario-family preset by name (`rl.variant_preset`),
+/// resolved against the run's configured base case.
+pub fn variant_preset(name: &str, base: &CaseConfig) -> Result<Vec<EnvVariant>> {
+    match name {
+        "re-sweep" | "re_sweep" => Ok(re_sweep()),
+        "horizon-mix" | "horizon_mix" => Ok(horizon_mix()),
+        "reward-mix" | "reward_mix" => Ok(reward_mix(base)),
+        _ => bail!(
+            "unknown variant preset {name:?} (expected re-sweep, horizon-mix or reward-mix)"
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +119,33 @@ mod tests {
         assert_eq!(by_name("24dof").unwrap(), dof24());
         assert_eq!(by_name("32").unwrap(), dof32());
         assert!(by_name("48dof").is_err());
+    }
+
+    #[test]
+    fn variant_presets_resolve_and_validate() {
+        let re = variant_preset("re-sweep", &dof24()).unwrap();
+        assert_eq!(re.len(), 3);
+        assert!(re.iter().any(|v| v.nu_scale > 1.0));
+        assert!(re.iter().any(|v| v.nu_scale < 1.0));
+
+        let hz = variant_preset("horizon_mix", &dof24()).unwrap();
+        assert_eq!(hz.len(), 2);
+        assert!(hz[1].t_end_scale < 1.0);
+
+        // reward-mix scales the *configured* base case, not a hardcoded one.
+        for case in [dof24(), dof32()] {
+            let rw = variant_preset("reward-mix", &case).unwrap();
+            assert_eq!(rw[1].alpha, Some(case.alpha * 2.0));
+            assert_eq!(rw[1].k_max, Some((case.k_max / 2).max(1)));
+        }
+
+        assert!(variant_preset("nope", &dof24()).is_err());
+
+        // Every preset passes RunConfig validation on the default case.
+        for name in ["re-sweep", "horizon-mix", "reward-mix"] {
+            let mut cfg = crate::config::RunConfig::default();
+            cfg.rl.variants = variant_preset(name, &cfg.case.clone()).unwrap();
+            cfg.validate().unwrap();
+        }
     }
 }

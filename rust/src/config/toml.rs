@@ -58,6 +58,22 @@ impl Value {
         }
     }
 
+    /// Array-of-floats accessor (accepts ints).
+    pub fn as_float_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| x.as_float()).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    /// Array-of-strings accessor.
+    pub fn as_str_vec(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| x.as_str().map(str::to_string)).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
     fn parse_scalar(text: &str) -> Result<Value> {
         let t = text.trim();
         if t.is_empty() {
@@ -254,6 +270,26 @@ lr = 1e-4
             vec![2, 4, 8, 16]
         );
         assert_eq!(t.get("rl.ppo.lr").unwrap().as_float().unwrap(), 1e-4);
+    }
+
+    #[test]
+    fn typed_array_accessors() {
+        let t = Toml::parse(
+            "names = [\"a\", \"b, c\"]\nscales = [0.5, 1, 2.0]\nints = [1, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            t.get("names").unwrap().as_str_vec().unwrap(),
+            vec!["a".to_string(), "b, c".to_string()]
+        );
+        assert_eq!(
+            t.get("scales").unwrap().as_float_vec().unwrap(),
+            vec![0.5, 1.0, 2.0]
+        );
+        // Mixed / wrong element types are rejected.
+        assert!(t.get("names").unwrap().as_float_vec().is_err());
+        assert!(t.get("ints").unwrap().as_str_vec().is_err());
+        assert!(Value::Int(3).as_float_vec().is_err());
     }
 
     #[test]

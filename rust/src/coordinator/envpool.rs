@@ -1,26 +1,45 @@
-//! Parallel environment execution through the orchestrator — the heart of
-//! the Relexi dataflow (paper Fig. 2 / Algorithm 1):
+//! The persistent, event-driven environment runtime — the heart of the
+//! Relexi dataflow (paper Fig. 2 / Algorithm 1), split into two halves:
 //!
-//! 1. a batch of environment workers ("FLEXI instances") is started;
-//! 2. each writes its state tensor to the orchestrator and polls for its
-//!    action; the trainer polls states, evaluates the policy once for the
-//!    whole batch, samples actions and writes them back;
-//! 3. every env advances `dt_RL` and the loop repeats until `t_end`
-//!    (synchronous PPO: the iteration waits for all envs).
+//! * **Worker pool** (the "FLEXI instances", Fig. 2 left): one OS thread
+//!   and one [`LesEnv`] per environment, built **once** in
+//!   [`EnvPool::new`] and reused for every training iteration.  Workers
+//!   block on a per-iteration begin message carrying the iteration's key
+//!   namespace ([`Protocol`]) and RNG stream, run one episode — write
+//!   state, poll action, advance `dt_RL`, write the spectrum error, raise
+//!   the done-flag at termination (§3.1) — and park again.  Steady-state
+//!   iterations therefore spawn zero threads and rebuild zero
+//!   `LesEnv`/`Grid` instances (asserted by [`PoolCounters`]).
 //!
-//! Workers are real OS threads running the real LES solver; all traffic
-//! goes through the in-memory store exactly as in the paper (states and
-//! spectrum errors in, actions out, done-flags at termination).
+//! * **Rollout collector** (the trainer side of Algorithm 1, lines 4-13):
+//!   consumes env states **in arrival order** through the store's
+//!   multi-key subscription ([`Client::poll_any_take`]) instead of one
+//!   blocking poll per env, batches the policy over whichever states have
+//!   arrived once `min_batch` are staged, and keeps per-env done/error
+//!   bookkeeping so an early-terminating env can never stall the batch —
+//!   the synchronization overhead paper §6.2 measures.  With
+//!   `min_batch = n_envs` (the default) the collector waits for the full
+//!   wave and reproduces the paper's synchronous PPO bit-for-bit; the
+//!   retained [`EnvPool::collect_lockstep_with`] reference implements the
+//!   literal per-env polling loop for that equivalence test and for the
+//!   §6.2 baseline bench.
+//!
+//! Heterogeneous pools: each env runs a scenario variant
+//! ([`crate::config::EnvVariant`], round-robin), so one pool can sample
+//! across Reynolds-number, reward-shaping, horizon and initial-state
+//! families while sharing one `Grid`, one truth package and one policy.
 
 use crate::config::RunConfig;
-use crate::orchestrator::{Orchestrator, Protocol};
+use crate::orchestrator::{Client, Orchestrator, Protocol, Value};
 use crate::rl::{gaussian, reward_from_error, Episode, LesEnv, StepRecord};
-use crate::runtime::PolicyRuntime;
+use crate::runtime::{PolicyOut, PolicyRuntime};
 use crate::solver::dns::Truth;
 use crate::solver::Grid;
 use crate::util::Rng;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Timeout for any single poll; generous because env steps include real
@@ -34,32 +53,152 @@ pub struct Rollouts {
     pub sample_time_s: f64,
     /// Wall-clock seconds the trainer spent inside policy inference.
     pub policy_time_s: f64,
+    /// Wall-clock seconds the trainer spent blocked on arrivals (the
+    /// synchronization overhead the event-driven collector attacks).
+    pub idle_time_s: f64,
 }
 
-/// Collects rollouts from `n_envs` parallel environments.
+/// Construction counters proving worker persistence: after `new`, no
+/// call ever increments them again.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// OS threads spawned (== n_envs, only in `new`).
+    pub threads_spawned: usize,
+    /// `LesEnv` instances constructed (== n_envs, only in `new`).
+    pub envs_built: usize,
+    /// Spectral grids constructed (== 1, only in `new`).
+    pub grids_built: usize,
+    /// Sampling phases served by the persistent workers.
+    pub iterations: usize,
+}
+
+/// Per-iteration begin message a parked worker blocks on.
+struct Begin {
+    proto: Protocol,
+    rng: Rng,
+}
+
+/// Collects rollouts from `n_envs` persistent parallel environments.
 pub struct EnvPool {
     cfg: RunConfig,
-    truth: Arc<Truth>,
+    grid: Arc<Grid>,
+    /// Begin-message channels, one per worker (dropping them shuts the
+    /// pool down).
+    txs: Vec<mpsc::Sender<Begin>>,
+    handles: Vec<JoinHandle<()>>,
+    counters: PoolCounters,
+    /// Client + last begun protocol, so `Drop` can raise the abort flag
+    /// for workers still blocked inside an interrupted iteration.
+    abort_client: Client,
+    current_proto: Option<Protocol>,
+    /// Per-env resolved bookkeeping (round-robin variants).
+    variant_of: Vec<usize>,
+    alpha_of: Vec<f64>,
+    n_actions_of: Vec<usize>,
+    /// Observation features per element ((N+1)^3 * 3).
+    feat: usize,
+    /// Elements per env.
+    n_elems: usize,
+    /// Reused forward-batch scratch (n_envs * n_elems * feat floats,
+    /// allocated once here, never per iteration).
+    batch_obs: Vec<f32>,
 }
 
 impl EnvPool {
-    /// Build a pool for a run configuration and its ground truth.
-    pub fn new(cfg: RunConfig, truth: Arc<Truth>) -> EnvPool {
-        EnvPool { cfg, truth }
+    /// Build the pool for a run configuration and its ground truth:
+    /// construct the shared spectral grid, every `LesEnv` (one scenario
+    /// variant each) and every worker thread exactly once.  All later
+    /// iterations reuse them.
+    pub fn new(cfg: RunConfig, truth: Arc<Truth>, orch: &Orchestrator) -> Result<EnvPool> {
+        cfg.validate()?;
+        let n_envs = cfg.rl.n_envs;
+        if cfg.rl.split_init_pool {
+            anyhow::ensure!(
+                truth.states.len() >= cfg.n_variants(),
+                "split_init_pool needs >= {} truth states (one per variant), got {}",
+                cfg.n_variants(),
+                truth.states.len()
+            );
+        }
+        // One shared spectral grid for the whole pool: `fft::Plan` is
+        // `Send + Sync`, so every worker reuses the same twiddle tables.
+        let grid = Arc::new(Grid::new(cfg.case.points_per_dir()));
+        let mut counters = PoolCounters {
+            threads_spawned: 0,
+            envs_built: 0,
+            grids_built: 1,
+            iterations: 0,
+        };
+
+        let mut txs = Vec::with_capacity(n_envs);
+        let mut handles = Vec::with_capacity(n_envs);
+        let mut variant_of = Vec::with_capacity(n_envs);
+        let mut alpha_of = Vec::with_capacity(n_envs);
+        let mut n_actions_of = Vec::with_capacity(n_envs);
+        for i in 0..n_envs {
+            let rv = cfg.variant_for(i);
+            let mut env = LesEnv::with_grid(&rv.case, &rv.solver, truth.clone(), grid.clone())
+                .with_context(|| format!("env {i} (variant {})", rv.name))?;
+            if let Some((family, m)) = rv.init_family {
+                env.set_init_family(family, m)
+                    .with_context(|| format!("env {i} (variant {})", rv.name))?;
+            }
+            counters.envs_built += 1;
+            variant_of.push(rv.index);
+            alpha_of.push(rv.case.alpha);
+            n_actions_of.push(env.n_actions());
+
+            let (tx, rx) = mpsc::channel::<Begin>();
+            let client = orch.client();
+            let handle = std::thread::Builder::new()
+                .name(format!("env-worker-{i}"))
+                .spawn(move || worker_loop(env, client, i, rx))?;
+            counters.threads_spawned += 1;
+            txs.push(tx);
+            handles.push(handle);
+        }
+
+        let n_elems = cfg.case.total_elems();
+        let feat = cfg.case.elem_points().pow(3) * 3;
+        Ok(EnvPool {
+            batch_obs: vec![0f32; n_envs * n_elems * feat],
+            cfg,
+            grid,
+            txs,
+            handles,
+            counters,
+            abort_client: orch.client(),
+            current_proto: None,
+            variant_of,
+            alpha_of,
+            n_actions_of,
+            feat,
+            n_elems,
+        })
     }
 
     /// Elements per env (actions per step per env).
     pub fn n_elems(&self) -> usize {
-        self.cfg.case.total_elems()
+        self.n_elems
     }
 
-    /// Run one synchronous sampling phase: `n_envs` episodes under the
-    /// current policy (`theta`), exchanging all data via `orch`.
-    ///
-    /// `run_tag` namespaces the keys (one per iteration); `rng` drives
-    /// initial-state draws and action sampling.
+    /// The spectral grid shared by every env in the pool.
+    pub fn grid(&self) -> Arc<Grid> {
+        self.grid.clone()
+    }
+
+    /// Construction counters (steady-state assertion: unchanged across
+    /// `collect` calls).
+    pub fn counters(&self) -> PoolCounters {
+        self.counters
+    }
+
+    /// Run one sampling phase under the current policy (`theta`),
+    /// event-driven with the configured `rl.min_batch` (0 = full batch =
+    /// synchronous PPO).  `run_tag` via `proto` namespaces the keys; `rng`
+    /// drives initial-state draws and action sampling.
     pub fn collect(
-        &self,
+        &mut self,
         orch: &Orchestrator,
         proto: &Protocol,
         policy: &PolicyRuntime,
@@ -67,95 +206,307 @@ impl EnvPool {
         rng: &mut Rng,
         deterministic: bool,
     ) -> Result<Rollouts> {
+        anyhow::ensure!(
+            policy.features() == self.feat,
+            "policy features {} != pool features {}",
+            policy.features(),
+            self.feat
+        );
+        let min_batch = self.cfg.min_batch_effective();
+        self.collect_with(
+            orch,
+            proto,
+            |obs, n| policy.forward(theta, obs, n),
+            rng,
+            deterministic,
+            min_batch,
+        )
+    }
+
+    /// Event-driven sampling phase with an explicit policy closure
+    /// (`forward(obs, n_samples)`) — the policy-agnostic core, also used
+    /// by tests and benches that run without compiled artifacts.
+    pub fn collect_with<F>(
+        &mut self,
+        orch: &Orchestrator,
+        proto: &Protocol,
+        forward: F,
+        rng: &mut Rng,
+        deterministic: bool,
+        min_batch: usize,
+    ) -> Result<Rollouts>
+    where
+        F: FnMut(&[f32], usize) -> Result<PolicyOut>,
+    {
+        let res = self.collect_event_inner(orch, proto, forward, rng, deterministic, min_batch);
+        self.finish_iteration(proto, res.is_err());
+        res
+    }
+
+    fn collect_event_inner<F>(
+        &mut self,
+        orch: &Orchestrator,
+        proto: &Protocol,
+        mut forward: F,
+        rng: &mut Rng,
+        deterministic: bool,
+        min_batch: usize,
+    ) -> Result<Rollouts>
+    where
+        F: FnMut(&[f32], usize) -> Result<PolicyOut>,
+    {
         let t_start = Instant::now();
         let n_envs = self.cfg.rl.n_envs;
-        let n_actions = self.cfg.steps_per_episode();
-        let n_elems = self.n_elems();
-        let feat = policy.features();
-
-        // --- start the environment workers (the "FLEXI instances") -----
-        // One shared spectral grid for the whole pool: `fft::Plan` is
-        // `Send + Sync`, so every worker reuses the same twiddle tables
-        // instead of rebuilding them per environment.
-        let grid = Arc::new(Grid::new(self.cfg.case.points_per_dir()));
-        let mut workers = Vec::with_capacity(n_envs);
-        for i in 0..n_envs {
-            let client = orch.client();
-            let proto = proto.clone();
-            let case = self.cfg.case.clone();
-            let scfg = self.cfg.solver.clone();
-            let truth = self.truth.clone();
-            let grid = grid.clone();
-            let mut env_rng = rng.split(i as u64);
-            workers.push(std::thread::spawn(move || -> Result<()> {
-                let mut env = LesEnv::with_grid(&case, &scfg, truth, grid)?;
-                let obs = env.reset(&mut env_rng, false);
-                client.put_tensor(&proto.state_key(i, 0), vec![obs.len()], obs);
-                for t in 0..n_actions {
-                    let act = client
-                        .poll_take(&proto.action_key(i, t), POLL_TIMEOUT)
-                        .with_context(|| format!("env {i}: no action at step {t}"))?;
-                    let cs: Vec<f64> = act
-                        .as_tensor()
-                        .context("action must be a tensor")?
-                        .1
-                        .iter()
-                        .map(|&a| a as f64)
-                        .collect();
-                    let out = env.step(&cs);
-                    client.put_scalar(&proto.error_key(i, t), out.spec_error);
-                    if out.done {
-                        client.put_flag(&proto.done_key(i), true);
-                        break;
-                    }
-                    let obs = env.observe();
-                    client.put_tensor(&proto.state_key(i, t + 1), vec![obs.len()], obs);
-                }
-                Ok(())
-            }));
-        }
-
-        // --- trainer side: poll states, act, collect rewards ------------
+        let chunk = self.n_elems * self.feat;
         let trainer = orch.client();
-        let mut episodes = vec![Episode::default(); n_envs];
-        let mut policy_time = 0.0f64;
-        let mut batch_obs = vec![0f32; n_envs * n_elems * feat];
+        self.begin_iteration(proto, rng)?;
+        let keys = KeyCache::new(proto, &self.n_actions_of);
 
-        for t in 0..n_actions {
-            // Gather all env states (blocking poll per env).
-            for (i, _ep) in episodes.iter().enumerate() {
-                let state = trainer
-                    .poll(&proto.state_key(i, t), POLL_TIMEOUT)
-                    .with_context(|| format!("trainer: no state from env {i} step {t}"))?;
-                let (_, data) = state.as_tensor().context("state must be a tensor")?;
-                anyhow::ensure!(
-                    data.len() == n_elems * feat,
-                    "env {i} state has {} floats, expected {}",
-                    data.len(),
-                    n_elems * feat
-                );
-                batch_obs[i * n_elems * feat..(i + 1) * n_elems * feat]
-                    .copy_from_slice(data);
+        let mut episodes = self.fresh_episodes();
+        // Per-env: step index of the state we are waiting for (None once
+        // the done-flag arrived), plus staged-but-unacted states and
+        // outstanding error scalars.
+        let mut expect_state: Vec<Option<usize>> = vec![Some(0); n_envs];
+        let mut staged: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n_envs);
+        let mut pending_errs: Vec<(usize, usize)> = Vec::with_capacity(n_envs);
+        let mut policy_time = 0.0f64;
+        let mut idle_time = 0.0f64;
+
+        // Scratch for the per-event subscription (&str views into `keys`).
+        let mut subs: Vec<&str> = Vec::new();
+        let mut events: Vec<Event> = Vec::new();
+        let mut fail_subbed = vec![false; n_envs];
+
+        loop {
+            let expecting = expect_state.iter().filter(|e| e.is_some()).count();
+            if expecting == 0 && staged.is_empty() && pending_errs.is_empty() {
+                break;
             }
 
-            // One batched policy evaluation for all envs.
+            // Flush the policy batch once enough states arrived — or once
+            // no further state can arrive without us acting first.
+            if !staged.is_empty() && (staged.len() >= min_batch || expecting == 0) {
+                staged.sort_unstable_by_key(|&(env, _, _)| env);
+                let n_act = staged.len();
+                for (k, (_, _, obs)) in staged.iter().enumerate() {
+                    self.batch_obs[k * chunk..(k + 1) * chunk].copy_from_slice(obs);
+                }
+                let tp = Instant::now();
+                let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_elems)?;
+                policy_time += tp.elapsed().as_secs_f64();
+                anyhow::ensure!(
+                    out.mean.len() == n_act * self.n_elems
+                        && out.value.len() == n_act * self.n_elems,
+                    "policy returned {} means for {} samples",
+                    out.mean.len(),
+                    n_act * self.n_elems
+                );
+
+                // Sample + write actions in env order (ties the RNG stream
+                // to env indices, not arrival order: full-batch collection
+                // is bitwise-identical to the lock-step reference).
+                for (k, (env, t, obs)) in staged.drain(..).enumerate() {
+                    let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
+                    let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
+                    let act = if deterministic {
+                        mean.to_vec()
+                    } else {
+                        gaussian::sample(mean, out.log_std, rng)
+                    };
+                    let logp = gaussian::log_prob(&act, mean, out.log_std);
+                    trainer.put_tensor(&keys.action[env][t], vec![self.n_elems], act.clone());
+                    episodes[env].steps.push(StepRecord {
+                        obs,
+                        act,
+                        logp,
+                        value: value.to_vec(),
+                        reward: 0.0, // filled by the error event
+                    });
+                    pending_errs.push((env, t));
+                    expect_state[env] = Some(t + 1);
+                }
+                continue;
+            }
+
+            // Wait for the next event: any outstanding state, error,
+            // done-flag or failure report, whichever arrives first.  Each
+            // involved env's fail key is subscribed exactly once.
+            subs.clear();
+            events.clear();
+            fail_subbed.fill(false);
+            for (env, e) in expect_state.iter().enumerate() {
+                if let Some(t) = e {
+                    subs.push(&keys.state[env][*t]);
+                    events.push(Event::State(env, *t));
+                    subs.push(&keys.done[env]);
+                    events.push(Event::Done(env));
+                    subs.push(&keys.fail[env]);
+                    events.push(Event::Fail(env));
+                    fail_subbed[env] = true;
+                }
+            }
+            for &(env, t) in &pending_errs {
+                subs.push(&keys.err[env][t]);
+                events.push(Event::Err(env, t));
+                if !fail_subbed[env] {
+                    subs.push(&keys.fail[env]);
+                    events.push(Event::Fail(env));
+                    fail_subbed[env] = true;
+                }
+            }
+            let ti = Instant::now();
+            let (hit, val) = trainer
+                .poll_any_take(&subs, POLL_TIMEOUT)
+                .with_context(|| {
+                    format!(
+                        "collector timed out: {} states expected, {} errors pending",
+                        expect_state.iter().filter(|e| e.is_some()).count(),
+                        pending_errs.len()
+                    )
+                })?;
+            idle_time += ti.elapsed().as_secs_f64();
+            match events[hit] {
+                Event::State(env, t) => {
+                    let data = match val {
+                        Value::Tensor { data, .. } => data,
+                        other => bail!("env {env} state at step {t} is {other:?}, not a tensor"),
+                    };
+                    anyhow::ensure!(
+                        data.len() == chunk,
+                        "env {env} state has {} floats, expected {chunk}",
+                        data.len()
+                    );
+                    staged.push((env, t, data));
+                    expect_state[env] = None; // parked in `staged` until acted on
+                }
+                Event::Done(env) => {
+                    expect_state[env] = None;
+                }
+                Event::Err(env, t) => {
+                    let err = val
+                        .as_scalar()
+                        .with_context(|| format!("env {env} error at step {t} not a scalar"))?;
+                    episodes[env].steps[t].reward = reward_from_error(err, self.alpha_of[env]);
+                    pending_errs.retain(|&(e, s)| (e, s) != (env, t));
+                }
+                Event::Fail(env) => {
+                    bail!("env worker {env} failed: {}", fail_message(&val));
+                }
+            }
+        }
+
+        self.counters.iterations += 1;
+        Ok(Rollouts {
+            episodes,
+            sample_time_s: t_start.elapsed().as_secs_f64(),
+            policy_time_s: policy_time,
+            idle_time_s: idle_time,
+        })
+    }
+
+    /// Lock-step reference collector: the paper's literal synchronous
+    /// gather — one wave per RL step, states polled env-by-env — kept as
+    /// the bitwise-equivalence oracle for the event-driven path and as
+    /// the §6.2 baseline for the training bench.  Unlike the seed
+    /// implementation it checks the done-flag at every step, so an env
+    /// that terminates early can no longer wedge the gather loop until
+    /// the poll timeout.
+    pub fn collect_lockstep_with<F>(
+        &mut self,
+        orch: &Orchestrator,
+        proto: &Protocol,
+        forward: F,
+        rng: &mut Rng,
+        deterministic: bool,
+    ) -> Result<Rollouts>
+    where
+        F: FnMut(&[f32], usize) -> Result<PolicyOut>,
+    {
+        let res = self.collect_lockstep_inner(orch, proto, forward, rng, deterministic);
+        self.finish_iteration(proto, res.is_err());
+        res
+    }
+
+    fn collect_lockstep_inner<F>(
+        &mut self,
+        orch: &Orchestrator,
+        proto: &Protocol,
+        mut forward: F,
+        rng: &mut Rng,
+        deterministic: bool,
+    ) -> Result<Rollouts>
+    where
+        F: FnMut(&[f32], usize) -> Result<PolicyOut>,
+    {
+        let t_start = Instant::now();
+        let n_envs = self.cfg.rl.n_envs;
+        let chunk = self.n_elems * self.feat;
+        let trainer = orch.client();
+        self.begin_iteration(proto, rng)?;
+        let keys = KeyCache::new(proto, &self.n_actions_of);
+
+        let mut episodes = self.fresh_episodes();
+        let mut done = vec![false; n_envs];
+        let mut acted: Vec<usize> = Vec::with_capacity(n_envs);
+        let mut policy_time = 0.0f64;
+        let mut idle_time = 0.0f64;
+        let max_t = self.n_actions_of.iter().copied().max().unwrap_or(0);
+
+        for t in 0..max_t {
+            // Gather the wave's states in env order, checking the
+            // done-flag per env so early terminations are absorbed.
+            acted.clear();
+            for env in 0..n_envs {
+                if done[env] {
+                    continue;
+                }
+                let ti = Instant::now();
+                let (hit, val) = trainer
+                    .poll_any_take(
+                        &[&keys.state[env][t], &keys.done[env], &keys.fail[env]],
+                        POLL_TIMEOUT,
+                    )
+                    .with_context(|| format!("trainer: no state from env {env} step {t}"))?;
+                idle_time += ti.elapsed().as_secs_f64();
+                match hit {
+                    0 => {
+                        let (_, data) = val.as_tensor().context("state must be a tensor")?;
+                        anyhow::ensure!(
+                            data.len() == chunk,
+                            "env {env} state has {} floats, expected {chunk}",
+                            data.len()
+                        );
+                        self.batch_obs[acted.len() * chunk..(acted.len() + 1) * chunk]
+                            .copy_from_slice(data);
+                        acted.push(env);
+                    }
+                    1 => done[env] = true,
+                    _ => bail!("env worker {env} failed: {}", fail_message(&val)),
+                }
+            }
+            if acted.is_empty() {
+                break; // every env terminated before the longest horizon
+            }
+
+            // One batched policy evaluation for the wave.
+            let n_act = acted.len();
             let tp = Instant::now();
-            let out = policy.forward(theta, &batch_obs, n_envs * n_elems)?;
+            let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_elems)?;
             policy_time += tp.elapsed().as_secs_f64();
 
-            // Sample actions, write them back, record the step.
-            for (i, ep) in episodes.iter_mut().enumerate() {
-                let mean = &out.mean[i * n_elems..(i + 1) * n_elems];
-                let value = &out.value[i * n_elems..(i + 1) * n_elems];
+            // Sample actions, write them back, record the steps.
+            for (k, &env) in acted.iter().enumerate() {
+                let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
+                let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
                 let act = if deterministic {
                     mean.to_vec()
                 } else {
                     gaussian::sample(mean, out.log_std, rng)
                 };
                 let logp = gaussian::log_prob(&act, mean, out.log_std);
-                trainer.put_tensor(&proto.action_key(i, t), vec![n_elems], act.clone());
-                ep.steps.push(StepRecord {
-                    obs: batch_obs[i * n_elems * feat..(i + 1) * n_elems * feat].to_vec(),
+                trainer.put_tensor(&keys.action[env][t], vec![self.n_elems], act.clone());
+                episodes[env].steps.push(StepRecord {
+                    obs: self.batch_obs[k * chunk..(k + 1) * chunk].to_vec(),
                     act,
                     logp,
                     value: value.to_vec(),
@@ -164,31 +515,234 @@ impl EnvPool {
             }
 
             // Collect the spectrum errors -> rewards (Eqs. 4-5).
-            for (i, ep) in episodes.iter_mut().enumerate() {
-                let err = trainer
-                    .poll(&proto.error_key(i, t), POLL_TIMEOUT)
-                    .with_context(|| format!("trainer: no error from env {i} step {t}"))?
-                    .as_scalar()
-                    .context("error must be a scalar")?;
-                ep.steps[t].reward = reward_from_error(err, self.cfg.case.alpha);
+            for &env in &acted {
+                let ti = Instant::now();
+                let (hit, val) = trainer
+                    .poll_any_take(&[&keys.err[env][t], &keys.fail[env]], POLL_TIMEOUT)
+                    .with_context(|| format!("trainer: no error from env {env} step {t}"))?;
+                idle_time += ti.elapsed().as_secs_f64();
+                if hit != 0 {
+                    bail!("env worker {env} failed: {}", fail_message(&val));
+                }
+                let err = val.as_scalar().context("error must be a scalar")?;
+                episodes[env].steps[t].reward = reward_from_error(err, self.alpha_of[env]);
             }
         }
 
-        // All envs must have signalled termination.
-        for i in 0..n_envs {
-            trainer
-                .poll(&proto.done_key(i), POLL_TIMEOUT)
-                .with_context(|| format!("env {i} never signalled done"))?;
-        }
-        for (i, w) in workers.into_iter().enumerate() {
-            w.join()
-                .map_err(|_| anyhow::anyhow!("env worker {i} panicked"))??;
+        // Every env must have signalled termination.
+        for env in 0..n_envs {
+            if done[env] {
+                continue;
+            }
+            let (hit, val) = trainer
+                .poll_any_take(&[&keys.done[env], &keys.fail[env]], POLL_TIMEOUT)
+                .with_context(|| format!("env {env} never signalled done"))?;
+            if hit != 0 {
+                bail!("env worker {env} failed: {}", fail_message(&val));
+            }
         }
 
+        self.counters.iterations += 1;
         Ok(Rollouts {
             episodes,
             sample_time_s: t_start.elapsed().as_secs_f64(),
             policy_time_s: policy_time,
+            idle_time_s: idle_time,
         })
     }
+
+    /// Raise the iteration's abort flag so workers still blocked on an
+    /// action key of a failed iteration unpark immediately (instead of
+    /// running out POLL_TIMEOUT) and return to the begin-channel, leaving
+    /// the pool usable for a retry.
+    fn abort_iteration(&self, proto: &Protocol) {
+        self.abort_client.put_flag(&proto.abort_key(), true);
+    }
+
+    /// Close out one sampling phase: on failure raise the abort flag; on
+    /// success forget the protocol so a later `Drop` does not write a
+    /// stray abort key for a cleanly completed iteration.
+    fn finish_iteration(&mut self, proto: &Protocol, failed: bool) {
+        if failed {
+            self.abort_iteration(proto);
+        } else {
+            self.current_proto = None;
+        }
+    }
+
+    /// Wake every parked worker for one iteration (per-env RNG streams
+    /// split in env order, exactly as the seed's spawn loop did).
+    fn begin_iteration(&mut self, proto: &Protocol, rng: &mut Rng) -> Result<()> {
+        self.current_proto = Some(proto.clone());
+        for (i, tx) in self.txs.iter().enumerate() {
+            tx.send(Begin {
+                proto: proto.clone(),
+                rng: rng.split(i as u64),
+            })
+            .map_err(|_| anyhow!("env worker {i} has exited (earlier panic?)"))?;
+        }
+        Ok(())
+    }
+
+    /// Empty per-env episodes tagged with their scenario variants.
+    fn fresh_episodes(&self) -> Vec<Episode> {
+        self.variant_of
+            .iter()
+            .map(|&variant| Episode {
+                variant,
+                ..Episode::default()
+            })
+            .collect()
+    }
+}
+
+impl Drop for EnvPool {
+    fn drop(&mut self) {
+        // Unblock workers stuck mid-iteration (e.g. after an external
+        // kill): they subscribe to the abort flag next to their action
+        // key, so this wakes them without waiting out the poll timeout.
+        if let Some(proto) = self.current_proto.take() {
+            self.abort_iteration(&proto);
+        }
+        // Dropping the begin-channels unparks every idle worker with a
+        // recv error, which is the shutdown signal.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One collector event: a key subscription resolved to its meaning.
+#[derive(Clone, Copy)]
+enum Event {
+    /// State tensor from env at step.
+    State(usize, usize),
+    /// Done-flag: no further states from this env.
+    Done(usize),
+    /// Spectrum-error scalar for (env, step).
+    Err(usize, usize),
+    /// Worker failure report.
+    Fail(usize),
+}
+
+/// All key strings one iteration can touch, built once per iteration so
+/// the event loop only pushes `&str` views instead of formatting keys on
+/// every wait.
+struct KeyCache {
+    /// `state[env][t]`, `t` up to and including the never-written
+    /// post-terminal index (the done-flag resolves that wait).
+    state: Vec<Vec<String>>,
+    action: Vec<Vec<String>>,
+    err: Vec<Vec<String>>,
+    done: Vec<String>,
+    fail: Vec<String>,
+}
+
+impl KeyCache {
+    fn new(proto: &Protocol, n_actions_of: &[usize]) -> KeyCache {
+        KeyCache {
+            state: n_actions_of
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (0..=n).map(|t| proto.state_key(i, t)).collect())
+                .collect(),
+            action: n_actions_of
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (0..n).map(|t| proto.action_key(i, t)).collect())
+                .collect(),
+            err: n_actions_of
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (0..n).map(|t| proto.error_key(i, t)).collect())
+                .collect(),
+            done: (0..n_actions_of.len()).map(|i| proto.done_key(i)).collect(),
+            fail: (0..n_actions_of.len()).map(|i| proto.fail_key(i)).collect(),
+        }
+    }
+}
+
+/// Render a failure-report value (bytes put by the worker) for an error.
+fn fail_message(val: &Value) -> String {
+    match val {
+        Value::Bytes(b) => String::from_utf8_lossy(b).into_owned(),
+        other => format!("{other:?}"),
+    }
+}
+
+/// The persistent worker body: park on the begin-channel, run one episode
+/// through the store, park again.  Exits when the pool drops the channel.
+///
+/// Both `Err` returns and panics inside the episode (caught so the thread
+/// survives; the next begin resets the env completely) are surfaced
+/// through the fail key, so the collector aborts the iteration instead of
+/// running into its poll timeout.
+fn worker_loop(mut env: LesEnv, client: Client, idx: usize, rx: mpsc::Receiver<Begin>) {
+    while let Ok(Begin { proto, mut rng }) = rx.recv() {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_episode(&mut env, &client, &proto, idx, &mut rng)
+        }));
+        let failure = match outcome {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(format!("{e:#}")),
+            Err(payload) => Some(format!("panic: {}", panic_message(&payload))),
+        };
+        if let Some(msg) = failure {
+            client.put_bytes(&proto.fail_key(idx), msg.into_bytes());
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// One episode of the paper's env side (Fig. 2 right): reset from the
+/// truth pool, then state-out / action-in / error-out per RL step, with
+/// the done-flag raised at termination.
+fn run_episode(
+    env: &mut LesEnv,
+    client: &Client,
+    proto: &Protocol,
+    idx: usize,
+    rng: &mut Rng,
+) -> Result<()> {
+    let obs = env.reset(rng, false);
+    client.put_tensor(&proto.state_key(idx, 0), vec![obs.len()], obs);
+    let abort_key = proto.abort_key();
+    for t in 0..env.n_actions() {
+        let action_key = proto.action_key(idx, t);
+        let (hit, act) = client
+            .poll_any(&[&action_key, &abort_key], POLL_TIMEOUT)
+            .with_context(|| format!("env {idx}: no action at step {t}"))?;
+        anyhow::ensure!(hit == 0, "env {idx}: iteration aborted at step {t}");
+        // Consume the action (seed semantics): only the shared abort flag
+        // must stay readable by every worker, so the subscription above is
+        // non-consuming and the action is deleted explicitly.
+        client.delete(&action_key);
+        let cs: Vec<f64> = act
+            .as_tensor()
+            .context("action must be a tensor")?
+            .1
+            .iter()
+            .map(|&a| a as f64)
+            .collect();
+        let out = env.step(&cs);
+        client.put_scalar(&proto.error_key(idx, t), out.spec_error);
+        if out.done {
+            client.put_flag(&proto.done_key(idx), true);
+            break;
+        }
+        let obs = env.observe();
+        client.put_tensor(&proto.state_key(idx, t + 1), vec![obs.len()], obs);
+    }
+    Ok(())
 }

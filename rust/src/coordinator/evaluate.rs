@@ -22,7 +22,11 @@ pub struct EvalResult {
     pub cs_samples: Vec<f64>,
 }
 
-/// Deterministic policy rollout (mean actions) on the test state.
+/// Deterministic policy rollout (mean actions) on the test state,
+/// constructing a fresh environment (grid included) per call.  Prefer
+/// [`eval_policy_in`] when a reusable environment is available — the
+/// training loop keeps one alive so steady-state evaluation allocates
+/// nothing grid-sized.
 pub fn eval_policy(
     cfg: &RunConfig,
     truth: &Arc<Truth>,
@@ -31,6 +35,18 @@ pub fn eval_policy(
     stochastic_rng: Option<&mut Rng>,
 ) -> Result<EvalResult> {
     let mut env = LesEnv::new(&cfg.case, &cfg.solver, truth.clone())?;
+    eval_policy_in(&mut env, cfg, policy, theta, stochastic_rng)
+}
+
+/// Deterministic policy rollout (mean actions) on the test state, run in
+/// a caller-owned environment.
+pub fn eval_policy_in(
+    env: &mut LesEnv,
+    cfg: &RunConfig,
+    policy: &PolicyRuntime,
+    theta: &[f32],
+    stochastic_rng: Option<&mut Rng>,
+) -> Result<EvalResult> {
     let n_elems = env.n_elems();
     let mut rng_holder = stochastic_rng;
     let mut reset_rng = Rng::new(0); // unused for the test state

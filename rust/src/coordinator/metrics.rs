@@ -19,10 +19,15 @@ pub struct IterationMetrics {
     pub sample_time_s: f64,
     pub train_time_s: f64,
     pub policy_time_s: f64,
+    /// Seconds the collector spent blocked waiting for env arrivals.
+    pub idle_time_s: f64,
     /// PPO diagnostics (averaged over the iteration's minibatches).
     pub loss: f64,
     pub clip_frac: f64,
     pub approx_kl: f64,
+    /// Mean normalized return per scenario variant (empty when the pool
+    /// is homogeneous); console-only, the CSV schema stays fixed.
+    pub variant_returns: Vec<(String, f64)>,
 }
 
 /// Collects records and mirrors them to CSV + console.
@@ -31,7 +36,7 @@ pub struct MetricsLog {
     csv: Option<CsvWriter>,
 }
 
-const HEADER: [&str; 11] = [
+const HEADER: [&str; 12] = [
     "iteration",
     "return_mean",
     "return_min",
@@ -40,6 +45,7 @@ const HEADER: [&str; 11] = [
     "sample_time_s",
     "train_time_s",
     "policy_time_s",
+    "idle_time_s",
     "loss",
     "clip_frac",
     "approx_kl",
@@ -76,6 +82,14 @@ impl MetricsLog {
             m.train_time_s,
             m.approx_kl,
         );
+        if !m.variant_returns.is_empty() {
+            let parts: Vec<String> = m
+                .variant_returns
+                .iter()
+                .map(|(name, r)| format!("{name} {r:+.4}"))
+                .collect();
+            println!("           variants: {}", parts.join("  "));
+        }
         if let Some(csv) = &mut self.csv {
             csv.row(&[
                 m.iteration.to_string(),
@@ -86,6 +100,7 @@ impl MetricsLog {
                 format!("{}", m.sample_time_s),
                 format!("{}", m.train_time_s),
                 format!("{}", m.policy_time_s),
+                format!("{}", m.idle_time_s),
                 format!("{}", m.loss),
                 format!("{}", m.clip_frac),
                 format!("{}", m.approx_kl),

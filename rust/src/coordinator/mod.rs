@@ -1,15 +1,17 @@
 //! The Layer-3 coordinator — the paper's system contribution (Relexi):
-//! synchronous PPO training of an LES turbulence model with parallel
-//! environment workers coupled through the in-memory orchestrator, the
-//! compiled JAX/Pallas policy and train-step artifacts on the hot path,
-//! and evaluation utilities for the paper's Fig. 5 comparisons.
+//! PPO training of an LES turbulence model with a persistent pool of
+//! parallel environment workers coupled through the in-memory
+//! orchestrator (event-driven arrival-order collection, lock-step
+//! reference retained), the compiled JAX/Pallas policy and train-step
+//! artifacts on the hot path, and evaluation utilities for the paper's
+//! Fig. 5 comparisons.
 
 pub mod envpool;
 pub mod evaluate;
 pub mod metrics;
 pub mod training;
 
-pub use envpool::{EnvPool, Rollouts};
-pub use evaluate::{eval_baseline, eval_policy, EvalResult};
+pub use envpool::{EnvPool, PoolCounters, Rollouts};
+pub use evaluate::{eval_baseline, eval_policy, eval_policy_in, EvalResult};
 pub use metrics::{IterationMetrics, MetricsLog};
 pub use training::TrainingLoop;

@@ -1,13 +1,17 @@
-//! The Relexi training loop (Algorithm 1): launch orchestrator, repeat
-//! {start env batch -> sample synchronously -> PPO update}, evaluating on
-//! the held-out state every `eval_every` iterations.
+//! The Relexi training loop (Algorithm 1): launch orchestrator, build the
+//! persistent env pool once, repeat {begin iteration -> event-driven
+//! sampling -> PPO update}, evaluating on the held-out state every
+//! `eval_every` iterations.  After iteration 0 the loop spawns no threads
+//! and rebuilds no `LesEnv`/`Grid` instances: workers outlive iterations
+//! and the evaluation environment is constructed once on the pool's
+//! shared grid.
 
 use super::envpool::EnvPool;
-use super::evaluate::eval_policy;
+use super::evaluate::eval_policy_in;
 use super::metrics::{IterationMetrics, MetricsLog};
 use crate::config::RunConfig;
 use crate::orchestrator::{Orchestrator, Protocol};
-use crate::rl::{flatten, max_return};
+use crate::rl::{flatten, max_return, LesEnv};
 use crate::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
 use crate::solver::dns::Truth;
 use crate::util::binio::write_f32_vec;
@@ -25,11 +29,14 @@ pub struct TrainingLoop {
     pub trainer: TrainerRuntime,
     pub orch: Orchestrator,
     pool: EnvPool,
+    /// Held-out-state evaluation env, built once on the pool's grid.
+    eval_env: LesEnv,
     rng: Rng,
 }
 
 impl TrainingLoop {
-    /// Wire up runtime, artifacts, orchestrator and env pool.
+    /// Wire up runtime, artifacts, orchestrator and the persistent env
+    /// pool (workers and environments are constructed here, once).
     pub fn new(cfg: RunConfig, truth: Arc<Truth>) -> Result<TrainingLoop> {
         cfg.validate()?;
         let rt = Runtime::cpu()?;
@@ -38,7 +45,8 @@ impl TrainingLoop {
         let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
         let trainer = TrainerRuntime::load(&rt, &reg, cfg.case.n, cfg.rl.minibatch)?;
         let orch = Orchestrator::launch(cfg.hpc.db_shards);
-        let pool = EnvPool::new(cfg.clone(), truth.clone());
+        let pool = EnvPool::new(cfg.clone(), truth.clone(), &orch)?;
+        let eval_env = LesEnv::with_grid(&cfg.case, &cfg.solver, truth.clone(), pool.grid())?;
         let rng = Rng::new(cfg.rl.seed);
         Ok(TrainingLoop {
             cfg,
@@ -47,14 +55,13 @@ impl TrainingLoop {
             trainer,
             orch,
             pool,
+            eval_env,
             rng,
         })
     }
 
     /// Run `iterations` training iterations; returns the metrics log.
     pub fn run(&mut self, log: &mut MetricsLog) -> Result<()> {
-        let n_actions = self.cfg.steps_per_episode();
-        let norm = max_return(n_actions, self.cfg.rl.gamma);
         let out_dir = PathBuf::from(&self.cfg.out_dir);
         std::fs::create_dir_all(&out_dir)?;
 
@@ -71,11 +78,38 @@ impl TrainingLoop {
             )?;
             self.orch.clear(); // drop this iteration's keys
 
+            // Normalize per episode: heterogeneous variants may run
+            // different horizons, so each return is scaled by its own
+            // maximum achievable return.
             let returns: Vec<f64> = rollouts
                 .episodes
                 .iter()
-                .map(|e| e.discounted_return(self.cfg.rl.gamma) / norm)
+                .map(|e| {
+                    e.discounted_return(self.cfg.rl.gamma)
+                        / max_return(e.steps.len().max(1), self.cfg.rl.gamma)
+                })
                 .collect();
+
+            // Per-variant bookkeeping (console metrics for mixed pools).
+            let variant_returns: Vec<(String, f64)> = if self.cfg.n_variants() > 1 {
+                (0..self.cfg.n_variants())
+                    .map(|v| {
+                        let rs: Vec<f64> = rollouts
+                            .episodes
+                            .iter()
+                            .zip(&returns)
+                            .filter(|(e, _)| e.variant == v)
+                            .map(|(_, &r)| r)
+                            .collect();
+                        (
+                            self.cfg.rl.variants[v].name.clone(),
+                            crate::util::stats::mean(&rs),
+                        )
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
 
             // --- update phase (lines 14-16) ------------------------------
             let t_train = Instant::now();
@@ -107,13 +141,13 @@ impl TrainingLoop {
             }
             let train_time_s = t_train.elapsed().as_secs_f64();
 
-            // --- evaluation on the held-out state -----------------------
+            // --- evaluation on the held-out state (persistent env) ------
             let test_return = if self.cfg.rl.eval_every > 0
                 && it % self.cfg.rl.eval_every == 0
             {
                 Some(
-                    eval_policy(&self.cfg, &self.truth, &self.policy,
-                                self.trainer.theta(), None)?
+                    eval_policy_in(&mut self.eval_env, &self.cfg, &self.policy,
+                                   self.trainer.theta(), None)?
                     .normalized_return,
                 )
             } else {
@@ -129,15 +163,23 @@ impl TrainingLoop {
                 sample_time_s: rollouts.sample_time_s,
                 train_time_s,
                 policy_time_s: rollouts.policy_time_s,
+                idle_time_s: rollouts.idle_time_s,
                 loss: loss_acc / n_mb.max(1) as f64,
                 clip_frac: clip_acc / n_mb.max(1) as f64,
                 approx_kl: kl_acc / n_mb.max(1) as f64,
+                variant_returns,
             })?;
         }
 
         // Final checkpoint.
         self.save_checkpoint(&out_dir.join("policy_final.bin"))?;
         Ok(())
+    }
+
+    /// Worker-pool construction counters: steady-state iterations must
+    /// leave everything but `iterations` untouched.
+    pub fn pool_counters(&self) -> super::PoolCounters {
+        self.pool.counters()
     }
 
     /// Persist the current flat parameter vector.

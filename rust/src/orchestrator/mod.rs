@@ -78,6 +78,11 @@ impl Client {
         self.store.put(key, Value::Scalar(v));
     }
 
+    /// Write opaque bytes (failure reports, metadata).
+    pub fn put_bytes(&self, key: &str, v: Vec<u8>) {
+        self.store.put(key, Value::Bytes(v));
+    }
+
     /// Non-blocking read.
     pub fn get(&self, key: &str) -> Option<Value> {
         self.store.get(key)
@@ -91,6 +96,18 @@ impl Client {
     /// Blocking poll that consumes the value.
     pub fn poll_take(&self, key: &str, timeout: Duration) -> Option<Value> {
         self.store.wait_take(key, timeout)
+    }
+
+    /// Blocking multi-key subscription: first of `keys` to appear wins
+    /// (ties broken by argument order).  The arrival-order primitive the
+    /// event-driven rollout collector consumes states through.
+    pub fn poll_any(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+        self.store.wait_any(keys, timeout)
+    }
+
+    /// Like [`Client::poll_any`], but consumes the returned value.
+    pub fn poll_any_take(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+        self.store.wait_any_take(keys, timeout)
     }
 
     /// Delete a key.

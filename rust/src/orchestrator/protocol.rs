@@ -7,6 +7,14 @@
 //!
 //! Step indices in the keys prevent stale reads without needing message
 //! queues, mirroring how Relexi names tensors in the SmartSim database.
+//! The run tag namespaces one sampling phase; persistent workers receive
+//! a fresh `Protocol` in each iteration's begin message, so one worker
+//! thread serves many iterations without key collisions.
+//!
+//! The trainer may consume these keys either lock-step (one blocking poll
+//! per env, the paper's synchronous baseline) or event-driven through
+//! [`crate::orchestrator::Client::poll_any_take`], in whichever order envs
+//! finish — the key names are identical in both modes.
 
 /// Key builder for one training run.
 #[derive(Debug, Clone)]
@@ -20,6 +28,11 @@ impl Protocol {
         Protocol {
             run_tag: run_tag.to_string(),
         }
+    }
+
+    /// The namespacing tag this protocol was built with.
+    pub fn run_tag(&self) -> &str {
+        &self.run_tag
     }
 
     /// State tensor written by env `env` after RL step `step`.
@@ -41,6 +54,20 @@ impl Protocol {
     pub fn done_key(&self, env: usize) -> String {
         format!("{}:e{}:done", self.run_tag, env)
     }
+
+    /// Failure report from env `env` (worker error message as bytes).
+    /// Subscribed to by the collector so a failing worker aborts the
+    /// iteration immediately instead of timing out a blocking poll.
+    pub fn fail_key(&self, env: usize) -> String {
+        format!("{}:e{}:fail", self.run_tag, env)
+    }
+
+    /// Run-wide abort flag: workers subscribe to it alongside their
+    /// action key, so a pool teardown mid-iteration unblocks them
+    /// immediately instead of running out the poll timeout.
+    pub fn abort_key(&self) -> String {
+        format!("{}:abort", self.run_tag)
+    }
 }
 
 #[cfg(test)]
@@ -55,6 +82,8 @@ mod tests {
         assert_ne!(p.state_key(0, 1), p.state_key(0, 0));
         assert_ne!(p.action_key(0, 0), p.state_key(0, 0));
         assert_ne!(p.error_key(0, 0), p.state_key(0, 0));
+        assert_ne!(p.fail_key(0), p.done_key(0));
+        assert_eq!(p.run_tag(), "it3");
     }
 
     #[test]

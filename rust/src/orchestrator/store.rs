@@ -9,11 +9,18 @@
 //! * a 1-shard store — every operation serializes on one lock, the
 //!   single-threaded-Redis analogue.
 //!
+//! Blocking reads come in two shapes, both condvar-backed (no
+//! spin-polling): single-key ([`ShardedStore::wait_for`] /
+//! [`ShardedStore::wait_take`], the SmartRedis `poll_tensor` analogue)
+//! and multi-key ([`ShardedStore::wait_any`] /
+//! [`ShardedStore::wait_any_take`]), the arrival-order subscription the
+//! event-driven rollout collector consumes env states through.
+//!
 //! `bench_db` regenerates the comparison (experiment A1 in DESIGN.md §6).
 
 use super::value::Value;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -44,9 +51,44 @@ struct Shard {
     cv: Condvar,
 }
 
+/// Store-wide notifier for multi-key subscriptions ([`ShardedStore::wait_any`]).
+///
+/// Single-key waiters park on their shard's condvar, but a multi-key waiter
+/// may span shards, so it parks on this store-level sequence lock instead:
+/// every mutation that could satisfy a subscription bumps `seq` and wakes
+/// all subscribers, which then re-scan their key set.  The `waiters` count
+/// keeps the common case (no multi-key waiter) free of the extra lock.
+#[derive(Default)]
+struct MultiWait {
+    seq: Mutex<u64>,
+    cv: Condvar,
+    waiters: AtomicUsize,
+}
+
+impl MultiWait {
+    fn bump(&self) {
+        if self.waiters.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut seq = self.seq.lock().unwrap();
+        *seq = seq.wrapping_add(1);
+        self.cv.notify_all();
+    }
+}
+
+/// Decrements the subscriber count on every exit path of `wait_any`.
+struct WaiterGuard<'a>(&'a AtomicUsize);
+
+impl Drop for WaiterGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Sharded in-memory key-value store.
 pub struct ShardedStore {
     shards: Vec<Shard>,
+    multi: MultiWait,
     stats: StoreStats,
 }
 
@@ -70,6 +112,7 @@ impl ShardedStore {
                     cv: Condvar::new(),
                 })
                 .collect(),
+            multi: MultiWait::default(),
             stats: StoreStats::default(),
         }
     }
@@ -94,6 +137,8 @@ impl ShardedStore {
         let mut map = shard.map.lock().unwrap();
         map.insert(key.to_string(), value);
         shard.cv.notify_all();
+        drop(map);
+        self.multi.bump();
     }
 
     /// Fetch a clone of the value, if present.
@@ -136,11 +181,15 @@ impl ShardedStore {
         self.shard(key).map.lock().unwrap().remove(key).is_some()
     }
 
-    /// Remove everything (between training iterations).
+    /// Remove everything (between training iterations).  Waiters (both
+    /// single-key and multi-key) are woken so they re-check and, finding
+    /// their keys gone, go back to waiting until their timeout.
     pub fn clear(&self) {
         for s in &self.shards {
             s.map.lock().unwrap().clear();
+            s.cv.notify_all();
         }
+        self.multi.bump();
     }
 
     /// Total number of stored keys.
@@ -204,6 +253,78 @@ impl ShardedStore {
             map = m;
             if res.timed_out() && !map.contains_key(key) {
                 return None;
+            }
+        }
+    }
+
+    /// Blocking multi-key subscription: wait until **any** of `keys`
+    /// appears and return `(index, value)` for the first one found
+    /// (scanning in argument order, so earlier keys win ties).  Returns
+    /// `None` on timeout.
+    ///
+    /// This is the arrival-order primitive behind the event-driven rollout
+    /// collector: instead of blocking on one env's state while others sit
+    /// ready (the per-key `poll` pattern whose synchronization overhead
+    /// paper §6.2 measures), the trainer subscribes to every outstanding
+    /// key at once and is woken by whichever env finishes first.
+    /// Condvar-backed — no spin-polling.
+    pub fn wait_any(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+        self.wait_any_impl(keys, timeout, false)
+    }
+
+    /// Like [`ShardedStore::wait_any`], but atomically consumes the value
+    /// it returns (at most one key is removed per call).
+    pub fn wait_any_take(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+        self.wait_any_impl(keys, timeout, true)
+    }
+
+    fn wait_any_impl(
+        &self,
+        keys: &[&str],
+        timeout: Duration,
+        take: bool,
+    ) -> Option<(usize, Value)> {
+        if keys.is_empty() {
+            return None;
+        }
+        let deadline = Instant::now() + timeout;
+        // Register before the first scan: a put that misses the waiter
+        // count must have completed its insert already, so the scan below
+        // observes the key; a put that sees the count bumps `seq`.
+        self.multi.waiters.fetch_add(1, Ordering::SeqCst);
+        let _guard = WaiterGuard(&self.multi.waiters);
+        loop {
+            // Snapshot the sequence BEFORE scanning: a put landing during
+            // the scan advances it and turns the wait below into a rescan.
+            let seq0 = *self.multi.seq.lock().unwrap();
+            for (i, key) in keys.iter().enumerate() {
+                let hit = if take { self.take(key) } else { self.get(key) };
+                if let Some(v) = hit {
+                    return Some((i, v));
+                }
+            }
+            // Re-check the deadline after every scan: sustained puts on
+            // unrelated keys keep advancing `seq`, and without this the
+            // rescan loop would never consult the timeout.
+            if Instant::now() >= deadline {
+                return None;
+            }
+            self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
+            let mut seq = self.multi.seq.lock().unwrap();
+            while *seq == seq0 {
+                let now = Instant::now();
+                if now >= deadline {
+                    return None;
+                }
+                let (s, res) = self
+                    .multi
+                    .cv
+                    .wait_timeout(seq, deadline - now)
+                    .unwrap();
+                seq = s;
+                if res.timed_out() && *seq == seq0 {
+                    return None;
+                }
             }
         }
     }
@@ -306,6 +427,184 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn wait_any_returns_existing_key_with_priority() {
+        let s = ShardedStore::new(4);
+        s.put("b", Value::Scalar(2.0));
+        s.put("a", Value::Scalar(1.0));
+        // Argument order, not insertion order, breaks the tie.
+        let (i, v) = s
+            .wait_any(&["a", "b"], Duration::from_secs(1))
+            .expect("both present");
+        assert_eq!((i, v), (0, Value::Scalar(1.0)));
+        // Non-consuming: both keys still there.
+        assert!(s.exists("a") && s.exists("b"));
+    }
+
+    #[test]
+    fn wait_any_times_out_empty_and_missing() {
+        let s = ShardedStore::new(2);
+        assert!(s.wait_any(&[], Duration::from_secs(5)).is_none());
+        let t0 = Instant::now();
+        assert!(s
+            .wait_any(&["x", "y"], Duration::from_millis(30))
+            .is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert!(t0.elapsed() < Duration::from_secs(4));
+    }
+
+    #[test]
+    fn wait_any_sees_concurrent_put_on_any_key() {
+        let s = Arc::new(ShardedStore::new(8));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.put("k7", Value::Scalar(7.0));
+        });
+        let (i, v) = s
+            .wait_any(&["k3", "k5", "k7"], Duration::from_secs(5))
+            .expect("concurrent put must wake the waiter");
+        h.join().unwrap();
+        assert_eq!((i, v), (2, Value::Scalar(7.0)));
+    }
+
+    #[test]
+    fn wait_any_take_consumes_exactly_one() {
+        let s = ShardedStore::new(4);
+        s.put("a", Value::Scalar(1.0));
+        s.put("b", Value::Scalar(2.0));
+        let (i, _) = s.wait_any_take(&["a", "b"], Duration::from_secs(1)).unwrap();
+        assert_eq!(i, 0);
+        assert!(!s.exists("a"));
+        assert!(s.exists("b"));
+    }
+
+    #[test]
+    fn wait_any_take_racing_waiters_split_the_values() {
+        // Two consumers subscribe to the same 16-key set; every value is
+        // delivered to exactly one of them (takes are exclusive).
+        let s = Arc::new(ShardedStore::new(8));
+        let names: Vec<String> = (0..16).map(|i| format!("k{i}")).collect();
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let s = s.clone();
+            let names = names.clone();
+            consumers.push(std::thread::spawn(move || {
+                let keys: Vec<&str> = names.iter().map(|n| n.as_str()).collect();
+                let mut got = Vec::new();
+                for _ in 0..8 {
+                    if let Some((i, _)) = s.wait_any_take(&keys, Duration::from_secs(10)) {
+                        got.push(i);
+                    }
+                }
+                got
+            }));
+        }
+        let producer = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for i in 0..16 {
+                    s.put(&format!("k{i}"), Value::Scalar(i as f64));
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        };
+        producer.join().unwrap();
+        let mut taken = Vec::new();
+        for c in consumers {
+            taken.extend(c.join().unwrap());
+        }
+        // 16 distinct values produced, 16 exclusive takes demanded: every
+        // key is delivered exactly once across the two consumers.
+        taken.sort_unstable();
+        assert_eq!(taken, (0..16).collect::<Vec<_>>());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn clear_racing_a_waiter_wakes_then_times_out() {
+        let s = Arc::new(ShardedStore::new(4));
+        s.put("noise", Value::Scalar(0.0));
+        let s2 = s.clone();
+        let clearer = std::thread::spawn(move || {
+            for _ in 0..50 {
+                s2.put("noise", Value::Scalar(1.0));
+                s2.clear();
+            }
+        });
+        // The waiter's key never survives a clear; it must neither hang
+        // nor panic, and must time out once the noise stops.
+        let t0 = Instant::now();
+        let got = s.wait_any(&["never"], Duration::from_millis(80));
+        clearer.join().unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(75));
+        // Same race for the single-key path.
+        assert!(s.wait_for("never2", Duration::from_millis(30)).is_none());
+    }
+
+    #[test]
+    fn wait_any_timeout_holds_under_unrelated_traffic() {
+        // Sustained puts on other keys keep waking the subscriber; the
+        // timeout must still be honored (bounded overshoot).
+        let s = Arc::new(ShardedStore::new(4));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let s = s.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    s.put(&format!("noise{}", i % 64), Value::Scalar(i as f64));
+                    i += 1;
+                }
+            })
+        };
+        let t0 = Instant::now();
+        let got = s.wait_any(&["absent1", "absent2"], Duration::from_millis(100));
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(95));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout starved by unrelated puts: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn wait_any_under_multithread_contention() {
+        // N producers each publish a distinct key; one consumer drains
+        // them all in arrival order via repeated wait_any_take.
+        let s = Arc::new(ShardedStore::new(8));
+        let n = 16usize;
+        let mut producers = Vec::new();
+        for i in 0..n {
+            let s = s.clone();
+            producers.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis((i as u64 * 7) % 23));
+                s.put(&format!("p{i}"), Value::Scalar(i as f64));
+            }));
+        }
+        let names: Vec<String> = (0..n).map(|i| format!("p{i}")).collect();
+        let keys: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut seen = vec![false; n];
+        for _ in 0..n {
+            let (i, v) = s
+                .wait_any_take(&keys, Duration::from_secs(10))
+                .expect("all producers publish");
+            assert_eq!(v.as_scalar(), Some(i as f64));
+            assert!(!seen[i], "key p{i} delivered twice");
+            seen[i] = true;
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert!(seen.iter().all(|&x| x));
+        assert!(s.is_empty());
     }
 
     #[test]

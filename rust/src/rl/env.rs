@@ -42,6 +42,10 @@ pub struct LesEnv {
     pub step_idx: usize,
     /// Reused spectrum bins for the per-step reward (no per-step alloc).
     spec: Vec<f64>,
+    /// `Some((family, n_families))`: draw initial states only from pool
+    /// indices congruent to `family` mod `n_families` (disjoint
+    /// initial-state families across a heterogeneous pool).
+    init_family: Option<(usize, usize)>,
 }
 
 impl LesEnv {
@@ -85,7 +89,22 @@ impl LesEnv {
             forcing_tau: scfg.forcing_tau,
             step_idx: 0,
             spec: vec![0.0; nbins],
+            init_family: None,
         })
+    }
+
+    /// Restrict initial-state draws to one family of the truth pool
+    /// (indices ≡ `family` mod `n_families`).  The family must be
+    /// non-empty for this truth's pool size.
+    pub fn set_init_family(&mut self, family: usize, n_families: usize) -> Result<()> {
+        anyhow::ensure!(n_families >= 1 && family < n_families);
+        anyhow::ensure!(
+            self.truth.states.len() > family,
+            "init family {family}/{n_families} is empty: truth pool has only {} states",
+            self.truth.states.len()
+        );
+        self.init_family = Some((family, n_families));
+        Ok(())
     }
 
     /// Number of elements (= actions per step).
@@ -99,12 +118,22 @@ impl LesEnv {
     }
 
     /// Reset to a random pool state (or the held-out test state); returns
-    /// the initial observation.
+    /// the initial observation.  With an init family set, the draw is
+    /// restricted to that family's pool indices (one RNG draw either way,
+    /// so the consumption pattern is family-independent).
     pub fn reset(&mut self, rng: &mut Rng, test: bool) -> Vec<f32> {
         let flat = if test {
             &self.truth.test_state
         } else {
-            &self.truth.states[rng.below(self.truth.states.len())]
+            let len = self.truth.states.len();
+            let idx = match self.init_family {
+                Some((family, m)) => {
+                    let count = (len + m - 1 - family) / m; // #indices ≡ family (mod m)
+                    family + rng.below(count) * m
+                }
+                None => rng.below(len),
+            };
+            &self.truth.states[idx]
         };
         let state = unpack_state(&self.solver.grid, flat);
         self.solver.set_state(state);
@@ -215,6 +244,30 @@ mod tests {
         let o1 = env1.reset(&mut rng1, true);
         let o2 = env2.reset(&mut rng2, true);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn init_family_restricts_the_pool() {
+        // With 3 truth states and 3 families, each family has exactly one
+        // state: every reset in a family must reproduce the same obs.
+        let (case, scfg, truth) = tiny_setup();
+        let mut rng = Rng::new(7);
+        let mut per_family = Vec::new();
+        for fam in 0..3 {
+            let mut env = LesEnv::new(&case, &scfg, truth.clone()).unwrap();
+            env.set_init_family(fam, 3).unwrap();
+            let a = env.reset(&mut rng, false);
+            let b = env.reset(&mut rng, false);
+            assert_eq!(a, b, "family {fam} has one state; resets must match");
+            per_family.push(a);
+        }
+        // Distinct families start from distinct states.
+        assert_ne!(per_family[0], per_family[1]);
+        assert_ne!(per_family[1], per_family[2]);
+        // Empty family rejected (family index beyond the pool).
+        let mut env = LesEnv::new(&case, &scfg, truth).unwrap();
+        assert!(env.set_init_family(3, 4).is_err());
+        assert!(env.set_init_family(2, 2).is_err());
     }
 
     #[test]

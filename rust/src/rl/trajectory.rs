@@ -28,6 +28,9 @@ pub struct StepRecord {
 #[derive(Debug, Clone, Default)]
 pub struct Episode {
     pub steps: Vec<StepRecord>,
+    /// Scenario-family index this episode was sampled under (0 for a
+    /// homogeneous pool) — per-variant bookkeeping in the metrics.
+    pub variant: usize,
 }
 
 impl Episode {
@@ -183,6 +186,7 @@ mod tests {
                     reward: r,
                 })
                 .collect(),
+            ..Episode::default()
         }
     }
 

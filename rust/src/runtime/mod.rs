@@ -10,5 +10,5 @@ pub mod trainer;
 
 pub use artifact::{ArtifactKind, Registry};
 pub use executor::{Executable, HostTensor, Runtime};
-pub use policy::{PolicyOut, PolicyRuntime};
+pub use policy::{plan_chunks, stub_policy, PolicyOut, PolicyRuntime};
 pub use trainer::{Minibatch, TrainMetrics, TrainerRuntime};

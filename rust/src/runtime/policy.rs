@@ -1,10 +1,71 @@
 //! Policy-inference runtime: batched evaluation of the compiled
 //! `policy_fwd` artifacts with automatic chunking/padding across the
 //! available static batch sizes.
+//!
+//! The event-driven rollout collector produces *variable-size* forward
+//! batches (whatever arrived), so the chunk plan matters: filling the
+//! largest compiled batch that fits before padding a tail chunk keeps the
+//! wasted (zero-padded) FLOPs bounded by one minimal chunk, instead of
+//! padding the whole request up to the next compiled size.
 
 use super::artifact::{ArtifactKind, Registry};
 use super::executor::{Executable, HostTensor, Runtime};
 use anyhow::{Context, Result};
+
+/// Deterministic policy stand-in with the `forward` closure shape the
+/// rollout collector consumes (`(obs, n_samples) -> PolicyOut`): mean and
+/// value are pure functions of the observation, log_std is fixed.  Used
+/// by benches and artifact-free integration tests to drive the full
+/// worker-pool/orchestrator stack without compiled artifacts — one shared
+/// definition so the bitwise-equivalence test and the bench exercise the
+/// same policy.
+pub fn stub_policy(obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+    anyhow::ensure!(
+        n_samples > 0 && obs.len() % n_samples == 0,
+        "obs len {} must split evenly over {n_samples} samples",
+        obs.len()
+    );
+    let feat = obs.len() / n_samples;
+    let mut mean = Vec::with_capacity(n_samples);
+    let mut value = Vec::with_capacity(n_samples);
+    for k in 0..n_samples {
+        let s: f32 = obs[k * feat..(k + 1) * feat].iter().map(|x| x.abs()).sum();
+        let m = (s / feat as f32).clamp(0.0, 0.4);
+        mean.push(m);
+        value.push(0.1 * m - 0.05);
+    }
+    Ok(PolicyOut {
+        mean,
+        log_std: -1.2,
+        value,
+    })
+}
+
+/// Plan a variable-size request over the compiled batch sizes
+/// (`batches` ascending): greedily fill the largest batch that fits, then
+/// pad the remainder in the smallest batch that covers it.  Returns
+/// `(batch, take)` pairs with `sum(take) == n_samples`.
+pub fn plan_chunks(batches: &[usize], n_samples: usize) -> Vec<(usize, usize)> {
+    assert!(!batches.is_empty(), "no compiled batch sizes");
+    let mut plan = Vec::new();
+    let mut remaining = n_samples;
+    while remaining > 0 {
+        // Largest compiled batch fully covered by the remainder...
+        if let Some(&b) = batches.iter().rev().find(|&&b| b <= remaining) {
+            plan.push((b, b));
+            remaining -= b;
+        } else {
+            // ...else the smallest batch that covers the (padded) tail.
+            let &b = batches
+                .iter()
+                .find(|&&b| b >= remaining)
+                .expect("ascending batches must cover the tail");
+            plan.push((b, remaining));
+            remaining = 0;
+        }
+    }
+    plan
+}
 
 /// Output of a policy evaluation over a batch of element observations.
 #[derive(Debug, Clone)]
@@ -30,8 +91,9 @@ pub struct PolicyRuntime {
 impl PolicyRuntime {
     /// Compile every available `policy_fwd` batch size for degree `n`.
     pub fn load(rt: &Runtime, reg: &Registry, n: usize) -> Result<PolicyRuntime> {
-        let batches = reg.batches(ArtifactKind::PolicyFwd, n);
+        let mut batches = reg.batches(ArtifactKind::PolicyFwd, n);
         anyhow::ensure!(!batches.is_empty(), "no policy_fwd artifacts for N={n}");
+        batches.sort_unstable(); // plan_chunks requires ascending sizes
         let mut exes = Vec::new();
         for b in batches {
             let exe = rt.load_hlo(reg.path(ArtifactKind::PolicyFwd, n, b)?)?;
@@ -65,10 +127,9 @@ impl PolicyRuntime {
         let mut value = Vec::with_capacity(n_samples);
         let mut log_std = 0.0f32;
         let mut done = 0usize;
-        while done < n_samples {
-            let remaining = n_samples - done;
-            let (b, exe) = self.pick(remaining);
-            let take = remaining.min(b);
+        let batches: Vec<usize> = self.exes.iter().map(|(b, _)| *b).collect();
+        for (b, take) in plan_chunks(&batches, n_samples) {
+            let exe = self.exe_for(b);
             let mut chunk = vec![0f32; b * self.feat];
             chunk[..take * self.feat]
                 .copy_from_slice(&obs[done * self.feat..(done + take) * self.feat]);
@@ -91,20 +152,22 @@ impl PolicyRuntime {
         Ok(PolicyOut { mean, log_std, value })
     }
 
-    /// Smallest compiled batch covering `remaining`, else the largest.
-    fn pick(&self, remaining: usize) -> (usize, &Executable) {
-        for (b, exe) in &self.exes {
-            if *b >= remaining {
-                return (*b, exe);
-            }
-        }
-        let (b, exe) = self.exes.last().unwrap();
-        (*b, exe)
+    /// The executable compiled for exactly batch `b` (plan entries always
+    /// name a compiled size).
+    fn exe_for(&self, b: usize) -> &Executable {
+        &self
+            .exes
+            .iter()
+            .find(|(eb, _)| *eb == b)
+            .expect("plan_chunks only emits compiled batch sizes")
+            .1
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::plan_chunks;
+
     #[test]
     fn feature_arithmetic() {
         // The chunking invariants are covered by the integration test
@@ -113,5 +176,34 @@ mod tests {
         assert_eq!(p.pow(3) * 3, 648); // N=5 obs features per element
         let p7 = 8usize;
         assert_eq!(p7.pow(3) * 3, 1536); // N=7
+    }
+
+    #[test]
+    fn plan_fills_largest_before_padding() {
+        let b = [64usize, 256, 1024];
+        assert_eq!(plan_chunks(&b, 64), vec![(64, 64)]);
+        assert_eq!(plan_chunks(&b, 40), vec![(64, 40)]);
+        // 65 pads one element into a second 64-batch, not a 256-batch.
+        assert_eq!(plan_chunks(&b, 65), vec![(64, 64), (64, 1)]);
+        assert_eq!(plan_chunks(&b, 300), vec![(256, 256), (64, 44)]);
+        assert_eq!(
+            plan_chunks(&b, 1024 + 256 + 64 + 3),
+            vec![(1024, 1024), (256, 256), (64, 64), (64, 3)]
+        );
+    }
+
+    #[test]
+    fn plan_covers_any_request() {
+        let b = [8usize, 32];
+        for n in 1..200 {
+            let plan = plan_chunks(&b, n);
+            let taken: usize = plan.iter().map(|(_, t)| t).sum();
+            assert_eq!(taken, n, "plan must cover exactly n={n}");
+            for (batch, take) in plan {
+                assert!(b.contains(&batch));
+                assert!(take <= batch && take > 0);
+            }
+        }
+        assert!(plan_chunks(&b, 0).is_empty());
     }
 }

@@ -72,10 +72,11 @@ impl Bench {
             f();
             warm_iters += 1;
         }
-        // Estimate per-iter cost from warmup to size the sample count.
+        // Estimate per-iter cost from warmup to size the sample count
+        // (at least 3, unless the caller capped max_samples below that).
         let per_iter = (w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
         let samples = ((self.target.as_secs_f64() / per_iter) as usize)
-            .clamp(3, self.max_samples);
+            .clamp(self.max_samples.min(3), self.max_samples);
 
         let mut times = Vec::with_capacity(samples);
         for _ in 0..samples {
@@ -234,6 +235,18 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.iters >= 3);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn max_samples_below_three_does_not_panic() {
+        let mut b = Bench::new("t")
+            .with_warmup(Duration::from_millis(0))
+            .with_target(Duration::from_millis(5))
+            .with_max_samples(1);
+        let m = b.run("single-sample", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(m.iters, 1);
     }
 
     #[test]

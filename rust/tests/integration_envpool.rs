@@ -1,0 +1,233 @@
+//! Integration: the persistent event-driven environment runtime.
+//!
+//! These tests drive the real worker pool (OS threads, real LES solver,
+//! real orchestrator traffic) through `EnvPool::collect_with` with a
+//! deterministic closure standing in for the compiled policy, so they run
+//! without `make artifacts`:
+//!
+//! * steady-state iterations spawn zero threads and rebuild zero
+//!   `LesEnv`/`Grid` instances (the PR's acceptance counter test);
+//! * event-driven full-batch collection reproduces the lock-step
+//!   reference bit-for-bit under a fixed seed — including heterogeneous
+//!   pools where a short-horizon variant terminates early (the
+//!   early-done deadlock regression);
+//! * `min_batch = 1` (fully event-driven) still completes every episode
+//!   with correct per-variant bookkeeping.
+
+use relexi::config::{CaseConfig, EnvVariant, RunConfig};
+use relexi::coordinator::EnvPool;
+use relexi::orchestrator::{Orchestrator, Protocol};
+use relexi::rl::{flatten, Episode};
+use relexi::runtime::stub_policy;
+use relexi::solver::dns::{generate, Truth, TruthParams};
+use relexi::util::Rng;
+use std::sync::Arc;
+
+/// Tiny 12^3 / 2^3-element case: 3 actions per episode at t_end = 0.3.
+fn tiny_cfg(n_envs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.case = CaseConfig {
+        name: "tiny".into(),
+        n: 5,
+        elems_per_dir: 2,
+        k_max: 3,
+        alpha: 0.4,
+    };
+    cfg.solver.t_end = 0.3;
+    cfg.solver.dns_points = 24;
+    cfg.rl.n_envs = n_envs;
+    cfg
+}
+
+fn tiny_truth(seed: u64) -> Arc<Truth> {
+    Arc::new(generate(
+        &TruthParams {
+            n_dns: 24,
+            n_les: 12,
+            nu: 1.0 / 45.0,
+            ke_target: 1.5,
+            spinup_time: 0.5,
+            n_states: 3,
+            sample_interval: 0.2,
+            seed,
+        },
+        |_, _| {},
+    ))
+}
+
+/// Three scenario families: base, a half-horizon variant (terminates two
+/// steps early relative to the base 4-step episode) and a high-viscosity
+/// variant, with disjoint initial-state families.
+fn heterogeneous_cfg() -> RunConfig {
+    let mut cfg = tiny_cfg(4);
+    cfg.solver.t_end = 0.4; // base horizon: 4 actions
+    cfg.rl.variants = vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "short".into(),
+            t_end_scale: 0.5,
+            ..EnvVariant::default()
+        },
+        EnvVariant {
+            name: "visc".into(),
+            nu_scale: 2.0,
+            alpha: Some(0.8),
+            ..EnvVariant::default()
+        },
+    ];
+    cfg.rl.split_init_pool = true;
+    cfg
+}
+
+fn assert_episodes_identical(a: &[Episode], b: &[Episode]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.variant, y.variant, "env {i} variant");
+        assert_eq!(x.steps.len(), y.steps.len(), "env {i} episode length");
+        for (t, (sx, sy)) in x.steps.iter().zip(&y.steps).enumerate() {
+            assert_eq!(sx.obs, sy.obs, "env {i} step {t} obs");
+            assert_eq!(sx.act, sy.act, "env {i} step {t} act");
+            assert_eq!(sx.logp, sy.logp, "env {i} step {t} logp");
+            assert_eq!(sx.value, sy.value, "env {i} step {t} value");
+            assert_eq!(
+                sx.reward.to_bits(),
+                sy.reward.to_bits(),
+                "env {i} step {t} reward"
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_state_spawns_nothing_and_rebuilds_nothing() {
+    let cfg = tiny_cfg(3);
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::new(cfg, tiny_truth(33), &orch).unwrap();
+
+    let c0 = pool.counters();
+    assert_eq!(c0.threads_spawned, n_envs);
+    assert_eq!(c0.envs_built, n_envs);
+    assert_eq!(c0.grids_built, 1);
+    assert_eq!(c0.iterations, 0);
+
+    let mut rng = Rng::new(5);
+    for it in 0..3 {
+        let proto = Protocol::new(&format!("it{it}"));
+        let rollouts = pool
+            .collect_with(&orch, &proto, stub_policy, &mut rng, false, n_envs)
+            .unwrap();
+        orch.clear();
+        assert_eq!(rollouts.episodes.len(), n_envs);
+        for ep in &rollouts.episodes {
+            assert_eq!(ep.steps.len(), 3, "t_end/dt_rl = 3 actions");
+            for s in &ep.steps {
+                assert!(s.reward.is_finite() && s.reward > -1.0 && s.reward <= 1.0);
+            }
+        }
+        assert!(rollouts.sample_time_s > 0.0);
+    }
+
+    // The acceptance gate: iterations >= 1 spawned zero threads and
+    // rebuilt zero LesEnv/Grid instances.
+    let c1 = pool.counters();
+    assert_eq!(c1.threads_spawned, c0.threads_spawned);
+    assert_eq!(c1.envs_built, c0.envs_built);
+    assert_eq!(c1.grids_built, c0.grids_built);
+    assert_eq!(c1.iterations, 3);
+}
+
+#[test]
+fn event_full_batch_matches_lockstep_bitwise() {
+    // Same seed, same truth, two independent pools: the event-driven
+    // collector at min_batch = n_envs must reproduce the lock-step
+    // reference bit-for-bit — heterogeneous horizons included (the short
+    // variant raises its done-flag two steps before the base horizon,
+    // which deadlocked the seed's gather loop).
+    let cfg = heterogeneous_cfg();
+    let n_envs = cfg.rl.n_envs;
+    let truth = tiny_truth(77);
+
+    let orch_a = Orchestrator::launch(4);
+    let mut pool_a = EnvPool::new(cfg.clone(), truth.clone(), &orch_a).unwrap();
+    let mut rng_a = Rng::new(42);
+    let lockstep = pool_a
+        .collect_lockstep_with(
+            &orch_a,
+            &Protocol::new("cmp"),
+            stub_policy,
+            &mut rng_a,
+            false,
+        )
+        .unwrap();
+
+    let orch_b = Orchestrator::launch(4);
+    let mut pool_b = EnvPool::new(cfg.clone(), truth, &orch_b).unwrap();
+    let mut rng_b = Rng::new(42);
+    let event = pool_b
+        .collect_with(
+            &orch_b,
+            &Protocol::new("cmp"),
+            stub_policy,
+            &mut rng_b,
+            false,
+            n_envs,
+        )
+        .unwrap();
+
+    assert_episodes_identical(&lockstep.episodes, &event.episodes);
+    // And the trainer RNGs advanced identically.
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+
+    // Episode lengths follow the variants: 4 (base), 2 (short), 4 (visc),
+    // 4 (base again, round-robin).
+    let lens: Vec<usize> = event.episodes.iter().map(|e| e.steps.len()).collect();
+    assert_eq!(lens, vec![4, 2, 4, 4]);
+    let variants: Vec<usize> = event.episodes.iter().map(|e| e.variant).collect();
+    assert_eq!(variants, vec![0, 1, 2, 0]);
+}
+
+#[test]
+fn min_batch_one_completes_heterogeneous_pool() {
+    let cfg = heterogeneous_cfg();
+    let orch = Orchestrator::launch(4);
+    let mut pool = EnvPool::new(cfg, tiny_truth(77), &orch).unwrap();
+    let mut rng = Rng::new(9);
+    let r = pool
+        .collect_with(&orch, &Protocol::new("mb1"), stub_policy, &mut rng, false, 1)
+        .unwrap();
+
+    let lens: Vec<usize> = r.episodes.iter().map(|e| e.steps.len()).collect();
+    assert_eq!(lens, vec![4, 2, 4, 4]);
+    for ep in &r.episodes {
+        for s in &ep.steps {
+            assert!(s.reward.is_finite() && s.reward > -1.0 && s.reward <= 1.0);
+            assert!(s.act.iter().all(|a| a.is_finite()));
+        }
+    }
+    // The flattened dataset still has one row per element-sample.
+    let feat = 6usize.pow(3) * 3;
+    let ds = flatten(&r.episodes, feat, 0.995, 1.0);
+    assert_eq!(ds.len(), (4 + 2 + 4 + 4) * 8);
+}
+
+#[test]
+fn smoke_one_iteration_two_envs() {
+    // The CI smoke entry: one sampling iteration with two envs through
+    // the full worker-pool + orchestrator + collector stack, then the
+    // trajectory pipeline.  (The PPO update itself needs compiled
+    // artifacts; integration_training covers it when they exist.)
+    let cfg = tiny_cfg(2);
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::new(cfg, tiny_truth(11), &orch).unwrap();
+    let mut rng = Rng::new(1);
+    let r = pool
+        .collect_with(&orch, &Protocol::new("smoke"), stub_policy, &mut rng, false, 2)
+        .unwrap();
+    assert_eq!(r.episodes.len(), 2);
+    let feat = 6usize.pow(3) * 3;
+    let ds = flatten(&r.episodes, feat, 0.995, 1.0);
+    assert!(!ds.is_empty());
+    let mb = ds.minibatch_indices(16, &mut rng);
+    assert!(!mb.is_empty());
+}

@@ -93,6 +93,119 @@ fn clear_between_iterations_isolates_runs() {
 }
 
 #[test]
+fn event_driven_exchange_arrival_order() {
+    // The collector's consumption pattern: instead of polling env states
+    // in fixed order, the trainer subscribes to all outstanding state
+    // keys at once and serves whichever env arrives first.  Workers get
+    // deliberately skewed delays so arrival order differs from env order.
+    let n_envs = 8usize;
+    let steps = 6usize;
+    let orch = Arc::new(Orchestrator::launch(8));
+    let proto = Protocol::new("ev");
+    let mut workers = Vec::new();
+    for i in 0..n_envs {
+        let c = orch.client();
+        let p = proto.clone();
+        workers.push(std::thread::spawn(move || {
+            for t in 0..steps {
+                // env 7 is slowest at even steps, env 0 at odd ones.
+                let delay = if t % 2 == 0 { i } else { n_envs - 1 - i };
+                std::thread::sleep(Duration::from_millis(2 * delay as u64));
+                c.put_tensor(&p.state_key(i, t), vec![1], vec![(i * 100 + t) as f32]);
+                let act = c
+                    .poll_take(&p.action_key(i, t), Duration::from_secs(30))
+                    .expect("action");
+                assert_eq!(act.as_tensor().unwrap().1[0], (i * 7 + t) as f32);
+            }
+            c.put_flag(&p.done_key(i), true);
+        }));
+    }
+
+    let trainer = orch.client();
+    for t in 0..steps {
+        // Subscribe to the whole wave; take states in arrival order.
+        let names: Vec<String> = (0..n_envs).map(|i| proto.state_key(i, t)).collect();
+        let mut waiting: Vec<(usize, &str)> =
+            names.iter().enumerate().map(|(i, k)| (i, k.as_str())).collect();
+        while !waiting.is_empty() {
+            let keys: Vec<&str> = waiting.iter().map(|&(_, k)| k).collect();
+            let (hit, v) = trainer
+                .poll_any_take(&keys, Duration::from_secs(30))
+                .expect("state");
+            let (env, _) = waiting.remove(hit);
+            assert_eq!(v.as_tensor().unwrap().1[0], (env * 100 + t) as f32);
+            trainer.put_tensor(&proto.action_key(env, t), vec![1], vec![(env * 7 + t) as f32]);
+        }
+    }
+    for i in 0..n_envs {
+        assert!(trainer
+            .poll(&proto.done_key(i), Duration::from_secs(30))
+            .unwrap()
+            .as_flag()
+            .unwrap());
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+}
+
+#[test]
+fn early_done_env_does_not_stall_the_gather() {
+    // Regression for the seed deadlock: an env that raises its done-flag
+    // before exhausting the step budget must not leave the trainer
+    // blocking on a state key that will never arrive.  The trainer
+    // subscribes to {state, done} per env and wave, exactly like the
+    // rollout collector.
+    let orch = Arc::new(Orchestrator::launch(4));
+    let proto = Protocol::new("ed");
+    let budget = 5usize; // trainer's nominal step budget
+    let early = 2usize; // env 1 terminates after this many steps
+    let mut workers = Vec::new();
+    for (i, horizon) in [(0usize, budget), (1usize, early)] {
+        let c = orch.client();
+        let p = proto.clone();
+        workers.push(std::thread::spawn(move || {
+            for t in 0..horizon {
+                c.put_tensor(&p.state_key(i, t), vec![1], vec![t as f32]);
+                c.poll_take(&p.action_key(i, t), Duration::from_secs(30))
+                    .expect("action");
+            }
+            c.put_flag(&p.done_key(i), true);
+        }));
+    }
+
+    let trainer = orch.client();
+    let t0 = std::time::Instant::now();
+    let mut done = [false; 2];
+    let mut served = [0usize; 2];
+    for t in 0..budget {
+        for i in 0..2 {
+            if done[i] {
+                continue;
+            }
+            let state_key = proto.state_key(i, t);
+            let done_key = proto.done_key(i);
+            let (hit, _) = trainer
+                .poll_any_take(&[&state_key, &done_key], Duration::from_secs(30))
+                .expect("state or done");
+            if hit == 1 {
+                done[i] = true;
+            } else {
+                trainer.put_tensor(&proto.action_key(i, t), vec![1], vec![0.1]);
+                served[i] += 1;
+            }
+        }
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(served, [budget, early]);
+    // The whole exchange must finish in interactive time — nowhere near a
+    // poll-timeout stall.
+    assert!(t0.elapsed() < Duration::from_secs(20));
+}
+
+#[test]
 fn poll_timeout_does_not_wedge_under_load() {
     let orch = Arc::new(Orchestrator::launch(2));
     // A writer hammers unrelated keys while a reader waits for a key that

@@ -74,6 +74,14 @@ fn training_loop_runs_and_learns_plumbing() {
         assert!(m.test_return.is_some(), "eval_every=1 -> every iteration");
     }
 
+    // The worker pool persisted across iterations: threads and envs were
+    // built exactly once, in TrainingLoop::new.
+    let counters = lp.pool_counters();
+    assert_eq!(counters.threads_spawned, cfg.rl.n_envs);
+    assert_eq!(counters.envs_built, cfg.rl.n_envs);
+    assert_eq!(counters.grids_built, 1);
+    assert_eq!(counters.iterations, 2);
+
     // Parameters actually moved (the PPO update executed).
     let theta_after = lp.trainer.theta();
     let moved: f64 = theta_before

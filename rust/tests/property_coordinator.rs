@@ -79,6 +79,7 @@ fn random_episode(rng: &mut Rng, n_steps: usize, n_elems: usize, feat: usize) ->
                 reward: rng.range(-1.0, 1.0),
             })
             .collect(),
+        ..Episode::default()
     }
 }
 
@@ -173,5 +174,7 @@ fn protocol_keys_unique_across_space() {
             assert!(seen.insert(p.error_key(env, step)));
         }
         assert!(seen.insert(p.done_key(env)));
+        assert!(seen.insert(p.fail_key(env)));
     }
+    assert!(seen.insert(p.abort_key()));
 }
