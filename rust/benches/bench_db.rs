@@ -6,9 +6,16 @@
 //! 1 shard (single-threaded-Redis analogue) vs N shards (KeyDB analogue)
 //! under the actual Relexi traffic pattern: many env workers writing state
 //! tensors and polling for action tensors.
+//!
+//! PR-3 additions: the subscriber-scaling series (put latency on a hot
+//! key while 8/64/256 waiters idle on OTHER keys, per-key wakeups vs the
+//! retained seq-lock baseline — per-key must stay flat while seq-lock
+//! grows) and interned-key/zero-copy micro rows.  All rows land in
+//! `BENCH_db.json` and are uploaded by the CI smoke job.
 
-use relexi::orchestrator::{Orchestrator, Protocol};
-use relexi::util::bench::{Bench, Table};
+use relexi::orchestrator::{Key, Orchestrator, Protocol, ShardedStore, Value, WakeMode};
+use relexi::util::bench::{fmt_duration, Bench, Table};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -47,6 +54,53 @@ fn run_traffic(orch: &Arc<Orchestrator>, n_envs: usize, state_len: usize, rounds
     let dt = t0.elapsed().as_secs_f64();
     orch.clear();
     dt
+}
+
+/// PR-3 tentpole series: latency of a put on a hot key while `n_waiters`
+/// multi-key subscribers idle on disjoint keys.  With per-key wakeups the
+/// put touches nobody; with the seq-lock baseline it wakes every waiter,
+/// each of which rescans its key set.
+fn waiter_scaling_series(b: &mut Bench, table: &mut Table, counts: &[usize]) {
+    for (mode, label) in [(WakeMode::PerKey, "per-key"), (WakeMode::SeqLock, "seq-lock")] {
+        for &n_waiters in counts {
+            let store = Arc::new(ShardedStore::with_wake_mode(16, mode));
+            let parked = Arc::new(AtomicUsize::new(0));
+            let mut waiters = Vec::new();
+            for w in 0..n_waiters {
+                let store = store.clone();
+                let parked = parked.clone();
+                waiters.push(std::thread::spawn(move || {
+                    let idle = format!("idle{w}");
+                    let keys = [idle.as_str(), "series-done"];
+                    parked.fetch_add(1, Ordering::SeqCst);
+                    // Parks for the whole measurement; released by the
+                    // final put on the shared "series-done" key.
+                    store
+                        .wait_any(&keys, Duration::from_secs(300))
+                        .expect("released by series-done");
+                }));
+            }
+            while parked.load(Ordering::SeqCst) < n_waiters {
+                std::thread::yield_now();
+            }
+            // Give the last registrations time to reach the parked state.
+            std::thread::sleep(Duration::from_millis(25));
+
+            let m = b.run(&format!("put with {n_waiters} idle waiters [{label}]"), || {
+                store.put("hot", Value::Scalar(1.0));
+            });
+            store.put("series-done", Value::Flag(true));
+            for w in waiters {
+                w.join().unwrap();
+            }
+            table.row(vec![
+                label.to_string(),
+                n_waiters.to_string(),
+                fmt_duration(m.mean_s),
+                fmt_duration(m.median_s),
+            ]);
+        }
+    }
 }
 
 fn main() {
@@ -103,21 +157,45 @@ fn main() {
     b.run("put_tensor state", || {
         c.put_tensor("k", vec![state_len], vec![0.5; state_len]);
     });
-    b.run("get state", || {
+    b.run("get state (refcount bump)", || {
         std::hint::black_box(c.get("k"));
+    });
+    // Zero-copy publish: the producer's Arc buffer is republished without
+    // touching the floats.
+    let shared: Arc<[f32]> = Arc::from(vec![0.5f32; state_len]);
+    let shape: Arc<[usize]> = Arc::from(vec![state_len]);
+    b.run("put_tensor_shared state (zero-copy)", || {
+        c.put_tensor_shared("ks", shape.clone(), shared.clone());
     });
     b.run("put+take scalar", || {
         c.put_scalar("s", 1.0);
         std::hint::black_box(c.poll_take("s", Duration::from_secs(1)));
     });
-    // The event-driven collector's primitive: one subscription scan over
-    // a 64-key wave with a single hot key.
+    // The event-driven collector's primitive: one subscription over a
+    // 64-key wave with a single hot key — string keys vs interned handles.
     let names: Vec<String> = (0..64).map(|i| format!("wave{i}")).collect();
     let keys: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     b.run("poll_any_take over 64 keys", || {
         c.put_scalar(&names[63], 1.0);
         std::hint::black_box(c.poll_any_take(&keys, Duration::from_secs(1)));
     });
+    let interned: Vec<Key> = names.iter().map(Key::new).collect();
+    let ikeys: Vec<&Key> = interned.iter().collect();
+    b.run("poll_any_take over 64 interned keys", || {
+        c.put_scalar(&interned[63], 1.0);
+        std::hint::black_box(c.poll_any_take(&ikeys, Duration::from_secs(1)));
+    });
+
+    // Subscriber-scaling series (acceptance: per-key flat, seq-lock grows).
+    let waiter_counts: &[usize] = &[8, 64, 256];
+    let mut wtable = Table::new(&["wake mode", "idle waiters", "put mean", "put median"]);
+    waiter_scaling_series(&mut b, &mut wtable, waiter_counts);
+    wtable.print("Per-key wakeups — put latency vs idle subscribers on other keys");
+    println!(
+        "Expected shape: per-key put latency is independent of the number\n\
+         of waiters registered on other keys; the seq-lock baseline wakes\n\
+         all of them per put and grows with the subscriber count."
+    );
 
     b.write_json("BENCH_db.json").expect("write BENCH_db.json");
     println!("wrote BENCH_db.json");

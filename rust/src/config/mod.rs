@@ -195,6 +195,10 @@ pub struct HpcConfig {
     pub ranks_per_env: usize,
     /// Orchestrator shards (1 = single-threaded Redis-like).
     pub db_shards: usize,
+    /// Retain the PR-2 store-level sequence-lock wakeup protocol (every
+    /// put wakes every multi-key subscriber) instead of the default
+    /// per-key waiter registration.  Baseline knob for A/B perf runs.
+    pub db_seqlock_wake: bool,
     /// Use MPMD batched launch (paper §3.3 improvement).
     pub mpmd: bool,
     /// Stage files to RAM drive instead of the parallel FS (§3.3).
@@ -209,6 +213,7 @@ impl Default for HpcConfig {
             cores_per_die: 8,
             ranks_per_env: 8,
             db_shards: 8,
+            db_seqlock_wake: false,
             mpmd: true,
             ram_staging: true,
         }
@@ -332,6 +337,8 @@ impl RunConfig {
         cfg.hpc.ranks_per_env =
             t.int_or("hpc.ranks_per_env", cfg.hpc.ranks_per_env as i64)? as usize;
         cfg.hpc.db_shards = t.int_or("hpc.db_shards", cfg.hpc.db_shards as i64)? as usize;
+        cfg.hpc.db_seqlock_wake =
+            t.bool_or("hpc.db_seqlock_wake", cfg.hpc.db_seqlock_wake)?;
         cfg.hpc.mpmd = t.bool_or("hpc.mpmd", cfg.hpc.mpmd)?;
         cfg.hpc.ram_staging = t.bool_or("hpc.ram_staging", cfg.hpc.ram_staging)?;
 
@@ -488,6 +495,14 @@ mod tests {
         assert_eq!(c.case.n, 7);
         assert_eq!(c.rl.n_envs, 64);
         assert_eq!(c.steps_per_episode(), 20);
+    }
+
+    #[test]
+    fn seqlock_wake_flag_parses_and_defaults_off() {
+        assert!(!RunConfig::default().hpc.db_seqlock_wake);
+        let doc = Toml::parse("[hpc]\ndb_seqlock_wake = true\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert!(c.hpc.db_seqlock_wake);
     }
 
     #[test]

@@ -24,19 +24,30 @@
 //!   literal per-env polling loop for that equivalence test and for the
 //!   §6.2 baseline bench.
 //!
+//! The exchange itself is zero-copy and, in steady state, zero-alloc:
+//! both sides publish recycled `Arc<[f32]>` buffers
+//! ([`crate::orchestrator::TensorPool`]) under interned key handles
+//! (built once per iteration via [`Protocol::env_keys`] /
+//! [`Protocol::pool_keys`]), the store hands consumers refcount bumps
+//! instead of tensor copies, and per-key wakeups make every `put` wake
+//! exactly the party waiting on that key.  `PoolCounters::exchange_allocs`
+//! counts the pools' fresh allocations; after the warm-up iteration it
+//! must not advance (integration-tested, gated in CI).
+//!
 //! Heterogeneous pools: each env runs a scenario variant
 //! ([`crate::config::EnvVariant`], round-robin), so one pool can sample
 //! across Reynolds-number, reward-shaping, horizon and initial-state
 //! families while sharing one `Grid`, one truth package and one policy.
 
 use crate::config::RunConfig;
-use crate::orchestrator::{Client, Orchestrator, Protocol, Value};
+use crate::orchestrator::{Client, EnvKeys, Key, Orchestrator, Protocol, TensorPool, Value};
 use crate::rl::{gaussian, reward_from_error, Episode, LesEnv, StepRecord};
 use crate::runtime::{PolicyOut, PolicyRuntime};
 use crate::solver::dns::Truth;
 use crate::solver::Grid;
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -58,8 +69,8 @@ pub struct Rollouts {
     pub idle_time_s: f64,
 }
 
-/// Construction counters proving worker persistence: after `new`, no
-/// call ever increments them again.
+/// Construction counters proving worker persistence and exchange-path
+/// allocation discipline: after the warm-up, no call ever advances them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolCounters {
     /// OS threads spawned (== n_envs, only in `new`).
@@ -70,6 +81,10 @@ pub struct PoolCounters {
     pub grids_built: usize,
     /// Sampling phases served by the persistent workers.
     pub iterations: usize,
+    /// Exchange-path tensor-buffer allocations: pool misses across every
+    /// worker's observation pool and the trainer's action pool.  Grows
+    /// while the pools warm up (iteration 0), then must stay flat.
+    pub exchange_allocs: u64,
 }
 
 /// Per-iteration begin message a parked worker blocks on.
@@ -102,6 +117,14 @@ pub struct EnvPool {
     /// Reused forward-batch scratch (n_envs * n_elems * feat floats,
     /// allocated once here, never per iteration).
     batch_obs: Vec<f32>,
+    /// Recycled action buffers (published zero-copy, recorded in the
+    /// episode, freed when the rollouts are dropped).
+    act_pool: TensorPool,
+    /// Action tensor shape `[n_elems]`, shared across all publishes.
+    act_shape: Arc<[usize]>,
+    /// Shared exchange-allocation counter (this pool + every worker's
+    /// observation pool).
+    exchange_allocs: Arc<AtomicU64>,
 }
 
 impl EnvPool {
@@ -128,7 +151,9 @@ impl EnvPool {
             envs_built: 0,
             grids_built: 1,
             iterations: 0,
+            exchange_allocs: 0,
         };
+        let exchange_allocs = Arc::new(AtomicU64::new(0));
 
         let mut txs = Vec::with_capacity(n_envs);
         let mut handles = Vec::with_capacity(n_envs);
@@ -150,9 +175,10 @@ impl EnvPool {
 
             let (tx, rx) = mpsc::channel::<Begin>();
             let client = orch.client();
+            let allocs = exchange_allocs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("env-worker-{i}"))
-                .spawn(move || worker_loop(env, client, i, rx))?;
+                .spawn(move || worker_loop(env, client, i, rx, allocs))?;
             counters.threads_spawned += 1;
             txs.push(tx);
             handles.push(handle);
@@ -160,8 +186,15 @@ impl EnvPool {
 
         let n_elems = cfg.case.total_elems();
         let feat = cfg.case.elem_points().pow(3) * 3;
+        // One iteration publishes one action per env per step, all held
+        // by the episode records until the rollouts drop — that sum is
+        // the action pool's steady-state working set (and its cap).
+        let act_cap = n_actions_of.iter().sum::<usize>() + 2;
         Ok(EnvPool {
             batch_obs: vec![0f32; n_envs * n_elems * feat],
+            act_pool: TensorPool::new(exchange_allocs.clone(), act_cap),
+            act_shape: Arc::from(vec![n_elems]),
+            exchange_allocs,
             cfg,
             grid,
             txs,
@@ -187,10 +220,14 @@ impl EnvPool {
         self.grid.clone()
     }
 
-    /// Construction counters (steady-state assertion: unchanged across
-    /// `collect` calls).
+    /// Construction counters (steady-state assertion: only `iterations`
+    /// may change across `collect` calls, and `exchange_allocs` only
+    /// during the warm-up iteration).
     pub fn counters(&self) -> PoolCounters {
-        self.counters
+        PoolCounters {
+            exchange_allocs: self.exchange_allocs.load(Ordering::Relaxed),
+            ..self.counters
+        }
     }
 
     /// Run one sampling phase under the current policy (`theta`),
@@ -260,20 +297,21 @@ impl EnvPool {
         let chunk = self.n_elems * self.feat;
         let trainer = orch.client();
         self.begin_iteration(proto, rng)?;
-        let keys = KeyCache::new(proto, &self.n_actions_of);
+        let keys = proto.pool_keys(&self.n_actions_of);
 
         let mut episodes = self.fresh_episodes();
         // Per-env: step index of the state we are waiting for (None once
         // the done-flag arrived), plus staged-but-unacted states and
         // outstanding error scalars.
         let mut expect_state: Vec<Option<usize>> = vec![Some(0); n_envs];
-        let mut staged: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n_envs);
+        let mut staged: Vec<(usize, usize, Arc<[f32]>)> = Vec::with_capacity(n_envs);
         let mut pending_errs: Vec<(usize, usize)> = Vec::with_capacity(n_envs);
         let mut policy_time = 0.0f64;
         let mut idle_time = 0.0f64;
 
-        // Scratch for the per-event subscription (&str views into `keys`).
-        let mut subs: Vec<&str> = Vec::new();
+        // Scratch for the per-event subscription (interned key handles —
+        // no string building or rehashing inside this loop).
+        let mut subs: Vec<&Key> = Vec::new();
         let mut events: Vec<Event> = Vec::new();
         let mut fail_subbed = vec![false; n_envs];
 
@@ -308,20 +346,19 @@ impl EnvPool {
                 for (k, (env, t, obs)) in staged.drain(..).enumerate() {
                     let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
                     let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
-                    let act = if deterministic {
-                        mean.to_vec()
-                    } else {
-                        gaussian::sample(mean, out.log_std, rng)
-                    };
-                    let logp = gaussian::log_prob(&act, mean, out.log_std);
-                    trainer.put_tensor(&keys.action[env][t], vec![self.n_elems], act.clone());
-                    episodes[env].steps.push(StepRecord {
+                    publish_action(
+                        &trainer,
+                        &keys.envs[env].action[t],
+                        &self.act_shape,
+                        &mut self.act_pool,
+                        &mut episodes[env],
                         obs,
-                        act,
-                        logp,
-                        value: value.to_vec(),
-                        reward: 0.0, // filled by the error event
-                    });
+                        mean,
+                        value,
+                        out.log_std,
+                        rng,
+                        deterministic,
+                    );
                     pending_errs.push((env, t));
                     expect_state[env] = Some(t + 1);
                 }
@@ -336,20 +373,22 @@ impl EnvPool {
             fail_subbed.fill(false);
             for (env, e) in expect_state.iter().enumerate() {
                 if let Some(t) = e {
-                    subs.push(&keys.state[env][*t]);
+                    let ek = &keys.envs[env];
+                    subs.push(&ek.state[*t]);
                     events.push(Event::State(env, *t));
-                    subs.push(&keys.done[env]);
+                    subs.push(&ek.done);
                     events.push(Event::Done(env));
-                    subs.push(&keys.fail[env]);
+                    subs.push(&ek.fail);
                     events.push(Event::Fail(env));
                     fail_subbed[env] = true;
                 }
             }
             for &(env, t) in &pending_errs {
-                subs.push(&keys.err[env][t]);
+                let ek = &keys.envs[env];
+                subs.push(&ek.err[t]);
                 events.push(Event::Err(env, t));
                 if !fail_subbed[env] {
-                    subs.push(&keys.fail[env]);
+                    subs.push(&ek.fail);
                     events.push(Event::Fail(env));
                     fail_subbed[env] = true;
                 }
@@ -367,10 +406,9 @@ impl EnvPool {
             idle_time += ti.elapsed().as_secs_f64();
             match events[hit] {
                 Event::State(env, t) => {
-                    let data = match val {
-                        Value::Tensor { data, .. } => data,
-                        other => bail!("env {env} state at step {t} is {other:?}, not a tensor"),
-                    };
+                    let data = val
+                        .tensor_data()
+                        .with_context(|| format!("env {env} state at step {t} is not a tensor"))?;
                     anyhow::ensure!(
                         data.len() == chunk,
                         "env {env} state has {} floats, expected {chunk}",
@@ -443,11 +481,12 @@ impl EnvPool {
         let chunk = self.n_elems * self.feat;
         let trainer = orch.client();
         self.begin_iteration(proto, rng)?;
-        let keys = KeyCache::new(proto, &self.n_actions_of);
+        let keys = proto.pool_keys(&self.n_actions_of);
 
         let mut episodes = self.fresh_episodes();
         let mut done = vec![false; n_envs];
         let mut acted: Vec<usize> = Vec::with_capacity(n_envs);
+        let mut wave_obs: Vec<Arc<[f32]>> = Vec::with_capacity(n_envs);
         let mut policy_time = 0.0f64;
         let mut idle_time = 0.0f64;
         let max_t = self.n_actions_of.iter().copied().max().unwrap_or(0);
@@ -456,29 +495,29 @@ impl EnvPool {
             // Gather the wave's states in env order, checking the
             // done-flag per env so early terminations are absorbed.
             acted.clear();
+            wave_obs.clear();
             for env in 0..n_envs {
                 if done[env] {
                     continue;
                 }
+                let ek = &keys.envs[env];
                 let ti = Instant::now();
                 let (hit, val) = trainer
-                    .poll_any_take(
-                        &[&keys.state[env][t], &keys.done[env], &keys.fail[env]],
-                        POLL_TIMEOUT,
-                    )
+                    .poll_any_take(&[&ek.state[t], &ek.done, &ek.fail], POLL_TIMEOUT)
                     .with_context(|| format!("trainer: no state from env {env} step {t}"))?;
                 idle_time += ti.elapsed().as_secs_f64();
                 match hit {
                     0 => {
-                        let (_, data) = val.as_tensor().context("state must be a tensor")?;
+                        let data = val.tensor_data().context("state must be a tensor")?;
                         anyhow::ensure!(
                             data.len() == chunk,
                             "env {env} state has {} floats, expected {chunk}",
                             data.len()
                         );
                         self.batch_obs[acted.len() * chunk..(acted.len() + 1) * chunk]
-                            .copy_from_slice(data);
+                            .copy_from_slice(&data);
                         acted.push(env);
+                        wave_obs.push(data);
                     }
                     1 => done[env] = true,
                     _ => bail!("env worker {env} failed: {}", fail_message(&val)),
@@ -494,31 +533,32 @@ impl EnvPool {
             let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_elems)?;
             policy_time += tp.elapsed().as_secs_f64();
 
-            // Sample actions, write them back, record the steps.
+            // Sample actions, write them back, record the steps (the one
+            // shared publish site with the event-driven collector).
             for (k, &env) in acted.iter().enumerate() {
                 let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
                 let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
-                let act = if deterministic {
-                    mean.to_vec()
-                } else {
-                    gaussian::sample(mean, out.log_std, rng)
-                };
-                let logp = gaussian::log_prob(&act, mean, out.log_std);
-                trainer.put_tensor(&keys.action[env][t], vec![self.n_elems], act.clone());
-                episodes[env].steps.push(StepRecord {
-                    obs: self.batch_obs[k * chunk..(k + 1) * chunk].to_vec(),
-                    act,
-                    logp,
-                    value: value.to_vec(),
-                    reward: 0.0, // filled in below
-                });
+                publish_action(
+                    &trainer,
+                    &keys.envs[env].action[t],
+                    &self.act_shape,
+                    &mut self.act_pool,
+                    &mut episodes[env],
+                    wave_obs[k].clone(),
+                    mean,
+                    value,
+                    out.log_std,
+                    rng,
+                    deterministic,
+                );
             }
 
             // Collect the spectrum errors -> rewards (Eqs. 4-5).
             for &env in &acted {
+                let ek = &keys.envs[env];
                 let ti = Instant::now();
                 let (hit, val) = trainer
-                    .poll_any_take(&[&keys.err[env][t], &keys.fail[env]], POLL_TIMEOUT)
+                    .poll_any_take(&[&ek.err[t], &ek.fail], POLL_TIMEOUT)
                     .with_context(|| format!("trainer: no error from env {env} step {t}"))?;
                 idle_time += ti.elapsed().as_secs_f64();
                 if hit != 0 {
@@ -534,8 +574,9 @@ impl EnvPool {
             if done[env] {
                 continue;
             }
+            let ek = &keys.envs[env];
             let (hit, val) = trainer
-                .poll_any_take(&[&keys.done[env], &keys.fail[env]], POLL_TIMEOUT)
+                .poll_any_take(&[&ek.done, &ek.fail], POLL_TIMEOUT)
                 .with_context(|| format!("env {env} never signalled done"))?;
             if hit != 0 {
                 bail!("env worker {env} failed: {}", fail_message(&val));
@@ -553,8 +594,12 @@ impl EnvPool {
 
     /// Raise the iteration's abort flag so workers still blocked on an
     /// action key of a failed iteration unpark immediately (instead of
-    /// running out POLL_TIMEOUT) and return to the begin-channel, leaving
-    /// the pool usable for a retry.
+    /// running out POLL_TIMEOUT) and return to the begin-channel.  The
+    /// flag is deliberately never deleted: a worker that was mid-CFD-step
+    /// when the abort was raised subscribes to `[action, abort]` later
+    /// and must still find it.  The pool stays usable afterwards, but a
+    /// retry must use a **fresh run tag** — the failed tag's namespace
+    /// (abort flag, stale state/err keys) is burned.
     fn abort_iteration(&self, proto: &Protocol) {
         self.abort_client.put_flag(&proto.abort_key(), true);
     }
@@ -626,41 +671,44 @@ enum Event {
     Fail(usize),
 }
 
-/// All key strings one iteration can touch, built once per iteration so
-/// the event loop only pushes `&str` views instead of formatting keys on
-/// every wait.
-struct KeyCache {
-    /// `state[env][t]`, `t` up to and including the never-written
-    /// post-terminal index (the done-flag resolves that wait).
-    state: Vec<Vec<String>>,
-    action: Vec<Vec<String>>,
-    err: Vec<Vec<String>>,
-    done: Vec<String>,
-    fail: Vec<String>,
-}
-
-impl KeyCache {
-    fn new(proto: &Protocol, n_actions_of: &[usize]) -> KeyCache {
-        KeyCache {
-            state: n_actions_of
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| (0..=n).map(|t| proto.state_key(i, t)).collect())
-                .collect(),
-            action: n_actions_of
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| (0..n).map(|t| proto.action_key(i, t)).collect())
-                .collect(),
-            err: n_actions_of
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| (0..n).map(|t| proto.error_key(i, t)).collect())
-                .collect(),
-            done: (0..n_actions_of.len()).map(|i| proto.done_key(i)).collect(),
-            fail: (0..n_actions_of.len()).map(|i| proto.fail_key(i)).collect(),
+/// Sample (or, when deterministic, copy) one env's action from the policy
+/// head, publish it zero-copy under the env's action key and record the
+/// step — the single action-publish site shared by the event-driven and
+/// lock-step collectors.  The action buffer comes from the recycled pool;
+/// the store, the episode record and the pool share one allocation.
+#[allow(clippy::too_many_arguments)]
+fn publish_action(
+    trainer: &Client,
+    action_key: &Key,
+    act_shape: &Arc<[usize]>,
+    act_pool: &mut TensorPool,
+    episode: &mut Episode,
+    obs: Arc<[f32]>,
+    mean: &[f32],
+    value: &[f32],
+    log_std: f32,
+    rng: &mut Rng,
+    deterministic: bool,
+) {
+    let mut act = act_pool.take_free(mean.len());
+    {
+        let dst = Arc::get_mut(&mut act).expect("pool hands out unique buffers");
+        if deterministic {
+            dst.copy_from_slice(mean);
+        } else {
+            gaussian::sample_into(mean, log_std, rng, dst);
         }
     }
+    let logp = gaussian::log_prob(&act, mean, log_std);
+    trainer.put_tensor_shared(action_key, act_shape.clone(), act.clone());
+    episode.steps.push(StepRecord {
+        obs,
+        act: act.clone(),
+        logp,
+        value: value.to_vec(),
+        reward: 0.0, // filled by the error event
+    });
+    act_pool.put_back(act);
 }
 
 /// Render a failure-report value (bytes put by the worker) for an error.
@@ -673,15 +721,39 @@ fn fail_message(val: &Value) -> String {
 
 /// The persistent worker body: park on the begin-channel, run one episode
 /// through the store, park again.  Exits when the pool drops the channel.
+/// The observation buffer pool and the action-conversion scratch persist
+/// across iterations, so a steady-state episode allocates nothing on the
+/// exchange path.
 ///
 /// Both `Err` returns and panics inside the episode (caught so the thread
 /// survives; the next begin resets the env completely) are surfaced
 /// through the fail key, so the collector aborts the iteration instead of
 /// running into its poll timeout.
-fn worker_loop(mut env: LesEnv, client: Client, idx: usize, rx: mpsc::Receiver<Begin>) {
+fn worker_loop(
+    mut env: LesEnv,
+    client: Client,
+    idx: usize,
+    rx: mpsc::Receiver<Begin>,
+    allocs: Arc<AtomicU64>,
+) {
+    // Working set: one obs buffer per step (held by the trainer until
+    // the iteration's rollouts drop) plus the initial state.
+    let mut obs_pool = TensorPool::new(allocs, env.n_actions() + 2);
+    let mut cs_buf: Vec<f64> = Vec::with_capacity(env.n_elems());
+    let obs_shape: Arc<[usize]> = Arc::from(vec![env.obs_len()]);
     while let Ok(Begin { proto, mut rng }) = rx.recv() {
+        let keys = proto.env_keys(idx, env.n_actions());
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_episode(&mut env, &client, &proto, idx, &mut rng)
+            run_episode(
+                &mut env,
+                &client,
+                &keys,
+                idx,
+                &mut rng,
+                &mut obs_pool,
+                &mut cs_buf,
+                &obs_shape,
+            )
         }));
         let failure = match outcome {
             Ok(Ok(())) => None,
@@ -689,7 +761,7 @@ fn worker_loop(mut env: LesEnv, client: Client, idx: usize, rx: mpsc::Receiver<B
             Err(payload) => Some(format!("panic: {}", panic_message(&payload))),
         };
         if let Some(msg) = failure {
-            client.put_bytes(&proto.fail_key(idx), msg.into_bytes());
+            client.put_bytes(&keys.fail, msg.into_bytes());
         }
     }
 }
@@ -707,42 +779,49 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 
 /// One episode of the paper's env side (Fig. 2 right): reset from the
 /// truth pool, then state-out / action-in / error-out per RL step, with
-/// the done-flag raised at termination.
+/// the done-flag raised at termination.  All keys are interned handles,
+/// observations go out through recycled `Arc` buffers, and the received
+/// action is only borrowed (refcount bump) — a steady-state step neither
+/// formats strings nor allocates tensor storage.
+#[allow(clippy::too_many_arguments)]
 fn run_episode(
     env: &mut LesEnv,
     client: &Client,
-    proto: &Protocol,
+    keys: &EnvKeys,
     idx: usize,
     rng: &mut Rng,
+    obs_pool: &mut TensorPool,
+    cs_buf: &mut Vec<f64>,
+    obs_shape: &Arc<[usize]>,
 ) -> Result<()> {
-    let obs = env.reset(rng, false);
-    client.put_tensor(&proto.state_key(idx, 0), vec![obs.len()], obs);
-    let abort_key = proto.abort_key();
+    let obs_len = env.obs_len();
+    env.reset_in_place(rng, false);
+    let mut buf = obs_pool.take_free(obs_len);
+    env.observe_into(Arc::get_mut(&mut buf).expect("pool hands out unique buffers"));
+    client.put_tensor_shared(&keys.state[0], obs_shape.clone(), buf.clone());
+    obs_pool.put_back(buf);
     for t in 0..env.n_actions() {
-        let action_key = proto.action_key(idx, t);
         let (hit, act) = client
-            .poll_any(&[&action_key, &abort_key], POLL_TIMEOUT)
+            .poll_any(&[&keys.action[t], &keys.abort], POLL_TIMEOUT)
             .with_context(|| format!("env {idx}: no action at step {t}"))?;
         anyhow::ensure!(hit == 0, "env {idx}: iteration aborted at step {t}");
         // Consume the action (seed semantics): only the shared abort flag
         // must stay readable by every worker, so the subscription above is
         // non-consuming and the action is deleted explicitly.
-        client.delete(&action_key);
-        let cs: Vec<f64> = act
-            .as_tensor()
-            .context("action must be a tensor")?
-            .1
-            .iter()
-            .map(|&a| a as f64)
-            .collect();
-        let out = env.step(&cs);
-        client.put_scalar(&proto.error_key(idx, t), out.spec_error);
+        client.delete(&keys.action[t]);
+        let data = act.as_tensor().context("action must be a tensor")?.1;
+        cs_buf.clear();
+        cs_buf.extend(data.iter().map(|&a| a as f64));
+        let out = env.step(cs_buf);
+        client.put_scalar(&keys.err[t], out.spec_error);
         if out.done {
-            client.put_flag(&proto.done_key(idx), true);
+            client.put_flag(&keys.done, true);
             break;
         }
-        let obs = env.observe();
-        client.put_tensor(&proto.state_key(idx, t + 1), vec![obs.len()], obs);
+        let mut buf = obs_pool.take_free(obs_len);
+        env.observe_into(Arc::get_mut(&mut buf).expect("pool hands out unique buffers"));
+        client.put_tensor_shared(&keys.state[t + 1], obs_shape.clone(), buf.clone());
+        obs_pool.put_back(buf);
     }
     Ok(())
 }

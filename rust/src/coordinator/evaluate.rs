@@ -66,7 +66,8 @@ pub fn eval_policy_in(
         if step.done {
             break;
         }
-        obs = env.observe();
+        // Refill the observation buffer in place (no per-step allocation).
+        env.observe_into(&mut obs);
     }
     Ok(EvalResult {
         normalized_return: ret / max_return(env.n_actions(), gamma),

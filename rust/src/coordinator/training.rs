@@ -10,7 +10,7 @@ use super::envpool::EnvPool;
 use super::evaluate::eval_policy_in;
 use super::metrics::{IterationMetrics, MetricsLog};
 use crate::config::RunConfig;
-use crate::orchestrator::{Orchestrator, Protocol};
+use crate::orchestrator::{Orchestrator, Protocol, WakeMode};
 use crate::rl::{flatten, max_return, LesEnv};
 use crate::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
 use crate::solver::dns::Truth;
@@ -44,7 +44,14 @@ impl TrainingLoop {
             .context("open artifact registry")?;
         let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
         let trainer = TrainerRuntime::load(&rt, &reg, cfg.case.n, cfg.rl.minibatch)?;
-        let orch = Orchestrator::launch(cfg.hpc.db_shards);
+        // Per-key wakeups by default; `hpc.db_seqlock_wake` retains the
+        // PR-2 sequence-lock baseline for A/B runs.
+        let wake = if cfg.hpc.db_seqlock_wake {
+            WakeMode::SeqLock
+        } else {
+            WakeMode::PerKey
+        };
+        let orch = Orchestrator::launch_mode(cfg.hpc.db_shards, wake);
         let pool = EnvPool::new(cfg.clone(), truth.clone(), &orch)?;
         let eval_env = LesEnv::with_grid(&cfg.case, &cfg.solver, truth.clone(), pool.grid())?;
         let rng = Rng::new(cfg.rl.seed);

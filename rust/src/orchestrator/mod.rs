@@ -4,14 +4,22 @@
 //! trainer exchange states, actions and done-flags — the same dataflow and
 //! the same central-bottleneck architecture as the paper's Redis/KeyDB
 //! database, with client handles playing the role of SmartRedis.
+//!
+//! The data plane is zero-copy: tensor payloads are `Arc<[f32]>`, so
+//! reads and subscription hits bump a refcount instead of deep-copying
+//! the state tensor, and producers can republish reusable buffers
+//! ([`Client::put_tensor_shared`] + [`value::TensorPool`]).  Every client
+//! operation accepts either a `&str` or an interned [`store::Key`]
+//! (precomputed hash — [`Protocol`] builds per-(env, step) handles for
+//! the rollout hot path).
 
 pub mod protocol;
 pub mod store;
 pub mod value;
 
-pub use protocol::Protocol;
-pub use store::{ShardedStore, StatsSnapshot};
-pub use value::Value;
+pub use protocol::{EnvKeys, PoolKeys, Protocol};
+pub use store::{Key, KeyLike, ShardedStore, StatsSnapshot, WakeMode};
+pub use value::{TensorPool, Value};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -24,10 +32,18 @@ pub struct Orchestrator {
 impl Orchestrator {
     /// "Launch" the datastore (paper: on the head node, before training).
     /// `shards = 1` gives the single-threaded-Redis behaviour; more shards
-    /// give the KeyDB behaviour.
+    /// give the KeyDB behaviour.  Uses the default per-key wakeup
+    /// protocol; see [`Orchestrator::launch_mode`].
     pub fn launch(shards: usize) -> Orchestrator {
+        Orchestrator::launch_mode(shards, WakeMode::PerKey)
+    }
+
+    /// Launch with an explicit multi-key wakeup protocol
+    /// (`WakeMode::SeqLock` retains the PR-2 sequence-lock baseline,
+    /// selectable via `hpc.db_seqlock_wake`).
+    pub fn launch_mode(shards: usize, wake: WakeMode) -> Orchestrator {
         Orchestrator {
-            store: Arc::new(ShardedStore::new(shards)),
+            store: Arc::new(ShardedStore::with_wake_mode(shards, wake)),
         }
     }
 
@@ -56,62 +72,85 @@ impl Orchestrator {
 
 /// Client handle — the SmartRedis-client analogue used by both the
 /// environment side (Fortran client in the paper) and the trainer side
-/// (Python client in the paper).
+/// (Python client in the paper).  Every method takes any [`KeyLike`]:
+/// plain `&str`, `&String`, or a precomputed [`Key`] handle.
 #[derive(Clone)]
 pub struct Client {
     store: Arc<ShardedStore>,
 }
 
 impl Client {
-    /// Write a tensor.
-    pub fn put_tensor(&self, key: &str, shape: Vec<usize>, data: Vec<f32>) {
+    /// Write a tensor from owned vectors (moved into shared buffers).
+    pub fn put_tensor<K: KeyLike + ?Sized>(&self, key: &K, shape: Vec<usize>, data: Vec<f32>) {
         self.store.put(key, Value::tensor(shape, data));
     }
 
+    /// Write a tensor from already-shared buffers — the zero-copy publish
+    /// path: the store holds a refcount on the caller's buffer, and no
+    /// float is copied anywhere.
+    pub fn put_tensor_shared<K: KeyLike + ?Sized>(
+        &self,
+        key: &K,
+        shape: Arc<[usize]>,
+        data: Arc<[f32]>,
+    ) {
+        self.store.put(key, Value::tensor_shared(shape, data));
+    }
+
     /// Write a flag.
-    pub fn put_flag(&self, key: &str, v: bool) {
+    pub fn put_flag<K: KeyLike + ?Sized>(&self, key: &K, v: bool) {
         self.store.put(key, Value::Flag(v));
     }
 
     /// Write a scalar.
-    pub fn put_scalar(&self, key: &str, v: f64) {
+    pub fn put_scalar<K: KeyLike + ?Sized>(&self, key: &K, v: f64) {
         self.store.put(key, Value::Scalar(v));
     }
 
     /// Write opaque bytes (failure reports, metadata).
-    pub fn put_bytes(&self, key: &str, v: Vec<u8>) {
-        self.store.put(key, Value::Bytes(v));
+    pub fn put_bytes<K: KeyLike + ?Sized>(&self, key: &K, v: Vec<u8>) {
+        self.store.put(key, Value::bytes(v));
     }
 
-    /// Non-blocking read.
-    pub fn get(&self, key: &str) -> Option<Value> {
+    /// Non-blocking read (payloads shared, not copied).
+    pub fn get<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
         self.store.get(key)
     }
 
     /// Blocking poll until the key appears (SmartRedis `poll_tensor`).
-    pub fn poll(&self, key: &str, timeout: Duration) -> Option<Value> {
+    pub fn poll<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
         self.store.wait_for(key, timeout)
     }
 
     /// Blocking poll that consumes the value.
-    pub fn poll_take(&self, key: &str, timeout: Duration) -> Option<Value> {
+    pub fn poll_take<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
         self.store.wait_take(key, timeout)
     }
 
     /// Blocking multi-key subscription: first of `keys` to appear wins
-    /// (ties broken by argument order).  The arrival-order primitive the
-    /// event-driven rollout collector consumes states through.
-    pub fn poll_any(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+    /// (ties among already-present keys broken by argument order).  The
+    /// arrival-order primitive the event-driven rollout collector
+    /// consumes states through; with the per-key wakeup protocol a put
+    /// wakes only the subscribers of that key.
+    pub fn poll_any<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Option<(usize, Value)> {
         self.store.wait_any(keys, timeout)
     }
 
     /// Like [`Client::poll_any`], but consumes the returned value.
-    pub fn poll_any_take(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+    pub fn poll_any_take<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Option<(usize, Value)> {
         self.store.wait_any_take(keys, timeout)
     }
 
     /// Delete a key.
-    pub fn delete(&self, key: &str) -> bool {
+    pub fn delete<K: KeyLike + ?Sized>(&self, key: &K) -> bool {
         self.store.delete(key)
     }
 }
@@ -167,5 +206,37 @@ mod tests {
         assert!(orch.stats().puts >= 1);
         orch.clear();
         assert!(orch.store().is_empty());
+    }
+
+    #[test]
+    fn shared_publish_is_zero_copy_end_to_end() {
+        let orch = Orchestrator::launch(4);
+        let c = orch.client();
+        let data: Arc<[f32]> = Arc::from(vec![0.25f32; 1024]);
+        let shape: Arc<[usize]> = Arc::from(vec![1024usize]);
+        c.put_tensor_shared("state", shape, data.clone());
+        let got = c.get("state").unwrap().tensor_data().unwrap();
+        assert!(Arc::ptr_eq(&got, &data), "consumer shares the producer buffer");
+        let (_, v) = c
+            .poll_any_take(&["state"], Duration::from_secs(1))
+            .unwrap();
+        assert!(Arc::ptr_eq(&v.tensor_data().unwrap(), &data));
+    }
+
+    #[test]
+    fn interned_protocol_keys_work_through_the_client() {
+        let orch = Orchestrator::launch_mode(4, WakeMode::PerKey);
+        let c = orch.client();
+        let proto = Protocol::new("it0");
+        let keys = proto.env_keys(0, 2);
+        c.put_scalar(&keys.err[1], 0.5);
+        c.put_flag(&keys.done, true);
+        let (hit, v) = c
+            .poll_any(&[&keys.err[0], &keys.err[1]], Duration::from_secs(1))
+            .unwrap();
+        assert_eq!((hit, v.as_scalar()), (1, Some(0.5)));
+        // Interned and string forms address the same key.
+        assert_eq!(c.get(&proto.done_key(0)).unwrap().as_flag(), Some(true));
+        assert!(c.delete(&keys.done));
     }
 }

@@ -15,6 +15,14 @@
 //! per env, the paper's synchronous baseline) or event-driven through
 //! [`crate::orchestrator::Client::poll_any_take`], in whichever order envs
 //! finish — the key names are identical in both modes.
+//!
+//! For the steady-state rollout loop both sides intern their keys once
+//! per iteration ([`Protocol::env_keys`] worker-side,
+//! [`Protocol::pool_keys`] trainer-side): the per-step exchange then does
+//! no `format!` string building and no rehashing — every operation uses a
+//! precomputed [`Key`] handle.
+
+use super::store::Key;
 
 /// Key builder for one training run.
 #[derive(Debug, Clone)]
@@ -68,6 +76,63 @@ impl Protocol {
     pub fn abort_key(&self) -> String {
         format!("{}:abort", self.run_tag)
     }
+
+    /// Intern every key one env worker touches in one iteration
+    /// (`n_actions` RL steps).  Built once per begin message; the
+    /// per-step loop then only passes precomputed handles.
+    pub fn env_keys(&self, env: usize, n_actions: usize) -> EnvKeys {
+        EnvKeys {
+            // One state slot past the horizon: the collector waits on the
+            // never-written post-terminal index until the done-flag
+            // resolves that wait.
+            state: (0..=n_actions)
+                .map(|t| Key::new(self.state_key(env, t)))
+                .collect(),
+            action: (0..n_actions)
+                .map(|t| Key::new(self.action_key(env, t)))
+                .collect(),
+            err: (0..n_actions)
+                .map(|t| Key::new(self.error_key(env, t)))
+                .collect(),
+            done: Key::new(self.done_key(env)),
+            fail: Key::new(self.fail_key(env)),
+            abort: Key::new(self.abort_key()),
+        }
+    }
+
+    /// Intern the whole pool's key set trainer-side (`n_actions_of[i]` =
+    /// horizon of env `i`; heterogeneous pools have per-variant horizons).
+    pub fn pool_keys(&self, n_actions_of: &[usize]) -> PoolKeys {
+        PoolKeys {
+            envs: n_actions_of
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| self.env_keys(i, n))
+                .collect(),
+        }
+    }
+}
+
+/// Interned handles for every key one env touches in one iteration (see
+/// [`Protocol::env_keys`]).
+#[derive(Debug, Clone)]
+pub struct EnvKeys {
+    /// `state[t]`, `t` up to and including the never-written
+    /// post-terminal index (the done-flag resolves that wait).
+    pub state: Vec<Key>,
+    pub action: Vec<Key>,
+    pub err: Vec<Key>,
+    pub done: Key,
+    pub fail: Key,
+    pub abort: Key,
+}
+
+/// Trainer-side interned key set for the whole pool (see
+/// [`Protocol::pool_keys`]).
+#[derive(Debug, Clone)]
+pub struct PoolKeys {
+    /// Indexed by env.
+    pub envs: Vec<EnvKeys>,
 }
 
 #[cfg(test)]
@@ -91,5 +156,28 @@ mod tests {
         let a = Protocol::new("runA");
         let b = Protocol::new("runB");
         assert_ne!(a.state_key(0, 0), b.state_key(0, 0));
+    }
+
+    #[test]
+    fn interned_keys_match_the_string_builders() {
+        let p = Protocol::new("it7");
+        let ek = p.env_keys(2, 3);
+        assert_eq!(ek.state.len(), 4, "one post-terminal state slot");
+        assert_eq!(ek.action.len(), 3);
+        assert_eq!(ek.err.len(), 3);
+        for t in 0..3 {
+            assert_eq!(ek.state[t].name(), p.state_key(2, t));
+            assert_eq!(ek.action[t].name(), p.action_key(2, t));
+            assert_eq!(ek.err[t].name(), p.error_key(2, t));
+        }
+        assert_eq!(ek.state[3].name(), p.state_key(2, 3));
+        assert_eq!(ek.done.name(), p.done_key(2));
+        assert_eq!(ek.fail.name(), p.fail_key(2));
+        assert_eq!(ek.abort.name(), p.abort_key());
+
+        let pk = p.pool_keys(&[3, 1]);
+        assert_eq!(pk.envs.len(), 2);
+        assert_eq!(pk.envs[1].state.len(), 2);
+        assert_eq!(pk.envs[1].action[0].name(), p.action_key(1, 0));
     }
 }

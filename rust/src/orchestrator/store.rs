@@ -16,13 +16,188 @@
 //! [`ShardedStore::wait_any_take`]), the arrival-order subscription the
 //! event-driven rollout collector consumes env states through.
 //!
+//! # Multi-key wakeup protocol ([`WakeMode`])
+//!
+//! The default, [`WakeMode::PerKey`], registers each subscriber on every
+//! key it waits for, inside that key's shard: `put` wakes **only** the
+//! waiters registered on the written key and hands each one the hit
+//! index for its own key set, so a put on an unsubscribed key costs one
+//! registry probe and a pool of hundreds of subscribers never rescans on
+//! unrelated traffic.  Race guarantees:
+//!
+//! * **No lost wakeup.**  Registration and `put` both run under the
+//!   key's shard lock: a subscriber either observes the value during its
+//!   registration scan, or leaves a registration behind that any later
+//!   `put` must see and wake.
+//! * **Exactly-once takes.**  A `wait_any_take` hit removes the value
+//!   under the shard lock; a racing taker that was woken for the same
+//!   key finds it gone and goes back to waiting (each stored value is
+//!   delivered to at most one consumer, and — absent `delete`/`clear` —
+//!   to exactly one).
+//! * **`clear` / `delete` races.**  Removing a key does not disturb
+//!   registrations; a waiter whose key was cleared simply keeps waiting
+//!   until the key is written again or its timeout elapses.  (`clear`
+//!   also wakes single-key waiters so they re-check, preserving the PR-2
+//!   behaviour.)
+//! * **Spurious wakeups are benign.**  The registry is keyed by the
+//!   key's FNV-1a hash (no per-registration string allocation); a
+//!   colliding hash — or a hit consumed by a racing taker — wakes a
+//!   subscriber which re-checks its key and re-parks.
+//!
+//! [`WakeMode::SeqLock`] retains the PR-2 store-level sequence lock
+//! (every put bumps one counter and wakes every subscriber, which then
+//! rescans its whole key set) as the measurable baseline: `bench_db`'s
+//! subscriber-scaling series puts the two head to head, and
+//! `hpc.db_seqlock_wake = true` selects it for a full training run.
+//!
+//! Keys can be interned ([`Key`]) to precompute the routing hash once;
+//! [`crate::orchestrator::Protocol`] builds per-(env, step) handles so
+//! the steady-state rollout loop does no string formatting or rehashing.
+//!
 //! `bench_db` regenerates the comparison (experiment A1 in DESIGN.md §6).
 
 use super::value::Value;
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{BuildHasher, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(key: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a [`Hasher`] for the shard maps: protocol keys are short,
+/// program-generated strings hashed on every map probe, and FNV beats the
+/// default SipHash by a wide margin there (no DoS exposure — keys are
+/// never attacker-controlled).
+#[derive(Clone, Default)]
+pub struct FnvBuildHasher;
+
+impl BuildHasher for FnvBuildHasher {
+    type Hasher = FnvHasher;
+    fn build_hasher(&self) -> FnvHasher {
+        FnvHasher(FNV_OFFSET)
+    }
+}
+
+/// Streaming FNV-1a state (see [`FnvBuildHasher`]).
+pub struct FnvHasher(u64);
+
+impl Hasher for FnvHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+}
+
+/// An interned store key: the shared name plus its precomputed FNV-1a
+/// hash, so a hot loop routes to a shard and probes the waiter registry
+/// without rehashing, and `put` inserts the map key as a refcount bump
+/// instead of allocating a fresh string per message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Key {
+    name: Arc<str>,
+    hash: u64,
+}
+
+impl Key {
+    /// Intern a key name (hashes and allocates once).
+    pub fn new(name: impl Into<String>) -> Key {
+        let name: Arc<str> = Arc::from(name.into());
+        let hash = fnv1a(&name);
+        Key { name, hash }
+    }
+
+    /// The key name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl std::fmt::Display for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+/// Anything usable as a store key: a plain string (hash computed, and
+/// the stored map key allocated, per call) or an interned [`Key`] handle
+/// (hash precomputed, map key shared by refcount).
+pub trait KeyLike {
+    /// The key name.
+    fn name(&self) -> &str;
+    /// FNV-1a hash of the name (shard routing + waiter registry).
+    fn hash64(&self) -> u64;
+    /// The name as a shared string for storage in the map — a refcount
+    /// bump for interned keys, an allocation for plain strings.
+    fn shared_name(&self) -> Arc<str>;
+}
+
+impl KeyLike for str {
+    fn name(&self) -> &str {
+        self
+    }
+    fn hash64(&self) -> u64 {
+        fnv1a(self)
+    }
+    fn shared_name(&self) -> Arc<str> {
+        Arc::from(self)
+    }
+}
+
+impl KeyLike for String {
+    fn name(&self) -> &str {
+        self
+    }
+    fn hash64(&self) -> u64 {
+        fnv1a(self)
+    }
+    fn shared_name(&self) -> Arc<str> {
+        Arc::from(self.as_str())
+    }
+}
+
+impl KeyLike for Key {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn hash64(&self) -> u64 {
+        self.hash
+    }
+    fn shared_name(&self) -> Arc<str> {
+        self.name.clone()
+    }
+}
+
+/// How `put`/`clear` wake multi-key subscribers (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WakeMode {
+    /// Per-key waiter registration: a put wakes only that key's waiters
+    /// and hands over the hit index.  O(1) per put; the default.
+    #[default]
+    PerKey,
+    /// PR-2 store-level sequence lock: every put wakes every subscriber,
+    /// each of which rescans its whole key set.  Retained as the bench
+    /// baseline (`hpc.db_seqlock_wake`).
+    SeqLock,
+}
 
 /// Operation counters (throughput metrics for the §Perf pass).
 #[derive(Debug, Default)]
@@ -33,6 +208,10 @@ pub struct StoreStats {
     pub poll_misses: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
+    /// Multi-key waiter slots this store constructed; threads cache and
+    /// recycle slots locally (and immediate hits need none), so this
+    /// saturates at roughly one per subscribing thread.
+    pub waiters_created: AtomicU64,
 }
 
 /// Snapshot of the counters.
@@ -44,20 +223,69 @@ pub struct StatsSnapshot {
     pub poll_misses: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    pub waiters_created: u64,
 }
 
-struct Shard {
-    map: Mutex<HashMap<String, Value>>,
+/// A parked multi-key subscriber: `put` pushes the hit index into the
+/// inbox (FIFO, so queued deliveries resolve in arrival order, matching
+/// the `wait_any` contract) and signals the condvar.
+#[derive(Default)]
+struct Waiter {
+    inbox: Mutex<VecDeque<usize>>,
     cv: Condvar,
 }
 
-/// Store-wide notifier for multi-key subscriptions ([`ShardedStore::wait_any`]).
-///
-/// Single-key waiters park on their shard's condvar, but a multi-key waiter
-/// may span shards, so it parks on this store-level sequence lock instead:
-/// every mutation that could satisfy a subscription bumps `seq` and wakes
-/// all subscribers, which then re-scan their key set.  The `waiters` count
-/// keeps the common case (no multi-key waiter) free of the extra lock.
+/// One checkout of the waiter cache: the shared waiter slot plus the
+/// deregistration list `(shard index, key hash)` of its live
+/// registrations.  Leases are recycled so steady-state subscriptions
+/// allocate nothing.
+struct Lease {
+    waiter: Arc<Waiter>,
+    reg: Vec<(usize, u64)>,
+}
+
+/// Upper bound on cached leases per thread (a thread rarely nests
+/// subscriptions, so 1 is typical; the bound only caps pathological
+/// cases).
+const LEASE_CACHE_CAP: usize = 8;
+
+thread_local! {
+    /// Recycled waiter slots.  Thread-local rather than store-level so
+    /// checkout/checkin touch no shared lock at all — with hundreds of
+    /// env workers each polling per RL step, a store-global lease mutex
+    /// would reintroduce exactly the serialization point the per-key
+    /// redesign removes.  A deregistered lease carries no store-specific
+    /// state, so one cache serves every store on the thread.
+    static LEASE_CACHE: RefCell<Vec<Lease>> = const { RefCell::new(Vec::new()) };
+}
+
+struct Shard {
+    inner: Mutex<ShardInner>,
+    /// Single-key waiters (`wait_for`/`wait_take`) park here.
+    cv: Condvar,
+}
+
+/// Registrations on one key hash: `(waiter, index of the key in that
+/// waiter's subscription slice)` — the index is what `put` hands over.
+type KeyWaiters = Vec<(Arc<Waiter>, usize)>;
+
+#[derive(Default)]
+struct ShardInner {
+    /// `Arc<str>` keys: a put with an interned [`Key`] stores the key as
+    /// a refcount bump; lookups go through `Borrow<str>`.
+    map: HashMap<Arc<str>, Value, FnvBuildHasher>,
+    /// Per-key waiter registrations, keyed by the key's FNV hash rather
+    /// than the string (no allocation per registration; a colliding hash
+    /// only produces a benign spurious wakeup).  Deregistration leaves
+    /// empty entries behind to avoid hot-path map churn; `clear` prunes
+    /// them.
+    waiters: HashMap<u64, KeyWaiters, FnvBuildHasher>,
+}
+
+/// Store-wide notifier for the [`WakeMode::SeqLock`] baseline: every
+/// mutation that could satisfy a subscription bumps `seq` and wakes all
+/// subscribers, which then re-scan their key sets.  The `waiters` count
+/// keeps the common case (no subscriber) to one atomic load.
 #[derive(Default)]
 struct MultiWait {
     seq: Mutex<u64>,
@@ -76,10 +304,24 @@ impl MultiWait {
     }
 }
 
-/// Decrements the subscriber count on every exit path of `wait_any`.
-struct WaiterGuard<'a>(&'a AtomicUsize);
+/// Check a waiter slot out of the thread-local cache (fresh slots are
+/// counted per store; a steady-state thread reuses its slot forever).
+fn checkout_lease(stats: &StoreStats) -> Lease {
+    if let Some(lease) = LEASE_CACHE.with(|c| c.borrow_mut().pop()) {
+        return lease;
+    }
+    stats.waiters_created.fetch_add(1, Ordering::Relaxed);
+    Lease {
+        waiter: Arc::new(Waiter::default()),
+        reg: Vec::new(),
+    }
+}
 
-impl Drop for WaiterGuard<'_> {
+/// Decrements the subscriber count on every exit path of the seq-lock
+/// `wait_any` path.
+struct SeqWaiterGuard<'a>(&'a AtomicUsize);
+
+impl Drop for SeqWaiterGuard<'_> {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::SeqCst);
     }
@@ -88,38 +330,46 @@ impl Drop for WaiterGuard<'_> {
 /// Sharded in-memory key-value store.
 pub struct ShardedStore {
     shards: Vec<Shard>,
+    wake: WakeMode,
     multi: MultiWait,
     stats: StoreStats,
 }
 
-fn fnv1a(key: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in key.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
 impl ShardedStore {
-    /// Create a store with `shards` independent locks (1 = Redis-like).
+    /// Create a store with `shards` independent locks (1 = Redis-like)
+    /// and the default per-key wakeup protocol.
     pub fn new(shards: usize) -> ShardedStore {
+        ShardedStore::with_wake_mode(shards, WakeMode::PerKey)
+    }
+
+    /// Create a store with an explicit multi-key wakeup protocol
+    /// ([`WakeMode::SeqLock`] retains the PR-2 baseline for benches).
+    pub fn with_wake_mode(shards: usize, wake: WakeMode) -> ShardedStore {
         assert!(shards >= 1);
         ShardedStore {
             shards: (0..shards)
                 .map(|_| Shard {
-                    map: Mutex::new(HashMap::new()),
+                    inner: Mutex::new(ShardInner::default()),
                     cv: Condvar::new(),
                 })
                 .collect(),
+            wake,
             multi: MultiWait::default(),
             stats: StoreStats::default(),
         }
     }
 
-    fn shard(&self, key: &str) -> &Shard {
-        let i = (fnv1a(key) as usize) % self.shards.len();
-        &self.shards[i]
+    fn shard_index(&self, hash: u64) -> usize {
+        // Route on the HIGH bits: the intra-shard map probes on the low
+        // bits of the same FNV hash, so using the low bits here too would
+        // leave every key in a shard sharing its probe-start bits
+        // (clustered probe chains).  High and low halves of FNV-1a are
+        // effectively independent.
+        ((hash >> 32) as usize) % self.shards.len()
+    }
+
+    fn shard_at(&self, hash: u64) -> &Shard {
+        &self.shards[self.shard_index(hash)]
     }
 
     /// Number of shards (1 = single-lock backend).
@@ -127,74 +377,118 @@ impl ShardedStore {
         self.shards.len()
     }
 
-    /// Store a value under a key (overwrites), waking pollers.
-    pub fn put(&self, key: &str, value: Value) {
+    /// The configured multi-key wakeup protocol.
+    pub fn wake_mode(&self) -> WakeMode {
+        self.wake
+    }
+
+    fn count_hit(&self, v: &Value) {
+        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_out
+            .fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
+    }
+
+    /// Store a value under a key (overwrites), waking pollers: single-key
+    /// waiters on the shard, plus — per [`WakeMode`] — either exactly the
+    /// waiters registered on this key (hit index handed over directly) or
+    /// every subscriber via the sequence lock.
+    pub fn put<K: KeyLike + ?Sized>(&self, key: &K, value: Value) {
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats
             .bytes_in
             .fetch_add(value.size_bytes() as u64, Ordering::Relaxed);
-        let shard = self.shard(key);
-        let mut map = shard.map.lock().unwrap();
-        map.insert(key.to_string(), value);
+        let h = key.hash64();
+        let name = key.shared_name(); // outside the lock (may allocate for &str)
+        let shard = self.shard_at(h);
+        let mut inner = shard.inner.lock().unwrap();
+        inner.map.insert(name, value);
         shard.cv.notify_all();
-        drop(map);
-        self.multi.bump();
+        match self.wake {
+            WakeMode::PerKey => {
+                if let Some(ws) = inner.waiters.get(&h) {
+                    for (w, idx) in ws {
+                        w.inbox.lock().unwrap().push_back(*idx);
+                        w.cv.notify_one();
+                    }
+                }
+            }
+            WakeMode::SeqLock => {
+                drop(inner);
+                self.multi.bump();
+            }
+        }
     }
 
-    /// Fetch a clone of the value, if present.
-    pub fn get(&self, key: &str) -> Option<Value> {
+    /// Fetch the value, if present.  Tensor/byte payloads are shared —
+    /// the returned clone is a refcount bump, not a deep copy.
+    pub fn get<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
-        let shard = self.shard(key);
-        let map = shard.map.lock().unwrap();
-        let v = map.get(key).cloned();
+        let inner = self.shard_at(key.hash64()).inner.lock().unwrap();
+        let v = inner.map.get(key.name()).cloned();
         if let Some(ref val) = v {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
-            self.stats
-                .bytes_out
-                .fetch_add(val.size_bytes() as u64, Ordering::Relaxed);
+            self.count_hit(val);
         }
         v
     }
 
     /// Atomically fetch and remove (consume a message).
-    pub fn take(&self, key: &str) -> Option<Value> {
+    pub fn take<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
-        let shard = self.shard(key);
-        let mut map = shard.map.lock().unwrap();
-        let v = map.remove(key);
+        let mut inner = self.shard_at(key.hash64()).inner.lock().unwrap();
+        let v = inner.map.remove(key.name());
         if let Some(ref val) = v {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
-            self.stats
-                .bytes_out
-                .fetch_add(val.size_bytes() as u64, Ordering::Relaxed);
+            self.count_hit(val);
         }
         v
     }
 
     /// Does the key exist?
-    pub fn exists(&self, key: &str) -> bool {
-        self.shard(key).map.lock().unwrap().contains_key(key)
+    pub fn exists<K: KeyLike + ?Sized>(&self, key: &K) -> bool {
+        self.shard_at(key.hash64())
+            .inner
+            .lock()
+            .unwrap()
+            .map
+            .contains_key(key.name())
     }
 
-    /// Remove a key; true if it existed.
-    pub fn delete(&self, key: &str) -> bool {
-        self.shard(key).map.lock().unwrap().remove(key).is_some()
+    /// Remove a key; true if it existed.  Registered waiters are left
+    /// untouched: they keep waiting for the next put or their timeout.
+    pub fn delete<K: KeyLike + ?Sized>(&self, key: &K) -> bool {
+        self.shard_at(key.hash64())
+            .inner
+            .lock()
+            .unwrap()
+            .map
+            .remove(key.name())
+            .is_some()
     }
 
-    /// Remove everything (between training iterations).  Waiters (both
-    /// single-key and multi-key) are woken so they re-check and, finding
-    /// their keys gone, go back to waiting until their timeout.
+    /// Remove everything (between training iterations).  Single-key
+    /// waiters are woken so they re-check and, finding their keys gone,
+    /// go back to waiting until their timeout.  Per-key registrations
+    /// survive (a cleared key simply never delivers); registry entries
+    /// whose waiters have all deregistered are pruned here, off the hot
+    /// path.
     pub fn clear(&self) {
         for s in &self.shards {
-            s.map.lock().unwrap().clear();
+            let mut inner = s.inner.lock().unwrap();
+            inner.map.clear();
+            inner.waiters.retain(|_, ws| !ws.is_empty());
             s.cv.notify_all();
         }
-        self.multi.bump();
+        if self.wake == WakeMode::SeqLock {
+            self.multi.bump();
+        }
     }
 
     /// Total number of stored keys.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.inner.lock().unwrap().map.len())
+            .sum()
     }
 
     /// True if no keys are stored.
@@ -204,44 +498,33 @@ impl ShardedStore {
 
     /// Blocking poll: wait until `key` appears (condvar-backed, the
     /// SmartRedis `poll_tensor` analogue) or `timeout` elapses.
-    pub fn wait_for(&self, key: &str, timeout: Duration) -> Option<Value> {
-        let deadline = Instant::now() + timeout;
-        let shard = self.shard(key);
-        let mut map = shard.map.lock().unwrap();
-        loop {
-            if let Some(v) = map.get(key) {
-                self.stats.gets.fetch_add(1, Ordering::Relaxed);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                self.stats
-                    .bytes_out
-                    .fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
-                return Some(v.clone());
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
-            let (m, res) = shard.cv.wait_timeout(map, deadline - now).unwrap();
-            map = m;
-            if res.timed_out() && !map.contains_key(key) {
-                return None;
-            }
-        }
+    pub fn wait_for<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
+        self.wait_single(key, timeout, false)
     }
 
     /// Blocking poll-and-take: wait until `key` appears, then consume it.
-    pub fn wait_take(&self, key: &str, timeout: Duration) -> Option<Value> {
+    pub fn wait_take<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
+        self.wait_single(key, timeout, true)
+    }
+
+    fn wait_single<K: KeyLike + ?Sized>(
+        &self,
+        key: &K,
+        timeout: Duration,
+        take: bool,
+    ) -> Option<Value> {
         let deadline = Instant::now() + timeout;
-        let shard = self.shard(key);
-        let mut map = shard.map.lock().unwrap();
+        let shard = self.shard_at(key.hash64());
+        let mut inner = shard.inner.lock().unwrap();
         loop {
-            if let Some(v) = map.remove(key) {
+            let hit = if take {
+                inner.map.remove(key.name())
+            } else {
+                inner.map.get(key.name()).cloned()
+            };
+            if let Some(v) = hit {
                 self.stats.gets.fetch_add(1, Ordering::Relaxed);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                self.stats
-                    .bytes_out
-                    .fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
+                self.count_hit(&v);
                 return Some(v);
             }
             let now = Instant::now();
@@ -249,38 +532,49 @@ impl ShardedStore {
                 return None;
             }
             self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
-            let (m, res) = shard.cv.wait_timeout(map, deadline - now).unwrap();
-            map = m;
-            if res.timed_out() && !map.contains_key(key) {
+            let (g, res) = shard.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = g;
+            if res.timed_out() && !inner.map.contains_key(key.name()) {
                 return None;
             }
         }
     }
 
     /// Blocking multi-key subscription: wait until **any** of `keys`
-    /// appears and return `(index, value)` for the first one found
-    /// (scanning in argument order, so earlier keys win ties).  Returns
-    /// `None` on timeout.
+    /// appears and return `(index, value)` for the first one found.
+    /// Keys already present when the call starts are found in argument
+    /// order (earlier keys win ties); afterwards whichever key's put
+    /// arrives first wins.  Returns `None` on timeout.
     ///
     /// This is the arrival-order primitive behind the event-driven rollout
     /// collector: instead of blocking on one env's state while others sit
     /// ready (the per-key `poll` pattern whose synchronization overhead
     /// paper §6.2 measures), the trainer subscribes to every outstanding
     /// key at once and is woken by whichever env finishes first.
-    /// Condvar-backed — no spin-polling.
-    pub fn wait_any(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+    /// Condvar-backed — no spin-polling; see the module docs for the
+    /// wakeup protocol and its race guarantees.
+    pub fn wait_any<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Option<(usize, Value)> {
         self.wait_any_impl(keys, timeout, false)
     }
 
     /// Like [`ShardedStore::wait_any`], but atomically consumes the value
-    /// it returns (at most one key is removed per call).
-    pub fn wait_any_take(&self, keys: &[&str], timeout: Duration) -> Option<(usize, Value)> {
+    /// it returns (at most one key is removed per call; concurrent takers
+    /// split a stream of puts without loss or duplication).
+    pub fn wait_any_take<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Option<(usize, Value)> {
         self.wait_any_impl(keys, timeout, true)
     }
 
-    fn wait_any_impl(
+    fn wait_any_impl<K: KeyLike + ?Sized>(
         &self,
-        keys: &[&str],
+        keys: &[&K],
         timeout: Duration,
         take: bool,
     ) -> Option<(usize, Value)> {
@@ -288,17 +582,133 @@ impl ShardedStore {
             return None;
         }
         let deadline = Instant::now() + timeout;
+        match self.wake {
+            WakeMode::PerKey => self.wait_any_perkey(keys, deadline, take),
+            WakeMode::SeqLock => self.wait_any_seqlock(keys, deadline, take),
+        }
+    }
+
+    /// Per-key path: register on every key (or return an existing value
+    /// straight from the registration scan), then park on the waiter's
+    /// own condvar until a put hands over a hit index.
+    fn wait_any_perkey<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        deadline: Instant,
+        take: bool,
+    ) -> Option<(usize, Value)> {
+        // Fast path: an already-present key (the collector's common case
+        // when events are queued up) returns without touching the lease
+        // cache or the registries at all.  Purely opportunistic — the
+        // registration scan below re-checks presence authoritatively.
+        for (i, key) in keys.iter().enumerate() {
+            let mut inner = self.shard_at(key.hash64()).inner.lock().unwrap();
+            let hit = if take {
+                inner.map.remove(key.name())
+            } else {
+                inner.map.get(key.name()).cloned()
+            };
+            if let Some(v) = hit {
+                drop(inner);
+                self.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.count_hit(&v);
+                return Some((i, v));
+            }
+        }
+
+        let mut lease = checkout_lease(&self.stats);
+        // Registration scan: under each key's shard lock, either observe
+        // the value now or leave a registration that any later put must
+        // see (the no-lost-wakeup invariant).
+        for (i, key) in keys.iter().enumerate() {
+            let h = key.hash64();
+            let si = self.shard_index(h);
+            let mut inner = self.shards[si].inner.lock().unwrap();
+            let hit = if take {
+                inner.map.remove(key.name())
+            } else {
+                inner.map.get(key.name()).cloned()
+            };
+            if let Some(v) = hit {
+                drop(inner);
+                self.finish_lease(lease);
+                self.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.count_hit(&v);
+                return Some((i, v));
+            }
+            inner
+                .waiters
+                .entry(h)
+                .or_default()
+                .push((lease.waiter.clone(), i));
+            drop(inner);
+            lease.reg.push((si, h));
+        }
+
+        loop {
+            // Park until a put delivers a hit index or the deadline hits.
+            let delivered = {
+                let mut inbox = lease.waiter.inbox.lock().unwrap();
+                loop {
+                    if let Some(i) = inbox.pop_front() {
+                        break Some(i);
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break None;
+                    }
+                    self.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
+                    let (g, _res) = lease.waiter.cv.wait_timeout(inbox, deadline - now).unwrap();
+                    inbox = g;
+                }
+            };
+            let Some(i) = delivered else {
+                self.finish_lease(lease);
+                return None;
+            };
+            if i >= keys.len() {
+                continue; // defensive: stale index can't match this key set
+            }
+            // Re-check the delivered key: a racing taker, delete or clear
+            // may have consumed it, in which case we simply re-park (the
+            // registrations are still live).
+            let hit = {
+                let mut inner = self.shard_at(keys[i].hash64()).inner.lock().unwrap();
+                if take {
+                    inner.map.remove(keys[i].name())
+                } else {
+                    inner.map.get(keys[i].name()).cloned()
+                }
+            };
+            if let Some(v) = hit {
+                self.finish_lease(lease);
+                self.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.count_hit(&v);
+                return Some((i, v));
+            }
+        }
+    }
+
+    /// Seq-lock baseline (PR-2 semantics, kept for `bench_db`'s
+    /// head-to-head): park on the store-level sequence lock; every put
+    /// anywhere triggers a full rescan of the key set.
+    fn wait_any_seqlock<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        deadline: Instant,
+        take: bool,
+    ) -> Option<(usize, Value)> {
         // Register before the first scan: a put that misses the waiter
         // count must have completed its insert already, so the scan below
         // observes the key; a put that sees the count bumps `seq`.
         self.multi.waiters.fetch_add(1, Ordering::SeqCst);
-        let _guard = WaiterGuard(&self.multi.waiters);
+        let _guard = SeqWaiterGuard(&self.multi.waiters);
         loop {
             // Snapshot the sequence BEFORE scanning: a put landing during
             // the scan advances it and turns the wait below into a rescan.
             let seq0 = *self.multi.seq.lock().unwrap();
             for (i, key) in keys.iter().enumerate() {
-                let hit = if take { self.take(key) } else { self.get(key) };
+                let hit = if take { self.take(*key) } else { self.get(*key) };
                 if let Some(v) = hit {
                     return Some((i, v));
                 }
@@ -316,17 +726,33 @@ impl ShardedStore {
                 if now >= deadline {
                     return None;
                 }
-                let (s, res) = self
-                    .multi
-                    .cv
-                    .wait_timeout(seq, deadline - now)
-                    .unwrap();
+                let (s, res) = self.multi.cv.wait_timeout(seq, deadline - now).unwrap();
                 seq = s;
                 if res.timed_out() && *seq == seq0 {
                     return None;
                 }
             }
         }
+    }
+
+    /// Deregister every live registration of the lease, wipe deliveries
+    /// that raced the deregistration, and return the slot to the
+    /// thread-local cache.  After the shard-locked removals no put can
+    /// deliver to this waiter again, so the cached slot is inert.
+    fn finish_lease(&self, mut lease: Lease) {
+        for (si, h) in lease.reg.drain(..) {
+            let mut inner = self.shards[si].inner.lock().unwrap();
+            if let Some(ws) = inner.waiters.get_mut(&h) {
+                ws.retain(|(w, _)| !Arc::ptr_eq(w, &lease.waiter));
+            }
+        }
+        lease.waiter.inbox.lock().unwrap().clear();
+        LEASE_CACHE.with(|c| {
+            let mut cache = c.borrow_mut();
+            if cache.len() < LEASE_CACHE_CAP {
+                cache.push(lease);
+            }
+        });
     }
 
     /// Snapshot the op counters.
@@ -338,6 +764,7 @@ impl ShardedStore {
             poll_misses: self.stats.poll_misses.load(Ordering::Relaxed),
             bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
+            waiters_created: self.stats.waiters_created.load(Ordering::Relaxed),
         }
     }
 }
@@ -346,6 +773,8 @@ impl ShardedStore {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    const MODES: [WakeMode; 2] = [WakeMode::PerKey, WakeMode::SeqLock];
 
     #[test]
     fn put_get_take() {
@@ -365,6 +794,39 @@ mod tests {
         assert_eq!(s.get("k").unwrap().as_flag(), Some(true));
         assert!(s.delete("k"));
         assert!(!s.delete("k"));
+    }
+
+    #[test]
+    fn interned_keys_interoperate_with_strings() {
+        let s = ShardedStore::new(8);
+        let k = Key::new("e0:s0:state");
+        assert_eq!(k.hash64(), "e0:s0:state".hash64());
+        s.put(&k, Value::Scalar(4.0));
+        assert_eq!(s.get("e0:s0:state"), Some(Value::Scalar(4.0)));
+        s.put("e0:s0:state", Value::Scalar(5.0));
+        assert_eq!(s.take(&k), Some(Value::Scalar(5.0)));
+        assert!(!s.exists(&k));
+        assert_eq!(k.name(), "e0:s0:state");
+        assert_eq!(k.to_string(), "e0:s0:state");
+    }
+
+    #[test]
+    fn get_is_zero_copy_of_the_put_tensor() {
+        // Acceptance gate: a 48³-scale state tensor round-trips through
+        // put/get/wait_any as a refcount bump on the producer's buffer.
+        let s = ShardedStore::new(4);
+        let data: Arc<[f32]> = Arc::from(vec![0.5f32; 48 * 48 * 48 * 3]);
+        let shape: Arc<[usize]> = Arc::from(vec![data.len()]);
+        s.put("state", Value::tensor_shared(shape, data.clone()));
+        let g1 = s.get("state").unwrap().tensor_data().unwrap();
+        let g2 = s.get("state").unwrap().tensor_data().unwrap();
+        assert!(Arc::ptr_eq(&g1, &data), "get must not deep-copy");
+        assert!(Arc::ptr_eq(&g2, &data));
+        let (_, v) = s.wait_any(&["state"], Duration::from_secs(1)).unwrap();
+        assert!(
+            Arc::ptr_eq(&v.tensor_data().unwrap(), &data),
+            "wait_any must not deep-copy"
+        );
     }
 
     #[test]
@@ -431,180 +893,340 @@ mod tests {
 
     #[test]
     fn wait_any_returns_existing_key_with_priority() {
-        let s = ShardedStore::new(4);
-        s.put("b", Value::Scalar(2.0));
-        s.put("a", Value::Scalar(1.0));
-        // Argument order, not insertion order, breaks the tie.
-        let (i, v) = s
-            .wait_any(&["a", "b"], Duration::from_secs(1))
-            .expect("both present");
-        assert_eq!((i, v), (0, Value::Scalar(1.0)));
-        // Non-consuming: both keys still there.
-        assert!(s.exists("a") && s.exists("b"));
+        for mode in MODES {
+            let s = ShardedStore::with_wake_mode(4, mode);
+            s.put("b", Value::Scalar(2.0));
+            s.put("a", Value::Scalar(1.0));
+            // Argument order, not insertion order, breaks the tie.
+            let (i, v) = s
+                .wait_any(&["a", "b"], Duration::from_secs(1))
+                .expect("both present");
+            assert_eq!((i, v), (0, Value::Scalar(1.0)), "{mode:?}");
+            // Non-consuming: both keys still there.
+            assert!(s.exists("a") && s.exists("b"));
+        }
     }
 
     #[test]
     fn wait_any_times_out_empty_and_missing() {
-        let s = ShardedStore::new(2);
-        assert!(s.wait_any(&[], Duration::from_secs(5)).is_none());
-        let t0 = Instant::now();
-        assert!(s
-            .wait_any(&["x", "y"], Duration::from_millis(30))
-            .is_none());
-        assert!(t0.elapsed() >= Duration::from_millis(25));
-        assert!(t0.elapsed() < Duration::from_secs(4));
+        for mode in MODES {
+            let s = ShardedStore::with_wake_mode(2, mode);
+            assert!(s.wait_any::<str>(&[], Duration::from_secs(5)).is_none());
+            let t0 = Instant::now();
+            assert!(s
+                .wait_any(&["x", "y"], Duration::from_millis(30))
+                .is_none());
+            assert!(t0.elapsed() >= Duration::from_millis(25), "{mode:?}");
+            assert!(t0.elapsed() < Duration::from_secs(4), "{mode:?}");
+        }
     }
 
     #[test]
     fn wait_any_sees_concurrent_put_on_any_key() {
-        let s = Arc::new(ShardedStore::new(8));
-        let s2 = s.clone();
-        let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
-            s2.put("k7", Value::Scalar(7.0));
-        });
-        let (i, v) = s
-            .wait_any(&["k3", "k5", "k7"], Duration::from_secs(5))
-            .expect("concurrent put must wake the waiter");
-        h.join().unwrap();
-        assert_eq!((i, v), (2, Value::Scalar(7.0)));
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(8, mode));
+            let s2 = s.clone();
+            let h = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                s2.put("k7", Value::Scalar(7.0));
+            });
+            let (i, v) = s
+                .wait_any(&["k3", "k5", "k7"], Duration::from_secs(5))
+                .expect("concurrent put must wake the waiter");
+            h.join().unwrap();
+            assert_eq!((i, v), (2, Value::Scalar(7.0)), "{mode:?}");
+        }
     }
 
     #[test]
     fn wait_any_take_consumes_exactly_one() {
-        let s = ShardedStore::new(4);
-        s.put("a", Value::Scalar(1.0));
-        s.put("b", Value::Scalar(2.0));
-        let (i, _) = s.wait_any_take(&["a", "b"], Duration::from_secs(1)).unwrap();
-        assert_eq!(i, 0);
-        assert!(!s.exists("a"));
-        assert!(s.exists("b"));
+        for mode in MODES {
+            let s = ShardedStore::with_wake_mode(4, mode);
+            s.put("a", Value::Scalar(1.0));
+            s.put("b", Value::Scalar(2.0));
+            let (i, _) = s.wait_any_take(&["a", "b"], Duration::from_secs(1)).unwrap();
+            assert_eq!(i, 0, "{mode:?}");
+            assert!(!s.exists("a"));
+            assert!(s.exists("b"));
+        }
     }
 
     #[test]
     fn wait_any_take_racing_waiters_split_the_values() {
         // Two consumers subscribe to the same 16-key set; every value is
         // delivered to exactly one of them (takes are exclusive).
-        let s = Arc::new(ShardedStore::new(8));
-        let names: Vec<String> = (0..16).map(|i| format!("k{i}")).collect();
-        let mut consumers = Vec::new();
-        for _ in 0..2 {
-            let s = s.clone();
-            let names = names.clone();
-            consumers.push(std::thread::spawn(move || {
-                let keys: Vec<&str> = names.iter().map(|n| n.as_str()).collect();
-                let mut got = Vec::new();
-                for _ in 0..8 {
-                    if let Some((i, _)) = s.wait_any_take(&keys, Duration::from_secs(10)) {
-                        got.push(i);
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(8, mode));
+            let names: Vec<String> = (0..16).map(|i| format!("k{i}")).collect();
+            let mut consumers = Vec::new();
+            for _ in 0..2 {
+                let s = s.clone();
+                let names = names.clone();
+                consumers.push(std::thread::spawn(move || {
+                    let keys: Vec<&str> = names.iter().map(|n| n.as_str()).collect();
+                    let mut got = Vec::new();
+                    for _ in 0..8 {
+                        if let Some((i, _)) = s.wait_any_take(&keys, Duration::from_secs(10)) {
+                            got.push(i);
+                        }
                     }
-                }
-                got
-            }));
+                    got
+                }));
+            }
+            let producer = {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for i in 0..16 {
+                        s.put(&format!("k{i}"), Value::Scalar(i as f64));
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                })
+            };
+            producer.join().unwrap();
+            let mut taken = Vec::new();
+            for c in consumers {
+                taken.extend(c.join().unwrap());
+            }
+            // 16 distinct values produced, 16 exclusive takes demanded:
+            // every key is delivered exactly once across the consumers.
+            taken.sort_unstable();
+            assert_eq!(taken, (0..16).collect::<Vec<_>>(), "{mode:?}");
+            assert!(s.is_empty());
         }
-        let producer = {
-            let s = s.clone();
-            std::thread::spawn(move || {
-                for i in 0..16 {
-                    s.put(&format!("k{i}"), Value::Scalar(i as f64));
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-            })
-        };
-        producer.join().unwrap();
-        let mut taken = Vec::new();
-        for c in consumers {
-            taken.extend(c.join().unwrap());
+    }
+
+    #[test]
+    fn overlapping_waiter_sets_deliver_exactly_once() {
+        // Lost-wakeup / double-delivery stress for the per-key path: 4
+        // producers publish 64 distinct keys while 4 consumers subscribe
+        // to OVERLAPPING key windows (every key covered by >= 2
+        // consumers).  Every value must be taken exactly once.
+        for mode in MODES {
+            let n_keys = 64usize;
+            let s = Arc::new(ShardedStore::with_wake_mode(8, mode));
+            let names: Vec<String> = (0..n_keys).map(|i| format!("ov{i}")).collect();
+            let names = Arc::new(names);
+            let remaining = Arc::new(AtomicUsize::new(n_keys));
+
+            let mut consumers = Vec::new();
+            for c in 0..4 {
+                let s = s.clone();
+                let names = names.clone();
+                let remaining = remaining.clone();
+                consumers.push(std::thread::spawn(move || {
+                    // Window of 32 keys starting at c*16, wrapping: each
+                    // key lies in exactly two consumer windows.
+                    let window: Vec<&str> = (0..32)
+                        .map(|j| names[(c * 16 + j) % n_keys].as_str())
+                        .collect();
+                    let mut got: Vec<String> = Vec::new();
+                    loop {
+                        if remaining.load(Ordering::SeqCst) == 0 {
+                            break;
+                        }
+                        if let Some((i, _)) =
+                            s.wait_any_take(&window, Duration::from_millis(50))
+                        {
+                            remaining.fetch_sub(1, Ordering::SeqCst);
+                            got.push(window[i].to_string());
+                        }
+                    }
+                    got
+                }));
+            }
+            let mut producers = Vec::new();
+            for p in 0..4 {
+                let s = s.clone();
+                let names = names.clone();
+                producers.push(std::thread::spawn(move || {
+                    for i in 0..n_keys / 4 {
+                        let k = p * (n_keys / 4) + i;
+                        s.put(names[k].as_str(), Value::Scalar(k as f64));
+                        if i % 5 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                }));
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            let mut all: Vec<String> = Vec::new();
+            for c in consumers {
+                all.extend(c.join().unwrap());
+            }
+            all.sort_unstable();
+            let mut want: Vec<String> = names.iter().cloned().collect();
+            want.sort_unstable();
+            assert_eq!(all, want, "{mode:?}: every key delivered exactly once");
+            assert!(s.is_empty());
         }
-        // 16 distinct values produced, 16 exclusive takes demanded: every
-        // key is delivered exactly once across the two consumers.
-        taken.sort_unstable();
-        assert_eq!(taken, (0..16).collect::<Vec<_>>());
-        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn put_clear_race_delivers_at_most_once_and_never_hangs() {
+        // A clearer races producers and takers over one small key set:
+        // values may be destroyed by `clear` before delivery (at-most-
+        // once), but nothing may be delivered twice and nobody may hang —
+        // in both wakeup modes (the seq-lock baseline stays selectable
+        // via hpc.db_seqlock_wake).
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(4, mode));
+            let rounds = 200usize;
+            let taken = Arc::new(AtomicUsize::new(0));
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+            let taker = {
+                let s = s.clone();
+                let taken = taken.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        if s.wait_any_take(&["r0", "r1"], Duration::from_millis(5)).is_some() {
+                            taken.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            };
+            let clearer = {
+                let s = s.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        s.clear();
+                        std::thread::yield_now();
+                    }
+                })
+            };
+            for i in 0..rounds {
+                s.put(if i % 2 == 0 { "r0" } else { "r1" }, Value::Scalar(i as f64));
+            }
+            // Give the taker a chance to drain what survived, then stop.
+            std::thread::sleep(Duration::from_millis(30));
+            stop.store(true, Ordering::SeqCst);
+            taker.join().unwrap();
+            clearer.join().unwrap();
+            // Deliveries + survivors can never exceed what was produced.
+            assert!(
+                taken.load(Ordering::SeqCst) + s.len() <= rounds,
+                "{mode:?}: delivered {} + stored {} > produced {rounds}",
+                taken.load(Ordering::SeqCst),
+                s.len()
+            );
+        }
+    }
+
+    #[test]
+    fn waiter_slots_are_recycled() {
+        let s = ShardedStore::new(4);
+        // Parking subscriptions need a slot; repeated parks on one thread
+        // reuse it (<= 1 because the thread-local cache may already hold
+        // a slot from an earlier wait on this thread).
+        for _ in 0..5 {
+            assert!(s.wait_any(&["absent"], Duration::from_millis(5)).is_none());
+        }
+        let after_parks = s.stats().waiters_created;
+        assert!(after_parks <= 1, "one thread needs at most one slot");
+        for _ in 0..5 {
+            assert!(s.wait_any(&["absent"], Duration::from_millis(5)).is_none());
+        }
+        assert_eq!(s.stats().waiters_created, after_parks);
+        // Immediate hits take the lease-free fast path: no slot at all.
+        for i in 0..50 {
+            s.put("w", Value::Scalar(i as f64));
+            assert!(s.wait_any_take(&["w", "other"], Duration::from_secs(1)).is_some());
+        }
+        assert_eq!(s.stats().waiters_created, after_parks);
     }
 
     #[test]
     fn clear_racing_a_waiter_wakes_then_times_out() {
-        let s = Arc::new(ShardedStore::new(4));
-        s.put("noise", Value::Scalar(0.0));
-        let s2 = s.clone();
-        let clearer = std::thread::spawn(move || {
-            for _ in 0..50 {
-                s2.put("noise", Value::Scalar(1.0));
-                s2.clear();
-            }
-        });
-        // The waiter's key never survives a clear; it must neither hang
-        // nor panic, and must time out once the noise stops.
-        let t0 = Instant::now();
-        let got = s.wait_any(&["never"], Duration::from_millis(80));
-        clearer.join().unwrap();
-        assert!(got.is_none());
-        assert!(t0.elapsed() >= Duration::from_millis(75));
-        // Same race for the single-key path.
-        assert!(s.wait_for("never2", Duration::from_millis(30)).is_none());
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(4, mode));
+            s.put("noise", Value::Scalar(0.0));
+            let s2 = s.clone();
+            let clearer = std::thread::spawn(move || {
+                for _ in 0..50 {
+                    s2.put("noise", Value::Scalar(1.0));
+                    s2.clear();
+                }
+            });
+            // The waiter's key never survives a clear; it must neither
+            // hang nor panic, and must time out once the noise stops.
+            let t0 = Instant::now();
+            let got = s.wait_any(&["never"], Duration::from_millis(80));
+            clearer.join().unwrap();
+            assert!(got.is_none(), "{mode:?}");
+            assert!(t0.elapsed() >= Duration::from_millis(75));
+            // Same race for the single-key path.
+            assert!(s.wait_for("never2", Duration::from_millis(30)).is_none());
+        }
     }
 
     #[test]
     fn wait_any_timeout_holds_under_unrelated_traffic() {
-        // Sustained puts on other keys keep waking the subscriber; the
-        // timeout must still be honored (bounded overshoot).
-        let s = Arc::new(ShardedStore::new(4));
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let writer = {
-            let s = s.clone();
-            let stop = stop.clone();
-            std::thread::spawn(move || {
-                let mut i = 0u64;
-                while !stop.load(Ordering::Relaxed) {
-                    s.put(&format!("noise{}", i % 64), Value::Scalar(i as f64));
-                    i += 1;
-                }
-            })
-        };
-        let t0 = Instant::now();
-        let got = s.wait_any(&["absent1", "absent2"], Duration::from_millis(100));
-        stop.store(true, Ordering::Relaxed);
-        writer.join().unwrap();
-        assert!(got.is_none());
-        assert!(t0.elapsed() >= Duration::from_millis(95));
-        assert!(
-            t0.elapsed() < Duration::from_secs(5),
-            "timeout starved by unrelated puts: {:?}",
-            t0.elapsed()
-        );
+        // Sustained puts on other keys must not starve the timeout (in
+        // per-key mode they don't even wake the subscriber).
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(4, mode));
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let writer = {
+                let s = s.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        s.put(&format!("noise{}", i % 64), Value::Scalar(i as f64));
+                        i += 1;
+                    }
+                })
+            };
+            let t0 = Instant::now();
+            let got = s.wait_any(&["absent1", "absent2"], Duration::from_millis(100));
+            stop.store(true, Ordering::Relaxed);
+            writer.join().unwrap();
+            assert!(got.is_none(), "{mode:?}");
+            assert!(t0.elapsed() >= Duration::from_millis(95));
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "{mode:?}: timeout starved by unrelated puts: {:?}",
+                t0.elapsed()
+            );
+        }
     }
 
     #[test]
     fn wait_any_under_multithread_contention() {
         // N producers each publish a distinct key; one consumer drains
         // them all in arrival order via repeated wait_any_take.
-        let s = Arc::new(ShardedStore::new(8));
-        let n = 16usize;
-        let mut producers = Vec::new();
-        for i in 0..n {
-            let s = s.clone();
-            producers.push(std::thread::spawn(move || {
-                std::thread::sleep(Duration::from_millis((i as u64 * 7) % 23));
-                s.put(&format!("p{i}"), Value::Scalar(i as f64));
-            }));
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(8, mode));
+            let n = 16usize;
+            let mut producers = Vec::new();
+            for i in 0..n {
+                let s = s.clone();
+                producers.push(std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis((i as u64 * 7) % 23));
+                    s.put(&format!("p{i}"), Value::Scalar(i as f64));
+                }));
+            }
+            let names: Vec<String> = (0..n).map(|i| format!("p{i}")).collect();
+            let keys: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let mut seen = vec![false; n];
+            for _ in 0..n {
+                let (i, v) = s
+                    .wait_any_take(&keys, Duration::from_secs(10))
+                    .expect("all producers publish");
+                assert_eq!(v.as_scalar(), Some(i as f64));
+                assert!(!seen[i], "{mode:?}: key p{i} delivered twice");
+                seen[i] = true;
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            assert!(seen.iter().all(|&x| x));
+            assert!(s.is_empty());
         }
-        let names: Vec<String> = (0..n).map(|i| format!("p{i}")).collect();
-        let keys: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        let mut seen = vec![false; n];
-        for _ in 0..n {
-            let (i, v) = s
-                .wait_any_take(&keys, Duration::from_secs(10))
-                .expect("all producers publish");
-            assert_eq!(v.as_scalar(), Some(i as f64));
-            assert!(!seen[i], "key p{i} delivered twice");
-            seen[i] = true;
-        }
-        for p in producers {
-            p.join().unwrap();
-        }
-        assert!(seen.iter().all(|&x| x));
-        assert!(s.is_empty());
     }
 
     #[test]

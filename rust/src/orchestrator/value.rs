@@ -1,25 +1,55 @@
 //! Values stored in the orchestrator: tensors (flow states, actions),
 //! scalars and flags (the done-flag protocol of paper §3.1).
+//!
+//! Tensor and byte payloads are reference-counted (`Arc<[f32]>` /
+//! `Arc<[u8]>`): a `Value` clone — and therefore a store `get` or a
+//! multi-key subscription hit — is a refcount bump, never a deep copy of
+//! the 48³-scale state tensor.  Producers that own an `Arc` buffer can
+//! republish it through [`crate::orchestrator::Client::put_tensor_shared`]
+//! without copying; [`TensorPool`] recycles such buffers so the
+//! steady-state rollout exchange allocates nothing.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// A value in the in-memory datastore.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     /// Dense f32 tensor with shape (the SmartRedis `put_tensor` analogue).
-    Tensor { shape: Vec<usize>, data: Vec<f32> },
+    /// Payload is shared: cloning the value bumps a refcount.
+    Tensor {
+        shape: Arc<[usize]>,
+        data: Arc<[f32]>,
+    },
     /// Scalar (timings, rewards).
     Scalar(f64),
     /// Boolean flag ("FLEXI has reached its final state and will terminate").
     Flag(bool),
-    /// Opaque bytes (checkpoints, metadata).
-    Bytes(Vec<u8>),
+    /// Opaque bytes (checkpoints, metadata); shared like tensor data.
+    Bytes(Arc<[u8]>),
 }
 
 impl Value {
-    /// Build a tensor value; panics if shape and data disagree.
+    /// Build a tensor value from owned vectors; panics if shape and data
+    /// disagree.  The vectors are moved into shared buffers once here —
+    /// every later clone is free.
     pub fn tensor(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        Value::tensor_shared(Arc::from(shape), Arc::from(data))
+    }
+
+    /// Build a tensor value from already-shared buffers (zero-copy
+    /// republish of a producer-owned buffer); panics if shape and data
+    /// disagree.
+    pub fn tensor_shared(shape: Arc<[usize]>, data: Arc<[f32]>) -> Value {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "tensor shape {shape:?} != data len {}", data.len());
         Value::Tensor { shape, data }
+    }
+
+    /// Build a bytes value.
+    pub fn bytes(data: Vec<u8>) -> Value {
+        Value::Bytes(Arc::from(data))
     }
 
     /// Approximate payload size in bytes (for the throughput metrics).
@@ -40,6 +70,14 @@ impl Value {
         }
     }
 
+    /// The shared tensor payload (refcount handle, no copy).
+    pub fn tensor_data(&self) -> Option<Arc<[f32]>> {
+        match self {
+            Value::Tensor { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+
     /// Flag accessor.
     pub fn as_flag(&self) -> Option<bool> {
         match self {
@@ -54,6 +92,86 @@ impl Value {
             Value::Scalar(x) => Some(*x),
             _ => None,
         }
+    }
+}
+
+/// Recycling pool of shared tensor payload buffers.
+///
+/// The rollout exchange publishes one state tensor per env per step and
+/// one action tensor back; with `Arc` payloads the consumers only bump
+/// refcounts, so the producer's handle becomes uniquely owned again as
+/// soon as every consumer has dropped theirs — at which point the buffer
+/// can be refilled in place instead of allocating a fresh one.
+///
+/// The pool is a FIFO queue: handles come back in publish order, so the
+/// front is always the oldest buffer — the first whose consumers release
+/// it.  One `strong_count` probe per take (never a scan past still-shared
+/// buffers): a pool sized by one iteration's publishes hits the front
+/// every time in steady state.  Designed for the exchange pattern of one
+/// buffer length per pool; a mis-sized unique front is dropped and
+/// reallocated rather than searched around.
+///
+/// `allocs` counts pool misses (fresh heap allocations): in a
+/// steady-state training iteration it must not advance, which the envpool
+/// integration test asserts.
+pub struct TensorPool {
+    free: VecDeque<Arc<[f32]>>,
+    allocs: Arc<AtomicU64>,
+    /// Parking bound: `put_back` beyond it drops the handle instead
+    /// (safe — consumers keep the buffer alive until they finish), so a
+    /// caller that retains published buffers indefinitely (a replay
+    /// buffer, say) cannot grow the pool without bound.
+    max_parked: usize,
+}
+
+impl TensorPool {
+    /// A pool reporting its fresh allocations into `allocs` (shared so
+    /// several pools — per-worker obs pools, the trainer's action pool —
+    /// can aggregate into one exchange-path counter).  Size `max_parked`
+    /// to the working set of one iteration: parking beyond it drops
+    /// handles instead of growing the queue.
+    pub fn new(allocs: Arc<AtomicU64>, max_parked: usize) -> TensorPool {
+        TensorPool {
+            free: VecDeque::new(),
+            allocs,
+            max_parked,
+        }
+    }
+
+    /// Take a buffer of `len` floats with unique ownership
+    /// (`Arc::get_mut` is guaranteed to succeed).  Reuses the oldest
+    /// returned buffer if its consumers have all dropped their handles;
+    /// allocates (and counts) otherwise.
+    pub fn take_free(&mut self, len: usize) -> Arc<[f32]> {
+        if self
+            .free
+            .front()
+            .is_some_and(|b| Arc::strong_count(b) == 1)
+        {
+            let buf = self.free.pop_front().unwrap();
+            if buf.len() == len {
+                return buf;
+            }
+            // Unique but mis-sized (pool repurposed): drop and reallocate.
+        }
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        Arc::from(vec![0f32; len])
+    }
+
+    /// Return the producer's handle after publishing clones of it.  The
+    /// buffer becomes reusable once all published clones are dropped.
+    /// Beyond `max_parked` the handle is dropped instead of parked (the
+    /// consumers' clones keep the buffer alive; the pool just forgets
+    /// it), bounding pool memory under pathological retention.
+    pub fn put_back(&mut self, buf: Arc<[f32]>) {
+        if self.free.len() < self.max_parked {
+            self.free.push_back(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (free or still shared).
+    pub fn parked(&self) -> usize {
+        self.free.len()
     }
 }
 
@@ -87,5 +205,83 @@ mod tests {
         assert!(Value::Scalar(1.0).as_tensor().is_none());
         assert!(Value::Flag(true).as_scalar().is_none());
         assert_eq!(Value::Flag(true).as_flag(), Some(true));
+        assert!(Value::Scalar(1.0).tensor_data().is_none());
+    }
+
+    #[test]
+    fn clone_is_refcount_bump_not_deep_copy() {
+        let data: Arc<[f32]> = Arc::from(vec![1.0f32; 48 * 48 * 48 * 3]);
+        let v = Value::tensor_shared(Arc::from(vec![data.len()]), data.clone());
+        let c = v.clone();
+        let d1 = v.tensor_data().unwrap();
+        let d2 = c.tensor_data().unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2), "clone must share the payload");
+        assert!(Arc::ptr_eq(&d1, &data), "value must share the producer's buffer");
+    }
+
+    #[test]
+    fn pool_reuses_released_buffers_and_counts_misses() {
+        let allocs = Arc::new(AtomicU64::new(0));
+        let mut pool = TensorPool::new(allocs.clone(), 64);
+
+        let mut a = pool.take_free(16);
+        assert_eq!(allocs.load(Ordering::Relaxed), 1);
+        Arc::get_mut(&mut a).unwrap()[0] = 3.0;
+        let consumer = a.clone();
+        pool.put_back(a);
+
+        // Consumer still holds the front buffer: the pool must not hand
+        // it out.
+        let b = pool.take_free(16);
+        assert_eq!(allocs.load(Ordering::Relaxed), 2);
+        drop(consumer);
+        pool.put_back(b);
+
+        // Both buffers are free now (FIFO order a, b): two takes, zero
+        // new allocations.
+        let c = pool.take_free(16);
+        let d = pool.take_free(16);
+        assert_eq!(allocs.load(Ordering::Relaxed), 2);
+        assert_eq!(c[0], 3.0, "oldest buffer comes back first");
+
+        // Empty pool is a miss.
+        let e = pool.take_free(8);
+        assert_eq!(e.len(), 8);
+        assert_eq!(allocs.load(Ordering::Relaxed), 3);
+        drop((c, d));
+
+        // A unique front of the wrong size is dropped and reallocated,
+        // not searched around.
+        pool.put_back(e);
+        let f = pool.take_free(16);
+        assert_eq!(f.len(), 16);
+        assert_eq!(allocs.load(Ordering::Relaxed), 4);
+        assert_eq!(pool.parked(), 0, "mis-sized front was evicted");
+    }
+
+    #[test]
+    fn pool_unique_ownership_is_writable() {
+        let mut pool = TensorPool::new(Arc::new(AtomicU64::new(0)), 64);
+        let mut a = pool.take_free(4);
+        Arc::get_mut(&mut a).expect("fresh buffer is unique")[3] = 7.0;
+        pool.put_back(a.clone());
+        drop(a);
+        let mut b = pool.take_free(4);
+        assert_eq!(b[3], 7.0, "recycled buffer keeps its storage");
+        Arc::get_mut(&mut b).expect("recycled buffer is unique again");
+    }
+
+    #[test]
+    fn pool_parking_is_bounded() {
+        // A consumer that never releases its clones (pathological
+        // retention) must not grow the pool without bound.
+        let mut pool = TensorPool::new(Arc::new(AtomicU64::new(0)), 3);
+        let mut retained = Vec::new();
+        for _ in 0..10 {
+            let b = pool.take_free(4);
+            retained.push(b.clone()); // held forever
+            pool.put_back(b);
+        }
+        assert_eq!(pool.parked(), 3, "parking capped at max_parked");
     }
 }

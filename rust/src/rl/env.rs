@@ -122,6 +122,15 @@ impl LesEnv {
     /// restricted to that family's pool indices (one RNG draw either way,
     /// so the consumption pattern is family-independent).
     pub fn reset(&mut self, rng: &mut Rng, test: bool) -> Vec<f32> {
+        self.reset_in_place(rng, test);
+        self.solver.observations()
+    }
+
+    /// [`LesEnv::reset`] without materializing the observation — the env
+    /// workers reset in place and then [`LesEnv::observe_into`] a reusable
+    /// buffer, so a steady-state episode start allocates nothing.  The RNG
+    /// consumption is identical to `reset`.
+    pub fn reset_in_place(&mut self, rng: &mut Rng, test: bool) {
         let flat = if test {
             &self.truth.test_state
         } else {
@@ -141,7 +150,6 @@ impl LesEnv {
         self.solver.forcing = Some(LinearForcing::new(self.ke_target, self.forcing_tau));
         self.solver.set_cs_uniform(0.0);
         self.step_idx = 0;
-        self.solver.observations()
     }
 
     /// Apply per-element Cs actions and advance one RL interval.
@@ -161,6 +169,17 @@ impl LesEnv {
     /// Current observation.
     pub fn observe(&mut self) -> Vec<f32> {
         self.solver.observations()
+    }
+
+    /// Current observation into a caller-owned buffer of
+    /// [`LesEnv::obs_len`] floats (no allocation).
+    pub fn observe_into(&mut self, out: &mut [f32]) {
+        self.solver.observations_into(out);
+    }
+
+    /// Observation length: `n_elems * (N+1)^3 * 3`.
+    pub fn obs_len(&self) -> usize {
+        self.solver.obs_len()
     }
 
     /// Current LES energy spectrum.
@@ -268,6 +287,29 @@ mod tests {
         let mut env = LesEnv::new(&case, &scfg, truth).unwrap();
         assert!(env.set_init_family(3, 4).is_err());
         assert!(env.set_init_family(2, 2).is_err());
+    }
+
+    #[test]
+    fn reset_in_place_and_observe_into_match_the_allocating_path() {
+        let (case, scfg, truth) = tiny_setup();
+        let mut env1 = LesEnv::new(&case, &scfg, truth.clone()).unwrap();
+        let mut env2 = LesEnv::new(&case, &scfg, truth).unwrap();
+        let mut rng1 = Rng::new(4);
+        let mut rng2 = Rng::new(4);
+        let a = env1.reset(&mut rng1, false);
+        env2.reset_in_place(&mut rng2, false);
+        let mut b = vec![0f32; env2.obs_len()];
+        assert_eq!(a.len(), env2.obs_len());
+        env2.observe_into(&mut b);
+        assert_eq!(a, b, "in-place reset + observe_into == reset");
+        // Identical RNG consumption: the next draws agree.
+        assert_eq!(rng1.next_u64(), rng2.next_u64());
+
+        let cs = vec![0.1; env1.n_elems()];
+        env1.step(&cs);
+        env2.step(&cs);
+        env2.observe_into(&mut b);
+        assert_eq!(env1.observe(), b, "observe_into == observe after a step");
     }
 
     #[test]

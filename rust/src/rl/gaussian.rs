@@ -9,10 +9,19 @@ const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
 
 /// Sample `a ~ N(mean, exp(log_std))` per element.
 pub fn sample(mean: &[f32], log_std: f32, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0f32; mean.len()];
+    sample_into(mean, log_std, rng, &mut out);
+    out
+}
+
+/// [`sample`] into a caller-owned buffer (identical RNG consumption) —
+/// the allocation-free path for the collector's recycled action buffers.
+pub fn sample_into(mean: &[f32], log_std: f32, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(mean.len(), out.len());
     let sigma = (log_std as f64).exp();
-    mean.iter()
-        .map(|&m| (m as f64 + sigma * rng.normal()) as f32)
-        .collect()
+    for (o, &m) in out.iter_mut().zip(mean) {
+        *o = (m as f64 + sigma * rng.normal()) as f32;
+    }
 }
 
 /// Elementwise log density of `act` under `N(mean, exp(log_std))`.

@@ -8,14 +8,20 @@
 //! `return - V(s)` advantages.
 
 use crate::util::{stats, Rng};
+use std::sync::Arc;
 
 /// Data recorded at one env step (all elements of one env).
+///
+/// Observation and action blocks are shared buffers: the collector
+/// records the very same `Arc` the exchange path published (the worker's
+/// observation buffer, the trainer's action buffer), so recording a step
+/// bumps two refcounts instead of copying tensors.
 #[derive(Debug, Clone)]
 pub struct StepRecord {
     /// `n_elems * features` observation block.
-    pub obs: Vec<f32>,
+    pub obs: Arc<[f32]>,
     /// Per-element actions.
-    pub act: Vec<f32>,
+    pub act: Arc<[f32]>,
     /// Per-element behaviour log-probs.
     pub logp: Vec<f32>,
     /// Per-element critic values.
@@ -179,8 +185,8 @@ mod tests {
                 .iter()
                 .zip(values)
                 .map(|(&r, &v)| StepRecord {
-                    obs: vec![0.5; n_elems * feat],
-                    act: vec![0.1; n_elems],
+                    obs: vec![0.5; n_elems * feat].into(),
+                    act: vec![0.1; n_elems].into(),
                     logp: vec![-1.0; n_elems],
                     value: vec![v; n_elems],
                     reward: r,

@@ -193,6 +193,33 @@ mod tests {
     }
 
     #[test]
+    fn plan_empty_batch_list_panics() {
+        // No compiled batch sizes is a build/registry error, not a
+        // plannable request — assert the guard fires rather than looping.
+        let r = std::panic::catch_unwind(|| plan_chunks(&[], 7));
+        assert!(r.is_err());
+        // ...including for the degenerate zero-sample request.
+        let r = std::panic::catch_unwind(|| plan_chunks(&[], 0));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn plan_zero_samples_is_empty() {
+        assert!(plan_chunks(&[8, 32], 0).is_empty());
+        assert!(plan_chunks(&[1], 0).is_empty());
+    }
+
+    #[test]
+    fn plan_single_oversized_batch_pads_once() {
+        // Only one compiled size, larger than the request: one padded
+        // chunk, never an infinite loop or a zero-take entry.
+        assert_eq!(plan_chunks(&[256], 10), vec![(256, 10)]);
+        assert_eq!(plan_chunks(&[256], 1), vec![(256, 1)]);
+        assert_eq!(plan_chunks(&[256], 256), vec![(256, 256)]);
+        assert_eq!(plan_chunks(&[256], 257), vec![(256, 256), (256, 1)]);
+    }
+
+    #[test]
     fn plan_covers_any_request() {
         let b = [8usize, 32];
         for n in 1..200 {

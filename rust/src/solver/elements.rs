@@ -68,8 +68,17 @@ impl ElementMap {
     /// velocities: layout `(n_elems, p, p, p, 3)` flattened, f32 — the
     /// policy artifact's input order.
     pub fn gather_observations(&self, u: &[Vec<Cpx>; 3]) -> Vec<f32> {
+        let mut obs = vec![0f32; self.n_elems() * self.points_per_elem() * 3];
+        self.gather_observations_into(u, &mut obs);
+        obs
+    }
+
+    /// [`ElementMap::gather_observations`] into a caller-owned buffer —
+    /// the allocation-free path the env workers' reusable observation
+    /// buffers go through.
+    pub fn gather_observations_into(&self, u: &[Vec<Cpx>; 3], obs: &mut [f32]) {
         let (n, p, e) = (self.n, self.p, self.elems_per_dir);
-        let mut obs = vec![0f32; self.n_elems() * p * p * p * 3];
+        assert_eq!(obs.len(), self.n_elems() * p * p * p * 3);
         let mut w = 0usize;
         for ez in 0..e {
             for ey in 0..e {
@@ -89,7 +98,6 @@ impl ElementMap {
                 }
             }
         }
-        obs
     }
 
     /// Element ids in the order `gather_observations` emits them

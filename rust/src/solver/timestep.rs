@@ -157,6 +157,15 @@ impl Solver {
 
     /// Element observations of the current state, `(n_elems, p, p, p, 3)` f32.
     pub fn observations(&mut self) -> Vec<f32> {
+        let mut obs = vec![0f32; self.obs_len()];
+        self.observations_into(&mut obs);
+        obs
+    }
+
+    /// [`Solver::observations`] into a caller-owned buffer of
+    /// [`Solver::obs_len`] floats — the allocation-free path for reusable
+    /// per-worker observation buffers.
+    pub fn observations_into(&mut self, obs: &mut [f32]) {
         for c in 0..3 {
             to_physical(
                 &self.grid,
@@ -166,7 +175,12 @@ impl Solver {
             );
         }
         self.stats.transforms += 3;
-        self.emap.gather_observations(&self.ws.u_phys)
+        self.emap.gather_observations_into(&self.ws.u_phys, obs);
+    }
+
+    /// Observation length: `n_elems * (N+1)^3 * 3`.
+    pub fn obs_len(&self) -> usize {
+        self.emap.n_elems() * self.emap.points_per_elem() * 3
     }
 
     /// Max divergence magnitude (diagnostic; should stay at round-off).

@@ -12,7 +12,9 @@
 //!   pools where a short-horizon variant terminates early (the
 //!   early-done deadlock regression);
 //! * `min_batch = 1` (fully event-driven) still completes every episode
-//!   with correct per-variant bookkeeping.
+//!   with correct per-variant bookkeeping;
+//! * the zero-copy exchange allocates no tensor buffers after the warm-up
+//!   iteration (`PoolCounters::exchange_allocs`, the CI allocation gate).
 
 use relexi::config::{CaseConfig, EnvVariant, RunConfig};
 use relexi::coordinator::EnvPool;
@@ -209,6 +211,44 @@ fn min_batch_one_completes_heterogeneous_pool() {
     let feat = 6usize.pow(3) * 3;
     let ds = flatten(&r.episodes, feat, 0.995, 1.0);
     assert_eq!(ds.len(), (4 + 2 + 4 + 4) * 8);
+}
+
+#[test]
+fn steady_state_exchange_allocates_nothing() {
+    // The PR-3 acceptance gate (run explicitly by the CI smoke job): the
+    // tensor pools — per-worker observation buffers, the trainer's action
+    // buffers — warm up during iteration 0 and must never allocate again.
+    // Rollouts are dropped before the next iteration (as the training
+    // loop does after its update phase), which releases every shared
+    // buffer back to its pool.
+    let cfg = tiny_cfg(3);
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::new(cfg, tiny_truth(21), &orch).unwrap();
+    let mut rng = Rng::new(8);
+
+    let mut allocs_after = Vec::new();
+    for it in 0..4 {
+        let proto = Protocol::new(&format!("za{it}"));
+        let r = pool
+            .collect_with(&orch, &proto, stub_policy, &mut rng, false, n_envs)
+            .unwrap();
+        assert_eq!(r.episodes.len(), n_envs);
+        orch.clear();
+        allocs_after.push(pool.counters().exchange_allocs);
+        // `r` (the only holder of the shared buffers) drops here.
+    }
+    assert!(
+        allocs_after[0] > 0,
+        "pools must warm up during iteration 0"
+    );
+    for it in 1..4 {
+        assert_eq!(
+            allocs_after[it],
+            allocs_after[0],
+            "iteration {it} allocated exchange buffers in steady state: {allocs_after:?}"
+        );
+    }
 }
 
 #[test]
