@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use relexi::config::{CaseConfig, RunConfig};
-use relexi::rl::{gaussian, LesEnv};
+use relexi::rl::{gaussian, CfdEnv, LesEnv};
 use relexi::runtime::{PolicyRuntime, Registry, Runtime};
 use relexi::solver::dns::{generate, TruthParams};
 use relexi::util::bench::Table;

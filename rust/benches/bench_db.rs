@@ -10,10 +10,18 @@
 //! PR-3 additions: the subscriber-scaling series (put latency on a hot
 //! key while 8/64/256 waiters idle on OTHER keys, per-key wakeups vs the
 //! retained seq-lock baseline — per-key must stay flat while seq-lock
-//! grows) and interned-key/zero-copy micro rows.  All rows land in
-//! `BENCH_db.json` and are uploaded by the CI smoke job.
+//! grows) and interned-key/zero-copy micro rows.
+//!
+//! PR-4 addition: the persistent-subscription series — consuming an
+//! E-key wave through one incrementally-updated `Subscription` (O(E)
+//! registry ops total) vs the per-event `wait_any` rebuild the rollout
+//! collector used before (O(E) scan/registration work per event, O(E²)
+//! per wave).  All rows land in `BENCH_db.json` and are uploaded by the
+//! CI smoke job.
 
-use relexi::orchestrator::{Key, Orchestrator, Protocol, ShardedStore, Value, WakeMode};
+use relexi::orchestrator::{
+    Key, Orchestrator, Protocol, ShardedStore, Subscription, Value, WakeMode,
+};
 use relexi::util::bench::{fmt_duration, Bench, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -98,6 +106,62 @@ fn waiter_scaling_series(b: &mut Bench, table: &mut Table, counts: &[usize]) {
                 n_waiters.to_string(),
                 fmt_duration(m.mean_s),
                 fmt_duration(m.median_s),
+            ]);
+        }
+    }
+}
+
+/// PR-4 series: consume a wave of `e` distinct keys (produced with a
+/// staggered writer, as env states arrive) either through one persistent
+/// [`relexi::orchestrator::Subscription`] — register once, O(1) inbox
+/// pops per event — or through the retired collector pattern of
+/// rebuilding a `wait_any_take` over the outstanding key set per event.
+fn subscription_wave_series(b: &mut Bench, table: &mut Table, counts: &[usize]) {
+    for (label, persistent) in [("persistent sub", true), ("per-event rebuild", false)] {
+        for &e in counts {
+            let store = Arc::new(ShardedStore::new(16));
+            let names: Arc<Vec<Key>> =
+                Arc::new((0..e).map(|i| Key::new(format!("wave{i}"))).collect());
+            let m = b.run(&format!("consume {e}-key wave [{label}]"), || {
+                let producer = {
+                    let store = store.clone();
+                    let names = names.clone();
+                    std::thread::spawn(move || {
+                        for k in names.iter() {
+                            store.put(k, Value::Scalar(1.0));
+                            std::thread::yield_now();
+                        }
+                    })
+                };
+                if persistent {
+                    let mut sub = Subscription::new(store.clone());
+                    for (i, k) in names.iter().enumerate() {
+                        sub.add(i, k);
+                    }
+                    let mut got = 0usize;
+                    while got < e {
+                        if sub.wait_take(Duration::from_secs(60)).is_some() {
+                            got += 1;
+                        }
+                    }
+                } else {
+                    let mut outstanding: Vec<usize> = (0..e).collect();
+                    while !outstanding.is_empty() {
+                        let keys: Vec<&Key> =
+                            outstanding.iter().map(|&i| &names[i]).collect();
+                        let (hit, _) = store
+                            .wait_any_take(&keys, Duration::from_secs(60))
+                            .expect("producer publishes every key");
+                        outstanding.remove(hit);
+                    }
+                }
+                producer.join().unwrap();
+            });
+            table.row(vec![
+                label.to_string(),
+                e.to_string(),
+                fmt_duration(m.mean_s),
+                fmt_duration(m.mean_s / e as f64),
             ]);
         }
     }
@@ -195,6 +259,20 @@ fn main() {
         "Expected shape: per-key put latency is independent of the number\n\
          of waiters registered on other keys; the seq-lock baseline wakes\n\
          all of them per put and grows with the subscriber count."
+    );
+
+    // Persistent-subscription wave series (acceptance: per-event cost of
+    // the persistent handle flat in E, rebuild growing linearly in E).
+    let wave_counts: &[usize] = if smoke { &[16, 64] } else { &[64, 256, 1024] };
+    let mut stable = Table::new(&["consumer", "wave keys", "wave mean", "per event"]);
+    subscription_wave_series(&mut b, &mut stable, wave_counts);
+    stable.print("Persistent subscription vs per-event wait_any rebuild (PR-4)");
+    println!(
+        "Expected shape: the persistent subscription's per-event cost is\n\
+         flat in the wave size (one inbox pop + one shard-locked take);\n\
+         the per-event rebuild re-scans and re-registers its whole\n\
+         outstanding key set, so its per-event cost grows with E — the\n\
+         O(E^2)-per-wave collector behavior PR 4 retired."
     );
 
     b.write_json("BENCH_db.json").expect("write BENCH_db.json");

@@ -84,6 +84,81 @@ impl Default for SolverConfig {
     }
 }
 
+/// The 1D stochastic-Burgers LES scenario (`rl.backend = "burgers"`): a
+/// periodic viscous Burgers flow kept quasi-stationary by linear forcing
+/// plus stochastic low-wavenumber noise, coarse-grained onto `points`
+/// grid points.  RL picks one Smagorinsky-like SGS coefficient per
+/// spatial segment; the reward compares the coarse energy spectrum
+/// against a resolved-truth mean spectrum through the same Eqs. (4)-(5)
+/// shaping as the 3D HIT case.  Orders of magnitude cheaper than the
+/// spectral LES, so hundreds of envs fit in a CI smoke run.
+#[derive(Debug, Clone)]
+pub struct BurgersConfig {
+    /// Coarse (LES) grid points on `[0, 2*pi)`.
+    pub points: usize,
+    /// Control segments = agents (one SGS coefficient each); must divide
+    /// `points`.
+    pub segments: usize,
+    /// Molecular viscosity.
+    pub nu: f64,
+    /// Target kinetic energy `mean(u^2)/2` held by the linear forcing.
+    pub ke_target: f64,
+    /// Relaxation time of the energy controller.
+    pub forcing_tau: f64,
+    /// Amplitude of the stochastic low-wavenumber forcing.
+    pub noise_amp: f64,
+    /// Forced wavenumbers `1..=noise_modes`.
+    pub noise_modes: usize,
+    /// Maximum wavenumber entering the reward, Eq. (4).
+    pub k_max: usize,
+    /// Reward scaling factor alpha, Eq. (5).
+    pub alpha: f64,
+    /// Physical time between RL actions.
+    pub dt_rl: f64,
+    /// Episode end time.
+    pub t_end: f64,
+    /// CFL number for the adaptive substeps.
+    pub cfl: f64,
+    /// Resolved-truth refinement: the truth runs on `truth_refine *
+    /// points` grid points.
+    pub truth_refine: usize,
+    /// Initial-state pool size (plus one held-out test state).
+    pub truth_states: usize,
+    /// Truth spin-up time before sampling starts.
+    pub truth_spinup: f64,
+    /// Physical time between truth snapshots.
+    pub truth_interval: f64,
+    /// Seed of the truth simulation (shared by every env in a pool).
+    pub truth_seed: u64,
+}
+
+impl Default for BurgersConfig {
+    fn default() -> Self {
+        BurgersConfig {
+            points: 96,
+            segments: 8,
+            // Resolved on the refined truth grid (shock thickness ~ nu/u
+            // ~ 0.04 vs truth dx ~ 0.033) while leaving the coarse grid
+            // genuinely under-resolved — the SGS coefficient matters.
+            nu: 0.04,
+            ke_target: 0.5, // u_rms ~ 1
+            forcing_tau: 0.5,
+            noise_amp: 0.25,
+            noise_modes: 3,
+            k_max: 8,
+            alpha: 0.4,
+            dt_rl: 0.1,
+            t_end: 1.0,
+            cfl: 0.4,
+            truth_refine: 2,
+            truth_states: 8,
+            truth_spinup: 2.0,
+            truth_interval: 0.5,
+            truth_seed: 2022,
+        }
+    }
+}
+
 /// One scenario family in a heterogeneous environment pool.
 ///
 /// A variant perturbs the base case/solver configuration without changing
@@ -131,11 +206,23 @@ pub struct ResolvedVariant {
     /// indices congruent to `family` mod `n_families` (disjoint
     /// initial-state families per variant).
     pub init_family: Option<(usize, usize)>,
+    /// The raw variant knobs, for backends whose base parameters live
+    /// outside `case`/`solver` (the Burgers backend scales its own
+    /// viscosity/horizon by `variant.nu_scale`/`variant.t_end_scale`).
+    pub variant: EnvVariant,
 }
+
+/// CFD backends selectable via `rl.backend` (the solver-agnostic
+/// environment layer; see `crate::rl::cfd` for the registry).
+pub const BACKENDS: &[&str] = &["les", "burgers"];
 
 /// PPO / training-loop parameters (paper §5.3).
 #[derive(Debug, Clone)]
 pub struct RlConfig {
+    /// CFD backend the environment pool runs (`"les"` = the paper's 3D
+    /// spectral HIT case; `"burgers"` = the 1D stochastic-Burgers
+    /// testbed).  See [`BACKENDS`].
+    pub backend: String,
     /// Discount factor (paper: 0.995).
     pub gamma: f64,
     /// Parallel environments per training iteration.
@@ -167,6 +254,7 @@ pub struct RlConfig {
 impl Default for RlConfig {
     fn default() -> Self {
         RlConfig {
+            backend: "les".to_string(),
             gamma: 0.995,
             n_envs: 16,
             iterations: 100,
@@ -225,6 +313,7 @@ impl Default for HpcConfig {
 pub struct RunConfig {
     pub case: CaseConfig,
     pub solver: SolverConfig,
+    pub burgers: BurgersConfig,
     pub rl: RlConfig,
     pub hpc: HpcConfig,
     /// Directory with AOT artifacts.
@@ -238,6 +327,7 @@ impl Default for RunConfig {
         RunConfig {
             case: presets::dof24(),
             solver: SolverConfig::default(),
+            burgers: BurgersConfig::default(),
             rl: RlConfig::default(),
             hpc: HpcConfig::default(),
             artifacts_dir: "artifacts".to_string(),
@@ -277,6 +367,32 @@ impl RunConfig {
         cfg.solver.smagorinsky_cs =
             t.float_or("solver.smagorinsky_cs", cfg.solver.smagorinsky_cs)?;
 
+        cfg.burgers.points = t.int_or("burgers.points", cfg.burgers.points as i64)? as usize;
+        cfg.burgers.segments =
+            t.int_or("burgers.segments", cfg.burgers.segments as i64)? as usize;
+        cfg.burgers.nu = t.float_or("burgers.nu", cfg.burgers.nu)?;
+        cfg.burgers.ke_target = t.float_or("burgers.ke_target", cfg.burgers.ke_target)?;
+        cfg.burgers.forcing_tau = t.float_or("burgers.forcing_tau", cfg.burgers.forcing_tau)?;
+        cfg.burgers.noise_amp = t.float_or("burgers.noise_amp", cfg.burgers.noise_amp)?;
+        cfg.burgers.noise_modes =
+            t.int_or("burgers.noise_modes", cfg.burgers.noise_modes as i64)? as usize;
+        cfg.burgers.k_max = t.int_or("burgers.k_max", cfg.burgers.k_max as i64)? as usize;
+        cfg.burgers.alpha = t.float_or("burgers.alpha", cfg.burgers.alpha)?;
+        cfg.burgers.dt_rl = t.float_or("burgers.dt_rl", cfg.burgers.dt_rl)?;
+        cfg.burgers.t_end = t.float_or("burgers.t_end", cfg.burgers.t_end)?;
+        cfg.burgers.cfl = t.float_or("burgers.cfl", cfg.burgers.cfl)?;
+        cfg.burgers.truth_refine =
+            t.int_or("burgers.truth_refine", cfg.burgers.truth_refine as i64)? as usize;
+        cfg.burgers.truth_states =
+            t.int_or("burgers.truth_states", cfg.burgers.truth_states as i64)? as usize;
+        cfg.burgers.truth_spinup =
+            t.float_or("burgers.truth_spinup", cfg.burgers.truth_spinup)?;
+        cfg.burgers.truth_interval =
+            t.float_or("burgers.truth_interval", cfg.burgers.truth_interval)?;
+        cfg.burgers.truth_seed =
+            t.int_or("burgers.truth_seed", cfg.burgers.truth_seed as i64)? as u64;
+
+        cfg.rl.backend = t.str_or("rl.backend", &cfg.rl.backend)?;
         cfg.rl.gamma = t.float_or("rl.gamma", cfg.rl.gamma)?;
         cfg.rl.n_envs = t.int_or("rl.n_envs", cfg.rl.n_envs as i64)? as usize;
         cfg.rl.iterations = t.int_or("rl.iterations", cfg.rl.iterations as i64)? as usize;
@@ -369,6 +485,41 @@ impl RunConfig {
     /// inside the solver or the runtime.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
+            BACKENDS.contains(&self.rl.backend.as_str()),
+            "unknown rl.backend {:?} (expected one of {BACKENDS:?})",
+            self.rl.backend
+        );
+        if self.rl.backend == "burgers" {
+            let b = &self.burgers;
+            anyhow::ensure!(b.points >= 8, "burgers.points must be >= 8");
+            anyhow::ensure!(
+                b.segments >= 1 && b.points % b.segments == 0,
+                "burgers.segments {} must divide burgers.points {}",
+                b.segments,
+                b.points
+            );
+            anyhow::ensure!(
+                b.k_max >= 1 && b.k_max <= b.points / 2,
+                "burgers.k_max {} beyond Nyquist {}",
+                b.k_max,
+                b.points / 2
+            );
+            anyhow::ensure!(
+                b.noise_modes >= 1 && b.noise_modes <= b.points / 2,
+                "burgers.noise_modes must lie in [1, Nyquist]"
+            );
+            anyhow::ensure!(b.nu > 0.0 && b.cfl > 0.0 && b.alpha > 0.0);
+            anyhow::ensure!(b.ke_target > 0.0 && b.forcing_tau > 0.0);
+            anyhow::ensure!(b.dt_rl > 0.0 && b.t_end > 0.0);
+            anyhow::ensure!(
+                (b.t_end / b.dt_rl).round() as usize >= 1,
+                "burgers.t_end/dt_rl rounds to 0 steps"
+            );
+            anyhow::ensure!(b.truth_refine >= 1, "burgers.truth_refine must be >= 1");
+            anyhow::ensure!(b.truth_states >= 1, "burgers.truth_states must be >= 1");
+            anyhow::ensure!(b.truth_interval > 0.0);
+        }
+        anyhow::ensure!(
             self.case.n == 5 || self.case.n == 7,
             "policy artifacts exist for N in {{5, 7}}, got N={}",
             self.case.n
@@ -395,6 +546,13 @@ impl RunConfig {
             self.rl.variants.len(),
             self.rl.n_envs
         );
+        // Variant overrides are checked against the ACTIVE backend's
+        // spectral resolution and episode horizon.
+        let (nyquist, base_t_end, base_dt_rl) = if self.rl.backend == "burgers" {
+            (self.burgers.points / 2, self.burgers.t_end, self.burgers.dt_rl)
+        } else {
+            (self.case.points_per_dir() / 2, self.solver.t_end, self.solver.dt_rl)
+        };
         for (i, v) in self.rl.variants.iter().enumerate() {
             anyhow::ensure!(
                 v.nu_scale > 0.0 && v.t_end_scale > 0.0,
@@ -403,17 +561,16 @@ impl RunConfig {
             );
             if let Some(k) = v.k_max {
                 anyhow::ensure!(
-                    k >= 1 && k <= self.case.points_per_dir() / 2,
-                    "variant {i} ({}): k_max {k} beyond Nyquist {}",
-                    v.name,
-                    self.case.points_per_dir() / 2
+                    k >= 1 && k <= nyquist,
+                    "variant {i} ({}): k_max {k} beyond Nyquist {nyquist}",
+                    v.name
                 );
             }
             if let Some(a) = v.alpha {
                 anyhow::ensure!(a > 0.0, "variant {i} ({}): alpha must be positive", v.name);
             }
             anyhow::ensure!(
-                (self.solver.t_end * v.t_end_scale / self.solver.dt_rl).round() as usize >= 1,
+                (base_t_end * v.t_end_scale / base_dt_rl).round() as usize >= 1,
                 "variant {i} ({}): horizon rounds to 0 steps",
                 v.name
             );
@@ -430,6 +587,16 @@ impl RunConfig {
     /// [`RunConfig::variant_for`]).
     pub fn steps_per_episode(&self) -> usize {
         (self.solver.t_end / self.solver.dt_rl).round() as usize
+    }
+
+    /// Actions per episode of the **active backend's** base scenario
+    /// (the Burgers horizon lives in its own config section).
+    pub fn backend_steps_per_episode(&self) -> usize {
+        if self.rl.backend == "burgers" {
+            (self.burgers.t_end / self.burgers.dt_rl).round() as usize
+        } else {
+            self.steps_per_episode()
+        }
     }
 
     /// Number of scenario families in the pool (1 = homogeneous).
@@ -469,6 +636,20 @@ impl RunConfig {
             case,
             solver,
             init_family: self.rl.split_init_pool.then_some((index, n_var)),
+            variant: v.clone(),
+        }
+    }
+
+    /// The unmodified base scenario (no variant overrides, no init-family
+    /// restriction) — what evaluation environments are built from.
+    pub fn base_resolved(&self) -> ResolvedVariant {
+        ResolvedVariant {
+            index: 0,
+            name: "base".to_string(),
+            case: self.case.clone(),
+            solver: self.solver.clone(),
+            init_family: None,
+            variant: EnvVariant::default(),
         }
     }
 }
@@ -567,6 +748,59 @@ mod tests {
         assert_eq!(v.index, 0);
         assert_eq!(v.case, base.case);
         assert_eq!(v.init_family, None);
+    }
+
+    #[test]
+    fn backend_field_parses_and_validates() {
+        assert_eq!(RunConfig::default().rl.backend, "les");
+        let doc = Toml::parse("[rl]\nbackend = \"burgers\"\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.rl.backend, "burgers");
+        let doc = Toml::parse("[rl]\nbackend = \"flexi\"\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn burgers_section_overrides_and_validates() {
+        let doc = Toml::parse(
+            "[rl]\nbackend = \"burgers\"\n[burgers]\npoints = 64\nsegments = 4\nk_max = 6\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.burgers.points, 64);
+        assert_eq!(c.burgers.segments, 4);
+        assert_eq!(c.burgers.k_max, 6);
+        // Segments must divide points.
+        let doc = Toml::parse(
+            "[rl]\nbackend = \"burgers\"\n[burgers]\npoints = 64\nsegments = 5\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // k_max beyond the Burgers Nyquist.
+        let doc = Toml::parse(
+            "[rl]\nbackend = \"burgers\"\n[burgers]\npoints = 16\nk_max = 9\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // The same overrides are inert under the LES backend.
+        let doc = Toml::parse("[burgers]\npoints = 16\nk_max = 9\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn variant_checks_follow_the_backend() {
+        // k_max = 20 is beyond the 12^3 LES Nyquist but fine for the
+        // default 96-point Burgers spectrum.
+        let toml = "[rl]\nbackend = \"BACKEND\"\nvariant_names = [\"a\"]\nvariant_k_max = [20]\n\
+                    [case]\nn = 5\nelems_per_dir = 2\nk_max = 3\n";
+        let les = Toml::parse(&toml.replace("BACKEND", "les")).unwrap();
+        assert!(RunConfig::from_toml(&les).is_err());
+        let burgers = Toml::parse(&toml.replace("BACKEND", "burgers")).unwrap();
+        let c = RunConfig::from_toml(&burgers).unwrap();
+        assert_eq!(c.rl.variants[0].k_max, Some(20));
+        // The raw knobs ride along on the resolved variant.
+        assert_eq!(c.variant_for(0).variant.k_max, Some(20));
+        assert_eq!(c.base_resolved().variant, EnvVariant::default());
     }
 
     #[test]

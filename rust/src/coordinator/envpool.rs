@@ -2,22 +2,32 @@
 //! Relexi dataflow (paper Fig. 2 / Algorithm 1), split into two halves:
 //!
 //! * **Worker pool** (the "FLEXI instances", Fig. 2 left): one OS thread
-//!   and one [`LesEnv`] per environment, built **once** in
-//!   [`EnvPool::new`] and reused for every training iteration.  Workers
-//!   block on a per-iteration begin message carrying the iteration's key
+//!   and one environment per slot, built **once** in [`EnvPool::new`]
+//!   and reused for every training iteration.  The pool is
+//!   solver-agnostic: workers drive `dyn` [`CfdEnv`] instances cut from
+//!   a [`CfdBackend`] (the paper's "easy integration of various HPC
+//!   solvers" — `rl.backend` selects the 3D spectral LES or the 1D
+//!   stochastic-Burgers testbed; see [`crate::rl::cfd`]).  Workers block
+//!   on a per-iteration begin message carrying the iteration's key
 //!   namespace ([`Protocol`]) and RNG stream, run one episode — write
-//!   state, poll action, advance `dt_RL`, write the spectrum error, raise
+//!   state, poll action, advance `dt_RL`, write the shaped reward, raise
 //!   the done-flag at termination (§3.1) — and park again.  Steady-state
-//!   iterations therefore spawn zero threads and rebuild zero
-//!   `LesEnv`/`Grid` instances (asserted by [`PoolCounters`]).
+//!   iterations therefore spawn zero threads and rebuild zero env/shared
+//!   backend instances (asserted by [`PoolCounters`]).
 //!
 //! * **Rollout collector** (the trainer side of Algorithm 1, lines 4-13):
-//!   consumes env states **in arrival order** through the store's
-//!   multi-key subscription ([`Client::poll_any_take`]) instead of one
-//!   blocking poll per env, batches the policy over whichever states have
-//!   arrived once `min_batch` are staged, and keeps per-env done/error
-//!   bookkeeping so an early-terminating env can never stall the batch —
-//!   the synchronization overhead paper §6.2 measures.  With
+//!   consumes env events **in arrival order** through one persistent
+//!   store [`Subscription`] per sampling phase: done/fail channels
+//!   register once per iteration, and each event applies only the
+//!   single-key deltas it implies (retire the received state key, add
+//!   the next one, add/retire a reward key around each action) — so a
+//!   collection wave over `E` envs costs O(E) registry ops where the
+//!   per-event `poll_any` rebuild it replaced cost O(E²)
+//!   (counter-asserted via `StoreStats::sub_ops`).  The collector
+//!   batches the policy over whichever states have arrived once
+//!   `min_batch` are staged, and keeps per-env done/reward bookkeeping
+//!   so an early-terminating env can never stall the batch — the
+//!   synchronization overhead paper §6.2 measures.  With
 //!   `min_batch = n_envs` (the default) the collector waits for the full
 //!   wave and reproduces the paper's synchronous PPO bit-for-bit; the
 //!   retained [`EnvPool::collect_lockstep_with`] reference implements the
@@ -37,14 +47,13 @@
 //! Heterogeneous pools: each env runs a scenario variant
 //! ([`crate::config::EnvVariant`], round-robin), so one pool can sample
 //! across Reynolds-number, reward-shaping, horizon and initial-state
-//! families while sharing one `Grid`, one truth package and one policy.
+//! families while sharing one backend context and one policy.
 
 use crate::config::RunConfig;
 use crate::orchestrator::{Client, EnvKeys, Key, Orchestrator, Protocol, TensorPool, Value};
-use crate::rl::{gaussian, reward_from_error, Episode, LesEnv, StepRecord};
+use crate::rl::{backend_from_config, gaussian, CfdBackend, CfdEnv, Episode, StepRecord};
 use crate::runtime::{PolicyOut, PolicyRuntime};
 use crate::solver::dns::Truth;
-use crate::solver::Grid;
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -73,11 +82,14 @@ pub struct Rollouts {
 /// allocation discipline: after the warm-up, no call ever advances them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolCounters {
-    /// OS threads spawned (== n_envs, only in `new`).
+    /// OS threads spawned (== n_envs, only in construction).
     pub threads_spawned: usize,
-    /// `LesEnv` instances constructed (== n_envs, only in `new`).
+    /// Environment instances constructed (== n_envs, only in
+    /// construction).
     pub envs_built: usize,
-    /// Spectral grids constructed (== 1, only in `new`).
+    /// Shared backend contexts constructed (== 1, only in construction:
+    /// the LES backend's spectral grid + truth, the Burgers backend's
+    /// resolved-truth package).
     pub grids_built: usize,
     /// Sampling phases served by the persistent workers.
     pub iterations: usize,
@@ -96,7 +108,9 @@ struct Begin {
 /// Collects rollouts from `n_envs` persistent parallel environments.
 pub struct EnvPool {
     cfg: RunConfig,
-    grid: Arc<Grid>,
+    /// The backend the pool's environments were cut from (shared context:
+    /// grid/truth), kept for building matching evaluation envs.
+    backend: Arc<dyn CfdBackend>,
     /// Begin-message channels, one per worker (dropping them shuts the
     /// pool down).
     txs: Vec<mpsc::Sender<Begin>>,
@@ -108,19 +122,20 @@ pub struct EnvPool {
     current_proto: Option<Protocol>,
     /// Per-env resolved bookkeeping (round-robin variants).
     variant_of: Vec<usize>,
-    alpha_of: Vec<f64>,
     n_actions_of: Vec<usize>,
-    /// Observation features per element ((N+1)^3 * 3).
+    /// Observation features per agent (`obs_len / n_agents`).
     feat: usize,
-    /// Elements per env.
-    n_elems: usize,
-    /// Reused forward-batch scratch (n_envs * n_elems * feat floats,
-    /// allocated once here, never per iteration).
+    /// Agents per env (actions per step; the LES backend: DG elements).
+    n_agents: usize,
+    /// Observation floats per env.
+    obs_len: usize,
+    /// Reused forward-batch scratch (n_envs * obs_len floats, allocated
+    /// once here, never per iteration).
     batch_obs: Vec<f32>,
     /// Recycled action buffers (published zero-copy, recorded in the
     /// episode, freed when the rollouts are dropped).
     act_pool: TensorPool,
-    /// Action tensor shape `[n_elems]`, shared across all publishes.
+    /// Action tensor shape `[n_agents]`, shared across all publishes.
     act_shape: Arc<[usize]>,
     /// Shared exchange-allocation counter (this pool + every worker's
     /// observation pool).
@@ -128,24 +143,46 @@ pub struct EnvPool {
 }
 
 impl EnvPool {
-    /// Build the pool for a run configuration and its ground truth:
-    /// construct the shared spectral grid, every `LesEnv` (one scenario
-    /// variant each) and every worker thread exactly once.  All later
-    /// iterations reuse them.
+    /// Build the pool for a run configuration: resolve `cfg.rl.backend`
+    /// against the registry (the LES backend consumes `truth`; others
+    /// bring their own) and construct every env and worker thread
+    /// exactly once.  All later iterations reuse them.
     pub fn new(cfg: RunConfig, truth: Arc<Truth>, orch: &Orchestrator) -> Result<EnvPool> {
+        EnvPool::from_config(cfg, Some(truth), orch)
+    }
+
+    /// [`EnvPool::new`] with the DNS truth optional — backends other
+    /// than `"les"` generate their own ground truth from the config.
+    pub fn from_config(
+        cfg: RunConfig,
+        truth: Option<Arc<Truth>>,
+        orch: &Orchestrator,
+    ) -> Result<EnvPool> {
         cfg.validate()?;
+        let backend = backend_from_config(&cfg, truth)?;
+        EnvPool::with_backend_unchecked(cfg, backend, orch)
+    }
+
+    /// Build the pool over an explicit backend instance (the registry
+    /// bypass for tests and external backends): construct every env (one
+    /// scenario variant each) and every worker thread exactly once.
+    pub fn with_backend(
+        cfg: RunConfig,
+        backend: Arc<dyn CfdBackend>,
+        orch: &Orchestrator,
+    ) -> Result<EnvPool> {
+        cfg.validate()?;
+        EnvPool::with_backend_unchecked(cfg, backend, orch)
+    }
+
+    /// [`EnvPool::with_backend`] for callers that already validated the
+    /// configuration (both public constructors funnel here).
+    fn with_backend_unchecked(
+        cfg: RunConfig,
+        backend: Arc<dyn CfdBackend>,
+        orch: &Orchestrator,
+    ) -> Result<EnvPool> {
         let n_envs = cfg.rl.n_envs;
-        if cfg.rl.split_init_pool {
-            anyhow::ensure!(
-                truth.states.len() >= cfg.n_variants(),
-                "split_init_pool needs >= {} truth states (one per variant), got {}",
-                cfg.n_variants(),
-                truth.states.len()
-            );
-        }
-        // One shared spectral grid for the whole pool: `fft::Plan` is
-        // `Send + Sync`, so every worker reuses the same twiddle tables.
-        let grid = Arc::new(Grid::new(cfg.case.points_per_dir()));
         let mut counters = PoolCounters {
             threads_spawned: 0,
             envs_built: 0,
@@ -158,19 +195,30 @@ impl EnvPool {
         let mut txs = Vec::with_capacity(n_envs);
         let mut handles = Vec::with_capacity(n_envs);
         let mut variant_of = Vec::with_capacity(n_envs);
-        let mut alpha_of = Vec::with_capacity(n_envs);
         let mut n_actions_of = Vec::with_capacity(n_envs);
+        let (mut obs_len, mut n_agents) = (0usize, 0usize);
         for i in 0..n_envs {
             let rv = cfg.variant_for(i);
-            let mut env = LesEnv::with_grid(&rv.case, &rv.solver, truth.clone(), grid.clone())
+            let env = backend
+                .make_env(&rv)
                 .with_context(|| format!("env {i} (variant {})", rv.name))?;
-            if let Some((family, m)) = rv.init_family {
-                env.set_init_family(family, m)
-                    .with_context(|| format!("env {i} (variant {})", rv.name))?;
+            if i == 0 {
+                obs_len = env.obs_len();
+                n_agents = env.n_agents();
             }
+            // Variants never change the observation/action shape: one
+            // policy batch serves the whole pool.
+            anyhow::ensure!(
+                env.obs_len() == obs_len && env.n_agents() == n_agents,
+                "env {i} (variant {}) shape mismatch: obs {}x{} vs pool {}x{}",
+                rv.name,
+                env.n_agents(),
+                env.obs_len(),
+                n_agents,
+                obs_len
+            );
             counters.envs_built += 1;
             variant_of.push(rv.index);
-            alpha_of.push(rv.case.alpha);
             n_actions_of.push(env.n_actions());
 
             let (tx, rx) = mpsc::channel::<Begin>();
@@ -183,41 +231,57 @@ impl EnvPool {
             txs.push(tx);
             handles.push(handle);
         }
+        anyhow::ensure!(
+            n_agents >= 1 && obs_len % n_agents == 0,
+            "backend {}: obs_len {obs_len} must split evenly over {n_agents} agents",
+            backend.name()
+        );
 
-        let n_elems = cfg.case.total_elems();
-        let feat = cfg.case.elem_points().pow(3) * 3;
         // One iteration publishes one action per env per step, all held
         // by the episode records until the rollouts drop — that sum is
         // the action pool's steady-state working set (and its cap).
         let act_cap = n_actions_of.iter().sum::<usize>() + 2;
         Ok(EnvPool {
-            batch_obs: vec![0f32; n_envs * n_elems * feat],
+            batch_obs: vec![0f32; n_envs * obs_len],
             act_pool: TensorPool::new(exchange_allocs.clone(), act_cap),
-            act_shape: Arc::from(vec![n_elems]),
+            act_shape: Arc::from(vec![n_agents]),
             exchange_allocs,
             cfg,
-            grid,
+            backend,
             txs,
             handles,
             counters,
             abort_client: orch.client(),
             current_proto: None,
             variant_of,
-            alpha_of,
             n_actions_of,
-            feat,
-            n_elems,
+            feat: obs_len / n_agents,
+            n_agents,
+            obs_len,
         })
     }
 
-    /// Elements per env (actions per step per env).
-    pub fn n_elems(&self) -> usize {
-        self.n_elems
+    /// Agents per env (actions per step per env).
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
     }
 
-    /// The spectral grid shared by every env in the pool.
-    pub fn grid(&self) -> Arc<Grid> {
-        self.grid.clone()
+    /// Observation features per agent (`obs_len / n_agents`) — what a
+    /// policy consuming this pool must be shaped for.
+    pub fn features(&self) -> usize {
+        self.feat
+    }
+
+    /// The backend this pool's environments were cut from.
+    pub fn backend(&self) -> Arc<dyn CfdBackend> {
+        self.backend.clone()
+    }
+
+    /// A fresh evaluation environment on the pool's shared backend
+    /// context (base scenario, no variant overrides) — the training loop
+    /// builds one once and reuses it.
+    pub fn make_eval_env(&self) -> Result<Box<dyn CfdEnv>> {
+        self.backend.make_env(&self.cfg.base_resolved())
     }
 
     /// Construction counters (steady-state assertion: only `iterations`
@@ -294,30 +358,45 @@ impl EnvPool {
     {
         let t_start = Instant::now();
         let n_envs = self.cfg.rl.n_envs;
-        let chunk = self.n_elems * self.feat;
+        let chunk = self.obs_len;
         let trainer = orch.client();
         self.begin_iteration(proto, rng)?;
         let keys = proto.pool_keys(&self.n_actions_of);
 
         let mut episodes = self.fresh_episodes();
         // Per-env: step index of the state we are waiting for (None once
-        // the done-flag arrived), plus staged-but-unacted states and
-        // outstanding error scalars.
+        // the done-flag arrived or the state is parked in `staged`).
         let mut expect_state: Vec<Option<usize>> = vec![Some(0); n_envs];
         let mut staged: Vec<(usize, usize, Arc<[f32]>)> = Vec::with_capacity(n_envs);
-        let mut pending_errs: Vec<(usize, usize)> = Vec::with_capacity(n_envs);
+        let mut pending_rewards = 0usize;
         let mut policy_time = 0.0f64;
         let mut idle_time = 0.0f64;
 
-        // Scratch for the per-event subscription (interned key handles —
-        // no string building or rehashing inside this loop).
-        let mut subs: Vec<&Key> = Vec::new();
-        let mut events: Vec<Event> = Vec::new();
-        let mut fail_subbed = vec![false; n_envs];
+        // One persistent subscription for the whole sampling phase.
+        // Fixed tags per env for its state/done/fail channels; reward
+        // tags come from a free list (an env can have several rewards
+        // outstanding).  `tag_events[tag]` is what the tag currently
+        // means; every event applies only its own add/remove deltas, so
+        // a wave over E envs costs O(E) registry ops (the `sub_ops`
+        // counter the integration test asserts on).
+        let mut sub = trainer.subscription();
+        let mut tag_events: Vec<Event> = Vec::with_capacity(4 * n_envs);
+        for env in 0..n_envs {
+            tag_events.push(Event::State(env, 0));
+            tag_events.push(Event::Done(env));
+            tag_events.push(Event::Fail(env));
+        }
+        for env in 0..n_envs {
+            let ek = &keys.envs[env];
+            sub.add(3 * env, &ek.state[0]);
+            sub.add(3 * env + 1, &ek.done);
+            sub.add(3 * env + 2, &ek.fail);
+        }
+        let mut free_reward_tags: Vec<usize> = Vec::new();
 
         loop {
             let expecting = expect_state.iter().filter(|e| e.is_some()).count();
-            if expecting == 0 && staged.is_empty() && pending_errs.is_empty() {
+            if expecting == 0 && staged.is_empty() && pending_rewards == 0 {
                 break;
             }
 
@@ -330,25 +409,26 @@ impl EnvPool {
                     self.batch_obs[k * chunk..(k + 1) * chunk].copy_from_slice(obs);
                 }
                 let tp = Instant::now();
-                let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_elems)?;
+                let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_agents)?;
                 policy_time += tp.elapsed().as_secs_f64();
                 anyhow::ensure!(
-                    out.mean.len() == n_act * self.n_elems
-                        && out.value.len() == n_act * self.n_elems,
+                    out.mean.len() == n_act * self.n_agents
+                        && out.value.len() == n_act * self.n_agents,
                     "policy returned {} means for {} samples",
                     out.mean.len(),
-                    n_act * self.n_elems
+                    n_act * self.n_agents
                 );
 
                 // Sample + write actions in env order (ties the RNG stream
                 // to env indices, not arrival order: full-batch collection
                 // is bitwise-identical to the lock-step reference).
                 for (k, (env, t, obs)) in staged.drain(..).enumerate() {
-                    let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
-                    let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
+                    let ek = &keys.envs[env];
+                    let mean = &out.mean[k * self.n_agents..(k + 1) * self.n_agents];
+                    let value = &out.value[k * self.n_agents..(k + 1) * self.n_agents];
                     publish_action(
                         &trainer,
-                        &keys.envs[env].action[t],
+                        &ek.action[t],
                         &self.act_shape,
                         &mut self.act_pool,
                         &mut episodes[env],
@@ -359,52 +439,32 @@ impl EnvPool {
                         rng,
                         deterministic,
                     );
-                    pending_errs.push((env, t));
+                    // Subscribe the action's reward and the next state.
+                    let rtag = free_reward_tags.pop().unwrap_or_else(|| {
+                        tag_events.push(Event::Reward(0, 0));
+                        tag_events.len() - 1
+                    });
+                    tag_events[rtag] = Event::Reward(env, t);
+                    sub.add(rtag, &ek.rew[t]);
+                    pending_rewards += 1;
                     expect_state[env] = Some(t + 1);
+                    tag_events[3 * env] = Event::State(env, t + 1);
+                    sub.add(3 * env, &ek.state[t + 1]);
                 }
                 continue;
             }
 
-            // Wait for the next event: any outstanding state, error,
-            // done-flag or failure report, whichever arrives first.  Each
-            // involved env's fail key is subscribed exactly once.
-            subs.clear();
-            events.clear();
-            fail_subbed.fill(false);
-            for (env, e) in expect_state.iter().enumerate() {
-                if let Some(t) = e {
-                    let ek = &keys.envs[env];
-                    subs.push(&ek.state[*t]);
-                    events.push(Event::State(env, *t));
-                    subs.push(&ek.done);
-                    events.push(Event::Done(env));
-                    subs.push(&ek.fail);
-                    events.push(Event::Fail(env));
-                    fail_subbed[env] = true;
-                }
-            }
-            for &(env, t) in &pending_errs {
-                let ek = &keys.envs[env];
-                subs.push(&ek.err[t]);
-                events.push(Event::Err(env, t));
-                if !fail_subbed[env] {
-                    subs.push(&ek.fail);
-                    events.push(Event::Fail(env));
-                    fail_subbed[env] = true;
-                }
-            }
+            // Wait for whichever registered event arrives first.
             let ti = Instant::now();
-            let (hit, val) = trainer
-                .poll_any_take(&subs, POLL_TIMEOUT)
-                .with_context(|| {
-                    format!(
-                        "collector timed out: {} states expected, {} errors pending",
-                        expect_state.iter().filter(|e| e.is_some()).count(),
-                        pending_errs.len()
-                    )
-                })?;
+            let (tag, val) = sub.wait_take(POLL_TIMEOUT).with_context(|| {
+                format!(
+                    "collector timed out: {} states expected, {} rewards pending",
+                    expect_state.iter().filter(|e| e.is_some()).count(),
+                    pending_rewards
+                )
+            })?;
             idle_time += ti.elapsed().as_secs_f64();
-            match events[hit] {
+            match tag_events[tag] {
                 Event::State(env, t) => {
                     let data = val
                         .tensor_data()
@@ -416,16 +476,23 @@ impl EnvPool {
                     );
                     staged.push((env, t, data));
                     expect_state[env] = None; // parked in `staged` until acted on
+                    sub.remove(3 * env);
                 }
                 Event::Done(env) => {
                     expect_state[env] = None;
+                    // Neither the post-terminal state nor another done
+                    // can arrive: retire both channels (fail stays).
+                    sub.remove(3 * env);
+                    sub.remove(3 * env + 1);
                 }
-                Event::Err(env, t) => {
-                    let err = val
+                Event::Reward(env, t) => {
+                    let r = val
                         .as_scalar()
-                        .with_context(|| format!("env {env} error at step {t} not a scalar"))?;
-                    episodes[env].steps[t].reward = reward_from_error(err, self.alpha_of[env]);
-                    pending_errs.retain(|&(e, s)| (e, s) != (env, t));
+                        .with_context(|| format!("env {env} reward at step {t} not a scalar"))?;
+                    episodes[env].steps[t].reward = r;
+                    pending_rewards -= 1;
+                    sub.remove(tag);
+                    free_reward_tags.push(tag);
                 }
                 Event::Fail(env) => {
                     bail!("env worker {env} failed: {}", fail_message(&val));
@@ -478,7 +545,7 @@ impl EnvPool {
     {
         let t_start = Instant::now();
         let n_envs = self.cfg.rl.n_envs;
-        let chunk = self.n_elems * self.feat;
+        let chunk = self.obs_len;
         let trainer = orch.client();
         self.begin_iteration(proto, rng)?;
         let keys = proto.pool_keys(&self.n_actions_of);
@@ -530,14 +597,14 @@ impl EnvPool {
             // One batched policy evaluation for the wave.
             let n_act = acted.len();
             let tp = Instant::now();
-            let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_elems)?;
+            let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_agents)?;
             policy_time += tp.elapsed().as_secs_f64();
 
             // Sample actions, write them back, record the steps (the one
             // shared publish site with the event-driven collector).
             for (k, &env) in acted.iter().enumerate() {
-                let mean = &out.mean[k * self.n_elems..(k + 1) * self.n_elems];
-                let value = &out.value[k * self.n_elems..(k + 1) * self.n_elems];
+                let mean = &out.mean[k * self.n_agents..(k + 1) * self.n_agents];
+                let value = &out.value[k * self.n_agents..(k + 1) * self.n_agents];
                 publish_action(
                     &trainer,
                     &keys.envs[env].action[t],
@@ -553,19 +620,20 @@ impl EnvPool {
                 );
             }
 
-            // Collect the spectrum errors -> rewards (Eqs. 4-5).
+            // Collect the shaped rewards (computed env-side, Eqs. 4-5
+            // for the in-tree backends).
             for &env in &acted {
                 let ek = &keys.envs[env];
                 let ti = Instant::now();
                 let (hit, val) = trainer
-                    .poll_any_take(&[&ek.err[t], &ek.fail], POLL_TIMEOUT)
-                    .with_context(|| format!("trainer: no error from env {env} step {t}"))?;
+                    .poll_any_take(&[&ek.rew[t], &ek.fail], POLL_TIMEOUT)
+                    .with_context(|| format!("trainer: no reward from env {env} step {t}"))?;
                 idle_time += ti.elapsed().as_secs_f64();
                 if hit != 0 {
                     bail!("env worker {env} failed: {}", fail_message(&val));
                 }
-                let err = val.as_scalar().context("error must be a scalar")?;
-                episodes[env].steps[t].reward = reward_from_error(err, self.alpha_of[env]);
+                let r = val.as_scalar().context("reward must be a scalar")?;
+                episodes[env].steps[t].reward = r;
             }
         }
 
@@ -599,7 +667,7 @@ impl EnvPool {
     /// when the abort was raised subscribes to `[action, abort]` later
     /// and must still find it.  The pool stays usable afterwards, but a
     /// retry must use a **fresh run tag** — the failed tag's namespace
-    /// (abort flag, stale state/err keys) is burned.
+    /// (abort flag, stale state/reward keys) is burned.
     fn abort_iteration(&self, proto: &Protocol) {
         self.abort_client.put_flag(&proto.abort_key(), true);
     }
@@ -658,15 +726,15 @@ impl Drop for EnvPool {
     }
 }
 
-/// One collector event: a key subscription resolved to its meaning.
+/// One collector event: a subscription tag resolved to its meaning.
 #[derive(Clone, Copy)]
 enum Event {
     /// State tensor from env at step.
     State(usize, usize),
     /// Done-flag: no further states from this env.
     Done(usize),
-    /// Spectrum-error scalar for (env, step).
-    Err(usize, usize),
+    /// Shaped-reward scalar for (env, step).
+    Reward(usize, usize),
     /// Worker failure report.
     Fail(usize),
 }
@@ -706,7 +774,7 @@ fn publish_action(
         act: act.clone(),
         logp,
         value: value.to_vec(),
-        reward: 0.0, // filled by the error event
+        reward: 0.0, // filled by the reward event
     });
     act_pool.put_back(act);
 }
@@ -730,7 +798,7 @@ fn fail_message(val: &Value) -> String {
 /// through the fail key, so the collector aborts the iteration instead of
 /// running into its poll timeout.
 fn worker_loop(
-    mut env: LesEnv,
+    mut env: Box<dyn CfdEnv>,
     client: Client,
     idx: usize,
     rx: mpsc::Receiver<Begin>,
@@ -739,19 +807,19 @@ fn worker_loop(
     // Working set: one obs buffer per step (held by the trainer until
     // the iteration's rollouts drop) plus the initial state.
     let mut obs_pool = TensorPool::new(allocs, env.n_actions() + 2);
-    let mut cs_buf: Vec<f64> = Vec::with_capacity(env.n_elems());
+    let mut act_buf: Vec<f64> = Vec::with_capacity(env.n_agents());
     let obs_shape: Arc<[usize]> = Arc::from(vec![env.obs_len()]);
     while let Ok(Begin { proto, mut rng }) = rx.recv() {
         let keys = proto.env_keys(idx, env.n_actions());
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_episode(
-                &mut env,
+                env.as_mut(),
                 &client,
                 &keys,
                 idx,
                 &mut rng,
                 &mut obs_pool,
-                &mut cs_buf,
+                &mut act_buf,
                 &obs_shape,
             )
         }));
@@ -778,20 +846,22 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 }
 
 /// One episode of the paper's env side (Fig. 2 right): reset from the
-/// truth pool, then state-out / action-in / error-out per RL step, with
-/// the done-flag raised at termination.  All keys are interned handles,
-/// observations go out through recycled `Arc` buffers, and the received
-/// action is only borrowed (refcount bump) — a steady-state step neither
-/// formats strings nor allocates tensor storage.
+/// truth pool, then state-out / action-in / reward-out per RL step, with
+/// the done-flag raised at termination.  The reward is shaped env-side
+/// (each backend owns its reward), so the collector needs no backend
+/// knowledge.  All keys are interned handles, observations go out
+/// through recycled `Arc` buffers, and the received action is only
+/// borrowed (refcount bump) — a steady-state step neither formats
+/// strings nor allocates tensor storage.
 #[allow(clippy::too_many_arguments)]
 fn run_episode(
-    env: &mut LesEnv,
+    env: &mut dyn CfdEnv,
     client: &Client,
     keys: &EnvKeys,
     idx: usize,
     rng: &mut Rng,
     obs_pool: &mut TensorPool,
-    cs_buf: &mut Vec<f64>,
+    act_buf: &mut Vec<f64>,
     obs_shape: &Arc<[usize]>,
 ) -> Result<()> {
     let obs_len = env.obs_len();
@@ -810,10 +880,10 @@ fn run_episode(
         // non-consuming and the action is deleted explicitly.
         client.delete(&keys.action[t]);
         let data = act.as_tensor().context("action must be a tensor")?.1;
-        cs_buf.clear();
-        cs_buf.extend(data.iter().map(|&a| a as f64));
-        let out = env.step(cs_buf);
-        client.put_scalar(&keys.err[t], out.spec_error);
+        act_buf.clear();
+        act_buf.extend(data.iter().map(|&a| a as f64));
+        let out = env.step(act_buf);
+        client.put_scalar(&keys.rew[t], out.reward);
         if out.done {
             client.put_flag(&keys.done, true);
             break;

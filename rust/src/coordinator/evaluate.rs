@@ -4,7 +4,7 @@
 //! distribution of predicted Cs values.
 
 use crate::config::RunConfig;
-use crate::rl::{gaussian, max_return, LesEnv};
+use crate::rl::{gaussian, max_return, CfdEnv, LesEnv};
 use crate::runtime::PolicyRuntime;
 use crate::solver::dns::Truth;
 use crate::util::Rng;
@@ -23,10 +23,11 @@ pub struct EvalResult {
 }
 
 /// Deterministic policy rollout (mean actions) on the test state,
-/// constructing a fresh environment (grid included) per call.  Prefer
-/// [`eval_policy_in`] when a reusable environment is available — the
-/// training loop keeps one alive so steady-state evaluation allocates
-/// nothing grid-sized.
+/// constructing a fresh LES environment (grid included) per call.
+/// Prefer [`eval_policy_in`] when a reusable environment is available —
+/// the training loop keeps one alive (built on the pool's shared
+/// backend context) so steady-state evaluation allocates nothing
+/// grid-sized.
 pub fn eval_policy(
     cfg: &RunConfig,
     truth: &Arc<Truth>,
@@ -39,23 +40,23 @@ pub fn eval_policy(
 }
 
 /// Deterministic policy rollout (mean actions) on the test state, run in
-/// a caller-owned environment.
+/// a caller-owned environment of any backend.
 pub fn eval_policy_in(
-    env: &mut LesEnv,
+    env: &mut dyn CfdEnv,
     cfg: &RunConfig,
     policy: &PolicyRuntime,
     theta: &[f32],
     stochastic_rng: Option<&mut Rng>,
 ) -> Result<EvalResult> {
-    let n_elems = env.n_elems();
+    let n_agents = env.n_agents();
     let mut rng_holder = stochastic_rng;
     let mut reset_rng = Rng::new(0); // unused for the test state
     let mut obs = env.reset(&mut reset_rng, true);
     let mut ret = 0.0;
-    let mut cs_samples = Vec::with_capacity(n_elems * env.n_actions());
+    let mut cs_samples = Vec::with_capacity(n_agents * env.n_actions());
     let gamma = cfg.rl.gamma;
     for t in 0..env.n_actions() {
-        let out = policy.forward(theta, &obs, n_elems)?;
+        let out = policy.forward(theta, &obs, n_agents)?;
         let act: Vec<f32> = match rng_holder.as_deref_mut() {
             Some(rng) => gaussian::sample(&out.mean, out.log_std, rng),
             None => out.mean.clone(),

@@ -1,17 +1,18 @@
 //! The Relexi training loop (Algorithm 1): launch orchestrator, build the
-//! persistent env pool once, repeat {begin iteration -> event-driven
-//! sampling -> PPO update}, evaluating on the held-out state every
-//! `eval_every` iterations.  After iteration 0 the loop spawns no threads
-//! and rebuilds no `LesEnv`/`Grid` instances: workers outlive iterations
-//! and the evaluation environment is constructed once on the pool's
-//! shared grid.
+//! persistent env pool once (over whichever backend `rl.backend`
+//! selects), repeat {begin iteration -> event-driven sampling -> PPO
+//! update}, evaluating on the held-out state every `eval_every`
+//! iterations.  After iteration 0 the loop spawns no threads and
+//! rebuilds no env/backend instances: workers outlive iterations and the
+//! evaluation environment is constructed once on the pool's shared
+//! backend context.
 
 use super::envpool::EnvPool;
 use super::evaluate::eval_policy_in;
 use super::metrics::{IterationMetrics, MetricsLog};
 use crate::config::RunConfig;
 use crate::orchestrator::{Orchestrator, Protocol, WakeMode};
-use crate::rl::{flatten, max_return, LesEnv};
+use crate::rl::{flatten, max_return, CfdEnv};
 use crate::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
 use crate::solver::dns::Truth;
 use crate::util::binio::write_f32_vec;
@@ -24,20 +25,37 @@ use std::time::Instant;
 /// The assembled training system.
 pub struct TrainingLoop {
     pub cfg: RunConfig,
-    pub truth: Arc<Truth>,
+    /// The DNS truth package the LES backend was built on (`None` for
+    /// backends that generate their own ground truth, e.g. Burgers).
+    pub truth: Option<Arc<Truth>>,
     pub policy: PolicyRuntime,
     pub trainer: TrainerRuntime,
     pub orch: Orchestrator,
     pool: EnvPool,
-    /// Held-out-state evaluation env, built once on the pool's grid.
-    eval_env: LesEnv,
+    /// Held-out-state evaluation env, built once on the pool's shared
+    /// backend context.
+    eval_env: Box<dyn CfdEnv>,
     rng: Rng,
 }
 
 impl TrainingLoop {
     /// Wire up runtime, artifacts, orchestrator and the persistent env
-    /// pool (workers and environments are constructed here, once).
+    /// pool (workers and environments are constructed here, once) for a
+    /// run that has a DNS truth package (the LES backend).
     pub fn new(cfg: RunConfig, truth: Arc<Truth>) -> Result<TrainingLoop> {
+        TrainingLoop::from_config(cfg, Some(truth))
+    }
+
+    /// [`TrainingLoop::new`] with the DNS truth optional: backends other
+    /// than `"les"` generate their own ground truth from the config, so
+    /// constructing a `rl.backend = "burgers"` loop never runs the 3D
+    /// DNS.  The compiled policy artifacts must still match the
+    /// backend's observation shape — checked here, at construction, so a
+    /// mismatch (today's artifacts are LES-shaped) fails fast instead of
+    /// on the first forward; shape-agnostic surfaces (CI smoke, benches)
+    /// drive non-LES backends through `EnvPool::collect_with` and a stub
+    /// policy instead.
+    pub fn from_config(cfg: RunConfig, truth: Option<Arc<Truth>>) -> Result<TrainingLoop> {
         cfg.validate()?;
         let rt = Runtime::cpu()?;
         let reg = Registry::open(Path::new(&cfg.artifacts_dir))
@@ -52,8 +70,17 @@ impl TrainingLoop {
             WakeMode::PerKey
         };
         let orch = Orchestrator::launch_mode(cfg.hpc.db_shards, wake);
-        let pool = EnvPool::new(cfg.clone(), truth.clone(), &orch)?;
-        let eval_env = LesEnv::with_grid(&cfg.case, &cfg.solver, truth.clone(), pool.grid())?;
+        let pool = EnvPool::from_config(cfg.clone(), truth.clone(), &orch)?;
+        anyhow::ensure!(
+            policy.features() == pool.features(),
+            "policy artifacts provide {} features/agent but the {:?} backend produces {} — \
+             compiled artifacts exist for the LES shapes (N in {{5, 7}}); drive other \
+             backends through the stub-policy surfaces (CI smoke, bench_training)",
+            policy.features(),
+            cfg.rl.backend,
+            pool.features()
+        );
+        let eval_env = pool.make_eval_env()?;
         let rng = Rng::new(cfg.rl.seed);
         Ok(TrainingLoop {
             cfg,
@@ -153,7 +180,7 @@ impl TrainingLoop {
                 && it % self.cfg.rl.eval_every == 0
             {
                 Some(
-                    eval_policy_in(&mut self.eval_env, &self.cfg, &self.policy,
+                    eval_policy_in(self.eval_env.as_mut(), &self.cfg, &self.policy,
                                    self.trainer.theta(), None)?
                     .normalized_return,
                 )

@@ -103,23 +103,30 @@ fn default_truth_path(cfg: &RunConfig) -> String {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let truth_path = args.get_or("truth", &default_truth_path(&cfg));
-    let truth = Arc::new(
-        Truth::load(Path::new(&truth_path))
-            .with_context(|| format!("load {truth_path}; run `relexi gen-truth` first"))?,
-    );
+    // Only the LES backend consumes the 3D DNS truth package; other
+    // backends (burgers) generate their own ground truth from the config.
+    let truth = if cfg.rl.backend == "les" {
+        let truth_path = args.get_or("truth", &default_truth_path(&cfg));
+        Some(Arc::new(
+            Truth::load(Path::new(&truth_path))
+                .with_context(|| format!("load {truth_path}; run `relexi gen-truth` first"))?,
+        ))
+    } else {
+        None
+    };
     std::fs::create_dir_all(&cfg.out_dir)?;
     let csv = Path::new(&cfg.out_dir).join("training.csv");
     let mut log = MetricsLog::with_csv(&csv)?;
     println!(
-        "training: case {} | {} envs x {} actions | {} iterations | artifacts {}",
+        "training: backend {} | case {} | {} envs x {} actions | {} iterations | artifacts {}",
+        cfg.rl.backend,
         cfg.case.name,
         cfg.rl.n_envs,
-        cfg.steps_per_episode(),
+        cfg.backend_steps_per_episode(),
         cfg.rl.iterations,
         cfg.artifacts_dir
     );
-    let mut lp = TrainingLoop::new(cfg, truth)?;
+    let mut lp = TrainingLoop::from_config(cfg, truth)?;
     if let Some(ckpt) = args.get("checkpoint") {
         lp.load_checkpoint(Path::new(ckpt))?;
         println!("resumed from {ckpt}");
@@ -135,6 +142,15 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    // The compiled-policy evaluation path (and both Cs baselines) is
+    // LES-specific; artifacts for other backends' observation shapes do
+    // not exist yet, so fail up front with the actual constraint.
+    anyhow::ensure!(
+        cfg.rl.backend == "les",
+        "`relexi eval` drives the compiled LES policy artifacts; rl.backend {:?} has no \
+         compiled policy — evaluate it through the stub-policy surfaces (CI smoke, benches)",
+        cfg.rl.backend
+    );
     let truth_path = args.get_or("truth", &default_truth_path(&cfg));
     let truth = Arc::new(Truth::load(Path::new(&truth_path))?);
 

@@ -18,7 +18,7 @@ pub mod store;
 pub mod value;
 
 pub use protocol::{EnvKeys, PoolKeys, Protocol};
-pub use store::{Key, KeyLike, ShardedStore, StatsSnapshot, WakeMode};
+pub use store::{Key, KeyLike, ShardedStore, StatsSnapshot, Subscription, WakeMode};
 pub use value::{TensorPool, Value};
 
 use std::sync::Arc;
@@ -149,6 +149,15 @@ impl Client {
         self.store.wait_any_take(keys, timeout)
     }
 
+    /// A persistent multi-key subscription (see
+    /// [`store::Subscription`]): register once, apply add/remove key
+    /// deltas between waits.  The event-driven rollout collector holds
+    /// one per sampling phase, making a collection wave O(envs) registry
+    /// ops instead of the O(envs²) of per-event `poll_any` rebuilds.
+    pub fn subscription(&self) -> Subscription {
+        Subscription::new(self.store.clone())
+    }
+
     /// Delete a key.
     pub fn delete<K: KeyLike + ?Sized>(&self, key: &K) -> bool {
         self.store.delete(key)
@@ -229,10 +238,10 @@ mod tests {
         let c = orch.client();
         let proto = Protocol::new("it0");
         let keys = proto.env_keys(0, 2);
-        c.put_scalar(&keys.err[1], 0.5);
+        c.put_scalar(&keys.rew[1], 0.5);
         c.put_flag(&keys.done, true);
         let (hit, v) = c
-            .poll_any(&[&keys.err[0], &keys.err[1]], Duration::from_secs(1))
+            .poll_any(&[&keys.rew[0], &keys.rew[1]], Duration::from_secs(1))
             .unwrap();
         assert_eq!((hit, v.as_scalar()), (1, Some(0.5)));
         // Interned and string forms address the same key.

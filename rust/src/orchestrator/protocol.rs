@@ -3,7 +3,9 @@
 //!
 //! * env writes   `e{env}:s{step}:state`  (obs tensor)  + `e{env}:done`
 //! * trainer writes `e{env}:s{step}:action`
-//! * env reads the action, advances `dt_RL`, writes the next state
+//! * env reads the action, advances `dt_RL`, writes the shaped reward
+//!   scalar (`:rew`, computed env-side so the collector stays
+//!   backend-agnostic) and the next state
 //!
 //! Step indices in the keys prevent stale reads without needing message
 //! queues, mirroring how Relexi names tensors in the SmartSim database.
@@ -53,9 +55,11 @@ impl Protocol {
         format!("{}:e{}:s{}:action", self.run_tag, env, step)
     }
 
-    /// Spectrum-error scalar accompanying a state (reward input).
-    pub fn error_key(&self, env: usize, step: usize) -> String {
-        format!("{}:e{}:s{}:err", self.run_tag, env, step)
+    /// Shaped reward scalar accompanying a state.  Computed by the env
+    /// worker (each backend owns its reward shaping), so the trainer
+    /// side never needs backend-specific reward knowledge.
+    pub fn reward_key(&self, env: usize, step: usize) -> String {
+        format!("{}:e{}:s{}:rew", self.run_tag, env, step)
     }
 
     /// Terminal flag for env `env` ("will terminate", §3.1).
@@ -91,8 +95,8 @@ impl Protocol {
             action: (0..n_actions)
                 .map(|t| Key::new(self.action_key(env, t)))
                 .collect(),
-            err: (0..n_actions)
-                .map(|t| Key::new(self.error_key(env, t)))
+            rew: (0..n_actions)
+                .map(|t| Key::new(self.reward_key(env, t)))
                 .collect(),
             done: Key::new(self.done_key(env)),
             fail: Key::new(self.fail_key(env)),
@@ -121,7 +125,7 @@ pub struct EnvKeys {
     /// post-terminal index (the done-flag resolves that wait).
     pub state: Vec<Key>,
     pub action: Vec<Key>,
-    pub err: Vec<Key>,
+    pub rew: Vec<Key>,
     pub done: Key,
     pub fail: Key,
     pub abort: Key,
@@ -146,7 +150,7 @@ mod tests {
         assert_ne!(p.state_key(1, 0), p.state_key(0, 0));
         assert_ne!(p.state_key(0, 1), p.state_key(0, 0));
         assert_ne!(p.action_key(0, 0), p.state_key(0, 0));
-        assert_ne!(p.error_key(0, 0), p.state_key(0, 0));
+        assert_ne!(p.reward_key(0, 0), p.state_key(0, 0));
         assert_ne!(p.fail_key(0), p.done_key(0));
         assert_eq!(p.run_tag(), "it3");
     }
@@ -164,11 +168,11 @@ mod tests {
         let ek = p.env_keys(2, 3);
         assert_eq!(ek.state.len(), 4, "one post-terminal state slot");
         assert_eq!(ek.action.len(), 3);
-        assert_eq!(ek.err.len(), 3);
+        assert_eq!(ek.rew.len(), 3);
         for t in 0..3 {
             assert_eq!(ek.state[t].name(), p.state_key(2, t));
             assert_eq!(ek.action[t].name(), p.action_key(2, t));
-            assert_eq!(ek.err[t].name(), p.error_key(2, t));
+            assert_eq!(ek.rew[t].name(), p.reward_key(2, t));
         }
         assert_eq!(ek.state[3].name(), p.state_key(2, 3));
         assert_eq!(ek.done.name(), p.done_key(2));

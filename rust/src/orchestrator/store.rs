@@ -50,6 +50,24 @@
 //! subscriber-scaling series puts the two head to head, and
 //! `hpc.db_seqlock_wake = true` selects it for a full training run.
 //!
+//! # Persistent subscriptions ([`Subscription`])
+//!
+//! `wait_any` is stateless — every call registers its whole key set and
+//! deregisters it on return.  Consumers whose key set evolves
+//! incrementally (the rollout collector retires one key and adds one or
+//! two per event) instead hold a [`Subscription`]: registrations stay
+//! live across waits under caller-chosen tags, [`Subscription::add`] /
+//! [`Subscription::remove`] apply single-key deltas (one shard-locked
+//! registry op each, counted in [`StoreStats::sub_ops`]), and
+//! [`Subscription::wait_take`] consumes deliveries in arrival order.
+//! The same no-lost-wakeup argument applies (registration and presence
+//! check share the key's shard lock; already-present values are
+//! self-delivered), and every delivery is re-checked against the store,
+//! so racing takers, `delete`/`clear`, and tag retargeting degrade to
+//! benign re-parks.  Subscriptions deliver under **both** wake modes:
+//! `put` always services the per-key registry, which in seq-lock mode
+//! only persistent handles populate.
+//!
 //! Keys can be interned ([`Key`]) to precompute the routing hash once;
 //! [`crate::orchestrator::Protocol`] builds per-(env, step) handles so
 //! the steady-state rollout loop does no string formatting or rehashing.
@@ -212,6 +230,12 @@ pub struct StoreStats {
     /// recycle slots locally (and immediate hits need none), so this
     /// saturates at roughly one per subscribing thread.
     pub waiters_created: AtomicU64,
+    /// Waiter-registry mutations (key add/remove) performed by persistent
+    /// [`Subscription`] handles.  The O(E)-per-wave acceptance counter:
+    /// a steady-state collection wave over `E` envs must advance this by
+    /// O(E), where the per-event subscription rebuild it replaced cost
+    /// O(E) registry ops per *event* (O(E²) per wave).
+    pub sub_ops: AtomicU64,
 }
 
 /// Snapshot of the counters.
@@ -224,6 +248,7 @@ pub struct StatsSnapshot {
     pub bytes_in: u64,
     pub bytes_out: u64,
     pub waiters_created: u64,
+    pub sub_ops: u64,
 }
 
 /// A parked multi-key subscriber: `put` pushes the hit index into the
@@ -404,19 +429,19 @@ impl ShardedStore {
         let mut inner = shard.inner.lock().unwrap();
         inner.map.insert(name, value);
         shard.cv.notify_all();
-        match self.wake {
-            WakeMode::PerKey => {
-                if let Some(ws) = inner.waiters.get(&h) {
-                    for (w, idx) in ws {
-                        w.inbox.lock().unwrap().push_back(*idx);
-                        w.cv.notify_one();
-                    }
-                }
+        // Per-key waiter delivery runs in BOTH wake modes: in seq-lock
+        // mode `wait_any` never registers here, so the registry only
+        // holds persistent [`Subscription`] handles — which must keep
+        // working under the baseline protocol too.
+        if let Some(ws) = inner.waiters.get(&h) {
+            for (w, idx) in ws {
+                w.inbox.lock().unwrap().push_back(*idx);
+                w.cv.notify_one();
             }
-            WakeMode::SeqLock => {
-                drop(inner);
-                self.multi.bump();
-            }
+        }
+        if self.wake == WakeMode::SeqLock {
+            drop(inner);
+            self.multi.bump();
         }
     }
 
@@ -765,6 +790,163 @@ impl ShardedStore {
             bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
             waiters_created: self.stats.waiters_created.load(Ordering::Relaxed),
+            sub_ops: self.stats.sub_ops.load(Ordering::Relaxed),
+        }
+    }
+
+}
+
+/// A persistent, incrementally-updated multi-key subscription.
+///
+/// [`ShardedStore::wait_any`] is stateless: every call registers the
+/// whole key set and deregisters it on return — O(set) shard-lock ops
+/// per call.  For the rollout collector, whose key set changes by one or
+/// two keys per event, that rebuild made a collection wave over `E` envs
+/// cost O(E²) registry ops.  A `Subscription` keeps its registrations
+/// **live across waits** under caller-chosen integer tags:
+///
+/// * [`Subscription::add`] registers one key under a tag (1 registry
+///   op).  If the value is already present, the tag is self-delivered —
+///   the same no-lost-wakeup guarantee as `wait_any`'s registration
+///   scan, since the presence check and the registration happen under
+///   the key's shard lock.
+/// * [`Subscription::remove`] drops one tag's registration (1 op).
+///   Queued deliveries for the tag become stale and are skipped (a
+///   delivery is only honored against the tag's *current* key).
+/// * [`Subscription::wait_take`] blocks until any registered key is
+///   delivered, consumes the value, and returns `(tag, value)`.
+///   Re-adding a tag (or a racing taker) is safe: every delivery is
+///   re-checked against the store before it is returned.
+///
+/// Dropping the subscription deregisters everything.  Registry
+/// mutations are counted in [`StoreStats::sub_ops`], which is what the
+/// O(E)-per-wave collector test asserts on.
+///
+/// Unlike `wait_any`, the registration (not argument order) defines the
+/// delivery priority: values present at `add` time and later puts are
+/// delivered in arrival order through one FIFO inbox.
+pub struct Subscription {
+    store: Arc<ShardedStore>,
+    waiter: Arc<Waiter>,
+    /// `slots[tag]`: the tag's live registration (shard index, key hash,
+    /// key name), or `None`.
+    slots: Vec<Option<(usize, u64, Arc<str>)>>,
+}
+
+impl Subscription {
+    /// Create a persistent subscription on `store`: register interest
+    /// once, incrementally add and remove keys between waits, and
+    /// receive per-key deliveries without ever rebuilding the key set.
+    pub fn new(store: Arc<ShardedStore>) -> Subscription {
+        Subscription {
+            store,
+            waiter: Arc::new(Waiter::default()),
+            slots: Vec::new(),
+        }
+    }
+
+    /// Register `key` under `tag` (replacing the tag's previous key, if
+    /// any).  One registry op — plus a self-delivery if the value is
+    /// already present, so a later [`Subscription::wait_take`] cannot
+    /// miss it.
+    pub fn add<K: KeyLike + ?Sized>(&mut self, tag: usize, key: &K) {
+        self.remove(tag);
+        if self.slots.len() <= tag {
+            self.slots.resize_with(tag + 1, || None);
+        }
+        let h = key.hash64();
+        let name = key.shared_name();
+        let si = self.store.shard_index(h);
+        let present = {
+            let mut inner = self.store.shards[si].inner.lock().unwrap();
+            inner
+                .waiters
+                .entry(h)
+                .or_default()
+                .push((self.waiter.clone(), tag));
+            inner.map.contains_key(&*name)
+        };
+        self.store.stats.sub_ops.fetch_add(1, Ordering::Relaxed);
+        if present {
+            // The value predates the registration, so no put will
+            // announce it: deliver the tag ourselves.
+            self.waiter.inbox.lock().unwrap().push_back(tag);
+        }
+        self.slots[tag] = Some((si, h, name));
+    }
+
+    /// Deregister whatever key `tag` is registered for (no-op for an
+    /// unregistered tag).  One registry op.
+    pub fn remove(&mut self, tag: usize) {
+        let Some(reg) = self.slots.get_mut(tag).and_then(Option::take) else {
+            return;
+        };
+        let (si, h, _name) = reg;
+        let mut inner = self.store.shards[si].inner.lock().unwrap();
+        if let Some(ws) = inner.waiters.get_mut(&h) {
+            ws.retain(|(w, t)| !(Arc::ptr_eq(w, &self.waiter) && *t == tag));
+        }
+        drop(inner);
+        self.store.stats.sub_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of live registrations.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True if no key is registered.
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Block until any registered key holds a value, consume it, and
+    /// return `(tag, value)`; `None` on timeout.  Stale deliveries
+    /// (removed tags, values consumed by racing takers, cleared keys)
+    /// are skipped and the wait continues.
+    pub fn wait_take(&mut self, timeout: Duration) -> Option<(usize, Value)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let delivered = {
+                let mut inbox = self.waiter.inbox.lock().unwrap();
+                loop {
+                    if let Some(t) = inbox.pop_front() {
+                        break Some(t);
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break None;
+                    }
+                    self.store.stats.poll_misses.fetch_add(1, Ordering::Relaxed);
+                    let (g, _res) = self.waiter.cv.wait_timeout(inbox, deadline - now).unwrap();
+                    inbox = g;
+                }
+            };
+            let tag = delivered?;
+            // Honor the delivery only against the tag's CURRENT key, and
+            // re-check the store authoritatively: a racing taker, delete
+            // or clear may have consumed the value (re-park), and a
+            // remove+add may have retargeted the tag since the put.
+            let Some(Some((si, _h, name))) = self.slots.get(tag) else {
+                continue;
+            };
+            let hit = {
+                let mut inner = self.store.shards[*si].inner.lock().unwrap();
+                inner.map.remove(&**name)
+            };
+            if let Some(v) = hit {
+                self.store.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.store.count_hit(&v);
+                return Some((tag, v));
+            }
+        }
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        for tag in 0..self.slots.len() {
+            self.remove(tag);
         }
     }
 }
@@ -1226,6 +1408,144 @@ mod tests {
             }
             assert!(seen.iter().all(|&x| x));
             assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn subscription_delivers_preexisting_and_later_puts() {
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(4, mode));
+            s.put("pre", Value::Scalar(1.0));
+            let mut sub = Subscription::new(s.clone());
+            sub.add(0, "pre"); // present at add time: self-delivered
+            sub.add(7, "late");
+            assert_eq!(sub.len(), 2);
+            let (tag, v) = sub.wait_take(Duration::from_secs(1)).unwrap();
+            assert_eq!((tag, v.as_scalar()), (0, Some(1.0)), "{mode:?}");
+            assert!(!s.exists("pre"), "wait_take consumes");
+
+            let s2 = s.clone();
+            let h = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(15));
+                s2.put("late", Value::Scalar(2.0));
+            });
+            let (tag, v) = sub.wait_take(Duration::from_secs(5)).unwrap();
+            h.join().unwrap();
+            assert_eq!((tag, v.as_scalar()), (7, Some(2.0)), "{mode:?}");
+            // Nothing left: times out.
+            assert!(sub.wait_take(Duration::from_millis(20)).is_none());
+        }
+    }
+
+    #[test]
+    fn subscription_incremental_updates_and_stale_deliveries() {
+        let s = Arc::new(ShardedStore::new(4));
+        let mut sub = Subscription::new(s.clone());
+        sub.add(3, "a");
+        s.put("a", Value::Scalar(1.0)); // queued delivery for tag 3
+        sub.remove(3); // ...now stale
+        assert!(sub.is_empty());
+        assert!(
+            sub.wait_take(Duration::from_millis(20)).is_none(),
+            "stale delivery must be skipped, not returned"
+        );
+        assert!(s.exists("a"), "stale delivery must not consume the value");
+
+        // Retargeting a tag honors deliveries against the NEW key only.
+        sub.add(3, "b");
+        s.put("b", Value::Scalar(2.0));
+        let (tag, v) = sub.wait_take(Duration::from_secs(1)).unwrap();
+        assert_eq!((tag, v.as_scalar()), (3, Some(2.0)));
+
+        // Replace-on-add: one tag, one live registration.
+        sub.add(0, "x");
+        sub.add(0, "y");
+        s.put("x", Value::Scalar(9.0));
+        assert!(
+            sub.wait_take(Duration::from_millis(20)).is_none(),
+            "tag 0 was retargeted from x to y"
+        );
+        s.put("y", Value::Scalar(4.0));
+        let (tag, v) = sub.wait_take(Duration::from_secs(1)).unwrap();
+        assert_eq!((tag, v.as_scalar()), (0, Some(4.0)));
+    }
+
+    #[test]
+    fn subscription_counts_registry_ops_and_drop_deregisters() {
+        let s = Arc::new(ShardedStore::new(4));
+        let base = s.stats().sub_ops;
+        {
+            let mut sub = Subscription::new(s.clone());
+            sub.add(0, "k0"); // 1 op
+            sub.add(1, "k1"); // 1 op
+            sub.add(1, "k1b"); // remove + add = 2 ops
+            sub.remove(0); // 1 op
+            sub.remove(0); // no-op: tag already empty
+            assert_eq!(s.stats().sub_ops - base, 5);
+            // Waiting with queued deliveries costs zero registry ops.
+            s.put("k1b", Value::Scalar(1.0));
+            assert!(sub.wait_take(Duration::from_secs(1)).is_some());
+            assert_eq!(s.stats().sub_ops - base, 5);
+        } // drop deregisters the one live slot
+        assert_eq!(s.stats().sub_ops - base, 6);
+        // No dangling registration: a put after drop delivers nowhere
+        // (would panic/leak otherwise; observable as clean clear()).
+        s.put("k1b", Value::Scalar(2.0));
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn subscription_races_wait_any_takers_exactly_once() {
+        // One persistent subscriber and one wait_any_take consumer split
+        // a stream of puts over the same keys without loss or double
+        // delivery.
+        for mode in MODES {
+            let s = Arc::new(ShardedStore::with_wake_mode(8, mode));
+            let n = 32usize;
+            let names: Vec<String> = (0..n).map(|i| format!("race{i}")).collect();
+            let total = Arc::new(AtomicUsize::new(0));
+            let rival = {
+                let s = s.clone();
+                let names = names.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    let keys: Vec<&str> = names.iter().map(|x| x.as_str()).collect();
+                    let mut got = 0usize;
+                    while total.load(Ordering::SeqCst) < n {
+                        if s.wait_any_take(&keys, Duration::from_millis(10)).is_some() {
+                            got += 1;
+                            total.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    got
+                })
+            };
+            let mut sub = Subscription::new(s.clone());
+            for (i, name) in names.iter().enumerate() {
+                sub.add(i, name.as_str());
+            }
+            let producer = {
+                let s = s.clone();
+                let names = names.clone();
+                std::thread::spawn(move || {
+                    for name in names.iter() {
+                        s.put(name.as_str(), Value::Scalar(1.0));
+                        std::thread::yield_now();
+                    }
+                })
+            };
+            let mut mine = 0usize;
+            while total.load(Ordering::SeqCst) < n {
+                if sub.wait_take(Duration::from_millis(10)).is_some() {
+                    mine += 1;
+                    total.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            producer.join().unwrap();
+            let rival_got = rival.join().unwrap();
+            assert_eq!(mine + rival_got, n, "{mode:?}: exactly-once split");
+            assert!(s.is_empty(), "{mode:?}");
         }
     }
 

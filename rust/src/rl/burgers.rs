@@ -1,0 +1,742 @@
+//! The 1D stochastic-Burgers LES backend (`rl.backend = "burgers"`).
+//!
+//! The canonical small-scale testbed for RL turbulence modeling: a
+//! periodic viscous Burgers flow kept quasi-stationary by linear forcing
+//! (the same controller as the 3D HIT case) plus stochastic
+//! low-wavenumber noise.  The environment advances a **coarse** grid
+//! that cannot resolve the shock-driven energy cascade; the policy picks
+//! one Smagorinsky-like coefficient per spatial segment,
+//!
+//! `nu_t(x) = (C_seg(x) * dx)^2 * |du/dx|`,
+//!
+//! and is rewarded for matching the energy spectrum of a **resolved**
+//! reference run through exactly the Eq. (4)/(5) shaping of the paper
+//! ([`crate::solver::spectrum::spectrum_error`] +
+//! [`crate::rl::reward::reward_from_error`] — both are
+//! resolution-agnostic and reused verbatim).  One episode costs a few
+//! thousand floating-point stencil sweeps, so hundreds of envs fit in a
+//! CI smoke run — this backend is what exercises the pool at scales the
+//! 3D case cannot reach in CI.
+//!
+//! Discretization: skew-symmetric central differences for the advection
+//! term (discretely energy-conserving, so all dissipation is explicit
+//! viscosity), conservative variable-viscosity diffusion, Heun (RK2)
+//! substeps under a combined advective/viscous stability limit.  The
+//! resolved truth runs the identical scheme on a `truth_refine`-times
+//! finer grid with zero SGS.
+
+use super::cfd::{CfdBackend, CfdEnv};
+use super::env::StepOut;
+use super::reward::reward_from_error;
+use crate::config::{BurgersConfig, ResolvedVariant};
+use crate::solver::forcing::LinearForcing;
+use crate::solver::spectrum::spectrum_error;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::f64::consts::TAU;
+use std::sync::Arc;
+
+/// Noise seed used for held-out test-state episodes: test resets must
+/// not consume caller RNG draws (deterministic evaluation), so the
+/// stochastic forcing stream is fixed instead.
+const TEST_NOISE_SEED: u64 = 0x5eed_b562;
+
+/// Ground-truth package for the Burgers scenario: the time-averaged
+/// resolved spectrum the reward compares against, plus coarse-grained
+/// snapshots used as randomized initial states (one held out for
+/// evaluation) — the same shape as the 3D [`crate::solver::dns::Truth`].
+pub struct BurgersTruth {
+    /// Coarse (LES) resolution the states are box-filtered to.
+    pub n_les: usize,
+    /// Time-averaged resolved spectrum on LES bins `0..=n_les/2`.
+    pub mean_spectrum: Vec<f64>,
+    /// Training pool of coarse-grained initial states.
+    pub states: Vec<Vec<f64>>,
+    /// Held-out test state.
+    pub test_state: Vec<f64>,
+}
+
+/// Physics of one Burgers simulation (coarse env or resolved truth).
+#[derive(Debug, Clone)]
+struct SimParams {
+    n: usize,
+    nu: f64,
+    ke_target: f64,
+    forcing_tau: f64,
+    noise_amp: f64,
+    noise_modes: usize,
+    cfl: f64,
+}
+
+/// One Burgers field plus the scratch needed to advance it without
+/// per-step allocation.
+struct Sim {
+    p: SimParams,
+    dx: f64,
+    u: Vec<f64>,
+    /// Per-point SGS coefficient C (zero for the resolved truth run).
+    cs_point: Vec<f64>,
+    /// Stochastic forcing field, frozen over one RL interval.
+    noise: Vec<f64>,
+    forcing: LinearForcing,
+    // Heun scratch.
+    k1: Vec<f64>,
+    k2: Vec<f64>,
+    u1: Vec<f64>,
+    dudx: Vec<f64>,
+}
+
+/// Mean kinetic energy `mean(u^2) / 2`.
+fn kinetic_energy(u: &[f64]) -> f64 {
+    0.5 * u.iter().map(|&v| v * v).sum::<f64>() / u.len() as f64
+}
+
+/// Shell energy spectrum of a real periodic signal by direct DFT:
+/// `E(k) = |u_hat(k)|^2` for interior bins (conjugate pairs folded), so
+/// `sum_k E(k) = mean(u^2)/2`.  Coefficients are continuum-normalized
+/// (`u_hat = (1/n) sum u e^{-ikx}`), so spectra from different grid
+/// resolutions are directly comparable on shared bins — that is what
+/// lets the coarse env score itself against the refined truth.
+pub fn energy_spectrum_1d_into(u: &[f64], spec: &mut [f64]) {
+    let n = u.len();
+    assert!(spec.len() <= n / 2 + 1, "more bins than resolvable modes");
+    for (k, s) in spec.iter_mut().enumerate() {
+        let (mut re, mut im) = (0.0f64, 0.0f64);
+        let w = TAU * k as f64 / n as f64;
+        for (j, &uj) in u.iter().enumerate() {
+            let th = w * j as f64;
+            re += uj * th.cos();
+            im -= uj * th.sin();
+        }
+        re /= n as f64;
+        im /= n as f64;
+        let e = re * re + im * im;
+        // k = 0 and the Nyquist bin have no conjugate partner: halve so
+        // the bins sum to the mean kinetic energy (discrete Parseval).
+        *s = if k == 0 || 2 * k == n { 0.5 * e } else { e };
+    }
+}
+
+/// Allocating convenience over [`energy_spectrum_1d_into`] with bins up
+/// to the signal's Nyquist.
+pub fn energy_spectrum_1d(u: &[f64]) -> Vec<f64> {
+    let mut spec = vec![0.0; u.len() / 2 + 1];
+    energy_spectrum_1d_into(u, &mut spec);
+    spec
+}
+
+/// Semi-discrete right-hand side at state `u`:
+/// skew-symmetric advection + conservative `(nu + nu_t) u_xx` + linear
+/// forcing `a_force * u` + the frozen stochastic field.
+#[allow(clippy::too_many_arguments)]
+fn rhs_into(
+    p: &SimParams,
+    dx: f64,
+    u: &[f64],
+    cs_point: &[f64],
+    noise: &[f64],
+    a_force: f64,
+    dudx: &mut [f64],
+    out: &mut [f64],
+) {
+    let n = p.n;
+    for i in 0..n {
+        let up = u[(i + 1) % n];
+        let um = u[(i + n - 1) % n];
+        dudx[i] = (up - um) / (2.0 * dx);
+    }
+    // Total viscosity per point: molecular + Smagorinsky-like SGS.
+    // (Reuses `out` as the nu_tot scratch before the final assembly.)
+    for i in 0..n {
+        let cd = cs_point[i] * dx;
+        out[i] = p.nu + cd * cd * dudx[i].abs();
+    }
+    for i in 0..n {
+        let ip = (i + 1) % n;
+        let im = (i + n - 1) % n;
+        // Skew-symmetric split of u*u_x: 1/3 (u^2)_x + 1/3 u u_x.
+        let adv = ((u[ip] * u[ip] - u[im] * u[im]) / (2.0 * dx) + u[i] * dudx[i]) / 3.0;
+        // Conservative diffusion with face-averaged viscosity.
+        let nu_p = 0.5 * (out[i] + out[ip]);
+        let nu_m = 0.5 * (out[im] + out[i]);
+        let visc = (nu_p * (u[ip] - u[i]) - nu_m * (u[i] - u[im])) / (dx * dx);
+        dudx[i] = adv - visc; // stash -rhs of the conservative terms
+    }
+    for i in 0..n {
+        out[i] = -dudx[i] + a_force * u[i] + noise[i];
+    }
+}
+
+impl Sim {
+    fn new(p: SimParams) -> Sim {
+        let n = p.n;
+        Sim {
+            dx: TAU / n as f64,
+            u: vec![0.0; n],
+            cs_point: vec![0.0; n],
+            noise: vec![0.0; n],
+            forcing: LinearForcing::new(p.ke_target, p.forcing_tau),
+            k1: vec![0.0; n],
+            k2: vec![0.0; n],
+            u1: vec![0.0; n],
+            dudx: vec![0.0; n],
+            p,
+        }
+    }
+
+    /// Redraw the stochastic forcing field for the next RL interval:
+    /// `noise_amp * sum_k (a_k / k) sin(k x + phi_k)` over the forced
+    /// low wavenumbers, frozen in time until the next draw.
+    fn draw_noise(&mut self, rng: &mut Rng) {
+        self.noise.fill(0.0);
+        for k in 1..=self.p.noise_modes {
+            let a = self.p.noise_amp * rng.normal() / k as f64;
+            let phi = TAU * rng.uniform();
+            for (i, f) in self.noise.iter_mut().enumerate() {
+                *f += a * (k as f64 * self.dx * i as f64 + phi).sin();
+            }
+        }
+    }
+
+    /// Advance `dt_total` with Heun substeps under the combined
+    /// advective/viscous stability limit.  Steady-state calls allocate
+    /// nothing.
+    fn advance(&mut self, dt_total: f64) {
+        let mut remaining = dt_total;
+        while remaining > 0.0 {
+            let umax = self.u.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1e-6);
+            // Conservative per-substep viscosity bound: the largest SGS
+            // gradient is at most O(umax / dx).
+            let cmax = self.cs_point.iter().fold(0.0f64, |a, &b| a.max(b));
+            let nu_max = self.p.nu + (cmax * self.dx).powi(2) * (2.0 * umax / self.dx);
+            let dt_adv = self.p.cfl * self.dx / umax;
+            let dt_visc = 0.4 * self.dx * self.dx / nu_max;
+            let dt = remaining.min(dt_adv).min(dt_visc);
+            let a1 = self.forcing.coefficient(kinetic_energy(&self.u));
+            rhs_into(
+                &self.p,
+                self.dx,
+                &self.u,
+                &self.cs_point,
+                &self.noise,
+                a1,
+                &mut self.dudx,
+                &mut self.k1,
+            );
+            for i in 0..self.p.n {
+                self.u1[i] = self.u[i] + dt * self.k1[i];
+            }
+            let a2 = self.forcing.coefficient(kinetic_energy(&self.u1));
+            rhs_into(
+                &self.p,
+                self.dx,
+                &self.u1,
+                &self.cs_point,
+                &self.noise,
+                a2,
+                &mut self.dudx,
+                &mut self.k2,
+            );
+            for i in 0..self.p.n {
+                self.u[i] += 0.5 * dt * (self.k1[i] + self.k2[i]);
+            }
+            remaining -= dt;
+        }
+    }
+}
+
+/// Box-filter a fine field onto `n_coarse` points (cell averages over
+/// `refine` consecutive fine points).
+fn coarse_grain(fine: &[f64], n_coarse: usize) -> Vec<f64> {
+    let r = fine.len() / n_coarse;
+    debug_assert_eq!(fine.len(), n_coarse * r);
+    (0..n_coarse)
+        .map(|i| fine[i * r..(i + 1) * r].iter().sum::<f64>() / r as f64)
+        .collect()
+}
+
+/// Run the resolved reference simulation and package the ground truth:
+/// spin up from a low-wavenumber random field, then sample
+/// `truth_states + 1` snapshots (the last is held out as the test
+/// state), accumulating the mean spectrum on LES bins.  Deterministic in
+/// `cfg.truth_seed`.
+pub fn generate_truth(cfg: &BurgersConfig) -> BurgersTruth {
+    let n_fine = cfg.points * cfg.truth_refine;
+    let mut sim = Sim::new(SimParams {
+        n: n_fine,
+        nu: cfg.nu,
+        ke_target: cfg.ke_target,
+        forcing_tau: cfg.forcing_tau,
+        noise_amp: cfg.noise_amp,
+        noise_modes: cfg.noise_modes,
+        cfl: cfg.cfl,
+    });
+    let mut rng = Rng::new(cfg.truth_seed);
+    // Low-wavenumber random initial condition scaled to the target
+    // energy; the spin-up then develops the nonlinear cascade.
+    let dx = sim.dx;
+    for k in 1..=cfg.noise_modes + 1 {
+        let a = rng.normal() / k as f64;
+        let phi = TAU * rng.uniform();
+        for (i, v) in sim.u.iter_mut().enumerate() {
+            *v += a * (k as f64 * dx * i as f64 + phi).sin();
+        }
+    }
+    let ke0 = kinetic_energy(&sim.u).max(1e-12);
+    let scale = (cfg.ke_target / ke0).sqrt();
+    sim.u.iter_mut().for_each(|v| *v *= scale);
+
+    // Advance in dt_rl chunks, redrawing the stochastic forcing per
+    // chunk — the same forcing cadence the envs run under.
+    let advance_time = |sim: &mut Sim, rng: &mut Rng, t: f64| {
+        let chunks = (t / cfg.dt_rl).round().max(1.0) as usize;
+        for _ in 0..chunks {
+            sim.draw_noise(rng);
+            sim.advance(cfg.dt_rl);
+        }
+    };
+    advance_time(&mut sim, &mut rng, cfg.truth_spinup);
+
+    let nbins = cfg.points / 2 + 1;
+    let mut mean_spectrum = vec![0.0; nbins];
+    let mut spec = vec![0.0; nbins];
+    let mut states = Vec::with_capacity(cfg.truth_states + 1);
+    for _ in 0..cfg.truth_states + 1 {
+        advance_time(&mut sim, &mut rng, cfg.truth_interval);
+        energy_spectrum_1d_into(&sim.u, &mut spec);
+        for (m, s) in mean_spectrum.iter_mut().zip(&spec) {
+            *m += s;
+        }
+        states.push(coarse_grain(&sim.u, cfg.points));
+    }
+    let n_samples = states.len() as f64;
+    mean_spectrum.iter_mut().for_each(|m| *m /= n_samples);
+    let test_state = states.pop().expect("at least one snapshot");
+    BurgersTruth {
+        n_les: cfg.points,
+        mean_spectrum,
+        states,
+        test_state,
+    }
+}
+
+/// One coarse stochastic-Burgers environment instance.
+pub struct BurgersEnv {
+    sim: Sim,
+    truth: Arc<BurgersTruth>,
+    segments: usize,
+    k_max: usize,
+    alpha: f64,
+    dt_rl: f64,
+    n_actions: usize,
+    step_idx: usize,
+    /// Reused spectrum bins for the per-step reward (no per-step alloc).
+    spec: Vec<f64>,
+    /// Per-episode stochastic forcing stream (seeded at reset).
+    noise_rng: Rng,
+    /// See [`CfdEnv::set_init_family`].
+    init_family: Option<(usize, usize)>,
+}
+
+impl BurgersEnv {
+    /// Build an environment on a shared truth package.  `cfg` is the
+    /// variant-resolved configuration (viscosity, horizon, reward knobs
+    /// already scaled).
+    pub fn new(cfg: &BurgersConfig, truth: Arc<BurgersTruth>) -> Result<BurgersEnv> {
+        anyhow::ensure!(
+            truth.n_les == cfg.points,
+            "truth coarse-grained for n={}, env needs n={}",
+            truth.n_les,
+            cfg.points
+        );
+        anyhow::ensure!(
+            cfg.segments >= 1 && cfg.points % cfg.segments == 0,
+            "segments {} must divide points {}",
+            cfg.segments,
+            cfg.points
+        );
+        anyhow::ensure!(
+            cfg.k_max >= 1 && cfg.k_max <= cfg.points / 2,
+            "k_max {} beyond Nyquist {}",
+            cfg.k_max,
+            cfg.points / 2
+        );
+        for (k, &e) in truth.mean_spectrum[1..=cfg.k_max].iter().enumerate() {
+            anyhow::ensure!(
+                e > 0.0,
+                "truth spectrum empty at k={} (reward undefined)",
+                k + 1
+            );
+        }
+        Ok(BurgersEnv {
+            sim: Sim::new(SimParams {
+                n: cfg.points,
+                nu: cfg.nu,
+                ke_target: cfg.ke_target,
+                forcing_tau: cfg.forcing_tau,
+                noise_amp: cfg.noise_amp,
+                noise_modes: cfg.noise_modes,
+                cfl: cfg.cfl,
+            }),
+            truth,
+            segments: cfg.segments,
+            k_max: cfg.k_max,
+            alpha: cfg.alpha,
+            dt_rl: cfg.dt_rl,
+            n_actions: (cfg.t_end / cfg.dt_rl).round() as usize,
+            step_idx: 0,
+            spec: vec![0.0; cfg.points / 2 + 1],
+            noise_rng: Rng::new(TEST_NOISE_SEED),
+            init_family: None,
+        })
+    }
+}
+
+impl CfdEnv for BurgersEnv {
+    fn reset_in_place(&mut self, rng: &mut Rng, test: bool) {
+        let state = if test {
+            // Fixed noise stream: test episodes consume no caller draws.
+            self.noise_rng = Rng::new(TEST_NOISE_SEED);
+            &self.truth.test_state
+        } else {
+            let idx =
+                super::cfd::draw_pool_index(self.truth.states.len(), self.init_family, rng);
+            self.noise_rng = Rng::new(rng.next_u64());
+            &self.truth.states[idx]
+        };
+        self.sim.u.copy_from_slice(state);
+        self.sim.cs_point.fill(0.0);
+        self.sim.noise.fill(0.0);
+        self.step_idx = 0;
+    }
+
+    fn step(&mut self, cs: &[f64]) -> StepOut {
+        assert_eq!(cs.len(), self.segments, "one SGS coefficient per segment");
+        let pts = self.sim.p.n / self.segments;
+        for (i, c) in self.sim.cs_point.iter_mut().enumerate() {
+            *c = cs[i / pts].clamp(0.0, 0.5);
+        }
+        self.sim.draw_noise(&mut self.noise_rng);
+        self.sim.advance(self.dt_rl);
+        self.step_idx += 1;
+        energy_spectrum_1d_into(&self.sim.u, &mut self.spec);
+        let spec_error = spectrum_error(&self.truth.mean_spectrum, &self.spec, self.k_max);
+        StepOut {
+            spec_error,
+            reward: reward_from_error(spec_error, self.alpha),
+            done: self.step_idx >= self.n_actions,
+        }
+    }
+
+    fn observe_into(&mut self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.sim.p.n);
+        for (o, &v) in out.iter_mut().zip(&self.sim.u) {
+            *o = v as f32;
+        }
+    }
+
+    /// One velocity point per float; segments are contiguous slices, so
+    /// agent `s` observes `out[s * points/segments ..][..points/segments]`.
+    fn obs_len(&self) -> usize {
+        self.sim.p.n
+    }
+
+    fn n_agents(&self) -> usize {
+        self.segments
+    }
+
+    fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    fn spectrum(&self) -> Vec<f64> {
+        energy_spectrum_1d(&self.sim.u)
+    }
+
+    fn target_spectrum(&self) -> &[f64] {
+        &self.truth.mean_spectrum
+    }
+
+    fn set_init_family(&mut self, family: usize, n_families: usize) -> Result<()> {
+        super::cfd::validate_init_family(self.truth.states.len(), family, n_families)?;
+        self.init_family = Some((family, n_families));
+        Ok(())
+    }
+}
+
+/// The Burgers scenario as a pool backend: generates the resolved truth
+/// once per run (deterministic in `burgers.truth_seed`) and cuts every
+/// env from it.
+pub struct BurgersBackend {
+    cfg: BurgersConfig,
+    truth: Arc<BurgersTruth>,
+}
+
+impl BurgersBackend {
+    /// Generate the shared resolved truth for this run's configuration.
+    /// Per-env parameter guards (segments/k_max, incl. variant
+    /// overrides) live in [`BurgersEnv::new`]; config-level validation
+    /// is `RunConfig::validate` — only what truth generation itself
+    /// needs is checked here.
+    pub fn new(cfg: &BurgersConfig) -> Result<BurgersBackend> {
+        anyhow::ensure!(cfg.truth_refine >= 1 && cfg.truth_states >= 1);
+        let truth = Arc::new(generate_truth(cfg));
+        Ok(BurgersBackend {
+            cfg: cfg.clone(),
+            truth,
+        })
+    }
+
+    /// The resolved-truth package shared by every env of this backend.
+    pub fn truth(&self) -> Arc<BurgersTruth> {
+        self.truth.clone()
+    }
+}
+
+impl CfdBackend for BurgersBackend {
+    fn name(&self) -> &str {
+        "burgers"
+    }
+
+    fn make_env(&self, rv: &ResolvedVariant) -> Result<Box<dyn CfdEnv>> {
+        // The Burgers base parameters live in their own config section,
+        // so the variant's raw knobs are applied here rather than through
+        // the pre-scaled `rv.case`/`rv.solver`.
+        let mut cfg = self.cfg.clone();
+        cfg.nu *= rv.variant.nu_scale;
+        cfg.t_end *= rv.variant.t_end_scale;
+        if let Some(a) = rv.variant.alpha {
+            cfg.alpha = a;
+        }
+        if let Some(k) = rv.variant.k_max {
+            cfg.k_max = k;
+        }
+        let mut env = BurgersEnv::new(&cfg, self.truth.clone())
+            .with_context(|| format!("burgers env (variant {})", rv.name))?;
+        if let Some((family, m)) = rv.init_family {
+            env.set_init_family(family, m)
+                .with_context(|| format!("burgers env (variant {})", rv.name))?;
+        }
+        Ok(Box::new(env))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::{EnvVariant, RunConfig};
+
+    /// A small, fast Burgers configuration shared by the backend tests.
+    pub fn tiny_burgers() -> BurgersConfig {
+        BurgersConfig {
+            points: 48,
+            segments: 4,
+            k_max: 6,
+            t_end: 0.3,
+            truth_states: 3,
+            truth_spinup: 0.6,
+            truth_interval: 0.2,
+            ..BurgersConfig::default()
+        }
+    }
+
+    #[test]
+    fn spectrum_bins_sum_to_kinetic_energy() {
+        let mut rng = Rng::new(9);
+        let u: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let spec = energy_spectrum_1d(&u);
+        assert_eq!(spec.len(), 33);
+        let total: f64 = spec.iter().sum();
+        let ke = kinetic_energy(&u);
+        assert!((total - ke).abs() < 1e-10 * ke.max(1.0), "{total} vs {ke}");
+    }
+
+    #[test]
+    fn single_mode_lands_in_right_bin() {
+        let n = 32usize;
+        let u: Vec<f64> = (0..n).map(|i| (3.0 * TAU * i as f64 / n as f64).sin()).collect();
+        let spec = energy_spectrum_1d(&u);
+        // sin(3x): ke = 1/4, all of it in bin 3.
+        assert!((spec[3] - 0.25).abs() < 1e-12);
+        for (k, &e) in spec.iter().enumerate() {
+            if k != 3 {
+                assert!(e.abs() < 1e-12, "unexpected energy in bin {k}: {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn unforced_viscous_flow_dissipates() {
+        let cfg = tiny_burgers();
+        let mut sim = Sim::new(SimParams {
+            n: cfg.points,
+            nu: cfg.nu,
+            ke_target: cfg.ke_target,
+            forcing_tau: cfg.forcing_tau,
+            noise_amp: 0.0,
+            noise_modes: 1,
+            cfl: cfg.cfl,
+        });
+        sim.forcing.a0 = 0.0;
+        sim.forcing.a_max = 0.0; // forcing off: pure decay
+        let dx = sim.dx;
+        for (i, v) in sim.u.iter_mut().enumerate() {
+            *v = (dx * i as f64).sin() + 0.3 * (2.0 * dx * i as f64).cos();
+        }
+        let ke0 = kinetic_energy(&sim.u);
+        sim.advance(0.5);
+        let ke1 = kinetic_energy(&sim.u);
+        assert!(ke1 < ke0, "viscous decay: {ke1} !< {ke0}");
+        assert!(ke1 > 0.0 && ke1.is_finite());
+    }
+
+    #[test]
+    fn truth_is_deterministic_and_usable() {
+        let cfg = tiny_burgers();
+        let a = generate_truth(&cfg);
+        let b = generate_truth(&cfg);
+        assert_eq!(a.mean_spectrum, b.mean_spectrum);
+        assert_eq!(a.states, b.states);
+        assert_eq!(a.test_state, b.test_state);
+        assert_eq!(a.states.len(), cfg.truth_states);
+        assert_eq!(a.test_state.len(), cfg.points);
+        // The reward needs strictly positive truth energy up to k_max.
+        for k in 1..=cfg.k_max {
+            assert!(a.mean_spectrum[k] > 0.0, "empty truth bin {k}");
+        }
+        // The forced field holds a sane energy level.
+        let ke = kinetic_energy(&a.test_state);
+        assert!(ke > 0.05 * cfg.ke_target && ke < 20.0 * cfg.ke_target, "ke={ke}");
+    }
+
+    #[test]
+    fn episode_runs_to_done_with_finite_rewards() {
+        let cfg = tiny_burgers();
+        let backend = BurgersBackend::new(&cfg).unwrap();
+        let mut run = RunConfig::default();
+        run.burgers = cfg.clone();
+        let mut env = backend.make_env(&run.base_resolved()).unwrap();
+        assert_eq!(env.n_agents(), 4);
+        assert_eq!(env.obs_len(), 48);
+        let mut rng = Rng::new(1);
+        let obs = env.reset(&mut rng, false);
+        assert_eq!(obs.len(), env.obs_len());
+        let cs = vec![0.1; env.n_agents()];
+        let mut steps = 0;
+        loop {
+            let out = env.step(&cs);
+            assert!(out.spec_error >= 0.0 && out.spec_error.is_finite());
+            assert!(out.reward > -1.0 && out.reward <= 1.0, "reward={}", out.reward);
+            steps += 1;
+            if out.done {
+                break;
+            }
+            assert!(steps <= 3, "t_end/dt_rl = 3 actions");
+        }
+        assert_eq!(steps, 3);
+    }
+
+    #[test]
+    fn same_seed_reproduces_and_test_state_ignores_rng() {
+        let cfg = tiny_burgers();
+        let backend = BurgersBackend::new(&cfg).unwrap();
+        let run = {
+            let mut r = RunConfig::default();
+            r.burgers = cfg;
+            r
+        };
+        let mut e1 = backend.make_env(&run.base_resolved()).unwrap();
+        let mut e2 = backend.make_env(&run.base_resolved()).unwrap();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        assert_eq!(e1.reset(&mut r1, false), e2.reset(&mut r2, false));
+        let cs = vec![0.2; e1.n_agents()];
+        let (a, b) = (e1.step(&cs), e2.step(&cs));
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+        assert_eq!(e1.observe(), e2.observe());
+
+        // Test resets are RNG-independent (deterministic evaluation).
+        let mut r3 = Rng::new(1);
+        let mut r4 = Rng::new(999);
+        assert_eq!(e1.reset(&mut r3, true), e2.reset(&mut r4, true));
+        let (a, b) = (e1.step(&cs), e2.step(&cs));
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+    }
+
+    #[test]
+    fn sgs_coefficient_changes_the_flow() {
+        let cfg = tiny_burgers();
+        let backend = BurgersBackend::new(&cfg).unwrap();
+        let run = {
+            let mut r = RunConfig::default();
+            r.burgers = cfg;
+            r
+        };
+        let mut e1 = backend.make_env(&run.base_resolved()).unwrap();
+        let mut e2 = backend.make_env(&run.base_resolved()).unwrap();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        e1.reset_in_place(&mut r1, true);
+        e2.reset_in_place(&mut r2, true);
+        e1.step(&[0.0; 4]);
+        e2.step(&[0.5; 4]);
+        let (s1, s2) = (e1.spectrum(), e2.spectrum());
+        let diff: f64 = s1.iter().zip(&s2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-12, "the SGS action must matter");
+        // More dissipation -> less small-scale energy.
+        let tail = cfg_tail(&s1) - cfg_tail(&s2);
+        assert!(tail > 0.0, "Cs=0.5 must damp the tail: {tail}");
+    }
+
+    fn cfg_tail(spec: &[f64]) -> f64 {
+        spec[spec.len() / 2..].iter().sum()
+    }
+
+    #[test]
+    fn init_family_restricts_the_pool() {
+        let cfg = tiny_burgers(); // 3 truth states
+        let backend = BurgersBackend::new(&cfg).unwrap();
+        let run = {
+            let mut r = RunConfig::default();
+            r.burgers = cfg;
+            r
+        };
+        let mut rng = Rng::new(11);
+        for fam in 0..3 {
+            let mut env = backend.make_env(&run.base_resolved()).unwrap();
+            env.set_init_family(fam, 3).unwrap();
+            // One state per family: the pool index is pinned, and the
+            // initial field must reproduce across resets.
+            env.reset_in_place(&mut rng, false);
+            let mut a = vec![0f32; env.obs_len()];
+            env.observe_into(&mut a);
+            env.reset_in_place(&mut rng, false);
+            let mut b = vec![0f32; env.obs_len()];
+            env.observe_into(&mut b);
+            assert_eq!(a, b, "family {fam} has one state");
+        }
+        let mut env = backend.make_env(&run.base_resolved()).unwrap();
+        assert!(env.set_init_family(3, 4).is_err());
+    }
+
+    #[test]
+    fn variants_scale_viscosity_horizon_and_reward() {
+        let cfg = tiny_burgers();
+        let backend = BurgersBackend::new(&cfg).unwrap();
+        let mut run = RunConfig::default();
+        run.burgers = cfg;
+        let mut rv = run.base_resolved();
+        rv.variant = EnvVariant {
+            name: "short".into(),
+            nu_scale: 2.0,
+            t_end_scale: 2.0,
+            alpha: Some(0.8),
+            k_max: Some(4),
+        };
+        let env = backend.make_env(&rv).unwrap();
+        assert_eq!(env.n_actions(), 6, "t_end_scale doubles the horizon");
+        // Out-of-range k_max override is rejected per env.
+        rv.variant.k_max = Some(1000);
+        assert!(backend.make_env(&rv).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! The solver-agnostic environment backend layer.
+//!
+//! The paper stresses that Relexi is "built with modularity in mind and
+//! allows easy integration of various HPC solvers"; this module is that
+//! seam in our stack.  Everything above it — the worker pool, both
+//! rollout collectors, evaluation, trajectory recording — runs over
+//! [`CfdEnv`] trait objects and never names a concrete solver.  A
+//! backend contributes two pieces:
+//!
+//! * [`CfdEnv`] — one environment instance.  Backends implement only the
+//!   in-place core (`reset_in_place` / `observe_into` plus `step` and the
+//!   shape/horizon accessors); the allocating `reset`/`observe`
+//!   conveniences are trait-provided defaults over that core, so the
+//!   zero-allocation exchange path is the primary API, not a bolt-on.
+//! * [`CfdBackend`] — the per-run factory.  It owns whatever is shared
+//!   across a pool (the LES backend: one `Arc<Grid>` so every worker
+//!   reuses one FFT plan, plus the DNS truth package; the Burgers
+//!   backend: the resolved-truth spectrum) and builds one env per
+//!   resolved scenario variant.
+//!
+//! Backends register in [`backend_from_config`], keyed by the
+//! `rl.backend` config field (see [`crate::config::BACKENDS`]).  The
+//! observation layout contract is the element-local one the policy
+//! machinery assumes: `obs_len = n_agents * features`, one action per
+//! agent per step, every env in a pool sharing one `(obs_len, n_agents,
+//! features)` shape so partial batches concatenate.
+
+use super::burgers::BurgersBackend;
+use super::env::{LesEnv, StepOut};
+use crate::config::{ResolvedVariant, RunConfig};
+use crate::solver::dns::Truth;
+use crate::solver::Grid;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One CFD environment behind the solver-agnostic rollout stack: an
+/// episodic control task whose state is a flow field observed
+/// agent-locally and whose action is one scalar per agent per RL step.
+///
+/// Implementors provide the in-place core; `reset`/`observe` are derived.
+pub trait CfdEnv: Send {
+    /// Reset to a fresh initial state (a random truth-pool draw, or the
+    /// held-out test state when `test`) without materializing the
+    /// observation.  Test resets must not consume `rng` draws, so
+    /// deterministic evaluation stays deterministic.
+    fn reset_in_place(&mut self, rng: &mut Rng, test: bool);
+
+    /// Apply one action per agent and advance one RL interval.
+    fn step(&mut self, actions: &[f64]) -> StepOut;
+
+    /// Write the current observation into a caller-owned buffer of
+    /// exactly [`CfdEnv::obs_len`] floats (no allocation).
+    fn observe_into(&mut self, out: &mut [f32]);
+
+    /// Observation length in floats (= `n_agents * features`).
+    fn obs_len(&self) -> usize;
+
+    /// Agents = actions per step (the LES backend: DG elements).
+    fn n_agents(&self) -> usize;
+
+    /// Actions per episode (the RL horizon).
+    fn n_actions(&self) -> usize;
+
+    /// Current energy spectrum (diagnostics / Fig. 5 evaluation).
+    fn spectrum(&self) -> Vec<f64>;
+
+    /// The truth spectrum this env is rewarded against.
+    fn target_spectrum(&self) -> &[f64];
+
+    /// Restrict initial-state draws to one family of the truth pool
+    /// (indices ≡ `family` mod `n_families`); errors if that family is
+    /// empty for this backend's pool.
+    fn set_init_family(&mut self, family: usize, n_families: usize) -> Result<()>;
+
+    /// Reset and return the initial observation (allocating convenience,
+    /// derived from the in-place core).
+    fn reset(&mut self, rng: &mut Rng, test: bool) -> Vec<f32> {
+        self.reset_in_place(rng, test);
+        self.observe()
+    }
+
+    /// Current observation as a fresh vector (allocating convenience,
+    /// derived from the in-place core).
+    fn observe(&mut self) -> Vec<f32> {
+        let mut out = vec![0f32; self.obs_len()];
+        self.observe_into(&mut out);
+        out
+    }
+}
+
+/// Validate an init-family restriction against a truth pool of
+/// `pool_len` states — shared by every backend's
+/// [`CfdEnv::set_init_family`].
+pub(crate) fn validate_init_family(
+    pool_len: usize,
+    family: usize,
+    n_families: usize,
+) -> Result<()> {
+    anyhow::ensure!(n_families >= 1 && family < n_families);
+    anyhow::ensure!(
+        pool_len > family,
+        "init family {family}/{n_families} is empty: truth pool has only {pool_len} states"
+    );
+    Ok(())
+}
+
+/// Draw an initial-state pool index: uniform over the whole pool, or —
+/// with an init family set — uniform over the indices ≡ `family`
+/// (mod `n_families`).  Exactly one RNG draw either way, so the
+/// consumption pattern is family-independent.
+pub(crate) fn draw_pool_index(
+    pool_len: usize,
+    init_family: Option<(usize, usize)>,
+    rng: &mut Rng,
+) -> usize {
+    match init_family {
+        Some((family, m)) => {
+            let count = (pool_len + m - 1 - family) / m; // #indices ≡ family (mod m)
+            family + rng.below(count) * m
+        }
+        None => rng.below(pool_len),
+    }
+}
+
+/// Per-run environment factory: owns the state shared across a pool and
+/// builds one [`CfdEnv`] per resolved scenario variant.
+pub trait CfdBackend: Send + Sync {
+    /// Registry name (`rl.backend` value).
+    fn name(&self) -> &str;
+
+    /// Build one environment for a resolved variant, applying its
+    /// init-family restriction if set.
+    fn make_env(&self, rv: &ResolvedVariant) -> Result<Box<dyn CfdEnv>>;
+}
+
+/// The paper's 3D spectral HIT case as a backend: one shared `Arc<Grid>`
+/// (every worker reuses one FFT plan) plus the filtered-DNS truth
+/// package.
+pub struct LesBackend {
+    truth: Arc<Truth>,
+    grid: Arc<Grid>,
+}
+
+impl LesBackend {
+    /// Build the shared grid for the run's case; envs are cut from it in
+    /// [`CfdBackend::make_env`].
+    pub fn new(cfg: &RunConfig, truth: Arc<Truth>) -> Result<LesBackend> {
+        anyhow::ensure!(
+            truth.n_les == cfg.case.points_per_dir(),
+            "truth built for n={}, case needs n={}",
+            truth.n_les,
+            cfg.case.points_per_dir()
+        );
+        Ok(LesBackend {
+            truth,
+            grid: Arc::new(Grid::new(cfg.case.points_per_dir())),
+        })
+    }
+
+    /// The spectral grid shared by every env this backend builds.
+    pub fn grid(&self) -> Arc<Grid> {
+        self.grid.clone()
+    }
+}
+
+impl CfdBackend for LesBackend {
+    fn name(&self) -> &str {
+        "les"
+    }
+
+    fn make_env(&self, rv: &ResolvedVariant) -> Result<Box<dyn CfdEnv>> {
+        let mut env =
+            LesEnv::with_grid(&rv.case, &rv.solver, self.truth.clone(), self.grid.clone())
+                .with_context(|| format!("les env (variant {})", rv.name))?;
+        if let Some((family, m)) = rv.init_family {
+            env.set_init_family(family, m)
+                .with_context(|| format!("les env (variant {})", rv.name))?;
+        }
+        Ok(Box::new(env))
+    }
+}
+
+/// Resolve `rl.backend` to a backend instance.  The LES backend needs
+/// the caller-generated DNS `truth`; the Burgers backend generates its
+/// own resolved truth from `cfg.burgers` and ignores the argument.
+pub fn backend_from_config(
+    cfg: &RunConfig,
+    truth: Option<Arc<Truth>>,
+) -> Result<Arc<dyn CfdBackend>> {
+    match cfg.rl.backend.as_str() {
+        "les" => {
+            let truth = truth.context("rl.backend = \"les\" needs a DNS truth package")?;
+            Ok(Arc::new(LesBackend::new(cfg, truth)?))
+        }
+        "burgers" => Ok(Arc::new(BurgersBackend::new(&cfg.burgers)?)),
+        other => bail!(
+            "unknown rl.backend {other:?} (expected one of {:?})",
+            crate::config::BACKENDS
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::env::tests::tiny_setup;
+
+    #[test]
+    fn les_backend_shares_one_grid_and_applies_variants() {
+        let (case, scfg, truth) = tiny_setup();
+        let mut cfg = RunConfig::default();
+        cfg.case = case;
+        cfg.solver = scfg;
+        let backend = LesBackend::new(&cfg, truth).unwrap();
+        assert_eq!(backend.name(), "les");
+        let g = backend.grid();
+        let mut env = backend.make_env(&cfg.base_resolved()).unwrap();
+        assert_eq!(env.n_agents(), 8);
+        assert_eq!(env.obs_len(), 8 * 6 * 6 * 6 * 3);
+        let mut rng = Rng::new(3);
+        let obs = env.reset(&mut rng, false);
+        assert_eq!(obs.len(), env.obs_len());
+        assert!(Arc::strong_count(&g) >= 2, "env must reuse the shared grid");
+    }
+
+    #[test]
+    fn registry_covers_every_declared_backend() {
+        // `config::BACKENDS` (what validation accepts) and the registry
+        // match arms must stay in sync: every declared name resolves to
+        // a backend answering to that name.  Adding a name to one side
+        // without the other fails here.
+        let (case, scfg, truth) = tiny_setup();
+        for &name in crate::config::BACKENDS {
+            let mut cfg = RunConfig::default();
+            cfg.rl.backend = name.to_string();
+            cfg.case = case.clone();
+            cfg.solver = scfg.clone();
+            cfg.burgers.points = 32;
+            cfg.burgers.segments = 4;
+            cfg.burgers.k_max = 6;
+            cfg.burgers.truth_states = 2;
+            cfg.burgers.truth_spinup = 0.5;
+            cfg.burgers.truth_interval = 0.2;
+            cfg.validate().unwrap();
+            let b = backend_from_config(&cfg, Some(truth.clone()))
+                .unwrap_or_else(|e| panic!("declared backend {name:?} failed to resolve: {e:#}"));
+            assert_eq!(b.name(), name);
+        }
+        // Unknown names bail at resolution too (validation rejects them
+        // earlier on config paths).
+        let mut cfg = RunConfig::default();
+        cfg.rl.backend = "flexi".to_string();
+        assert!(backend_from_config(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn les_registry_path_requires_truth() {
+        let (case, scfg, truth) = tiny_setup();
+        let mut cfg = RunConfig::default();
+        cfg.case = case;
+        cfg.solver = scfg;
+        assert!(backend_from_config(&cfg, None).is_err(), "les needs truth");
+        let b = backend_from_config(&cfg, Some(truth)).unwrap();
+        assert_eq!(b.name(), "les");
+    }
+
+    #[test]
+    fn mismatched_truth_rejected_at_backend_construction() {
+        let (_case, scfg, truth) = tiny_setup();
+        let mut cfg = RunConfig::default();
+        cfg.solver = scfg; // default case is 24^3, truth is 12^3
+        assert!(LesBackend::new(&cfg, truth).is_err());
+    }
+}

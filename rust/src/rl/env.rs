@@ -7,6 +7,7 @@
 //! `t_end = 5` (50 actions); initial states are drawn from the filtered
 //! DNS pool with one held-out test state.
 
+use super::cfd::CfdEnv;
 use super::reward::reward_from_error;
 use crate::config::{CaseConfig, SolverConfig};
 use crate::solver::dns::{unpack_state, Truth};
@@ -93,55 +94,49 @@ impl LesEnv {
         })
     }
 
+    /// Number of elements (= actions per step; the trait's
+    /// [`CfdEnv::n_agents`]).
+    pub fn n_elems(&self) -> usize {
+        self.solver.emap.n_elems()
+    }
+}
+
+/// The LES episode as a [`CfdEnv`] backend: agents are DG elements, the
+/// allocating `reset`/`observe` come from the trait's defaults over the
+/// in-place core below.
+impl CfdEnv for LesEnv {
     /// Restrict initial-state draws to one family of the truth pool
     /// (indices ≡ `family` mod `n_families`).  The family must be
     /// non-empty for this truth's pool size.
-    pub fn set_init_family(&mut self, family: usize, n_families: usize) -> Result<()> {
-        anyhow::ensure!(n_families >= 1 && family < n_families);
-        anyhow::ensure!(
-            self.truth.states.len() > family,
-            "init family {family}/{n_families} is empty: truth pool has only {} states",
-            self.truth.states.len()
-        );
+    fn set_init_family(&mut self, family: usize, n_families: usize) -> Result<()> {
+        super::cfd::validate_init_family(self.truth.states.len(), family, n_families)?;
         self.init_family = Some((family, n_families));
         Ok(())
     }
 
-    /// Number of elements (= actions per step).
-    pub fn n_elems(&self) -> usize {
-        self.solver.emap.n_elems()
-    }
-
     /// Actions per episode.
-    pub fn n_actions(&self) -> usize {
+    fn n_actions(&self) -> usize {
         self.n_actions
     }
 
-    /// Reset to a random pool state (or the held-out test state); returns
-    /// the initial observation.  With an init family set, the draw is
-    /// restricted to that family's pool indices (one RNG draw either way,
-    /// so the consumption pattern is family-independent).
-    pub fn reset(&mut self, rng: &mut Rng, test: bool) -> Vec<f32> {
-        self.reset_in_place(rng, test);
-        self.solver.observations()
+    /// Agents = elements.
+    fn n_agents(&self) -> usize {
+        self.n_elems()
     }
 
-    /// [`LesEnv::reset`] without materializing the observation — the env
-    /// workers reset in place and then [`LesEnv::observe_into`] a reusable
-    /// buffer, so a steady-state episode start allocates nothing.  The RNG
-    /// consumption is identical to `reset`.
-    pub fn reset_in_place(&mut self, rng: &mut Rng, test: bool) {
+    /// Reset to a random pool state (or the held-out test state) without
+    /// materializing the observation — the env workers reset in place and
+    /// then [`CfdEnv::observe_into`] a reusable buffer, so a steady-state
+    /// episode start allocates nothing.  With an init family set, the
+    /// draw is restricted to that family's pool indices (one RNG draw
+    /// either way, so the consumption pattern is family-independent; test
+    /// resets consume none).
+    fn reset_in_place(&mut self, rng: &mut Rng, test: bool) {
         let flat = if test {
             &self.truth.test_state
         } else {
-            let len = self.truth.states.len();
-            let idx = match self.init_family {
-                Some((family, m)) => {
-                    let count = (len + m - 1 - family) / m; // #indices ≡ family (mod m)
-                    family + rng.below(count) * m
-                }
-                None => rng.below(len),
-            };
+            let idx =
+                super::cfd::draw_pool_index(self.truth.states.len(), self.init_family, rng);
             &self.truth.states[idx]
         };
         let state = unpack_state(&self.solver.grid, flat);
@@ -153,7 +148,7 @@ impl LesEnv {
     }
 
     /// Apply per-element Cs actions and advance one RL interval.
-    pub fn step(&mut self, cs: &[f64]) -> StepOut {
+    fn step(&mut self, cs: &[f64]) -> StepOut {
         self.solver.set_cs(cs);
         self.solver.advance(self.dt_rl);
         self.step_idx += 1;
@@ -166,35 +161,30 @@ impl LesEnv {
         }
     }
 
-    /// Current observation.
-    pub fn observe(&mut self) -> Vec<f32> {
-        self.solver.observations()
-    }
-
     /// Current observation into a caller-owned buffer of
-    /// [`LesEnv::obs_len`] floats (no allocation).
-    pub fn observe_into(&mut self, out: &mut [f32]) {
+    /// [`CfdEnv::obs_len`] floats (no allocation).
+    fn observe_into(&mut self, out: &mut [f32]) {
         self.solver.observations_into(out);
     }
 
     /// Observation length: `n_elems * (N+1)^3 * 3`.
-    pub fn obs_len(&self) -> usize {
+    fn obs_len(&self) -> usize {
         self.solver.obs_len()
     }
 
     /// Current LES energy spectrum.
-    pub fn spectrum(&self) -> Vec<f64> {
+    fn spectrum(&self) -> Vec<f64> {
         self.solver.spectrum()
     }
 
     /// The DNS mean spectrum this env is rewarded against.
-    pub fn target_spectrum(&self) -> &[f64] {
+    fn target_spectrum(&self) -> &[f64] {
         &self.truth.mean_spectrum
     }
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::config::presets;
     use crate::solver::dns::{generate, TruthParams};

@@ -1,12 +1,19 @@
-//! RL machinery (DESIGN.md S11): the LES environment, the Gaussian policy
-//! head, reward shaping (Eqs. 4–5), and trajectory/advantage processing
-//! for the clipping-PPO algorithm of paper §5.3.
+//! RL machinery (DESIGN.md S11): the solver-agnostic environment backend
+//! layer ([`cfd`]), its two in-tree backends (the paper's 3D spectral
+//! LES in [`env`], the 1D stochastic-Burgers testbed in [`burgers`]),
+//! the Gaussian policy head, reward shaping (Eqs. 4–5), and
+//! trajectory/advantage processing for the clipping-PPO algorithm of
+//! paper §5.3.
 
+pub mod burgers;
+pub mod cfd;
 pub mod env;
 pub mod gaussian;
 pub mod reward;
 pub mod trajectory;
 
+pub use burgers::{BurgersBackend, BurgersEnv, BurgersTruth};
+pub use cfd::{backend_from_config, CfdBackend, CfdEnv, LesBackend};
 pub use env::{LesEnv, StepOut};
 pub use reward::{max_return, reward_from_error};
 pub use trajectory::{flatten, Dataset, Episode, StepRecord};

@@ -1,0 +1,221 @@
+//! Backend conformance suite: every in-tree `CfdEnv` backend must
+//! satisfy the contract the solver-agnostic rollout stack relies on.
+//! Each property runs against **both** registered backends (`les`,
+//! `burgers`) through the same registry path the env pool uses:
+//!
+//! * fixed-RNG determinism (same seed -> bitwise-identical episodes),
+//!   and RNG-independent test-state resets;
+//! * `obs_len` == the exact number of floats `observe_into` fills;
+//! * done-flag monotonicity: false for every step before the horizon,
+//!   true exactly at it;
+//! * reward finite and inside the Eq. (5) range at every step;
+//! * the trait-provided allocating `reset`/`observe` defaults agree
+//!   with the in-place core they derive from.
+
+use relexi::config::{BurgersConfig, CaseConfig, RunConfig};
+use relexi::rl::{backend_from_config, CfdBackend, CfdEnv};
+use relexi::solver::dns::{generate, TruthParams};
+use relexi::util::Rng;
+use std::sync::Arc;
+
+/// Build both backends on small, fast configurations.  Returns
+/// `(run config, backend)` pairs so tests can resolve variants.
+fn all_backends() -> Vec<(RunConfig, Arc<dyn CfdBackend>)> {
+    // LES: the 12^3 / 2^3-element tiny case used across the suite.
+    let mut les = RunConfig::default();
+    les.case = CaseConfig {
+        name: "tiny".into(),
+        n: 5,
+        elems_per_dir: 2,
+        k_max: 3,
+        alpha: 0.4,
+    };
+    les.solver.t_end = 0.3;
+    les.solver.dns_points = 24;
+    let truth = Arc::new(generate(
+        &TruthParams {
+            n_dns: 24,
+            n_les: 12,
+            nu: les.solver.nu,
+            ke_target: les.solver.ke_target,
+            spinup_time: 0.5,
+            n_states: 3,
+            sample_interval: 0.2,
+            seed: 91,
+        },
+        |_, _| {},
+    ));
+    let les_backend = backend_from_config(&les, Some(truth)).unwrap();
+
+    // Burgers: 48 points, 4 segments, 3 actions.
+    let mut bur = RunConfig::default();
+    bur.rl.backend = "burgers".to_string();
+    bur.burgers = BurgersConfig {
+        points: 48,
+        segments: 4,
+        k_max: 6,
+        t_end: 0.3,
+        truth_states: 3,
+        truth_spinup: 0.6,
+        truth_interval: 0.2,
+        ..BurgersConfig::default()
+    };
+    let bur_backend = backend_from_config(&bur, None).unwrap();
+
+    vec![(les, les_backend), (bur, bur_backend)]
+}
+
+fn make_env(cfg: &RunConfig, backend: &Arc<dyn CfdBackend>) -> Box<dyn CfdEnv> {
+    backend.make_env(&cfg.base_resolved()).unwrap()
+}
+
+#[test]
+fn shapes_are_consistent_and_observe_into_fills_obs_len() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        let mut env = make_env(&cfg, &backend);
+        assert!(env.n_agents() >= 1, "{name}");
+        assert!(env.n_actions() >= 1, "{name}");
+        assert_eq!(
+            env.obs_len() % env.n_agents(),
+            0,
+            "{name}: obs must split evenly over agents"
+        );
+        let mut rng = Rng::new(12);
+        env.reset_in_place(&mut rng, false);
+        // Every float of an obs_len-sized buffer is overwritten.
+        let mut buf = vec![f32::NAN; env.obs_len()];
+        env.observe_into(&mut buf);
+        assert!(
+            buf.iter().all(|v| v.is_finite()),
+            "{name}: observe_into must fill all {} floats",
+            env.obs_len()
+        );
+        // The spectrum and its target are non-empty and finite.
+        let spec = env.spectrum();
+        assert!(!spec.is_empty() && spec.iter().all(|e| e.is_finite()), "{name}");
+        let target = env.target_spectrum();
+        assert!(!target.is_empty() && target.iter().all(|e| e.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn fixed_rng_episodes_are_bitwise_deterministic() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        let mut e1 = make_env(&cfg, &backend);
+        let mut e2 = make_env(&cfg, &backend);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        assert_eq!(e1.reset(&mut r1, false), e2.reset(&mut r2, false), "{name}");
+        let cs = vec![0.15; e1.n_agents()];
+        loop {
+            let (a, b) = (e1.step(&cs), e2.step(&cs));
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits(), "{name}");
+            assert_eq!(a.spec_error.to_bits(), b.spec_error.to_bits(), "{name}");
+            assert_eq!(a.done, b.done, "{name}");
+            assert_eq!(e1.observe(), e2.observe(), "{name}");
+            if a.done {
+                break;
+            }
+        }
+        // Identical RNG consumption across instances.
+        assert_eq!(r1.next_u64(), r2.next_u64(), "{name}");
+    }
+}
+
+#[test]
+fn test_state_reset_is_rng_independent() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        let mut e1 = make_env(&cfg, &backend);
+        let mut e2 = make_env(&cfg, &backend);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(424_242);
+        let o1 = e1.reset(&mut r1, true);
+        let o2 = e2.reset(&mut r2, true);
+        assert_eq!(o1, o2, "{name}: test state must not depend on the RNG");
+        // And the episode stays identical (stochastic backends must pin
+        // their internal noise for test episodes).
+        let cs = vec![0.1; e1.n_agents()];
+        let (a, b) = (e1.step(&cs), e2.step(&cs));
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits(), "{name}");
+        // No caller draws consumed: both RNGs still at their seed state.
+        assert_eq!(Rng::new(1).next_u64(), r1.next_u64(), "{name}");
+    }
+}
+
+#[test]
+fn done_flag_is_monotone_and_rewards_stay_finite() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        let mut env = make_env(&cfg, &backend);
+        let mut rng = Rng::new(5);
+        env.reset_in_place(&mut rng, false);
+        let cs = vec![0.2; env.n_agents()];
+        let horizon = env.n_actions();
+        for t in 0..horizon {
+            let out = env.step(&cs);
+            assert!(
+                out.reward.is_finite() && out.reward > -1.0 && out.reward <= 1.0,
+                "{name}: reward {} at step {t}",
+                out.reward
+            );
+            assert!(out.spec_error.is_finite() && out.spec_error >= 0.0, "{name}");
+            assert_eq!(
+                out.done,
+                t + 1 == horizon,
+                "{name}: done must flip exactly at the horizon (step {t})"
+            );
+        }
+        // A reset rearms the episode.
+        env.reset_in_place(&mut rng, false);
+        assert!(!env.step(&cs).done || horizon == 1, "{name}");
+    }
+}
+
+#[test]
+fn trait_default_reset_and_observe_match_the_in_place_core() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        let mut e1 = make_env(&cfg, &backend);
+        let mut e2 = make_env(&cfg, &backend);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = e1.reset(&mut r1, false);
+        e2.reset_in_place(&mut r2, false);
+        let mut b = vec![0f32; e2.obs_len()];
+        assert_eq!(a.len(), e2.obs_len(), "{name}");
+        e2.observe_into(&mut b);
+        assert_eq!(a, b, "{name}: reset == reset_in_place + observe_into");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "{name}: same RNG consumption");
+
+        let cs = vec![0.1; e1.n_agents()];
+        e1.step(&cs);
+        e2.step(&cs);
+        e2.observe_into(&mut b);
+        assert_eq!(e1.observe(), b, "{name}: observe == observe_into");
+    }
+}
+
+#[test]
+fn init_families_partition_the_pool() {
+    for (cfg, backend) in all_backends() {
+        let name = backend.name().to_string();
+        // All tiny truths have 3 states: 3 families of one state each.
+        let mut rng = Rng::new(7);
+        let mut per_family = Vec::new();
+        for fam in 0..3 {
+            let mut env = make_env(&cfg, &backend);
+            env.set_init_family(fam, 3).unwrap();
+            let a = env.reset(&mut rng, false);
+            let b = env.reset(&mut rng, false);
+            assert_eq!(a, b, "{name}: family {fam} has one state");
+            per_family.push(a);
+        }
+        assert_ne!(per_family[0], per_family[1], "{name}");
+        assert_ne!(per_family[1], per_family[2], "{name}");
+        let mut env = make_env(&cfg, &backend);
+        assert!(env.set_init_family(3, 4).is_err(), "{name}: empty family");
+    }
+}

@@ -16,7 +16,7 @@
 //! * the zero-copy exchange allocates no tensor buffers after the warm-up
 //!   iteration (`PoolCounters::exchange_allocs`, the CI allocation gate).
 
-use relexi::config::{CaseConfig, EnvVariant, RunConfig};
+use relexi::config::{BurgersConfig, CaseConfig, EnvVariant, RunConfig};
 use relexi::coordinator::EnvPool;
 use relexi::orchestrator::{Orchestrator, Protocol};
 use relexi::rl::{flatten, Episode};
@@ -249,6 +249,135 @@ fn steady_state_exchange_allocates_nothing() {
             "iteration {it} allocated exchange buffers in steady state: {allocs_after:?}"
         );
     }
+}
+
+#[test]
+fn collection_wave_subscription_ops_are_linear() {
+    // The PR-4 acceptance counter: the event-driven collector holds one
+    // persistent store subscription per sampling phase and applies only
+    // single-key deltas per event, so a steady-state iteration over E
+    // envs and T steps performs O(E*T) registry ops — O(E) per wave —
+    // where the per-event rebuild it replaced performed O(E) ops per
+    // EVENT (O(E^2) per wave).
+    let cfg = tiny_cfg(4);
+    let (n_envs, steps) = (cfg.rl.n_envs, 3usize);
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::new(cfg, tiny_truth(19), &orch).unwrap();
+    let mut rng = Rng::new(6);
+    // Warm-up iteration (subscription behavior is identical, but keep
+    // the measured iteration clean of any one-time effects).
+    pool.collect_with(&orch, &Protocol::new("w0"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    orch.clear();
+    let before = orch.stats().sub_ops;
+    pool.collect_with(&orch, &Protocol::new("w1"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    orch.clear();
+    let delta = orch.stats().sub_ops - before;
+    // Exact budget: 3E setup adds + per (env, step) {state remove,
+    // state add, reward add, reward remove} + 2E done retires + E fail
+    // deregistrations on drop = 4ET + 6E.  Assert a small constant
+    // multiple of E*(T+2) so bookkeeping tweaks don't break the test,
+    // while any O(E^2)-per-wave regression trips it immediately.
+    let linear_budget = (8 * n_envs * (steps + 2)) as u64;
+    assert!(delta >= n_envs as u64, "subscription unused? {delta} ops");
+    assert!(
+        delta <= linear_budget,
+        "collection wave not O(E): {delta} registry ops for {n_envs} envs x {steps} steps \
+         (budget {linear_budget})"
+    );
+}
+
+#[test]
+fn smoke_burgers_training_iteration_64_envs() {
+    // The Burgers backend's CI smoke: a full event-driven sampling
+    // iteration with 64 envs — a scale the 3D LES cannot reach in CI —
+    // across three scenario variants with disjoint initial-state
+    // families, then the trajectory pipeline, with per-variant metrics
+    // and the O(E) subscription-ops assertion at pool scale.
+    let mut cfg = RunConfig::default();
+    cfg.rl.backend = "burgers".to_string();
+    cfg.burgers = BurgersConfig {
+        points: 48,
+        segments: 4,
+        k_max: 6,
+        t_end: 0.5, // 5 actions at the base horizon
+        truth_states: 4,
+        truth_spinup: 1.0,
+        truth_interval: 0.25,
+        ..BurgersConfig::default()
+    };
+    cfg.rl.n_envs = 64;
+    cfg.rl.min_batch = 16; // genuinely event-driven batching
+    cfg.rl.split_init_pool = true;
+    cfg.rl.variants = vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "short".into(),
+            t_end_scale: 0.6, // 3 actions: exercises early-done at scale
+            ..EnvVariant::default()
+        },
+        EnvVariant {
+            name: "visc".into(),
+            nu_scale: 1.5,
+            alpha: Some(0.8),
+            ..EnvVariant::default()
+        },
+    ];
+
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
+    let c0 = pool.counters();
+    assert_eq!(c0.threads_spawned, 64);
+    assert_eq!(c0.envs_built, 64);
+    assert_eq!(c0.grids_built, 1, "one shared resolved-truth context");
+
+    let mut rng = Rng::new(2);
+    let before = orch.stats().sub_ops;
+    let r = pool
+        .collect_with(&orch, &Protocol::new("bsmoke"), stub_policy, &mut rng, false, 16)
+        .unwrap();
+    let delta = orch.stats().sub_ops - before;
+    orch.clear();
+
+    assert_eq!(r.episodes.len(), 64);
+    let mut variant_returns = vec![(0.0f64, 0usize); 3];
+    for ep in &r.episodes {
+        let want_steps = match ep.variant {
+            1 => 3, // short horizon
+            _ => 5,
+        };
+        assert_eq!(ep.steps.len(), want_steps, "variant {}", ep.variant);
+        for s in &ep.steps {
+            assert!(s.reward.is_finite() && s.reward > -1.0 && s.reward <= 1.0);
+            assert!(s.act.iter().all(|a| a.is_finite()));
+            assert_eq!(s.act.len(), 4, "one action per segment");
+        }
+        let (sum, n) = &mut variant_returns[ep.variant];
+        *sum += ep.total_reward();
+        *n += 1;
+    }
+    // Per-variant metrics: every family sampled (round-robin over 64
+    // envs), every mean finite.
+    for (v, (sum, n)) in variant_returns.iter().enumerate() {
+        assert!(*n >= 21, "variant {v} starved: {n} episodes");
+        assert!((sum / *n as f64).is_finite());
+    }
+
+    // O(E) per wave at pool scale: linear budget holds, and the old
+    // per-event-rebuild cost (>= E ops per event, E*T events) is
+    // decisively excluded.
+    let (e, t) = (64u64, 5u64);
+    assert!(delta <= 8 * e * (t + 2), "not O(E): {delta} ops");
+    assert!(delta < e * e * t, "quadratic-regime op count: {delta}");
+
+    // The flattened dataset feeds the PPO update: one row per
+    // agent-sample, features = points / segments.
+    let ds = flatten(&r.episodes, 48 / 4, 0.995, 1.0);
+    let total_steps: usize = r.episodes.iter().map(|e| e.steps.len()).sum();
+    assert_eq!(ds.len(), total_steps * 4);
+    let mb = ds.minibatch_indices(64, &mut rng);
+    assert!(!mb.is_empty());
 }
 
 #[test]

@@ -171,7 +171,7 @@ fn protocol_keys_unique_across_space() {
         for step in 0..64 {
             assert!(seen.insert(p.state_key(env, step)));
             assert!(seen.insert(p.action_key(env, step)));
-            assert!(seen.insert(p.error_key(env, step)));
+            assert!(seen.insert(p.reward_key(env, step)));
         }
         assert!(seen.insert(p.done_key(env)));
         assert!(seen.insert(p.fail_key(env)));
