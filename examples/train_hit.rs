@@ -19,6 +19,7 @@
 use anyhow::{Context, Result};
 use relexi::config::RunConfig;
 use relexi::coordinator::{eval_baseline, eval_policy, MetricsLog, TrainingLoop};
+use relexi::runtime::Trainer; // `lp.trainer` is a `Box<dyn Trainer>`
 use relexi::solver::dns::Truth;
 use relexi::util::bench::Table;
 use relexi::util::cli::Args;

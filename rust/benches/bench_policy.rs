@@ -1,0 +1,143 @@
+//! Bench — the native policy/trainer subsystem (PR 5): GEMM micro-kernel
+//! throughput, native `forward` latency across batch sizes, and the
+//! native `train_step` (forward + backprop + Adam) across minibatch
+//! sizes.  The forward series uses the LES element shape (648 features)
+//! so the rows are directly comparable with the compiled-policy series
+//! in `bench_training`; a Burgers-shaped (12-feature) row shows the
+//! small-scenario regime the CI learning smoke runs in.
+//!
+//! Results are written to `BENCH_policy.json` (`Bench::write_json`) and
+//! uploaded next to the other bench artifacts.  `BENCH_SMOKE=1` shrinks
+//! the workload for CI.
+
+use relexi::runtime::native::gemm;
+use relexi::runtime::{Minibatch, NativeSpec, NativeTrainer};
+use relexi::util::bench::{fmt_duration, Bench, Table};
+use relexi::util::Rng;
+use std::time::Duration;
+
+fn spec(features: usize, hidden: Vec<usize>, minibatch: usize) -> NativeSpec {
+    NativeSpec {
+        features,
+        hidden,
+        minibatch,
+        lr: 1e-4,
+        clip_eps: 0.2,
+        vf_coef: 0.5,
+        ent_coef: 0.0,
+        log_std_init: (0.05f64).ln(),
+        seed: 2024,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut bench = Bench::new("policy").with_target(Duration::from_millis(if smoke {
+        60
+    } else {
+        400
+    }));
+
+    // --- GEMM micro: the kernels the MLP forward/backward run on -----------
+    let mut rng = Rng::new(5);
+    let mut table = Table::new(&["kernel", "m x k x n", "latency", "GFLOP/s"]);
+    // Forward layer (batch x features -> hidden), backward dW, backward dX.
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        ("nn (fwd z=x*w)", 256, 648, 64),
+        ("nn (fwd hidden)", 256, 64, 64),
+        ("tn (bwd dW)", 648, 256, 64),
+        ("nt (bwd dX)", 256, 64, 648),
+    ];
+    for &(label, m, k, n) in shapes {
+        let a_rows = if label.starts_with("tn") { k * m } else { m * k };
+        let b_rows = if label.starts_with("nt") { n * k } else { k * n };
+        let a: Vec<f32> = (0..a_rows).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..b_rows).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0f32; m * n];
+        let meas = bench.run(&format!("gemm {label} {m}x{k}x{n}"), || {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            match &label[..2] {
+                "tn" => gemm::gemm_tn(m, k, n, &a, &b, &mut c),
+                "nt" => gemm::gemm_nt(m, k, n, &a, &b, &mut c),
+                _ => gemm::gemm_nn(m, k, n, &a, &b, &mut c),
+            }
+            std::hint::black_box(&c);
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        table.row(vec![
+            label.to_string(),
+            format!("{m}x{k}x{n}"),
+            fmt_duration(meas.mean_s),
+            format!("{:.2}", flops / meas.mean_s / 1e9),
+        ]);
+    }
+    table.print("GEMM micro-kernels (f32, cache-blocked)");
+
+    // --- native forward latency across batch sizes --------------------------
+    let mut fwd = Table::new(&["shape", "batch (agents)", "latency", "us/agent"]);
+    let batches: &[usize] = if smoke { &[64, 256] } else { &[64, 256, 1024, 4096] };
+    for (shape_label, features, hidden) in [
+        ("les-648f", 648usize, vec![64usize, 64]),
+        ("burgers-12f", 12, vec![32]),
+    ] {
+        let sp = spec(features, hidden, 256);
+        let trainer = NativeTrainer::new(sp.clone());
+        let policy = relexi::runtime::NativePolicy::new(sp);
+        for &b in batches {
+            let obs: Vec<f32> = (0..b * features).map(|_| rng.normal() as f32).collect();
+            let m = bench.run(&format!("forward {shape_label} b={b}"), || {
+                std::hint::black_box(policy.forward(trainer.theta(), &obs, b).unwrap());
+            });
+            fwd.row(vec![
+                shape_label.to_string(),
+                b.to_string(),
+                fmt_duration(m.mean_s),
+                format!("{:.2}", m.mean_s * 1e6 / b as f64),
+            ]);
+        }
+    }
+    fwd.print("Native policy forward (MLP via blocked GEMM)");
+
+    // --- native train step across minibatch sizes ----------------------------
+    let mut tr = Table::new(&["minibatch", "latency", "us/sample"]);
+    let mbs: &[usize] = if smoke { &[256] } else { &[256, 1024, 4096] };
+    for &mb_size in mbs {
+        let sp = spec(648, vec![64, 64], mb_size);
+        let mut trainer = NativeTrainer::new(sp);
+        let obs: Vec<f32> = (0..mb_size * 648).map(|_| rng.normal() as f32).collect();
+        let act: Vec<f32> = (0..mb_size).map(|_| rng.uniform_f32() * 0.5).collect();
+        let logp = vec![-1.0f32; mb_size];
+        let adv: Vec<f32> = (0..mb_size).map(|_| rng.normal() as f32).collect();
+        let ret: Vec<f32> = (0..mb_size).map(|_| rng.normal() as f32).collect();
+        let m = bench.run(&format!("train_step b={mb_size} (loss+grad+Adam)"), || {
+            std::hint::black_box(
+                trainer
+                    .train_minibatch(&Minibatch {
+                        obs: &obs,
+                        act: &act,
+                        old_logp: &logp,
+                        adv: &adv,
+                        ret: &ret,
+                    })
+                    .unwrap(),
+            );
+        });
+        tr.row(vec![
+            mb_size.to_string(),
+            fmt_duration(m.mean_s),
+            format!("{:.2}", m.mean_s * 1e6 / mb_size as f64),
+        ]);
+    }
+    tr.print("Native PPO train step (backprop + Adam, les-648f net)");
+    println!(
+        "Expected shape: forward/train cost linear in batch once past\n\
+         per-call overhead; GEMM rows bound what the MLP can reach.  The\n\
+         compiled-XLA forward series lives in bench_training for a\n\
+         head-to-head at the same 648-feature shape."
+    );
+
+    bench
+        .write_json("BENCH_policy.json")
+        .expect("write BENCH_policy.json");
+    println!("wrote BENCH_policy.json");
+}

@@ -1,5 +1,7 @@
-//! Typed run configuration: Table-1 case presets, solver, RL, and HPC
-//! sections, loadable from a TOML-subset file with CLI overlays.
+//! Typed run configuration: Table-1 case presets, solver, RL,
+//! policy/trainer runtime, and HPC sections, loadable from a TOML-subset
+//! file with CLI overlays (see `examples/config.toml` for a documented
+//! reference of every section).
 
 pub mod presets;
 pub mod toml;
@@ -41,6 +43,14 @@ impl CaseConfig {
     /// Points per element and direction (= N + 1).
     pub fn elem_points(&self) -> usize {
         self.n + 1
+    }
+
+    /// Element-local observation width: `(N+1)^3` solution points times 3
+    /// velocity components — what `LesEnv::obs_len` produces per agent
+    /// and what an LES-shaped policy (compiled artifact or native MLP)
+    /// must be sized for.
+    pub fn elem_features(&self) -> usize {
+        self.elem_points().pow(3) * 3
     }
 }
 
@@ -216,6 +226,84 @@ pub struct ResolvedVariant {
 /// environment layer; see `crate::rl::cfd` for the registry).
 pub const BACKENDS: &[&str] = &["les", "burgers"];
 
+/// Policy/trainer runtime backends selectable via `runtime.backend`
+/// (see `crate::runtime::api` for the registry): `"xla"` executes the
+/// pre-compiled PJRT artifacts, `"native"` runs the in-process
+/// MLP + PPO subsystem with zero artifacts.
+pub const RUNTIME_BACKENDS: &[&str] = &["xla", "native"];
+
+/// The policy/trainer runtime layer (`[runtime]` section): which ML
+/// execution backend serves `policy_fwd`/`train_step`, and — for the
+/// native backend — the MLP architecture and PPO/Adam hyperparameters
+/// (the XLA path bakes these into the artifacts at lowering time).
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// `"xla"` (compiled artifacts) or `"native"` (in-process MLP+PPO).
+    /// See [`RUNTIME_BACKENDS`].
+    pub backend: String,
+    /// Native MLP hidden-layer widths (tanh activations).
+    pub hidden: Vec<usize>,
+    /// Native Adam learning rate (paper §5.3: 1e-4).
+    pub lr: f64,
+    /// Native PPO clipping radius (paper §5.3: 0.2).
+    pub clip_eps: f64,
+    /// Native value-loss coefficient.
+    pub vf_coef: f64,
+    /// Native entropy-bonus coefficient (paper §5.3: 0).
+    pub ent_coef: f64,
+    /// Native initial global log standard deviation.
+    pub log_std_init: f64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            backend: "xla".to_string(),
+            hidden: vec![64, 64],
+            lr: 1e-4,
+            clip_eps: 0.2,
+            vf_coef: 0.5,
+            ent_coef: 0.0,
+            // sigma = 0.05, the artifact init (python/compile/model.py).
+            log_std_init: -2.995_732_273_553_991, // ln(0.05)
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Section-local sanity checks — the single source of truth for what
+    /// a runnable `[runtime]` section looks like, shared by
+    /// [`RunConfig::validate`] and `runtime::NativeSpec::from_config`
+    /// (which also serves callers that never went through a full config).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            RUNTIME_BACKENDS.contains(&self.backend.as_str()),
+            "unknown runtime.backend {:?} (expected one of {RUNTIME_BACKENDS:?})",
+            self.backend
+        );
+        anyhow::ensure!(
+            !self.hidden.is_empty(),
+            "runtime.hidden must name at least one hidden layer"
+        );
+        for (i, &h) in self.hidden.iter().enumerate() {
+            anyhow::ensure!(
+                (1..=65_536).contains(&h),
+                "runtime.hidden[{i}] = {h} outside [1, 65536] (negative or absurd width?)"
+            );
+        }
+        anyhow::ensure!(self.lr > 0.0, "runtime.lr must be positive");
+        anyhow::ensure!(
+            self.clip_eps > 0.0 && self.clip_eps < 1.0,
+            "runtime.clip_eps must lie in (0, 1)"
+        );
+        anyhow::ensure!(
+            self.vf_coef >= 0.0 && self.ent_coef >= 0.0,
+            "runtime.vf_coef / runtime.ent_coef must be non-negative"
+        );
+        Ok(())
+    }
+}
+
 /// PPO / training-loop parameters (paper §5.3).
 #[derive(Debug, Clone)]
 pub struct RlConfig {
@@ -315,6 +403,7 @@ pub struct RunConfig {
     pub solver: SolverConfig,
     pub burgers: BurgersConfig,
     pub rl: RlConfig,
+    pub runtime: RuntimeConfig,
     pub hpc: HpcConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
@@ -329,6 +418,7 @@ impl Default for RunConfig {
             solver: SolverConfig::default(),
             burgers: BurgersConfig::default(),
             rl: RlConfig::default(),
+            runtime: RuntimeConfig::default(),
             hpc: HpcConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs/out".to_string(),
@@ -444,6 +534,22 @@ impl RunConfig {
                 .collect();
         }
 
+        cfg.runtime.backend = t.str_or("runtime.backend", &cfg.runtime.backend)?;
+        if let Some(v) = t.get("runtime.hidden") {
+            cfg.runtime.hidden = v
+                .as_int_vec()
+                .context("runtime.hidden")?
+                .into_iter()
+                .map(|h| h as usize)
+                .collect();
+        }
+        cfg.runtime.lr = t.float_or("runtime.lr", cfg.runtime.lr)?;
+        cfg.runtime.clip_eps = t.float_or("runtime.clip_eps", cfg.runtime.clip_eps)?;
+        cfg.runtime.vf_coef = t.float_or("runtime.vf_coef", cfg.runtime.vf_coef)?;
+        cfg.runtime.ent_coef = t.float_or("runtime.ent_coef", cfg.runtime.ent_coef)?;
+        cfg.runtime.log_std_init =
+            t.float_or("runtime.log_std_init", cfg.runtime.log_std_init)?;
+
         cfg.hpc.worker_nodes =
             t.int_or("hpc.worker_nodes", cfg.hpc.worker_nodes as i64)? as usize;
         cfg.hpc.cores_per_node =
@@ -519,11 +625,18 @@ impl RunConfig {
             anyhow::ensure!(b.truth_states >= 1, "burgers.truth_states must be >= 1");
             anyhow::ensure!(b.truth_interval > 0.0);
         }
-        anyhow::ensure!(
-            self.case.n == 5 || self.case.n == 7,
-            "policy artifacts exist for N in {{5, 7}}, got N={}",
-            self.case.n
-        );
+        self.runtime.validate()?;
+        // The compiled artifacts only exist for the paper's two element
+        // shapes; the native runtime sizes itself from the env pool and
+        // carries no such constraint.
+        if self.runtime.backend == "xla" {
+            anyhow::ensure!(
+                self.case.n == 5 || self.case.n == 7,
+                "policy artifacts exist for N in {{5, 7}}, got N={} \
+                 (runtime.backend = \"native\" lifts this constraint)",
+                self.case.n
+            );
+        }
         anyhow::ensure!(self.case.elems_per_dir >= 1, "need at least one element");
         anyhow::ensure!(
             self.case.k_max <= self.case.points_per_dir() / 2,
@@ -801,6 +914,67 @@ mod tests {
         // The raw knobs ride along on the resolved variant.
         assert_eq!(c.variant_for(0).variant.k_max, Some(20));
         assert_eq!(c.base_resolved().variant, EnvVariant::default());
+    }
+
+    #[test]
+    fn example_config_parses_and_validates() {
+        // The documented example config must stay loadable (it is the
+        // reference for every section, including `[runtime]`).
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/config.toml");
+        let doc = Toml::load(&path).unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.runtime.backend, "xla");
+        assert_eq!(c.runtime.hidden, vec![64, 64]);
+        assert_eq!(c.runtime.lr, 1e-4);
+        assert_eq!(c.rl.n_envs, 16);
+        assert_eq!(c.case.name, "24dof");
+    }
+
+    #[test]
+    fn runtime_section_parses_and_defaults_to_xla() {
+        let base = RunConfig::default();
+        assert_eq!(base.runtime.backend, "xla");
+        assert_eq!(base.runtime.hidden, vec![64, 64]);
+        let doc = Toml::parse(
+            "[runtime]\nbackend = \"native\"\nhidden = [32, 16]\nlr = 0.003\nclip_eps = 0.1\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.runtime.backend, "native");
+        assert_eq!(c.runtime.hidden, vec![32, 16]);
+        assert_eq!(c.runtime.lr, 0.003);
+        assert_eq!(c.runtime.clip_eps, 0.1);
+        // Untouched knobs keep their defaults.
+        assert_eq!(c.runtime.vf_coef, 0.5);
+        assert!((c.runtime.log_std_init - (0.05f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_runtime_section_rejected() {
+        for bad in [
+            "[runtime]\nbackend = \"tpu\"\n",
+            "[runtime]\nbackend = \"native\"\nhidden = []\n",
+            "[runtime]\nhidden = [-3]\n",
+            "[runtime]\nlr = 0\n",
+            "[runtime]\nclip_eps = 1.5\n",
+            "[runtime]\nvf_coef = -0.1\n",
+        ] {
+            let doc = Toml::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn native_runtime_lifts_the_artifact_shape_constraint() {
+        // N = 6 has no compiled artifacts: rejected under xla, fine under
+        // the shape-agnostic native runtime.
+        let doc = Toml::parse("[case]\nn = 6\nk_max = 3\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[case]\nn = 6\nk_max = 3\n[runtime]\nbackend = \"native\"\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.case.n, 6);
     }
 
     #[test]

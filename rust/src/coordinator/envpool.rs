@@ -52,7 +52,7 @@
 use crate::config::RunConfig;
 use crate::orchestrator::{Client, EnvKeys, Key, Orchestrator, Protocol, TensorPool, Value};
 use crate::rl::{backend_from_config, gaussian, CfdBackend, CfdEnv, Episode, StepRecord};
-use crate::runtime::{PolicyOut, PolicyRuntime};
+use crate::runtime::{Policy, PolicyOut};
 use crate::solver::dns::Truth;
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
@@ -296,13 +296,14 @@ impl EnvPool {
 
     /// Run one sampling phase under the current policy (`theta`),
     /// event-driven with the configured `rl.min_batch` (0 = full batch =
-    /// synchronous PPO).  `run_tag` via `proto` namespaces the keys; `rng`
-    /// drives initial-state draws and action sampling.
+    /// synchronous PPO).  The policy is any [`Policy`] runtime backend
+    /// (compiled XLA or native).  `run_tag` via `proto` namespaces the
+    /// keys; `rng` drives initial-state draws and action sampling.
     pub fn collect(
         &mut self,
         orch: &Orchestrator,
         proto: &Protocol,
-        policy: &PolicyRuntime,
+        policy: &dyn Policy,
         theta: &[f32],
         rng: &mut Rng,
         deterministic: bool,

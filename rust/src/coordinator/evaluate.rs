@@ -5,7 +5,7 @@
 
 use crate::config::RunConfig;
 use crate::rl::{gaussian, max_return, CfdEnv, LesEnv};
-use crate::runtime::PolicyRuntime;
+use crate::runtime::Policy;
 use crate::solver::dns::Truth;
 use crate::util::Rng;
 use anyhow::Result;
@@ -31,7 +31,7 @@ pub struct EvalResult {
 pub fn eval_policy(
     cfg: &RunConfig,
     truth: &Arc<Truth>,
-    policy: &PolicyRuntime,
+    policy: &dyn Policy,
     theta: &[f32],
     stochastic_rng: Option<&mut Rng>,
 ) -> Result<EvalResult> {
@@ -40,11 +40,12 @@ pub fn eval_policy(
 }
 
 /// Deterministic policy rollout (mean actions) on the test state, run in
-/// a caller-owned environment of any backend.
+/// a caller-owned environment of any backend, under any [`Policy`]
+/// runtime backend.
 pub fn eval_policy_in(
     env: &mut dyn CfdEnv,
     cfg: &RunConfig,
-    policy: &PolicyRuntime,
+    policy: &dyn Policy,
     theta: &[f32],
     stochastic_rng: Option<&mut Rng>,
 ) -> Result<EvalResult> {

@@ -8,28 +8,30 @@
 //! backend context.
 
 use super::envpool::EnvPool;
-use super::evaluate::eval_policy_in;
+use super::evaluate::{eval_policy_in, EvalResult};
 use super::metrics::{IterationMetrics, MetricsLog};
 use crate::config::RunConfig;
 use crate::orchestrator::{Orchestrator, Protocol, WakeMode};
 use crate::rl::{flatten, max_return, CfdEnv};
-use crate::runtime::{Minibatch, PolicyRuntime, Registry, Runtime, TrainerRuntime};
+use crate::runtime::{runtime_from_config, Minibatch, Policy, Trainer};
 use crate::solver::dns::Truth;
 use crate::util::binio::write_f32_vec;
 use crate::util::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-/// The assembled training system.
+/// The assembled training system.  The policy/trainer pair comes from
+/// the `runtime.backend` registry: the compiled-XLA path or the native
+/// in-process path, both behind the [`Policy`]/[`Trainer`] traits.
 pub struct TrainingLoop {
     pub cfg: RunConfig,
     /// The DNS truth package the LES backend was built on (`None` for
     /// backends that generate their own ground truth, e.g. Burgers).
     pub truth: Option<Arc<Truth>>,
-    pub policy: PolicyRuntime,
-    pub trainer: TrainerRuntime,
+    pub policy: Box<dyn Policy>,
+    pub trainer: Box<dyn Trainer>,
     pub orch: Orchestrator,
     pool: EnvPool,
     /// Held-out-state evaluation env, built once on the pool's shared
@@ -49,19 +51,18 @@ impl TrainingLoop {
     /// [`TrainingLoop::new`] with the DNS truth optional: backends other
     /// than `"les"` generate their own ground truth from the config, so
     /// constructing a `rl.backend = "burgers"` loop never runs the 3D
-    /// DNS.  The compiled policy artifacts must still match the
-    /// backend's observation shape — checked here, at construction, so a
-    /// mismatch (today's artifacts are LES-shaped) fails fast instead of
-    /// on the first forward; shape-agnostic surfaces (CI smoke, benches)
-    /// drive non-LES backends through `EnvPool::collect_with` and a stub
-    /// policy instead.
+    /// DNS.
+    ///
+    /// The env pool is built first so the runtime registry can size the
+    /// native policy's input layer from `pool.features()` — with
+    /// `runtime.backend = "native"` ANY registered CFD backend trains
+    /// end-to-end with zero artifacts.  The XLA path keeps its
+    /// lowering-time shapes, so its policy must still match the
+    /// backend's observation shape — checked here, at construction, so
+    /// a mismatch (today's artifacts are LES-shaped) fails fast instead
+    /// of on the first forward.
     pub fn from_config(cfg: RunConfig, truth: Option<Arc<Truth>>) -> Result<TrainingLoop> {
         cfg.validate()?;
-        let rt = Runtime::cpu()?;
-        let reg = Registry::open(Path::new(&cfg.artifacts_dir))
-            .context("open artifact registry")?;
-        let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
-        let trainer = TrainerRuntime::load(&rt, &reg, cfg.case.n, cfg.rl.minibatch)?;
         // Per-key wakeups by default; `hpc.db_seqlock_wake` retains the
         // PR-2 sequence-lock baseline for A/B runs.
         let wake = if cfg.hpc.db_seqlock_wake {
@@ -71,11 +72,13 @@ impl TrainingLoop {
         };
         let orch = Orchestrator::launch_mode(cfg.hpc.db_shards, wake);
         let pool = EnvPool::from_config(cfg.clone(), truth.clone(), &orch)?;
+        let (policy, trainer) = runtime_from_config(&cfg, pool.features())?;
         anyhow::ensure!(
             policy.features() == pool.features(),
-            "policy artifacts provide {} features/agent but the {:?} backend produces {} — \
-             compiled artifacts exist for the LES shapes (N in {{5, 7}}); drive other \
-             backends through the stub-policy surfaces (CI smoke, bench_training)",
+            "the {:?} runtime provides {} features/agent but the {:?} backend produces {} — \
+             compiled artifacts exist for the LES shapes (N in {{5, 7}}); use \
+             runtime.backend = \"native\" (sized from the pool) for other backends",
+            cfg.runtime.backend,
             policy.features(),
             cfg.rl.backend,
             pool.features()
@@ -158,7 +161,7 @@ impl TrainingLoop {
             let mut kl_acc = 0.0;
             let mut n_mb = 0usize;
             for _epoch in 0..self.cfg.rl.epochs {
-                for idx in ds.minibatch_indices(self.trainer.minibatch, &mut self.rng) {
+                for idx in ds.minibatch_indices(self.trainer.minibatch(), &mut self.rng) {
                     let (obs, act, logp, adv, ret) = ds.gather(&idx);
                     let m = self.trainer.train_minibatch(&Minibatch {
                         obs: &obs,
@@ -179,11 +182,7 @@ impl TrainingLoop {
             let test_return = if self.cfg.rl.eval_every > 0
                 && it % self.cfg.rl.eval_every == 0
             {
-                Some(
-                    eval_policy_in(self.eval_env.as_mut(), &self.cfg, &self.policy,
-                                   self.trainer.theta(), None)?
-                    .normalized_return,
-                )
+                Some(self.evaluate()?.normalized_return)
             } else {
                 None
             };
@@ -210,6 +209,18 @@ impl TrainingLoop {
         Ok(())
     }
 
+    /// Deterministic (mean-action) evaluation of the current policy on
+    /// the held-out test state, in the persistent evaluation env.
+    pub fn evaluate(&mut self) -> Result<EvalResult> {
+        eval_policy_in(
+            self.eval_env.as_mut(),
+            &self.cfg,
+            self.policy.as_ref(),
+            self.trainer.theta(),
+            None,
+        )
+    }
+
     /// Worker-pool construction counters: steady-state iterations must
     /// leave everything but `iterations` untouched.
     pub fn pool_counters(&self) -> super::PoolCounters {
@@ -221,10 +232,10 @@ impl TrainingLoop {
         write_f32_vec(path, self.trainer.theta())
     }
 
-    /// Restore parameters from a checkpoint.
+    /// Restore parameters from a checkpoint (length-checked against the
+    /// runtime's architecture).
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
         let theta = crate::util::binio::read_f32_vec(path)?;
-        self.trainer.set_theta(theta);
-        Ok(())
+        self.trainer.set_theta(theta)
     }
 }

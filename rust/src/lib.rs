@@ -16,8 +16,11 @@
 //! * [`hpc`] — the Hawk cluster model + discrete-event scaling simulator
 //!   that regenerates the paper's Figs. 3–4.
 //! * [`rl`] — PPO trajectory machinery, Gaussian policy head, reward.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`); Python never runs at training time.
+//! * [`runtime`] — the policy/trainer layer behind the `Policy`/`Trainer`
+//!   trait seam: PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`, Python never runs at training time) or the
+//!   pure-Rust native MLP + PPO subsystem (`runtime.backend = "native"`,
+//!   zero artifacts).
 //! * [`coordinator`] — the synchronous training loop tying it all together.
 //! * [`config`], [`fft`], [`util`] — config system, FFT, and foundations.
 //!

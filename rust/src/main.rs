@@ -118,13 +118,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let csv = Path::new(&cfg.out_dir).join("training.csv");
     let mut log = MetricsLog::with_csv(&csv)?;
     println!(
-        "training: backend {} | case {} | {} envs x {} actions | {} iterations | artifacts {}",
+        "training: backend {} | runtime {} | case {} | {} envs x {} actions | {} iterations{}",
         cfg.rl.backend,
+        cfg.runtime.backend,
         cfg.case.name,
         cfg.rl.n_envs,
         cfg.backend_steps_per_episode(),
         cfg.rl.iterations,
-        cfg.artifacts_dir
+        if cfg.runtime.backend == "xla" {
+            format!(" | artifacts {}", cfg.artifacts_dir)
+        } else {
+            " | artifact-free".to_string()
+        }
     );
     let mut lp = TrainingLoop::from_config(cfg, truth)?;
     if let Some(ckpt) = args.get("checkpoint") {
@@ -142,27 +147,53 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    // The compiled-policy evaluation path (and both Cs baselines) is
-    // LES-specific; artifacts for other backends' observation shapes do
-    // not exist yet, so fail up front with the actual constraint.
+    // The Fig.-5 evaluation (and both Cs baselines) rolls out on the
+    // LES test state; the Burgers backend is evaluated inside its CI
+    // learning smoke instead.
     anyhow::ensure!(
         cfg.rl.backend == "les",
-        "`relexi eval` drives the compiled LES policy artifacts; rl.backend {:?} has no \
-         compiled policy — evaluate it through the stub-policy surfaces (CI smoke, benches)",
+        "`relexi eval` rolls out on the LES test state; rl.backend {:?} is evaluated \
+         through the CI learning smoke / benches instead",
         cfg.rl.backend
     );
     let truth_path = args.get_or("truth", &default_truth_path(&cfg));
     let truth = Arc::new(Truth::load(Path::new(&truth_path))?);
 
-    let rt = relexi::runtime::Runtime::cpu()?;
-    let reg = relexi::runtime::Registry::open(Path::new(&cfg.artifacts_dir))?;
-    let policy = relexi::runtime::PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
-    let theta = match args.get("checkpoint") {
-        Some(p) => relexi::util::binio::read_f32_vec(Path::new(p))?,
-        None => reg.initial_params(cfg.case.n)?,
-    };
+    // Either runtime backend serves the policy: compiled artifacts, or
+    // the artifact-free native MLP sized for the LES element shape.
+    let checkpoint = args.get("checkpoint");
+    let (policy, theta): (Box<dyn relexi::runtime::Policy>, Vec<f32>) =
+        match cfg.runtime.backend.as_str() {
+            "native" => {
+                let features = cfg.case.elem_features();
+                let spec = relexi::runtime::NativeSpec::from_config(&cfg, features)?;
+                let theta = match checkpoint {
+                    Some(p) => relexi::util::binio::read_f32_vec(Path::new(p))?,
+                    None => spec.init_theta(),
+                };
+                anyhow::ensure!(
+                    theta.len() == spec.param_count(),
+                    "checkpoint has {} params but runtime.hidden {:?} on {features} \
+                     features needs {}",
+                    theta.len(),
+                    spec.hidden,
+                    spec.param_count()
+                );
+                (Box::new(relexi::runtime::NativePolicy::new(spec)), theta)
+            }
+            _ => {
+                let rt = relexi::runtime::Runtime::cpu()?;
+                let reg = relexi::runtime::Registry::open(Path::new(&cfg.artifacts_dir))?;
+                let policy = relexi::runtime::PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+                let theta = match checkpoint {
+                    Some(p) => relexi::util::binio::read_f32_vec(Path::new(p))?,
+                    None => reg.initial_params(cfg.case.n)?,
+                };
+                (Box::new(policy), theta)
+            }
+        };
 
-    let rl = eval_policy(&cfg, &truth, &policy, &theta, None)?;
+    let rl = eval_policy(&cfg, &truth, policy.as_ref(), &theta, None)?;
     let smag = eval_baseline(&cfg, &truth, cfg.solver.smagorinsky_cs)?;
     let implicit = eval_baseline(&cfg, &truth, 0.0)?;
 
@@ -239,6 +270,10 @@ fn cmd_scaling(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
+    println!(
+        "runtime backends: {:?} (\"native\" trains any rl.backend artifact-free)",
+        relexi::config::RUNTIME_BACKENDS
+    );
     let rt = relexi::runtime::Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     match relexi::runtime::Registry::open(Path::new("artifacts")) {

@@ -4,8 +4,10 @@
 
 use crate::util::Rng;
 
-/// ln(2*pi)/2, the normalization constant of the standard normal.
-const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
+/// ln(2*pi)/2, the normalization constant of the standard normal (shared
+/// with the native trainer's PPO loss so both sides of the exchange use
+/// one definition).
+pub const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
 
 /// Sample `a ~ N(mean, exp(log_std))` per element.
 pub fn sample(mean: &[f32], log_std: f32, rng: &mut Rng) -> Vec<f32> {

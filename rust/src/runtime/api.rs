@@ -1,0 +1,162 @@
+//! The runtime-backend seam: [`Policy`] / [`Trainer`] trait objects and
+//! the `runtime.backend` registry that makes the XLA-artifact path and
+//! the native in-process path interchangeable.
+//!
+//! The contract both backends satisfy:
+//!
+//! * **Parameters are a flat f32 vector owned by the trainer.**  The
+//!   policy is stateless with respect to parameters: every
+//!   [`Policy::forward`] receives the current `theta` explicitly (the
+//!   training loop passes `trainer.theta()`), so checkpointing is one
+//!   `write_f32_vec` regardless of backend.
+//! * **`forward` is deterministic** — same `theta` + `obs` gives
+//!   bitwise-identical outputs — and returns one `(mean, value)` pair
+//!   per sample plus one global finite `log_std`, with `mean` inside
+//!   the admissible `[0, 0.5]` Cs range (`tests/conformance_policy.rs`
+//!   asserts this against every registered backend).
+//! * **`train_minibatch` is one optimizer step** of the clipped-PPO
+//!   objective on exactly [`Trainer::minibatch`] samples, returning the
+//!   paper-standard [`TrainMetrics`] diagnostics; `set_theta` restores a
+//!   checkpoint and resets the optimizer state.
+//!
+//! Where they differ: the XLA path loads pre-compiled `policy_fwd` /
+//! `train_step` HLO modules from `paths.artifacts` (shapes fixed at
+//! lowering time — today's artifacts are LES-shaped), while the native
+//! path sizes its input layer from the environment pool at construction
+//! and therefore trains **any** registered CFD backend with zero
+//! artifacts on disk.
+
+use super::native::{NativePolicy, NativeSpec, NativeTrainer};
+use super::policy::{PolicyOut, PolicyRuntime};
+use super::trainer::{Minibatch, TrainMetrics, TrainerRuntime};
+use super::{Registry, Runtime};
+use crate::config::RunConfig;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Batched policy evaluation behind the rollout stack (see the module
+/// docs for the exact contract).
+pub trait Policy: Send + Sync {
+    /// Observation floats per sample this policy is shaped for.
+    fn features(&self) -> usize;
+
+    /// Evaluate `n_samples` observations (`obs.len() == n_samples *
+    /// features()`) under the flat parameter vector `theta`.
+    fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut>;
+}
+
+/// Owner of the flat parameter vector + optimizer state (see the module
+/// docs for the exact contract).
+pub trait Trainer: Send {
+    /// Samples per PPO minibatch.
+    fn minibatch(&self) -> usize;
+
+    /// Current flat parameters.
+    fn theta(&self) -> &[f32];
+
+    /// Optimizer step counter.
+    fn opt_step(&self) -> f32;
+
+    /// Restore parameters (checkpoint load); resets optimizer state.
+    /// Fails when the vector length does not match this architecture.
+    fn set_theta(&mut self, theta: Vec<f32>) -> Result<()>;
+
+    /// Apply one PPO + optimizer step on one minibatch.
+    fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics>;
+}
+
+impl Policy for PolicyRuntime {
+    fn features(&self) -> usize {
+        PolicyRuntime::features(self)
+    }
+
+    fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+        PolicyRuntime::forward(self, theta, obs, n_samples)
+    }
+}
+
+impl Trainer for TrainerRuntime {
+    fn minibatch(&self) -> usize {
+        self.minibatch
+    }
+
+    fn theta(&self) -> &[f32] {
+        TrainerRuntime::theta(self)
+    }
+
+    fn opt_step(&self) -> f32 {
+        TrainerRuntime::opt_step(self)
+    }
+
+    fn set_theta(&mut self, theta: Vec<f32>) -> Result<()> {
+        TrainerRuntime::set_theta(self, theta)
+    }
+
+    fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics> {
+        TrainerRuntime::train_minibatch(self, mb)
+    }
+}
+
+impl Policy for NativePolicy {
+    fn features(&self) -> usize {
+        NativePolicy::features(self)
+    }
+
+    fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+        NativePolicy::forward(self, theta, obs, n_samples)
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn minibatch(&self) -> usize {
+        self.spec().minibatch
+    }
+
+    fn theta(&self) -> &[f32] {
+        NativeTrainer::theta(self)
+    }
+
+    fn opt_step(&self) -> f32 {
+        NativeTrainer::opt_step(self)
+    }
+
+    fn set_theta(&mut self, theta: Vec<f32>) -> Result<()> {
+        NativeTrainer::set_theta(self, theta)
+    }
+
+    fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics> {
+        NativeTrainer::train_minibatch(self, mb)
+    }
+}
+
+/// Resolve `runtime.backend` to a matched (policy, trainer) pair.
+///
+/// `features` is the environment pool's per-agent observation width:
+/// the native backend sizes its input layer from it, the XLA backend
+/// ignores it (artifact shapes were fixed at lowering time; the caller
+/// checks `policy.features()` against the pool afterwards).
+pub fn runtime_from_config(
+    cfg: &RunConfig,
+    features: usize,
+) -> Result<(Box<dyn Policy>, Box<dyn Trainer>)> {
+    match cfg.runtime.backend.as_str() {
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            let reg = Registry::open(Path::new(&cfg.artifacts_dir))
+                .context("open artifact registry")?;
+            let policy = PolicyRuntime::load(&rt, &reg, cfg.case.n)?;
+            let trainer = TrainerRuntime::load(&rt, &reg, cfg.case.n, cfg.rl.minibatch)?;
+            Ok((Box::new(policy), Box::new(trainer)))
+        }
+        "native" => {
+            let spec = NativeSpec::from_config(cfg, features)?;
+            let policy = NativePolicy::new(spec.clone());
+            let trainer = NativeTrainer::new(spec);
+            Ok((Box::new(policy), Box::new(trainer)))
+        }
+        other => bail!(
+            "unknown runtime.backend {other:?} (expected one of {:?})",
+            crate::config::RUNTIME_BACKENDS
+        ),
+    }
+}

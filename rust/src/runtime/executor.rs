@@ -50,8 +50,11 @@ pub struct Executable {
     name: String,
 }
 
-/// A host-side tensor handed to / returned by an executable.
-#[derive(Debug, Clone, PartialEq)]
+/// A host-side tensor handed to / returned by an executable.  The
+/// `Default` value (empty shape, empty data) is only the placeholder
+/// state of interned/reused tensors before their first refill — never
+/// execute it.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct HostTensor {
     pub shape: Vec<i64>,
     pub data: Vec<f32>,
@@ -75,6 +78,16 @@ impl HostTensor {
         HostTensor { shape, data }
     }
 
+    /// Refill as a rank-1 tensor, reusing both allocations — the
+    /// interning primitive behind the policy/trainer host-tensor reuse
+    /// (no fresh `Vec` per executable call).
+    pub fn refill_vec(&mut self, data: &[f32]) {
+        self.data.clear();
+        self.data.extend_from_slice(data);
+        self.shape.clear();
+        self.shape.push(data.len() as i64);
+    }
+
     fn to_literal(&self) -> Result<xla::Literal> {
         if self.shape.is_empty() {
             return Ok(xla::Literal::scalar(self.data[0]));
@@ -96,6 +109,15 @@ impl Executable {
     /// Execute with f32 host tensors; returns the flattened output tuple
     /// (artifacts are lowered with `return_tuple=True`).
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_ref(&refs)
+    }
+
+    /// [`Executable::run`] over borrowed tensors, so callers can keep
+    /// their inputs interned across calls (the runtime state and scratch
+    /// tensors live in the policy/trainer and are refilled in place, not
+    /// cloned into fresh `HostTensor`s per minibatch).
+    pub fn run_ref(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
@@ -133,5 +155,17 @@ mod tests {
     #[should_panic]
     fn host_tensor_shape_mismatch() {
         HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn refill_vec_reuses_the_allocation() {
+        let mut t = HostTensor::new(vec![2, 2], vec![1.0; 4]);
+        let cap = t.data.capacity();
+        let ptr = t.data.as_ptr();
+        t.refill_vec(&[5.0, 6.0]);
+        assert_eq!(t.shape, vec![2]);
+        assert_eq!(t.data, vec![5.0, 6.0]);
+        assert_eq!(t.data.capacity(), cap, "refill must not reallocate");
+        assert_eq!(t.data.as_ptr(), ptr);
     }
 }

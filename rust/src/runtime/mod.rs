@@ -1,14 +1,39 @@
-//! The PJRT runtime (DESIGN.md S12): loads the HLO-text artifacts that
-//! `make artifacts` produced from the JAX/Pallas layers and executes them
-//! from the coordinator's hot path.  Python never runs at training time —
-//! the compiled policy and train-step modules are the only ML code paths.
+//! The policy/trainer runtime layer: two interchangeable ML execution
+//! backends behind the [`Policy`] / [`Trainer`] trait seam ([`api`]),
+//! selected by the `runtime.backend` config field:
+//!
+//! * **`"xla"`** (the original PJRT path, DESIGN.md S12): loads the
+//!   HLO-text artifacts that `make artifacts` produced from the
+//!   JAX/Pallas layers ([`artifact`], [`executor`]) and executes the
+//!   compiled `policy_fwd` ([`policy`]) and `train_step` ([`trainer`])
+//!   modules from the coordinator's hot path.  Python never runs at
+//!   training time.  Artifact shapes are fixed at lowering time, so
+//!   this path serves exactly the observation shapes it was built for
+//!   (today: the LES element shapes, N in {5, 7}) and needs the
+//!   artifacts directory on disk.
+//! * **`"native"`** ([`native`]): a pure-Rust MLP policy + clipped-PPO
+//!   trainer — cache-blocked f32 GEMM, hand-written backprop, Adam —
+//!   that sizes its input layer from the environment pool at
+//!   construction.  Zero artifacts, any registered CFD backend, same
+//!   flat-`theta` checkpoint format, same [`TrainMetrics`] diagnostics.
+//!
+//! Both backends obey one contract (spelled out in [`api`] and enforced
+//! against every registered backend by `tests/conformance_policy.rs`):
+//! the trainer owns the flat f32 parameter vector, the policy evaluates
+//! deterministically under an explicitly passed `theta`, means stay in
+//! the admissible `[0, 0.5]` range, and one `train_minibatch` is one
+//! optimizer step.
 
+pub mod api;
 pub mod artifact;
 pub mod executor;
+pub mod native;
 pub mod policy;
 pub mod trainer;
 
+pub use api::{runtime_from_config, Policy, Trainer};
 pub use artifact::{ArtifactKind, Registry};
 pub use executor::{Executable, HostTensor, Runtime};
+pub use native::{NativePolicy, NativeSpec, NativeTrainer};
 pub use policy::{plan_chunks, stub_policy, PolicyOut, PolicyRuntime};
 pub use trainer::{Minibatch, TrainMetrics, TrainerRuntime};

@@ -1,0 +1,237 @@
+//! Cache-blocked f32 GEMM micro-kernels for the native policy/trainer.
+//!
+//! Three row-major accumulate kernels cover everything an MLP
+//! forward/backward needs:
+//!
+//! * [`gemm_nn`] — `C += A·B`      (forward:  `Z = X·W`)
+//! * [`gemm_tn`] — `C += Aᵀ·B`     (backward: `dW = Xᵀ·dZ`)
+//! * [`gemm_nt`] — `C += A·Bᵀ`     (backward: `dX = dZ·Wᵀ`)
+//!
+//! All three stream the shared panel through a `KC`-deep k-block so it
+//! stays cache-resident across the outer loop, and keep the inner loop a
+//! contiguous axpy/dot over zipped slices — the shape rustc/LLVM
+//! auto-vectorizes.  `gemm_nn` additionally retires two C rows per pass
+//! over the B panel (register-level reuse of the B row).  Sizes here are
+//! MLP-scale (k up to ~1.6k features, n up to a few hundred hidden
+//! units), so the single k-block level is the one that matters; there is
+//! deliberately no threading — the trainer parallelism axis is the env
+//! pool, not the update step.
+//!
+//! All kernels *accumulate* into `C`; callers zero (or bias-fill) first.
+
+/// Depth of the k-blocking: `KC` rows of the streamed panel (`KC * n`
+/// floats) stay L1/L2-resident while a block is consumed.
+const KC: usize = 128;
+
+/// `C (m×n) += A (m×k) · B (k×n)`, all row-major.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A must be m x k");
+    assert_eq!(b.len(), k * n, "B must be k x n");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        // Two C rows at a time: each B-panel row is loaded once per pair.
+        let mut i = 0;
+        while i + 2 <= m {
+            let (c0, c1) = c[i * n..(i + 2) * n].split_at_mut(n);
+            for l in 0..kb {
+                let a0 = a[i * k + k0 + l];
+                let a1 = a[(i + 1) * k + k0 + l];
+                let br = &b[(k0 + l) * n..(k0 + l) * n + n];
+                for ((x0, x1), &bv) in c0.iter_mut().zip(c1.iter_mut()).zip(br) {
+                    *x0 += a0 * bv;
+                    *x1 += a1 * bv;
+                }
+            }
+            i += 2;
+        }
+        if i < m {
+            let c0 = &mut c[i * n..(i + 1) * n];
+            for l in 0..kb {
+                let a0 = a[i * k + k0 + l];
+                let br = &b[(k0 + l) * n..(k0 + l) * n + n];
+                for (x0, &bv) in c0.iter_mut().zip(br) {
+                    *x0 += a0 * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// `C (m×n) += Aᵀ·B` with `A (k×m)` and `B (k×n)`, all row-major.
+///
+/// The weight-gradient kernel: `dW (in×out) = Xᵀ (B×in)ᵀ · dZ (B×out)`.
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "A must be k x m");
+    assert_eq!(b.len(), k * n, "B must be k x n");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for i in 0..m {
+            let ci = &mut c[i * n..(i + 1) * n];
+            for l in k0..k0 + kb {
+                let ai = a[l * m + i];
+                let br = &b[l * n..l * n + n];
+                for (x, &bv) in ci.iter_mut().zip(br) {
+                    *x += ai * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// `C (m×n) += A·Bᵀ` with `A (m×k)` and `B (n×k)`, all row-major.
+///
+/// The input-gradient kernel: `dX (B×in) = dZ (B×out) · W (in×out)ᵀ`.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A must be m x k");
+    assert_eq!(b.len(), n * k, "B must be n x k");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for i in 0..m {
+            let ar = &a[i * k + k0..i * k + k0 + kb];
+            let ci = &mut c[i * n..(i + 1) * n];
+            for (j, x) in ci.iter_mut().enumerate() {
+                let br = &b[j * k + k0..j * k + k0 + kb];
+                // 4-way unrolled dot: independent accumulators keep the
+                // FMA chain out of the loop-carried dependency.
+                let mut acc = [0.0f32; 4];
+                let mut chunks_a = ar.chunks_exact(4);
+                let mut chunks_b = br.chunks_exact(4);
+                for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+                    acc[0] += ca[0] * cb[0];
+                    acc[1] += ca[1] * cb[1];
+                    acc[2] += ca[2] * cb[2];
+                    acc[3] += ca[3] * cb[3];
+                }
+                let mut tail = 0.0f32;
+                for (&av, &bv) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+                    tail += av * bv;
+                }
+                *x += (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
+            }
+        }
+        k0 += kb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for l in 0..k {
+                    s += a[i * k + l] as f64 * b[l * n + j] as f64;
+                }
+                c[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, label: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let scale = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() <= tol * scale,
+                "{label}[{i}]: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn nn_matches_naive_across_odd_shapes() {
+        let mut rng = Rng::new(1);
+        // Shapes straddle the KC block boundary and the 2-row unroll.
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (2, KC, 4), (5, KC + 3, 9), (8, 300, 17)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let mut c = vec![0f32; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c);
+            assert_close(&c, &naive_nn(m, k, n, &a, &b), 1e-5, "nn");
+        }
+    }
+
+    #[test]
+    fn tn_is_a_transposed_nn() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(4, 6, 3), (7, KC + 5, 2), (1, 50, 50)] {
+            let a = fill(&mut rng, k * m); // k x m
+            let b = fill(&mut rng, k * n);
+            // Transpose A explicitly and compare against nn.
+            let mut at = vec![0f32; m * k];
+            for l in 0..k {
+                for i in 0..m {
+                    at[i * k + l] = a[l * m + i];
+                }
+            }
+            let mut c = vec![0f32; m * n];
+            gemm_tn(m, k, n, &a, &b, &mut c);
+            assert_close(&c, &naive_nn(m, k, n, &at, &b), 1e-5, "tn");
+        }
+    }
+
+    #[test]
+    fn nt_is_a_transposed_nn() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(4, 6, 3), (3, KC + 7, 5), (6, 33, 1)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, n * k); // n x k
+            let mut bt = vec![0f32; k * n];
+            for j in 0..n {
+                for l in 0..k {
+                    bt[l * n + j] = b[j * k + l];
+                }
+            }
+            let mut c = vec![0f32; m * n];
+            gemm_nt(m, k, n, &a, &b, &mut c);
+            assert_close(&c, &naive_nn(m, k, n, &a, &bt), 1e-5, "nt");
+        }
+    }
+
+    #[test]
+    fn kernels_accumulate_instead_of_overwriting() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (3, 5, 4);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut c = vec![1.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c);
+        let want: Vec<f32> = naive_nn(m, k, n, &a, &b).iter().map(|x| x + 1.0).collect();
+        assert_close(&c, &want, 1e-5, "accumulate");
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let mut c = vec![2.0f32; 0];
+        gemm_nn(0, 3, 0, &[], &[0.0; 0], &mut c);
+        let mut c2 = vec![5.0f32; 6];
+        gemm_nn(2, 0, 3, &[], &[], &mut c2);
+        assert!(c2.iter().all(|&x| x == 5.0), "k=0 must leave C untouched");
+    }
+}

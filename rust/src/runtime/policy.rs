@@ -11,6 +11,7 @@
 use super::artifact::{ArtifactKind, Registry};
 use super::executor::{Executable, HostTensor, Runtime};
 use anyhow::{Context, Result};
+use std::sync::Mutex;
 
 /// Deterministic policy stand-in with the `forward` closure shape the
 /// rollout collector consumes (`(obs, n_samples) -> PolicyOut`): mean and
@@ -86,6 +87,18 @@ pub struct PolicyRuntime {
     feat: usize,
     /// Obs tensor trailing dims.
     dims: [i64; 4],
+    /// Interned host tensors reused across `forward` calls: the theta
+    /// tensor is rebuilt only when the parameters actually changed (once
+    /// per training iteration, not once per forward), and the padded
+    /// chunk buffer keeps its allocation across chunks and calls.
+    scratch: Mutex<FwdScratch>,
+}
+
+/// Reused forward-call host tensors (see [`PolicyRuntime::scratch`]).
+#[derive(Default)]
+struct FwdScratch {
+    theta: HostTensor,
+    chunk: HostTensor,
 }
 
 impl PolicyRuntime {
@@ -104,6 +117,7 @@ impl PolicyRuntime {
             exes,
             feat: ((n + 1).pow(3) * 3),
             dims: [p, p, p, 3],
+            scratch: Mutex::new(FwdScratch::default()),
         })
     }
 
@@ -122,7 +136,15 @@ impl PolicyRuntime {
             obs.len(),
             self.feat
         );
-        let theta_t = HostTensor::vec(theta.to_vec());
+        let mut guard = self.scratch.lock().expect("policy forward scratch lock");
+        let s = &mut *guard;
+        // Intern theta: a sampling phase calls forward many times under
+        // one unchanged parameter vector, so the host tensor is rebuilt
+        // only when the contents differ (one memcmp vs a fresh to_vec
+        // per call).
+        if s.theta.data.as_slice() != theta {
+            s.theta.refill_vec(theta);
+        }
         let mut mean = Vec::with_capacity(n_samples);
         let mut value = Vec::with_capacity(n_samples);
         let mut log_std = 0.0f32;
@@ -130,18 +152,21 @@ impl PolicyRuntime {
         let batches: Vec<usize> = self.exes.iter().map(|(b, _)| *b).collect();
         for (b, take) in plan_chunks(&batches, n_samples) {
             let exe = self.exe_for(b);
-            let mut chunk = vec![0f32; b * self.feat];
-            chunk[..take * self.feat]
-                .copy_from_slice(&obs[done * self.feat..(done + take) * self.feat]);
-            let shape = vec![
+            s.chunk.data.clear();
+            s.chunk
+                .data
+                .extend_from_slice(&obs[done * self.feat..(done + take) * self.feat]);
+            s.chunk.data.resize(b * self.feat, 0.0); // zero the padded tail
+            s.chunk.shape.clear();
+            s.chunk.shape.extend_from_slice(&[
                 b as i64,
                 self.dims[0],
                 self.dims[1],
                 self.dims[2],
                 self.dims[3],
-            ];
+            ]);
             let out = exe
-                .run(&[theta_t.clone(), HostTensor::new(shape, chunk)])
+                .run_ref(&[&s.theta, &s.chunk])
                 .with_context(|| format!("policy_fwd b={b}"))?;
             anyhow::ensure!(out.len() == 3, "policy_fwd returned {} outputs", out.len());
             mean.extend_from_slice(&out[0].data[..take]);

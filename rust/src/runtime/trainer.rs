@@ -1,6 +1,14 @@
-//! Training runtime: owns the flat parameter vector and Adam state and
-//! applies the compiled `train_step` artifact (PPO loss + gradients +
-//! Adam, all inside one XLA module) minibatch by minibatch.
+//! Training runtime (XLA path): owns the flat parameter vector and Adam
+//! state and applies the compiled `train_step` artifact (PPO loss +
+//! gradients + Adam, all inside one XLA module) minibatch by minibatch.
+//!
+//! The runtime state lives directly in [`HostTensor`]s: each call hands
+//! the executable borrowed tensors ([`Executable::run_ref`]) and then
+//! *moves* the returned state tensors back in — no `theta`/`m`/`v` deep
+//! copies per minibatch (they used to be cloned into fresh tensors every
+//! call).  Minibatch inputs are staged through reusable scratch tensors
+//! the same way, so a steady-state train step allocates only what PJRT
+//! itself allocates.
 
 use super::artifact::{ArtifactKind, Registry};
 use super::executor::{Executable, HostTensor, Runtime};
@@ -34,10 +42,18 @@ pub struct TrainerRuntime {
     pub minibatch: usize,
     feat: usize,
     dims: [i64; 4],
-    theta: Vec<f32>,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    step: f32,
+    // Runtime state, kept as host tensors so each step passes them by
+    // reference and adopts the outputs by move.
+    theta: HostTensor,
+    m: HostTensor,
+    v: HostTensor,
+    step: HostTensor,
+    // Reused minibatch input scratch (refilled in place per call).
+    obs_t: HostTensor,
+    act_t: HostTensor,
+    logp_t: HostTensor,
+    adv_t: HostTensor,
+    ret_t: HostTensor,
 }
 
 impl TrainerRuntime {
@@ -60,30 +76,42 @@ impl TrainerRuntime {
             minibatch,
             feat: (n + 1).pow(3) * 3,
             dims: [p, p, p, 3],
-            theta,
-            m: vec![0.0; len],
-            v: vec![0.0; len],
-            step: 0.0,
+            theta: HostTensor::vec(theta),
+            m: HostTensor::vec(vec![0.0; len]),
+            v: HostTensor::vec(vec![0.0; len]),
+            step: HostTensor::scalar(0.0),
+            obs_t: HostTensor::default(),
+            act_t: HostTensor::default(),
+            logp_t: HostTensor::default(),
+            adv_t: HostTensor::default(),
+            ret_t: HostTensor::default(),
         })
     }
 
     /// Current parameters (shared with the policy runtime each call).
     pub fn theta(&self) -> &[f32] {
-        &self.theta
+        &self.theta.data
     }
 
     /// Optimizer step counter.
     pub fn opt_step(&self) -> f32 {
-        self.step
+        self.step.data[0]
     }
 
-    /// Restore parameters (checkpoint load); resets Adam state.
-    pub fn set_theta(&mut self, theta: Vec<f32>) {
-        assert_eq!(theta.len(), self.theta.len());
-        self.theta = theta;
-        self.m.iter_mut().for_each(|x| *x = 0.0);
-        self.v.iter_mut().for_each(|x| *x = 0.0);
-        self.step = 0.0;
+    /// Restore parameters (checkpoint load); resets Adam state.  Fails
+    /// when the vector length does not match the artifact's parameters.
+    pub fn set_theta(&mut self, theta: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            theta.len() == self.theta.data.len(),
+            "checkpoint has {} params, artifact expects {}",
+            theta.len(),
+            self.theta.data.len()
+        );
+        self.theta = HostTensor::vec(theta);
+        self.m.data.iter_mut().for_each(|x| *x = 0.0);
+        self.v.data.iter_mut().for_each(|x| *x = 0.0);
+        self.step.data[0] = 0.0;
+        Ok(())
     }
 
     /// Apply one compiled PPO+Adam step on a minibatch of exactly
@@ -92,33 +120,51 @@ impl TrainerRuntime {
         let b = self.minibatch;
         anyhow::ensure!(mb.act.len() == b, "minibatch size {} != {b}", mb.act.len());
         anyhow::ensure!(mb.obs.len() == b * self.feat);
-        let shape = vec![b as i64, self.dims[0], self.dims[1], self.dims[2], self.dims[3]];
-        let out = self
+        self.obs_t.data.clear();
+        self.obs_t.data.extend_from_slice(mb.obs);
+        self.obs_t.shape.clear();
+        self.obs_t.shape.extend_from_slice(&[
+            b as i64,
+            self.dims[0],
+            self.dims[1],
+            self.dims[2],
+            self.dims[3],
+        ]);
+        self.act_t.refill_vec(mb.act);
+        self.logp_t.refill_vec(mb.old_logp);
+        self.adv_t.refill_vec(mb.adv);
+        self.ret_t.refill_vec(mb.ret);
+        let mut out = self
             .exe
-            .run(&[
-                HostTensor::vec(self.theta.clone()),
-                HostTensor::vec(self.m.clone()),
-                HostTensor::vec(self.v.clone()),
-                HostTensor::scalar(self.step),
-                HostTensor::new(shape, mb.obs.to_vec()),
-                HostTensor::vec(mb.act.to_vec()),
-                HostTensor::vec(mb.old_logp.to_vec()),
-                HostTensor::vec(mb.adv.to_vec()),
-                HostTensor::vec(mb.ret.to_vec()),
+            .run_ref(&[
+                &self.theta,
+                &self.m,
+                &self.v,
+                &self.step,
+                &self.obs_t,
+                &self.act_t,
+                &self.logp_t,
+                &self.adv_t,
+                &self.ret_t,
             ])
             .context("train_step")?;
         anyhow::ensure!(out.len() == 10, "train_step returned {} outputs", out.len());
-        self.theta = out[0].data.clone();
-        self.m = out[1].data.clone();
-        self.v = out[2].data.clone();
-        self.step = out[3].data[0];
+        // Adopt the new runtime state by move (the former clones were
+        // four full parameter-sized copies per minibatch).
+        let mut state = out.drain(0..4);
+        self.theta = state.next().expect("drained exactly 4");
+        self.m = state.next().expect("drained exactly 4");
+        self.v = state.next().expect("drained exactly 4");
+        // Keep our rank-0 step tensor; only adopt the counter value.
+        self.step.data[0] = state.next().expect("drained exactly 4").data[0];
+        drop(state);
         Ok(TrainMetrics {
-            loss: out[4].data[0],
-            pg_loss: out[5].data[0],
-            v_loss: out[6].data[0],
-            entropy: out[7].data[0],
-            clip_frac: out[8].data[0],
-            approx_kl: out[9].data[0],
+            loss: out[0].data[0],
+            pg_loss: out[1].data[0],
+            v_loss: out[2].data[0],
+            entropy: out[3].data[0],
+            clip_frac: out[4].data[0],
+            approx_kl: out[5].data[0],
         })
     }
 }

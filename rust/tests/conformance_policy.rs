@@ -1,0 +1,199 @@
+//! Policy/trainer runtime conformance: every backend registered in
+//! `config::RUNTIME_BACKENDS` must satisfy the contract the rollout and
+//! training stacks rely on (see `runtime::api`):
+//!
+//! * shape agreement — `forward` on `n` samples returns exactly `n`
+//!   means and `n` values, for any `n`, and `policy.features()` matches
+//!   what the pair was constructed for;
+//! * `log_std` finite, means finite and inside the admissible
+//!   `[0, 0.5]` Cs range, values finite;
+//! * deterministic forward — same `theta` + `obs` twice gives
+//!   bitwise-identical outputs;
+//! * trainer/policy pairing — the trainer's `theta` feeds the policy's
+//!   `forward` directly, `train_minibatch` advances the optimizer with
+//!   finite metrics, `set_theta` length-checks and resets.
+//!
+//! The XLA backend needs its compiled artifacts on disk and self-skips
+//! without them (same convention as `integration_runtime`); the native
+//! backend always runs, so CI exercises the contract on every push.
+
+use relexi::config::RunConfig;
+use relexi::runtime::{runtime_from_config, Minibatch, Policy, Trainer};
+use relexi::util::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Build every constructible runtime backend: `(label, policy, trainer)`.
+fn all_runtimes() -> Vec<(String, Box<dyn Policy>, Box<dyn Trainer>)> {
+    let mut out = Vec::new();
+    for &name in relexi::config::RUNTIME_BACKENDS {
+        let mut cfg = RunConfig::default();
+        cfg.runtime.backend = name.to_string();
+        cfg.artifacts_dir = artifacts_dir().to_string_lossy().to_string();
+        // The native pair sizes itself from this; the XLA pair ignores
+        // it (its features come from the N=5 artifacts: 648).
+        let features = if name == "xla" { 648 } else { 12 };
+        if name == "xla" && !Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+            eprintln!("skipping runtime backend {name:?}: run `make artifacts` first");
+            continue;
+        }
+        cfg.rl.minibatch = 256;
+        let (policy, trainer) = runtime_from_config(&cfg, features)
+            .unwrap_or_else(|e| panic!("runtime backend {name:?} failed to construct: {e:#}"));
+        out.push((name.to_string(), policy, trainer));
+    }
+    assert!(
+        !out.is_empty(),
+        "no runtime backend constructible (native must always be)"
+    );
+    out
+}
+
+#[test]
+fn registry_covers_every_declared_runtime_backend() {
+    // Unknown names must fail at resolution with the declared list.
+    let mut cfg = RunConfig::default();
+    cfg.runtime.backend = "tpu".to_string();
+    let err = runtime_from_config(&cfg, 8).unwrap_err();
+    assert!(format!("{err:#}").contains("runtime.backend"));
+    // The native backend resolves without any artifacts directory.
+    cfg.runtime.backend = "native".to_string();
+    cfg.artifacts_dir = "/nonexistent".to_string();
+    assert!(runtime_from_config(&cfg, 8).is_ok());
+}
+
+#[test]
+fn forward_shapes_agree_for_every_batch_size() {
+    for (name, policy, trainer) in all_runtimes() {
+        let feat = policy.features();
+        assert!(feat >= 1, "{name}");
+        assert!(!trainer.theta().is_empty(), "{name}: trainer must own parameters");
+        let mut rng = Rng::new(11);
+        for n in [1usize, 5, 64] {
+            let obs: Vec<f32> = (0..n * feat).map(|_| rng.normal() as f32).collect();
+            let out = policy
+                .forward(trainer.theta(), &obs, n)
+                .unwrap_or_else(|e| panic!("{name}: forward n={n}: {e:#}"));
+            assert_eq!(out.mean.len(), n, "{name}: mean count for n={n}");
+            assert_eq!(out.value.len(), n, "{name}: value count for n={n}");
+        }
+        // Mismatched obs length is rejected, not silently truncated.
+        let bad = vec![0.0f32; feat + 1];
+        assert!(policy.forward(trainer.theta(), &bad, 1).is_err(), "{name}");
+    }
+}
+
+#[test]
+fn outputs_are_finite_and_means_admissible() {
+    for (name, policy, trainer) in all_runtimes() {
+        let feat = policy.features();
+        let mut rng = Rng::new(23);
+        // Extreme inputs included: the mean head must stay bounded.
+        let obs: Vec<f32> = (0..32 * feat)
+            .map(|_| (rng.normal() * 20.0) as f32)
+            .collect();
+        let out = policy.forward(trainer.theta(), &obs, 32).unwrap();
+        assert!(out.log_std.is_finite(), "{name}: log_std {}", out.log_std);
+        for (i, m) in out.mean.iter().enumerate() {
+            assert!(
+                m.is_finite() && (0.0..=0.5).contains(m),
+                "{name}: mean[{i}] = {m} outside [0, 0.5]"
+            );
+        }
+        assert!(
+            out.value.iter().all(|v| v.is_finite()),
+            "{name}: non-finite value"
+        );
+    }
+}
+
+#[test]
+fn forward_is_bitwise_deterministic() {
+    for (name, policy, trainer) in all_runtimes() {
+        let feat = policy.features();
+        let mut rng = Rng::new(31);
+        let obs: Vec<f32> = (0..9 * feat).map(|_| rng.normal() as f32).collect();
+        let a = policy.forward(trainer.theta(), &obs, 9).unwrap();
+        let b = policy.forward(trainer.theta(), &obs, 9).unwrap();
+        assert!(
+            a.mean.iter().zip(&b.mean).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{name}: nondeterministic mean"
+        );
+        assert!(
+            a.value.iter().zip(&b.value).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{name}: nondeterministic value"
+        );
+        assert_eq!(a.log_std.to_bits(), b.log_std.to_bits(), "{name}");
+    }
+}
+
+#[test]
+fn trainer_steps_and_checkpoints_conform() {
+    for (name, policy, mut trainer) in all_runtimes() {
+        let feat = policy.features();
+        let b = trainer.minibatch();
+        assert!(b >= 1, "{name}");
+        let theta0 = trainer.theta().to_vec();
+        assert_eq!(trainer.opt_step(), 0.0, "{name}: fresh trainer");
+
+        let mut rng = Rng::new(47);
+        let obs: Vec<f32> = (0..b * feat).map(|_| rng.normal() as f32).collect();
+        let act: Vec<f32> = (0..b).map(|_| rng.uniform_f32() * 0.5).collect();
+        let old_logp = vec![-1.0f32; b];
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+        let ret: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+        let m = trainer
+            .train_minibatch(&Minibatch {
+                obs: &obs,
+                act: &act,
+                old_logp: &old_logp,
+                adv: &adv,
+                ret: &ret,
+            })
+            .unwrap_or_else(|e| panic!("{name}: train_minibatch: {e:#}"));
+        for (what, x) in [
+            ("loss", m.loss),
+            ("pg_loss", m.pg_loss),
+            ("v_loss", m.v_loss),
+            ("entropy", m.entropy),
+            ("clip_frac", m.clip_frac),
+            ("approx_kl", m.approx_kl),
+        ] {
+            assert!(x.is_finite(), "{name}: {what} = {x}");
+        }
+        assert_eq!(trainer.opt_step(), 1.0, "{name}: one step taken");
+        assert!(
+            trainer.theta().iter().zip(&theta0).any(|(a, b)| a != b),
+            "{name}: parameters unchanged after a train step"
+        );
+        // The updated theta still drives the policy.
+        let out = policy.forward(trainer.theta(), &obs[..feat], 1).unwrap();
+        assert!(out.mean[0].is_finite(), "{name}");
+
+        // A wrong-size minibatch is rejected on every backend (the
+        // static XLA artifact and the native trainer share the
+        // exact-size contract).
+        if b > 1 {
+            let short = Minibatch {
+                obs: &obs[..feat],
+                act: &act[..1],
+                old_logp: &old_logp[..1],
+                adv: &adv[..1],
+                ret: &ret[..1],
+            };
+            assert!(
+                trainer.train_minibatch(&short).is_err(),
+                "{name}: short minibatch must be rejected"
+            );
+        }
+
+        // set_theta: wrong length rejected, right length resets.
+        assert!(trainer.set_theta(vec![0.0; 3]).is_err(), "{name}");
+        trainer.set_theta(theta0.clone()).unwrap();
+        assert_eq!(trainer.opt_step(), 0.0, "{name}: reset optimizer");
+        assert_eq!(trainer.theta(), &theta0[..], "{name}: theta restored");
+    }
+}

@@ -4,6 +4,7 @@
 
 use relexi::config::{CaseConfig, RunConfig};
 use relexi::coordinator::{eval_baseline, MetricsLog, TrainingLoop};
+use relexi::runtime::Trainer; // `lp.trainer` is a `Box<dyn Trainer>`
 use relexi::solver::dns::{generate, TruthParams};
 use std::path::Path;
 use std::sync::Arc;
