@@ -6,8 +6,10 @@
 //!
 //! Emits `BENCH_fft.json` for the perf-trajectory log (ROADMAP §Perf log).
 
-use relexi::fft::{fft3d_ws, seed, Cpx, FftScratch, Plan};
+use relexi::fft::{fft3d_pool, fft3d_ws, seed, Cpx, FftScratch, Plan};
 use relexi::util::bench::{Bench, Table};
+use relexi::util::pool::{self, Pool};
+use relexi::util::simd::{self, Level};
 use relexi::util::Rng;
 use std::time::Duration;
 
@@ -88,6 +90,70 @@ fn main() {
             plan.inverse_batch(&mut data, batch, &mut scratch);
         });
     }
+
+    // --- scalar vs SIMD butterflies (PR 6): same Stockham engine, the ---
+    // --- dispatch level forced per plan.  Results are bit-identical, ---
+    // --- so the ratio isolates the vector pack/twiddle loops.        ---
+    let native = simd::level();
+    let mut sv = Table::new(&["n", "scalar ms", "simd ms", "speedup", "level"]);
+    for n in [32usize, 48, 64, 96] {
+        let plan_s = Plan::with_level(n, Level::Scalar);
+        let plan_v = Plan::new(n);
+        let mut ws = FftScratch::new(n);
+
+        let mut cube_s = random_cube(n, 3);
+        let m_s = b.run(&format!("fft3d {n}^3 [scalar] (fwd+inv)"), || {
+            fft3d_ws(&mut cube_s, &plan_s, false, &mut ws);
+            fft3d_ws(&mut cube_s, &plan_s, true, &mut ws);
+        });
+
+        let mut cube_v = random_cube(n, 4);
+        let m_v = b.run(&format!("fft3d {n}^3 [{}] (fwd+inv)", native.label()), || {
+            fft3d_ws(&mut cube_v, &plan_v, false, &mut ws);
+            fft3d_ws(&mut cube_v, &plan_v, true, &mut ws);
+        });
+
+        sv.row(vec![
+            format!("{n}"),
+            format!("{:.3}", m_s.mean_s * 1e3),
+            format!("{:.3}", m_v.mean_s * 1e3),
+            format!("{:.2}x", m_s.mean_s / m_v.mean_s),
+            native.label().to_string(),
+        ]);
+    }
+    sv.print("Scalar vs SIMD dispatch, 3-D FFT (bit-identical outputs)");
+
+    // --- 1 thread vs native pool width on the plane-batched 3-D pass ---
+    let pool1 = Pool::new(1);
+    let pooln = pool::global();
+    let mut tt = Table::new(&["n", "t1 ms", "tN ms", "speedup", "threads"]);
+    for n in [48usize, 64, 96] {
+        let plan = Plan::new(n);
+        let mut buf = vec![Cpx::ZERO; n * n * n];
+        let mut plane = vec![Cpx::ZERO; n * n];
+
+        let mut cube1 = random_cube(n, 5);
+        let m1 = b.run(&format!("fft3d {n}^3 [threads=1] (fwd+inv)"), || {
+            fft3d_pool(&mut cube1, &plan, false, &mut buf, &mut plane, &pool1);
+            fft3d_pool(&mut cube1, &plan, true, &mut buf, &mut plane, &pool1);
+        });
+
+        let mut cube_n = random_cube(n, 6);
+        let label_n = format!("fft3d {n}^3 [threads={}] (fwd+inv)", pooln.threads());
+        let m_n = b.run(&label_n, || {
+            fft3d_pool(&mut cube_n, &plan, false, &mut buf, &mut plane, &pooln);
+            fft3d_pool(&mut cube_n, &plan, true, &mut buf, &mut plane, &pooln);
+        });
+
+        tt.row(vec![
+            format!("{n}"),
+            format!("{:.3}", m1.mean_s * 1e3),
+            format!("{:.3}", m_n.mean_s * 1e3),
+            format!("{:.2}x", m1.mean_s / m_n.mean_s),
+            pooln.threads().to_string(),
+        ]);
+    }
+    tt.print("Worker-pool plane batching, 3-D FFT (bit-identical outputs)");
 
     if let Err(e) = b.write_json("BENCH_fft.json") {
         eprintln!("warning: could not write BENCH_fft.json: {e}");

@@ -13,6 +13,8 @@
 use relexi::runtime::native::gemm;
 use relexi::runtime::{Minibatch, NativeSpec, NativeTrainer};
 use relexi::util::bench::{fmt_duration, Bench, Table};
+use relexi::util::pool::{self, Pool};
+use relexi::util::simd::{self, Level};
 use relexi::util::Rng;
 use std::time::Duration;
 
@@ -39,8 +41,18 @@ fn main() {
     }));
 
     // --- GEMM micro: the kernels the MLP forward/backward run on -----------
+    // Head-to-head variants (PR 6): scalar vs SIMD dispatch at one
+    // thread, then SIMD at the pool's native width.  All variants
+    // compute the same contraction, so one effective-FLOPs figure (the
+    // true `2*m*k*n` of the logical shape, not any padded/blocked dims)
+    // is shared across the rows of a shape.
     let mut rng = Rng::new(5);
-    let mut table = Table::new(&["kernel", "m x k x n", "latency", "GFLOP/s"]);
+    let native = simd::level();
+    let pool1 = Pool::new(1);
+    let pooln = pool::global();
+    let n1_label = format!("{},t1", native.label());
+    let tn_label = format!("{},t{}", native.label(), pooln.threads());
+    let mut table = Table::new(&["kernel", "m x k x n", "variant", "latency", "GFLOP/s"]);
     // Forward layer (batch x features -> hidden), backward dW, backward dX.
     let shapes: &[(&str, usize, usize, usize)] = &[
         ("nn (fwd z=x*w)", 256, 648, 64),
@@ -54,24 +66,34 @@ fn main() {
         let a: Vec<f32> = (0..a_rows).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..b_rows).map(|_| rng.normal() as f32).collect();
         let mut c = vec![0f32; m * n];
-        let meas = bench.run(&format!("gemm {label} {m}x{k}x{n}"), || {
-            c.iter_mut().for_each(|x| *x = 0.0);
-            match &label[..2] {
-                "tn" => gemm::gemm_tn(m, k, n, &a, &b, &mut c),
-                "nt" => gemm::gemm_nt(m, k, n, &a, &b, &mut c),
-                _ => gemm::gemm_nn(m, k, n, &a, &b, &mut c),
-            }
-            std::hint::black_box(&c);
-        });
+        // Effective FLOPs of the logical contraction, shared by every
+        // variant row below.
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
-        table.row(vec![
-            label.to_string(),
-            format!("{m}x{k}x{n}"),
-            fmt_duration(meas.mean_s),
-            format!("{:.2}", flops / meas.mean_s / 1e9),
-        ]);
+        let variants: &[(&str, Level, &Pool)] = &[
+            ("scalar,t1", Level::Scalar, &pool1),
+            (n1_label.as_str(), native, &pool1),
+            (tn_label.as_str(), native, pooln.as_ref()),
+        ];
+        for &(variant, level, p) in variants {
+            let meas = bench.run(&format!("gemm {label} {m}x{k}x{n} [{variant}]"), || {
+                c.iter_mut().for_each(|x| *x = 0.0);
+                match &label[..2] {
+                    "tn" => gemm::gemm_tn_with(level, p, m, k, n, &a, &b, &mut c),
+                    "nt" => gemm::gemm_nt_with(level, p, m, k, n, &a, &b, &mut c),
+                    _ => gemm::gemm_nn_with(level, p, m, k, n, &a, &b, &mut c),
+                }
+                std::hint::black_box(&c);
+            });
+            table.row(vec![
+                label.to_string(),
+                format!("{m}x{k}x{n}"),
+                variant.to_string(),
+                fmt_duration(meas.mean_s),
+                format!("{:.2}", flops / meas.mean_s / 1e9),
+            ]);
+        }
     }
-    table.print("GEMM micro-kernels (f32, cache-blocked)");
+    table.print("GEMM micro-kernels (f32, cache-blocked; scalar vs SIMD x threads)");
 
     // --- native forward latency across batch sizes --------------------------
     let mut fwd = Table::new(&["shape", "batch (agents)", "latency", "us/agent"]);

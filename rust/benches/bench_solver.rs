@@ -3,11 +3,14 @@
 //! These numbers calibrate the HPC cost model (EnvCostModel) and are the
 //! §Perf-L3 baseline in EXPERIMENTS.md.
 
-use relexi::fft::{fft3d_ws, Cpx, FftScratch, Plan};
+use relexi::fft::{fft3d_pool, fft3d_ws, Cpx, FftScratch, Plan};
+use relexi::solver::dns::filter_to_les_pool;
 use relexi::solver::forcing::LinearForcing;
 use relexi::solver::init::random_solenoidal;
-use relexi::solver::Solver;
+use relexi::solver::{Grid, Solver};
 use relexi::util::bench::{Bench, Table};
+use relexi::util::pool::{self, Pool};
+use relexi::util::simd::{self, Level};
 use relexi::util::Rng;
 use std::time::Duration;
 
@@ -35,6 +38,54 @@ fn main() {
         b.run(&format!("fft3d {n}^3 (fwd+inv)"), || {
             fft3d_ws(&mut data, &plan, false, &mut ws);
             fft3d_ws(&mut data, &plan, true, &mut ws);
+        });
+    }
+
+    // --- kernel variants (PR 6): scalar vs SIMD dispatch and 1 vs N ---------
+    // --- worker threads on the solver's dominant transform.  Outputs ---------
+    // --- are bit-identical across every variant.                     ---------
+    let native = simd::level();
+    let pool1 = Pool::new(1);
+    let pooln = pool::global();
+    {
+        let n = 48usize;
+        let plan_s = Plan::with_level(n, Level::Scalar);
+        let plan_v = Plan::new(n);
+        let mut ws = FftScratch::new(n);
+        let mut data = vec![Cpx::new(1.0, 0.5); n * n * n];
+        b.run(&format!("fft3d {n}^3 [scalar] (fwd+inv)"), || {
+            fft3d_ws(&mut data, &plan_s, false, &mut ws);
+            fft3d_ws(&mut data, &plan_s, true, &mut ws);
+        });
+        b.run(&format!("fft3d {n}^3 [{}] (fwd+inv)", native.label()), || {
+            fft3d_ws(&mut data, &plan_v, false, &mut ws);
+            fft3d_ws(&mut data, &plan_v, true, &mut ws);
+        });
+        let mut buf = vec![Cpx::ZERO; n * n * n];
+        let mut plane = vec![Cpx::ZERO; n * n];
+        b.run(&format!("fft3d {n}^3 [threads=1] (fwd+inv)"), || {
+            fft3d_pool(&mut data, &plan_v, false, &mut buf, &mut plane, &pool1);
+            fft3d_pool(&mut data, &plan_v, true, &mut buf, &mut plane, &pool1);
+        });
+        let label_n = format!("fft3d {n}^3 [threads={}] (fwd+inv)", pooln.threads());
+        b.run(&label_n, || {
+            fft3d_pool(&mut data, &plan_v, false, &mut buf, &mut plane, &pooln);
+            fft3d_pool(&mut data, &plan_v, true, &mut buf, &mut plane, &pooln);
+        });
+    }
+
+    // --- DNS -> LES spectral filter across pool widths (truth path) ---------
+    {
+        let dns_grid = Grid::new(48);
+        let les_grid = Grid::new(24);
+        let mut rng = Rng::new(9);
+        let u = random_solenoidal(&dns_grid, 1.5, 4.0, &mut rng);
+        b.run("filter 48^3 -> 24^3 [threads=1]", || {
+            std::hint::black_box(filter_to_les_pool(&dns_grid, &u, &les_grid, &pool1));
+        });
+        let label_n = format!("filter 48^3 -> 24^3 [threads={}]", pooln.threads());
+        b.run(&label_n, || {
+            std::hint::black_box(filter_to_les_pool(&dns_grid, &u, &les_grid, &pooln));
         });
     }
 

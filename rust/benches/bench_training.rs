@@ -81,6 +81,14 @@ fn bench_truth(cfg: &RunConfig, smoke: bool) -> Arc<Truth> {
 
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // The kernel-pool width and SIMD level these rows ran at: the CI
+    // matrix drives this binary under RELEXI_THREADS=1 and =4, and the
+    // results must stay comparable across those runs.
+    println!(
+        "kernel pool: {} threads | simd dispatch: {}",
+        relexi::util::pool::global().threads(),
+        relexi::util::simd::level().label()
+    );
     let mut bench = Bench::new("training")
         .with_warmup(Duration::from_millis(0))
         .with_max_samples(if smoke { 1 } else { 3 });

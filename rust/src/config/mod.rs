@@ -369,6 +369,11 @@ pub struct HpcConfig {
     pub cores_per_die: usize,
     /// MPI ranks per environment instance.
     pub ranks_per_env: usize,
+    /// Node-level kernel worker-pool width (FFT plane batches, GEMM
+    /// macro-tiles, DNS/truth loops, batched Burgers waves).  `0` = auto
+    /// (available parallelism); the `RELEXI_THREADS` env var overrides
+    /// both.  Kernel results are bit-identical for every width.
+    pub threads: usize,
     /// Orchestrator shards (1 = single-threaded Redis-like).
     pub db_shards: usize,
     /// Retain the PR-2 store-level sequence-lock wakeup protocol (every
@@ -388,6 +393,7 @@ impl Default for HpcConfig {
             cores_per_node: 128,
             cores_per_die: 8,
             ranks_per_env: 8,
+            threads: 0,
             db_shards: 8,
             db_seqlock_wake: false,
             mpmd: true,
@@ -558,6 +564,7 @@ impl RunConfig {
             t.int_or("hpc.cores_per_die", cfg.hpc.cores_per_die as i64)? as usize;
         cfg.hpc.ranks_per_env =
             t.int_or("hpc.ranks_per_env", cfg.hpc.ranks_per_env as i64)? as usize;
+        cfg.hpc.threads = t.int_or("hpc.threads", cfg.hpc.threads as i64)? as usize;
         cfg.hpc.db_shards = t.int_or("hpc.db_shards", cfg.hpc.db_shards as i64)? as usize;
         cfg.hpc.db_seqlock_wake =
             t.bool_or("hpc.db_seqlock_wake", cfg.hpc.db_seqlock_wake)?;
@@ -797,6 +804,14 @@ mod tests {
         let doc = Toml::parse("[hpc]\ndb_seqlock_wake = true\n").unwrap();
         let c = RunConfig::from_toml(&doc).unwrap();
         assert!(c.hpc.db_seqlock_wake);
+    }
+
+    #[test]
+    fn hpc_threads_parses_and_defaults_to_auto() {
+        assert_eq!(RunConfig::default().hpc.threads, 0, "0 = auto width");
+        let doc = Toml::parse("[hpc]\nthreads = 4\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.hpc.threads, 4);
     }
 
     #[test]

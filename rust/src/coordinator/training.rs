@@ -63,6 +63,10 @@ impl TrainingLoop {
     /// of on the first forward.
     pub fn from_config(cfg: RunConfig, truth: Option<Arc<Truth>>) -> Result<TrainingLoop> {
         cfg.validate()?;
+        // Size the kernel worker pool (SIMD/GEMM/FFT/solver waves) from
+        // `[hpc] threads` before any env or trainer math runs.  Kernel
+        // results are bit-identical for every width.
+        crate::util::pool::configure_global(cfg.hpc.threads);
         // Per-key wakeups by default; `hpc.db_seqlock_wake` retains the
         // PR-2 sequence-lock baseline for A/B runs.
         let wake = if cfg.hpc.db_seqlock_wake {

@@ -41,8 +41,34 @@
 //!
 //! The original recursive per-line engine is preserved verbatim in
 //! [`seed`] as the frozen baseline for `benches/bench_fft.rs`.
+//!
+//! # Node-level parallelism (PR 6)
+//!
+//! Two orthogonal layers sit on top of the batched engine:
+//!
+//! * **SIMD.**  The radix-2/4 butterflies and the inverse scale/copy loops
+//!   are written once against [`crate::util::simd::F64x4`] (two interleaved
+//!   complex numbers per vector) and instantiated per dispatch level —
+//!   scalar and `#[target_feature(enable = "avx2")]` — selected at plan
+//!   build time ([`Plan::new`] probes the CPU; [`Plan::with_level`] pins a
+//!   level for A/B runs; `RELEXI_SIMD=scalar` forces the reference path).
+//!   The twiddle multiply `d*splat(w.re) + swap_pairs(d)*[-w.im, w.im, ..]`
+//!   is bit-identical to the scalar complex product (product signs are
+//!   exact, `x + (-y) == x - y`, addition commutes), so **every level
+//!   computes bit-identical transforms**.  Radix-3/5/generic stay scalar.
+//! * **Threads.**  [`fft3d_with`] runs its x/y plane passes one z-plane per
+//!   task on the persistent worker pool (`[hpc] threads`), each task using
+//!   its own `buf` chunk as staging/scratch.  Per-plane arithmetic is
+//!   untouched, so results are bit-identical for every pool width; the
+//!   z-pass (one `batch = n²` call, memory-bound) stays serial.
+
+use crate::util::pool::{self, Pool};
+use crate::util::simd::{self, F64x4, Level};
 
 /// Complex number (f64) with the handful of ops the FFT and solver need.
+/// `#[repr(C)]` pins the `[re, im]` layout the SIMD kernels view as
+/// interleaved f64 lanes.
+#[repr(C)]
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Cpx {
     pub re: f64,
@@ -121,6 +147,242 @@ impl std::ops::AddAssign for Cpx {
     }
 }
 
+/// View a complex slice as its interleaved `[re, im, re, im, ...]` f64
+/// lanes — sound because [`Cpx`] is `#[repr(C)]` with two f64 fields.
+#[inline(always)]
+fn cpx_f64(s: &[Cpx]) -> &[f64] {
+    // SAFETY: repr(C) { re: f64, im: f64 } has size 16, align 8, no
+    // padding; reinterpreting N Cpx as 2N f64 is exact.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const f64, 2 * s.len()) }
+}
+
+/// Mutable twin of [`cpx_f64`].
+#[inline(always)]
+fn cpx_f64_mut(s: &mut [Cpx]) -> &mut [f64] {
+    // SAFETY: as in `cpx_f64`; exclusivity carries over from `&mut [Cpx]`.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut f64, 2 * s.len()) }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD butterfly passes: one body each, instantiated per dispatch level.
+// Interleaved-complex vectors hold two Cpx per F64x4; the twiddle product
+// and the +-i rotation are exact rewrites of the scalar complex ops, so
+// both instantiations (and the scalar remainder for odd `mb`) are
+// bit-identical to the original per-Cpx loops.
+// ---------------------------------------------------------------------------
+
+macro_rules! instantiate {
+    ($scalar:ident, $avx2:ident, $body:ident ( $($arg:ident : $ty:ty),* )) => {
+        #[allow(clippy::too_many_arguments)]
+        fn $scalar($($arg: $ty),*) {
+            $body($($arg),*)
+        }
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2")]
+        #[allow(clippy::too_many_arguments)]
+        unsafe fn $avx2($($arg: $ty),*) {
+            $body($($arg),*)
+        }
+    };
+}
+
+/// One radix-2 twiddle group: `y0 = a + b`, `y1 = (a - b) * w` over the
+/// interleaved f64 view of `mb` complex elements.
+#[inline(always)]
+fn radix2_body(w: Cpx, x0: &[f64], x1: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+    let len = x0.len();
+    let len4 = len - len % 4;
+    let wre = F64x4::splat(w.re);
+    let wim = F64x4([-w.im, w.im, -w.im, w.im]);
+    let mut i = 0;
+    while i < len4 {
+        let a = F64x4::load(&x0[i..]);
+        let b = F64x4::load(&x1[i..]);
+        a.add(b).store(&mut y0[i..]);
+        let d = a.sub(b);
+        d.mul(wre).add(d.swap_pairs().mul(wim)).store(&mut y1[i..]);
+        i += 4;
+    }
+    while i < len {
+        let a = Cpx::new(x0[i], x0[i + 1]);
+        let b = Cpx::new(x1[i], x1[i + 1]);
+        let s = a + b;
+        let d = (a - b) * w;
+        y0[i] = s.re;
+        y0[i + 1] = s.im;
+        y1[i] = d.re;
+        y1[i + 1] = d.im;
+        i += 2;
+    }
+}
+
+instantiate!(radix2_scalar, radix2_avx2, radix2_body(w: Cpx, x0: &[f64], x1: &[f64], y0: &mut [f64], y1: &mut [f64]));
+
+#[inline]
+fn radix2_pass(level: Level, w: Cpx, x0: &[f64], x1: &[f64], y0: &mut [f64], y1: &mut [f64]) {
+    match level {
+        // SAFETY: Level::Avx2 only comes from the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { radix2_avx2(w, x0, x1, y0, y1) },
+        _ => radix2_scalar(w, x0, x1, y0, y1),
+    }
+}
+
+/// One radix-4 twiddle group.  `s` selects the +-i rotation of `t3`
+/// (`+1` forward = `mul_neg_i`, `-1` inverse = `mul_i`): the rotation is
+/// `swap_pairs(t3) * [s, -s, s, -s]`, exact either way.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn radix4_body(
+    w1: Cpx,
+    w2: Cpx,
+    w3: Cpx,
+    s: f64,
+    x0: &[f64],
+    x1: &[f64],
+    x2: &[f64],
+    x3: &[f64],
+    y0: &mut [f64],
+    y1: &mut [f64],
+    y2: &mut [f64],
+    y3: &mut [f64],
+) {
+    let len = x0.len();
+    let len4 = len - len % 4;
+    let rot = F64x4([s, -s, s, -s]);
+    let (w1re, w1im) = (F64x4::splat(w1.re), F64x4([-w1.im, w1.im, -w1.im, w1.im]));
+    let (w2re, w2im) = (F64x4::splat(w2.re), F64x4([-w2.im, w2.im, -w2.im, w2.im]));
+    let (w3re, w3im) = (F64x4::splat(w3.re), F64x4([-w3.im, w3.im, -w3.im, w3.im]));
+    let mut i = 0;
+    while i < len4 {
+        let a0 = F64x4::load(&x0[i..]);
+        let a1 = F64x4::load(&x1[i..]);
+        let a2 = F64x4::load(&x2[i..]);
+        let a3 = F64x4::load(&x3[i..]);
+        let t0 = a0.add(a2);
+        let t2 = a0.sub(a2);
+        let t1 = a1.add(a3);
+        let t3 = a1.sub(a3);
+        let t3r = t3.swap_pairs().mul(rot);
+        t0.add(t1).store(&mut y0[i..]);
+        let u1 = t2.add(t3r);
+        u1.mul(w1re).add(u1.swap_pairs().mul(w1im)).store(&mut y1[i..]);
+        let u2 = t0.sub(t1);
+        u2.mul(w2re).add(u2.swap_pairs().mul(w2im)).store(&mut y2[i..]);
+        let u3 = t2.sub(t3r);
+        u3.mul(w3re).add(u3.swap_pairs().mul(w3im)).store(&mut y3[i..]);
+        i += 4;
+    }
+    while i < len {
+        let a0 = Cpx::new(x0[i], x0[i + 1]);
+        let a1 = Cpx::new(x1[i], x1[i + 1]);
+        let a2 = Cpx::new(x2[i], x2[i + 1]);
+        let a3 = Cpx::new(x3[i], x3[i + 1]);
+        let t0 = a0 + a2;
+        let t2 = a0 - a2;
+        let t1 = a1 + a3;
+        let t3 = a1 - a3;
+        // Same rotation formula as the vector lanes (exact).
+        let t3r = Cpx::new(t3.im * s, t3.re * -s);
+        let r0 = t0 + t1;
+        let r1 = (t2 + t3r) * w1;
+        let r2 = (t0 - t1) * w2;
+        let r3 = (t2 - t3r) * w3;
+        y0[i] = r0.re;
+        y0[i + 1] = r0.im;
+        y1[i] = r1.re;
+        y1[i + 1] = r1.im;
+        y2[i] = r2.re;
+        y2[i + 1] = r2.im;
+        y3[i] = r3.re;
+        y3[i + 1] = r3.im;
+        i += 2;
+    }
+}
+
+instantiate!(radix4_scalar, radix4_avx2, radix4_body(w1: Cpx, w2: Cpx, w3: Cpx, s: f64, x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y0: &mut [f64], y1: &mut [f64], y2: &mut [f64], y3: &mut [f64]));
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn radix4_pass(
+    level: Level,
+    w1: Cpx,
+    w2: Cpx,
+    w3: Cpx,
+    s: f64,
+    x0: &[f64],
+    x1: &[f64],
+    x2: &[f64],
+    x3: &[f64],
+    y0: &mut [f64],
+    y1: &mut [f64],
+    y2: &mut [f64],
+    y3: &mut [f64],
+) {
+    match level {
+        // SAFETY: Level::Avx2 only comes from the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { radix4_avx2(w1, w2, w3, s, x0, x1, x2, x3, y0, y1, y2, y3) },
+        _ => radix4_scalar(w1, w2, w3, s, x0, x1, x2, x3, y0, y1, y2, y3),
+    }
+}
+
+/// In-place `v *= s` over interleaved lanes (inverse normalization).
+#[inline(always)]
+fn scale_body(data: &mut [f64], s: f64) {
+    let vs = F64x4::splat(s);
+    let len = data.len();
+    let len4 = len - len % 4;
+    let mut i = 0;
+    while i < len4 {
+        F64x4::load(&data[i..]).mul(vs).store(&mut data[i..]);
+        i += 4;
+    }
+    for v in &mut data[len4..] {
+        *v *= s;
+    }
+}
+
+instantiate!(scale_scalar, scale_avx2, scale_body(data: &mut [f64], s: f64));
+
+#[inline]
+fn scale_pass(level: Level, data: &mut [f64], s: f64) {
+    match level {
+        // SAFETY: Level::Avx2 only comes from the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { scale_avx2(data, s) },
+        _ => scale_scalar(data, s),
+    }
+}
+
+/// Fused `dst = src * s` (inverse normalization + ping-pong copy-back).
+#[inline(always)]
+fn scale_copy_body(dst: &mut [f64], src: &[f64], s: f64) {
+    let vs = F64x4::splat(s);
+    let len = dst.len();
+    let len4 = len - len % 4;
+    let mut i = 0;
+    while i < len4 {
+        F64x4::load(&src[i..]).mul(vs).store(&mut dst[i..]);
+        i += 4;
+    }
+    for i in len4..len {
+        dst[i] = src[i] * s;
+    }
+}
+
+instantiate!(scale_copy_scalar, scale_copy_avx2, scale_copy_body(dst: &mut [f64], src: &[f64], s: f64));
+
+#[inline]
+fn scale_copy_pass(level: Level, dst: &mut [f64], src: &[f64], s: f64) {
+    match level {
+        // SAFETY: Level::Avx2 only comes from the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { scale_copy_avx2(dst, src, s) },
+        _ => scale_copy_scalar(dst, src, s),
+    }
+}
+
 fn factorize(mut n: usize) -> Vec<usize> {
     let mut fs = Vec::new();
     for r in [4usize, 2, 3, 5] {
@@ -191,14 +453,14 @@ impl Stage {
         Stage { radix, l, m, fwd, inv, fwd_radix, inv_radix }
     }
 
-    fn apply(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize, inverse: bool) {
+    fn apply(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize, inverse: bool, level: Level) {
         match (self.radix, inverse) {
-            (2, false) => self.radix2::<false>(src, dst, batch),
-            (2, true) => self.radix2::<true>(src, dst, batch),
+            (2, false) => self.radix2::<false>(src, dst, batch, level),
+            (2, true) => self.radix2::<true>(src, dst, batch, level),
             (3, false) => self.radix3::<false>(src, dst, batch),
             (3, true) => self.radix3::<true>(src, dst, batch),
-            (4, false) => self.radix4::<false>(src, dst, batch),
-            (4, true) => self.radix4::<true>(src, dst, batch),
+            (4, false) => self.radix4::<false>(src, dst, batch, level),
+            (4, true) => self.radix4::<true>(src, dst, batch, level),
             (5, false) => self.radix5::<false>(src, dst, batch),
             (5, true) => self.radix5::<true>(src, dst, batch),
             (_, false) => self.radix_any::<false>(src, dst, batch),
@@ -206,21 +468,16 @@ impl Stage {
         }
     }
 
-    fn radix2<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+    fn radix2<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize, level: Level) {
         let (l, m) = (self.l, self.m);
         let mb = m * batch;
         let tw = if INV { &self.inv } else { &self.fwd };
         for j in 0..l {
             let w = tw[j];
-            let x0 = &src[j * mb..(j + 1) * mb];
-            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
+            let x0 = cpx_f64(&src[j * mb..(j + 1) * mb]);
+            let x1 = cpx_f64(&src[(j + l) * mb..(j + l + 1) * mb]);
             let (y0, y1) = dst[2 * j * mb..(2 * j + 2) * mb].split_at_mut(mb);
-            for i in 0..mb {
-                let a = x0[i];
-                let b = x1[i];
-                y0[i] = a + b;
-                y1[i] = (a - b) * w;
-            }
+            radix2_pass(level, w, x0, x1, cpx_f64_mut(y0), cpx_f64_mut(y1));
         }
     }
 
@@ -251,33 +508,40 @@ impl Stage {
         }
     }
 
-    fn radix4<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize) {
+    fn radix4<const INV: bool>(&self, src: &[Cpx], dst: &mut [Cpx], batch: usize, level: Level) {
         let (l, m) = (self.l, self.m);
         let mb = m * batch;
         let tw = if INV { &self.inv } else { &self.fwd };
+        // +-i rotation sign for t3 (+1 forward / -1 inverse), applied as
+        // swap_pairs * [s, -s, ..] — exact vs mul_neg_i/mul_i.
+        let s = if INV { -1.0 } else { 1.0 };
         for j in 0..l {
             let w1 = tw[3 * j];
             let w2 = tw[3 * j + 1];
             let w3 = tw[3 * j + 2];
-            let x0 = &src[j * mb..(j + 1) * mb];
-            let x1 = &src[(j + l) * mb..(j + l + 1) * mb];
-            let x2 = &src[(j + 2 * l) * mb..(j + 2 * l + 1) * mb];
-            let x3 = &src[(j + 3 * l) * mb..(j + 3 * l + 1) * mb];
+            let x0 = cpx_f64(&src[j * mb..(j + 1) * mb]);
+            let x1 = cpx_f64(&src[(j + l) * mb..(j + l + 1) * mb]);
+            let x2 = cpx_f64(&src[(j + 2 * l) * mb..(j + 2 * l + 1) * mb]);
+            let x3 = cpx_f64(&src[(j + 3 * l) * mb..(j + 3 * l + 1) * mb]);
             let out = &mut dst[4 * j * mb..(4 * j + 4) * mb];
             let (y0, rest) = out.split_at_mut(mb);
             let (y1, rest) = rest.split_at_mut(mb);
             let (y2, y3) = rest.split_at_mut(mb);
-            for i in 0..mb {
-                let t0 = x0[i] + x2[i];
-                let t2 = x0[i] - x2[i];
-                let t1 = x1[i] + x3[i];
-                let t3 = x1[i] - x3[i];
-                let t3r = if INV { t3.mul_i() } else { t3.mul_neg_i() };
-                y0[i] = t0 + t1;
-                y1[i] = (t2 + t3r) * w1;
-                y2[i] = (t0 - t1) * w2;
-                y3[i] = (t2 - t3r) * w3;
-            }
+            radix4_pass(
+                level,
+                w1,
+                w2,
+                w3,
+                s,
+                x0,
+                x1,
+                x2,
+                x3,
+                cpx_f64_mut(y0),
+                cpx_f64_mut(y1),
+                cpx_f64_mut(y2),
+                cpx_f64_mut(y3),
+            );
         }
     }
 
@@ -358,6 +622,10 @@ impl Stage {
 pub struct Plan {
     n: usize,
     stages: Vec<Stage>,
+    /// SIMD dispatch level baked in at construction (every level computes
+    /// bit-identical transforms; pinning it keeps dispatch off the inner
+    /// loops and lets benches/tests A/B explicitly).
+    level: Level,
 }
 
 // Compile-time proof that plans and scratch can be shared/sent across the
@@ -370,8 +638,15 @@ fn assert_plan_send_sync() {
 }
 
 impl Plan {
-    /// Build a plan for length `n` (any n >= 1).
+    /// Build a plan for length `n` (any n >= 1) at the CPU-probed SIMD
+    /// level (`RELEXI_SIMD=scalar` forces the reference path).
     pub fn new(n: usize) -> Plan {
+        Plan::with_level(n, simd::level())
+    }
+
+    /// Build a plan pinned to an explicit SIMD dispatch level — the
+    /// scalar-vs-SIMD A/B hook for benches and kernel-agreement tests.
+    pub fn with_level(n: usize, level: Level) -> Plan {
         assert!(n >= 1);
         let mut stages = Vec::new();
         let mut l = n;
@@ -381,12 +656,17 @@ impl Plan {
             stages.push(Stage::new(r, l, m));
             m *= r;
         }
-        Plan { n, stages }
+        Plan { n, stages, level }
     }
 
     /// Transform length.
     pub fn len(&self) -> usize {
         self.n
+    }
+
+    /// The SIMD dispatch level this plan was built with.
+    pub fn level(&self) -> Level {
+        self.level
     }
 
     /// Whether this plan is for length 1 (identity).
@@ -445,21 +725,17 @@ impl Plan {
         let mut dst: &mut [Cpx] = scratch;
         let mut in_data = true;
         for st in &self.stages {
-            st.apply(src, dst, batch, inverse);
+            st.apply(src, dst, batch, inverse, self.level);
             std::mem::swap(&mut src, &mut dst);
             in_data = !in_data;
         }
         if inverse {
             let s = 1.0 / self.n as f64;
             if in_data {
-                for v in src.iter_mut() {
-                    *v = v.scale(s);
-                }
+                scale_pass(self.level, cpx_f64_mut(src), s);
             } else {
                 // Fuse the normalization with the copy back into `data`.
-                for (d, v) in dst.iter_mut().zip(src.iter()) {
-                    *d = v.scale(s);
-                }
+                scale_copy_pass(self.level, cpx_f64_mut(dst), cpx_f64(src), s);
                 in_data = true;
             }
         }
@@ -530,7 +806,8 @@ pub fn fft3d_ws(data: &mut [Cpx], plan: &Plan, inverse: bool, ws: &mut FftScratc
 
 /// In-place 3-D FFT with explicitly provided buffers (`buf` >= n^3,
 /// `plane` >= n^2); the engine behind [`fft3d_ws`], exposed so callers
-/// holding a split-borrowed [`FftScratch`] can reach it.
+/// holding a split-borrowed [`FftScratch`] can reach it.  Plane passes run
+/// on the process-wide worker pool (`[hpc] threads`); see [`fft3d_pool`].
 pub fn fft3d_with(
     data: &mut [Cpx],
     plan: &Plan,
@@ -538,32 +815,55 @@ pub fn fft3d_with(
     buf: &mut [Cpx],
     plane: &mut [Cpx],
 ) {
+    fft3d_pool(data, plan, inverse, buf, plane, &pool::global())
+}
+
+/// [`fft3d_with`] against an explicit worker pool — the thread-count A/B
+/// hook for benches and determinism tests.
+///
+/// The x- and y-passes are plane-local, so they run fused, one z-plane
+/// per pool task, each task staging through its own `n²` chunk of `buf`
+/// (x-pass: transpose into the chunk, transform there with the data plane
+/// as ping-pong scratch, transpose back; y-pass: transform the plane in
+/// place with the chunk as scratch).  Per-plane arithmetic is identical
+/// to the serial engine, so results are **bit-identical for every pool
+/// width**.  The z-pass — one memory-bound `batch = n²` call — stays
+/// serial.  `plane` is retained as the workspace's serial staging area
+/// (the pre-pool engine used it for the x-pass) and validated for layout
+/// compatibility, but the pooled passes stage through `buf` chunks so
+/// tasks never share a buffer.
+pub fn fft3d_pool(
+    data: &mut [Cpx],
+    plan: &Plan,
+    inverse: bool,
+    buf: &mut [Cpx],
+    plane: &mut [Cpx],
+    pool: &Pool,
+) {
     let n = plan.len();
     let n2 = n * n;
     assert_eq!(data.len(), n2 * n);
     assert!(buf.len() >= n2 * n, "buf too small");
     assert!(plane.len() >= n2, "plane too small");
-    let plane = &mut plane[..n2];
-    let run = |p: &mut [Cpx], batch: usize, buf: &mut [Cpx]| {
+    let buf = &mut buf[..n2 * n];
+    let run = |p: &mut [Cpx], batch: usize, scratch: &mut [Cpx]| {
         if inverse {
-            plan.inverse_batch(p, batch, buf);
+            plan.inverse_batch(p, batch, scratch);
         } else {
-            plan.forward_batch(p, batch, buf);
+            plan.forward_batch(p, batch, scratch);
         }
     };
-    // x-pass: transpose each z-plane so the x-lines are batch-inner
-    // (batch = n over y), transform, transpose back.
-    for z in 0..n {
-        let p = &mut data[z * n2..(z + 1) * n2];
-        transpose(p, plane, n);
-        run(plane, n, buf);
-        transpose(plane, p, n);
-    }
-    // y-pass: each z-plane already holds y-lines in batched layout
-    // (batch = n over contiguous x) — transform in place.
-    for z in 0..n {
-        run(&mut data[z * n2..(z + 1) * n2], n, buf);
-    }
+    // Fused x+y pass, one task per z-plane:
+    // * x-pass — transpose the plane so the x-lines are batch-inner
+    //   (batch = n over y), transform, transpose back;
+    // * y-pass — the plane already holds y-lines in batched layout
+    //   (batch = n over contiguous x), transform in place.
+    pool.parallel_chunks_mut2(data, buf, n2, |_, p, bz| {
+        transpose(p, bz, n);
+        run(bz, n, p);
+        transpose(bz, p, n);
+        run(p, n, bz);
+    });
     // z-pass: the whole cube is one batched set of z-lines (batch = n^2
     // over the contiguous (y, x) planes).
     run(data, n2, buf);
@@ -1058,6 +1358,67 @@ mod tests {
         fn check<T: Send + Sync>() {}
         check::<Plan>();
         check::<FftScratch>();
+    }
+
+    #[test]
+    fn simd_levels_compute_bit_identical_transforms() {
+        // 24 = 4·2·3, 32 = 4·4·2, 40 = 4·2·5, 48 = 4·4·3 — exercises the
+        // SIMD radix-2/4 paths alongside the scalar radix-3/5, with an odd
+        // batch to hit the scalar remainder lanes.  The pinned-scalar plan
+        // is the reference; the probed plan must match it bit-for-bit (on
+        // CPUs without AVX2 the two coincide and this degenerates to a
+        // self-check).
+        for n in [24usize, 32, 40, 48] {
+            for batch in [1usize, 5] {
+                let reference = Plan::with_level(n, Level::Scalar);
+                let probed = Plan::new(n);
+                let orig = rand_signal(n * batch, (7 * n + batch) as u64);
+                let mut scratch = vec![Cpx::ZERO; n * batch];
+                let mut a = orig.clone();
+                let mut b = orig;
+                reference.forward_batch(&mut a, batch, &mut scratch);
+                probed.forward_batch(&mut b, batch, &mut scratch);
+                for i in 0..n * batch {
+                    assert_eq!(a[i].re.to_bits(), b[i].re.to_bits(), "fwd re[{i}] n={n}");
+                    assert_eq!(a[i].im.to_bits(), b[i].im.to_bits(), "fwd im[{i}] n={n}");
+                }
+                // The inverse also exercises the SIMD scale/copy-back.
+                reference.inverse_batch(&mut a, batch, &mut scratch);
+                probed.inverse_batch(&mut b, batch, &mut scratch);
+                for i in 0..n * batch {
+                    assert_eq!(a[i].re.to_bits(), b[i].re.to_bits(), "inv re[{i}] n={n}");
+                    assert_eq!(a[i].im.to_bits(), b[i].im.to_bits(), "inv im[{i}] n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fft3d_bit_identical_across_pool_widths() {
+        // Plane partitioning must not perturb a single bit, whatever the
+        // pool width — the solver's lockstep-equivalence gate depends on
+        // fft3d results being thread-count-independent.
+        let n = 12;
+        let plan = Plan::new(n);
+        for inverse in [false, true] {
+            let orig = rand_signal(n * n * n, 90 + inverse as u64);
+            let run_with = |threads: usize| {
+                let pool = Pool::new(threads);
+                let mut d = orig.clone();
+                let mut buf = vec![Cpx::ZERO; n * n * n];
+                let mut plane = vec![Cpx::ZERO; n * n];
+                fft3d_pool(&mut d, &plan, inverse, &mut buf, &mut plane, &pool);
+                d
+            };
+            let base = run_with(1);
+            for threads in [2usize, 8] {
+                let got = run_with(threads);
+                for i in 0..base.len() {
+                    assert_eq!(base[i].re.to_bits(), got[i].re.to_bits(), "re[{i}] @{threads}");
+                    assert_eq!(base[i].im.to_bits(), got[i].im.to_bits(), "im[{i}] @{threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -69,6 +69,9 @@ fn print_usage() {
 
 fn cmd_gen_truth(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    // Truth generation runs outside TrainingLoop, so size the kernel
+    // worker pool (FFT planes, DNS filter loops) here.
+    relexi::util::pool::configure_global(cfg.hpc.threads);
     let out = args.get_or("out", &format!("runs/truth_{}.bin", cfg.case.name));
     let params = TruthParams {
         n_dns: cfg.solver.dns_points,

@@ -12,7 +12,7 @@ pub mod gaussian;
 pub mod reward;
 pub mod trajectory;
 
-pub use burgers::{BurgersBackend, BurgersEnv, BurgersTruth};
+pub use burgers::{BatchCounters, BurgersBackend, BurgersBatch, BurgersEnv, BurgersTruth};
 pub use cfd::{backend_from_config, CfdBackend, CfdEnv, LesBackend};
 pub use env::{LesEnv, StepOut};
 pub use reward::{max_return, reward_from_error};

@@ -8,29 +8,60 @@
 //! * [`gemm_nt`] — `C += A·Bᵀ`     (backward: `dX = dZ·Wᵀ`)
 //!
 //! All three stream the shared panel through a `KC`-deep k-block so it
-//! stays cache-resident across the outer loop, and keep the inner loop a
-//! contiguous axpy/dot over zipped slices — the shape rustc/LLVM
-//! auto-vectorizes.  `gemm_nn` additionally retires two C rows per pass
-//! over the B panel (register-level reuse of the B row).  Sizes here are
-//! MLP-scale (k up to ~1.6k features, n up to a few hundred hidden
-//! units), so the single k-block level is the one that matters; there is
-//! deliberately no threading — the trainer parallelism axis is the env
-//! pool, not the update step.
+//! stays cache-resident across the outer loop.  The inner loops are
+//! written once against [`F32x8`] and instantiated twice — a scalar
+//! symbol and an `#[target_feature(enable = "avx2")]` symbol — with the
+//! level picked at runtime ([`crate::util::simd::level`], overridable via
+//! `RELEXI_SIMD=scalar`).  `gemm_nn` additionally retires two C rows per
+//! pass over the B panel (register-level reuse of the B row).
+//!
+//! Macro-tile threading: large multiplies split their C rows (and the
+//! matching A rows) into disjoint blocks across the persistent worker
+//! pool (`[hpc] threads` / `RELEXI_THREADS`).  Row partitioning never
+//! changes per-element arithmetic order, so results are **bit-identical**
+//! for every thread count — the Adam bit-determinism gate holds under
+//! threading.  Small multiplies stay serial ([`thread_rows`]).
 //!
 //! All kernels *accumulate* into `C`; callers zero (or bias-fill) first.
+
+use crate::util::pool::{self, Pool};
+use crate::util::simd::{self, F32x8, Level};
 
 /// Depth of the k-blocking: `KC` rows of the streamed panel (`KC * n`
 /// floats) stay L1/L2-resident while a block is consumed.
 const KC: usize = 128;
 
-/// `C (m×n) += A (m×k) · B (k×n)`, all row-major.
-pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "A must be m x k");
-    assert_eq!(b.len(), k * n, "B must be k x n");
-    assert_eq!(c.len(), m * n, "C must be m x n");
-    if m == 0 || n == 0 || k == 0 {
-        return;
+/// Minimum C rows per threaded block (below this the per-task overhead
+/// dominates the 2-row retire pattern's useful work).
+const MIN_THREAD_ROWS: usize = 8;
+
+/// Minimum `m*k*n` mul-adds before posting a job beats running serial.
+const MIN_THREAD_WORK: usize = 1 << 16;
+
+/// Row-block size when threading pays off, else `None` (stay serial).
+fn thread_rows(lanes: usize, m: usize, k: usize, n: usize) -> Option<usize> {
+    if lanes <= 1 || m < 2 * MIN_THREAD_ROWS || m * k * n < MIN_THREAD_WORK {
+        return None;
     }
+    // ~2 blocks per lane bounds tail imbalance; the floor keeps blocks
+    // from shrinking below the retire pattern's sweet spot.
+    let blocks = (2 * lanes).min(m / MIN_THREAD_ROWS).max(2);
+    Some((m + blocks - 1) / blocks)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel bodies: written once, instantiated per dispatch level.  Under
+// `#[target_feature(enable = "avx2")]` the compiler turns the F32x8 array
+// ops into 256-bit code; the arithmetic DAG is identical either way (no
+// fast-math, no implicit FMA contraction), so the two instantiations are
+// bit-identical and `Level::Scalar` is the reference semantics.
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) += A (m×k) · B (k×n)` — the caller has already sliced `a`/`c`
+/// to the row block being retired.
+#[inline(always)]
+fn nn_body(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let n8 = n - n % F32x8::LANES;
     let mut k0 = 0;
     while k0 < k {
         let kb = KC.min(k - k0);
@@ -41,10 +72,18 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
             for l in 0..kb {
                 let a0 = a[i * k + k0 + l];
                 let a1 = a[(i + 1) * k + k0 + l];
+                let (va0, va1) = (F32x8::splat(a0), F32x8::splat(a1));
                 let br = &b[(k0 + l) * n..(k0 + l) * n + n];
-                for ((x0, x1), &bv) in c0.iter_mut().zip(c1.iter_mut()).zip(br) {
-                    *x0 += a0 * bv;
-                    *x1 += a1 * bv;
+                let mut j = 0;
+                while j < n8 {
+                    let bv = F32x8::load(&br[j..]);
+                    F32x8::load(&c0[j..]).add(va0.mul(bv)).store(&mut c0[j..]);
+                    F32x8::load(&c1[j..]).add(va1.mul(bv)).store(&mut c1[j..]);
+                    j += F32x8::LANES;
+                }
+                for j in n8..n {
+                    c0[j] += a0 * br[j];
+                    c1[j] += a1 * br[j];
                 }
             }
             i += 2;
@@ -53,13 +92,176 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
             let c0 = &mut c[i * n..(i + 1) * n];
             for l in 0..kb {
                 let a0 = a[i * k + k0 + l];
+                let va0 = F32x8::splat(a0);
                 let br = &b[(k0 + l) * n..(k0 + l) * n + n];
-                for (x0, &bv) in c0.iter_mut().zip(br) {
-                    *x0 += a0 * bv;
+                let mut j = 0;
+                while j < n8 {
+                    let bv = F32x8::load(&br[j..]);
+                    F32x8::load(&c0[j..]).add(va0.mul(bv)).store(&mut c0[j..]);
+                    j += F32x8::LANES;
+                }
+                for j in n8..n {
+                    c0[j] += a0 * br[j];
                 }
             }
         }
         k0 += kb;
+    }
+}
+
+/// `C (m×n) += Aᵀ·B` with `A (k×m)` full-height (k rows) and `c` sliced to
+/// rows `[i0, i0+m)` of the logical C.
+#[inline(always)]
+fn tn_body(i0: usize, m: usize, k: usize, n: usize, ma: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let n8 = n - n % F32x8::LANES;
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for i in 0..m {
+            let ci = &mut c[i * n..(i + 1) * n];
+            for l in k0..k0 + kb {
+                let ai = a[l * ma + i0 + i];
+                let vai = F32x8::splat(ai);
+                let br = &b[l * n..l * n + n];
+                let mut j = 0;
+                while j < n8 {
+                    let bv = F32x8::load(&br[j..]);
+                    F32x8::load(&ci[j..]).add(vai.mul(bv)).store(&mut ci[j..]);
+                    j += F32x8::LANES;
+                }
+                for j in n8..n {
+                    ci[j] += ai * br[j];
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// `C (m×n) += A·Bᵀ` with `A (m×k)`/`B (n×k)`; `a`/`c` sliced to the row
+/// block.  Lane-parallel dot with one vector accumulator and the fixed
+/// `hsum` tree — a different association than a scalar running sum, hence
+/// the f32-tolerance (not bitwise) contract against naive references.
+#[inline(always)]
+fn nt_body(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let kb8 = kb - kb % F32x8::LANES;
+        for i in 0..m {
+            let ar = &a[i * k + k0..i * k + k0 + kb];
+            let ci = &mut c[i * n..(i + 1) * n];
+            for (j, x) in ci.iter_mut().enumerate() {
+                let br = &b[j * k + k0..j * k + k0 + kb];
+                let mut acc = F32x8::splat(0.0);
+                let mut l = 0;
+                while l < kb8 {
+                    acc = acc.add(F32x8::load(&ar[l..]).mul(F32x8::load(&br[l..])));
+                    l += F32x8::LANES;
+                }
+                let mut tail = 0.0f32;
+                for l in kb8..kb {
+                    tail += ar[l] * br[l];
+                }
+                *x += acc.hsum() + tail;
+            }
+        }
+        k0 += kb;
+    }
+}
+
+macro_rules! instantiate {
+    ($scalar:ident, $avx2:ident, $body:ident ( $($arg:ident : $ty:ty),* )) => {
+        fn $scalar($($arg: $ty),*) {
+            $body($($arg),*)
+        }
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $avx2($($arg: $ty),*) {
+            $body($($arg),*)
+        }
+    };
+}
+
+instantiate!(nn_scalar, nn_avx2, nn_body(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]));
+instantiate!(tn_scalar, tn_avx2, tn_body(i0: usize, m: usize, k: usize, n: usize, ma: usize, a: &[f32], b: &[f32], c: &mut [f32]));
+instantiate!(nt_scalar, nt_avx2, nt_body(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]));
+
+#[inline]
+fn nn_dispatch(level: Level, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    match level {
+        // SAFETY: Level::Avx2 is only ever produced by the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { nn_avx2(m, k, n, a, b, c) },
+        _ => nn_scalar(m, k, n, a, b, c),
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tn_dispatch(
+    level: Level,
+    i0: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ma: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    match level {
+        // SAFETY: Level::Avx2 is only ever produced by the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { tn_avx2(i0, m, k, n, ma, a, b, c) },
+        _ => tn_scalar(i0, m, k, n, ma, a, b, c),
+    }
+}
+
+#[inline]
+fn nt_dispatch(level: Level, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    match level {
+        // SAFETY: Level::Avx2 is only ever produced by the CPUID probe.
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { nt_avx2(m, k, n, a, b, c) },
+        _ => nt_scalar(m, k, n, a, b, c),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) += A (m×k) · B (k×n)`, all row-major.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_nn_with(simd::level(), &pool::global(), m, k, n, a, b, c)
+}
+
+/// [`gemm_nn`] with an explicit dispatch level and pool (bench A/B,
+/// determinism tests).
+pub fn gemm_nn_with(
+    level: Level,
+    pool: &Pool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A must be m x k");
+    assert_eq!(b.len(), k * n, "B must be k x n");
+    assert_eq!(c.len(), m * n, "C must be m x n");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    match thread_rows(pool.threads(), m, k, n) {
+        Some(rows) => pool.parallel_chunks_mut(c, rows * n, |blk, c_blk| {
+            let i0 = blk * rows;
+            let mb = c_blk.len() / n;
+            nn_dispatch(level, mb, k, n, &a[i0 * k..(i0 + mb) * k], b, c_blk);
+        }),
+        None => nn_dispatch(level, m, k, n, a, b, c),
     }
 }
 
@@ -67,26 +269,33 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 ///
 /// The weight-gradient kernel: `dW (in×out) = Xᵀ (B×in)ᵀ · dZ (B×out)`.
 pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_tn_with(simd::level(), &pool::global(), m, k, n, a, b, c)
+}
+
+/// [`gemm_tn`] with an explicit dispatch level and pool.
+pub fn gemm_tn_with(
+    level: Level,
+    pool: &Pool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), k * m, "A must be k x m");
     assert_eq!(b.len(), k * n, "B must be k x n");
     assert_eq!(c.len(), m * n, "C must be m x n");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mut k0 = 0;
-    while k0 < k {
-        let kb = KC.min(k - k0);
-        for i in 0..m {
-            let ci = &mut c[i * n..(i + 1) * n];
-            for l in k0..k0 + kb {
-                let ai = a[l * m + i];
-                let br = &b[l * n..l * n + n];
-                for (x, &bv) in ci.iter_mut().zip(br) {
-                    *x += ai * bv;
-                }
-            }
-        }
-        k0 += kb;
+    match thread_rows(pool.threads(), m, k, n) {
+        Some(rows) => pool.parallel_chunks_mut(c, rows * n, |blk, c_blk| {
+            let i0 = blk * rows;
+            let mb = c_blk.len() / n;
+            tn_dispatch(level, i0, mb, k, n, m, a, b, c_blk);
+        }),
+        None => tn_dispatch(level, 0, m, k, n, m, a, b, c),
     }
 }
 
@@ -94,39 +303,33 @@ pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 ///
 /// The input-gradient kernel: `dX (B×in) = dZ (B×out) · W (in×out)ᵀ`.
 pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_nt_with(simd::level(), &pool::global(), m, k, n, a, b, c)
+}
+
+/// [`gemm_nt`] with an explicit dispatch level and pool.
+pub fn gemm_nt_with(
+    level: Level,
+    pool: &Pool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "A must be m x k");
     assert_eq!(b.len(), n * k, "B must be n x k");
     assert_eq!(c.len(), m * n, "C must be m x n");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mut k0 = 0;
-    while k0 < k {
-        let kb = KC.min(k - k0);
-        for i in 0..m {
-            let ar = &a[i * k + k0..i * k + k0 + kb];
-            let ci = &mut c[i * n..(i + 1) * n];
-            for (j, x) in ci.iter_mut().enumerate() {
-                let br = &b[j * k + k0..j * k + k0 + kb];
-                // 4-way unrolled dot: independent accumulators keep the
-                // FMA chain out of the loop-carried dependency.
-                let mut acc = [0.0f32; 4];
-                let mut chunks_a = ar.chunks_exact(4);
-                let mut chunks_b = br.chunks_exact(4);
-                for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
-                    acc[0] += ca[0] * cb[0];
-                    acc[1] += ca[1] * cb[1];
-                    acc[2] += ca[2] * cb[2];
-                    acc[3] += ca[3] * cb[3];
-                }
-                let mut tail = 0.0f32;
-                for (&av, &bv) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
-                    tail += av * bv;
-                }
-                *x += (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
-            }
-        }
-        k0 += kb;
+    match thread_rows(pool.threads(), m, k, n) {
+        Some(rows) => pool.parallel_chunks_mut(c, rows * n, |blk, c_blk| {
+            let i0 = blk * rows;
+            let mb = c_blk.len() / n;
+            nt_dispatch(level, mb, k, n, &a[i0 * k..(i0 + mb) * k], b, c_blk);
+        }),
+        None => nt_dispatch(level, m, k, n, a, b, c),
     }
 }
 
@@ -233,5 +436,78 @@ mod tests {
         let mut c2 = vec![5.0f32; 6];
         gemm_nn(2, 0, 3, &[], &[], &mut c2);
         assert!(c2.iter().all(|&x| x == 5.0), "k=0 must leave C untouched");
+    }
+
+    /// The detected level must agree with the scalar reference: bitwise
+    /// for the lane-parallel kernels (same arithmetic DAG), f32 tolerance
+    /// for the reduction kernel (`hsum` tree vs running sum is still the
+    /// same on both levels, so this holds bitwise too — asserted at
+    /// tolerance per the dispatch contract).
+    #[test]
+    fn simd_level_agrees_with_scalar_reference() {
+        let mut rng = Rng::new(5);
+        let solo = Pool::new(1);
+        let detected = simd::level();
+        for &(m, k, n) in &[(3, 7, 5), (5, KC + 3, 9), (8, 300, 17), (2, 40, 64)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let mut c_ref = vec![0f32; m * n];
+            let mut c_simd = vec![0f32; m * n];
+            gemm_nn_with(Level::Scalar, &solo, m, k, n, &a, &b, &mut c_ref);
+            gemm_nn_with(detected, &solo, m, k, n, &a, &b, &mut c_simd);
+            for i in 0..m * n {
+                assert_eq!(c_ref[i].to_bits(), c_simd[i].to_bits(), "nn[{i}]");
+            }
+
+            let at = fill(&mut rng, k * m);
+            c_ref.iter_mut().for_each(|x| *x = 0.0);
+            c_simd.iter_mut().for_each(|x| *x = 0.0);
+            gemm_tn_with(Level::Scalar, &solo, m, k, n, &at, &b, &mut c_ref);
+            gemm_tn_with(detected, &solo, m, k, n, &at, &b, &mut c_simd);
+            for i in 0..m * n {
+                assert_eq!(c_ref[i].to_bits(), c_simd[i].to_bits(), "tn[{i}]");
+            }
+
+            let bnt = fill(&mut rng, n * k);
+            c_ref.iter_mut().for_each(|x| *x = 0.0);
+            c_simd.iter_mut().for_each(|x| *x = 0.0);
+            gemm_nt_with(Level::Scalar, &solo, m, k, n, &a, &bnt, &mut c_ref);
+            gemm_nt_with(detected, &solo, m, k, n, &a, &bnt, &mut c_simd);
+            assert_close(&c_simd, &c_ref, 1e-6, "nt simd-vs-scalar");
+        }
+    }
+
+    /// Row-block threading must be bit-identical to serial for every
+    /// width — the Adam determinism gate depends on it.
+    #[test]
+    fn threaded_gemm_is_bit_identical_across_widths() {
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (64, 200, 33); // big enough to engage thread_rows
+        assert!(thread_rows(8, m, k, n).is_some(), "shape must thread");
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let at = fill(&mut rng, k * m);
+        let bnt = fill(&mut rng, n * k);
+        let level = simd::level();
+
+        let run = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let p = Pool::new(threads);
+            let mut c1 = vec![0f32; m * n];
+            let mut c2 = vec![0f32; m * n];
+            let mut c3 = vec![0f32; m * n];
+            gemm_nn_with(level, &p, m, k, n, &a, &b, &mut c1);
+            gemm_tn_with(level, &p, m, k, n, &at, &b, &mut c2);
+            gemm_nt_with(level, &p, m, k, n, &a, &bnt, &mut c3);
+            (c1, c2, c3)
+        };
+        let base = run(1);
+        for threads in [2, 8] {
+            let got = run(threads);
+            for i in 0..m * n {
+                assert_eq!(base.0[i].to_bits(), got.0[i].to_bits(), "nn[{i}] @{threads}");
+                assert_eq!(base.1[i].to_bits(), got.1[i].to_bits(), "tn[{i}] @{threads}");
+                assert_eq!(base.2[i].to_bits(), got.2[i].to_bits(), "nt[{i}] @{threads}");
+            }
+        }
     }
 }

@@ -8,6 +8,7 @@ use super::init::random_solenoidal;
 use super::spectral::SpecVec;
 use super::timestep::Solver;
 use crate::fft::{wavenumber, Cpx};
+use crate::util::pool;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -88,36 +89,50 @@ pub fn unpack_state(grid: &Grid, flat: &[f32]) -> SpecVec {
 /// Copies all modes with |k_i| < n_les/2 (Nyquist planes zeroed) and
 /// rescales by `(n_les/n_dns)^3` for the unnormalized-FFT convention.
 pub fn filter_to_les(dns_grid: &Grid, u_dns: &SpecVec, les_grid: &Grid) -> SpecVec {
+    filter_to_les_pool(dns_grid, u_dns, les_grid, &pool::global())
+}
+
+/// [`filter_to_les`] against an explicit worker pool — the thread-count
+/// A/B hook for benches and determinism tests.
+pub fn filter_to_les_pool(
+    dns_grid: &Grid,
+    u_dns: &SpecVec,
+    les_grid: &Grid,
+    pool: &pool::Pool,
+) -> SpecVec {
     let (nd, nl) = (dns_grid.n, les_grid.n);
     assert!(nl <= nd, "LES grid must be coarser than DNS");
     let scale = (nl as f64 / nd as f64).powi(3);
     let half = nl / 2;
     let mut out: SpecVec = [les_grid.zeros(), les_grid.zeros(), les_grid.zeros()];
-    for lz in 0..nl {
-        let kz = wavenumber(lz, nl);
-        if kz.unsigned_abs() as usize >= half {
-            continue;
-        }
-        let dz = if kz >= 0 { kz as usize } else { (nd as i64 + kz) as usize };
-        for ly in 0..nl {
-            let ky = wavenumber(ly, nl);
-            if ky.unsigned_abs() as usize >= half {
-                continue;
+    // One task per output z-plane per component over the kernel worker
+    // pool: tasks write disjoint plane chunks (truncated modes stay at
+    // their initialized zero) and only read the shared DNS state, so any
+    // pool width produces bit-identical output.
+    for (c, comp) in out.iter_mut().enumerate() {
+        pool.parallel_chunks_mut(&mut comp[..], nl * nl, |lz, plane| {
+            let kz = wavenumber(lz, nl);
+            if kz.unsigned_abs() as usize >= half {
+                return;
             }
-            let dy = if ky >= 0 { ky as usize } else { (nd as i64 + ky) as usize };
-            for lx in 0..nl {
-                let kx = wavenumber(lx, nl);
-                if kx.unsigned_abs() as usize >= half {
+            let dz = if kz >= 0 { kz as usize } else { (nd as i64 + kz) as usize };
+            for ly in 0..nl {
+                let ky = wavenumber(ly, nl);
+                if ky.unsigned_abs() as usize >= half {
                     continue;
                 }
-                let dx = if kx >= 0 { kx as usize } else { (nd as i64 + kx) as usize };
-                let li = (lz * nl + ly) * nl + lx;
-                let di = (dz * nd + dy) * nd + dx;
-                for c in 0..3 {
-                    out[c][li] = u_dns[c][di].scale(scale);
+                let dy = if ky >= 0 { ky as usize } else { (nd as i64 + ky) as usize };
+                for lx in 0..nl {
+                    let kx = wavenumber(lx, nl);
+                    if kx.unsigned_abs() as usize >= half {
+                        continue;
+                    }
+                    let dx = if kx >= 0 { kx as usize } else { (nd as i64 + kx) as usize };
+                    let di = (dz * nd + dy) * nd + dx;
+                    plane[ly * nl + lx] = u_dns[c][di].scale(scale);
                 }
             }
-        }
+        });
     }
     out
 }
@@ -344,6 +359,24 @@ mod tests {
         }
         // Filtered KE <= DNS KE.
         assert!(kinetic_energy(&les_grid, &f) <= kinetic_energy(&dns_grid, &u));
+    }
+
+    #[test]
+    fn filter_is_bit_identical_across_pool_widths() {
+        let dns_grid = Grid::new(16);
+        let les_grid = Grid::new(8);
+        let mut rng = Rng::new(6);
+        let u = random_solenoidal(&dns_grid, 1.0, 3.0, &mut rng);
+        let base = filter_to_les_pool(&dns_grid, &u, &les_grid, &pool::Pool::new(1));
+        for threads in [2usize, 8] {
+            let got = filter_to_les_pool(&dns_grid, &u, &les_grid, &pool::Pool::new(threads));
+            for c in 0..3 {
+                for i in 0..les_grid.len() {
+                    assert_eq!(base[c][i].re.to_bits(), got[c][i].re.to_bits());
+                    assert_eq!(base[c][i].im.to_bits(), got[c][i].im.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

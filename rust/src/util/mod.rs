@@ -1,12 +1,15 @@
 //! Foundation utilities built from scratch for this repo (the image's crate
 //! registry only carries `xla` + `anyhow`): PRNG, statistics, binary/JSON IO,
-//! a criterion-style bench harness, and a CLI parser.
+//! a criterion-style bench harness, a CLI parser, runtime-dispatched SIMD
+//! vectors, and a persistent worker pool for node-level kernel parallelism.
 
 pub mod bench;
 pub mod binio;
 pub mod cli;
 pub mod plot;
+pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use rng::Rng;

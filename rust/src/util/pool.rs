@@ -1,0 +1,501 @@
+//! Persistent worker-pool `parallel_for` for node-level kernel parallelism.
+//!
+//! ROADMAP open item 2: the FFT plane batches, the GEMM macro-tiles, and
+//! the DNS/truth-generation loops all want threads without paying a spawn
+//! per call.  [`Pool::new`] spawns `threads - 1` workers ONCE (the caller
+//! is the remaining lane) and posts jobs through a single mutex + two
+//! condvars; steady-state collection makes **zero** spawns, asserted via
+//! [`PoolCounters`] exactly like the env pool's spawn gate.
+//!
+//! Determinism contract: every helper partitions work into DISJOINT output
+//! chunks and never changes per-element arithmetic order, so results are
+//! bit-identical for any thread count and any claiming order.  The repo's
+//! bitwise gates (Adam determinism, lockstep-vs-event equivalence, the
+//! learning smoke under `RELEXI_THREADS=1` vs `4`) rely on this.
+//!
+//! Safety sketch for the borrowed-task window: a posted [`Job`] holds a raw
+//! fat pointer to the caller's closure.  The caller returns only once
+//! `remaining == 0`, which requires all `n_tasks` claims to have FINISHED;
+//! the claim counter is monotonic, so any later `fetch_add` by a straggler
+//! worker yields an index `>= n_tasks` and the dangling pointer is never
+//! dereferenced after the caller's frame dies.  Workers keep only `Arc`s
+//! past that point.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+/// Monotonic spawn/job accounting for the "no steady-state spawns" gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// OS threads spawned over the pool's lifetime — written once at
+    /// construction (`threads - 1`), never again.
+    pub threads_spawned: usize,
+    /// Multi-task jobs posted to the workers.  Inline calls (single-task
+    /// jobs, 1-thread pools, nested calls from inside a task) bypass the
+    /// posting machinery entirely and are deliberately not counted.
+    pub jobs: usize,
+}
+
+/// Type-erased borrowed task: a fat pointer into the caller's frame.  Its
+/// lifetime is enforced by the `remaining` protocol (module docs).
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls are fine) and the protocol
+// guarantees it outlives every dereference.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+#[derive(Clone)]
+struct Job {
+    task: TaskRef,
+    n_tasks: usize,
+    /// Next task index to claim (monotonic; claims >= n_tasks are no-ops).
+    next: Arc<AtomicUsize>,
+    /// Tasks not yet retired; the caller returns when this hits zero.
+    remaining: Arc<AtomicUsize>,
+    panicked: Arc<AtomicBool>,
+}
+
+struct JobState {
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<JobState>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The posting caller waits here for `remaining == 0`.
+    done_cv: Condvar,
+    jobs: AtomicUsize,
+}
+
+/// A fixed-width persistent thread pool.  One job runs at a time
+/// (concurrent `run` callers serialize on an internal posting lock);
+/// nested `run` calls from inside a task degrade to inline execution
+/// instead of deadlocking.
+pub struct Pool {
+    inner: Arc<Inner>,
+    post_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+thread_local! {
+    /// True while this thread is executing a pool task, so nested `run`
+    /// calls fall back to inline execution.
+    static IN_TASK: Cell<bool> = Cell::new(false);
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match &st.job {
+                    Some(j) if st.epoch != seen_epoch => {
+                        seen_epoch = st.epoch;
+                        break j.clone();
+                    }
+                    _ => st = inner.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        run_tasks(inner, &job);
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the posting caller.  Runs
+/// each task under `catch_unwind` so one panicking task cannot unwind past
+/// peers that still borrow the closure; the caller re-raises afterwards.
+fn run_tasks(inner: &Inner, job: &Job) {
+    let prev = IN_TASK.with(|t| t.replace(true));
+    loop {
+        let idx = job.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= job.n_tasks {
+            break;
+        }
+        // SAFETY: idx < n_tasks means the caller is still inside `run`
+        // (it waits for this task's retirement below), so the pointee
+        // is alive.
+        if catch_unwind(AssertUnwindSafe(|| (unsafe { &*job.task.0 })(idx))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel + the final Acquire load forms a release sequence across
+        // all decrementers: every task's writes are visible to the caller.
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Notify under the mutex: the caller checks `remaining` while
+            // holding it, so the wakeup cannot be lost.
+            let _st = inner.state.lock().unwrap();
+            inner.done_cv.notify_all();
+        }
+    }
+    IN_TASK.with(|t| t.set(prev));
+}
+
+impl Pool {
+    /// A pool of `threads` lanes total (`threads - 1` spawned workers; the
+    /// calling thread always participates).  `threads == 0` is clamped
+    /// to 1.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(JobState { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            jobs: AtomicUsize::new(0),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        Pool { inner, post_lock: Mutex::new(()), handles, threads }
+    }
+
+    /// Total lanes (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            threads_spawned: self.handles.len(),
+            jobs: self.inner.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `task(i)` for every `i in 0..n_tasks` across the pool (the
+    /// caller participates).  Tasks must write disjoint data.  A panic in
+    /// any task propagates to the caller — after every claimed task has
+    /// retired, so no peer still borrows the closure.
+    pub fn run(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let nested = IN_TASK.with(|t| t.get());
+        if self.handles.is_empty() || n_tasks == 1 || nested {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        let _post = self.post_lock.lock().unwrap();
+        self.inner.jobs.fetch_add(1, Ordering::Relaxed);
+        let job = Job {
+            task: TaskRef(task as *const (dyn Fn(usize) + Sync)),
+            n_tasks,
+            next: Arc::new(AtomicUsize::new(0)),
+            remaining: Arc::new(AtomicUsize::new(n_tasks)),
+            panicked: Arc::new(AtomicBool::new(false)),
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(job.clone());
+            self.inner.work_cv.notify_all();
+        }
+        run_tasks(&self.inner, &job);
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            while job.remaining.load(Ordering::Acquire) != 0 {
+                st = self.inner.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker-pool task panicked (original message above)");
+        }
+    }
+
+    /// Split `0..n` into `grain`-sized ranges and run `f(start, end)` for
+    /// each.  Chunk boundaries depend only on `(n, grain)` — never on the
+    /// thread count — so any per-chunk arithmetic is reproducible.
+    pub fn parallel_for<F: Fn(usize, usize) + Sync>(&self, n: usize, grain: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let n_chunks = (n + grain - 1) / grain;
+        self.run(n_chunks, &|c| {
+            let start = c * grain;
+            f(start, (start + grain).min(n));
+        });
+    }
+
+    /// Run `f(chunk_index, chunk)` over consecutive `chunk_len` slices of
+    /// `data` in parallel.  Equivalent to `data.chunks_mut(chunk_len)`
+    /// with the index attached.
+    pub fn parallel_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        let n_chunks = (len + chunk_len - 1) / chunk_len;
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(n_chunks, &|c| {
+            let start = c * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: chunks are disjoint by construction and the caller's
+            // `&mut data` pins exclusive access for the whole `run`.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(c, chunk);
+        });
+    }
+
+    /// Two same-length slices chunked in lockstep — `f(chunk_index,
+    /// a_chunk, b_chunk)`.  The FFT plane passes use this to hand every
+    /// task its data plane plus a matching scratch plane.
+    pub fn parallel_chunks_mut2<T, U, F>(&self, a: &mut [T], b: &mut [U], chunk_len: usize, f: F)
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T], &mut [U]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        assert_eq!(a.len(), b.len(), "zipped slices must have equal length");
+        let len = a.len();
+        if len == 0 {
+            return;
+        }
+        let n_chunks = (len + chunk_len - 1) / chunk_len;
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        self.run(n_chunks, &|c| {
+            let start = c * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: disjoint chunks; exclusive access pinned by the two
+            // `&mut` borrows for the whole `run`.
+            let ca = unsafe { std::slice::from_raw_parts_mut(pa.0.add(start), end - start) };
+            let cb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(start), end - start) };
+            f(c, ca, cb);
+        });
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: only used to re-slice disjoint chunks of a caller-held `&mut`.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Process-wide pool
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<RwLock<Arc<Pool>>> = OnceLock::new();
+
+fn global_cell() -> &'static RwLock<Arc<Pool>> {
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(Pool::new(resolve_threads(0)))))
+}
+
+/// The process-wide kernel pool.  Defaults to the auto width (see
+/// [`resolve_threads`]); [`configure_global`] resizes it.
+pub fn global() -> Arc<Pool> {
+    global_cell().read().unwrap().clone()
+}
+
+/// Install the process-wide pool width resolved from `[hpc] threads`.
+/// No-op when the pool already has the requested width, so steady state
+/// never respawns; in-flight `global()` handles keep the old pool alive
+/// until their jobs finish.
+pub fn configure_global(config_threads: usize) {
+    let want = resolve_threads(config_threads);
+    let cell = global_cell();
+    if cell.read().unwrap().threads() == want {
+        return;
+    }
+    *cell.write().unwrap() = Arc::new(Pool::new(want));
+}
+
+/// Thread-count resolution: `RELEXI_THREADS` env (CI matrices, bench
+/// series) > nonzero `[hpc] threads` config > `available_parallelism()`.
+pub fn resolve_threads(config_threads: usize) -> usize {
+    let env = std::env::var("RELEXI_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1);
+    resolve_from(env, config_threads)
+}
+
+fn resolve_from(env: Option<usize>, config_threads: usize) -> usize {
+    if let Some(n) = env {
+        return n;
+    }
+    if config_threads >= 1 {
+        return config_threads;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn fill_deterministic(threads: usize) -> Vec<f64> {
+        let pool = Pool::new(threads);
+        let mut out = vec![0.0f64; 1013]; // odd length -> ragged tail chunk
+        pool.parallel_chunks_mut(&mut out, 7, |c, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                let g = (c * 7 + i) as f64;
+                *x = (g * 0.3).sin() + (g + 1.0).sqrt();
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn results_bit_identical_across_1_2_8_threads() {
+        let a = fill_deterministic(1);
+        let b = fill_deterministic(2);
+        let c = fill_deterministic(8);
+        for i in 0..a.len() {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "lane {i} differs at 2 threads");
+            assert_eq!(a[i].to_bits(), c[i].to_bits(), "lane {i} differs at 8 threads");
+        }
+    }
+
+    #[test]
+    fn steady_state_posts_jobs_without_spawning() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.counters().threads_spawned, 3);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(8, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 800);
+        let c = pool.counters();
+        assert_eq!(c.threads_spawned, 3, "steady state must not spawn");
+        assert_eq!(c.jobs, 100);
+    }
+
+    #[test]
+    fn single_thread_and_single_task_run_inline() {
+        let solo = Pool::new(1);
+        let hits = AtomicUsize::new(0);
+        solo.run(5, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        assert_eq!(solo.counters(), PoolCounters { threads_spawned: 0, jobs: 0 });
+
+        let pool = Pool::new(4);
+        pool.run(1, &|_| {});
+        assert_eq!(pool.counters().jobs, 0, "single-task jobs bypass posting");
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must reach the caller");
+        // The pool stays usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn parallel_for_covers_exact_disjoint_ranges() {
+        let pool = Pool::new(3);
+        let ranges = Mutex::new(Vec::new());
+        pool.parallel_for(23, 5, |s, e| {
+            ranges.lock().unwrap().push((s, e));
+        });
+        let mut got = ranges.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 5), (5, 10), (10, 15), (15, 20), (20, 23)]);
+    }
+
+    #[test]
+    fn chunks_mut2_zips_matching_chunks() {
+        let pool = Pool::new(4);
+        let mut a = vec![0usize; 50];
+        let mut b = vec![0usize; 50];
+        pool.parallel_chunks_mut2(&mut a, &mut b, 8, |c, ca, cb| {
+            assert_eq!(ca.len(), cb.len());
+            for (i, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                *x = c * 8 + i;
+                *y = 2 * (c * 8 + i);
+            }
+        });
+        for i in 0..50 {
+            assert_eq!(a[i], i);
+            assert_eq!(b[i], 2 * i);
+        }
+    }
+
+    #[test]
+    fn nested_run_degrades_to_inline_instead_of_deadlocking() {
+        let pool = Pool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(4, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        assert_eq!(pool.counters().jobs, 1, "inner runs must stay inline");
+    }
+
+    #[test]
+    fn resolution_precedence_env_config_auto() {
+        assert_eq!(resolve_from(Some(3), 8), 3, "env wins over config");
+        assert_eq!(resolve_from(None, 8), 8, "nonzero config wins over auto");
+        let auto = resolve_from(None, 0);
+        assert!(auto >= 1, "auto resolves to available parallelism");
+    }
+
+    #[test]
+    fn global_reconfigure_swaps_only_on_width_change() {
+        // Only exercised when no env override pins the width (the CI
+        // matrix sets RELEXI_THREADS, under which configure_global is a
+        // no-op by design).
+        if std::env::var("RELEXI_THREADS").is_ok() {
+            return;
+        }
+        configure_global(2);
+        let p = global();
+        assert_eq!(p.threads(), 2);
+        configure_global(2);
+        assert!(Arc::ptr_eq(&p, &global()), "same width must not respawn");
+        configure_global(0); // back to auto for other tests in-process
+    }
+}

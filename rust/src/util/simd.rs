@@ -1,0 +1,272 @@
+//! Explicit-width SIMD building blocks with runtime dispatch.
+//!
+//! The image's crate registry has no `wide`/`packed_simd`, so this module
+//! rolls its own fixed-width vectors as plain arrays with
+//! `#[inline(always)]` element-wise ops.  There are deliberately **no raw
+//! intrinsics**: hot kernels (the GEMM micro-kernels, the Stockham
+//! radix-2/4 butterflies) write their inner loop once against
+//! [`F32x8`]/[`F64x4`] and instantiate it twice —
+//!
+//! * a plain scalar symbol (the reference semantics, always available), and
+//! * an `#[target_feature(enable = "avx2")]` symbol (x86_64 only) where the
+//!   compiler autovectorizes the very same array ops into 256-bit code —
+//!
+//! then pick between them at runtime via [`level`] (one cached CPUID probe,
+//! overridable with `RELEXI_SIMD=scalar`).  Because both symbols compile
+//! identical element-wise arithmetic (and Rust never contracts `a*b + c`
+//! into an FMA behind your back), lane-parallel kernels are
+//! **bit-identical** across levels; only kernels that reorder a reduction
+//! (e.g. the `gemm_nt` dot product, whose accumulator association changes)
+//! can differ, and those are asserted at f32 tolerance in tests.
+
+use std::sync::OnceLock;
+
+/// Instruction-set level selected at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar loops — always available, the reference semantics.
+    Scalar,
+    /// 256-bit AVX2 instantiations of the same kernels (x86_64 only).
+    Avx2,
+}
+
+impl Level {
+    /// Stable label for bench rows and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The dispatch level for this process: one CPUID probe, cached.  Set
+/// `RELEXI_SIMD=scalar` to force the reference path (the override can only
+/// lower the level — never force an ISA the CPU lacks).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| detect(std::env::var("RELEXI_SIMD").ok().as_deref()))
+}
+
+/// Pure resolution (testable without touching process env).
+fn detect(override_env: Option<&str>) -> Level {
+    if let Some(v) = override_env {
+        if v.eq_ignore_ascii_case("scalar") {
+            return Level::Scalar;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+    }
+    Level::Scalar
+}
+
+/// Eight `f32` lanes (one AVX2 `ymm` worth).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    pub const LANES: usize = 8;
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> Self {
+        F32x8([x; 8])
+    }
+
+    /// Load from the first 8 elements of `s` (panics when shorter).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    /// Store into the first 8 elements of `s` (panics when shorter).
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..8].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut v = [0.0f32; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] + o.0[i];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: Self) -> Self {
+        let mut v = [0.0f32; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] - o.0[i];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut v = [0.0f32; 8];
+        for i in 0..8 {
+            v[i] = self.0[i] * o.0[i];
+        }
+        F32x8(v)
+    }
+
+    /// Horizontal sum with a FIXED pairwise tree — the same association on
+    /// every dispatch level, so a reduction built on it differs from a
+    /// scalar running sum only by rounding (tested tolerance), and never
+    /// differs between scalar and AVX2 instantiations of the same kernel.
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let v = &self.0;
+        ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+    }
+}
+
+/// Four `f64` lanes (one AVX2 `ymm` worth) — two interleaved complex
+/// numbers `[re0, im0, re1, im1]` in the FFT kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    pub const LANES: usize = 4;
+
+    #[inline(always)]
+    pub fn splat(x: f64) -> Self {
+        F64x4([x; 4])
+    }
+
+    /// Load from the first 4 elements of `s` (panics when shorter).
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        let mut v = [0.0f64; 4];
+        v.copy_from_slice(&s[..4]);
+        F64x4(v)
+    }
+
+    /// Store into the first 4 elements of `s` (panics when shorter).
+    #[inline(always)]
+    pub fn store(self, s: &mut [f64]) {
+        s[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut v = [0.0f64; 4];
+        for i in 0..4 {
+            v[i] = self.0[i] + o.0[i];
+        }
+        F64x4(v)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: Self) -> Self {
+        let mut v = [0.0f64; 4];
+        for i in 0..4 {
+            v[i] = self.0[i] - o.0[i];
+        }
+        F64x4(v)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut v = [0.0f64; 4];
+        for i in 0..4 {
+            v[i] = self.0[i] * o.0[i];
+        }
+        F64x4(v)
+    }
+
+    /// Swap adjacent lanes: `[a, b, c, d] -> [b, a, d, c]`.  On two
+    /// interleaved complex numbers this turns `[re, im, re, im]` into
+    /// `[im, re, im, re]` — the building block of the exact complex
+    /// multiply in the FFT butterflies (a `vpermilpd` under AVX2).
+    #[inline(always)]
+    pub fn swap_pairs(self) -> Self {
+        let v = self.0;
+        F64x4([v[1], v[0], v[3], v[2]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_override_wins_regardless_of_cpu() {
+        assert_eq!(detect(Some("scalar")), Level::Scalar);
+        assert_eq!(detect(Some("SCALAR")), Level::Scalar);
+    }
+
+    #[test]
+    fn unknown_override_falls_back_to_probe() {
+        // "auto"/garbage never forces an ISA up — it just defers to the
+        // CPU probe, which must agree with the no-override result.
+        assert_eq!(detect(Some("auto")), detect(None));
+    }
+
+    #[test]
+    fn level_is_cached_and_stable() {
+        assert_eq!(level(), level());
+    }
+
+    #[test]
+    fn f32x8_elementwise_ops() {
+        let a = F32x8::load(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8::splat(2.0);
+        assert_eq!(a.add(b).0, [3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(a.sub(b).0, [-1.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.mul(b).0, [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        let mut out = [0.0f32; 8];
+        a.store(&mut out);
+        assert_eq!(out, a.0);
+    }
+
+    #[test]
+    fn f32x8_hsum_uses_the_fixed_tree() {
+        let a = F32x8::load(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.hsum(), 36.0);
+        // The association is pinned: ((0+1)+(2+3)) + ((4+5)+(6+7)).
+        let v = [1e8f32, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0];
+        let expect = ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]));
+        assert_eq!(F32x8(v).hsum().to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn f64x4_ops_and_swap_pairs() {
+        let a = F64x4::load(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.swap_pairs().0, [2.0, 1.0, 4.0, 3.0]);
+        assert_eq!(a.add(F64x4::splat(1.0)).0, [2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.sub(F64x4::splat(1.0)).0, [0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(a.mul(F64x4::splat(3.0)).0, [3.0, 6.0, 9.0, 12.0]);
+        let mut out = [0.0f64; 4];
+        a.store(&mut out);
+        assert_eq!(out, a.0);
+    }
+
+    #[test]
+    fn complex_multiply_via_swap_pairs_is_bit_exact() {
+        // The FFT kernels compute (re,im)*(wr,wi) as
+        //   d*splat(wr) + swap_pairs(d)*[-wi, wi, -wi, wi]
+        // which must match the scalar complex product bit-for-bit:
+        // products share sign rules and x + (-y) == x - y in IEEE-754.
+        let d = F64x4([0.3, -1.7, 2.5, 0.01]);
+        let (wr, wi) = (0.8090169943749475, -0.5877852522924731);
+        let got = d
+            .mul(F64x4::splat(wr))
+            .add(d.swap_pairs().mul(F64x4([-wi, wi, -wi, wi])));
+        for pair in 0..2 {
+            let (re, im) = (d.0[2 * pair], d.0[2 * pair + 1]);
+            let sre = re * wr - im * wi;
+            let sim = re * wi + im * wr;
+            assert_eq!(got.0[2 * pair].to_bits(), sre.to_bits());
+            assert_eq!(got.0[2 * pair + 1].to_bits(), sim.to_bits());
+        }
+    }
+}

@@ -19,7 +19,7 @@
 use relexi::config::{BurgersConfig, CaseConfig, EnvVariant, RunConfig};
 use relexi::coordinator::EnvPool;
 use relexi::orchestrator::{Orchestrator, Protocol};
-use relexi::rl::{flatten, Episode};
+use relexi::rl::{flatten, BurgersBackend, Episode};
 use relexi::runtime::stub_policy;
 use relexi::solver::dns::{generate, Truth, TruthParams};
 use relexi::util::Rng;
@@ -326,7 +326,10 @@ fn smoke_burgers_training_iteration_64_envs() {
     ];
 
     let orch = Orchestrator::launch(cfg.hpc.db_shards);
-    let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
+    // Explicit backend handle (registry bypass) so the batched-stepping
+    // counters stay reachable after the pool takes ownership.
+    let backend = Arc::new(BurgersBackend::new(&cfg.burgers).unwrap());
+    let mut pool = EnvPool::with_backend(cfg, backend.clone(), &orch).unwrap();
     let c0 = pool.counters();
     assert_eq!(c0.threads_spawned, 64);
     assert_eq!(c0.envs_built, 64);
@@ -378,6 +381,21 @@ fn smoke_burgers_training_iteration_64_envs() {
     assert_eq!(ds.len(), total_steps * 4);
     let mb = ds.minibatch_indices(64, &mut rng);
     assert!(!mb.is_empty());
+
+    // Every env step went through the shared batched solver path, and
+    // the waves genuinely coalesced: with min_batch = 16 each policy
+    // flush releases >= 16 actions at once, so at least one wave must
+    // have advanced several envs together (workers stage their steps
+    // while the leader holds the grace window open).
+    let bc = backend.batch_counters();
+    assert_eq!(bc.envs_stepped, total_steps, "steps outside the batched path");
+    assert!(bc.waves <= bc.envs_stepped);
+    assert!(
+        bc.max_wave >= 2,
+        "64 concurrent envs never coalesced into a wave (waves={}, max={})",
+        bc.waves,
+        bc.max_wave
+    );
 }
 
 #[test]
