@@ -1,16 +1,30 @@
-//! Bench F4 — regenerates both panels of the paper's Fig. 4 (strong
-//! scaling of FLEXI within Relexi: 2/8/32/128 parallel envs, 2->16 ranks
-//! per env, 24 and 32 DOF) on the simulated cluster.
+//! Bench F4 — two halves:
 //!
-//! Expected shape (paper §6.1): near-ideal FLEXI scaling recovered while
-//! the per-core load is healthy; efficiency drops at 16 ranks/env where
-//! the load per core falls "quite below the optimal load"; the head-node
-//! work makes high-env-count curves saturate earlier.
+//! 1. Regenerates both panels of the paper's Fig. 4 (strong scaling of
+//!    FLEXI within Relexi: 2/8/32/128 parallel envs, 2->16 ranks per
+//!    env, 24 and 32 DOF) on the simulated cluster, with the §6.1 shape
+//!    assertions.
+//! 2. Measures the REAL exchange: a fixed total state payload split
+//!    over E env threads (strong scaling of the wave), one row per
+//!    transport (`wave/{inproc,shm,tcp}/envs{E}`) through the
+//!    [`WaveRig`] harness — per-wave latency of the transport seam with
+//!    zero CFD work in the loop.
+//!
+//! Expected shape: near-ideal FLEXI scaling in the DES half; in the
+//! exchange half `shm` stays within a small factor of `inproc` while
+//! `tcp` pays the kernel round trips, and strong-scaling the wave keeps
+//! the total bytes constant so per-wave time is dominated by per-env
+//! exchange overhead as E grows.  Results land in
+//! `BENCH_strong_scaling.json`; `BENCH_SMOKE=1` shrinks everything to
+//! CI size.
 
 use relexi::hpc::{steps_per_action_for, strong_scaling, ClusterSim};
+use relexi::orchestrator::waverig::WaveRig;
 use relexi::util::bench::{Bench, Table};
+use std::time::Duration;
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let sim = ClusterSim::hawk(16);
     let ranks = [2usize, 4, 8, 16];
 
@@ -42,7 +56,14 @@ fn main() {
             "SHAPE VIOLATION: efficiency must decay with ranks");
     println!("\nshape checks passed: monotone speedup, 16-rank saturation");
 
-    let mut b = Bench::new("strong-scaling-sim");
+    let mut b = if smoke {
+        Bench::new("strong-scaling")
+            .with_warmup(Duration::from_millis(50))
+            .with_target(Duration::from_millis(200))
+            .with_max_samples(10)
+    } else {
+        Bench::new("strong-scaling")
+    };
     b.run("full Fig.4 sweep (both DOF, 4 env counts)", || {
         for dof in [24usize, 32] {
             let spa = steps_per_action_for(dof);
@@ -51,4 +72,26 @@ fn main() {
             }
         }
     });
+
+    // The real exchange, strong-scaled: a FIXED total state payload per
+    // wave split evenly over E envs, so adding envs adds per-env
+    // exchange overhead without adding bytes.
+    let total_floats: usize = if smoke { 1 << 14 } else { 1 << 20 };
+    let env_counts: &[usize] = if smoke { &[2, 8] } else { &[2, 8, 32] };
+    let kinds: &[&str] = if cfg!(unix) {
+        &["inproc", "shm", "tcp"]
+    } else {
+        &["inproc", "tcp"]
+    };
+    for &kind in kinds {
+        for &envs in env_counts {
+            let per_env = (total_floats / envs).max(1);
+            let mut rig = WaveRig::start(kind, &vec![per_env; envs], 8)
+                .unwrap_or_else(|e| panic!("wave rig {kind}/{envs}: {e:#}"));
+            b.run(&format!("wave/{kind}/envs{envs}"), || rig.run_wave());
+        }
+    }
+
+    b.write_json("BENCH_strong_scaling.json")
+        .expect("write BENCH_strong_scaling.json");
 }

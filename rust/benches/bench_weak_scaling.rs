@@ -1,16 +1,30 @@
-//! Bench F3 — regenerates BOTH panels of the paper's Fig. 3 (weak scaling
-//! of Relexi, 24 DOF and 32 DOF, 2/4/8/16 ranks per env, 2..full-partition
-//! environments on 16 Hawk nodes) on the discrete-event cluster simulator,
-//! and times the simulator itself.
+//! Bench F3 — two halves:
 //!
-//! Expected shape (paper §6.1): near-ideal speedup at moderate counts;
-//! efficiency decays toward the full partition; fewer ranks/env scale
-//! better; a visible 1->2-env dip for 2-rank envs (die bandwidth sharing).
+//! 1. Regenerates BOTH panels of the paper's Fig. 3 (weak scaling of
+//!    Relexi, 24 DOF and 32 DOF, 2/4/8/16 ranks per env,
+//!    2..full-partition environments on 16 Hawk nodes) on the
+//!    discrete-event cluster simulator, with the §6.1 shape assertions,
+//!    and times the simulator itself.
+//! 2. Measures the REAL exchange, weak-scaled: a FIXED per-env state
+//!    payload, so doubling E doubles the bytes per wave — one row per
+//!    transport (`wave/{inproc,shm,tcp}/envs{E}`) through the
+//!    [`WaveRig`] harness.
+//!
+//! Expected shape (paper §6.1 + the transport seam): near-ideal DES
+//! speedup at moderate counts; in the exchange half, per-wave time
+//! divided by E (the per-env cost) stays roughly flat for `tcp` —
+//! connections serve envs independently, which is what makes the
+//! process-worker split scale.  Results land in
+//! `BENCH_weak_scaling.json`; `BENCH_SMOKE=1` shrinks everything to CI
+//! size.
 
 use relexi::hpc::{steps_per_action_for, weak_scaling, ClusterSim};
+use relexi::orchestrator::waverig::WaveRig;
 use relexi::util::bench::{Bench, Table};
+use std::time::Duration;
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let sim = ClusterSim::hawk(16);
 
     for dof in [24usize, 32] {
@@ -45,7 +59,14 @@ fn main() {
     println!("\nshape checks passed: fewer-ranks-scale-better, efficiency decay");
 
     // Timing of the simulator itself (it backs every scaling experiment).
-    let mut b = Bench::new("weak-scaling-sim");
+    let mut b = if smoke {
+        Bench::new("weak-scaling")
+            .with_warmup(Duration::from_millis(50))
+            .with_target(Duration::from_millis(200))
+            .with_max_samples(10)
+    } else {
+        Bench::new("weak-scaling")
+    };
     b.run("full Fig.3 sweep (both DOF, 4 rank counts)", || {
         for dof in [24usize, 32] {
             let spa = steps_per_action_for(dof);
@@ -54,4 +75,24 @@ fn main() {
             }
         }
     });
+
+    // The real exchange, weak-scaled: a FIXED per-env state payload per
+    // wave (the per-env LES state doesn't shrink when envs are added).
+    let per_env_floats: usize = if smoke { 1 << 12 } else { 1 << 15 };
+    let env_counts: &[usize] = if smoke { &[2, 8] } else { &[2, 8, 32] };
+    let kinds: &[&str] = if cfg!(unix) {
+        &["inproc", "shm", "tcp"]
+    } else {
+        &["inproc", "tcp"]
+    };
+    for &kind in kinds {
+        for &envs in env_counts {
+            let mut rig = WaveRig::start(kind, &vec![per_env_floats; envs], 8)
+                .unwrap_or_else(|e| panic!("wave rig {kind}/{envs}: {e:#}"));
+            b.run(&format!("wave/{kind}/envs{envs}"), || rig.run_wave());
+        }
+    }
+
+    b.write_json("BENCH_weak_scaling.json")
+        .expect("write BENCH_weak_scaling.json");
 }

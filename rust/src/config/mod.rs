@@ -402,6 +402,56 @@ impl Default for HpcConfig {
     }
 }
 
+/// Env-worker hosting modes selectable via `orchestrator.workers`:
+/// `"threads"` hosts every env as a thread inside the trainer process
+/// (the baseline; pairs with the in-process store), `"processes"`
+/// splits the pool over separate `relexi env-worker` OS processes that
+/// dial the exchange over a network-capable transport.
+pub const WORKER_MODES: &[&str] = &["threads", "processes"];
+
+/// The store transport + worker-process section (`[orchestrator]`):
+/// which exchange flavour serves the state/action dataflow and how the
+/// environment pool is hosted.  See `crate::orchestrator::transport`
+/// for the transport seam itself and `crate::launcher` for the
+/// env->process placement plan.
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    /// Store transport: `"inproc"` (in-process sharded store, the
+    /// bit-identical fast path), `"shm"` (shared-memory rings
+    /// bootstrapped over loopback TCP) or `"tcp"` (length-prefixed
+    /// frames over a socket).  See `orchestrator::TRANSPORTS`.
+    pub transport: String,
+    /// `"threads"` or `"processes"` (see [`WORKER_MODES`]).
+    pub workers: String,
+    /// Worker processes the env pool is split over (processes mode).
+    /// `0` = auto: the launcher plans the split from the topology +
+    /// cost model ([`crate::launcher::plan_worker_processes`]).
+    pub env_procs: usize,
+    /// Exchange bind address; port `0` = ephemeral (the pool passes the
+    /// resolved address to the workers it spawns).
+    pub bind: String,
+    /// Worker-side dial attempts (200 ms apart) before giving up.
+    pub connect_retries: usize,
+    /// Binary spawned as `<worker_bin> env-worker ...`; `""` = the
+    /// currently running executable.  The `RELEXI_WORKER_BIN`
+    /// environment variable overrides both (how integration tests point
+    /// the pool at the Cargo-built binary).
+    pub worker_bin: String,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            transport: "inproc".to_string(),
+            workers: "threads".to_string(),
+            env_procs: 0,
+            bind: "127.0.0.1:0".to_string(),
+            connect_retries: 3,
+            worker_bin: String::new(),
+        }
+    }
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -411,6 +461,7 @@ pub struct RunConfig {
     pub rl: RlConfig,
     pub runtime: RuntimeConfig,
     pub hpc: HpcConfig,
+    pub orchestrator: OrchestratorConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
     /// Output directory for metrics/checkpoints.
@@ -426,6 +477,7 @@ impl Default for RunConfig {
             rl: RlConfig::default(),
             runtime: RuntimeConfig::default(),
             hpc: HpcConfig::default(),
+            orchestrator: OrchestratorConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs/out".to_string(),
         }
@@ -438,6 +490,9 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(v) = t.get("case.preset") {
             cfg.case = presets::by_name(v.as_str()?)?;
+        }
+        if let Some(v) = t.get("case.name") {
+            cfg.case.name = v.as_str()?.to_string();
         }
         if let Some(v) = t.get("case.n") {
             cfg.case.n = v.as_int()? as usize;
@@ -571,6 +626,15 @@ impl RunConfig {
         cfg.hpc.mpmd = t.bool_or("hpc.mpmd", cfg.hpc.mpmd)?;
         cfg.hpc.ram_staging = t.bool_or("hpc.ram_staging", cfg.hpc.ram_staging)?;
 
+        let orc = &mut cfg.orchestrator;
+        orc.transport = t.str_or("orchestrator.transport", &orc.transport)?;
+        orc.workers = t.str_or("orchestrator.workers", &orc.workers)?;
+        orc.env_procs = t.int_or("orchestrator.env_procs", orc.env_procs as i64)? as usize;
+        orc.bind = t.str_or("orchestrator.bind", &orc.bind)?;
+        orc.connect_retries =
+            t.int_or("orchestrator.connect_retries", orc.connect_retries as i64)? as usize;
+        orc.worker_bin = t.str_or("orchestrator.worker_bin", &orc.worker_bin)?;
+
         cfg.artifacts_dir = t.str_or("paths.artifacts", &cfg.artifacts_dir)?;
         cfg.out_dir = t.str_or("paths.out", &cfg.out_dir)?;
         cfg.validate()?;
@@ -699,6 +763,48 @@ impl RunConfig {
             self.hpc.cores_per_node % self.hpc.cores_per_die == 0,
             "cores_per_node must be a multiple of cores_per_die"
         );
+        let orc = &self.orchestrator;
+        anyhow::ensure!(
+            crate::orchestrator::TRANSPORTS.contains(&orc.transport.as_str()),
+            "unknown orchestrator.transport {:?} (expected one of {:?})",
+            orc.transport,
+            crate::orchestrator::TRANSPORTS
+        );
+        anyhow::ensure!(
+            WORKER_MODES.contains(&orc.workers.as_str()),
+            "unknown orchestrator.workers {:?} (expected one of {WORKER_MODES:?})",
+            orc.workers
+        );
+        if orc.workers == "threads" {
+            anyhow::ensure!(
+                orc.transport == "inproc",
+                "orchestrator.workers = \"threads\" hosts envs inside the trainer \
+                 process; use transport = \"inproc\" (got {:?})",
+                orc.transport
+            );
+        } else {
+            anyhow::ensure!(
+                orc.transport != "inproc",
+                "orchestrator.workers = \"processes\" needs a network-capable \
+                 transport (\"shm\" or \"tcp\"), not \"inproc\""
+            );
+            anyhow::ensure!(
+                self.rl.backend == "burgers",
+                "orchestrator.workers = \"processes\" currently supports only \
+                 rl.backend = \"burgers\" (the LES backend ships ground-truth \
+                 packages the worker process cannot reload yet)"
+            );
+            anyhow::ensure!(
+                orc.env_procs <= self.rl.n_envs,
+                "orchestrator.env_procs {} exceeds rl.n_envs {}",
+                orc.env_procs,
+                self.rl.n_envs
+            );
+        }
+        anyhow::ensure!(
+            orc.connect_retries >= 1,
+            "orchestrator.connect_retries must be >= 1"
+        );
         Ok(())
     }
 
@@ -758,6 +864,137 @@ impl RunConfig {
             init_family: self.rl.split_init_pool.then_some((index, n_var)),
             variant: v.clone(),
         }
+    }
+
+    /// Serialize the complete configuration to the TOML subset
+    /// [`RunConfig::from_toml`] reads back.  The trainer hands each
+    /// `relexi env-worker` process its exact effective config (file +
+    /// CLI overlays already applied) through the `RELEXI_WORKER_CONFIG`
+    /// environment variable, so every knob an env construction touches
+    /// must survive the round trip bit-for-bit — floats are emitted via
+    /// Rust's shortest-round-trip formatting.
+    pub fn to_toml_string(&self) -> String {
+        use std::fmt::Write as _;
+        fn q(s: &str) -> String {
+            format!("\"{}\"", s.replace('"', "\\\""))
+        }
+        fn fs(xs: &[f64]) -> String {
+            let parts: Vec<String> = xs.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", parts.join(", "))
+        }
+        let mut o = String::new();
+        let c = &self.case;
+        let _ = writeln!(o, "[case]");
+        let _ = writeln!(o, "name = {}", q(&c.name));
+        let _ = writeln!(o, "n = {}", c.n);
+        let _ = writeln!(o, "elems_per_dir = {}", c.elems_per_dir);
+        let _ = writeln!(o, "k_max = {}", c.k_max);
+        let _ = writeln!(o, "alpha = {}", c.alpha);
+        let s = &self.solver;
+        let _ = writeln!(o, "[solver]");
+        let _ = writeln!(o, "nu = {}", s.nu);
+        let _ = writeln!(o, "cfl = {}", s.cfl);
+        let _ = writeln!(o, "ke_target = {}", s.ke_target);
+        let _ = writeln!(o, "forcing_tau = {}", s.forcing_tau);
+        let _ = writeln!(o, "dt_rl = {}", s.dt_rl);
+        let _ = writeln!(o, "t_end = {}", s.t_end);
+        let _ = writeln!(o, "dns_points = {}", s.dns_points);
+        let _ = writeln!(o, "smagorinsky_cs = {}", s.smagorinsky_cs);
+        let b = &self.burgers;
+        let _ = writeln!(o, "[burgers]");
+        let _ = writeln!(o, "points = {}", b.points);
+        let _ = writeln!(o, "segments = {}", b.segments);
+        let _ = writeln!(o, "nu = {}", b.nu);
+        let _ = writeln!(o, "ke_target = {}", b.ke_target);
+        let _ = writeln!(o, "forcing_tau = {}", b.forcing_tau);
+        let _ = writeln!(o, "noise_amp = {}", b.noise_amp);
+        let _ = writeln!(o, "noise_modes = {}", b.noise_modes);
+        let _ = writeln!(o, "k_max = {}", b.k_max);
+        let _ = writeln!(o, "alpha = {}", b.alpha);
+        let _ = writeln!(o, "dt_rl = {}", b.dt_rl);
+        let _ = writeln!(o, "t_end = {}", b.t_end);
+        let _ = writeln!(o, "cfl = {}", b.cfl);
+        let _ = writeln!(o, "truth_refine = {}", b.truth_refine);
+        let _ = writeln!(o, "truth_states = {}", b.truth_states);
+        let _ = writeln!(o, "truth_spinup = {}", b.truth_spinup);
+        let _ = writeln!(o, "truth_interval = {}", b.truth_interval);
+        let _ = writeln!(o, "truth_seed = {}", b.truth_seed);
+        let r = &self.rl;
+        let _ = writeln!(o, "[rl]");
+        let _ = writeln!(o, "backend = {}", q(&r.backend));
+        let _ = writeln!(o, "gamma = {}", r.gamma);
+        let _ = writeln!(o, "n_envs = {}", r.n_envs);
+        let _ = writeln!(o, "iterations = {}", r.iterations);
+        let _ = writeln!(o, "epochs = {}", r.epochs);
+        let _ = writeln!(o, "minibatch = {}", r.minibatch);
+        let _ = writeln!(o, "eval_every = {}", r.eval_every);
+        let _ = writeln!(o, "seed = {}", r.seed);
+        let _ = writeln!(o, "gae_lambda = {}", r.gae_lambda);
+        let _ = writeln!(o, "min_batch = {}", r.min_batch);
+        let _ = writeln!(o, "split_init_pool = {}", r.split_init_pool);
+        if !r.variants.is_empty() {
+            // Parallel flat arrays, exactly as `from_toml` expects: a
+            // non-positive alpha / k_max entry means "no override".
+            let names: Vec<String> = r.variants.iter().map(|v| q(&v.name)).collect();
+            let _ = writeln!(o, "variant_names = [{}]", names.join(", "));
+            let _ = writeln!(
+                o,
+                "variant_nu_scale = {}",
+                fs(&r.variants.iter().map(|v| v.nu_scale).collect::<Vec<_>>())
+            );
+            let _ = writeln!(
+                o,
+                "variant_t_end_scale = {}",
+                fs(&r.variants.iter().map(|v| v.t_end_scale).collect::<Vec<_>>())
+            );
+            let _ = writeln!(
+                o,
+                "variant_alpha = {}",
+                fs(&r.variants.iter().map(|v| v.alpha.unwrap_or(0.0)).collect::<Vec<_>>())
+            );
+            let _ = writeln!(
+                o,
+                "variant_k_max = {}",
+                fs(&r
+                    .variants
+                    .iter()
+                    .map(|v| v.k_max.unwrap_or(0) as f64)
+                    .collect::<Vec<_>>())
+            );
+        }
+        let rt = &self.runtime;
+        let _ = writeln!(o, "[runtime]");
+        let _ = writeln!(o, "backend = {}", q(&rt.backend));
+        let hidden: Vec<String> = rt.hidden.iter().map(|h| h.to_string()).collect();
+        let _ = writeln!(o, "hidden = [{}]", hidden.join(", "));
+        let _ = writeln!(o, "lr = {}", rt.lr);
+        let _ = writeln!(o, "clip_eps = {}", rt.clip_eps);
+        let _ = writeln!(o, "vf_coef = {}", rt.vf_coef);
+        let _ = writeln!(o, "ent_coef = {}", rt.ent_coef);
+        let _ = writeln!(o, "log_std_init = {}", rt.log_std_init);
+        let h = &self.hpc;
+        let _ = writeln!(o, "[hpc]");
+        let _ = writeln!(o, "worker_nodes = {}", h.worker_nodes);
+        let _ = writeln!(o, "cores_per_node = {}", h.cores_per_node);
+        let _ = writeln!(o, "cores_per_die = {}", h.cores_per_die);
+        let _ = writeln!(o, "ranks_per_env = {}", h.ranks_per_env);
+        let _ = writeln!(o, "threads = {}", h.threads);
+        let _ = writeln!(o, "db_shards = {}", h.db_shards);
+        let _ = writeln!(o, "db_seqlock_wake = {}", h.db_seqlock_wake);
+        let _ = writeln!(o, "mpmd = {}", h.mpmd);
+        let _ = writeln!(o, "ram_staging = {}", h.ram_staging);
+        let orc = &self.orchestrator;
+        let _ = writeln!(o, "[orchestrator]");
+        let _ = writeln!(o, "transport = {}", q(&orc.transport));
+        let _ = writeln!(o, "workers = {}", q(&orc.workers));
+        let _ = writeln!(o, "env_procs = {}", orc.env_procs);
+        let _ = writeln!(o, "bind = {}", q(&orc.bind));
+        let _ = writeln!(o, "connect_retries = {}", orc.connect_retries);
+        let _ = writeln!(o, "worker_bin = {}", q(&orc.worker_bin));
+        let _ = writeln!(o, "[paths]");
+        let _ = writeln!(o, "artifacts = {}", q(&self.artifacts_dir));
+        let _ = writeln!(o, "out = {}", q(&self.out_dir));
+        o
     }
 
     /// The unmodified base scenario (no variant overrides, no init-family
@@ -990,6 +1227,83 @@ mod tests {
             .unwrap();
         let c = RunConfig::from_toml(&doc).unwrap();
         assert_eq!(c.case.n, 6);
+    }
+
+    #[test]
+    fn orchestrator_section_parses_and_defaults_to_inproc_threads() {
+        let base = RunConfig::default();
+        assert_eq!(base.orchestrator.transport, "inproc");
+        assert_eq!(base.orchestrator.workers, "threads");
+        assert_eq!(base.orchestrator.env_procs, 0, "0 = launcher-planned");
+        assert_eq!(base.orchestrator.connect_retries, 3);
+        assert!(base.orchestrator.worker_bin.is_empty());
+        let doc = Toml::parse(
+            "[rl]\nbackend = \"burgers\"\n\
+             [orchestrator]\ntransport = \"tcp\"\nworkers = \"processes\"\n\
+             env_procs = 2\nbind = \"127.0.0.1:7700\"\nconnect_retries = 5\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.orchestrator.transport, "tcp");
+        assert_eq!(c.orchestrator.workers, "processes");
+        assert_eq!(c.orchestrator.env_procs, 2);
+        assert_eq!(c.orchestrator.bind, "127.0.0.1:7700");
+        assert_eq!(c.orchestrator.connect_retries, 5);
+    }
+
+    #[test]
+    fn invalid_orchestrator_section_rejected() {
+        for bad in [
+            // Unknown transport / workers mode.
+            "[orchestrator]\ntransport = \"udp\"\n",
+            "[orchestrator]\nworkers = \"fibers\"\n",
+            // Threads mode is the in-process baseline.
+            "[orchestrator]\ntransport = \"tcp\"\n",
+            // Process workers need a network-capable transport ...
+            "[rl]\nbackend = \"burgers\"\n[orchestrator]\nworkers = \"processes\"\n",
+            // ... and only the Burgers backend supports them.
+            "[orchestrator]\nworkers = \"processes\"\ntransport = \"tcp\"\n",
+            // More worker processes than envs.
+            "[rl]\nbackend = \"burgers\"\nn_envs = 2\n\
+             [orchestrator]\nworkers = \"processes\"\ntransport = \"shm\"\nenv_procs = 3\n",
+            "[orchestrator]\nconnect_retries = 0\n",
+        ] {
+            let doc = Toml::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn to_toml_string_round_trips_every_section() {
+        // The worker process rebuilds its envs from this string, so the
+        // round trip must preserve every knob bit-for-bit — compare the
+        // full Debug rendering (f64 Debug/Display are shortest-repr
+        // round-trippable, so equality here is exact equality).
+        let doc = Toml::parse(
+            "[case]\npreset = \"32dof\"\nalpha = 0.7\n\
+             [solver]\nnu = 0.031\nt_end = 2.5\n\
+             [burgers]\npoints = 48\nsegments = 4\nnoise_amp = 0.3\ntruth_seed = 99\n\
+             [rl]\nbackend = \"burgers\"\nn_envs = 8\nseed = 7\ngamma = 0.97\n\
+             min_batch = 3\nsplit_init_pool = true\n\
+             variant_names = [\"a\", \"b\"]\nvariant_nu_scale = [1.0, 2.0]\n\
+             variant_t_end_scale = [1.0, 0.5]\nvariant_alpha = [0, 0.8]\nvariant_k_max = [0, 4]\n\
+             [runtime]\nbackend = \"native\"\nhidden = [32, 16]\nlr = 0.003\n\
+             [hpc]\nthreads = 4\ndb_shards = 2\ndb_seqlock_wake = true\nmpmd = false\n\
+             [orchestrator]\ntransport = \"tcp\"\nworkers = \"processes\"\nenv_procs = 2\n\
+             bind = \"127.0.0.1:7700\"\nworker_bin = \"target/release/relexi\"\n\
+             [paths]\nartifacts = \"art\"\nout = \"runs/x\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        let text = cfg.to_toml_string();
+        let back = RunConfig::from_toml(&Toml::parse(&text).unwrap()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"), "round trip:\n{text}");
+
+        // The default config round-trips too (incl. ln(0.05) and the
+        // empty variant list / empty worker_bin).
+        let d = RunConfig::default();
+        let back = RunConfig::from_toml(&Toml::parse(&d.to_toml_string()).unwrap()).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
     }
 
     #[test]

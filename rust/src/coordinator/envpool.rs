@@ -50,7 +50,11 @@
 //! families while sharing one backend context and one policy.
 
 use crate::config::RunConfig;
-use crate::orchestrator::{Client, EnvKeys, Key, Orchestrator, Protocol, TensorPool, Value};
+use crate::launcher::{plan_worker_processes, WorkerPlan};
+use crate::orchestrator::protocol::{ctl_begin_key, ctl_hello_key, encode_begin, CTL_STOP_KEY};
+use crate::orchestrator::{
+    Client, EnvKeys, ExchangeServer, Key, Orchestrator, Protocol, TensorPool, Value,
+};
 use crate::rl::{backend_from_config, gaussian, CfdBackend, CfdEnv, Episode, StepRecord};
 use crate::runtime::{Policy, PolicyOut};
 use crate::solver::dns::Truth;
@@ -105,6 +109,35 @@ struct Begin {
     rng: Rng,
 }
 
+/// How the pool's environments are hosted (`orchestrator.workers`).
+enum Workers {
+    /// Env threads inside the trainer process (the seed architecture;
+    /// pairs with the in-process store — no wire anywhere).
+    Threads,
+    /// `relexi env-worker` OS processes dialing the exchange over a
+    /// network transport.  The control plane (begin / hello / stop)
+    /// rides the same store as the data plane.
+    Processes {
+        /// Spawned children, in worker-id order (= plan assignment
+        /// order).
+        children: Vec<std::process::Child>,
+        /// The exchange serving the trainer's store to the workers;
+        /// never read after construction, held so it outlives the
+        /// children (the `Drop` reap runs before this field drops).
+        _server: ExchangeServer,
+        /// env -> process split (contiguous blocks in global env order).
+        plan: WorkerPlan,
+    },
+}
+
+/// How long worker processes get to dial back and say hello (includes
+/// their own backend construction — e.g. the Burgers truth package).
+const HELLO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Bounded teardown: workers that ignore the stop flag this long are
+/// killed.
+const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// Collects rollouts from `n_envs` persistent parallel environments.
 pub struct EnvPool {
     cfg: RunConfig,
@@ -115,6 +148,8 @@ pub struct EnvPool {
     /// pool down).
     txs: Vec<mpsc::Sender<Begin>>,
     handles: Vec<JoinHandle<()>>,
+    /// Threads (the seed architecture) or spawned worker processes.
+    workers: Workers,
     counters: PoolCounters,
     /// Client + last begun protocol, so `Drop` can raise the abort flag
     /// for workers still blocked inside an interrupted iteration.
@@ -197,40 +232,93 @@ impl EnvPool {
         let mut variant_of = Vec::with_capacity(n_envs);
         let mut n_actions_of = Vec::with_capacity(n_envs);
         let (mut obs_len, mut n_agents) = (0usize, 0usize);
-        for i in 0..n_envs {
-            let rv = cfg.variant_for(i);
-            let env = backend
-                .make_env(&rv)
-                .with_context(|| format!("env {i} (variant {})", rv.name))?;
-            if i == 0 {
-                obs_len = env.obs_len();
-                n_agents = env.n_agents();
+        let workers = if cfg.orchestrator.workers == "processes" {
+            // Shape probe: the envs themselves live in the worker
+            // processes, but the collector still needs the pool's
+            // shapes and per-env horizons.  Variants never change the
+            // obs/action shape (asserted below) and fully determine the
+            // horizon, so one probe env per variant suffices.
+            let n_var = cfg.n_variants();
+            let mut probe_actions = Vec::with_capacity(n_var);
+            for v in 0..n_var {
+                let rv = cfg.variant_for(v);
+                let env = backend
+                    .make_env(&rv)
+                    .with_context(|| format!("probe env (variant {})", rv.name))?;
+                if v == 0 {
+                    obs_len = env.obs_len();
+                    n_agents = env.n_agents();
+                }
+                anyhow::ensure!(
+                    env.obs_len() == obs_len && env.n_agents() == n_agents,
+                    "variant {} shape mismatch: obs {}x{} vs pool {}x{}",
+                    rv.name,
+                    env.n_agents(),
+                    env.obs_len(),
+                    n_agents,
+                    obs_len
+                );
+                counters.envs_built += 1;
+                probe_actions.push(env.n_actions());
             }
-            // Variants never change the observation/action shape: one
-            // policy batch serves the whole pool.
-            anyhow::ensure!(
-                env.obs_len() == obs_len && env.n_agents() == n_agents,
-                "env {i} (variant {}) shape mismatch: obs {}x{} vs pool {}x{}",
-                rv.name,
-                env.n_agents(),
-                env.obs_len(),
-                n_agents,
-                obs_len
-            );
-            counters.envs_built += 1;
-            variant_of.push(rv.index);
-            n_actions_of.push(env.n_actions());
+            for i in 0..n_envs {
+                variant_of.push(i % n_var);
+                n_actions_of.push(probe_actions[i % n_var]);
+            }
 
-            let (tx, rx) = mpsc::channel::<Begin>();
-            let client = orch.client();
-            let allocs = exchange_allocs.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("env-worker-{i}"))
-                .spawn(move || worker_loop(env, client, i, rx, allocs))?;
-            counters.threads_spawned += 1;
-            txs.push(tx);
-            handles.push(handle);
-        }
+            let server = orch.serve(&cfg.orchestrator.bind)?;
+            let plan = plan_worker_processes(&cfg, n_envs)?;
+            let mut children =
+                spawn_worker_processes(&cfg, &server.addr().to_string(), &plan)?;
+            if let Err(e) = wait_workers_hello(orch, &mut children) {
+                for c in &mut children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(e);
+            }
+            Workers::Processes {
+                children,
+                _server: server,
+                plan,
+            }
+        } else {
+            for i in 0..n_envs {
+                let rv = cfg.variant_for(i);
+                let env = backend
+                    .make_env(&rv)
+                    .with_context(|| format!("env {i} (variant {})", rv.name))?;
+                if i == 0 {
+                    obs_len = env.obs_len();
+                    n_agents = env.n_agents();
+                }
+                // Variants never change the observation/action shape: one
+                // policy batch serves the whole pool.
+                anyhow::ensure!(
+                    env.obs_len() == obs_len && env.n_agents() == n_agents,
+                    "env {i} (variant {}) shape mismatch: obs {}x{} vs pool {}x{}",
+                    rv.name,
+                    env.n_agents(),
+                    env.obs_len(),
+                    n_agents,
+                    obs_len
+                );
+                counters.envs_built += 1;
+                variant_of.push(rv.index);
+                n_actions_of.push(env.n_actions());
+
+                let (tx, rx) = mpsc::channel::<Begin>();
+                let client = orch.client();
+                let allocs = exchange_allocs.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("env-worker-{i}"))
+                    .spawn(move || worker_loop(env, client, i, rx, allocs))?;
+                counters.threads_spawned += 1;
+                txs.push(tx);
+                handles.push(handle);
+            }
+            Workers::Threads
+        };
         anyhow::ensure!(
             n_agents >= 1 && obs_len % n_agents == 0,
             "backend {}: obs_len {obs_len} must split evenly over {n_agents} agents",
@@ -250,6 +338,7 @@ impl EnvPool {
             backend,
             txs,
             handles,
+            workers,
             counters,
             abort_client: orch.client(),
             current_proto: None,
@@ -685,15 +774,37 @@ impl EnvPool {
     }
 
     /// Wake every parked worker for one iteration (per-env RNG streams
-    /// split in env order, exactly as the seed's spawn loop did).
+    /// split in env order, exactly as the seed's spawn loop did).  The
+    /// processes arm draws the identical `split_seed` sequence in the
+    /// identical global env order and ships the seeds inside the begin
+    /// messages, so the env->process split is invisible to every RNG
+    /// stream in the run.
     fn begin_iteration(&mut self, proto: &Protocol, rng: &mut Rng) -> Result<()> {
         self.current_proto = Some(proto.clone());
-        for (i, tx) in self.txs.iter().enumerate() {
-            tx.send(Begin {
-                proto: proto.clone(),
-                rng: rng.split(i as u64),
-            })
-            .map_err(|_| anyhow!("env worker {i} has exited (earlier panic?)"))?;
+        match &mut self.workers {
+            Workers::Threads => {
+                for (i, tx) in self.txs.iter().enumerate() {
+                    tx.send(Begin {
+                        proto: proto.clone(),
+                        rng: rng.split(i as u64),
+                    })
+                    .map_err(|_| anyhow!("env worker {i} has exited (earlier panic?)"))?;
+                }
+            }
+            Workers::Processes { children, plan, .. } => {
+                let seeds: Vec<u64> = (0..self.cfg.rl.n_envs)
+                    .map(|i| rng.split_seed(i as u64))
+                    .collect();
+                for (w, &(start, count)) in plan.assignments.iter().enumerate() {
+                    if let Ok(Some(status)) = children[w].try_wait() {
+                        bail!("env-worker process {w} died ({status})");
+                    }
+                    let envs: Vec<(usize, u64)> =
+                        (start..start + count).map(|i| (i, seeds[i])).collect();
+                    self.abort_client
+                        .put_bytes(&ctl_begin_key(w), encode_begin(proto.run_tag(), &envs));
+                }
+            }
         }
         Ok(())
     }
@@ -717,6 +828,28 @@ impl Drop for EnvPool {
         // key, so this wakes them without waiting out the poll timeout.
         if let Some(proto) = self.current_proto.take() {
             self.abort_iteration(&proto);
+        }
+        if let Workers::Processes { children, .. } = &mut self.workers {
+            // Stop flag first (read non-consuming, so one flag serves
+            // every worker), then a bounded reap; a worker that ignores
+            // it is killed.  The exchange server (`_server`) drops only
+            // after this body, i.e. it keeps serving until the children
+            // are gone.
+            self.abort_client.put_flag(CTL_STOP_KEY, true);
+            let deadline = Instant::now() + REAP_TIMEOUT;
+            for child in children.iter_mut() {
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) | Err(_) => break,
+                        Ok(None) if Instant::now() >= deadline => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            }
         }
         // Dropping the begin-channels unparks every idle worker with a
         // recv error, which is the shutdown signal.
@@ -831,6 +964,183 @@ fn worker_loop(
         };
         if let Some(msg) = failure {
             client.put_bytes(&keys.fail, msg.into_bytes());
+        }
+    }
+}
+
+/// Resolve the binary to spawn as `relexi env-worker`: the
+/// `RELEXI_WORKER_BIN` env var (integration tests point it at the
+/// Cargo-built binary) > `orchestrator.worker_bin` > the currently
+/// running executable.
+fn worker_binary(cfg: &RunConfig) -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("RELEXI_WORKER_BIN") {
+        if !p.is_empty() {
+            return Ok(p.into());
+        }
+    }
+    if !cfg.orchestrator.worker_bin.is_empty() {
+        return Ok(cfg.orchestrator.worker_bin.clone().into());
+    }
+    std::env::current_exe().context("resolving the running executable as worker binary")
+}
+
+/// Spawn one `relexi env-worker` child per plan assignment.  The full
+/// effective config travels in the `RELEXI_WORKER_CONFIG` env var (no
+/// staging to a shared filesystem needed); the exchange address and the
+/// worker's env block go on the command line.
+fn spawn_worker_processes(
+    cfg: &RunConfig,
+    addr: &str,
+    plan: &WorkerPlan,
+) -> Result<Vec<std::process::Child>> {
+    let bin = worker_binary(cfg)?;
+    let config_text = cfg.to_toml_string();
+    let mut children = Vec::with_capacity(plan.n_procs);
+    for (w, &(start, count)) in plan.assignments.iter().enumerate() {
+        let child = std::process::Command::new(&bin)
+            .arg("env-worker")
+            .arg("--connect")
+            .arg(addr)
+            .arg("--transport")
+            .arg(&cfg.orchestrator.transport)
+            .arg("--worker-id")
+            .arg(w.to_string())
+            .arg("--env-start")
+            .arg(start.to_string())
+            .arg("--env-count")
+            .arg(count.to_string())
+            .env("RELEXI_WORKER_CONFIG", &config_text)
+            .spawn()
+            .with_context(|| format!("spawning env-worker {w} ({})", bin.display()))?;
+        children.push(child);
+    }
+    Ok(children)
+}
+
+/// Block until every spawned worker has put its hello flag (its env
+/// threads are up and its transport works), detecting workers that died
+/// during startup instead of waiting out the timeout.
+fn wait_workers_hello(orch: &Orchestrator, children: &mut [std::process::Child]) -> Result<()> {
+    let client = orch.client();
+    let deadline = Instant::now() + HELLO_TIMEOUT;
+    for w in 0..children.len() {
+        let key = ctl_hello_key(w);
+        loop {
+            if client.poll(&key, Duration::from_millis(200)).is_some() {
+                break;
+            }
+            if let Ok(Some(status)) = children[w].try_wait() {
+                bail!("env-worker {w} exited during startup ({status})");
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "env-worker {w} did not say hello within {HELLO_TIMEOUT:?}"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The env-worker process' half of the pool: hosts one contiguous block
+/// of the global env range as persistent worker threads — the exact
+/// [`worker_loop`] the threads mode runs, fed from decoded begin
+/// messages instead of an in-process channel fan-out.  Constructed by
+/// `relexi env-worker` after dialing the exchange; its `Drop` joins the
+/// threads (teardown is driven by the caller's control loop reacting to
+/// the stop flag or a dead transport).
+pub struct WorkerHost {
+    txs: Vec<mpsc::Sender<Begin>>,
+    handles: Vec<JoinHandle<()>>,
+    env_start: usize,
+}
+
+impl WorkerHost {
+    /// Build the block's envs (scenario variants resolved by *global*
+    /// env index, so the split changes nothing) and spawn their worker
+    /// threads on `client` — normally a remote client dialing the
+    /// trainer's exchange.
+    pub fn spawn(
+        cfg: &RunConfig,
+        client: &Client,
+        env_start: usize,
+        env_count: usize,
+    ) -> Result<WorkerHost> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            env_count >= 1 && env_start + env_count <= cfg.rl.n_envs,
+            "env block {env_start}..{} outside the pool of {}",
+            env_start + env_count,
+            cfg.rl.n_envs
+        );
+        let backend = backend_from_config(cfg, None)?;
+        let allocs = Arc::new(AtomicU64::new(0));
+        let mut txs = Vec::with_capacity(env_count);
+        let mut handles = Vec::with_capacity(env_count);
+        for i in env_start..env_start + env_count {
+            let rv = cfg.variant_for(i);
+            let env = backend
+                .make_env(&rv)
+                .with_context(|| format!("env {i} (variant {})", rv.name))?;
+            let (tx, rx) = mpsc::channel::<Begin>();
+            let c = client.clone();
+            let a = allocs.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("env-worker-{i}"))
+                .spawn(move || worker_loop(env, c, i, rx, a))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(WorkerHost {
+            txs,
+            handles,
+            env_start,
+        })
+    }
+
+    /// Envs hosted by this block.
+    pub fn env_count(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Kick one iteration from a decoded begin message: `envs` =
+    /// `(global env index, rng seed)`, which must cover exactly this
+    /// host's block.  `Rng::new(seed)` reconstructs the stream the
+    /// threads mode would have split off locally.
+    pub fn begin(&self, run_tag: &str, envs: &[(usize, u64)]) -> Result<()> {
+        anyhow::ensure!(
+            envs.len() == self.txs.len(),
+            "begin message covers {} envs, host holds {}",
+            envs.len(),
+            self.txs.len()
+        );
+        let proto = Protocol::new(run_tag);
+        for &(env, seed) in envs {
+            let slot = env
+                .checked_sub(self.env_start)
+                .filter(|&s| s < self.txs.len())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "begin message env {env} outside block {}..{}",
+                        self.env_start,
+                        self.env_start + self.txs.len()
+                    )
+                })?;
+            self.txs[slot]
+                .send(Begin {
+                    proto: proto.clone(),
+                    rng: Rng::new(seed),
+                })
+                .map_err(|_| anyhow!("env thread {env} has exited"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerHost {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }

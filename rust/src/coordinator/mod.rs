@@ -11,7 +11,7 @@ pub mod evaluate;
 pub mod metrics;
 pub mod training;
 
-pub use envpool::{EnvPool, PoolCounters, Rollouts};
+pub use envpool::{EnvPool, PoolCounters, Rollouts, WorkerHost};
 pub use evaluate::{eval_baseline, eval_policy, eval_policy_in, EvalResult};
 pub use metrics::{IterationMetrics, MetricsLog};
 pub use training::TrainingLoop;

@@ -123,6 +123,24 @@ impl HeadCostModel {
         let db = bytes / (self.db_bw_per_shard * effective_shards);
         inference + seq + db
     }
+
+    /// Largest env count one worker process can host while its serialized
+    /// per-wave head work ([`HeadCostModel::step_time`]) stays within
+    /// `budget_s` — the envs-per-process knob of the launcher's
+    /// process-placement plan (`launcher::plan_worker_processes`).
+    /// Always at least 1 (a single env may legitimately blow the budget).
+    pub fn envs_per_process_for(
+        &self,
+        n_elems: usize,
+        state_bytes: f64,
+        budget_s: f64,
+    ) -> usize {
+        let mut n = 1usize;
+        while n < 4096 && self.step_time(n + 1, n_elems, state_bytes) <= budget_s {
+            n += 1;
+        }
+        n
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +185,17 @@ mod tests {
         let t16 = h.step_time(16, 64, 220e3);
         let t64 = h.step_time(64, 64, 220e3);
         assert!(t64 > 2.5 * t16, "t16={t16} t64={t64}");
+    }
+
+    #[test]
+    fn envs_per_process_scales_with_the_budget() {
+        let h = HeadCostModel::default();
+        let tight = h.envs_per_process_for(8, 384.0, 0.004);
+        let loose = h.envs_per_process_for(8, 384.0, 0.05);
+        assert!(tight >= 1);
+        assert!(loose > tight, "tight={tight} loose={loose}");
+        // An impossible budget still yields a runnable plan.
+        assert_eq!(h.envs_per_process_for(8, 384.0, 0.0), 1);
     }
 
     #[test]

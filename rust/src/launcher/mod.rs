@@ -13,6 +13,8 @@ pub use mpmd::{LaunchMode, LaunchModel};
 pub use rankfile::{place, Placement};
 pub use staging::{StagingMode, StagingModel};
 
+use crate::config::RunConfig;
+use crate::hpc::costmodel::HeadCostModel;
 use crate::hpc::topology::Topology;
 use anyhow::Result;
 
@@ -76,6 +78,95 @@ impl Launcher {
     }
 }
 
+/// Placement plan for the `orchestrator.workers = "processes"` mode: how
+/// the env pool is split over `relexi env-worker` OS processes.  Built by
+/// [`plan_worker_processes`] from the cluster topology + head cost model,
+/// consumed by `coordinator::envpool` when it spawns the workers.
+#[derive(Debug, Clone)]
+pub struct WorkerPlan {
+    /// Worker processes to spawn.
+    pub n_procs: usize,
+    /// `assignments[p] = (env_start, env_count)` — contiguous blocks in
+    /// global env order, covering `0..n_envs` exactly once (the pool's
+    /// seed derivation iterates envs in this global order, so the split
+    /// never perturbs the RNG streams).
+    pub assignments: Vec<(usize, usize)>,
+    /// OpenMPI-style rankfile text for the placement (one "rank" per
+    /// hosted env thread), kept for parity with the batch-launch path.
+    pub rankfile: String,
+    /// Modelled startup time of the worker batch (launch + staging).
+    pub est_startup_s: f64,
+}
+
+/// Head-work budget per collection wave used by the auto split
+/// (`orchestrator.env_procs = 0`): processes are sized so one worker's
+/// serialized per-wave cost stays within this bound.
+const AUTO_WAVE_BUDGET_S: f64 = 0.02;
+
+/// Plan the env -> process split for `n_envs` environments.  An explicit
+/// `orchestrator.env_procs >= 1` pins the process count; `0` sizes
+/// processes from [`HeadCostModel::envs_per_process_for`] under the
+/// cluster topology in `cfg.hpc`.
+pub fn plan_worker_processes(cfg: &RunConfig, n_envs: usize) -> Result<WorkerPlan> {
+    anyhow::ensure!(n_envs >= 1, "worker plan needs at least one env");
+    let n_procs = if cfg.orchestrator.env_procs >= 1 {
+        cfg.orchestrator.env_procs.min(n_envs)
+    } else {
+        let head = HeadCostModel {
+            db_shards: cfg.hpc.db_shards.max(1),
+            ..HeadCostModel::default()
+        };
+        // Burgers workers: one "element" per control segment, a
+        // points-long f32 state tensor.
+        let per = head.envs_per_process_for(
+            cfg.burgers.segments,
+            cfg.burgers.points as f64 * 4.0,
+            AUTO_WAVE_BUDGET_S,
+        );
+        n_envs.div_ceil(per)
+    };
+    let base = n_envs / n_procs;
+    let rem = n_envs % n_procs;
+    let mut assignments = Vec::with_capacity(n_procs);
+    let mut start = 0usize;
+    for p in 0..n_procs {
+        let count = base + usize::from(p < rem);
+        assignments.push((start, count));
+        start += count;
+    }
+    debug_assert_eq!(start, n_envs);
+
+    let topology = Topology {
+        nodes: cfg.hpc.worker_nodes,
+        cores_per_node: cfg.hpc.cores_per_node,
+        cores_per_die: cfg.hpc.cores_per_die,
+    };
+    let launcher = Launcher::new(topology);
+    // One instance per worker process, one pinned core per hosted env
+    // thread (uniform at the widest assignment so place() never
+    // straddles a node).
+    let widest = assignments.iter().map(|&(_, c)| c).max().unwrap_or(1);
+    let mode = if cfg.hpc.mpmd {
+        LaunchMode::Mpmd
+    } else {
+        LaunchMode::Individual
+    };
+    let staging = if cfg.hpc.ram_staging {
+        StagingMode::RamDrive
+    } else {
+        StagingMode::Lustre
+    };
+    let plan = launcher.plan(n_procs, widest.max(1), mode, staging)?;
+    // Inputs per worker: the config string + the binary image page-in.
+    let est_startup_s = launcher.startup_time(&plan, 2, 4e3);
+    Ok(WorkerPlan {
+        n_procs,
+        assignments,
+        rankfile: plan.placement.rankfile_text(),
+        est_startup_s,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +187,40 @@ mod tests {
             t_fast * 10.0 < t_slow,
             "fast={t_fast:.3}s slow={t_slow:.3}s"
         );
+    }
+
+    #[test]
+    fn worker_plan_partitions_envs_exactly_once() {
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.rl.backend = "burgers".to_string();
+        cfg.orchestrator.workers = "processes".to_string();
+        cfg.orchestrator.transport = "tcp".to_string();
+
+        // Explicit process count: contiguous blocks, sizes differ by <= 1.
+        cfg.orchestrator.env_procs = 3;
+        let p = plan_worker_processes(&cfg, 8).unwrap();
+        assert_eq!(p.n_procs, 3);
+        assert_eq!(p.assignments, vec![(0, 3), (3, 3), (6, 2)]);
+        assert!(!p.rankfile.is_empty());
+        assert!(p.est_startup_s > 0.0);
+
+        // More processes than envs clamps to one env per process.
+        cfg.orchestrator.env_procs = 100;
+        let p = plan_worker_processes(&cfg, 4).unwrap();
+        assert_eq!(p.n_procs, 4);
+        assert!(p.assignments.iter().all(|&(_, c)| c == 1));
+
+        // Auto mode (env_procs = 0) covers every env exactly once.
+        cfg.orchestrator.env_procs = 0;
+        let p = plan_worker_processes(&cfg, 64).unwrap();
+        assert!(p.n_procs >= 1 && p.n_procs <= 64);
+        let total: usize = p.assignments.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 64);
+        let mut next = 0;
+        for &(start, count) in &p.assignments {
+            assert_eq!(start, next, "non-contiguous assignment");
+            next += count;
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! relexi train      [--config cfg.toml] [--truth truth.bin] [--rl.iterations N] ...
 //! relexi eval       --truth truth.bin --checkpoint policy.bin
 //! relexi scaling    [--mode weak|strong] [--case.preset 24dof]
+//! relexi env-worker --connect host:port [--transport tcp|shm] [--worker-id N]
 //! relexi info
 //! ```
 //!
@@ -43,6 +44,7 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("scaling") => cmd_scaling(&args),
+        Some("env-worker") => cmd_env_worker(&args),
         Some("info") => cmd_info(),
         other => {
             if let Some(cmd) = other {
@@ -63,6 +65,9 @@ fn print_usage() {
            train       run the PPO training loop (--truth, --rl.iterations, ...)\n\
            eval        evaluate a checkpoint vs the baselines (--checkpoint)\n\
            scaling     regenerate the Fig. 3/4 scaling studies (--mode weak|strong)\n\
+           env-worker  host an env block as a separate process dialing the exchange\n\
+                       (--connect host:port --transport tcp|shm --worker-id N\n\
+                        --env-start N --env-count N; config via RELEXI_WORKER_CONFIG)\n\
            info        print artifact/runtime diagnostics"
     );
 }
@@ -269,6 +274,86 @@ fn cmd_scaling(args: &Args) -> Result<()> {
             other => bail!("unknown scaling mode {other:?} (weak|strong)"),
         }
     }
+    Ok(())
+}
+
+/// `relexi env-worker` — host a contiguous block of environments as a
+/// separate OS process.  Spawned by the trainer (`orchestrator.workers =
+/// "processes"`), dials the trainer's exchange over `--transport`
+/// (`tcp`/`shm`), announces itself with a hello flag, then serves
+/// begin-iteration commands shipped through the store itself until the
+/// stop flag is posted or the connection is lost (bounded reconnects are
+/// handled inside the transport; exhausting them exits the worker).
+fn cmd_env_worker(args: &Args) -> Result<()> {
+    use relexi::coordinator::WorkerHost;
+    use relexi::orchestrator::protocol::{
+        ctl_begin_key, ctl_hello_key, decode_begin, CTL_STOP_KEY,
+    };
+    use relexi::orchestrator::{Client, RemoteTransport, Value};
+    use std::time::Duration;
+
+    // The trainer ships its exact RunConfig through the environment so
+    // both sides build identical env stacks; a standalone invocation
+    // (tests, debugging) falls back to --config + dotted overrides.
+    let cfg = match std::env::var("RELEXI_WORKER_CONFIG") {
+        Ok(text) if !text.is_empty() => {
+            let doc = relexi::config::toml::Toml::parse(&text)
+                .context("parse RELEXI_WORKER_CONFIG")?;
+            RunConfig::from_toml(&doc).context("RELEXI_WORKER_CONFIG")?
+        }
+        _ => load_config(args)?,
+    };
+    relexi::util::pool::configure_global(cfg.hpc.threads);
+
+    let addr = args
+        .get("connect")
+        .context("env-worker needs --connect <host:port>")?
+        .to_string();
+    let kind = args.get_or("transport", &cfg.orchestrator.transport);
+    let worker_id = args.get_parse("worker-id", 0usize)?;
+    let env_start = args.get_parse("env-start", 0usize)?;
+    let env_count = args.get_parse("env-count", cfg.rl.n_envs)?;
+
+    let transport =
+        RemoteTransport::connect(&kind, &addr, cfg.orchestrator.connect_retries as u32)?;
+    let client = Client::remote(transport.clone());
+    let host = WorkerHost::spawn(&cfg, &client, env_start, env_count)?;
+    client.put_flag(&ctl_hello_key(worker_id), true);
+
+    let begin_key = ctl_begin_key(worker_id);
+    loop {
+        // The stop flag is read non-consuming (one flag serves every
+        // worker); the begin command is taken exactly once below.
+        match transport.wait_any(
+            &[begin_key.as_str(), CTL_STOP_KEY],
+            Duration::from_millis(500),
+            false,
+        ) {
+            Ok(Some((0, _))) => match transport.take(&begin_key) {
+                Ok(Some(Value::Bytes(b))) => {
+                    let (tag, envs) = decode_begin(&b)?;
+                    host.begin(&tag, &envs)?;
+                }
+                // Raced with a concurrent take or saw a stale type: the
+                // next wait re-observes whatever is actually there.
+                Ok(_) => continue,
+                Err(e) => {
+                    eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+                    break;
+                }
+            },
+            Ok(Some(_)) => break, // stop flag posted: clean shutdown
+            Ok(None) => continue, // timeout tick; poll again
+            Err(e) => {
+                // RemoteTransport already retried the dial + one fresh
+                // reconnect per op; a surfaced error means the trainer
+                // is gone.  Exit cleanly rather than spin.
+                eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+                break;
+            }
+        }
+    }
+    drop(host);
     Ok(())
 }
 

@@ -15,12 +15,18 @@
 
 pub mod protocol;
 pub mod store;
+pub mod transport;
 pub mod value;
+pub mod waverig;
 
 pub use protocol::{EnvKeys, PoolKeys, Protocol};
 pub use store::{Key, KeyLike, ShardedStore, StatsSnapshot, Subscription, WakeMode};
+pub use transport::{
+    ExchangeServer, InprocTransport, RemoteTransport, Transport, TransportSub, TRANSPORTS,
+};
 pub use value::{TensorPool, Value};
 
+use anyhow::Result;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -50,8 +56,16 @@ impl Orchestrator {
     /// A client handle (cheap to clone across worker threads).
     pub fn client(&self) -> Client {
         Client {
-            store: self.store.clone(),
+            backend: ClientBackend::Inproc(self.store.clone()),
         }
+    }
+
+    /// Expose this store to other processes: bind an
+    /// [`ExchangeServer`] on `bind` (e.g. `"127.0.0.1:0"`).  Remote
+    /// clients ([`Client::remote`]) then share the exact same key
+    /// space and blocking-op guarantees as in-process clients.
+    pub fn serve(&self, bind: &str) -> Result<ExchangeServer> {
+        ExchangeServer::bind(self.store.clone(), bind)
     }
 
     /// Direct store access (benches, tests).
@@ -70,61 +84,132 @@ impl Orchestrator {
     }
 }
 
+/// The transport behind a [`Client`], resolved once at construction.
+/// The in-process arm calls the store directly — no trait object, no
+/// re-boxing of payloads, bit-identical to the pre-seam path.  The
+/// remote arm speaks a wire transport ([`transport::RemoteTransport`]).
+#[derive(Clone)]
+enum ClientBackend {
+    Inproc(Arc<ShardedStore>),
+    Remote(Arc<dyn Transport>),
+}
+
+/// A remote transport failure is unrecoverable for the no-`Result`
+/// `Client` API (the transport already retried once on a fresh
+/// connection): report and die — the env-worker control loop, which
+/// needs a *clean* exit on trainer death, talks to the [`Transport`]
+/// directly instead of through `Client`.
+fn transported<T>(kind: &str, r: Result<T>) -> T {
+    r.unwrap_or_else(|e| panic!("orchestrator {kind} transport failed: {e:#}"))
+}
+
 /// Client handle — the SmartRedis-client analogue used by both the
 /// environment side (Fortran client in the paper) and the trainer side
 /// (Python client in the paper).  Every method takes any [`KeyLike`]:
 /// plain `&str`, `&String`, or a precomputed [`Key`] handle.
+///
+/// A client is either in-process (from [`Orchestrator::client`]) or
+/// remote (from [`Client::remote`], dialing an [`ExchangeServer`]);
+/// the API and blocking semantics are identical either way.
 #[derive(Clone)]
 pub struct Client {
-    store: Arc<ShardedStore>,
+    backend: ClientBackend,
 }
 
 impl Client {
+    /// A client over a remote transport (see
+    /// [`transport::RemoteTransport::connect`]).  Transport failures
+    /// panic with context; callers needing graceful degradation use
+    /// the [`Transport`] trait directly.
+    pub fn remote(transport: Arc<dyn Transport>) -> Client {
+        Client {
+            backend: ClientBackend::Remote(transport),
+        }
+    }
+
+    /// The transport kind serving this client (`"inproc"`, `"shm"`,
+    /// `"tcp"`).
+    pub fn transport_kind(&self) -> &'static str {
+        match &self.backend {
+            ClientBackend::Inproc(_) => "inproc",
+            ClientBackend::Remote(t) => t.kind(),
+        }
+    }
+
     /// Write a tensor from owned vectors (moved into shared buffers).
     pub fn put_tensor<K: KeyLike + ?Sized>(&self, key: &K, shape: Vec<usize>, data: Vec<f32>) {
-        self.store.put(key, Value::tensor(shape, data));
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put(key, Value::tensor(shape, data)),
+            ClientBackend::Remote(t) => {
+                transported(t.kind(), t.put(key.name(), Value::tensor(shape, data)))
+            }
+        }
     }
 
     /// Write a tensor from already-shared buffers — the zero-copy publish
     /// path: the store holds a refcount on the caller's buffer, and no
-    /// float is copied anywhere.
+    /// float is copied anywhere.  (Over a remote transport the wire copy
+    /// is unavoidable; the buffer handle itself still isn't re-boxed.)
     pub fn put_tensor_shared<K: KeyLike + ?Sized>(
         &self,
         key: &K,
         shape: Arc<[usize]>,
         data: Arc<[f32]>,
     ) {
-        self.store.put(key, Value::tensor_shared(shape, data));
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put(key, Value::tensor_shared(shape, data)),
+            ClientBackend::Remote(t) => {
+                transported(t.kind(), t.put(key.name(), Value::tensor_shared(shape, data)))
+            }
+        }
     }
 
     /// Write a flag.
     pub fn put_flag<K: KeyLike + ?Sized>(&self, key: &K, v: bool) {
-        self.store.put(key, Value::Flag(v));
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put(key, Value::Flag(v)),
+            ClientBackend::Remote(t) => transported(t.kind(), t.put(key.name(), Value::Flag(v))),
+        }
     }
 
     /// Write a scalar.
     pub fn put_scalar<K: KeyLike + ?Sized>(&self, key: &K, v: f64) {
-        self.store.put(key, Value::Scalar(v));
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put(key, Value::Scalar(v)),
+            ClientBackend::Remote(t) => transported(t.kind(), t.put(key.name(), Value::Scalar(v))),
+        }
     }
 
     /// Write opaque bytes (failure reports, metadata).
     pub fn put_bytes<K: KeyLike + ?Sized>(&self, key: &K, v: Vec<u8>) {
-        self.store.put(key, Value::bytes(v));
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put(key, Value::bytes(v)),
+            ClientBackend::Remote(t) => transported(t.kind(), t.put(key.name(), Value::bytes(v))),
+        }
     }
 
     /// Non-blocking read (payloads shared, not copied).
     pub fn get<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
-        self.store.get(key)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.get(key),
+            ClientBackend::Remote(t) => transported(t.kind(), t.get(key.name())),
+        }
     }
 
     /// Blocking poll until the key appears (SmartRedis `poll_tensor`).
     pub fn poll<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
-        self.store.wait_for(key, timeout)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.wait_for(key, timeout),
+            ClientBackend::Remote(t) => transported(t.kind(), t.wait(key.name(), timeout, false)),
+        }
     }
 
     /// Blocking poll that consumes the value.
     pub fn poll_take<K: KeyLike + ?Sized>(&self, key: &K, timeout: Duration) -> Option<Value> {
-        self.store.wait_take(key, timeout)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.wait_take(key, timeout),
+            ClientBackend::Remote(t) => transported(t.kind(), t.wait(key.name(), timeout, true)),
+        }
     }
 
     /// Blocking multi-key subscription: first of `keys` to appear wins
@@ -137,7 +222,13 @@ impl Client {
         keys: &[&K],
         timeout: Duration,
     ) -> Option<(usize, Value)> {
-        self.store.wait_any(keys, timeout)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.wait_any(keys, timeout),
+            ClientBackend::Remote(t) => {
+                let names: Vec<&str> = keys.iter().map(|k| k.name()).collect();
+                transported(t.kind(), t.wait_any(&names, timeout, false))
+            }
+        }
     }
 
     /// Like [`Client::poll_any`], but consumes the returned value.
@@ -146,7 +237,13 @@ impl Client {
         keys: &[&K],
         timeout: Duration,
     ) -> Option<(usize, Value)> {
-        self.store.wait_any_take(keys, timeout)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.wait_any_take(keys, timeout),
+            ClientBackend::Remote(t) => {
+                let names: Vec<&str> = keys.iter().map(|k| k.name()).collect();
+                transported(t.kind(), t.wait_any(&names, timeout, true))
+            }
+        }
     }
 
     /// A persistent multi-key subscription (see
@@ -154,13 +251,76 @@ impl Client {
     /// deltas between waits.  The event-driven rollout collector holds
     /// one per sampling phase, making a collection wave O(envs) registry
     /// ops instead of the O(envs²) of per-event `poll_any` rebuilds.
-    pub fn subscription(&self) -> Subscription {
-        Subscription::new(self.store.clone())
+    /// Over a remote transport the subscription pins one connection with
+    /// a real server-side `Subscription` behind it.
+    pub fn subscription(&self) -> ClientSub {
+        match &self.backend {
+            ClientBackend::Inproc(store) => ClientSub {
+                inner: ClientSubInner::Inproc(Subscription::new(store.clone())),
+            },
+            ClientBackend::Remote(t) => ClientSub {
+                inner: ClientSubInner::Remote(t.kind(), transported(t.kind(), t.subscribe())),
+            },
+        }
     }
 
     /// Delete a key.
     pub fn delete<K: KeyLike + ?Sized>(&self, key: &K) -> bool {
-        self.store.delete(key)
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.delete(key),
+            ClientBackend::Remote(t) => transported(t.kind(), t.delete(key.name())),
+        }
+    }
+}
+
+/// The transport-spanning face of [`store::Subscription`], returned by
+/// [`Client::subscription`] — same method surface and delivery
+/// guarantees on every transport.
+pub struct ClientSub {
+    inner: ClientSubInner,
+}
+
+enum ClientSubInner {
+    Inproc(Subscription),
+    Remote(&'static str, Box<dyn TransportSub>),
+}
+
+impl ClientSub {
+    /// Register `key` under `tag` (replacing the tag's previous key).
+    pub fn add<K: KeyLike + ?Sized>(&mut self, tag: usize, key: &K) {
+        match &mut self.inner {
+            ClientSubInner::Inproc(s) => s.add(tag, key),
+            ClientSubInner::Remote(kind, s) => transported(kind, s.add(tag, key.name())),
+        }
+    }
+
+    /// Drop the registration under `tag`.
+    pub fn remove(&mut self, tag: usize) {
+        match &mut self.inner {
+            ClientSubInner::Inproc(s) => s.remove(tag),
+            ClientSubInner::Remote(kind, s) => transported(kind, s.remove(tag)),
+        }
+    }
+
+    /// Take the first value to appear under any registered tag.
+    pub fn wait_take(&mut self, timeout: Duration) -> Option<(usize, Value)> {
+        match &mut self.inner {
+            ClientSubInner::Inproc(s) => s.wait_take(timeout),
+            ClientSubInner::Remote(kind, s) => transported(kind, s.wait_take(timeout)),
+        }
+    }
+
+    /// Registered tag count.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            ClientSubInner::Inproc(s) => s.len(),
+            ClientSubInner::Remote(_, s) => s.len(),
+        }
+    }
+
+    /// True when no tags are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -230,6 +390,41 @@ mod tests {
             .poll_any_take(&["state"], Duration::from_secs(1))
             .unwrap();
         assert!(Arc::ptr_eq(&v.tensor_data().unwrap(), &data));
+    }
+
+    #[test]
+    fn remote_client_has_identical_semantics_to_inproc() {
+        let orch = Orchestrator::launch(4);
+        let server = orch.serve("127.0.0.1:0").unwrap();
+        let remote = Client::remote(
+            RemoteTransport::connect("tcp", &server.addr().to_string(), 1).unwrap(),
+        );
+        assert_eq!(remote.transport_kind(), "tcp");
+        assert_eq!(orch.client().transport_kind(), "inproc");
+
+        let proto = Protocol::new("r");
+        let keys = proto.env_keys(0, 1);
+        // Interned keys work over the wire (resolved by name).
+        remote.put_tensor(&keys.state[0], vec![2], vec![1.0, 2.0]);
+        let local = orch.client();
+        let v = local.poll_take(&proto.state_key(0, 0), Duration::from_secs(5)).unwrap();
+        assert_eq!(v.as_tensor().unwrap().1, &[1.0, 2.0]);
+
+        local.put_scalar(&keys.rew[0], 0.75);
+        let mut sub = remote.subscription();
+        sub.add(9, &keys.rew[0]);
+        let (tag, v) = sub.wait_take(Duration::from_secs(5)).unwrap();
+        assert_eq!((tag, v.as_scalar()), (9, Some(0.75)));
+        assert_eq!(sub.len(), 1);
+        sub.remove(9);
+        assert!(sub.is_empty());
+
+        remote.put_flag(&keys.done, true);
+        assert_eq!(remote.get(&keys.done).unwrap().as_flag(), Some(true));
+        assert!(remote.delete(&keys.done));
+        assert!(remote
+            .poll_any(&[&keys.fail, &keys.abort], Duration::from_millis(50))
+            .is_none());
     }
 
     #[test]

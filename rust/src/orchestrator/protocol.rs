@@ -25,6 +25,65 @@
 //! precomputed [`Key`] handle.
 
 use super::store::Key;
+use super::value::wire;
+use anyhow::Result;
+
+/// Control-plane key namespace for process-level env workers (the
+/// `workers = "processes"` mode): the worker lifecycle rides the same
+/// store/transport as the data plane, so there is no second channel to
+/// keep ordered.  The `__relexi:` prefix keeps these keys clear of any
+/// run tag, and they are written outside the collect window, so the
+/// trainer's between-iteration `clear()` cannot race them.
+///
+/// * `ctl_hello_key(w)`   — flag put by worker `w` once its env threads
+///   are up; the pool's process spawn blocks on it.
+/// * `ctl_begin_key(w)`   — bytes payload ([`encode_begin`]) assigning
+///   worker `w` one iteration's run tag + per-env RNG seeds.  Consumed
+///   (deleted) by the worker.
+/// * [`CTL_STOP_KEY`]     — flag read non-destructively by every worker;
+///   set once at pool teardown.
+pub fn ctl_begin_key(worker: usize) -> String {
+    format!("__relexi:ctl:w{worker}:begin")
+}
+
+/// See [`ctl_begin_key`].
+pub fn ctl_hello_key(worker: usize) -> String {
+    format!("__relexi:ctl:w{worker}:hello")
+}
+
+/// Shared stop flag for all env-worker processes (see [`ctl_begin_key`]).
+pub const CTL_STOP_KEY: &str = "__relexi:ctl:stop";
+
+/// Encode one iteration's begin message for a worker process: the run
+/// tag plus `(global env index, rng seed)` per hosted env.  The seed is
+/// [`crate::util::rng::Rng::split_seed`] output, so the worker rebuilds
+/// the exact RNG stream the threads mode would have handed it.
+pub fn encode_begin(run_tag: &str, envs: &[(usize, u64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + run_tag.len() + envs.len() * 12);
+    wire::w_str(&mut out, run_tag);
+    wire::w_u32(&mut out, envs.len() as u32);
+    for &(env, seed) in envs {
+        wire::w_u32(&mut out, env as u32);
+        wire::w_u64(&mut out, seed);
+    }
+    out
+}
+
+/// Decode [`encode_begin`] output; malformed bytes are an `Err`.
+pub fn decode_begin(buf: &[u8]) -> Result<(String, Vec<(usize, u64)>)> {
+    let mut pos = 0;
+    let tag = wire::r_str(buf, &mut pos)?;
+    let n = wire::r_u32(buf, &mut pos)? as usize;
+    anyhow::ensure!(n <= 1 << 20, "begin message claims {n} envs");
+    let mut envs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let env = wire::r_u32(buf, &mut pos)? as usize;
+        let seed = wire::r_u64(buf, &mut pos)?;
+        envs.push((env, seed));
+    }
+    anyhow::ensure!(pos == buf.len(), "trailing bytes after begin message");
+    Ok((tag, envs))
+}
 
 /// Key builder for one training run.
 #[derive(Debug, Clone)]
@@ -183,5 +242,29 @@ mod tests {
         assert_eq!(pk.envs.len(), 2);
         assert_eq!(pk.envs[1].state.len(), 2);
         assert_eq!(pk.envs[1].action[0].name(), p.action_key(1, 0));
+    }
+
+    #[test]
+    fn ctl_keys_are_distinct_and_outside_run_namespaces() {
+        assert_ne!(ctl_begin_key(0), ctl_begin_key(1));
+        assert_ne!(ctl_begin_key(0), ctl_hello_key(0));
+        assert!(ctl_begin_key(3).starts_with("__relexi:ctl:"));
+        assert!(CTL_STOP_KEY.starts_with("__relexi:ctl:"));
+    }
+
+    #[test]
+    fn begin_message_round_trips_and_rejects_garbage() {
+        let envs = vec![(0usize, 7u64), (5, u64::MAX), (1 << 20, 0)];
+        let buf = encode_begin("it42", &envs);
+        let (tag, back) = decode_begin(&buf).unwrap();
+        assert_eq!(tag, "it42");
+        assert_eq!(back, envs);
+
+        for cut in 0..buf.len() {
+            assert!(decode_begin(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = buf.clone();
+        trailing.push(0);
+        assert!(decode_begin(&trailing).is_err());
     }
 }

@@ -1,0 +1,1618 @@
+//! The transport seam: the orchestrator exchange behind a network-capable
+//! boundary (ROADMAP open item 1, the paper's §5 "hundreds of parallel
+//! environments" axis).
+//!
+//! The authoritative [`ShardedStore`] always lives in the trainer
+//! process.  Three registered transports reach it:
+//!
+//! * `inproc` — today's path: the [`crate::orchestrator::Client`] enum
+//!   resolves to a direct `Arc<ShardedStore>` call at construction, so
+//!   the in-process data plane is bit-identical and allocation-free —
+//!   no payload re-boxing, no dynamic dispatch on the hot path.
+//! * `tcp` — length-prefixed binary frames over a [`TcpListener`]
+//!   ([`ExchangeServer`]).  Every connection gets a dedicated server
+//!   handler thread that executes ops against the real store — blocking
+//!   ops (`wait_take`, subscription waits) run server-side in bounded
+//!   slices, so the exactly-once / no-lost-wakeup guarantees of the
+//!   store transfer by construction instead of being re-implemented in
+//!   a wire protocol.
+//! * `shm` — the same frame codec over a pair of SPSC byte rings in a
+//!   memory-mapped segment, bootstrapped over one TCP handshake
+//!   ([`Request::ShmOpen`]) and then entirely kernel-bypass for data:
+//!   a tensor crosses the process boundary as one copy into the ring
+//!   and one copy out.
+//!
+//! Frame layout: `u32 len (LE) | payload`, with the payload's first
+//! byte an opcode ([`Request`]/[`Response`]).  All decoding is
+//! panic-free: truncated frames, oversized lengths and trailing bytes
+//! are recoverable `Err`s (fuzzed in the integration suite).
+
+use super::store::{ShardedStore, Subscription};
+use super::value::{wire, Value, MAX_PAYLOAD};
+use anyhow::{bail, ensure, Context as _, Result};
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The registered transport kinds (`[orchestrator] transport` config).
+pub const TRANSPORTS: &[&str] = &["inproc", "shm", "tcp"];
+
+/// Hard cap on one frame's payload: the largest tensor plus codec
+/// overhead.  A length prefix beyond this is rejected before any
+/// allocation happens.
+pub const MAX_FRAME: usize = MAX_PAYLOAD + (1 << 16);
+
+/// Server-side blocking ops run in slices of this length so shutdown
+/// and disconnects are observed promptly; each inner store wait is
+/// atomic, so slicing never double-delivers.
+const SLICE: Duration = Duration::from_millis(250);
+
+/// Extra client-side patience on top of a blocking op's own timeout
+/// before the connection is declared dead.
+const RPC_GRACE: Duration = Duration::from_secs(10);
+
+/// Deadline for plain request/response ops (server answers immediately).
+const RPC_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-direction shared-memory ring capacity.  Frames larger than the
+/// ring are streamed through it in chunks.
+const SHM_RING_BYTES: usize = 1 << 20;
+
+/// How long a shm ring write may stall (peer not draining) before the
+/// connection is declared dead.
+const SHM_STALL_LIMIT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------------
+// Wire codec
+// ---------------------------------------------------------------------------
+
+/// A client request frame.  `timeout_ms` rides the wire explicitly so
+/// the *server* runs the blocking wait — the client never polls.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Put { key: String, value: Value },
+    Get { key: String },
+    Take { key: String },
+    Exists { key: String },
+    Delete { key: String },
+    Clear,
+    /// `wait_for` (`take = false`) / `wait_take` (`take = true`).
+    Wait { key: String, timeout_ms: u64, take: bool },
+    /// `wait_any` / `wait_any_take`.
+    WaitAny { keys: Vec<String>, timeout_ms: u64, take: bool },
+    /// Delta ops on this connection's server-side [`Subscription`].
+    SubAdd { tag: u64, key: String },
+    SubRemove { tag: u64 },
+    SubWait { timeout_ms: u64 },
+    /// Clean shutdown of this connection.
+    Bye,
+    /// Upgrade this TCP connection to shared-memory rings: the client
+    /// has created and sized the segment file at `path`; the server
+    /// maps it (and the client then unlinks it).
+    ShmOpen { path: String, ring_bytes: u64 },
+}
+
+/// A server response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Unit,
+    Bool(bool),
+    /// `Option<Value>` results (get/take/wait).
+    Maybe(Option<Value>),
+    /// `Option<(index-or-tag, Value)>` results (wait_any/sub_wait).
+    Hit(Option<(u64, Value)>),
+    Error(String),
+}
+
+impl Request {
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        use wire::*;
+        match self {
+            Request::Put { key, value } => {
+                out.push(1);
+                w_str(out, key);
+                value.encode_into(out);
+            }
+            Request::Get { key } => {
+                out.push(2);
+                w_str(out, key);
+            }
+            Request::Take { key } => {
+                out.push(3);
+                w_str(out, key);
+            }
+            Request::Exists { key } => {
+                out.push(4);
+                w_str(out, key);
+            }
+            Request::Delete { key } => {
+                out.push(5);
+                w_str(out, key);
+            }
+            Request::Clear => out.push(6),
+            Request::Wait { key, timeout_ms, take } => {
+                out.push(7);
+                w_str(out, key);
+                w_u64(out, *timeout_ms);
+                out.push(*take as u8);
+            }
+            Request::WaitAny { keys, timeout_ms, take } => {
+                out.push(8);
+                w_u32(out, keys.len() as u32);
+                for k in keys {
+                    w_str(out, k);
+                }
+                w_u64(out, *timeout_ms);
+                out.push(*take as u8);
+            }
+            Request::SubAdd { tag, key } => {
+                out.push(9);
+                w_u64(out, *tag);
+                w_str(out, key);
+            }
+            Request::SubRemove { tag } => {
+                out.push(10);
+                w_u64(out, *tag);
+            }
+            Request::SubWait { timeout_ms } => {
+                out.push(11);
+                w_u64(out, *timeout_ms);
+            }
+            Request::Bye => out.push(12),
+            Request::ShmOpen { path, ring_bytes } => {
+                out.push(13);
+                w_str(out, path);
+                w_u64(out, *ring_bytes);
+            }
+        }
+    }
+
+    /// Decode one request frame payload.  The whole buffer must be
+    /// consumed — interleaved/trailing bytes are an error, never a
+    /// panic.
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        use wire::*;
+        let mut pos = 0;
+        let req = match r_u8(buf, &mut pos)? {
+            1 => Request::Put {
+                key: r_str(buf, &mut pos)?,
+                value: Value::decode_from(buf, &mut pos)?,
+            },
+            2 => Request::Get { key: r_str(buf, &mut pos)? },
+            3 => Request::Take { key: r_str(buf, &mut pos)? },
+            4 => Request::Exists { key: r_str(buf, &mut pos)? },
+            5 => Request::Delete { key: r_str(buf, &mut pos)? },
+            6 => Request::Clear,
+            7 => Request::Wait {
+                key: r_str(buf, &mut pos)?,
+                timeout_ms: r_u64(buf, &mut pos)?,
+                take: r_bool(buf, &mut pos)?,
+            },
+            8 => {
+                let n = r_u32(buf, &mut pos)? as usize;
+                ensure!(n <= 1 << 16, "wait_any claims {n} keys");
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(r_str(buf, &mut pos)?);
+                }
+                Request::WaitAny {
+                    keys,
+                    timeout_ms: r_u64(buf, &mut pos)?,
+                    take: r_bool(buf, &mut pos)?,
+                }
+            }
+            9 => Request::SubAdd {
+                tag: r_u64(buf, &mut pos)?,
+                key: r_str(buf, &mut pos)?,
+            },
+            10 => Request::SubRemove { tag: r_u64(buf, &mut pos)? },
+            11 => Request::SubWait { timeout_ms: r_u64(buf, &mut pos)? },
+            12 => Request::Bye,
+            13 => Request::ShmOpen {
+                path: r_str(buf, &mut pos)?,
+                ring_bytes: r_u64(buf, &mut pos)?,
+            },
+            other => bail!("unknown request opcode {other}"),
+        };
+        ensure!(pos == buf.len(), "trailing bytes in request frame");
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        use wire::*;
+        match self {
+            Response::Unit => out.push(128),
+            Response::Bool(b) => {
+                out.push(129);
+                out.push(*b as u8);
+            }
+            Response::Maybe(v) => {
+                out.push(130);
+                out.push(v.is_some() as u8);
+                if let Some(v) = v {
+                    v.encode_into(out);
+                }
+            }
+            Response::Hit(h) => {
+                out.push(131);
+                out.push(h.is_some() as u8);
+                if let Some((idx, v)) = h {
+                    w_u64(out, *idx);
+                    v.encode_into(out);
+                }
+            }
+            Response::Error(msg) => {
+                out.push(255);
+                // Bound the message so it always fits the u16 length.
+                let mut end = msg.len().min(512);
+                while !msg.is_char_boundary(end) {
+                    end -= 1;
+                }
+                w_str(out, &msg[..end]);
+            }
+        }
+    }
+
+    /// Decode one response frame payload (whole-buffer, panic-free —
+    /// same contract as [`Request::decode`]).
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        use wire::*;
+        let mut pos = 0;
+        let resp = match r_u8(buf, &mut pos)? {
+            128 => Response::Unit,
+            129 => Response::Bool(r_bool(buf, &mut pos)?),
+            130 => {
+                if r_bool(buf, &mut pos)? {
+                    Response::Maybe(Some(Value::decode_from(buf, &mut pos)?))
+                } else {
+                    Response::Maybe(None)
+                }
+            }
+            131 => {
+                if r_bool(buf, &mut pos)? {
+                    let idx = r_u64(buf, &mut pos)?;
+                    Response::Hit(Some((idx, Value::decode_from(buf, &mut pos)?)))
+                } else {
+                    Response::Hit(None)
+                }
+            }
+            255 => Response::Error(r_str(buf, &mut pos)?),
+            other => bail!("unknown response opcode {other}"),
+        };
+        ensure!(pos == buf.len(), "trailing bytes in response frame");
+        Ok(resp)
+    }
+}
+
+fn r_bool(buf: &[u8], pos: &mut usize) -> Result<bool> {
+    match wire::r_u8(buf, pos)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("bool byte must be 0|1, got {other}"),
+    }
+}
+
+/// Validate a frame length prefix (never allocates for a bad one).
+pub fn frame_len(hdr: [u8; 4]) -> Result<usize> {
+    let n = u32::from_le_bytes(hdr) as usize;
+    ensure!(n >= 1, "empty frame");
+    ensure!(n <= MAX_FRAME, "frame length {n} exceeds MAX_FRAME {MAX_FRAME}");
+    Ok(n)
+}
+
+/// Pull one complete frame's payload out of an accumulation buffer.
+/// `Ok(false)` = not enough bytes yet (partial input retained).
+fn try_extract(accum: &mut Vec<u8>, out: &mut Vec<u8>) -> Result<bool> {
+    if accum.len() < 4 {
+        return Ok(false);
+    }
+    let n = frame_len(accum[..4].try_into().unwrap())?;
+    if accum.len() < 4 + n {
+        return Ok(false);
+    }
+    out.clear();
+    out.extend_from_slice(&accum[4..4 + n]);
+    accum.drain(..4 + n);
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// Connections (framed byte pipes)
+// ---------------------------------------------------------------------------
+
+/// A framed, bidirectional byte pipe.  `recv` is resumable: timing out
+/// mid-frame keeps the partial bytes buffered, so frame sync is never
+/// lost.
+trait Conn: Send {
+    /// Write one frame (length prefix + payload).
+    fn send(&mut self, payload: &[u8]) -> Result<()>;
+    /// Receive one frame into `out`.  `Ok(true)` = frame delivered,
+    /// `Ok(false)` = timed out, `Err` = disconnected or protocol error.
+    fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool>;
+}
+
+struct TcpConn {
+    stream: TcpStream,
+    accum: Vec<u8>,
+    scratch: Box<[u8; 64 * 1024]>,
+}
+
+impl TcpConn {
+    fn new(stream: TcpStream) -> Result<TcpConn> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        Ok(TcpConn {
+            stream,
+            accum: Vec::new(),
+            scratch: Box::new([0u8; 64 * 1024]),
+        })
+    }
+
+    /// Surrender the raw stream (shm upgrade).  Refuses if bytes are
+    /// already buffered — the peer must not pipeline past the upgrade.
+    fn into_stream(self) -> Result<TcpStream> {
+        ensure!(self.accum.is_empty(), "bytes pipelined past shm upgrade");
+        Ok(self.stream)
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+        self.stream
+            .write_all(&(payload.len() as u32).to_le_bytes())
+            .context("tcp write")?;
+        self.stream.write_all(payload).context("tcp write")?;
+        Ok(())
+    }
+
+    fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if try_extract(&mut self.accum, out)? {
+                return Ok(true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            let wait = (deadline - now).max(Duration::from_millis(1));
+            self.stream.set_read_timeout(Some(wait)).context("set_read_timeout")?;
+            match self.stream.read(&mut self.scratch[..]) {
+                Ok(0) => bail!("connection closed by peer"),
+                Ok(n) => self.accum.extend_from_slice(&self.scratch[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow::anyhow!("tcp read: {e}")),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory segment + rings (unix only)
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod shm {
+    use super::*;
+    use std::fs::OpenOptions;
+    use std::os::unix::io::AsRawFd;
+
+    const MAGIC: u64 = 0x52454C5853484D31; // "RELXSHM1"
+    /// Header layout (offsets in bytes; hot words a cache line apart):
+    ///   0 magic | 8 ring_bytes | 16 client_closed | 24 server_closed
+    ///   64 c2s head | 128 c2s tail | 192 s2c head | 256 s2c tail
+    pub const HDR: usize = 512;
+    const OFF_MAGIC: usize = 0;
+    const OFF_RING_BYTES: usize = 8;
+    const OFF_CLIENT_CLOSED: usize = 16;
+    const OFF_SERVER_CLOSED: usize = 24;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+    const PROT_READ: i32 = 0x1;
+    const PROT_WRITE: i32 = 0x2;
+    const MAP_SHARED: i32 = 0x01;
+
+    /// A mapped segment.  Both processes map the same file; the client
+    /// unlinks it once the server confirms its mapping, so the memory
+    /// lives exactly as long as the two mappings.
+    pub struct Seg {
+        base: *mut u8,
+        len: usize,
+    }
+    // The raw pointer targets file-backed shared memory; all cross-
+    // process coordination goes through the atomics below.
+    unsafe impl Send for Seg {}
+
+    impl Seg {
+        /// Client side: create + size + map + initialize the segment.
+        pub fn create(path: &std::path::Path, ring_bytes: usize) -> Result<Seg> {
+            let len = HDR + 2 * ring_bytes;
+            let file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create_new(true)
+                .open(path)
+                .with_context(|| format!("create shm segment {}", path.display()))?;
+            file.set_len(len as u64).context("size shm segment")?;
+            let seg = Seg::map(&file, len)?;
+            seg.atomic(OFF_RING_BYTES).store(ring_bytes as u64, Ordering::Relaxed);
+            seg.atomic(OFF_CLIENT_CLOSED).store(0, Ordering::Relaxed);
+            seg.atomic(OFF_SERVER_CLOSED).store(0, Ordering::Relaxed);
+            for r in 0..2 {
+                seg.atomic(64 + r * 128).store(0, Ordering::Relaxed);
+                seg.atomic(64 + r * 128 + 64).store(0, Ordering::Relaxed);
+            }
+            seg.atomic(OFF_MAGIC).store(MAGIC, Ordering::Release);
+            Ok(seg)
+        }
+
+        /// Server side: map an existing segment, validating magic and
+        /// the announced ring size against the file's actual length.
+        pub fn open(path: &std::path::Path, ring_bytes: usize) -> Result<Seg> {
+            let file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .open(path)
+                .with_context(|| format!("open shm segment {}", path.display()))?;
+            let len = HDR + 2 * ring_bytes;
+            ensure!(
+                file.metadata().context("stat shm segment")?.len() == len as u64,
+                "shm segment size disagrees with announced ring_bytes {ring_bytes}"
+            );
+            let seg = Seg::map(&file, len)?;
+            ensure!(
+                seg.atomic(OFF_MAGIC).load(Ordering::Acquire) == MAGIC,
+                "shm segment has wrong magic"
+            );
+            ensure!(
+                seg.atomic(OFF_RING_BYTES).load(Ordering::Relaxed) == ring_bytes as u64,
+                "shm segment header ring_bytes mismatch"
+            );
+            Ok(seg)
+        }
+
+        fn map(file: &std::fs::File, len: usize) -> Result<Seg> {
+            let base = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ | PROT_WRITE,
+                    MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            ensure!(
+                !base.is_null() && base as isize != -1,
+                "mmap of {len}-byte shm segment failed"
+            );
+            Ok(Seg { base: base as *mut u8, len })
+        }
+
+        pub fn atomic(&self, off: usize) -> &AtomicU64 {
+            debug_assert!(off % 8 == 0 && off + 8 <= self.len);
+            unsafe { &*(self.base.add(off) as *const AtomicU64) }
+        }
+
+        fn data_ptr(&self, off: usize) -> *mut u8 {
+            debug_assert!(off < self.len);
+            unsafe { self.base.add(off) }
+        }
+
+        pub fn set_closed(&self, server: bool) {
+            let off = if server { OFF_SERVER_CLOSED } else { OFF_CLIENT_CLOSED };
+            self.atomic(off).store(1, Ordering::Release);
+        }
+
+        pub fn peer_closed(&self, i_am_server: bool) -> bool {
+            let off = if i_am_server { OFF_CLIENT_CLOSED } else { OFF_SERVER_CLOSED };
+            self.atomic(off).load(Ordering::Acquire) == 1
+        }
+    }
+
+    impl Drop for Seg {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.base as *mut core::ffi::c_void, self.len);
+            }
+        }
+    }
+
+    /// One SPSC byte ring inside the segment (monotonic head/tail,
+    /// indices reduced mod `cap` at access time).
+    pub struct Ring {
+        head_off: usize,
+        tail_off: usize,
+        data_off: usize,
+        cap: usize,
+    }
+
+    impl Ring {
+        /// Ring `which` (0 = client->server, 1 = server->client).
+        pub fn new(which: usize, cap: usize) -> Ring {
+            Ring {
+                head_off: 64 + which * 128,
+                tail_off: 64 + which * 128 + 64,
+                data_off: HDR + which * cap,
+                cap,
+            }
+        }
+
+        /// Producer: write as much of `buf` as fits; returns bytes
+        /// written (possibly 0).
+        pub fn push(&self, seg: &Seg, buf: &[u8]) -> usize {
+            let head = seg.atomic(self.head_off).load(Ordering::Relaxed);
+            let tail = seg.atomic(self.tail_off).load(Ordering::Acquire);
+            let used = head.wrapping_sub(tail) as usize;
+            let n = buf.len().min(self.cap - used);
+            if n == 0 {
+                return 0;
+            }
+            let at = (head as usize) % self.cap;
+            let first = n.min(self.cap - at);
+            unsafe {
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), seg.data_ptr(self.data_off + at), first);
+                if n > first {
+                    std::ptr::copy_nonoverlapping(
+                        buf.as_ptr().add(first),
+                        seg.data_ptr(self.data_off),
+                        n - first,
+                    );
+                }
+            }
+            seg.atomic(self.head_off).store(head.wrapping_add(n as u64), Ordering::Release);
+            n
+        }
+
+        /// Consumer: drain up to `max` available bytes into `out`;
+        /// returns bytes read (possibly 0).
+        pub fn pop(&self, seg: &Seg, out: &mut Vec<u8>, max: usize) -> usize {
+            let head = seg.atomic(self.head_off).load(Ordering::Acquire);
+            let tail = seg.atomic(self.tail_off).load(Ordering::Relaxed);
+            let avail = head.wrapping_sub(tail) as usize;
+            let n = avail.min(max);
+            if n == 0 {
+                return 0;
+            }
+            let at = (tail as usize) % self.cap;
+            let first = n.min(self.cap - at);
+            let old = out.len();
+            out.resize(old + n, 0);
+            unsafe {
+                std::ptr::copy_nonoverlapping(seg.data_ptr(self.data_off + at), out.as_mut_ptr().add(old), first);
+                if n > first {
+                    std::ptr::copy_nonoverlapping(
+                        seg.data_ptr(self.data_off),
+                        out.as_mut_ptr().add(old + first),
+                        n - first,
+                    );
+                }
+            }
+            seg.atomic(self.tail_off).store(tail.wrapping_add(n as u64), Ordering::Release);
+            n
+        }
+    }
+}
+
+/// Exponential spin -> yield -> sleep backoff for the shm rings.
+#[cfg(unix)]
+struct Backoff {
+    step: u32,
+}
+
+#[cfg(unix)]
+impl Backoff {
+    fn new() -> Backoff {
+        Backoff { step: 0 }
+    }
+    fn reset(&mut self) {
+        self.step = 0;
+    }
+    fn snooze(&mut self) {
+        if self.step < 6 {
+            for _ in 0..(1 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else if self.step < 12 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+    /// In the sleep regime, probe peer liveness roughly every ~20ms.
+    fn should_probe(&self) -> bool {
+        self.step >= 12 && self.step % 200 == 0
+    }
+}
+
+#[cfg(unix)]
+struct ShmConn {
+    seg: shm::Seg,
+    tx: shm::Ring,
+    rx: shm::Ring,
+    is_server: bool,
+    /// The bootstrap TCP stream, kept open (nonblocking) purely as a
+    /// liveness probe: a hard-killed peer can't set its closed flag,
+    /// but the kernel closes its socket.
+    bootstrap: TcpStream,
+    accum: Vec<u8>,
+    tx_buf: Vec<u8>,
+}
+
+#[cfg(unix)]
+impl ShmConn {
+    fn new(seg: shm::Seg, ring_bytes: usize, is_server: bool, bootstrap: TcpStream) -> Result<ShmConn> {
+        bootstrap.set_nonblocking(true).context("bootstrap nonblocking")?;
+        let (tx, rx) = if is_server {
+            (shm::Ring::new(1, ring_bytes), shm::Ring::new(0, ring_bytes))
+        } else {
+            (shm::Ring::new(0, ring_bytes), shm::Ring::new(1, ring_bytes))
+        };
+        Ok(ShmConn {
+            seg,
+            tx,
+            rx,
+            is_server,
+            bootstrap,
+            accum: Vec::new(),
+            tx_buf: Vec::new(),
+        })
+    }
+
+    /// Err if the bootstrap socket reports the peer is gone.
+    fn probe_liveness(&self) -> Result<()> {
+        let mut b = [0u8; 1];
+        match self.bootstrap.peek(&mut b) {
+            Ok(0) => bail!("shm peer process is gone (bootstrap socket closed)"),
+            Ok(_) => Ok(()), // unexpected data; harmless
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(()),
+            Err(e) => bail!("shm bootstrap socket error: {e}"),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Conn for ShmConn {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+        self.tx_buf.clear();
+        self.tx_buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.tx_buf.extend_from_slice(payload);
+        let mut buf = &self.tx_buf[..];
+        let mut bo = Backoff::new();
+        let deadline = Instant::now() + SHM_STALL_LIMIT;
+        while !buf.is_empty() {
+            let wrote = self.tx.push(&self.seg, buf);
+            if wrote > 0 {
+                buf = &buf[wrote..];
+                bo.reset();
+                continue;
+            }
+            if self.seg.peer_closed(self.is_server) {
+                bail!("shm peer closed");
+            }
+            if Instant::now() >= deadline {
+                bail!("shm ring stalled for {SHM_STALL_LIMIT:?} (peer not draining)");
+            }
+            bo.snooze();
+            if bo.should_probe() {
+                self.probe_liveness()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool> {
+        let deadline = Instant::now() + timeout;
+        let mut bo = Backoff::new();
+        loop {
+            if try_extract(&mut self.accum, out)? {
+                return Ok(true);
+            }
+            let n = self.rx.pop(&self.seg, &mut self.accum, MAX_FRAME);
+            if n > 0 {
+                bo.reset();
+                continue;
+            }
+            if self.seg.peer_closed(self.is_server) {
+                bail!("shm peer closed");
+            }
+            if Instant::now() >= deadline {
+                return Ok(false);
+            }
+            bo.snooze();
+            if bo.should_probe() {
+                self.probe_liveness()?;
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for ShmConn {
+    fn drop(&mut self) {
+        self.seg.set_closed(self.is_server);
+    }
+}
+
+#[cfg(unix)]
+static SHM_SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+// ---------------------------------------------------------------------------
+// Transport trait + inproc
+// ---------------------------------------------------------------------------
+
+/// Object-safe store access over any transport.  Blocking semantics are
+/// identical to [`ShardedStore`]: `Ok(None)` is a timeout, `Err` is a
+/// transport failure (never used by `inproc`).
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> &'static str;
+    fn put(&self, key: &str, value: Value) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Option<Value>>;
+    fn take(&self, key: &str) -> Result<Option<Value>>;
+    fn exists(&self, key: &str) -> Result<bool>;
+    fn delete(&self, key: &str) -> Result<bool>;
+    fn clear(&self) -> Result<()>;
+    /// `wait_for` (`take = false`) / `wait_take` (`take = true`).
+    fn wait(&self, key: &str, timeout: Duration, take: bool) -> Result<Option<Value>>;
+    fn wait_any(&self, keys: &[&str], timeout: Duration, take: bool)
+        -> Result<Option<(usize, Value)>>;
+    /// A persistent tag-addressed subscription (see
+    /// [`Subscription`]); remote transports pin one connection per
+    /// subscription with a server-side `Subscription` behind it.
+    fn subscribe(&self) -> Result<Box<dyn TransportSub>>;
+}
+
+/// Object-safe [`Subscription`] surface.
+pub trait TransportSub: Send {
+    fn add(&mut self, tag: usize, key: &str) -> Result<()>;
+    fn remove(&mut self, tag: usize) -> Result<()>;
+    fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The in-process transport: a thin veneer over [`ShardedStore`] for
+/// the conformance suite and the wave benches.  The production inproc
+/// path in [`crate::orchestrator::Client`] does NOT go through this
+/// trait object — it calls the store directly.
+pub struct InprocTransport {
+    store: Arc<ShardedStore>,
+}
+
+impl InprocTransport {
+    pub fn new(store: Arc<ShardedStore>) -> InprocTransport {
+        InprocTransport { store }
+    }
+}
+
+impl Transport for InprocTransport {
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+    fn put(&self, key: &str, value: Value) -> Result<()> {
+        self.store.put(key, value);
+        Ok(())
+    }
+    fn get(&self, key: &str) -> Result<Option<Value>> {
+        Ok(self.store.get(key))
+    }
+    fn take(&self, key: &str) -> Result<Option<Value>> {
+        Ok(self.store.take(key))
+    }
+    fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.store.exists(key))
+    }
+    fn delete(&self, key: &str) -> Result<bool> {
+        Ok(self.store.delete(key))
+    }
+    fn clear(&self) -> Result<()> {
+        self.store.clear();
+        Ok(())
+    }
+    fn wait(&self, key: &str, timeout: Duration, take: bool) -> Result<Option<Value>> {
+        Ok(if take {
+            self.store.wait_take(key, timeout)
+        } else {
+            self.store.wait_for(key, timeout)
+        })
+    }
+    fn wait_any(
+        &self,
+        keys: &[&str],
+        timeout: Duration,
+        take: bool,
+    ) -> Result<Option<(usize, Value)>> {
+        Ok(if take {
+            self.store.wait_any_take(keys, timeout)
+        } else {
+            self.store.wait_any(keys, timeout)
+        })
+    }
+    fn subscribe(&self) -> Result<Box<dyn TransportSub>> {
+        Ok(Box::new(InprocSub(Subscription::new(self.store.clone()))))
+    }
+}
+
+struct InprocSub(Subscription);
+
+impl TransportSub for InprocSub {
+    fn add(&mut self, tag: usize, key: &str) -> Result<()> {
+        self.0.add(tag, key);
+        Ok(())
+    }
+    fn remove(&mut self, tag: usize) -> Result<()> {
+        self.0.remove(tag);
+        Ok(())
+    }
+    fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>> {
+        Ok(self.0.wait_take(timeout))
+    }
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Remote transport (tcp | shm client side)
+// ---------------------------------------------------------------------------
+
+/// Client side of the `tcp` and `shm` transports: a connection pool of
+/// framed pipes to one [`ExchangeServer`].  Each op checks a connection
+/// out (dialing a fresh one if the pool is empty), so concurrent
+/// blocking ops from different worker threads never serialize on one
+/// socket.  An op that hits an I/O error retries exactly once on a
+/// fresh connection, then reports the failure.
+pub struct RemoteTransport {
+    kind: &'static str,
+    addr: String,
+    connect_retries: u32,
+    pool: Mutex<Vec<Box<dyn Conn>>>,
+}
+
+impl RemoteTransport {
+    /// Dial an exchange.  `kind` is `"tcp"` or `"shm"`; `addr` is the
+    /// server's TCP address either way (shm bootstraps over it).
+    /// Validates reachability by dialing one connection eagerly,
+    /// retrying `connect_retries` times 200ms apart (a worker process
+    /// racing its trainer's bind).
+    pub fn connect(kind: &str, addr: &str, connect_retries: u32) -> Result<Arc<RemoteTransport>> {
+        let kind = match kind {
+            "tcp" => "tcp",
+            "shm" => "shm",
+            other => bail!("unknown remote transport {other:?} (tcp|shm)"),
+        };
+        let t = Arc::new(RemoteTransport {
+            kind,
+            addr: addr.to_string(),
+            connect_retries,
+            pool: Mutex::new(Vec::new()),
+        });
+        let c = t.dial()?;
+        t.pool.lock().unwrap().push(c);
+        Ok(t)
+    }
+
+    fn dial(&self) -> Result<Box<dyn Conn>> {
+        let mut last = None;
+        for attempt in 0..=self.connect_retries {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            match self.dial_once() {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap().context(format!(
+            "dial {} exchange at {} ({} retries)",
+            self.kind, self.addr, self.connect_retries
+        )))
+    }
+
+    fn dial_once(&self) -> Result<Box<dyn Conn>> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connect {}", self.addr))?;
+        let tcp = TcpConn::new(stream)?;
+        match self.kind {
+            "tcp" => Ok(Box::new(tcp)),
+            "shm" => self.upgrade_to_shm(tcp),
+            _ => unreachable!(),
+        }
+    }
+
+    #[cfg(unix)]
+    fn upgrade_to_shm(&self, mut tcp: TcpConn) -> Result<Box<dyn Conn>> {
+        let path = std::env::temp_dir().join(format!(
+            "relexi-shm-{}-{}.seg",
+            std::process::id(),
+            SHM_SEG_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let seg = shm::Seg::create(&path, SHM_RING_BYTES)?;
+        let mut buf = Vec::new();
+        Request::ShmOpen {
+            path: path.to_string_lossy().into_owned(),
+            ring_bytes: SHM_RING_BYTES as u64,
+        }
+        .encode_into(&mut buf);
+        let frame = buf.clone();
+        tcp.send(&frame)?;
+        let got = tcp.recv(&mut buf, RPC_TIMEOUT)?;
+        // The segment file can be unlinked as soon as the server has
+        // mapped it (or failed to): both mappings outlive the name.
+        let _ = std::fs::remove_file(&path);
+        ensure!(got, "shm upgrade handshake timed out");
+        match Response::decode(&buf)? {
+            Response::Unit => {}
+            Response::Error(msg) => bail!("server refused shm upgrade: {msg}"),
+            other => bail!("unexpected shm upgrade reply {other:?}"),
+        }
+        Ok(Box::new(ShmConn::new(seg, SHM_RING_BYTES, false, tcp.into_stream()?)?))
+    }
+
+    #[cfg(not(unix))]
+    fn upgrade_to_shm(&self, _tcp: TcpConn) -> Result<Box<dyn Conn>> {
+        bail!("the shm transport requires a unix platform (mmap)")
+    }
+
+    fn checkout(&self) -> Result<Box<dyn Conn>> {
+        if let Some(c) = self.pool.lock().unwrap().pop() {
+            return Ok(c);
+        }
+        self.dial()
+    }
+
+    /// One request/response round trip with single-retry-on-fresh-
+    /// connection semantics.
+    fn rpc(&self, req: &Request, deadline: Duration) -> Result<Response> {
+        let mut frame = Vec::new();
+        req.encode_into(&mut frame);
+        let mut last = None;
+        for attempt in 0..2 {
+            // First attempt reuses a pooled connection; the retry always
+            // dials fresh (the pooled one just failed).
+            let conn = if attempt == 0 { self.checkout() } else { self.dial() };
+            let mut conn = match conn {
+                Ok(c) => c,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            match Self::rpc_on(&mut conn, &frame, deadline) {
+                Ok(resp) => {
+                    self.pool.lock().unwrap().push(conn);
+                    return Ok(resp);
+                }
+                Err(e) => last = Some(e), // conn dropped; retry fresh
+            }
+        }
+        Err(last.unwrap().context(format!("{} exchange rpc failed", self.kind)))
+    }
+
+    fn rpc_on(conn: &mut Box<dyn Conn>, frame: &[u8], deadline: Duration) -> Result<Response> {
+        conn.send(frame)?;
+        let mut buf = Vec::new();
+        ensure!(
+            conn.recv(&mut buf, deadline)?,
+            "exchange did not answer within {deadline:?}"
+        );
+        Response::decode(&buf)
+    }
+}
+
+fn ms(timeout: Duration) -> u64 {
+    timeout.as_millis().min(u64::MAX as u128) as u64
+}
+
+fn expect_unit(resp: Response) -> Result<()> {
+    match resp {
+        Response::Unit => Ok(()),
+        Response::Error(msg) => bail!("exchange error: {msg}"),
+        other => bail!("unexpected exchange reply {other:?}"),
+    }
+}
+
+fn expect_bool(resp: Response) -> Result<bool> {
+    match resp {
+        Response::Bool(b) => Ok(b),
+        Response::Error(msg) => bail!("exchange error: {msg}"),
+        other => bail!("unexpected exchange reply {other:?}"),
+    }
+}
+
+fn expect_maybe(resp: Response) -> Result<Option<Value>> {
+    match resp {
+        Response::Maybe(v) => Ok(v),
+        Response::Error(msg) => bail!("exchange error: {msg}"),
+        other => bail!("unexpected exchange reply {other:?}"),
+    }
+}
+
+fn expect_hit(resp: Response) -> Result<Option<(usize, Value)>> {
+    match resp {
+        Response::Hit(h) => Ok(h.map(|(i, v)| (i as usize, v))),
+        Response::Error(msg) => bail!("exchange error: {msg}"),
+        other => bail!("unexpected exchange reply {other:?}"),
+    }
+}
+
+impl Transport for RemoteTransport {
+    fn kind(&self) -> &'static str {
+        self.kind
+    }
+    fn put(&self, key: &str, value: Value) -> Result<()> {
+        expect_unit(self.rpc(&Request::Put { key: key.to_string(), value }, RPC_TIMEOUT)?)
+    }
+    fn get(&self, key: &str) -> Result<Option<Value>> {
+        expect_maybe(self.rpc(&Request::Get { key: key.to_string() }, RPC_TIMEOUT)?)
+    }
+    fn take(&self, key: &str) -> Result<Option<Value>> {
+        expect_maybe(self.rpc(&Request::Take { key: key.to_string() }, RPC_TIMEOUT)?)
+    }
+    fn exists(&self, key: &str) -> Result<bool> {
+        expect_bool(self.rpc(&Request::Exists { key: key.to_string() }, RPC_TIMEOUT)?)
+    }
+    fn delete(&self, key: &str) -> Result<bool> {
+        expect_bool(self.rpc(&Request::Delete { key: key.to_string() }, RPC_TIMEOUT)?)
+    }
+    fn clear(&self) -> Result<()> {
+        expect_unit(self.rpc(&Request::Clear, RPC_TIMEOUT)?)
+    }
+    fn wait(&self, key: &str, timeout: Duration, take: bool) -> Result<Option<Value>> {
+        let req = Request::Wait { key: key.to_string(), timeout_ms: ms(timeout), take };
+        expect_maybe(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn wait_any(
+        &self,
+        keys: &[&str],
+        timeout: Duration,
+        take: bool,
+    ) -> Result<Option<(usize, Value)>> {
+        let req = Request::WaitAny {
+            keys: keys.iter().map(|k| k.to_string()).collect(),
+            timeout_ms: ms(timeout),
+            take,
+        };
+        expect_hit(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn subscribe(&self) -> Result<Box<dyn TransportSub>> {
+        Ok(Box::new(RemoteSub {
+            conn: self.dial()?,
+            tags: std::collections::HashSet::new(),
+        }))
+    }
+}
+
+/// A remote subscription pins one connection: the server keeps the
+/// matching [`Subscription`] alive for exactly that connection's
+/// lifetime, so add/remove deltas and delivered-exactly-once hits ride
+/// the store's own guarantees.  No transparent reconnect here — a lost
+/// connection would silently lose registrations, so it surfaces as an
+/// error instead.
+struct RemoteSub {
+    conn: Box<dyn Conn>,
+    tags: std::collections::HashSet<usize>,
+}
+
+impl RemoteSub {
+    fn rpc(&mut self, req: &Request, deadline: Duration) -> Result<Response> {
+        let mut frame = Vec::new();
+        req.encode_into(&mut frame);
+        RemoteTransport::rpc_on(&mut self.conn, &frame, deadline)
+    }
+}
+
+impl TransportSub for RemoteSub {
+    fn add(&mut self, tag: usize, key: &str) -> Result<()> {
+        expect_unit(self.rpc(
+            &Request::SubAdd { tag: tag as u64, key: key.to_string() },
+            RPC_TIMEOUT,
+        )?)?;
+        self.tags.insert(tag);
+        Ok(())
+    }
+    fn remove(&mut self, tag: usize) -> Result<()> {
+        expect_unit(self.rpc(&Request::SubRemove { tag: tag as u64 }, RPC_TIMEOUT)?)?;
+        self.tags.remove(&tag);
+        Ok(())
+    }
+    fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>> {
+        let req = Request::SubWait { timeout_ms: ms(timeout) };
+        expect_hit(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn len(&self) -> usize {
+        self.tags.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exchange server
+// ---------------------------------------------------------------------------
+
+/// The network face of a [`ShardedStore`]: a nonblocking accept loop
+/// plus one handler thread per connection.  Lives in the trainer
+/// process next to the authoritative store; dropped, it stops
+/// accepting, disconnects every peer and joins all handlers.
+pub struct ExchangeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ExchangeServer {
+    /// Bind and start serving `store` on `bind` (e.g. `127.0.0.1:0`).
+    pub fn bind(store: Arc<ShardedStore>, bind: &str) -> Result<ExchangeServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind exchange on {bind}"))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("exchange-accept".into())
+            .spawn(move || accept_loop(listener, store, stop2))
+            .context("spawn exchange accept loop")?;
+        Ok(ExchangeServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (port resolved if `:0` was requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ExchangeServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, store: Arc<ShardedStore>, stop: Arc<AtomicBool>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let store = store.clone();
+                let stop = stop.clone();
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                match std::thread::Builder::new()
+                    .name("exchange-conn".into())
+                    .spawn(move || serve_conn(stream, store, stop))
+                {
+                    Ok(h) => handlers.push(h),
+                    Err(e) => eprintln!("exchange: spawn handler failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Per-connection server state: a plain TCP pipe, possibly upgraded to
+/// shm rings mid-stream.
+enum ServerConn {
+    Tcp(TcpConn),
+    #[cfg(unix)]
+    Shm(ShmConn),
+}
+
+impl ServerConn {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        match self {
+            ServerConn::Tcp(c) => c.send(payload),
+            #[cfg(unix)]
+            ServerConn::Shm(c) => c.send(payload),
+        }
+    }
+    fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool> {
+        match self {
+            ServerConn::Tcp(c) => c.recv(out, timeout),
+            #[cfg(unix)]
+            ServerConn::Shm(c) => c.recv(out, timeout),
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>, stop: Arc<AtomicBool>) {
+    let tcp = match TcpConn::new(stream) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    // Disconnects are routine (worker exit, trainer teardown): they end
+    // the handler quietly.  Protocol violations get a stderr line.
+    if let Err(e) = serve_conn_inner(ServerConn::Tcp(tcp), store, stop) {
+        let msg = format!("{e:#}");
+        if !msg.contains("connection closed") && !msg.contains("peer closed") {
+            eprintln!("exchange: connection error: {msg}");
+        }
+    }
+}
+
+fn serve_conn_inner(
+    mut conn: ServerConn,
+    store: Arc<ShardedStore>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut sub: Option<Subscription> = None;
+    let mut req_buf = Vec::new();
+    let mut resp_buf = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        if !conn.recv(&mut req_buf, SLICE)? {
+            continue;
+        }
+        let req = match Request::decode(&req_buf) {
+            Ok(r) => r,
+            Err(e) => {
+                // Tell the peer why, then drop the connection: after a
+                // framing/codec violation nothing downstream is
+                // trustworthy.
+                resp_buf.clear();
+                Response::Error(format!("bad request frame: {e:#}")).encode_into(&mut resp_buf);
+                let _ = conn.send(&resp_buf);
+                bail!("bad request frame: {e:#}");
+            }
+        };
+        // The shm upgrade swaps the pipe itself, so it is handled
+        // outside the plain request->response match.
+        if let Request::ShmOpen { path, ring_bytes } = &req {
+            conn = upgrade_conn(conn, path, *ring_bytes, &mut resp_buf)?;
+            continue;
+        }
+        let resp = match req {
+            Request::Put { key, value } => {
+                store.put(key.as_str(), value);
+                Response::Unit
+            }
+            Request::Get { key } => Response::Maybe(store.get(key.as_str())),
+            Request::Take { key } => Response::Maybe(store.take(key.as_str())),
+            Request::Exists { key } => Response::Bool(store.exists(key.as_str())),
+            Request::Delete { key } => Response::Bool(store.delete(key.as_str())),
+            Request::Clear => {
+                store.clear();
+                Response::Unit
+            }
+            Request::Wait { key, timeout_ms, take } => Response::Maybe(sliced_wait(
+                timeout_ms,
+                &stop,
+                |slice| {
+                    if take {
+                        store.wait_take(key.as_str(), slice)
+                    } else {
+                        store.wait_for(key.as_str(), slice)
+                    }
+                },
+            )),
+            Request::WaitAny { keys, timeout_ms, take } => {
+                let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+                let hit = sliced_wait(timeout_ms, &stop, |slice| {
+                    if take {
+                        store.wait_any_take(&refs, slice)
+                    } else {
+                        store.wait_any(&refs, slice)
+                    }
+                });
+                Response::Hit(hit.map(|(i, v)| (i as u64, v)))
+            }
+            Request::SubAdd { tag, key } => {
+                sub.get_or_insert_with(|| Subscription::new(store.clone()))
+                    .add(tag as usize, key.as_str());
+                Response::Unit
+            }
+            Request::SubRemove { tag } => {
+                match &mut sub {
+                    Some(s) => {
+                        s.remove(tag as usize);
+                        Response::Unit
+                    }
+                    None => Response::Error("no subscription on this connection".into()),
+                }
+            }
+            Request::SubWait { timeout_ms } => match &mut sub {
+                Some(s) => {
+                    let hit = sliced_wait(timeout_ms, &stop, |slice| s.wait_take(slice));
+                    Response::Hit(hit.map(|(t, v)| (t as u64, v)))
+                }
+                None => Response::Error("no subscription on this connection".into()),
+            },
+            Request::Bye => return Ok(()),
+            Request::ShmOpen { .. } => unreachable!("handled above"),
+        };
+        resp_buf.clear();
+        resp.encode_into(&mut resp_buf);
+        conn.send(&resp_buf)?;
+    }
+}
+
+/// Run a blocking store op in bounded slices so server shutdown is
+/// observed within [`SLICE`].  Each inner call is atomic, so a value is
+/// consumed iff it is returned — slicing preserves exactly-once.
+fn sliced_wait<T>(
+    timeout_ms: u64,
+    stop: &AtomicBool,
+    mut op: impl FnMut(Duration) -> Option<T>,
+) -> Option<T> {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        let now = Instant::now();
+        let left = deadline.saturating_duration_since(now);
+        let slice = left.min(SLICE).max(Duration::from_millis(1));
+        if let Some(v) = op(slice) {
+            return Some(v);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+    }
+}
+
+#[cfg(unix)]
+fn upgrade_conn(
+    conn: ServerConn,
+    path: &str,
+    ring_bytes: u64,
+    resp_buf: &mut Vec<u8>,
+) -> Result<ServerConn> {
+    let fail = |conn: &mut ServerConn, resp_buf: &mut Vec<u8>, msg: String| {
+        resp_buf.clear();
+        Response::Error(msg.clone()).encode_into(resp_buf);
+        let _ = conn.send(resp_buf);
+        anyhow::anyhow!("shm upgrade refused: {msg}")
+    };
+    let mut conn = conn;
+    let ServerConn::Tcp(tcp) = conn else {
+        bail!("shm upgrade on an already-upgraded connection");
+    };
+    conn = ServerConn::Tcp(tcp);
+    if !(4096..=(1 << 30)).contains(&(ring_bytes as usize)) {
+        return Err(fail(&mut conn, resp_buf, format!("bad ring_bytes {ring_bytes}")));
+    }
+    let seg = match shm::Seg::open(std::path::Path::new(path), ring_bytes as usize) {
+        Ok(s) => s,
+        Err(e) => return Err(fail(&mut conn, resp_buf, format!("{e:#}"))),
+    };
+    let ServerConn::Tcp(mut tcp) = conn else { unreachable!() };
+    resp_buf.clear();
+    Response::Unit.encode_into(resp_buf);
+    tcp.send(resp_buf)?;
+    let stream = tcp.into_stream()?;
+    Ok(ServerConn::Shm(ShmConn::new(seg, ring_bytes as usize, true, stream)?))
+}
+
+#[cfg(not(unix))]
+fn upgrade_conn(
+    mut conn: ServerConn,
+    _path: &str,
+    _ring_bytes: u64,
+    resp_buf: &mut Vec<u8>,
+) -> Result<ServerConn> {
+    resp_buf.clear();
+    Response::Error("shm transport requires a unix platform".into()).encode_into(resp_buf);
+    let _ = conn.send(resp_buf);
+    bail!("shm upgrade refused: non-unix platform");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn round_trip_req(req: Request) {
+        let mut buf = Vec::new();
+        req.encode_into(&mut buf);
+        assert_eq!(Request::decode(&buf).unwrap(), req);
+        // Every truncation errors, never panics.
+        for cut in 0..buf.len() {
+            assert!(Request::decode(&buf[..cut]).is_err(), "{req:?} cut {cut}");
+        }
+        // Trailing garbage errors.
+        buf.push(0);
+        assert!(Request::decode(&buf).is_err(), "{req:?} trailing");
+    }
+
+    #[test]
+    fn request_codec_round_trips_every_variant() {
+        round_trip_req(Request::Put {
+            key: "a:b".into(),
+            value: Value::tensor(vec![2], vec![1.0, 2.0]),
+        });
+        round_trip_req(Request::Get { key: "k".into() });
+        round_trip_req(Request::Take { key: "k".into() });
+        round_trip_req(Request::Exists { key: "".into() });
+        round_trip_req(Request::Delete { key: "k".into() });
+        round_trip_req(Request::Clear);
+        round_trip_req(Request::Wait { key: "k".into(), timeout_ms: 12, take: true });
+        round_trip_req(Request::WaitAny {
+            keys: vec!["a".into(), "b".into(), "c".into()],
+            timeout_ms: u64::MAX,
+            take: false,
+        });
+        round_trip_req(Request::SubAdd { tag: 7, key: "k".into() });
+        round_trip_req(Request::SubRemove { tag: u64::MAX });
+        round_trip_req(Request::SubWait { timeout_ms: 0 });
+        round_trip_req(Request::Bye);
+        round_trip_req(Request::ShmOpen { path: "/tmp/x.seg".into(), ring_bytes: 1 << 20 });
+    }
+
+    fn round_trip_resp(resp: Response) {
+        let mut buf = Vec::new();
+        resp.encode_into(&mut buf);
+        assert_eq!(Response::decode(&buf).unwrap(), resp);
+        for cut in 0..buf.len() {
+            assert!(Response::decode(&buf[..cut]).is_err(), "{resp:?} cut {cut}");
+        }
+        buf.push(0);
+        assert!(Response::decode(&buf).is_err(), "{resp:?} trailing");
+    }
+
+    #[test]
+    fn response_codec_round_trips_every_variant() {
+        round_trip_resp(Response::Unit);
+        round_trip_resp(Response::Bool(true));
+        round_trip_resp(Response::Bool(false));
+        round_trip_resp(Response::Maybe(None));
+        round_trip_resp(Response::Maybe(Some(Value::Scalar(1.5))));
+        round_trip_resp(Response::Maybe(Some(Value::tensor(vec![1, 3], vec![0.0; 3]))));
+        round_trip_resp(Response::Hit(None));
+        round_trip_resp(Response::Hit(Some((42, Value::Flag(true)))));
+        round_trip_resp(Response::Error("boom".into()));
+    }
+
+    #[test]
+    fn long_error_messages_are_bounded_on_char_boundaries() {
+        let msg = "é".repeat(2000);
+        let mut buf = Vec::new();
+        Response::Error(msg).encode_into(&mut buf);
+        match Response::decode(&buf).unwrap() {
+            Response::Error(m) => assert!(m.len() <= 512 && !m.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_length_prefix_is_validated() {
+        assert!(frame_len(0u32.to_le_bytes()).is_err(), "empty frame rejected");
+        assert!(frame_len(u32::MAX.to_le_bytes()).is_err(), "oversized rejected");
+        assert_eq!(frame_len(5u32.to_le_bytes()).unwrap(), 5);
+
+        // An oversized prefix poisons the pipe before any allocation.
+        let mut accum = u32::MAX.to_le_bytes().to_vec();
+        let mut out = Vec::new();
+        assert!(try_extract(&mut accum, &mut out).is_err());
+    }
+
+    #[test]
+    fn tcp_transport_serves_the_store_contract_end_to_end() {
+        let store = Arc::new(ShardedStore::new(4));
+        let server = ExchangeServer::bind(store.clone(), "127.0.0.1:0").unwrap();
+        let t = RemoteTransport::connect("tcp", &server.addr().to_string(), 1).unwrap();
+
+        t.put("k", Value::Scalar(2.5)).unwrap();
+        assert_eq!(t.get("k").unwrap().unwrap().as_scalar(), Some(2.5));
+        assert!(t.exists("k").unwrap());
+        assert_eq!(t.take("k").unwrap().unwrap().as_scalar(), Some(2.5));
+        assert!(!t.exists("k").unwrap());
+        assert!(t.get("k").unwrap().is_none());
+
+        // Blocking wait resolved by a later put through the store side.
+        let store2 = store.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            store2.put("w", Value::Flag(true));
+        });
+        let v = t.wait("w", Duration::from_secs(5), true).unwrap().unwrap();
+        assert_eq!(v.as_flag(), Some(true));
+        h.join().unwrap();
+        assert!(t.get("w").unwrap().is_none(), "wait_take consumed");
+
+        // wait_any index semantics.
+        t.put("b", Value::Scalar(1.0)).unwrap();
+        let (idx, _) = t
+            .wait_any(&["a", "b"], Duration::from_millis(100), false)
+            .unwrap()
+            .unwrap();
+        assert_eq!(idx, 1);
+
+        // Subscription deltas.
+        let mut sub = t.subscribe().unwrap();
+        sub.add(3, "sub:x").unwrap();
+        assert_eq!(sub.len(), 1);
+        t.put("sub:x", Value::Scalar(9.0)).unwrap();
+        let (tag, v) = sub.wait_take(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!((tag, v.as_scalar()), (3, Some(9.0)));
+        sub.remove(3).unwrap();
+        assert_eq!(sub.len(), 0);
+
+        t.put("c", Value::Scalar(0.0)).unwrap();
+        t.clear().unwrap();
+        assert!(store.is_empty());
+        drop(server);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_transport_round_trips_tensors() {
+        let store = Arc::new(ShardedStore::new(4));
+        let server = ExchangeServer::bind(store.clone(), "127.0.0.1:0").unwrap();
+        let t = RemoteTransport::connect("shm", &server.addr().to_string(), 1).unwrap();
+        assert_eq!(t.kind(), "shm");
+
+        let data: Vec<f32> = (0..10_000).map(|i| i as f32 * 0.5).collect();
+        t.put("big", Value::tensor(vec![10_000], data.clone())).unwrap();
+        let (shape, got) = store.get("big").unwrap().as_tensor().map(|(s, d)| (s.to_vec(), d.to_vec())).unwrap();
+        assert_eq!(shape, vec![10_000]);
+        assert_eq!(got, data, "f32 payload crosses the rings bit-exactly");
+
+        let back = t.take("big").unwrap().unwrap();
+        assert_eq!(back.as_tensor().unwrap().1, &data[..]);
+
+        // A frame larger than the ring streams through in chunks.
+        let huge: Vec<f32> = vec![1.25; (SHM_RING_BYTES / 4) + 1000];
+        t.put("huge", Value::tensor(vec![huge.len()], huge.clone())).unwrap();
+        assert_eq!(
+            t.get("huge").unwrap().unwrap().as_tensor().unwrap().1,
+            &huge[..]
+        );
+        drop(server);
+    }
+
+    #[test]
+    fn server_rejects_garbage_frames_without_dying() {
+        let store = Arc::new(ShardedStore::new(1));
+        let server = ExchangeServer::bind(store.clone(), "127.0.0.1:0").unwrap();
+
+        // A raw client sending a malformed frame gets an error reply.
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(&3u32.to_le_bytes()).unwrap();
+        s.write_all(&[200, 1, 2]).unwrap(); // unknown opcode
+        let mut tcp = TcpConn::new(s).unwrap();
+        let mut buf = Vec::new();
+        assert!(tcp.recv(&mut buf, Duration::from_secs(5)).unwrap());
+        match Response::decode(&buf).unwrap() {
+            Response::Error(m) => assert!(m.contains("bad request frame"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+
+        // The server survives: a fresh well-formed client still works.
+        let t = RemoteTransport::connect("tcp", &server.addr().to_string(), 1).unwrap();
+        t.put("ok", Value::Flag(true)).unwrap();
+        assert_eq!(store.get("ok").unwrap().as_flag(), Some(true));
+    }
+}

@@ -9,9 +9,73 @@
 //! without copying; [`TensorPool`] recycles such buffers so the
 //! steady-state rollout exchange allocates nothing.
 
+use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Hard cap on any single wire payload (tensor data, byte blobs, whole
+/// frames).  A remote peer that announces a length beyond this is
+/// malformed or hostile; decoders reject it instead of allocating.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Little-endian primitive readers/writers shared by the [`Value`] codec
+/// and the transport frame codec ([`crate::orchestrator::transport`]).
+/// Readers never panic: every bounds problem is a recoverable `Err`.
+pub(crate) mod wire {
+    use anyhow::{ensure, Result};
+
+    pub fn w_u16(out: &mut Vec<u8>, v: u16) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn w_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn w_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn w_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn w_str(out: &mut Vec<u8>, s: &str) {
+        assert!(s.len() <= u16::MAX as usize, "key too long for the wire: {}", s.len());
+        w_u16(out, s.len() as u16);
+        out.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn r_bytes<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= buf.len() && *pos <= buf.len() - n,
+            "truncated frame: need {n} bytes at offset {pos}, have {}",
+            buf.len()
+        );
+        let out = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(out)
+    }
+    pub fn r_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+        Ok(r_bytes(buf, pos, 1)?[0])
+    }
+    pub fn r_u16(buf: &[u8], pos: &mut usize) -> Result<u16> {
+        Ok(u16::from_le_bytes(r_bytes(buf, pos, 2)?.try_into().unwrap()))
+    }
+    pub fn r_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+        Ok(u32::from_le_bytes(r_bytes(buf, pos, 4)?.try_into().unwrap()))
+    }
+    pub fn r_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+        Ok(u64::from_le_bytes(r_bytes(buf, pos, 8)?.try_into().unwrap()))
+    }
+    pub fn r_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+        Ok(f64::from_le_bytes(r_bytes(buf, pos, 8)?.try_into().unwrap()))
+    }
+    pub fn r_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+        let n = r_u16(buf, pos)? as usize;
+        let raw = r_bytes(buf, pos, n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|e| anyhow::anyhow!("key is not utf-8: {e}"))?
+            .to_string())
+    }
+}
 
 /// A value in the in-memory datastore.
 #[derive(Debug, Clone, PartialEq)]
@@ -91,6 +155,102 @@ impl Value {
         match self {
             Value::Scalar(x) => Some(*x),
             _ => None,
+        }
+    }
+
+    /// Serialize for the transport wire (little-endian, self-describing
+    /// tag byte).  Layout:
+    ///
+    /// ```text
+    /// Tensor: 0x00 | u8 ndim | ndim x u32 dim | u32 count | count x f32
+    /// Scalar: 0x01 | f64
+    /// Flag:   0x02 | u8 (0|1)
+    /// Bytes:  0x03 | u32 len | len bytes
+    /// ```
+    ///
+    /// The tensor element count is redundant with the dims product;
+    /// [`Value::decode_from`] cross-checks them so a corrupted frame
+    /// cannot reach the `tensor_shared` shape assertion.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        use wire::*;
+        match self {
+            Value::Tensor { shape, data } => {
+                assert!(shape.len() <= u8::MAX as usize, "tensor rank {} too high", shape.len());
+                out.push(0);
+                out.push(shape.len() as u8);
+                for &d in shape.iter() {
+                    w_u32(out, u32::try_from(d).expect("tensor dim exceeds u32"));
+                }
+                w_u32(out, u32::try_from(data.len()).expect("tensor len exceeds u32"));
+                for &x in data.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::Scalar(x) => {
+                out.push(1);
+                w_f64(out, *x);
+            }
+            Value::Flag(b) => {
+                out.push(2);
+                out.push(*b as u8);
+            }
+            Value::Bytes(b) => {
+                assert!(b.len() <= MAX_PAYLOAD, "byte payload {} exceeds MAX_PAYLOAD", b.len());
+                out.push(3);
+                w_u32(out, b.len() as u32);
+                out.extend_from_slice(b);
+            }
+        }
+    }
+
+    /// Decode one value from `buf` at `*pos`, advancing `*pos` past it.
+    /// Malformed input — unknown tag, truncated payload, dims/count
+    /// mismatch, oversized length — is an `Err`, never a panic.
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> Result<Value> {
+        use wire::*;
+        match r_u8(buf, pos)? {
+            0 => {
+                let ndim = r_u8(buf, pos)? as usize;
+                let mut shape = Vec::with_capacity(ndim);
+                let mut product: usize = 1;
+                for _ in 0..ndim {
+                    let d = r_u32(buf, pos)? as usize;
+                    product = product
+                        .checked_mul(d)
+                        .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
+                    shape.push(d);
+                }
+                let count = r_u32(buf, pos)? as usize;
+                anyhow::ensure!(
+                    count == product,
+                    "tensor count {count} disagrees with dims product {product}"
+                );
+                anyhow::ensure!(
+                    count.saturating_mul(4) <= MAX_PAYLOAD,
+                    "tensor payload {count} floats exceeds MAX_PAYLOAD"
+                );
+                let raw = r_bytes(buf, pos, count * 4)?;
+                let mut data = Vec::with_capacity(count);
+                for c in raw.chunks_exact(4) {
+                    data.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                Ok(Value::Tensor {
+                    shape: Arc::from(shape),
+                    data: Arc::from(data),
+                })
+            }
+            1 => Ok(Value::Scalar(r_f64(buf, pos)?)),
+            2 => match r_u8(buf, pos)? {
+                0 => Ok(Value::Flag(false)),
+                1 => Ok(Value::Flag(true)),
+                other => anyhow::bail!("flag byte must be 0|1, got {other}"),
+            },
+            3 => {
+                let n = r_u32(buf, pos)? as usize;
+                anyhow::ensure!(n <= MAX_PAYLOAD, "byte payload {n} exceeds MAX_PAYLOAD");
+                Ok(Value::bytes(r_bytes(buf, pos, n)?.to_vec()))
+            }
+            other => anyhow::bail!("unknown value tag {other}"),
         }
     }
 }
@@ -269,6 +429,58 @@ mod tests {
         let mut b = pool.take_free(4);
         assert_eq!(b[3], 7.0, "recycled buffer keeps its storage");
         Arc::get_mut(&mut b).expect("recycled buffer is unique again");
+    }
+
+    #[test]
+    fn wire_round_trip_every_variant() {
+        let vals = [
+            Value::tensor(vec![2, 3], vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]),
+            Value::tensor(vec![0], vec![]),
+            Value::Scalar(-0.125),
+            Value::Flag(true),
+            Value::Flag(false),
+            Value::bytes(vec![0, 255, 7, 7]),
+            Value::bytes(vec![]),
+        ];
+        for v in vals {
+            let mut buf = vec![0xAB]; // prefix survives
+            v.encode_into(&mut buf);
+            let mut pos = 1;
+            let back = Value::decode_from(&buf, &mut pos).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(pos, buf.len(), "decode consumed the whole encoding");
+        }
+    }
+
+    #[test]
+    fn wire_decode_rejects_malformed_input_without_panicking() {
+        // Truncations of a valid encoding at every split point.
+        let mut full = Vec::new();
+        Value::tensor(vec![2, 2], vec![1.0; 4]).encode_into(&mut full);
+        for cut in 0..full.len() {
+            let mut pos = 0;
+            assert!(Value::decode_from(&full[..cut], &mut pos).is_err(), "cut at {cut}");
+        }
+        // Unknown tag.
+        assert!(Value::decode_from(&[9], &mut 0).is_err());
+        // Flag byte out of range.
+        assert!(Value::decode_from(&[2, 3], &mut 0).is_err());
+        // Tensor count disagreeing with dims product.
+        let mut bad = vec![0u8, 1]; // ndim 1
+        bad.extend_from_slice(&2u32.to_le_bytes()); // dim 2
+        bad.extend_from_slice(&3u32.to_le_bytes()); // count 3 != 2
+        bad.extend_from_slice(&[0; 12]);
+        assert!(Value::decode_from(&bad, &mut 0).is_err());
+        // Oversized byte length never allocates.
+        let mut huge = vec![3u8];
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Value::decode_from(&huge, &mut 0).is_err());
+        // Tensor dims product overflowing usize.
+        let mut ovf = vec![0u8, 16];
+        for _ in 0..16 {
+            ovf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        }
+        assert!(Value::decode_from(&ovf, &mut 0).is_err());
     }
 
     #[test]

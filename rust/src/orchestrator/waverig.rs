@@ -1,0 +1,167 @@
+//! Wave-exchange micro-harness behind the strong/weak scaling benches
+//! (`BENCH_strong_scaling` / `BENCH_weak_scaling`): `E` env threads,
+//! each speaking a chosen transport into the trainer's store, exchange
+//! one state/action pair per wave with a trainer loop that mirrors the
+//! event-driven collector's store traffic (arrival-order subscription
+//! consume, answer, re-register).  No CFD work anywhere — what remains
+//! is exactly the per-wave exchange latency of the transport under
+//! test, so `inproc` vs `shm` vs `tcp` rows are directly comparable.
+
+use super::store::Subscription;
+use super::transport::{InprocTransport, RemoteTransport, Transport};
+use super::{Client, ExchangeServer, Orchestrator, Value};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Generous stall bound: a wave that takes this long is wedged, not slow.
+const WAVE_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn state_key(env: usize, wave: usize) -> String {
+    format!("wave:st:{env}:{wave}")
+}
+
+fn action_key(env: usize, wave: usize) -> String {
+    format!("wave:ac:{env}:{wave}")
+}
+
+/// The measured exchange: env threads publish states and block on their
+/// action keys; [`WaveRig::run_wave`] serves one full wave from the
+/// trainer side.  Dropping the rig delivers a stop sentinel to every env
+/// thread and joins them before the exchange server goes away.
+pub struct WaveRig {
+    orch: Orchestrator,
+    trainer: Client,
+    sub: Subscription,
+    /// Per-env next wave index (the trainer's view).
+    wave: Vec<usize>,
+    act: Vec<f32>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    /// Exchange serving the remote kinds; must outlive the env threads
+    /// (joined in `Drop`'s body, before fields drop).
+    _server: Option<ExchangeServer>,
+}
+
+impl WaveRig {
+    /// Launch a rig on transport `kind` (`"inproc" | "shm" | "tcp"`).
+    /// `state_floats[e]` sizes env `e`'s per-wave state tensor;
+    /// `act_floats` sizes the trainer's per-wave action tensor.
+    pub fn start(kind: &str, state_floats: &[usize], act_floats: usize) -> Result<WaveRig> {
+        let orch = Orchestrator::launch(8);
+        let server = if kind == "inproc" {
+            None
+        } else {
+            Some(orch.serve("127.0.0.1:0")?)
+        };
+        // One transport per rig, shared by every env thread: the remote
+        // kinds pool one connection per concurrent blocking op, exactly
+        // like a multi-env worker process does.
+        let transport: Arc<dyn Transport> = match &server {
+            None => Arc::new(InprocTransport::new(orch.store().clone())),
+            Some(s) => RemoteTransport::connect(kind, &s.addr().to_string(), 3)?,
+        };
+        let mut handles = Vec::with_capacity(state_floats.len());
+        for (e, &floats) in state_floats.iter().enumerate() {
+            let t = transport.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wave-env-{e}"))
+                    .spawn(move || env_loop(t, e, floats))
+                    .context("spawn wave env thread")?,
+            );
+        }
+        let mut sub = Subscription::new(orch.store().clone());
+        for e in 0..state_floats.len() {
+            sub.add(e, &state_key(e, 0));
+        }
+        Ok(WaveRig {
+            trainer: orch.client(),
+            sub,
+            wave: vec![0; state_floats.len()],
+            act: vec![0.5f32; act_floats.max(1)],
+            handles,
+            _server: server,
+            orch,
+        })
+    }
+
+    /// Envs in the rig.
+    pub fn n_envs(&self) -> usize {
+        self.wave.len()
+    }
+
+    /// Serve one full wave: consume `E` states in arrival order through
+    /// the persistent subscription, answer each with an action, and
+    /// re-register that env's next state key — the collector's exact
+    /// per-wave store traffic.
+    pub fn run_wave(&mut self) {
+        for _ in 0..self.wave.len() {
+            let (e, state) = self.sub.wait_take(WAVE_TIMEOUT).expect("wave stalled");
+            debug_assert!(state.as_tensor().is_some());
+            self.trainer.put_tensor(
+                &action_key(e, self.wave[e]),
+                vec![self.act.len()],
+                self.act.clone(),
+            );
+            self.wave[e] += 1;
+            self.sub.add(e, &state_key(e, self.wave[e]));
+        }
+    }
+}
+
+impl Drop for WaveRig {
+    fn drop(&mut self) {
+        // Whatever an env thread is doing, its next blocking point is
+        // the action key of the trainer's per-env wave index: a Flag
+        // there is the stop sentinel.
+        for e in 0..self.wave.len() {
+            self.trainer.put_flag(&action_key(e, self.wave[e]), true);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.orch.clear();
+    }
+}
+
+/// One env thread: publish the wave's state, block for the action (a
+/// Flag instead of a tensor is the rig's stop sentinel), repeat.
+fn env_loop(t: Arc<dyn Transport>, e: usize, floats: usize) -> Result<()> {
+    let state = vec![1.0f32; floats.max(1)];
+    for w in 0.. {
+        t.put(
+            &state_key(e, w),
+            Value::tensor(vec![state.len()], state.clone()),
+        )?;
+        match t.wait(&action_key(e, w), WAVE_TIMEOUT, true)? {
+            Some(Value::Flag(_)) | None => return Ok(()),
+            Some(_) => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_rig_completes_waves_and_stops_cleanly() {
+        let mut rig = WaveRig::start("inproc", &[64, 64, 64], 8).unwrap();
+        assert_eq!(rig.n_envs(), 3);
+        for _ in 0..3 {
+            rig.run_wave();
+        }
+        assert_eq!(rig.wave, vec![3, 3, 3]);
+        drop(rig); // must not hang
+    }
+
+    #[test]
+    fn tcp_rig_exchanges_real_frames() {
+        let mut rig = WaveRig::start("tcp", &[32, 32], 4).unwrap();
+        rig.run_wave();
+        rig.run_wave();
+        assert_eq!(rig.wave, vec![2, 2]);
+    }
+}

@@ -35,7 +35,14 @@ impl Rng {
 
     /// Derive an independent stream (for per-worker RNGs).
     pub fn split(&mut self, tag: u64) -> Rng {
-        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+        Rng::new(self.split_seed(tag))
+    }
+
+    /// The 64-bit seed [`Rng::split`] would build its stream from —
+    /// shippable across a process boundary (the env-worker begin
+    /// message), with `Rng::new(seed)` reconstructing the exact stream.
+    pub fn split_seed(&mut self, tag: u64) -> u64 {
+        self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15)
     }
 
     /// Next raw 64-bit output.
@@ -192,5 +199,21 @@ mod tests {
         let xs: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn split_seed_reconstructs_the_split_stream_bitwise() {
+        // A seed shipped to another process must rebuild the exact
+        // stream `split` would have produced locally.
+        let mut local = Rng::new(2022);
+        let mut remote = Rng::new(2022);
+        for tag in [0u64, 1, 7, u64::MAX] {
+            let mut a = local.split(tag);
+            let mut b = Rng::new(remote.split_seed(tag));
+            for _ in 0..16 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+            assert_eq!(a.normal(), b.normal());
+        }
     }
 }

@@ -220,10 +220,16 @@ fn steady_state_exchange_allocates_nothing() {
     // buffers — warm up during iteration 0 and must never allocate again.
     // Rollouts are dropped before the next iteration (as the training
     // loop does after its update phase), which releases every shared
-    // buffer back to its pool.
-    let cfg = tiny_cfg(3);
+    // buffer back to its pool.  Since PR 7 the exchange sits behind the
+    // transport seam: pin `transport = "inproc"` explicitly (the config
+    // CI gates) and check the client really resolved to the direct-call
+    // backend — the seam must not cost the fast path its zero-alloc
+    // property.
+    let mut cfg = tiny_cfg(3);
+    cfg.orchestrator.transport = "inproc".to_string();
     let n_envs = cfg.rl.n_envs;
     let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    assert_eq!(orch.client().transport_kind(), "inproc");
     let mut pool = EnvPool::new(cfg, tiny_truth(21), &orch).unwrap();
     let mut rng = Rng::new(8);
 

@@ -1,0 +1,494 @@
+//! Integration: the transport seam behind the orchestrator store.
+//!
+//! Four layers, matching the PR-7 acceptance gates:
+//!
+//! * wire-codec robustness — random garbage, truncated frames and
+//!   single-byte mutations of every `Request`/`Response`/`Value`
+//!   encoding must error (or decode consistently), never panic;
+//! * a transport-conformance suite running the store contract
+//!   (exactly-once `wait_take` under racing waiters, put/clear races,
+//!   subscription add/remove deltas) against all three transports
+//!   through the same `Arc<dyn Transport>` seam;
+//! * the loopback-TCP smoke: a trainer plus real `relexi env-worker`
+//!   OS processes run an 8-env Burgers iteration whose episodes are
+//!   bit-identical to the in-process threads pool at the same seed;
+//! * bounded worker teardown: an env-worker whose trainer dies without
+//!   posting the stop flag exits on its own within the reconnect bound.
+
+use relexi::config::{BurgersConfig, EnvVariant, RunConfig};
+use relexi::coordinator::EnvPool;
+use relexi::orchestrator::protocol::ctl_hello_key;
+use relexi::orchestrator::transport::{
+    frame_len, InprocTransport, RemoteTransport, Request, Response, Transport, MAX_FRAME,
+};
+use relexi::orchestrator::{Orchestrator, Protocol, Value};
+use relexi::rl::Episode;
+use relexi::runtime::stub_policy;
+use relexi::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- codec
+
+fn sample_requests() -> Vec<Request> {
+    vec![
+        Request::Put {
+            key: "k:put".into(),
+            value: Value::tensor(vec![2, 3], vec![0.5; 6]),
+        },
+        Request::Put {
+            key: "k:bytes".into(),
+            value: Value::bytes(vec![0, 1, 2, 254, 255]),
+        },
+        Request::Get { key: "k".into() },
+        Request::Take { key: "k".into() },
+        Request::Exists { key: "k".into() },
+        Request::Delete { key: "k".into() },
+        Request::Clear,
+        Request::Wait {
+            key: "k".into(),
+            timeout_ms: 1500,
+            take: true,
+        },
+        Request::WaitAny {
+            keys: vec!["a".into(), "b".into(), "c".into()],
+            timeout_ms: 10,
+            take: false,
+        },
+        Request::SubAdd {
+            tag: 7,
+            key: "k".into(),
+        },
+        Request::SubRemove { tag: 7 },
+        Request::SubWait { timeout_ms: 250 },
+        Request::Bye,
+        Request::ShmOpen {
+            path: "/dev/shm/relexi-test".into(),
+            ring_bytes: 1 << 20,
+        },
+    ]
+}
+
+fn sample_responses() -> Vec<Response> {
+    vec![
+        Response::Unit,
+        Response::Bool(true),
+        Response::Bool(false),
+        Response::Maybe(None),
+        Response::Maybe(Some(Value::Scalar(-0.0))),
+        Response::Maybe(Some(Value::Flag(true))),
+        Response::Hit(None),
+        Response::Hit(Some((9, Value::tensor(vec![4], vec![1.0, 2.0, 3.0, 4.0])))),
+        Response::Error("boom".into()),
+    ]
+}
+
+#[test]
+fn codec_never_panics_on_random_garbage() {
+    // Deterministic byte soup: every decoder must return Ok or Err on
+    // arbitrary input — never panic, never blow up an allocation (the
+    // wire layer validates declared lengths against the buffer first).
+    let mut rng = Rng::new(0xF0CC);
+    for _ in 0..20_000 {
+        let len = rng.below(96);
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = Request::decode(&buf);
+        let _ = Response::decode(&buf);
+        let mut pos = 0usize;
+        let _ = Value::decode_from(&buf, &mut pos);
+        let n = buf.len().min(4);
+        let mut hdr = [0u8; 4];
+        hdr[..n].copy_from_slice(&buf[..n]);
+        let _ = frame_len(hdr);
+    }
+}
+
+#[test]
+fn codec_truncation_errors_or_stays_consistent() {
+    // Every strict prefix of a valid encoding either errors (the normal
+    // case: the payload runs out) or — if it happens to be a complete
+    // message — re-encodes to exactly those bytes.  Either way: no
+    // panic, no silent misparse.
+    for req in sample_requests() {
+        let mut buf = Vec::new();
+        req.encode_into(&mut buf);
+        let full = Request::decode(&buf).expect("round trip");
+        assert_eq!(full, req);
+        for k in 0..buf.len() {
+            match Request::decode(&buf[..k]) {
+                Err(_) => {}
+                Ok(d) => {
+                    let mut re = Vec::new();
+                    d.encode_into(&mut re);
+                    assert_eq!(re, &buf[..k], "prefix decode of {req:?} inconsistent");
+                }
+            }
+        }
+    }
+    for resp in sample_responses() {
+        let mut buf = Vec::new();
+        resp.encode_into(&mut buf);
+        let full = Response::decode(&buf).expect("round trip");
+        assert_eq!(full, resp);
+        for k in 0..buf.len() {
+            match Response::decode(&buf[..k]) {
+                Err(_) => {}
+                Ok(d) => {
+                    let mut re = Vec::new();
+                    d.encode_into(&mut re);
+                    assert_eq!(re, &buf[..k], "prefix decode of {resp:?} inconsistent");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_survives_single_byte_mutations() {
+    // Flip every byte of every valid encoding through a handful of
+    // deterministic xor masks: decoding must never panic, and when it
+    // succeeds the result must re-encode to the mutated bytes.
+    for req in sample_requests() {
+        let mut buf = Vec::new();
+        req.encode_into(&mut buf);
+        for i in 0..buf.len() {
+            for mask in [0x01u8, 0x80, 0xFF] {
+                let mut m = buf.clone();
+                m[i] ^= mask;
+                if let Ok(d) = Request::decode(&m) {
+                    let mut re = Vec::new();
+                    d.encode_into(&mut re);
+                    assert_eq!(re, m, "mutated decode of {req:?} inconsistent");
+                }
+            }
+        }
+    }
+    for resp in sample_responses() {
+        let mut buf = Vec::new();
+        resp.encode_into(&mut buf);
+        for i in 0..buf.len() {
+            for mask in [0x01u8, 0x80, 0xFF] {
+                let mut m = buf.clone();
+                m[i] ^= mask;
+                let _ = Response::decode(&m);
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_length_bounds_are_enforced() {
+    assert_eq!(frame_len(64u32.to_le_bytes()).unwrap(), 64);
+    assert_eq!(frame_len((MAX_FRAME as u32).to_le_bytes()).unwrap(), MAX_FRAME);
+    assert!(frame_len((MAX_FRAME as u32 + 1).to_le_bytes()).is_err());
+    assert!(frame_len(u32::MAX.to_le_bytes()).is_err());
+}
+
+// --------------------------------------------------------- conformance
+
+/// The store contract every transport must serve identically.  Ends
+/// with a put/clear race, so run it last against a given store.
+fn conformance(t: &Arc<dyn Transport>) {
+    // Basics: put / get / exists / take-consumes / delete.
+    t.put("c:a", Value::Scalar(2.5)).unwrap();
+    assert!(t.exists("c:a").unwrap());
+    match t.get("c:a").unwrap() {
+        Some(Value::Scalar(x)) => assert_eq!(x, 2.5),
+        v => panic!("get c:a -> {v:?}"),
+    }
+    assert!(t.get("c:missing").unwrap().is_none());
+    assert!(t.take("c:a").unwrap().is_some());
+    assert!(t.take("c:a").unwrap().is_none(), "take must consume");
+    t.put("c:b", Value::Flag(true)).unwrap();
+    assert!(t.delete("c:b").unwrap());
+    assert!(!t.delete("c:b").unwrap());
+
+    // Tensor fidelity across the wire, bit for bit.
+    let odd = vec![f32::MIN_POSITIVE, -0.0, 1.0e-38, 3.5, -7.25, f32::MAX];
+    t.put("c:t", Value::tensor(vec![2, 3], odd.clone())).unwrap();
+    let (shape, data) = match t.get("c:t").unwrap() {
+        Some(v) => {
+            let (s, d) = v.as_tensor().map(|(s, d)| (s.to_vec(), d.to_vec())).unwrap();
+            (s, d)
+        }
+        None => panic!("tensor lost"),
+    };
+    assert_eq!(shape, vec![2, 3]);
+    for (a, b) in odd.iter().zip(&data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "tensor payload altered in flight");
+    }
+
+    // Exactly-once wait_take: racing waiters split the values, every
+    // value delivered to exactly one of them.
+    const N_VALUES: usize = 16;
+    let keys: Vec<String> = (0..N_VALUES).map(|i| format!("c:race:{i}")).collect();
+    let hits: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let waiters: Vec<_> = (0..3)
+        .map(|w| {
+            let t = t.clone();
+            let keys = keys.clone();
+            let hits = hits.clone();
+            std::thread::Builder::new()
+                .name(format!("conf-waiter-{w}"))
+                .spawn(move || loop {
+                    let refs: Vec<&str> = keys.iter().map(|k| k.as_str()).collect();
+                    match t.wait_any(&refs, Duration::from_millis(500), true).unwrap() {
+                        Some((i, _)) => hits.lock().unwrap().push(i),
+                        None => return, // quiet for 500 ms: producer done
+                    }
+                })
+                .unwrap()
+        })
+        .collect();
+    for (i, k) in keys.iter().enumerate() {
+        t.put(k, Value::Scalar(i as f64)).unwrap();
+    }
+    for h in waiters {
+        h.join().unwrap();
+    }
+    let mut seen = hits.lock().unwrap().clone();
+    seen.sort_unstable();
+    assert_eq!(
+        seen,
+        (0..N_VALUES).collect::<Vec<_>>(),
+        "each value must be delivered exactly once"
+    );
+
+    // Subscription add/remove deltas: only registered tags fire, a
+    // removed tag never fires, delivery retires the registration.
+    let mut sub = t.subscribe().unwrap();
+    sub.add(7, "c:s:a").unwrap();
+    sub.add(9, "c:s:b").unwrap();
+    assert_eq!(sub.len(), 2);
+    t.put("c:s:b", Value::Flag(true)).unwrap();
+    match sub.wait_take(Duration::from_secs(5)).unwrap() {
+        Some((9, Value::Flag(true))) => {}
+        other => panic!("subscription delivered {other:?}"),
+    }
+    assert_eq!(sub.len(), 1, "delivery retires the registration");
+    sub.remove(7).unwrap();
+    t.put("c:s:a", Value::Flag(true)).unwrap();
+    assert!(
+        sub.wait_take(Duration::from_millis(300)).unwrap().is_none(),
+        "removed tag must never fire"
+    );
+    sub.add(1, "c:s:c").unwrap();
+    t.put("c:s:c", Value::Scalar(4.0)).unwrap();
+    match sub.wait_take(Duration::from_secs(5)).unwrap() {
+        Some((1, Value::Scalar(x))) => assert_eq!(x, 4.0),
+        other => panic!("re-added subscription delivered {other:?}"),
+    }
+
+    // put/clear race: concurrent writers against repeated clears must
+    // neither panic nor wedge, and a final clear leaves nothing behind.
+    let writer = {
+        let t = t.clone();
+        std::thread::spawn(move || {
+            for i in 0..200 {
+                t.put(&format!("c:pc:{}", i % 8), Value::Scalar(i as f64))
+                    .unwrap();
+            }
+        })
+    };
+    for _ in 0..50 {
+        t.clear().unwrap();
+    }
+    writer.join().unwrap();
+    t.clear().unwrap();
+    for i in 0..8 {
+        assert!(t.get(&format!("c:pc:{i}")).unwrap().is_none(), "clear missed a key");
+    }
+}
+
+#[test]
+fn conformance_inproc() {
+    let orch = Orchestrator::launch(4);
+    let t: Arc<dyn Transport> = Arc::new(InprocTransport::new(orch.store().clone()));
+    assert_eq!(t.kind(), "inproc");
+    conformance(&t);
+}
+
+#[test]
+fn conformance_tcp() {
+    let orch = Orchestrator::launch(4);
+    let server = orch.serve("127.0.0.1:0").unwrap();
+    let t: Arc<dyn Transport> =
+        RemoteTransport::connect("tcp", &server.addr().to_string(), 3).unwrap();
+    assert_eq!(t.kind(), "tcp");
+    conformance(&t);
+}
+
+#[cfg(unix)]
+#[test]
+fn conformance_shm() {
+    let orch = Orchestrator::launch(4);
+    let server = orch.serve("127.0.0.1:0").unwrap();
+    let t: Arc<dyn Transport> =
+        RemoteTransport::connect("shm", &server.addr().to_string(), 3).unwrap();
+    assert_eq!(t.kind(), "shm");
+    conformance(&t);
+}
+
+// ------------------------------------------------- loopback-TCP smoke
+
+/// 8-env Burgers config with two scenario variants — small enough for
+/// CI, heterogeneous enough to exercise early-done bookkeeping across
+/// the process boundary.
+fn burgers8_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.rl.backend = "burgers".to_string();
+    cfg.burgers = BurgersConfig {
+        points: 48,
+        segments: 4,
+        k_max: 6,
+        t_end: 0.5, // 5 actions at the base horizon
+        truth_states: 4,
+        truth_spinup: 1.0,
+        truth_interval: 0.25,
+        ..BurgersConfig::default()
+    };
+    cfg.rl.n_envs = 8;
+    cfg.rl.split_init_pool = true;
+    cfg.rl.variants = vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "short".into(),
+            t_end_scale: 0.6, // 3 actions: early-done across processes
+            ..EnvVariant::default()
+        },
+    ];
+    cfg
+}
+
+fn assert_episodes_identical(a: &[Episode], b: &[Episode]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.variant, y.variant, "env {i} variant");
+        assert_eq!(x.steps.len(), y.steps.len(), "env {i} episode length");
+        for (t, (sx, sy)) in x.steps.iter().zip(&y.steps).enumerate() {
+            assert_eq!(sx.obs, sy.obs, "env {i} step {t} obs");
+            assert_eq!(sx.act, sy.act, "env {i} step {t} act");
+            assert_eq!(sx.logp, sy.logp, "env {i} step {t} logp");
+            assert_eq!(sx.value, sy.value, "env {i} step {t} value");
+            assert_eq!(
+                sx.reward.to_bits(),
+                sy.reward.to_bits(),
+                "env {i} step {t} reward"
+            );
+        }
+    }
+}
+
+/// Two sampling iterations (construction wave + steady-state wave) on a
+/// freshly built pool, returning both rollouts' episodes.
+fn two_iterations(cfg: RunConfig, seed: u64) -> (Vec<Episode>, Vec<Episode>) {
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
+    let mut rng = Rng::new(seed);
+    let r0 = pool
+        .collect_with(&orch, &Protocol::new("lb0"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    orch.clear();
+    let r1 = pool
+        .collect_with(&orch, &Protocol::new("lb1"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    orch.clear();
+    (r0.episodes, r1.episodes)
+}
+
+#[test]
+fn tcp_loopback_worker_processes_match_inproc_bitwise() {
+    // The PR-7 acceptance smoke (run explicitly by the CI loopback job):
+    // the same 8-env Burgers iteration, once with in-process env threads
+    // over the inproc transport, once with real `relexi env-worker` OS
+    // processes dialing the loopback-TCP exchange — same seed, and every
+    // observation, action, log-prob, value and reward bit-identical.
+    let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 41);
+
+    let mut cfg = burgers8_cfg();
+    cfg.orchestrator.workers = "processes".to_string();
+    cfg.orchestrator.transport = "tcp".to_string();
+    cfg.orchestrator.env_procs = 2; // 2 workers x 4 envs
+    cfg.orchestrator.worker_bin = env!("CARGO_BIN_EXE_relexi").to_string();
+    let (tcp0, tcp1) = two_iterations(cfg, 41);
+
+    assert_episodes_identical(&inproc0, &tcp0);
+    assert_episodes_identical(&inproc1, &tcp1);
+    // Pool drop on the processes side must have reaped its workers; the
+    // bounded-teardown test below covers the trainer-death path.
+}
+
+// ------------------------------------------------------- worker teardown
+
+#[test]
+fn env_worker_exits_when_trainer_dies() {
+    // Satellite 6: an env-worker whose exchange disappears WITHOUT the
+    // stop flag (trainer crash) must exit on its own — bounded
+    // reconnect, then clean shutdown — not linger as an orphan.
+    let mut cfg = burgers8_cfg();
+    cfg.rl.n_envs = 2;
+    cfg.orchestrator.workers = "processes".to_string();
+    cfg.orchestrator.transport = "tcp".to_string();
+
+    let orch = Orchestrator::launch(2);
+    let server = orch.serve("127.0.0.1:0").unwrap();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_relexi"))
+        .arg("env-worker")
+        .arg("--connect")
+        .arg(server.addr().to_string())
+        .arg("--transport")
+        .arg("tcp")
+        .arg("--worker-id")
+        .arg("0")
+        .arg("--env-start")
+        .arg("0")
+        .arg("--env-count")
+        .arg("2")
+        .env("RELEXI_WORKER_CONFIG", cfg.to_toml_string())
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn env-worker");
+
+    // The worker announces itself once its envs are built.
+    let client = orch.client();
+    let hello_deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if client
+            .poll(ctl_hello_key(0).as_str(), Duration::from_millis(200))
+            .is_some()
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < hello_deadline,
+            "env-worker never said hello"
+        );
+    }
+
+    // Kill the trainer side: the exchange (and every connection) dies
+    // with no stop flag ever posted.
+    drop(server);
+
+    let exit_deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(
+                    status.success(),
+                    "worker should exit cleanly after trainer death, got {status:?}"
+                );
+                break;
+            }
+            None => {
+                if Instant::now() >= exit_deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    panic!("env-worker still alive 30 s after trainer death");
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
