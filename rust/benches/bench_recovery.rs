@@ -1,0 +1,192 @@
+//! Bench R — what a worker crash costs the fault-tolerant rollout
+//! runtime (PR-8).
+//!
+//! Drives the loopback-TCP 8-env Burgers pool (2 env-worker processes
+//! x 4 envs) under deterministic fault plans and reports:
+//!
+//! * `wave/fault-free`          — per-wave wall clock, no fault plan;
+//! * `wave/crash-every-wave`    — per-wave wall clock under
+//!   `kill:w0@1*` (every worker-0 generation exits on its second
+//!   begin), so each steady-state wave pays one full detect + respawn +
+//!   replay cycle; the delta against `wave/fault-free` is the total
+//!   price of losing a worker per wave;
+//! * `detect/child-exit`, `recover/respawn-replay` — the supervisor's
+//!   own per-incident split from [`SupervisionReport`];
+//! * `detect/killput`, `recover/killput` — the same split for a
+//!   mid-wave `killput:w0@25` crash (the transport aborts the process
+//!   after its 25th put, so the block dies with a partial episode
+//!   prefix on the wire and recovery must replay it).
+//!
+//! The crashing run must stay bit-identical to the fault-free run at
+//! the same seed — asserted here over a reward/action fingerprint per
+//! wave, mirroring the in-tree chaos test.  Results land in
+//! `BENCH_recovery.json`; `BENCH_SMOKE=1` shrinks the wave count.
+//!
+//! [`SupervisionReport`]: relexi::coordinator::SupervisionReport
+
+use relexi::config::{BurgersConfig, EnvVariant, RunConfig};
+use relexi::coordinator::EnvPool;
+use relexi::orchestrator::{Orchestrator, Protocol};
+use relexi::runtime::stub_policy;
+use relexi::util::bench::Bench;
+use relexi::util::Rng;
+use std::time::Instant;
+
+/// The integration suite's 8-env Burgers case over real env-worker
+/// processes and loopback TCP, with a tight heartbeat so detection is
+/// measured, not the default 10 s expiry.
+fn pool_cfg(plan: &str, max_respawns: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.rl.backend = "burgers".to_string();
+    cfg.burgers = BurgersConfig {
+        points: 48,
+        segments: 4,
+        k_max: 6,
+        t_end: 0.5, // 5 actions at the base horizon
+        truth_states: 4,
+        truth_spinup: 1.0,
+        truth_interval: 0.25,
+        ..BurgersConfig::default()
+    };
+    cfg.rl.n_envs = 8;
+    cfg.rl.split_init_pool = true;
+    cfg.rl.variants = vec![
+        EnvVariant::default(),
+        EnvVariant {
+            name: "short".into(),
+            t_end_scale: 0.6,
+            ..EnvVariant::default()
+        },
+    ];
+    cfg.orchestrator.workers = "processes".to_string();
+    cfg.orchestrator.transport = "tcp".to_string();
+    cfg.orchestrator.env_procs = 2;
+    cfg.orchestrator.worker_bin = env!("CARGO_BIN_EXE_relexi").to_string();
+    cfg.orchestrator.heartbeat_period_ms = 200;
+    cfg.orchestrator.heartbeat_expiry_ms = 2000;
+    cfg.fault.plan = plan.to_string();
+    cfg.fault.max_respawns = max_respawns;
+    cfg
+}
+
+/// FNV-1a over every action and reward bit of a wave's episodes: two
+/// runs producing the same fingerprint per wave stepped bit-identically.
+fn fingerprint(episodes: &[relexi::rl::Episode]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |x: u32| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for ep in episodes {
+        for s in &ep.steps {
+            for a in &s.act {
+                mix(a.to_bits());
+            }
+            mix(s.reward.to_bits());
+        }
+    }
+    h
+}
+
+struct WaveStats {
+    wave_s: Vec<f64>,
+    detect_s: Vec<f64>,
+    recover_s: Vec<f64>,
+    respawns: usize,
+    fingerprints: Vec<u64>,
+}
+
+/// Run `waves` sampling iterations on one persistent pool, collecting
+/// wall-clock and supervision timings.  Panics if any wave degrades
+/// (this bench measures recovery, not degradation).
+fn run_waves(cfg: RunConfig, seed: u64, waves: usize) -> WaveStats {
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::from_config(cfg, None, &orch).expect("build pool");
+    let mut rng = Rng::new(seed);
+    let mut out = WaveStats {
+        wave_s: Vec::with_capacity(waves),
+        detect_s: Vec::new(),
+        recover_s: Vec::new(),
+        respawns: 0,
+        fingerprints: Vec::with_capacity(waves),
+    };
+    for it in 0..waves {
+        let t0 = Instant::now();
+        let r = pool
+            .collect_with(
+                &orch,
+                &Protocol::new(&format!("rb{it}")),
+                stub_policy,
+                &mut rng,
+                false,
+                n_envs,
+            )
+            .expect("collect wave");
+        out.wave_s.push(t0.elapsed().as_secs_f64());
+        orch.clear();
+        assert_eq!(
+            r.episodes.len(),
+            n_envs,
+            "wave {it} degraded; raise max_respawns"
+        );
+        out.detect_s.extend_from_slice(&r.supervision.detect_s);
+        out.recover_s.extend_from_slice(&r.supervision.recover_s);
+        out.respawns += r.supervision.respawns;
+        out.fingerprints.push(fingerprint(&r.episodes));
+    }
+    out
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let waves = if smoke { 4 } else { 10 };
+    let mut b = Bench::new("recovery");
+
+    // Baseline: the same pool with no fault plan.
+    let clean = run_waves(pool_cfg("", 0), 101, waves);
+    assert_eq!(clean.respawns, 0, "fault-free run respawned a worker");
+    b.record("wave/fault-free", &clean.wave_s);
+
+    // One crash per steady-state wave: each worker-0 generation serves
+    // exactly one wave, then exits on seeing its second begin.
+    let crashy = run_waves(pool_cfg("kill:w0@1*", waves + 1), 101, waves);
+    assert_eq!(
+        crashy.respawns,
+        waves - 1,
+        "kill:w0@1* should crash every steady-state wave"
+    );
+    assert_eq!(
+        clean.fingerprints, crashy.fingerprints,
+        "recovered waves diverged from the fault-free run"
+    );
+    b.record("wave/crash-every-wave", &crashy.wave_s[1..]);
+    b.record("detect/child-exit", &crashy.detect_s);
+    b.record("recover/respawn-replay", &crashy.recover_s);
+
+    // A mid-wave killput: the crashed block has already published part
+    // of its episodes, so recovery replays a non-empty action prefix.
+    let killput = run_waves(pool_cfg("killput:w0@25", 2), 103, 2);
+    assert!(
+        killput.respawns >= 1,
+        "killput:w0@25 never fired (puts budget off?)"
+    );
+    assert_eq!(
+        killput.fingerprints,
+        run_waves(pool_cfg("", 0), 103, 2).fingerprints,
+        "killput recovery diverged from the fault-free run"
+    );
+    if killput.detect_s.is_empty() {
+        // The abort can land exactly between waves; the incident is then
+        // handled (and timed) by begin_iteration's respawn path instead.
+        println!("[recovery] killput landed between waves; no mid-wave split recorded");
+    } else {
+        b.record("detect/killput", &killput.detect_s);
+        b.record("recover/killput", &killput.recover_s);
+    }
+
+    b.write_json("BENCH_recovery.json")
+        .expect("write BENCH_recovery.json");
+}

@@ -437,6 +437,22 @@ pub struct OrchestratorConfig {
     /// environment variable overrides both (how integration tests point
     /// the pool at the Cargo-built binary).
     pub worker_bin: String,
+    /// Collector/worker blocking-wait bound per event (seconds).  The
+    /// supervision layer slices this wait to watch heartbeats, so in
+    /// processes mode a dead worker is detected long before it expires.
+    pub poll_timeout_s: f64,
+    /// How long the pool waits for a spawned worker's hello (seconds).
+    pub hello_timeout_s: f64,
+    /// How long `Drop` waits for workers to honour the stop flag before
+    /// killing them (seconds).
+    pub reap_timeout_s: f64,
+    /// Cadence at which env-workers publish their heartbeat counter
+    /// (milliseconds).
+    pub heartbeat_period_ms: u64,
+    /// A worker whose heartbeat counter has not advanced for this long
+    /// (milliseconds) is declared wedged and respawned.  Must exceed
+    /// `heartbeat_period_ms`.
+    pub heartbeat_expiry_ms: u64,
 }
 
 impl Default for OrchestratorConfig {
@@ -448,6 +464,38 @@ impl Default for OrchestratorConfig {
             bind: "127.0.0.1:0".to_string(),
             connect_retries: 3,
             worker_bin: String::new(),
+            poll_timeout_s: 600.0,
+            hello_timeout_s: 120.0,
+            reap_timeout_s: 10.0,
+            heartbeat_period_ms: 1000,
+            heartbeat_expiry_ms: 10_000,
+        }
+    }
+}
+
+/// Fault-tolerance section (`[fault]`): the supervision layer's respawn
+/// budget and the deterministic fault-injection plan used by the chaos
+/// tests (see `crate::coordinator::supervise::FaultPlan` for the plan
+/// grammar).  The `RELEXI_FAULT_PLAN` environment variable overrides
+/// `plan` at runtime.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Per-worker respawn budget within one pool lifetime.  When a
+    /// worker exhausts it, its env block is dropped and waves complete
+    /// short (per-variant accounting) instead of aborting training.
+    /// `0` disables respawns entirely (detection still applies).
+    pub max_respawns: usize,
+    /// Fault-injection plan, `;`-separated directives such as
+    /// `kill:w0@1`, `killput:w1@40`, `hbstall:w0@0`, `drop:3`,
+    /// `delay:5:250`.  Empty = no injected faults.
+    pub plan: String,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            max_respawns: 2,
+            plan: String::new(),
         }
     }
 }
@@ -462,6 +510,7 @@ pub struct RunConfig {
     pub runtime: RuntimeConfig,
     pub hpc: HpcConfig,
     pub orchestrator: OrchestratorConfig,
+    pub fault: FaultConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
     /// Output directory for metrics/checkpoints.
@@ -478,6 +527,7 @@ impl Default for RunConfig {
             runtime: RuntimeConfig::default(),
             hpc: HpcConfig::default(),
             orchestrator: OrchestratorConfig::default(),
+            fault: FaultConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs/out".to_string(),
         }
@@ -634,6 +684,22 @@ impl RunConfig {
         orc.connect_retries =
             t.int_or("orchestrator.connect_retries", orc.connect_retries as i64)? as usize;
         orc.worker_bin = t.str_or("orchestrator.worker_bin", &orc.worker_bin)?;
+        orc.poll_timeout_s = t.float_or("orchestrator.poll_timeout_s", orc.poll_timeout_s)?;
+        orc.hello_timeout_s =
+            t.float_or("orchestrator.hello_timeout_s", orc.hello_timeout_s)?;
+        orc.reap_timeout_s = t.float_or("orchestrator.reap_timeout_s", orc.reap_timeout_s)?;
+        orc.heartbeat_period_ms = t.int_or(
+            "orchestrator.heartbeat_period_ms",
+            orc.heartbeat_period_ms as i64,
+        )? as u64;
+        orc.heartbeat_expiry_ms = t.int_or(
+            "orchestrator.heartbeat_expiry_ms",
+            orc.heartbeat_expiry_ms as i64,
+        )? as u64;
+
+        cfg.fault.max_respawns =
+            t.int_or("fault.max_respawns", cfg.fault.max_respawns as i64)? as usize;
+        cfg.fault.plan = t.str_or("fault.plan", &cfg.fault.plan)?;
 
         cfg.artifacts_dir = t.str_or("paths.artifacts", &cfg.artifacts_dir)?;
         cfg.out_dir = t.str_or("paths.out", &cfg.out_dir)?;
@@ -805,6 +871,31 @@ impl RunConfig {
             orc.connect_retries >= 1,
             "orchestrator.connect_retries must be >= 1"
         );
+        anyhow::ensure!(
+            orc.poll_timeout_s > 0.0 && orc.poll_timeout_s.is_finite(),
+            "orchestrator.poll_timeout_s must be positive"
+        );
+        anyhow::ensure!(
+            orc.hello_timeout_s > 0.0 && orc.hello_timeout_s.is_finite(),
+            "orchestrator.hello_timeout_s must be positive"
+        );
+        anyhow::ensure!(
+            orc.reap_timeout_s > 0.0 && orc.reap_timeout_s.is_finite(),
+            "orchestrator.reap_timeout_s must be positive"
+        );
+        anyhow::ensure!(
+            orc.heartbeat_period_ms >= 1,
+            "orchestrator.heartbeat_period_ms must be >= 1"
+        );
+        anyhow::ensure!(
+            orc.heartbeat_expiry_ms > orc.heartbeat_period_ms,
+            "orchestrator.heartbeat_expiry_ms ({}) must exceed heartbeat_period_ms ({})",
+            orc.heartbeat_expiry_ms,
+            orc.heartbeat_period_ms
+        );
+        if let Err(e) = crate::coordinator::supervise::FaultPlan::parse(&self.fault.plan) {
+            anyhow::bail!("invalid fault.plan {:?}: {e:#}", self.fault.plan);
+        }
         Ok(())
     }
 
@@ -991,6 +1082,15 @@ impl RunConfig {
         let _ = writeln!(o, "bind = {}", q(&orc.bind));
         let _ = writeln!(o, "connect_retries = {}", orc.connect_retries);
         let _ = writeln!(o, "worker_bin = {}", q(&orc.worker_bin));
+        let _ = writeln!(o, "poll_timeout_s = {}", orc.poll_timeout_s);
+        let _ = writeln!(o, "hello_timeout_s = {}", orc.hello_timeout_s);
+        let _ = writeln!(o, "reap_timeout_s = {}", orc.reap_timeout_s);
+        let _ = writeln!(o, "heartbeat_period_ms = {}", orc.heartbeat_period_ms);
+        let _ = writeln!(o, "heartbeat_expiry_ms = {}", orc.heartbeat_expiry_ms);
+        let f = &self.fault;
+        let _ = writeln!(o, "[fault]");
+        let _ = writeln!(o, "max_respawns = {}", f.max_respawns);
+        let _ = writeln!(o, "plan = {}", q(&f.plan));
         let _ = writeln!(o, "[paths]");
         let _ = writeln!(o, "artifacts = {}", q(&self.artifacts_dir));
         let _ = writeln!(o, "out = {}", q(&self.out_dir));
@@ -1237,10 +1337,19 @@ mod tests {
         assert_eq!(base.orchestrator.env_procs, 0, "0 = launcher-planned");
         assert_eq!(base.orchestrator.connect_retries, 3);
         assert!(base.orchestrator.worker_bin.is_empty());
+        // The PR-8 supervision knobs default to the former hardcoded
+        // consts (600/120/10 s) and a 1 s heartbeat with 10 s expiry.
+        assert_eq!(base.orchestrator.poll_timeout_s, 600.0);
+        assert_eq!(base.orchestrator.hello_timeout_s, 120.0);
+        assert_eq!(base.orchestrator.reap_timeout_s, 10.0);
+        assert_eq!(base.orchestrator.heartbeat_period_ms, 1000);
+        assert_eq!(base.orchestrator.heartbeat_expiry_ms, 10_000);
         let doc = Toml::parse(
             "[rl]\nbackend = \"burgers\"\n\
              [orchestrator]\ntransport = \"tcp\"\nworkers = \"processes\"\n\
-             env_procs = 2\nbind = \"127.0.0.1:7700\"\nconnect_retries = 5\n",
+             env_procs = 2\nbind = \"127.0.0.1:7700\"\nconnect_retries = 5\n\
+             poll_timeout_s = 30\nhello_timeout_s = 12.5\nreap_timeout_s = 3\n\
+             heartbeat_period_ms = 200\nheartbeat_expiry_ms = 1500\n",
         )
         .unwrap();
         let c = RunConfig::from_toml(&doc).unwrap();
@@ -1249,6 +1358,25 @@ mod tests {
         assert_eq!(c.orchestrator.env_procs, 2);
         assert_eq!(c.orchestrator.bind, "127.0.0.1:7700");
         assert_eq!(c.orchestrator.connect_retries, 5);
+        assert_eq!(c.orchestrator.poll_timeout_s, 30.0);
+        assert_eq!(c.orchestrator.hello_timeout_s, 12.5);
+        assert_eq!(c.orchestrator.reap_timeout_s, 3.0);
+        assert_eq!(c.orchestrator.heartbeat_period_ms, 200);
+        assert_eq!(c.orchestrator.heartbeat_expiry_ms, 1500);
+    }
+
+    #[test]
+    fn fault_section_parses_and_defaults() {
+        let base = RunConfig::default();
+        assert_eq!(base.fault.max_respawns, 2);
+        assert!(base.fault.plan.is_empty());
+        let doc = Toml::parse(
+            "[fault]\nmax_respawns = 0\nplan = \"kill:w0@1;drop:3;delay:5:250\"\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.fault.max_respawns, 0);
+        assert_eq!(c.fault.plan, "kill:w0@1;drop:3;delay:5:250");
     }
 
     #[test]
@@ -1267,6 +1395,16 @@ mod tests {
             "[rl]\nbackend = \"burgers\"\nn_envs = 2\n\
              [orchestrator]\nworkers = \"processes\"\ntransport = \"shm\"\nenv_procs = 3\n",
             "[orchestrator]\nconnect_retries = 0\n",
+            // Supervision knobs must be positive / ordered.
+            "[orchestrator]\npoll_timeout_s = 0\n",
+            "[orchestrator]\nhello_timeout_s = -1\n",
+            "[orchestrator]\nreap_timeout_s = 0.0\n",
+            "[orchestrator]\nheartbeat_period_ms = 0\n",
+            "[orchestrator]\nheartbeat_period_ms = 500\nheartbeat_expiry_ms = 500\n",
+            // Malformed fault plans are rejected at load time.
+            "[fault]\nplan = \"kill:w0\"\n",
+            "[fault]\nplan = \"explode:w0@1\"\n",
+            "[fault]\nplan = \"drop:\"\n",
         ] {
             let doc = Toml::parse(bad).unwrap();
             assert!(RunConfig::from_toml(&doc).is_err(), "accepted: {bad}");
@@ -1291,6 +1429,8 @@ mod tests {
              [hpc]\nthreads = 4\ndb_shards = 2\ndb_seqlock_wake = true\nmpmd = false\n\
              [orchestrator]\ntransport = \"tcp\"\nworkers = \"processes\"\nenv_procs = 2\n\
              bind = \"127.0.0.1:7700\"\nworker_bin = \"target/release/relexi\"\n\
+             poll_timeout_s = 45.5\nheartbeat_period_ms = 250\nheartbeat_expiry_ms = 2000\n\
+             [fault]\nmax_respawns = 1\nplan = \"killput:w0@40;hbstall:w1@2\"\n\
              [paths]\nartifacts = \"art\"\nout = \"runs/x\"\n",
         )
         .unwrap();

@@ -48,10 +48,28 @@
 //! ([`crate::config::EnvVariant`], round-robin), so one pool can sample
 //! across Reynolds-number, reward-shaping, horizon and initial-state
 //! families while sharing one backend context and one policy.
+//!
+//! **Supervision** (processes mode): the collector slices its blocking
+//! wait so it can watch child exits (`try_wait`) and heartbeat expiry
+//! ([`crate::orchestrator::protocol::ctl_hb_key`]) between events.  A
+//! dead or wedged worker is killed, respawned under a fresh generation,
+//! and its env block is **replayed** under a fresh run tag: the block's
+//! recorded per-env seeds rebuild the identical RNG streams and the
+//! recorded action tensors are pre-published into the replay namespace,
+//! so the replacement streams to the crash point without a single new
+//! policy draw — the completed wave is bit-identical to a crash-free
+//! run (in full-batch collection, where no action is drawn while any
+//! live env's state is missing).  A worker that exhausts its
+//! `[fault] max_respawns` budget is dropped instead: the wave completes
+//! short, surfacing the loss in [`SupervisionReport`] rather than
+//! aborting training.
 
+use super::supervise::{HeartbeatMonitor, SupervisionReport};
 use crate::config::RunConfig;
 use crate::launcher::{plan_worker_processes, WorkerPlan};
-use crate::orchestrator::protocol::{ctl_begin_key, ctl_hello_key, encode_begin, CTL_STOP_KEY};
+use crate::orchestrator::protocol::{
+    ctl_begin_key, ctl_hb_key, ctl_hello_key, encode_begin, CTL_STOP_KEY,
+};
 use crate::orchestrator::{
     Client, EnvKeys, ExchangeServer, Key, Orchestrator, Protocol, TensorPool, Value,
 };
@@ -66,10 +84,6 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Timeout for any single poll; generous because env steps include real
-/// CFD work.
-const POLL_TIMEOUT: Duration = Duration::from_secs(600);
-
 /// Result of one sampling phase.
 pub struct Rollouts {
     pub episodes: Vec<Episode>,
@@ -80,6 +94,10 @@ pub struct Rollouts {
     /// Wall-clock seconds the trainer spent blocked on arrivals (the
     /// synchronization overhead the event-driven collector attacks).
     pub idle_time_s: f64,
+    /// What the supervision layer did during this wave (respawns,
+    /// dropped env blocks, detect/recover latencies).  All-zero for a
+    /// crash-free wave and always for the threads mode.
+    pub supervision: SupervisionReport,
 }
 
 /// Construction counters proving worker persistence and exchange-path
@@ -115,28 +133,93 @@ enum Workers {
     /// pairs with the in-process store — no wire anywhere).
     Threads,
     /// `relexi env-worker` OS processes dialing the exchange over a
-    /// network transport.  The control plane (begin / hello / stop)
-    /// rides the same store as the data plane.
-    Processes {
-        /// Spawned children, in worker-id order (= plan assignment
-        /// order).
-        children: Vec<std::process::Child>,
-        /// The exchange serving the trainer's store to the workers;
-        /// never read after construction, held so it outlives the
-        /// children (the `Drop` reap runs before this field drops).
-        _server: ExchangeServer,
-        /// env -> process split (contiguous blocks in global env order).
-        plan: WorkerPlan,
-    },
+    /// network transport.  The control plane (begin / hello / stop /
+    /// heartbeat) rides the same store as the data plane.
+    Processes(ProcState),
 }
 
-/// How long worker processes get to dial back and say hello (includes
-/// their own backend construction — e.g. the Burgers truth package).
-const HELLO_TIMEOUT: Duration = Duration::from_secs(120);
+/// Everything the supervision layer tracks about the worker processes.
+struct ProcState {
+    /// Spawned children, in worker-id order (= plan assignment order).
+    /// A respawn replaces the slot in place.
+    children: Vec<std::process::Child>,
+    /// The exchange serving the trainer's store to the workers; read
+    /// only for its address (respawns re-dial it) and held so it
+    /// outlives the children (the `Drop` reap runs before this drops).
+    server: ExchangeServer,
+    /// env -> process split (contiguous blocks in global env order).
+    plan: WorkerPlan,
+    /// Per-worker incarnation counter, bumped on every respawn and
+    /// passed as `--generation` (fault-plan directives default to
+    /// generation 0 only).
+    generation: Vec<u32>,
+    /// Per-worker respawns consumed from the `[fault] max_respawns`
+    /// budget (pool lifetime, not per wave).
+    respawns_used: Vec<usize>,
+    /// Workers whose budget is exhausted: their env block is dropped
+    /// and every later wave completes short without them.
+    dropped: Vec<bool>,
+}
 
-/// Bounded teardown: workers that ignore the stop flag this long are
-/// killed.
-const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+impl ProcState {
+    /// Env block hosted by worker `w`.
+    fn block(&self, w: usize) -> (usize, usize) {
+        self.plan.assignments[w]
+    }
+
+    /// True when `env` belongs to a dropped worker's block.
+    fn env_dropped(&self, env: usize) -> bool {
+        self.plan
+            .assignments
+            .iter()
+            .enumerate()
+            .any(|(w, &(start, count))| {
+                self.dropped[w] && env >= start && env < start + count
+            })
+    }
+
+    /// All envs of dropped workers, ascending.
+    fn dropped_envs(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (w, &(start, count)) in self.plan.assignments.iter().enumerate() {
+            if self.dropped[w] {
+                out.extend(start..start + count);
+            }
+        }
+        out
+    }
+
+    /// Kill worker `w`'s current incarnation (there must never be two
+    /// publishers for one env block), clear its stale control keys,
+    /// spawn a replacement under the next generation and wait for its
+    /// hello.  On error the slot holds the dead replacement (or the
+    /// killed original); the caller decides whether to retry or drop.
+    fn respawn_process(&mut self, cfg: &RunConfig, client: &Client, w: usize) -> Result<()> {
+        let _ = self.children[w].kill();
+        let _ = self.children[w].wait();
+        client.delete(&ctl_hello_key(w));
+        client.delete(&ctl_begin_key(w));
+        client.delete(&ctl_hb_key(w));
+        self.generation[w] += 1;
+        let (start, count) = self.block(w);
+        let addr = self.server.addr().to_string();
+        self.children[w] = spawn_one_worker(cfg, &addr, w, start, count, self.generation[w])?;
+        let deadline = Instant::now() + hello_timeout(cfg);
+        wait_one_hello(client, &mut self.children[w], w, deadline)
+    }
+}
+
+fn poll_timeout(cfg: &RunConfig) -> Duration {
+    Duration::from_secs_f64(cfg.orchestrator.poll_timeout_s)
+}
+
+fn hello_timeout(cfg: &RunConfig) -> Duration {
+    Duration::from_secs_f64(cfg.orchestrator.hello_timeout_s)
+}
+
+fn reap_timeout(cfg: &RunConfig) -> Duration {
+    Duration::from_secs_f64(cfg.orchestrator.reap_timeout_s)
+}
 
 /// Collects rollouts from `n_envs` persistent parallel environments.
 pub struct EnvPool {
@@ -151,10 +234,11 @@ pub struct EnvPool {
     /// Threads (the seed architecture) or spawned worker processes.
     workers: Workers,
     counters: PoolCounters,
-    /// Client + last begun protocol, so `Drop` can raise the abort flag
-    /// for workers still blocked inside an interrupted iteration.
+    /// Client + the protocols begun this phase (the iteration tag plus
+    /// any replay tags recovery opened), so `Drop` can raise the abort
+    /// flags for workers still blocked inside an interrupted iteration.
     abort_client: Client,
-    current_proto: Option<Protocol>,
+    active_protos: Vec<Protocol>,
     /// Per-env resolved bookkeeping (round-robin variants).
     variant_of: Vec<usize>,
     n_actions_of: Vec<usize>,
@@ -270,18 +354,22 @@ impl EnvPool {
             let plan = plan_worker_processes(&cfg, n_envs)?;
             let mut children =
                 spawn_worker_processes(&cfg, &server.addr().to_string(), &plan)?;
-            if let Err(e) = wait_workers_hello(orch, &mut children) {
+            if let Err(e) = wait_workers_hello(&cfg, orch, &mut children) {
                 for c in &mut children {
                     let _ = c.kill();
                     let _ = c.wait();
                 }
                 return Err(e);
             }
-            Workers::Processes {
+            let n_procs = plan.n_procs;
+            Workers::Processes(ProcState {
                 children,
-                _server: server,
+                server,
                 plan,
-            }
+                generation: vec![0; n_procs],
+                respawns_used: vec![0; n_procs],
+                dropped: vec![false; n_procs],
+            })
         } else {
             for i in 0..n_envs {
                 let rv = cfg.variant_for(i);
@@ -310,9 +398,10 @@ impl EnvPool {
                 let (tx, rx) = mpsc::channel::<Begin>();
                 let client = orch.client();
                 let allocs = exchange_allocs.clone();
+                let wl_timeout = poll_timeout(&cfg);
                 let handle = std::thread::Builder::new()
                     .name(format!("env-worker-{i}"))
-                    .spawn(move || worker_loop(env, client, i, rx, allocs))?;
+                    .spawn(move || worker_loop(env, client, i, rx, allocs, wl_timeout))?;
                 counters.threads_spawned += 1;
                 txs.push(tx);
                 handles.push(handle);
@@ -341,7 +430,7 @@ impl EnvPool {
             workers,
             counters,
             abort_client: orch.client(),
-            current_proto: None,
+            active_protos: Vec::new(),
             variant_of,
             n_actions_of,
             feat: obs_len / n_agents,
@@ -430,7 +519,7 @@ impl EnvPool {
         F: FnMut(&[f32], usize) -> Result<PolicyOut>,
     {
         let res = self.collect_event_inner(orch, proto, forward, rng, deterministic, min_batch);
-        self.finish_iteration(proto, res.is_err());
+        self.finish_iteration(res.is_err());
         res
     }
 
@@ -450,8 +539,11 @@ impl EnvPool {
         let n_envs = self.cfg.rl.n_envs;
         let chunk = self.obs_len;
         let trainer = orch.client();
-        self.begin_iteration(proto, rng)?;
-        let keys = proto.pool_keys(&self.n_actions_of);
+        let mut report = SupervisionReport::default();
+        let seeds = self.begin_iteration(proto, rng, &mut report)?;
+        // Per-env current key set: starts in the iteration's namespace;
+        // recovery retargets a crashed block to its replay namespace.
+        let mut env_keys: Vec<EnvKeys> = proto.pool_keys(&self.n_actions_of).envs;
 
         let mut episodes = self.fresh_episodes();
         // Per-env: step index of the state we are waiting for (None once
@@ -459,8 +551,40 @@ impl EnvPool {
         let mut expect_state: Vec<Option<usize>> = vec![Some(0); n_envs];
         let mut staged: Vec<(usize, usize, Arc<[f32]>)> = Vec::with_capacity(n_envs);
         let mut pending_rewards = 0usize;
+        // Per-env completion/outstanding bookkeeping the supervision
+        // layer consults: which envs have terminated (or were dropped),
+        // and how many rewards each still owes.
+        let mut done_seen: Vec<bool> = vec![false; n_envs];
+        let mut pending_by_env: Vec<usize> = vec![0; n_envs];
         let mut policy_time = 0.0f64;
         let mut idle_time = 0.0f64;
+
+        // Supervision parameters.  Only the processes mode pays the
+        // sliced wait — the threads mode blocks the full poll timeout in
+        // one call, exactly as before.
+        let poll_to = poll_timeout(&self.cfg);
+        let hb_expiry = Duration::from_millis(self.cfg.orchestrator.heartbeat_expiry_ms);
+        let slice = (hb_expiry / 4).clamp(Duration::from_millis(10), Duration::from_millis(250));
+        let n_workers = match &self.workers {
+            Workers::Processes(p) => p.plan.n_procs,
+            Workers::Threads => 0,
+        };
+        let mut monitor = HeartbeatMonitor::new(n_workers, hb_expiry, Instant::now());
+        let mut last_check = Instant::now();
+        let mut procs: Option<&mut ProcState> = match &mut self.workers {
+            Workers::Processes(p) => Some(p),
+            Workers::Threads => None,
+        };
+        // Envs of workers dropped in earlier waves never start: mark
+        // them complete before the wave begins.
+        if let Some(p) = procs.as_deref() {
+            for env in 0..n_envs {
+                if p.env_dropped(env) {
+                    expect_state[env] = None;
+                    done_seen[env] = true;
+                }
+            }
+        }
 
         // One persistent subscription for the whole sampling phase.
         // Fixed tags per env for its state/done/fail channels; reward
@@ -468,7 +592,9 @@ impl EnvPool {
         // outstanding).  `tag_events[tag]` is what the tag currently
         // means; every event applies only its own add/remove deltas, so
         // a wave over E envs costs O(E) registry ops (the `sub_ops`
-        // counter the integration test asserts on).
+        // counter the integration test asserts on).  `tag_live` tracks
+        // which reward tags are registered, so recovery can retarget or
+        // retire exactly the outstanding ones.
         let mut sub = trainer.subscription();
         let mut tag_events: Vec<Event> = Vec::with_capacity(4 * n_envs);
         for env in 0..n_envs {
@@ -476,15 +602,19 @@ impl EnvPool {
             tag_events.push(Event::Done(env));
             tag_events.push(Event::Fail(env));
         }
+        let mut tag_live: Vec<bool> = vec![false; 3 * n_envs];
         for env in 0..n_envs {
-            let ek = &keys.envs[env];
+            if done_seen[env] {
+                continue; // dropped before start: nothing to wait on
+            }
+            let ek = &env_keys[env];
             sub.add(3 * env, &ek.state[0]);
             sub.add(3 * env + 1, &ek.done);
             sub.add(3 * env + 2, &ek.fail);
         }
         let mut free_reward_tags: Vec<usize> = Vec::new();
 
-        loop {
+        'wave: loop {
             let expecting = expect_state.iter().filter(|e| e.is_some()).count();
             if expecting == 0 && staged.is_empty() && pending_rewards == 0 {
                 break;
@@ -513,7 +643,7 @@ impl EnvPool {
                 // to env indices, not arrival order: full-batch collection
                 // is bitwise-identical to the lock-step reference).
                 for (k, (env, t, obs)) in staged.drain(..).enumerate() {
-                    let ek = &keys.envs[env];
+                    let ek = &env_keys[env];
                     let mean = &out.mean[k * self.n_agents..(k + 1) * self.n_agents];
                     let value = &out.value[k * self.n_agents..(k + 1) * self.n_agents];
                     publish_action(
@@ -532,11 +662,14 @@ impl EnvPool {
                     // Subscribe the action's reward and the next state.
                     let rtag = free_reward_tags.pop().unwrap_or_else(|| {
                         tag_events.push(Event::Reward(0, 0));
+                        tag_live.push(false);
                         tag_events.len() - 1
                     });
                     tag_events[rtag] = Event::Reward(env, t);
+                    tag_live[rtag] = true;
                     sub.add(rtag, &ek.rew[t]);
                     pending_rewards += 1;
+                    pending_by_env[env] += 1;
                     expect_state[env] = Some(t + 1);
                     tag_events[3 * env] = Event::State(env, t + 1);
                     sub.add(3 * env, &ek.state[t + 1]);
@@ -544,15 +677,189 @@ impl EnvPool {
                 continue;
             }
 
-            // Wait for whichever registered event arrives first.
+            // Wait for whichever registered event arrives first.  In the
+            // processes mode the wait is sliced so the supervisor can
+            // check child exits and heartbeat expiry between events.
             let ti = Instant::now();
-            let (tag, val) = sub.wait_take(POLL_TIMEOUT).with_context(|| {
-                format!(
+            let (tag, val) = loop {
+                if let Some(p) = procs.as_deref_mut() {
+                    if last_check.elapsed() >= slice {
+                        let now = Instant::now();
+                        let mut dropped_block = false;
+                        for w in 0..p.plan.n_procs {
+                            if p.dropped[w] {
+                                continue;
+                            }
+                            let (start, count) = p.block(w);
+                            if !block_outstanding(
+                                start,
+                                count,
+                                &expect_state,
+                                &done_seen,
+                                &pending_by_env,
+                            ) {
+                                // Block complete: a post-completion stall
+                                // is invisible and must not trip respawns.
+                                continue;
+                            }
+                            let hb = trainer.get(&ctl_hb_key(w)).and_then(|v| v.as_scalar());
+                            let hb_expired = monitor.observe(w, hb, now);
+                            let child_dead = matches!(p.children[w].try_wait(), Ok(Some(_)));
+                            if !hb_expired && !child_dead {
+                                continue;
+                            }
+                            report.detect_s.push(monitor.stale_for(w, now));
+                            eprintln!(
+                                "[supervise] worker {w} {} mid-wave; recovering",
+                                if child_dead {
+                                    "process exited"
+                                } else {
+                                    "heartbeat expired (wedged)"
+                                }
+                            );
+                            let t_rec = Instant::now();
+                            let recovered = loop {
+                                if p.respawns_used[w] >= self.cfg.fault.max_respawns {
+                                    break false;
+                                }
+                                p.respawns_used[w] += 1;
+                                report.respawns += 1;
+                                // Replay under a fresh namespace: the old
+                                // tag's keys hold arbitrary prefixes of
+                                // the block's streams and are burned.
+                                let rtag =
+                                    format!("{}~r{}", proto.run_tag(), report.respawns);
+                                let rproto = Protocol::new(&rtag);
+                                // Pre-feed every action drawn so far, so
+                                // the replacement streams to the crash
+                                // point without one new policy draw.
+                                for env in start..start + count {
+                                    let nk = rproto.env_keys(env, self.n_actions_of[env]);
+                                    for (t, step) in episodes[env].steps.iter().enumerate() {
+                                        trainer.put_tensor_shared(
+                                            &nk.action[t],
+                                            self.act_shape.clone(),
+                                            step.act.clone(),
+                                        );
+                                    }
+                                }
+                                match p.respawn_process(&self.cfg, &trainer, w) {
+                                    Ok(()) => {
+                                        let envs: Vec<(usize, u64)> = (start..start + count)
+                                            .map(|i| (i, seeds[i]))
+                                            .collect();
+                                        trainer.put_bytes(
+                                            &ctl_begin_key(w),
+                                            encode_begin(rproto.run_tag(), &envs),
+                                        );
+                                        // Retarget the block's live
+                                        // subscriptions into the replay
+                                        // namespace (`add` on a tag
+                                        // replaces its key; queued stale
+                                        // deliveries from the old keys
+                                        // are skipped on receipt).
+                                        for env in start..start + count {
+                                            let nk = rproto
+                                                .env_keys(env, self.n_actions_of[env]);
+                                            if let Some(t) = expect_state[env] {
+                                                sub.add(3 * env, &nk.state[t]);
+                                            }
+                                            if !done_seen[env] {
+                                                sub.add(3 * env + 1, &nk.done);
+                                            }
+                                            sub.add(3 * env + 2, &nk.fail);
+                                            for tag in 3 * n_envs..tag_events.len() {
+                                                if !tag_live[tag] {
+                                                    continue;
+                                                }
+                                                if let Event::Reward(e, t) = tag_events[tag]
+                                                {
+                                                    if e == env {
+                                                        sub.add(tag, &nk.rew[t]);
+                                                    }
+                                                }
+                                            }
+                                            env_keys[env] = nk;
+                                        }
+                                        self.active_protos.push(rproto);
+                                        break true;
+                                    }
+                                    Err(e) => {
+                                        eprintln!(
+                                            "[supervise] respawn of worker {w} failed: {e:#}"
+                                        );
+                                    }
+                                }
+                            };
+                            if recovered {
+                                monitor.arm(w, Instant::now());
+                                report.recover_s.push(t_rec.elapsed().as_secs_f64());
+                                eprintln!(
+                                    "[supervise] worker {w} respawned (budget {}/{})",
+                                    p.respawns_used[w], self.cfg.fault.max_respawns
+                                );
+                            } else {
+                                // Budget exhausted: drop the block and
+                                // finish the wave short instead of
+                                // aborting training.
+                                let _ = p.children[w].kill();
+                                let _ = p.children[w].wait();
+                                p.dropped[w] = true;
+                                staged.retain(|&(e, _, _)| e < start || e >= start + count);
+                                for env in start..start + count {
+                                    if expect_state[env].is_some() {
+                                        sub.remove(3 * env);
+                                        expect_state[env] = None;
+                                    }
+                                    if !done_seen[env] {
+                                        sub.remove(3 * env + 1);
+                                        done_seen[env] = true;
+                                    }
+                                    sub.remove(3 * env + 2);
+                                    for tag in 3 * n_envs..tag_events.len() {
+                                        if !tag_live[tag] {
+                                            continue;
+                                        }
+                                        if let Event::Reward(e, _) = tag_events[tag] {
+                                            if e == env {
+                                                sub.remove(tag);
+                                                tag_live[tag] = false;
+                                                free_reward_tags.push(tag);
+                                                pending_rewards -= 1;
+                                                pending_by_env[env] -= 1;
+                                            }
+                                        }
+                                    }
+                                }
+                                eprintln!(
+                                    "[supervise] worker {w} dropped after exhausting \
+                                     max_respawns = {}; envs {start}..{} finish short",
+                                    self.cfg.fault.max_respawns,
+                                    start + count
+                                );
+                                dropped_block = true;
+                            }
+                        }
+                        last_check = Instant::now();
+                        if dropped_block {
+                            // The drop may have completed the wave or
+                            // unblocked a flush: re-evaluate from the top.
+                            idle_time += ti.elapsed().as_secs_f64();
+                            continue 'wave;
+                        }
+                    }
+                }
+                let wait = if procs.is_some() { slice } else { poll_to };
+                if let Some(hit) = sub.wait_take(wait) {
+                    break hit;
+                }
+                anyhow::ensure!(
+                    ti.elapsed() < poll_to,
                     "collector timed out: {} states expected, {} rewards pending",
                     expect_state.iter().filter(|e| e.is_some()).count(),
                     pending_rewards
-                )
-            })?;
+                );
+            };
             idle_time += ti.elapsed().as_secs_f64();
             match tag_events[tag] {
                 Event::State(env, t) => {
@@ -570,6 +877,7 @@ impl EnvPool {
                 }
                 Event::Done(env) => {
                     expect_state[env] = None;
+                    done_seen[env] = true;
                     // Neither the post-terminal state nor another done
                     // can arrive: retire both channels (fail stays).
                     sub.remove(3 * env);
@@ -581,6 +889,8 @@ impl EnvPool {
                         .with_context(|| format!("env {env} reward at step {t} not a scalar"))?;
                     episodes[env].steps[t].reward = r;
                     pending_rewards -= 1;
+                    pending_by_env[env] -= 1;
+                    tag_live[tag] = false;
                     sub.remove(tag);
                     free_reward_tags.push(tag);
                 }
@@ -590,12 +900,23 @@ impl EnvPool {
             }
         }
 
+        // A degraded wave completes short: surface the dropped envs and
+        // return only the surviving episodes (per-variant accounting
+        // stays correct — every episode carries its variant tag).
+        if let Some(p) = procs.as_deref() {
+            report.dropped_envs = p.dropped_envs();
+            for &env in report.dropped_envs.iter().rev() {
+                episodes.remove(env);
+            }
+        }
+
         self.counters.iterations += 1;
         Ok(Rollouts {
             episodes,
             sample_time_s: t_start.elapsed().as_secs_f64(),
             policy_time_s: policy_time,
             idle_time_s: idle_time,
+            supervision: report,
         })
     }
 
@@ -618,7 +939,7 @@ impl EnvPool {
         F: FnMut(&[f32], usize) -> Result<PolicyOut>,
     {
         let res = self.collect_lockstep_inner(orch, proto, forward, rng, deterministic);
-        self.finish_iteration(proto, res.is_err());
+        self.finish_iteration(res.is_err());
         res
     }
 
@@ -636,8 +957,19 @@ impl EnvPool {
         let t_start = Instant::now();
         let n_envs = self.cfg.rl.n_envs;
         let chunk = self.obs_len;
+        let poll_to = poll_timeout(&self.cfg);
         let trainer = orch.client();
-        self.begin_iteration(proto, rng)?;
+        let mut report = SupervisionReport::default();
+        self.begin_iteration(proto, rng, &mut report)?;
+        // The lock-step oracle has no recovery path: a degraded pool
+        // (dropped workers) must use the event-driven collector.
+        if let Workers::Processes(p) = &self.workers {
+            anyhow::ensure!(
+                !p.dropped.iter().any(|&d| d),
+                "lock-step collector cannot run a degraded pool (dropped envs: {:?})",
+                p.dropped_envs()
+            );
+        }
         let keys = proto.pool_keys(&self.n_actions_of);
 
         let mut episodes = self.fresh_episodes();
@@ -660,7 +992,7 @@ impl EnvPool {
                 let ek = &keys.envs[env];
                 let ti = Instant::now();
                 let (hit, val) = trainer
-                    .poll_any_take(&[&ek.state[t], &ek.done, &ek.fail], POLL_TIMEOUT)
+                    .poll_any_take(&[&ek.state[t], &ek.done, &ek.fail], poll_to)
                     .with_context(|| format!("trainer: no state from env {env} step {t}"))?;
                 idle_time += ti.elapsed().as_secs_f64();
                 match hit {
@@ -716,7 +1048,7 @@ impl EnvPool {
                 let ek = &keys.envs[env];
                 let ti = Instant::now();
                 let (hit, val) = trainer
-                    .poll_any_take(&[&ek.rew[t], &ek.fail], POLL_TIMEOUT)
+                    .poll_any_take(&[&ek.rew[t], &ek.fail], poll_to)
                     .with_context(|| format!("trainer: no reward from env {env} step {t}"))?;
                 idle_time += ti.elapsed().as_secs_f64();
                 if hit != 0 {
@@ -734,7 +1066,7 @@ impl EnvPool {
             }
             let ek = &keys.envs[env];
             let (hit, val) = trainer
-                .poll_any_take(&[&ek.done, &ek.fail], POLL_TIMEOUT)
+                .poll_any_take(&[&ek.done, &ek.fail], poll_to)
                 .with_context(|| format!("env {env} never signalled done"))?;
             if hit != 0 {
                 bail!("env worker {env} failed: {}", fail_message(&val));
@@ -747,12 +1079,13 @@ impl EnvPool {
             sample_time_s: t_start.elapsed().as_secs_f64(),
             policy_time_s: policy_time,
             idle_time_s: idle_time,
+            supervision: report,
         })
     }
 
     /// Raise the iteration's abort flag so workers still blocked on an
     /// action key of a failed iteration unpark immediately (instead of
-    /// running out POLL_TIMEOUT) and return to the begin-channel.  The
+    /// running out the poll timeout) and return to the begin-channel.  The
     /// flag is deliberately never deleted: a worker that was mid-CFD-step
     /// when the abort was raised subscribes to `[action, abort]` later
     /// and must still find it.  The pool stays usable afterwards, but a
@@ -762,43 +1095,84 @@ impl EnvPool {
         self.abort_client.put_flag(&proto.abort_key(), true);
     }
 
-    /// Close out one sampling phase: on failure raise the abort flag; on
-    /// success forget the protocol so a later `Drop` does not write a
-    /// stray abort key for a cleanly completed iteration.
-    fn finish_iteration(&mut self, proto: &Protocol, failed: bool) {
+    /// Close out one sampling phase: on failure raise the abort flag for
+    /// every namespace the phase touched (the iteration tag plus any
+    /// replay tags recovery opened); on success forget them so a later
+    /// `Drop` does not write stray abort keys for a cleanly completed
+    /// iteration.
+    fn finish_iteration(&mut self, failed: bool) {
         if failed {
-            self.abort_iteration(proto);
+            for p in std::mem::take(&mut self.active_protos) {
+                self.abort_iteration(&p);
+            }
         } else {
-            self.current_proto = None;
+            self.active_protos.clear();
         }
     }
 
     /// Wake every parked worker for one iteration (per-env RNG streams
-    /// split in env order, exactly as the seed's spawn loop did).  The
-    /// processes arm draws the identical `split_seed` sequence in the
-    /// identical global env order and ships the seeds inside the begin
-    /// messages, so the env->process split is invisible to every RNG
-    /// stream in the run.
-    fn begin_iteration(&mut self, proto: &Protocol, rng: &mut Rng) -> Result<()> {
-        self.current_proto = Some(proto.clone());
+    /// split in env order, exactly as the seed's spawn loop did — both
+    /// arms draw the identical `split_seed` sequence in the identical
+    /// global env order, so the env->process split is invisible to every
+    /// RNG stream in the run).  Returns the seed vector: the supervision
+    /// layer replays a crashed block's streams from it bit-identically.
+    ///
+    /// A worker found dead *between* waves is respawned here against the
+    /// `[fault] max_respawns` budget (no replay needed — nothing of this
+    /// wave has started); on exhaustion its block is dropped.
+    fn begin_iteration(
+        &mut self,
+        proto: &Protocol,
+        rng: &mut Rng,
+        report: &mut SupervisionReport,
+    ) -> Result<Vec<u64>> {
+        self.active_protos.push(proto.clone());
+        let seeds: Vec<u64> = (0..self.cfg.rl.n_envs)
+            .map(|i| rng.split_seed(i as u64))
+            .collect();
         match &mut self.workers {
             Workers::Threads => {
                 for (i, tx) in self.txs.iter().enumerate() {
                     tx.send(Begin {
                         proto: proto.clone(),
-                        rng: rng.split(i as u64),
+                        rng: Rng::new(seeds[i]),
                     })
                     .map_err(|_| anyhow!("env worker {i} has exited (earlier panic?)"))?;
                 }
             }
-            Workers::Processes { children, plan, .. } => {
-                let seeds: Vec<u64> = (0..self.cfg.rl.n_envs)
-                    .map(|i| rng.split_seed(i as u64))
-                    .collect();
-                for (w, &(start, count)) in plan.assignments.iter().enumerate() {
-                    if let Ok(Some(status)) = children[w].try_wait() {
-                        bail!("env-worker process {w} died ({status})");
+            Workers::Processes(p) => {
+                for w in 0..p.plan.n_procs {
+                    if p.dropped[w] {
+                        continue;
                     }
+                    if matches!(p.children[w].try_wait(), Ok(Some(_))) {
+                        eprintln!("[supervise] worker {w} died between waves; respawning");
+                        let recovered = loop {
+                            if p.respawns_used[w] >= self.cfg.fault.max_respawns {
+                                break false;
+                            }
+                            p.respawns_used[w] += 1;
+                            report.respawns += 1;
+                            match p.respawn_process(&self.cfg, &self.abort_client, w) {
+                                Ok(()) => break true,
+                                Err(e) => {
+                                    eprintln!("[supervise] respawn of worker {w} failed: {e:#}");
+                                }
+                            }
+                        };
+                        if !recovered {
+                            let _ = p.children[w].kill();
+                            let _ = p.children[w].wait();
+                            p.dropped[w] = true;
+                            eprintln!(
+                                "[supervise] worker {w} dropped after exhausting \
+                                 max_respawns = {}",
+                                self.cfg.fault.max_respawns
+                            );
+                            continue;
+                        }
+                    }
+                    let (start, count) = p.block(w);
                     let envs: Vec<(usize, u64)> =
                         (start..start + count).map(|i| (i, seeds[i])).collect();
                     self.abort_client
@@ -806,7 +1180,7 @@ impl EnvPool {
                 }
             }
         }
-        Ok(())
+        Ok(seeds)
     }
 
     /// Empty per-env episodes tagged with their scenario variants.
@@ -826,18 +1200,18 @@ impl Drop for EnvPool {
         // Unblock workers stuck mid-iteration (e.g. after an external
         // kill): they subscribe to the abort flag next to their action
         // key, so this wakes them without waiting out the poll timeout.
-        if let Some(proto) = self.current_proto.take() {
+        for proto in std::mem::take(&mut self.active_protos) {
             self.abort_iteration(&proto);
         }
-        if let Workers::Processes { children, .. } = &mut self.workers {
+        if let Workers::Processes(p) = &mut self.workers {
             // Stop flag first (read non-consuming, so one flag serves
             // every worker), then a bounded reap; a worker that ignores
-            // it is killed.  The exchange server (`_server`) drops only
+            // it is killed.  The exchange server (`server`) drops only
             // after this body, i.e. it keeps serving until the children
             // are gone.
             self.abort_client.put_flag(CTL_STOP_KEY, true);
-            let deadline = Instant::now() + REAP_TIMEOUT;
-            for child in children.iter_mut() {
+            let deadline = Instant::now() + reap_timeout(&self.cfg);
+            for child in p.children.iter_mut() {
                 loop {
                     match child.try_wait() {
                         Ok(Some(_)) | Err(_) => break,
@@ -913,6 +1287,22 @@ fn publish_action(
     act_pool.put_back(act);
 }
 
+/// Does worker block `start..start+count` still owe the collector
+/// anything — a state, a done-flag, or an outstanding reward?  Blocks
+/// with nothing outstanding are exempt from liveness checks: a worker
+/// that wedges *after* finishing its block cannot stall the wave, so
+/// respawning it mid-wave would be pure waste.
+fn block_outstanding(
+    start: usize,
+    count: usize,
+    expect_state: &[Option<usize>],
+    done_seen: &[bool],
+    pending_by_env: &[usize],
+) -> bool {
+    (start..start + count)
+        .any(|e| expect_state[e].is_some() || !done_seen[e] || pending_by_env[e] > 0)
+}
+
 /// Render a failure-report value (bytes put by the worker) for an error.
 fn fail_message(val: &Value) -> String {
     match val {
@@ -937,6 +1327,7 @@ fn worker_loop(
     idx: usize,
     rx: mpsc::Receiver<Begin>,
     allocs: Arc<AtomicU64>,
+    poll_timeout: Duration,
 ) {
     // Working set: one obs buffer per step (held by the trainer until
     // the iteration's rollouts drop) plus the initial state.
@@ -955,6 +1346,7 @@ fn worker_loop(
                 &mut obs_pool,
                 &mut act_buf,
                 &obs_shape,
+                poll_timeout,
             )
         }));
         let failure = match outcome {
@@ -984,61 +1376,92 @@ fn worker_binary(cfg: &RunConfig) -> Result<std::path::PathBuf> {
     std::env::current_exe().context("resolving the running executable as worker binary")
 }
 
-/// Spawn one `relexi env-worker` child per plan assignment.  The full
-/// effective config travels in the `RELEXI_WORKER_CONFIG` env var (no
-/// staging to a shared filesystem needed); the exchange address and the
-/// worker's env block go on the command line.
+/// Spawn one `relexi env-worker` child per plan assignment (all at
+/// generation 0; respawns go through [`spawn_one_worker`] directly).
 fn spawn_worker_processes(
     cfg: &RunConfig,
     addr: &str,
     plan: &WorkerPlan,
 ) -> Result<Vec<std::process::Child>> {
-    let bin = worker_binary(cfg)?;
-    let config_text = cfg.to_toml_string();
     let mut children = Vec::with_capacity(plan.n_procs);
     for (w, &(start, count)) in plan.assignments.iter().enumerate() {
-        let child = std::process::Command::new(&bin)
-            .arg("env-worker")
-            .arg("--connect")
-            .arg(addr)
-            .arg("--transport")
-            .arg(&cfg.orchestrator.transport)
-            .arg("--worker-id")
-            .arg(w.to_string())
-            .arg("--env-start")
-            .arg(start.to_string())
-            .arg("--env-count")
-            .arg(count.to_string())
-            .env("RELEXI_WORKER_CONFIG", &config_text)
-            .spawn()
-            .with_context(|| format!("spawning env-worker {w} ({})", bin.display()))?;
-        children.push(child);
+        children.push(spawn_one_worker(cfg, addr, w, start, count, 0)?);
     }
     Ok(children)
+}
+
+/// Spawn one `relexi env-worker` child.  The full effective config
+/// travels in the `RELEXI_WORKER_CONFIG` env var (no staging to a shared
+/// filesystem needed); the exchange address and the worker's env block
+/// go on the command line.  `generation` counts the worker's
+/// incarnations — respawns bump it, and fault-plan directives default to
+/// firing only at generation 0, so a replacement does not re-trip the
+/// fault that killed its predecessor.
+fn spawn_one_worker(
+    cfg: &RunConfig,
+    addr: &str,
+    w: usize,
+    start: usize,
+    count: usize,
+    generation: u32,
+) -> Result<std::process::Child> {
+    let bin = worker_binary(cfg)?;
+    std::process::Command::new(&bin)
+        .arg("env-worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--transport")
+        .arg(&cfg.orchestrator.transport)
+        .arg("--worker-id")
+        .arg(w.to_string())
+        .arg("--env-start")
+        .arg(start.to_string())
+        .arg("--env-count")
+        .arg(count.to_string())
+        .arg("--generation")
+        .arg(generation.to_string())
+        .env("RELEXI_WORKER_CONFIG", cfg.to_toml_string())
+        .spawn()
+        .with_context(|| format!("spawning env-worker {w} ({})", bin.display()))
 }
 
 /// Block until every spawned worker has put its hello flag (its env
 /// threads are up and its transport works), detecting workers that died
 /// during startup instead of waiting out the timeout.
-fn wait_workers_hello(orch: &Orchestrator, children: &mut [std::process::Child]) -> Result<()> {
+fn wait_workers_hello(
+    cfg: &RunConfig,
+    orch: &Orchestrator,
+    children: &mut [std::process::Child],
+) -> Result<()> {
     let client = orch.client();
-    let deadline = Instant::now() + HELLO_TIMEOUT;
-    for w in 0..children.len() {
-        let key = ctl_hello_key(w);
-        loop {
-            if client.poll(&key, Duration::from_millis(200)).is_some() {
-                break;
-            }
-            if let Ok(Some(status)) = children[w].try_wait() {
-                bail!("env-worker {w} exited during startup ({status})");
-            }
-            anyhow::ensure!(
-                Instant::now() < deadline,
-                "env-worker {w} did not say hello within {HELLO_TIMEOUT:?}"
-            );
-        }
+    let deadline = Instant::now() + hello_timeout(cfg);
+    for (w, child) in children.iter_mut().enumerate() {
+        wait_one_hello(&client, child, w, deadline)?;
     }
     Ok(())
+}
+
+/// Block until worker `w` puts its hello flag or the deadline passes,
+/// detecting a child that died during startup instead of waiting it out.
+fn wait_one_hello(
+    client: &Client,
+    child: &mut std::process::Child,
+    w: usize,
+    deadline: Instant,
+) -> Result<()> {
+    let key = ctl_hello_key(w);
+    loop {
+        if client.poll(&key, Duration::from_millis(200)).is_some() {
+            return Ok(());
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            bail!("env-worker {w} exited during startup ({status})");
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "env-worker {w} did not say hello before its deadline"
+        );
+    }
 }
 
 /// The env-worker process' half of the pool: hosts one contiguous block
@@ -1074,6 +1497,7 @@ impl WorkerHost {
         );
         let backend = backend_from_config(cfg, None)?;
         let allocs = Arc::new(AtomicU64::new(0));
+        let wl_timeout = poll_timeout(cfg);
         let mut txs = Vec::with_capacity(env_count);
         let mut handles = Vec::with_capacity(env_count);
         for i in env_start..env_start + env_count {
@@ -1086,7 +1510,7 @@ impl WorkerHost {
             let a = allocs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("env-worker-{i}"))
-                .spawn(move || worker_loop(env, c, i, rx, a))?;
+                .spawn(move || worker_loop(env, c, i, rx, a, wl_timeout))?;
             txs.push(tx);
             handles.push(handle);
         }
@@ -1174,6 +1598,7 @@ fn run_episode(
     obs_pool: &mut TensorPool,
     act_buf: &mut Vec<f64>,
     obs_shape: &Arc<[usize]>,
+    poll_timeout: Duration,
 ) -> Result<()> {
     let obs_len = env.obs_len();
     env.reset_in_place(rng, false);
@@ -1183,7 +1608,7 @@ fn run_episode(
     obs_pool.put_back(buf);
     for t in 0..env.n_actions() {
         let (hit, act) = client
-            .poll_any(&[&keys.action[t], &keys.abort], POLL_TIMEOUT)
+            .poll_any(&[&keys.action[t], &keys.abort], poll_timeout)
             .with_context(|| format!("env {idx}: no action at step {t}"))?;
         anyhow::ensure!(hit == 0, "env {idx}: iteration aborted at step {t}");
         // Consume the action (seed semantics): only the shared abort flag

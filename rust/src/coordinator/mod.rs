@@ -9,9 +9,11 @@
 pub mod envpool;
 pub mod evaluate;
 pub mod metrics;
+pub mod supervise;
 pub mod training;
 
 pub use envpool::{EnvPool, PoolCounters, Rollouts, WorkerHost};
+pub use supervise::{FaultPlan, SupervisionReport};
 pub use evaluate::{eval_baseline, eval_policy, eval_policy_in, EvalResult};
 pub use metrics::{IterationMetrics, MetricsLog};
 pub use training::TrainingLoop;

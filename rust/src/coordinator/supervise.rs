@@ -1,0 +1,366 @@
+//! Supervision primitives for the process-worker runtime: the
+//! deterministic fault-injection plan the chaos tests drive, the
+//! heartbeat-expiry monitor the collector polls between subscription
+//! slices, and the per-iteration supervision report surfaced on
+//! [`crate::coordinator::Rollouts`].
+//!
+//! The fault plan is a `;`-separated directive string, config- or
+//! env-var-driven (`[fault] plan` / `RELEXI_FAULT_PLAN`):
+//!
+//! * `kill:w<K>@<W>`    — worker `K` exits cleanly instead of processing
+//!   its begin message for local wave `W` (waves counted per process
+//!   from 0, so a respawned worker starts again at wave 0);
+//! * `killput:w<K>@<N>` — worker `K` aborts the process after its `N`th
+//!   transport put — a mid-episode crash with frames already in flight,
+//!   the hard case for replay;
+//! * `hbstall:w<K>@<W>` — worker `K` stops publishing heartbeats from
+//!   local wave `W` while its env threads keep running (a wedged-but-
+//!   alive worker, detectable only via heartbeat expiry);
+//! * `drop:<N>`         — the `N`th frame sent on a faulted
+//!   [`crate::orchestrator::transport::RemoteTransport`] fails with a
+//!   synthetic I/O error (forces the reconnect path);
+//! * `delay:<N>:<MS>`   — the `N`th frame send sleeps `MS` milliseconds
+//!   first (straggler injection).
+//!
+//! A directive fires only in the process's first incarnation
+//! (`--generation 0`) unless suffixed with `*` (`kill:w0@0*`), which is
+//! how the degradation tests burn an entire respawn budget.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// One parsed directive plus its generation gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Directive {
+    pub fault: Fault,
+    /// `true` (the `*` suffix): fire in every incarnation of the target
+    /// worker; `false`: only at `--generation 0`.
+    pub all_generations: bool,
+}
+
+/// The injectable fault kinds (see module docs for the grammar).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    Kill { worker: usize, wave: u64 },
+    KillPut { worker: usize, put: u64 },
+    HbStall { worker: usize, wave: u64 },
+    Drop { frame: u64 },
+    Delay { frame: u64, ms: u64 },
+}
+
+/// A deterministic fault-injection plan.  Parsed once at config
+/// validation (so a malformed plan is a load-time error) and again by
+/// whichever component executes each directive.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub directives: Vec<Directive>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string; `""` is the empty plan.
+    pub fn parse(plan: &str) -> Result<FaultPlan> {
+        let mut directives = Vec::new();
+        for raw in plan.split(';') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (body, all_generations) = match raw.strip_suffix('*') {
+                Some(b) => (b, true),
+                None => (raw, false),
+            };
+            let (kind, rest) = match body.split_once(':') {
+                Some(kv) => kv,
+                None => bail!("fault directive {raw:?}: expected <kind>:<args>"),
+            };
+            let fault = match kind {
+                "kill" => {
+                    let (worker, wave) = parse_target(rest)?;
+                    Fault::Kill { worker, wave }
+                }
+                "killput" => {
+                    let (worker, put) = parse_target(rest)?;
+                    Fault::KillPut { worker, put }
+                }
+                "hbstall" => {
+                    let (worker, wave) = parse_target(rest)?;
+                    Fault::HbStall { worker, wave }
+                }
+                "drop" => Fault::Drop {
+                    frame: parse_u64(rest, "drop frame")?,
+                },
+                "delay" => match rest.split_once(':') {
+                    Some((n, ms)) => Fault::Delay {
+                        frame: parse_u64(n, "delay frame")?,
+                        ms: parse_u64(ms, "delay ms")?,
+                    },
+                    None => bail!("delay directive {raw:?}: expected delay:<N>:<MS>"),
+                },
+                other => bail!(
+                    "unknown fault kind {other:?} in {raw:?} \
+                     (expected kill | killput | hbstall | drop | delay)"
+                ),
+            };
+            directives.push(Directive {
+                fault,
+                all_generations,
+            });
+        }
+        Ok(FaultPlan { directives })
+    }
+
+    /// The runtime plan: `RELEXI_FAULT_PLAN` overrides the config string
+    /// (the env var is how chaos tests reach worker processes spawned by
+    /// code they don't construct).
+    pub fn from_env_or(config_plan: &str) -> Result<FaultPlan> {
+        match std::env::var("RELEXI_FAULT_PLAN") {
+            Ok(p) => FaultPlan::parse(&p),
+            Err(_) => FaultPlan::parse(config_plan),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    fn fires(&self, d: &Directive, generation: u32) -> bool {
+        d.all_generations || generation == 0
+    }
+
+    /// Local wave at which `worker` should exit instead of beginning
+    /// work, if any.
+    pub fn kill_wave(&self, worker: usize, generation: u32) -> Option<u64> {
+        self.directives.iter().find_map(|d| match d.fault {
+            Fault::Kill { worker: w, wave } if w == worker && self.fires(d, generation) => {
+                Some(wave)
+            }
+            _ => None,
+        })
+    }
+
+    /// Transport-put count after which `worker` should abort, if any.
+    pub fn killput_threshold(&self, worker: usize, generation: u32) -> Option<u64> {
+        self.directives.iter().find_map(|d| match d.fault {
+            Fault::KillPut { worker: w, put } if w == worker && self.fires(d, generation) => {
+                Some(put)
+            }
+            _ => None,
+        })
+    }
+
+    /// Local wave from which `worker` should stop heartbeating, if any.
+    pub fn hbstall_wave(&self, worker: usize, generation: u32) -> Option<u64> {
+        self.directives.iter().find_map(|d| match d.fault {
+            Fault::HbStall { worker: w, wave } if w == worker && self.fires(d, generation) => {
+                Some(wave)
+            }
+            _ => None,
+        })
+    }
+
+    /// Frame indices whose send should fail once (0-based count of
+    /// frames sent over the faulted transport).
+    pub fn drop_frames(&self) -> Vec<u64> {
+        self.directives
+            .iter()
+            .filter_map(|d| match d.fault {
+                Fault::Drop { frame } => Some(frame),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// `(frame, delay)` pairs for straggler injection.
+    pub fn delay_frames(&self) -> Vec<(u64, Duration)> {
+        self.directives
+            .iter()
+            .filter_map(|d| match d.fault {
+                Fault::Delay { frame, ms } => Some((frame, Duration::from_millis(ms))),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+fn parse_target(s: &str) -> Result<(usize, u64)> {
+    let body = match s.strip_prefix('w') {
+        Some(b) => b,
+        None => bail!("fault target {s:?}: expected w<worker>@<n>"),
+    };
+    let (w, n) = match body.split_once('@') {
+        Some(p) => p,
+        None => bail!("fault target {s:?}: expected w<worker>@<n>"),
+    };
+    Ok((
+        parse_u64(w, "worker index")? as usize,
+        parse_u64(n, "threshold")?,
+    ))
+}
+
+fn parse_u64(s: &str, what: &str) -> Result<u64> {
+    match s.trim().parse::<u64>() {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("fault plan: bad {what} {s:?}"),
+    }
+}
+
+/// Per-worker heartbeat-expiry tracking.  The collector feeds it the
+/// latest heartbeat counters between subscription slices; a worker whose
+/// counter has not advanced within `expiry` of its last advance (or of
+/// its arm time) is reported expired.  Timestamps are passed in so the
+/// tests can drive synthetic clocks.
+#[derive(Debug)]
+pub struct HeartbeatMonitor {
+    expiry: Duration,
+    last: Vec<(Option<f64>, Instant)>,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(n_workers: usize, expiry: Duration, now: Instant) -> Self {
+        HeartbeatMonitor {
+            expiry,
+            last: vec![(None, now); n_workers],
+        }
+    }
+
+    /// Re-arm `worker`'s window (after a respawn: the fresh process gets
+    /// a full expiry to produce its first beat).
+    pub fn arm(&mut self, worker: usize, now: Instant) {
+        self.last[worker] = (None, now);
+    }
+
+    /// Record the latest observed counter for `worker`; returns `true`
+    /// when the worker's heartbeat has expired.
+    pub fn observe(&mut self, worker: usize, counter: Option<f64>, now: Instant) -> bool {
+        let slot = &mut self.last[worker];
+        if counter.is_some() && counter != slot.0 {
+            *slot = (counter, now);
+        }
+        now.duration_since(slot.1) > self.expiry
+    }
+
+    /// Seconds since `worker`'s counter last advanced (or was armed).
+    pub fn stale_for(&self, worker: usize, now: Instant) -> f64 {
+        now.duration_since(self.last[worker].1).as_secs_f64()
+    }
+}
+
+/// What the supervision layer did during one collection wave; rides on
+/// [`crate::coordinator::Rollouts`].  A crash-free wave is all zeros.
+#[derive(Debug, Clone, Default)]
+pub struct SupervisionReport {
+    /// Worker respawns performed (mid-wave and between waves).
+    pub respawns: usize,
+    /// Global env indices whose block exhausted `[fault] max_respawns`
+    /// and was dropped; their episodes are excluded from the wave.
+    pub dropped_envs: Vec<usize>,
+    /// Per-incident seconds from the last observed sign of life
+    /// (heartbeat advance or wave start) to detection.
+    pub detect_s: Vec<f64>,
+    /// Per-incident seconds from detection to the replacement worker
+    /// being live again (hello + replay feed complete).
+    pub recover_s: Vec<f64>,
+}
+
+impl SupervisionReport {
+    /// True when every env completed without intervention.
+    pub fn clean(&self) -> bool {
+        self.respawns == 0 && self.dropped_envs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_blank_plans_parse_to_nothing() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn full_grammar_round_trips() {
+        let p = FaultPlan::parse(
+            "kill:w0@1; killput:w2@40 ;hbstall:w1@0*;drop:3;delay:5:250",
+        )
+        .unwrap();
+        assert_eq!(p.directives.len(), 5);
+        assert_eq!(p.kill_wave(0, 0), Some(1));
+        assert_eq!(p.killput_threshold(2, 0), Some(40));
+        assert_eq!(p.hbstall_wave(1, 0), Some(0));
+        assert_eq!(p.drop_frames(), vec![3]);
+        assert_eq!(p.delay_frames(), vec![(5, Duration::from_millis(250))]);
+        // Untargeted workers see nothing.
+        assert_eq!(p.kill_wave(1, 0), None);
+        assert_eq!(p.killput_threshold(0, 0), None);
+    }
+
+    #[test]
+    fn directives_gate_on_generation_unless_starred() {
+        let p = FaultPlan::parse("kill:w0@0;hbstall:w1@2*").unwrap();
+        // Plain directive: first incarnation only.
+        assert_eq!(p.kill_wave(0, 0), Some(0));
+        assert_eq!(p.kill_wave(0, 1), None);
+        // Starred directive: every incarnation.
+        assert_eq!(p.hbstall_wave(1, 0), Some(2));
+        assert_eq!(p.hbstall_wave(1, 3), Some(2));
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "kill:w0",         // missing @wave
+            "kill:0@1",        // missing w prefix
+            "killput:w@3",     // empty worker index
+            "hbstall:wx@1",    // non-numeric worker
+            "drop:",           // empty frame
+            "delay:3",         // missing ms
+            "explode:w0@1",    // unknown kind
+            "kill",            // no args at all
+            "kill:w0@1 extra", // trailing junk inside a directive
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn heartbeat_monitor_expires_only_a_silent_worker() {
+        let t0 = Instant::now();
+        let expiry = Duration::from_millis(500);
+        let mut mon = HeartbeatMonitor::new(2, expiry, t0);
+
+        // Worker 0 beats; worker 1 never does.
+        assert!(!mon.observe(0, Some(1.0), t0 + Duration::from_millis(100)));
+        assert!(!mon.observe(1, None, t0 + Duration::from_millis(100)));
+
+        // 400 ms later: worker 0's counter advanced, worker 1 still
+        // silent but inside its window.
+        assert!(!mon.observe(0, Some(2.0), t0 + Duration::from_millis(400)));
+        assert!(!mon.observe(1, None, t0 + Duration::from_millis(400)));
+
+        // Past the expiry from arm time: only the silent worker trips.
+        assert!(!mon.observe(0, Some(3.0), t0 + Duration::from_millis(700)));
+        assert!(mon.observe(1, None, t0 + Duration::from_millis(700)));
+
+        // A stalled counter (same value repeated) also trips.
+        assert!(mon.observe(0, Some(3.0), t0 + Duration::from_millis(1300)));
+        assert!(mon.stale_for(0, t0 + Duration::from_millis(1300)) > 0.5);
+
+        // Re-arming grants a fresh window.
+        mon.arm(1, t0 + Duration::from_millis(1300));
+        assert!(!mon.observe(1, None, t0 + Duration::from_millis(1500)));
+    }
+
+    #[test]
+    fn report_default_is_clean() {
+        let r = SupervisionReport::default();
+        assert!(r.clean());
+        let r2 = SupervisionReport {
+            respawns: 1,
+            ..SupervisionReport::default()
+        };
+        assert!(!r2.clean());
+    }
+}

@@ -67,7 +67,8 @@ fn print_usage() {
            scaling     regenerate the Fig. 3/4 scaling studies (--mode weak|strong)\n\
            env-worker  host an env block as a separate process dialing the exchange\n\
                        (--connect host:port --transport tcp|shm --worker-id N\n\
-                        --env-start N --env-count N; config via RELEXI_WORKER_CONFIG)\n\
+                        --env-start N --env-count N --generation N;\n\
+                        config via RELEXI_WORKER_CONFIG, faults via RELEXI_FAULT_PLAN)\n\
            info        print artifact/runtime diagnostics"
     );
 }
@@ -280,16 +281,25 @@ fn cmd_scaling(args: &Args) -> Result<()> {
 /// `relexi env-worker` — host a contiguous block of environments as a
 /// separate OS process.  Spawned by the trainer (`orchestrator.workers =
 /// "processes"`), dials the trainer's exchange over `--transport`
-/// (`tcp`/`shm`), announces itself with a hello flag, then serves
+/// (`tcp`/`shm`), announces itself with a hello flag, publishes a
+/// liveness heartbeat on a configurable cadence, then serves
 /// begin-iteration commands shipped through the store itself until the
 /// stop flag is posted or the connection is lost (bounded reconnects are
 /// handled inside the transport; exhausting them exits the worker).
+///
+/// `--generation` counts this worker id's incarnations (the supervisor
+/// bumps it on respawn).  The deterministic fault plan (`[fault] plan`
+/// or `RELEXI_FAULT_PLAN`) is evaluated against worker id + generation:
+/// `kill`/`hbstall` directives act in this control loop, `killput`/
+/// `drop`/`delay` directives are compiled into a [`TransportFault`]
+/// driven by the transport itself.
 fn cmd_env_worker(args: &Args) -> Result<()> {
-    use relexi::coordinator::WorkerHost;
+    use relexi::coordinator::{FaultPlan, WorkerHost};
     use relexi::orchestrator::protocol::{
-        ctl_begin_key, ctl_hello_key, decode_begin, CTL_STOP_KEY,
+        ctl_begin_key, ctl_hb_key, ctl_hello_key, decode_begin, CTL_STOP_KEY,
     };
-    use relexi::orchestrator::{Client, RemoteTransport, Value};
+    use relexi::orchestrator::{Client, RemoteTransport, TransportFault, Value};
+    use std::sync::atomic::{AtomicBool, Ordering};
     use std::time::Duration;
 
     // The trainer ships its exact RunConfig through the environment so
@@ -313,14 +323,55 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
     let worker_id = args.get_parse("worker-id", 0usize)?;
     let env_start = args.get_parse("env-start", 0usize)?;
     let env_count = args.get_parse("env-count", cfg.rl.n_envs)?;
+    let generation = args.get_parse("generation", 0u32)?;
 
-    let transport =
-        RemoteTransport::connect(&kind, &addr, cfg.orchestrator.connect_retries as u32)?;
+    let plan = FaultPlan::from_env_or(&cfg.fault.plan)?;
+    let fault = TransportFault::new(
+        plan.killput_threshold(worker_id, generation),
+        plan.drop_frames(),
+        plan.delay_frames(),
+    );
+    let transport = RemoteTransport::connect_with_fault(
+        &kind,
+        &addr,
+        cfg.orchestrator.connect_retries as u32,
+        fault,
+    )?;
     let client = Client::remote(transport.clone());
     let host = WorkerHost::spawn(&cfg, &client, env_start, env_count)?;
     client.put_flag(&ctl_hello_key(worker_id), true);
 
+    // Liveness heartbeat: a monotonic counter the supervisor watches;
+    // a counter frozen past `heartbeat_expiry_ms` marks this worker
+    // wedged.  The hbstall directive freezes it deliberately.
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_stalled = Arc::new(AtomicBool::new(false));
+    let hb_thread = {
+        let t = transport.clone();
+        let stop = hb_stop.clone();
+        let stalled = hb_stalled.clone();
+        let key = ctl_hb_key(worker_id);
+        let period = Duration::from_millis(cfg.orchestrator.heartbeat_period_ms);
+        std::thread::Builder::new()
+            .name(format!("hb-w{worker_id}"))
+            .spawn(move || {
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if !stalled.load(Ordering::Relaxed) {
+                        n += 1;
+                        // A failed put means the trainer is going away;
+                        // the control loop notices on its own.
+                        let _ = t.put(&key, Value::Scalar(n as f64));
+                    }
+                    std::thread::sleep(period);
+                }
+            })?
+    };
+
+    let kill_at = plan.kill_wave(worker_id, generation);
+    let stall_at = plan.hbstall_wave(worker_id, generation);
     let begin_key = ctl_begin_key(worker_id);
+    let mut wave: u64 = 0;
     loop {
         // The stop flag is read non-consuming (one flag serves every
         // worker); the begin command is taken exactly once below.
@@ -329,19 +380,32 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
             Duration::from_millis(500),
             false,
         ) {
-            Ok(Some((0, _))) => match transport.take(&begin_key) {
-                Ok(Some(Value::Bytes(b))) => {
-                    let (tag, envs) = decode_begin(&b)?;
-                    host.begin(&tag, &envs)?;
-                }
-                // Raced with a concurrent take or saw a stale type: the
-                // next wait re-observes whatever is actually there.
-                Ok(_) => continue,
-                Err(e) => {
-                    eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+            Ok(Some((0, _))) => {
+                if kill_at == Some(wave) {
+                    // Fault directive: die before touching this wave's
+                    // begin message (it stays in the store; the
+                    // supervisor's respawn path clears it).
+                    eprintln!("[fault] kill: worker {worker_id} exiting at wave {wave}");
                     break;
                 }
-            },
+                if stall_at.is_some_and(|sw| wave >= sw) {
+                    hb_stalled.store(true, Ordering::Relaxed);
+                }
+                match transport.take(&begin_key) {
+                    Ok(Some(Value::Bytes(b))) => {
+                        let (tag, envs) = decode_begin(&b)?;
+                        host.begin(&tag, &envs)?;
+                        wave += 1;
+                    }
+                    // Raced with a concurrent take or saw a stale type:
+                    // the next wait re-observes whatever is there.
+                    Ok(_) => continue,
+                    Err(e) => {
+                        eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+                        break;
+                    }
+                }
+            }
             Ok(Some(_)) => break, // stop flag posted: clean shutdown
             Ok(None) => continue, // timeout tick; poll again
             Err(e) => {
@@ -353,6 +417,8 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
             }
         }
     }
+    hb_stop.store(true, Ordering::Relaxed);
+    let _ = hb_thread.join();
     drop(host);
     Ok(())
 }

@@ -22,7 +22,8 @@ pub mod waverig;
 pub use protocol::{EnvKeys, PoolKeys, Protocol};
 pub use store::{Key, KeyLike, ShardedStore, StatsSnapshot, Subscription, WakeMode};
 pub use transport::{
-    ExchangeServer, InprocTransport, RemoteTransport, Transport, TransportSub, TRANSPORTS,
+    ExchangeServer, InprocTransport, RemoteTransport, Transport, TransportFault, TransportSub,
+    TRANSPORTS,
 };
 pub use value::{TensorPool, Value};
 

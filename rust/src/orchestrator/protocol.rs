@@ -40,6 +40,10 @@ use anyhow::Result;
 /// * `ctl_begin_key(w)`   — bytes payload ([`encode_begin`]) assigning
 ///   worker `w` one iteration's run tag + per-env RNG seeds.  Consumed
 ///   (deleted) by the worker.
+/// * `ctl_hb_key(w)`      — scalar heartbeat counter worker `w` bumps on
+///   a configurable cadence (`orchestrator.heartbeat_period_ms`); the
+///   supervision layer declares the worker wedged when the counter stops
+///   advancing for `heartbeat_expiry_ms`.
 /// * [`CTL_STOP_KEY`]     — flag read non-destructively by every worker;
 ///   set once at pool teardown.
 pub fn ctl_begin_key(worker: usize) -> String {
@@ -49,6 +53,11 @@ pub fn ctl_begin_key(worker: usize) -> String {
 /// See [`ctl_begin_key`].
 pub fn ctl_hello_key(worker: usize) -> String {
     format!("__relexi:ctl:w{worker}:hello")
+}
+
+/// Liveness heartbeat key for worker `w` (see [`ctl_begin_key`] docs).
+pub fn ctl_hb_key(worker: usize) -> String {
+    format!("__relexi:ctl:hb:w{worker}")
 }
 
 /// Shared stop flag for all env-worker processes (see [`ctl_begin_key`]).
@@ -248,7 +257,10 @@ mod tests {
     fn ctl_keys_are_distinct_and_outside_run_namespaces() {
         assert_ne!(ctl_begin_key(0), ctl_begin_key(1));
         assert_ne!(ctl_begin_key(0), ctl_hello_key(0));
+        assert_ne!(ctl_hb_key(0), ctl_hb_key(1));
+        assert_ne!(ctl_hb_key(0), ctl_hello_key(0));
         assert!(ctl_begin_key(3).starts_with("__relexi:ctl:"));
+        assert!(ctl_hb_key(3).starts_with("__relexi:ctl:hb:"));
         assert!(CTL_STOP_KEY.starts_with("__relexi:ctl:"));
     }
 

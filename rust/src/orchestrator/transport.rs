@@ -29,6 +29,7 @@
 
 use super::store::{ShardedStore, Subscription};
 use super::value::{wire, Value, MAX_PAYLOAD};
+use crate::util::retry::RetryPolicy;
 use anyhow::{bail, ensure, Context as _, Result};
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -877,26 +878,106 @@ impl TransportSub for InprocSub {
 // Remote transport (tcp | shm client side)
 // ---------------------------------------------------------------------------
 
+/// Deterministic client-side fault injection (the chaos harness):
+/// `relexi env-worker` builds one from the run's `[fault]` plan and
+/// attaches it via [`RemoteTransport::connect_with_fault`].  A transport
+/// built through plain [`RemoteTransport::connect`] carries the no-op
+/// instance, so the production path pays nothing beyond a branch.
+pub struct TransportFault {
+    /// Abort the whole process — no unwinding, no cleanup, the closest
+    /// in-tree stand-in for a node loss — once this many `put` frames
+    /// have been issued.
+    kill_after_puts: Option<u64>,
+    /// 1-based rpc frame numbers whose first attempt fails with a
+    /// synthetic connection error (exercises the retry-on-fresh-
+    /// connection path without a flaky network).
+    drop_frames: Vec<u64>,
+    /// 1-based rpc frame numbers delayed before sending.
+    delay_frames: Vec<(u64, Duration)>,
+    puts: AtomicU64,
+    frames: AtomicU64,
+}
+
+impl TransportFault {
+    /// The no-op plan every production transport carries.
+    pub fn none() -> TransportFault {
+        TransportFault::new(None, Vec::new(), Vec::new())
+    }
+
+    /// A concrete plan (see field docs; counters start at zero).
+    pub fn new(
+        kill_after_puts: Option<u64>,
+        drop_frames: Vec<u64>,
+        delay_frames: Vec<(u64, Duration)>,
+    ) -> TransportFault {
+        TransportFault {
+            kill_after_puts,
+            drop_frames,
+            delay_frames,
+            puts: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+        }
+    }
+
+    /// Account one logical `put`; aborts the process at the threshold.
+    fn on_put(&self) {
+        if let Some(k) = self.kill_after_puts {
+            let n = self.puts.fetch_add(1, Ordering::Relaxed) + 1;
+            if n >= k {
+                eprintln!("[fault] killput: aborting process after {n} puts");
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Account one rpc frame; sleeps out any configured delay and
+    /// returns whether this frame's first attempt must fail.
+    fn on_frame(&self) -> bool {
+        if self.drop_frames.is_empty() && self.delay_frames.is_empty() {
+            return false;
+        }
+        let n = self.frames.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(&(_, d)) = self.delay_frames.iter().find(|&&(f, _)| f == n) {
+            std::thread::sleep(d);
+        }
+        self.drop_frames.contains(&n)
+    }
+}
+
 /// Client side of the `tcp` and `shm` transports: a connection pool of
 /// framed pipes to one [`ExchangeServer`].  Each op checks a connection
 /// out (dialing a fresh one if the pool is empty), so concurrent
 /// blocking ops from different worker threads never serialize on one
 /// socket.  An op that hits an I/O error retries exactly once on a
-/// fresh connection, then reports the failure.
+/// fresh connection (and every dial runs under the shared
+/// [`RetryPolicy`] backoff), then reports the failure.
 pub struct RemoteTransport {
     kind: &'static str,
     addr: String,
     connect_retries: u32,
+    fault: TransportFault,
     pool: Mutex<Vec<Box<dyn Conn>>>,
 }
 
 impl RemoteTransport {
     /// Dial an exchange.  `kind` is `"tcp"` or `"shm"`; `addr` is the
     /// server's TCP address either way (shm bootstraps over it).
-    /// Validates reachability by dialing one connection eagerly,
-    /// retrying `connect_retries` times 200ms apart (a worker process
-    /// racing its trainer's bind).
+    /// Validates reachability by dialing one connection eagerly under
+    /// [`RetryPolicy::dial`]: `connect_retries + 1` attempts with capped
+    /// exponential backoff and jitter (a worker process racing its
+    /// trainer's bind), deadline-bounded.
     pub fn connect(kind: &str, addr: &str, connect_retries: u32) -> Result<Arc<RemoteTransport>> {
+        RemoteTransport::connect_with_fault(kind, addr, connect_retries, TransportFault::none())
+    }
+
+    /// [`RemoteTransport::connect`] with a fault-injection plan attached
+    /// (see [`TransportFault`]).
+    pub fn connect_with_fault(
+        kind: &str,
+        addr: &str,
+        connect_retries: u32,
+        fault: TransportFault,
+    ) -> Result<Arc<RemoteTransport>> {
         let kind = match kind {
             "tcp" => "tcp",
             "shm" => "shm",
@@ -906,6 +987,7 @@ impl RemoteTransport {
             kind,
             addr: addr.to_string(),
             connect_retries,
+            fault,
             pool: Mutex::new(Vec::new()),
         });
         let c = t.dial()?;
@@ -913,21 +995,12 @@ impl RemoteTransport {
         Ok(t)
     }
 
+    /// Dial one connection under the shared retry policy.  The error is
+    /// structured: attempts made, elapsed time, last underlying error.
     fn dial(&self) -> Result<Box<dyn Conn>> {
-        let mut last = None;
-        for attempt in 0..=self.connect_retries {
-            if attempt > 0 {
-                std::thread::sleep(Duration::from_millis(200));
-            }
-            match self.dial_once() {
-                Ok(c) => return Ok(c),
-                Err(e) => last = Some(e),
-            }
-        }
-        Err(last.unwrap().context(format!(
-            "dial {} exchange at {} ({} retries)",
-            self.kind, self.addr, self.connect_retries
-        )))
+        let what = format!("dial {} exchange at {}", self.kind, self.addr);
+        let conn = RetryPolicy::dial(self.connect_retries).run(&what, |_| self.dial_once())?;
+        Ok(conn)
     }
 
     fn dial_once(&self) -> Result<Box<dyn Conn>> {
@@ -983,10 +1056,15 @@ impl RemoteTransport {
     }
 
     /// One request/response round trip with single-retry-on-fresh-
-    /// connection semantics.
+    /// connection semantics (at-most-once against the server: the
+    /// retry only fires when the first attempt failed to produce a
+    /// response).  The redial inside the retry runs under the shared
+    /// [`RetryPolicy`] backoff, so a restarting exchange is waited out
+    /// instead of failed fast.
     fn rpc(&self, req: &Request, deadline: Duration) -> Result<Response> {
         let mut frame = Vec::new();
         req.encode_into(&mut frame);
+        let mut drop_first = self.fault.on_frame();
         let mut last = None;
         for attempt in 0..2 {
             // First attempt reuses a pooled connection; the retry always
@@ -999,6 +1077,13 @@ impl RemoteTransport {
                     continue;
                 }
             };
+            if drop_first {
+                // Injected fault: discard the connection before the
+                // send, exactly as a real connection failure would.
+                drop_first = false;
+                last = Some(anyhow::anyhow!("injected frame drop (fault plan)"));
+                continue;
+            }
             match Self::rpc_on(&mut conn, &frame, deadline) {
                 Ok(resp) => {
                     self.pool.lock().unwrap().push(conn);
@@ -1062,6 +1147,7 @@ impl Transport for RemoteTransport {
         self.kind
     }
     fn put(&self, key: &str, value: Value) -> Result<()> {
+        self.fault.on_put();
         expect_unit(self.rpc(&Request::Put { key: key.to_string(), value }, RPC_TIMEOUT)?)
     }
     fn get(&self, key: &str) -> Result<Option<Value>> {
@@ -1590,6 +1676,44 @@ mod tests {
             t.get("huge").unwrap().unwrap().as_tensor().unwrap().1,
             &huge[..]
         );
+        drop(server);
+    }
+
+    #[test]
+    fn dial_failure_reports_attempts_and_elapsed() {
+        // Bind a port, then drop the listener: nothing answers there.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = RemoteTransport::connect("tcp", &addr, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dial tcp exchange"), "{msg}");
+        assert!(msg.contains("failed after 2 attempt(s)"), "{msg}");
+        assert!(msg.contains("last error"), "{msg}");
+    }
+
+    #[test]
+    fn injected_frame_drop_forces_redial_and_the_op_still_succeeds() {
+        let store = Arc::new(ShardedStore::new(2));
+        let server = ExchangeServer::bind(store.clone(), "127.0.0.1:0").unwrap();
+        // Frame 2's first attempt fails synthetically; frame 3 is
+        // delayed.  Both ops must still land.
+        let fault =
+            TransportFault::new(None, vec![2], vec![(3, Duration::from_millis(10))]);
+        let t = RemoteTransport::connect_with_fault(
+            "tcp",
+            &server.addr().to_string(),
+            1,
+            fault,
+        )
+        .unwrap();
+        t.put("a", Value::Scalar(1.0)).unwrap();
+        t.put("b", Value::Scalar(2.0)).unwrap(); // dropped once, retried fresh
+        t.put("c", Value::Scalar(3.0)).unwrap(); // delayed, then clean
+        assert_eq!(store.get("a").unwrap().as_scalar(), Some(1.0));
+        assert_eq!(store.get("b").unwrap().as_scalar(), Some(2.0));
+        assert_eq!(store.get("c").unwrap().as_scalar(), Some(3.0));
         drop(server);
     }
 

@@ -104,6 +104,32 @@ impl Bench {
         m
     }
 
+    /// Record a case from externally collected per-event samples
+    /// (seconds) instead of timing a closure — for benches whose numbers
+    /// come from instrumentation rather than repetition (e.g. the
+    /// supervision report's per-incident detect/recover splits).
+    pub fn record(&mut self, label: &str, samples: &[f64]) -> Measurement {
+        assert!(!samples.is_empty(), "record() needs at least one sample");
+        let m = Measurement {
+            label: label.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(samples),
+            std_s: stats::std_dev(samples),
+            median_s: stats::median(samples),
+            min_s: stats::min(samples),
+        };
+        println!(
+            "[{}] {:<44} {:>12}  ±{:>10}  (n={})",
+            self.name,
+            m.label,
+            fmt_duration(m.mean_s),
+            fmt_duration(m.std_s),
+            m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
     /// All measurements taken so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results

@@ -8,6 +8,7 @@ pub mod binio;
 pub mod cli;
 pub mod plot;
 pub mod pool;
+pub mod retry;
 pub mod rng;
 pub mod simd;
 pub mod stats;

@@ -1,0 +1,265 @@
+//! Shared retry policy: capped exponential backoff with deterministic
+//! jitter, bounded both by an attempt budget and a wall-clock deadline.
+//!
+//! Every reconnect path in the runtime (worker dial, trainer-side RPC
+//! re-dial, shm bootstrap) routes through one [`RetryPolicy`] so the
+//! backoff shape is a single tunable, and failures surface as a
+//! structured [`RetryError`] — attempts made, elapsed wall clock, last
+//! underlying error — instead of the last error alone.
+//!
+//! Jitter is deterministic (an xorshift64* stream seeded per policy):
+//! retries never synchronise across a worker fleet, yet a given policy
+//! replays the same delay sequence run after run, which keeps the
+//! fault-injection tests reproducible.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Capped exponential backoff: attempt `k` sleeps
+/// `min(cap, base * 2^k) * U` where `U` is a deterministic jitter
+/// factor in `[0.5, 1.0)`.  The loop stops at `max_attempts` tries or
+/// when the next sleep would overrun `deadline`, whichever comes first.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// First-retry backoff (attempt 0 -> 1 sleeps ~`base`).
+    pub base: Duration,
+    /// Ceiling on a single backoff sleep before jitter.
+    pub cap: Duration,
+    /// Total tries, including the first (`>= 1`).
+    pub max_attempts: u32,
+    /// Wall-clock budget across all tries and sleeps.
+    pub deadline: Duration,
+    /// Seed for the deterministic jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(base: Duration, cap: Duration, max_attempts: u32, deadline: Duration) -> Self {
+        RetryPolicy {
+            base,
+            cap,
+            max_attempts: max_attempts.max(1),
+            deadline,
+            jitter_seed: 0x5EED_0F_D1A1,
+        }
+    }
+
+    /// The dial policy used by workers and trainer-side re-dials:
+    /// `connect_retries` extra tries after the first, 100 ms doubling
+    /// backoff capped at 2 s, all inside a 15 s deadline — the bound the
+    /// orphaned-worker teardown tests rely on.
+    pub fn dial(connect_retries: u32) -> Self {
+        RetryPolicy::new(
+            Duration::from_millis(100),
+            Duration::from_secs(2),
+            connect_retries.saturating_add(1),
+            Duration::from_secs(15),
+        )
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.jitter_seed = seed;
+        self
+    }
+
+    /// Backoff for the sleep after attempt `attempt` (0-based), with the
+    /// jitter stream threaded through `state`.
+    fn delay_for(&self, attempt: u32, state: &mut u64) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.cap);
+        // xorshift64* step; state is kept non-zero by the caller.
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        let frac = (x >> 11) as f64 / (1u64 << 53) as f64;
+        exp.mul_f64(0.5 + 0.5 * frac)
+    }
+
+    /// Run `op` until it succeeds or the policy is exhausted.  `op`
+    /// receives the 0-based attempt index.  On exhaustion the error
+    /// carries the attempt count, the elapsed wall clock and the last
+    /// underlying error (flattened with its context chain).
+    pub fn run<T>(
+        &self,
+        what: &str,
+        mut op: impl FnMut(u32) -> anyhow::Result<T>,
+    ) -> Result<T, RetryError> {
+        let start = Instant::now();
+        let mut state = self.jitter_seed | 1;
+        let mut last: Option<anyhow::Error> = None;
+        let mut attempts = 0u32;
+        while attempts < self.max_attempts {
+            match op(attempts) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+            attempts += 1;
+            if attempts >= self.max_attempts {
+                break;
+            }
+            let delay = self.delay_for(attempts - 1, &mut state);
+            if start.elapsed() + delay > self.deadline {
+                break;
+            }
+            std::thread::sleep(delay);
+        }
+        Err(RetryError {
+            what: what.to_string(),
+            attempts,
+            elapsed: start.elapsed(),
+            last: last.map(|e| format!("{e:#}")).unwrap_or_default(),
+        })
+    }
+}
+
+/// Structured retry failure: what was being attempted, how many tries
+/// were made, how long they took, and the last underlying error.
+#[derive(Debug)]
+pub struct RetryError {
+    pub what: String,
+    pub attempts: u32,
+    pub elapsed: Duration,
+    pub last: String,
+}
+
+impl fmt::Display for RetryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} failed after {} attempt{} over {:.3} s (last error: {})",
+            self.what,
+            self.attempts,
+            if self.attempts == 1 { "" } else { "s" },
+            self.elapsed.as_secs_f64(),
+            if self.last.is_empty() { "none" } else { &self.last },
+        )
+    }
+}
+
+// `std::error::Error` (not `anyhow`-native) so the vendored blanket
+// `From<E: Error + Send + Sync>` converts it with `?` at call sites.
+impl std::error::Error for RetryError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn fast(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy::new(
+            Duration::from_millis(1),
+            Duration::from_millis(4),
+            max_attempts,
+            Duration::from_secs(5),
+        )
+    }
+
+    #[test]
+    fn first_success_makes_one_attempt() {
+        let calls = AtomicU32::new(0);
+        let got = fast(5)
+            .run("op", |_| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                Ok(7u32)
+            })
+            .unwrap();
+        assert_eq!(got, 7);
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn exhaustion_reports_attempts_and_last_error() {
+        let calls = AtomicU32::new(0);
+        let err = fast(3)
+            .run::<u32>("dial exchange", |k| {
+                assert_eq!(k, calls.fetch_add(1, Ordering::Relaxed));
+                anyhow::bail!("refused #{k}")
+            })
+            .unwrap_err();
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        assert_eq!(err.attempts, 3);
+        assert_eq!(err.last, "refused #2");
+        let msg = format!("{err}");
+        assert!(msg.contains("dial exchange"), "message: {msg}");
+        assert!(msg.contains("3 attempts"), "message: {msg}");
+        assert!(msg.contains("refused #2"), "message: {msg}");
+    }
+
+    #[test]
+    fn succeeds_midway_after_transient_failures() {
+        let calls = AtomicU32::new(0);
+        let got = fast(5)
+            .run("op", |k| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                if k < 2 {
+                    anyhow::bail!("transient")
+                }
+                Ok(k)
+            })
+            .unwrap();
+        assert_eq!(got, 2);
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn deadline_stops_the_loop_early() {
+        let policy = RetryPolicy::new(
+            Duration::from_millis(50),
+            Duration::from_millis(50),
+            1000,
+            Duration::from_millis(120),
+        );
+        let start = Instant::now();
+        let err = policy
+            .run::<()>("op", |_| anyhow::bail!("down"))
+            .unwrap_err();
+        assert!(err.attempts < 1000, "deadline must cut the budget short");
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "loop ran far past its deadline"
+        );
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let p = fast(8).with_seed(42);
+        let mut s1 = p.jitter_seed | 1;
+        let mut s2 = p.jitter_seed | 1;
+        for attempt in 0..8 {
+            let a = p.delay_for(attempt, &mut s1);
+            let b = p.delay_for(attempt, &mut s2);
+            assert_eq!(a, b, "same seed must replay the same delays");
+            let exp = p.base.saturating_mul(1 << attempt.min(16)).min(p.cap);
+            assert!(a >= exp.mul_f64(0.5) && a <= exp, "attempt {attempt}: {a:?} vs {exp:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_growth_is_capped() {
+        let p = RetryPolicy::new(
+            Duration::from_millis(100),
+            Duration::from_secs(2),
+            10,
+            Duration::from_secs(60),
+        );
+        let mut s = p.jitter_seed | 1;
+        // Attempt 10 uncapped would be 102.4 s; the cap holds it at 2 s.
+        let d = p.delay_for(10, &mut s);
+        assert!(d <= Duration::from_secs(2));
+        assert!(d >= Duration::from_secs(1));
+    }
+
+    #[test]
+    fn retry_error_converts_into_anyhow() {
+        fn inner() -> anyhow::Result<()> {
+            Err(fast(1).run::<()>("op", |_| anyhow::bail!("boom")).unwrap_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e:#}").contains("boom"));
+    }
+}

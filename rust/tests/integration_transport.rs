@@ -13,11 +13,16 @@
 //!   OS processes run an 8-env Burgers iteration whose episodes are
 //!   bit-identical to the in-process threads pool at the same seed;
 //! * bounded worker teardown: an env-worker whose trainer dies without
-//!   posting the stop flag exits on its own within the reconnect bound.
+//!   posting the stop flag exits on its own within the reconnect bound
+//!   — both idle and with episodes in flight;
+//! * chaos (PR-8 acceptance): deterministic `[fault]` plans kill a
+//!   worker mid-wave or before its first begin — the supervisor must
+//!   respawn + replay to bit-identical episodes, and an exhausted
+//!   respawn budget must degrade to a short wave instead of aborting.
 
 use relexi::config::{BurgersConfig, EnvVariant, RunConfig};
-use relexi::coordinator::EnvPool;
-use relexi::orchestrator::protocol::ctl_hello_key;
+use relexi::coordinator::{EnvPool, Rollouts};
+use relexi::orchestrator::protocol::{ctl_begin_key, ctl_hello_key, encode_begin};
 use relexi::orchestrator::transport::{
     frame_len, InprocTransport, RemoteTransport, Request, Response, Transport, MAX_FRAME,
 };
@@ -380,8 +385,9 @@ fn assert_episodes_identical(a: &[Episode], b: &[Episode]) {
 }
 
 /// Two sampling iterations (construction wave + steady-state wave) on a
-/// freshly built pool, returning both rollouts' episodes.
-fn two_iterations(cfg: RunConfig, seed: u64) -> (Vec<Episode>, Vec<Episode>) {
+/// freshly built pool, returning both full rollouts (episodes plus the
+/// supervision report the chaos tests inspect).
+fn two_iterations_rollouts(cfg: RunConfig, seed: u64) -> (Rollouts, Rollouts) {
     let n_envs = cfg.rl.n_envs;
     let orch = Orchestrator::launch(cfg.hpc.db_shards);
     let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
@@ -394,7 +400,25 @@ fn two_iterations(cfg: RunConfig, seed: u64) -> (Vec<Episode>, Vec<Episode>) {
         .collect_with(&orch, &Protocol::new("lb1"), stub_policy, &mut rng, false, n_envs)
         .unwrap();
     orch.clear();
+    (r0, r1)
+}
+
+fn two_iterations(cfg: RunConfig, seed: u64) -> (Vec<Episode>, Vec<Episode>) {
+    let (r0, r1) = two_iterations_rollouts(cfg, seed);
     (r0.episodes, r1.episodes)
+}
+
+/// `burgers8_cfg` wired to real env-worker processes over loopback TCP,
+/// with a tight heartbeat so the chaos tests detect faults quickly.
+fn burgers8_procs_cfg() -> RunConfig {
+    let mut cfg = burgers8_cfg();
+    cfg.orchestrator.workers = "processes".to_string();
+    cfg.orchestrator.transport = "tcp".to_string();
+    cfg.orchestrator.env_procs = 2; // 2 workers x 4 envs
+    cfg.orchestrator.worker_bin = env!("CARGO_BIN_EXE_relexi").to_string();
+    cfg.orchestrator.heartbeat_period_ms = 200;
+    cfg.orchestrator.heartbeat_expiry_ms = 2000;
+    cfg
 }
 
 #[test]
@@ -405,18 +429,102 @@ fn tcp_loopback_worker_processes_match_inproc_bitwise() {
     // processes dialing the loopback-TCP exchange — same seed, and every
     // observation, action, log-prob, value and reward bit-identical.
     let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 41);
-
-    let mut cfg = burgers8_cfg();
-    cfg.orchestrator.workers = "processes".to_string();
-    cfg.orchestrator.transport = "tcp".to_string();
-    cfg.orchestrator.env_procs = 2; // 2 workers x 4 envs
-    cfg.orchestrator.worker_bin = env!("CARGO_BIN_EXE_relexi").to_string();
-    let (tcp0, tcp1) = two_iterations(cfg, 41);
+    let (tcp0, tcp1) = two_iterations(burgers8_procs_cfg(), 41);
 
     assert_episodes_identical(&inproc0, &tcp0);
     assert_episodes_identical(&inproc1, &tcp1);
     // Pool drop on the processes side must have reaped its workers; the
     // bounded-teardown test below covers the trainer-death path.
+}
+
+// ------------------------------------------------------------- chaos
+
+#[test]
+fn chaos_killed_worker_recovers_bit_identical() {
+    // PR-8 acceptance: `killput:w0@25` makes worker 0's transport abort
+    // the whole process mid-wave (its block has published some — not all
+    // — of its states and rewards).  The supervisor must notice the
+    // child exit within a heartbeat slice, respawn a generation-1
+    // worker, replay the recorded action prefix, and finish BOTH waves
+    // bit-identical to the fault-free in-process run at the same seed.
+    let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 43);
+
+    let mut cfg = burgers8_procs_cfg();
+    cfg.fault.plan = "killput:w0@25".to_string();
+    cfg.fault.max_respawns = 2;
+    let (r0, r1) = two_iterations_rollouts(cfg, 43);
+
+    let total_respawns = r0.supervision.respawns + r1.supervision.respawns;
+    assert!(
+        total_respawns >= 1,
+        "fault plan should have killed worker 0 at least once (reports: {:?} / {:?})",
+        r0.supervision,
+        r1.supervision
+    );
+    assert!(r0.supervision.dropped_envs.is_empty(), "no block may be dropped");
+    assert!(r1.supervision.dropped_envs.is_empty(), "no block may be dropped");
+    assert_episodes_identical(&inproc0, &r0.episodes);
+    assert_episodes_identical(&inproc1, &r1.episodes);
+}
+
+#[test]
+fn worker_killed_before_first_begin_recovers_bit_identical() {
+    // Teardown race: `kill:w0@0` exits worker 0 the moment it SEES its
+    // first begin command — after hello, before taking the message or
+    // publishing a single state.  The supervisor must clear the untaken
+    // begin, respawn, and replay the whole block from recorded seeds.
+    let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 47);
+
+    let mut cfg = burgers8_procs_cfg();
+    cfg.fault.plan = "kill:w0@0".to_string();
+    let (r0, r1) = two_iterations_rollouts(cfg, 47);
+
+    assert_eq!(r0.supervision.respawns, 1, "exactly one respawn in wave 0");
+    assert!(r0.supervision.dropped_envs.is_empty());
+    assert!(
+        r1.supervision.clean(),
+        "generation 1 carries no fault directive: {:?}",
+        r1.supervision
+    );
+    assert_episodes_identical(&inproc0, &r0.episodes);
+    assert_episodes_identical(&inproc1, &r1.episodes);
+}
+
+#[test]
+fn max_respawns_exhaustion_degrades_to_short_wave() {
+    // PR-8 acceptance: `kill:w0@0*` fires at every generation, so the
+    // replacement dies exactly like its predecessor.  With a respawn
+    // budget of 1 the supervisor must give up on the block, complete
+    // the wave short (4 of 8 envs) WITHOUT an error, and keep serving
+    // degraded waves afterwards.
+    let mut cfg = burgers8_procs_cfg();
+    cfg.fault.plan = "kill:w0@0*".to_string();
+    cfg.fault.max_respawns = 1;
+
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
+    let mut rng = Rng::new(7);
+    let r0 = pool
+        .collect_with(&orch, &Protocol::new("deg0"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    assert_eq!(r0.supervision.respawns, 1, "budget of 1 respawn spent");
+    assert_eq!(r0.supervision.dropped_envs, vec![0, 1, 2, 3]);
+    assert_eq!(r0.episodes.len(), 4, "surviving block's episodes only");
+    for (i, ep) in r0.episodes.iter().enumerate() {
+        assert!(!ep.steps.is_empty(), "surviving episode {i} must have steps");
+    }
+
+    // The degraded pool keeps working: the dropped block stays dropped
+    // (no further respawn attempts), the rest completes normally.
+    orch.clear();
+    let r1 = pool
+        .collect_with(&orch, &Protocol::new("deg1"), stub_policy, &mut rng, false, n_envs)
+        .unwrap();
+    assert_eq!(r1.supervision.respawns, 0, "dropped block is not retried");
+    assert_eq!(r1.supervision.dropped_envs, vec![0, 1, 2, 3]);
+    assert_eq!(r1.episodes.len(), 4);
+    orch.clear();
 }
 
 // ------------------------------------------------------- worker teardown
@@ -486,6 +594,96 @@ fn env_worker_exits_when_trainer_dies() {
                     let _ = child.kill();
                     let _ = child.wait();
                     panic!("env-worker still alive 30 s after trainer death");
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+#[test]
+fn env_worker_exits_when_trainer_dies_mid_episode() {
+    // Teardown race: the trainer dies while the worker's env threads are
+    // BLOCKED mid-episode waiting for actions that will never arrive.
+    // The dead transport must unblock those waits within the reconnect
+    // bound and the process must exit — no orphan pinned on a 600 s
+    // poll timeout.  (Exit status is not asserted: the env threads may
+    // legitimately unwind on the dead exchange; the guarantee is a
+    // bounded exit.)
+    let mut cfg = burgers8_cfg();
+    cfg.rl.n_envs = 2;
+    cfg.orchestrator.workers = "processes".to_string();
+    cfg.orchestrator.transport = "tcp".to_string();
+
+    let orch = Orchestrator::launch(2);
+    let server = orch.serve("127.0.0.1:0").unwrap();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_relexi"))
+        .arg("env-worker")
+        .arg("--connect")
+        .arg(server.addr().to_string())
+        .arg("--transport")
+        .arg("tcp")
+        .arg("--worker-id")
+        .arg("0")
+        .arg("--env-start")
+        .arg("0")
+        .arg("--env-count")
+        .arg("2")
+        .env("RELEXI_WORKER_CONFIG", cfg.to_toml_string())
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn env-worker");
+
+    let client = orch.client();
+    let hello_deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if client
+            .poll(ctl_hello_key(0).as_str(), Duration::from_millis(200))
+            .is_some()
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < hello_deadline,
+            "env-worker never said hello"
+        );
+    }
+
+    // Hand the worker a wave directly and wait until both env threads
+    // have published their initial states — i.e. they are now blocked
+    // polling for the step-0 actions we will never send.
+    let proto = Protocol::new("inflight0");
+    client.put_bytes(
+        ctl_begin_key(0).as_str(),
+        encode_begin(proto.run_tag(), &[(0, 1111), (1, 2222)]),
+    );
+    let state_deadline = Instant::now() + Duration::from_secs(60);
+    for (env, n_actions) in [(0usize, 5usize), (1, 3)] {
+        let key = proto.env_keys(env, n_actions).state[0].clone();
+        loop {
+            if client.poll(key.as_str(), Duration::from_millis(200)).is_some() {
+                break;
+            }
+            assert!(
+                Instant::now() < state_deadline,
+                "env {env} never published its initial state"
+            );
+        }
+    }
+
+    // Kill the trainer side with the wave in flight.
+    drop(server);
+
+    let exit_deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(_) => break,
+            None => {
+                if Instant::now() >= exit_deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    panic!("env-worker still alive 30 s after mid-episode trainer death");
                 }
                 std::thread::sleep(Duration::from_millis(100));
             }
