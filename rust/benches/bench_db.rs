@@ -20,7 +20,8 @@
 //! CI smoke job.
 
 use relexi::orchestrator::{
-    Key, Orchestrator, Protocol, ShardedStore, Subscription, Value, WakeMode,
+    Key, Orchestrator, Protocol, RemoteTransport, ShardedStore, Subscription, Transport, Value,
+    WakeMode,
 };
 use relexi::util::bench::{fmt_duration, Bench, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -108,6 +109,57 @@ fn waiter_scaling_series(b: &mut Bench, table: &mut Table, counts: &[usize]) {
                 fmt_duration(m.median_s),
             ]);
         }
+    }
+}
+
+/// PR-9 series: publish an `e`-key wave either as `e` individual puts
+/// (one frame per key on the wire) or as ONE `put_many` (one frame per
+/// wave, executed store-side as a single grouped-by-shard pass).  Runs
+/// the pair twice: straight into the store (`inproc`), and through a
+/// loopback-TCP connection where the coalesced frame count is the whole
+/// point of the batched exchange.
+fn put_many_series(b: &mut Bench, table: &mut Table, counts: &[usize]) {
+    let orch = Orchestrator::launch(16);
+    let server = orch.serve("127.0.0.1:0").expect("loopback exchange");
+    let tcp: Arc<dyn Transport> =
+        RemoteTransport::connect("tcp", &server.addr().to_string(), 2).expect("tcp client");
+    let inproc = orch.client();
+    let row = |table: &mut Table, label: &str, e: usize, mean_s: f64| {
+        table.row(vec![
+            label.to_string(),
+            e.to_string(),
+            fmt_duration(mean_s),
+            fmt_duration(mean_s / e as f64),
+        ]);
+    };
+    for &e in counts {
+        let names: Vec<Key> = (0..e).map(|i| Key::new(format!("pm{i}"))).collect();
+        let strs: Vec<String> = (0..e).map(|i| format!("pm{i}")).collect();
+
+        let m = b.run(&format!("put {e}-key wave [inproc per-key]"), || {
+            for k in &names {
+                inproc.put_scalar(k, 1.0);
+            }
+        });
+        row(table, "inproc per-key", e, m.mean_s);
+        let m = b.run(&format!("put {e}-key wave [inproc put_many]"), || {
+            inproc.put_many(names.iter().map(|k| (k.clone(), Value::Scalar(1.0))).collect());
+        });
+        row(table, "inproc put_many", e, m.mean_s);
+
+        let m = b.run(&format!("put {e}-key wave [tcp per-key]"), || {
+            for k in &strs {
+                tcp.put(k, Value::Scalar(1.0)).expect("tcp put");
+            }
+        });
+        row(table, "tcp per-key", e, m.mean_s);
+        let m = b.run(&format!("put {e}-key wave [tcp put_many]"), || {
+            tcp.put_many(strs.iter().map(|k| (k.clone(), Value::Scalar(1.0))).collect())
+                .expect("tcp put_many");
+        });
+        row(table, "tcp put_many", e, m.mean_s);
+
+        orch.clear();
     }
 }
 
@@ -273,6 +325,20 @@ fn main() {
          the per-event rebuild re-scans and re-registers its whole\n\
          outstanding key set, so its per-event cost grows with E — the\n\
          O(E^2)-per-wave collector behavior PR 4 retired."
+    );
+
+    // Batched-exchange primitive (PR-9): one PutMany frame per wave vs
+    // one frame per key, inproc and over loopback TCP.
+    let pm_counts: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 256] };
+    let mut ptable = Table::new(&["path", "wave keys", "wave mean", "per key"]);
+    put_many_series(&mut b, &mut ptable, pm_counts);
+    ptable.print("Batched put_many vs per-key puts (PR-9)");
+    println!(
+        "Expected shape: inproc put_many saves the per-key client hop\n\
+         (one grouped-by-shard pass); over TCP the win is structural —\n\
+         one frame and one syscall round per wave instead of one per\n\
+         key, so the per-key cost of the batched row shrinks as the\n\
+         wave grows while the per-key row stays flat."
     );
 
     b.write_json("BENCH_db.json").expect("write BENCH_db.json");

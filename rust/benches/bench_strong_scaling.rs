@@ -92,6 +92,20 @@ fn main() {
         }
     }
 
+    // Batched A/B (PR-9): the same strong-scaled waves through the
+    // wave-coalesced path — one PutMany/TakeMany frame per worker block
+    // per wave direction (4 envs per block, like the worker plan)
+    // instead of one frame per env per op.
+    for &kind in kinds {
+        for &envs in env_counts {
+            let per_env = (total_floats / envs).max(1);
+            let blocks = (envs / 4).max(1);
+            let mut rig = WaveRig::start_batched(kind, &vec![per_env; envs], 8, blocks)
+                .unwrap_or_else(|e| panic!("batched wave rig {kind}/{envs}: {e:#}"));
+            b.run(&format!("wave-batched/{kind}/envs{envs}"), || rig.run_wave());
+        }
+    }
+
     b.write_json("BENCH_strong_scaling.json")
         .expect("write BENCH_strong_scaling.json");
 }

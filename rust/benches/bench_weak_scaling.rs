@@ -93,6 +93,19 @@ fn main() {
         }
     }
 
+    // Batched A/B (PR-9): the same weak-scaled waves through the
+    // wave-coalesced path (4 envs per block, like the worker plan).
+    // Doubling E doubles the bytes per wave but the FRAME count per
+    // wave only grows with the block count.
+    for &kind in kinds {
+        for &envs in env_counts {
+            let blocks = (envs / 4).max(1);
+            let mut rig = WaveRig::start_batched(kind, &vec![per_env_floats; envs], 8, blocks)
+                .unwrap_or_else(|e| panic!("batched wave rig {kind}/{envs}: {e:#}"));
+            b.run(&format!("wave-batched/{kind}/envs{envs}"), || rig.run_wave());
+        }
+    }
+
     b.write_json("BENCH_weak_scaling.json")
         .expect("write BENCH_weak_scaling.json");
 }

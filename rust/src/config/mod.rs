@@ -453,6 +453,13 @@ pub struct OrchestratorConfig {
     /// (milliseconds) is declared wedged and respawned.  Must exceed
     /// `heartbeat_period_ms`.
     pub heartbeat_expiry_ms: u64,
+    /// Wave-coalesced batched exchange (PR 9): workers publish each
+    /// step's whole env block as ONE `PutMany` frame and block on one
+    /// batched action take, and the collector scatters an action wave
+    /// as one `PutMany` per worker block — O(W·T) frames per wave
+    /// instead of O(E·T).  `false` keeps the per-key wire pattern as
+    /// the A/B baseline; both legs are bit-identical at the same seed.
+    pub batch_ops: bool,
 }
 
 impl Default for OrchestratorConfig {
@@ -469,6 +476,7 @@ impl Default for OrchestratorConfig {
             reap_timeout_s: 10.0,
             heartbeat_period_ms: 1000,
             heartbeat_expiry_ms: 10_000,
+            batch_ops: true,
         }
     }
 }
@@ -696,6 +704,7 @@ impl RunConfig {
             "orchestrator.heartbeat_expiry_ms",
             orc.heartbeat_expiry_ms as i64,
         )? as u64;
+        orc.batch_ops = t.bool_or("orchestrator.batch_ops", orc.batch_ops)?;
 
         cfg.fault.max_respawns =
             t.int_or("fault.max_respawns", cfg.fault.max_respawns as i64)? as usize;
@@ -1087,6 +1096,7 @@ impl RunConfig {
         let _ = writeln!(o, "reap_timeout_s = {}", orc.reap_timeout_s);
         let _ = writeln!(o, "heartbeat_period_ms = {}", orc.heartbeat_period_ms);
         let _ = writeln!(o, "heartbeat_expiry_ms = {}", orc.heartbeat_expiry_ms);
+        let _ = writeln!(o, "batch_ops = {}", orc.batch_ops);
         let f = &self.fault;
         let _ = writeln!(o, "[fault]");
         let _ = writeln!(o, "max_respawns = {}", f.max_respawns);
@@ -1344,12 +1354,13 @@ mod tests {
         assert_eq!(base.orchestrator.reap_timeout_s, 10.0);
         assert_eq!(base.orchestrator.heartbeat_period_ms, 1000);
         assert_eq!(base.orchestrator.heartbeat_expiry_ms, 10_000);
+        assert!(base.orchestrator.batch_ops, "batched exchange is the default");
         let doc = Toml::parse(
             "[rl]\nbackend = \"burgers\"\n\
              [orchestrator]\ntransport = \"tcp\"\nworkers = \"processes\"\n\
              env_procs = 2\nbind = \"127.0.0.1:7700\"\nconnect_retries = 5\n\
              poll_timeout_s = 30\nhello_timeout_s = 12.5\nreap_timeout_s = 3\n\
-             heartbeat_period_ms = 200\nheartbeat_expiry_ms = 1500\n",
+             heartbeat_period_ms = 200\nheartbeat_expiry_ms = 1500\nbatch_ops = false\n",
         )
         .unwrap();
         let c = RunConfig::from_toml(&doc).unwrap();
@@ -1363,6 +1374,7 @@ mod tests {
         assert_eq!(c.orchestrator.reap_timeout_s, 3.0);
         assert_eq!(c.orchestrator.heartbeat_period_ms, 200);
         assert_eq!(c.orchestrator.heartbeat_expiry_ms, 1500);
+        assert!(!c.orchestrator.batch_ops);
     }
 
     #[test]

@@ -127,6 +127,14 @@ struct Begin {
     rng: Rng,
 }
 
+/// Per-iteration begin message a batched block thread blocks on: the
+/// run's protocol plus every `(global env index, rng seed)` of the
+/// block, ascending by env index.
+struct BlockBegin {
+    proto: Protocol,
+    seeds: Vec<(usize, u64)>,
+}
+
 /// How the pool's environments are hosted (`orchestrator.workers`).
 enum Workers {
     /// Env threads inside the trainer process (the seed architecture;
@@ -159,6 +167,11 @@ struct ProcState {
     /// Workers whose budget is exhausted: their env block is dropped
     /// and every later wave completes short without them.
     dropped: Vec<bool>,
+    /// Per-worker heartbeat keys, interned once at pool construction:
+    /// the supervisor reads one per worker per check slice, so handing
+    /// it a pre-hashed handle keeps the liveness path allocation-free
+    /// (and exempt from batching — control keys never ride the waves).
+    hb_keys: Vec<Key>,
 }
 
 impl ProcState {
@@ -199,7 +212,7 @@ impl ProcState {
         let _ = self.children[w].wait();
         client.delete(&ctl_hello_key(w));
         client.delete(&ctl_begin_key(w));
-        client.delete(&ctl_hb_key(w));
+        client.delete(&self.hb_keys[w]);
         self.generation[w] += 1;
         let (start, count) = self.block(w);
         let addr = self.server.addr().to_string();
@@ -369,6 +382,7 @@ impl EnvPool {
                 generation: vec![0; n_procs],
                 respawns_used: vec![0; n_procs],
                 dropped: vec![false; n_procs],
+                hb_keys: (0..n_procs).map(|w| Key::new(&ctl_hb_key(w))).collect(),
             })
         } else {
             for i in 0..n_envs {
@@ -569,6 +583,31 @@ impl EnvPool {
             Workers::Processes(p) => p.plan.n_procs,
             Workers::Threads => 0,
         };
+        // Wave-coalesced action scatter (`orchestrator.batch_ops`,
+        // processes mode): sampled actions stage in `act_wave` during
+        // the flush and go out as ONE `put_many` per worker block —
+        // the trainer-side mirror of the workers' batched take.
+        // `block_of[env]` = owning worker (blocks are contiguous env
+        // ranges, and the flush walks envs ascending, so consecutive
+        // grouping is exact).  Threads mode keeps the per-key publish:
+        // there is no wire to coalesce and the allocation gate covers
+        // that path.
+        let batch_actions =
+            self.cfg.orchestrator.batch_ops && matches!(&self.workers, Workers::Processes(_));
+        let block_of: Vec<usize> = match &self.workers {
+            Workers::Processes(p) => {
+                let mut m = vec![0usize; n_envs];
+                for (w, &(start, count)) in p.plan.assignments.iter().enumerate() {
+                    for e in start..start + count {
+                        m[e] = w;
+                    }
+                }
+                m
+            }
+            Workers::Threads => Vec::new(),
+        };
+        let mut act_wave: Vec<(Key, Value)> = Vec::new();
+        let mut act_wave_envs: Vec<usize> = Vec::new();
         let mut monitor = HeartbeatMonitor::new(n_workers, hb_expiry, Instant::now());
         let mut last_check = Instant::now();
         let mut procs: Option<&mut ProcState> = match &mut self.workers {
@@ -646,6 +685,9 @@ impl EnvPool {
                     let ek = &env_keys[env];
                     let mean = &out.mean[k * self.n_agents..(k + 1) * self.n_agents];
                     let value = &out.value[k * self.n_agents..(k + 1) * self.n_agents];
+                    if batch_actions {
+                        act_wave_envs.push(env);
+                    }
                     publish_action(
                         &trainer,
                         &ek.action[t],
@@ -658,6 +700,7 @@ impl EnvPool {
                         out.log_std,
                         rng,
                         deterministic,
+                        if batch_actions { Some(&mut act_wave) } else { None },
                     );
                     // Subscribe the action's reward and the next state.
                     let rtag = free_reward_tags.pop().unwrap_or_else(|| {
@@ -673,6 +716,21 @@ impl EnvPool {
                     expect_state[env] = Some(t + 1);
                     tag_events[3 * env] = Event::State(env, t + 1);
                     sub.add(3 * env, &ek.state[t + 1]);
+                }
+                // Scatter the staged wave: one `put_many` per worker
+                // block, envs ascending within each frame.
+                if !act_wave.is_empty() {
+                    let mut group: Vec<(Key, Value)> = Vec::with_capacity(act_wave.len());
+                    let mut cur_w = block_of[act_wave_envs[0]];
+                    for (env, kv) in act_wave_envs.drain(..).zip(act_wave.drain(..)) {
+                        let w = block_of[env];
+                        if w != cur_w {
+                            trainer.put_many(std::mem::take(&mut group));
+                            cur_w = w;
+                        }
+                        group.push(kv);
+                    }
+                    trainer.put_many(group);
                 }
                 continue;
             }
@@ -702,7 +760,7 @@ impl EnvPool {
                                 // is invisible and must not trip respawns.
                                 continue;
                             }
-                            let hb = trainer.get(&ctl_hb_key(w)).and_then(|v| v.as_scalar());
+                            let hb = trainer.get(&p.hb_keys[w]).and_then(|v| v.as_scalar());
                             let hb_expired = monitor.observe(w, hb, now);
                             let child_dead = matches!(p.children[w].try_wait(), Ok(Some(_)));
                             if !hb_expired && !child_dead {
@@ -1039,6 +1097,7 @@ impl EnvPool {
                     out.log_std,
                     rng,
                     deterministic,
+                    None,
                 );
             }
 
@@ -1253,6 +1312,12 @@ enum Event {
 /// lock-step collectors.  The action buffer comes from the recycled pool;
 /// the store, the episode record and the pool share one allocation.
 #[allow(clippy::too_many_arguments)]
+/// With `batch: Some(wave)` the action is staged instead of published —
+/// the caller scatters the whole wave as one `put_many` per worker
+/// block.  Sampling, log-prob and step recording are identical either
+/// way, so the RNG stream (and hence every episode) does not depend on
+/// which path ran.
+#[allow(clippy::too_many_arguments)]
 fn publish_action(
     trainer: &Client,
     action_key: &Key,
@@ -1265,6 +1330,7 @@ fn publish_action(
     log_std: f32,
     rng: &mut Rng,
     deterministic: bool,
+    batch: Option<&mut Vec<(Key, Value)>>,
 ) {
     let mut act = act_pool.take_free(mean.len());
     {
@@ -1276,7 +1342,13 @@ fn publish_action(
         }
     }
     let logp = gaussian::log_prob(&act, mean, log_std);
-    trainer.put_tensor_shared(action_key, act_shape.clone(), act.clone());
+    match batch {
+        Some(wave) => wave.push((
+            action_key.clone(),
+            Value::tensor_shared(act_shape.clone(), act.clone()),
+        )),
+        None => trainer.put_tensor_shared(action_key, act_shape.clone(), act.clone()),
+    }
     episode.steps.push(StepRecord {
         obs,
         act: act.clone(),
@@ -1358,6 +1430,195 @@ fn worker_loop(
             client.put_bytes(&keys.fail, msg.into_bytes());
         }
     }
+}
+
+/// Per-env working set of a batched block thread — exactly
+/// [`worker_loop`]'s locals, one per hosted env.
+struct BlockSlot {
+    idx: usize,
+    env: Box<dyn CfdEnv>,
+    obs_pool: TensorPool,
+    act_buf: Vec<f64>,
+    obs_shape: Arc<[usize]>,
+}
+
+/// How long one batched action take blocks before re-checking the
+/// shared abort flag and the step deadline.
+const BLOCK_TAKE_SLICE: Duration = Duration::from_millis(250);
+
+/// Lockstep replacement for the per-env [`worker_loop`] threads
+/// (`orchestrator.batch_ops`): one thread hosts the whole block and a
+/// failure lands on the *offending* env's fail key so supervision
+/// attributes it correctly.
+fn block_worker_loop(
+    envs: Vec<(usize, Box<dyn CfdEnv>)>,
+    client: Client,
+    rx: mpsc::Receiver<BlockBegin>,
+    allocs: Arc<AtomicU64>,
+    poll_timeout: Duration,
+) {
+    let mut slots: Vec<BlockSlot> = envs
+        .into_iter()
+        .map(|(idx, env)| BlockSlot {
+            idx,
+            obs_pool: TensorPool::new(allocs.clone(), env.n_actions() + 2),
+            act_buf: Vec::with_capacity(env.n_agents()),
+            obs_shape: Arc::from(vec![env.obs_len()]),
+            env,
+        })
+        .collect();
+    while let Ok(BlockBegin { proto, seeds }) = rx.recv() {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_block_episode(&mut slots, &client, &proto, &seeds, poll_timeout)
+        }));
+        let failure = match outcome {
+            Ok(Ok(())) => None,
+            Ok(Err((idx, e))) => Some((idx, format!("{e:#}"))),
+            Err(payload) => {
+                // A panic unwound out of the lockstep loop; attribute it
+                // to the block's first env (the collector only needs
+                // *an* owner inside the block to fail the iteration).
+                let idx = slots.first().map(|s| s.idx).unwrap_or(0);
+                Some((idx, format!("panic: {}", panic_message(&payload))))
+            }
+        };
+        if let Some((idx, msg)) = failure {
+            if let Some(slot) = slots.iter().find(|s| s.idx == idx) {
+                let keys = proto.env_keys(idx, slot.env.n_actions());
+                client.put_bytes(&keys.fail, msg.into_bytes());
+            }
+        }
+    }
+}
+
+/// One wave-coalesced episode batch over a worker's env block: the
+/// wire pattern collapses to ONE `put_many` frame per block per step
+/// direction (all initial states; then, per step, one batched action
+/// take and one batched rewards/dones/next-states publish) instead of
+/// ~4 per-key frames per env per step.  Every per-env data stream —
+/// reset draw, action application, reward, observation — is exactly
+/// [`run_episode`]'s, so episodes are bit-identical to the per-key
+/// path; only the grouping on the wire changes.  Envs leave the
+/// lockstep set as they terminate, so mixed-horizon blocks work.
+fn run_block_episode(
+    slots: &mut [BlockSlot],
+    client: &Client,
+    proto: &Protocol,
+    seeds: &[(usize, u64)],
+    poll_timeout: Duration,
+) -> std::result::Result<(), (usize, anyhow::Error)> {
+    struct Live {
+        slot: usize,
+        keys: EnvKeys,
+        rng: Rng,
+        n_actions: usize,
+    }
+    let mut lives: Vec<Live> = Vec::with_capacity(seeds.len());
+    for &(env_idx, seed) in seeds {
+        let slot = slots
+            .iter()
+            .position(|s| s.idx == env_idx)
+            .ok_or_else(|| (env_idx, anyhow!("begin env {env_idx} not hosted by this block")))?;
+        let n_actions = slots[slot].env.n_actions();
+        lives.push(Live {
+            slot,
+            keys: proto.env_keys(env_idx, n_actions),
+            rng: Rng::new(seed),
+            n_actions,
+        });
+    }
+    // Wave 0: reset every env, publish ALL initial states as one frame.
+    let mut batch: Vec<(Key, Value)> = Vec::with_capacity(lives.len() * 3);
+    for l in &mut lives {
+        let s = &mut slots[l.slot];
+        s.env.reset_in_place(&mut l.rng, false);
+        let mut buf = s.obs_pool.take_free(s.env.obs_len());
+        s.env
+            .observe_into(Arc::get_mut(&mut buf).expect("pool hands out unique buffers"));
+        batch.push((
+            l.keys.state[0].clone(),
+            Value::tensor_shared(s.obs_shape.clone(), buf.clone()),
+        ));
+        s.obs_pool.put_back(buf);
+    }
+    client.put_many(std::mem::take(&mut batch));
+    let mut t = 0usize;
+    let mut actions: Vec<Option<Value>> = Vec::new();
+    while !lives.is_empty() {
+        // One batched take per step: every take consumes the action key
+        // (seed semantics) and the shared abort flag is polled
+        // non-consumingly on empty rounds, never taken — a take would
+        // eat it for the other workers.
+        actions.clear();
+        actions.resize(lives.len(), None);
+        let mut missing = lives.len();
+        let deadline = Instant::now() + poll_timeout;
+        while missing > 0 {
+            let mut pending_idx: Vec<usize> = Vec::with_capacity(missing);
+            let mut want: Vec<&Key> = Vec::with_capacity(missing);
+            for (i, l) in lives.iter().enumerate() {
+                if actions[i].is_none() {
+                    pending_idx.push(i);
+                    want.push(&l.keys.action[t]);
+                }
+            }
+            let hits = client.take_many(&want, BLOCK_TAKE_SLICE);
+            if hits.is_empty() {
+                let owner = slots[lives[0].slot].idx;
+                if client.poll(&lives[0].keys.abort, Duration::ZERO).is_some() {
+                    return Err((owner, anyhow!("env {owner}: iteration aborted at step {t}")));
+                }
+                if Instant::now() >= deadline {
+                    return Err((owner, anyhow!("env {owner}: no action at step {t}")));
+                }
+                continue;
+            }
+            for (wi, v) in hits {
+                actions[pending_idx[wi]] = Some(v);
+                missing -= 1;
+            }
+        }
+        // Step every env in ascending env order, publish the block's
+        // rewards / done flags / next states as one frame.
+        let mut finished: Vec<bool> = vec![false; lives.len()];
+        for (i, l) in lives.iter_mut().enumerate() {
+            let s = &mut slots[l.slot];
+            let act = actions[i].take().expect("collected above");
+            let data = act
+                .as_tensor()
+                .ok_or_else(|| (s.idx, anyhow!("env {}: action must be a tensor", s.idx)))?
+                .1;
+            s.act_buf.clear();
+            s.act_buf.extend(data.iter().map(|&a| a as f64));
+            let out = s.env.step(&s.act_buf);
+            batch.push((l.keys.rew[t].clone(), Value::Scalar(out.reward)));
+            if out.done {
+                batch.push((l.keys.done.clone(), Value::Flag(true)));
+                finished[i] = true;
+            } else {
+                let mut buf = s.obs_pool.take_free(s.env.obs_len());
+                s.env
+                    .observe_into(Arc::get_mut(&mut buf).expect("pool hands out unique buffers"));
+                batch.push((
+                    l.keys.state[t + 1].clone(),
+                    Value::tensor_shared(s.obs_shape.clone(), buf.clone()),
+                ));
+                s.obs_pool.put_back(buf);
+                if t + 1 >= l.n_actions {
+                    finished[i] = true;
+                }
+            }
+        }
+        client.put_many(std::mem::take(&mut batch));
+        let mut i = 0;
+        lives.retain(|_| {
+            let f = finished[i];
+            i += 1;
+            !f
+        });
+        t += 1;
+    }
+    Ok(())
 }
 
 /// Resolve the binary to spawn as `relexi env-worker`: the
@@ -1473,15 +1734,23 @@ fn wait_one_hello(
 /// the stop flag or a dead transport).
 pub struct WorkerHost {
     txs: Vec<mpsc::Sender<Begin>>,
+    /// Batched block mode (`orchestrator.batch_ops`): one lockstep
+    /// thread runs the whole env block and exchanges one frame per
+    /// block per step direction instead of ~4 per env per step.
+    block_tx: Option<mpsc::Sender<BlockBegin>>,
     handles: Vec<JoinHandle<()>>,
     env_start: usize,
+    env_count: usize,
 }
 
 impl WorkerHost {
     /// Build the block's envs (scenario variants resolved by *global*
     /// env index, so the split changes nothing) and spawn their worker
     /// threads on `client` — normally a remote client dialing the
-    /// trainer's exchange.
+    /// trainer's exchange.  With `orchestrator.batch_ops` (the
+    /// default), the block runs as ONE lockstep thread whose wire
+    /// pattern is wave-coalesced ([`run_block_episode`]); per-env
+    /// episode streams are bit-identical either way.
     pub fn spawn(
         cfg: &RunConfig,
         client: &Client,
@@ -1498,6 +1767,28 @@ impl WorkerHost {
         let backend = backend_from_config(cfg, None)?;
         let allocs = Arc::new(AtomicU64::new(0));
         let wl_timeout = poll_timeout(cfg);
+        if cfg.orchestrator.batch_ops {
+            let mut envs = Vec::with_capacity(env_count);
+            for i in env_start..env_start + env_count {
+                let rv = cfg.variant_for(i);
+                let env = backend
+                    .make_env(&rv)
+                    .with_context(|| format!("env {i} (variant {})", rv.name))?;
+                envs.push((i, env));
+            }
+            let (tx, rx) = mpsc::channel::<BlockBegin>();
+            let c = client.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("env-block-{env_start}"))
+                .spawn(move || block_worker_loop(envs, c, rx, allocs, wl_timeout))?;
+            return Ok(WorkerHost {
+                txs: Vec::new(),
+                block_tx: Some(tx),
+                handles: vec![handle],
+                env_start,
+                env_count,
+            });
+        }
         let mut txs = Vec::with_capacity(env_count);
         let mut handles = Vec::with_capacity(env_count);
         for i in env_start..env_start + env_count {
@@ -1516,14 +1807,16 @@ impl WorkerHost {
         }
         Ok(WorkerHost {
             txs,
+            block_tx: None,
             handles,
             env_start,
+            env_count,
         })
     }
 
     /// Envs hosted by this block.
     pub fn env_count(&self) -> usize {
-        self.txs.len()
+        self.env_count
     }
 
     /// Kick one iteration from a decoded begin message: `envs` =
@@ -1532,23 +1825,31 @@ impl WorkerHost {
     /// threads mode would have split off locally.
     pub fn begin(&self, run_tag: &str, envs: &[(usize, u64)]) -> Result<()> {
         anyhow::ensure!(
-            envs.len() == self.txs.len(),
+            envs.len() == self.env_count,
             "begin message covers {} envs, host holds {}",
             envs.len(),
-            self.txs.len()
+            self.env_count
         );
         let proto = Protocol::new(run_tag);
+        for &(env, _) in envs {
+            anyhow::ensure!(
+                env >= self.env_start && env < self.env_start + self.env_count,
+                "begin message env {env} outside block {}..{}",
+                self.env_start,
+                self.env_start + self.env_count
+            );
+        }
+        if let Some(tx) = &self.block_tx {
+            // Ascending env order keeps the lockstep schedule (and so
+            // every per-env RNG draw) independent of message order.
+            let mut seeds = envs.to_vec();
+            seeds.sort_unstable_by_key(|&(e, _)| e);
+            tx.send(BlockBegin { proto, seeds })
+                .map_err(|_| anyhow!("block thread has exited"))?;
+            return Ok(());
+        }
         for &(env, seed) in envs {
-            let slot = env
-                .checked_sub(self.env_start)
-                .filter(|&s| s < self.txs.len())
-                .ok_or_else(|| {
-                    anyhow!(
-                        "begin message env {env} outside block {}..{}",
-                        self.env_start,
-                        self.env_start + self.txs.len()
-                    )
-                })?;
+            let slot = env - self.env_start;
             self.txs[slot]
                 .send(Begin {
                     proto: proto.clone(),
@@ -1563,6 +1864,7 @@ impl WorkerHost {
 impl Drop for WorkerHost {
     fn drop(&mut self) {
         self.txs.clear();
+        self.block_tx = None;
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

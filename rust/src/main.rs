@@ -356,12 +356,19 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
             .name(format!("hb-w{worker_id}"))
             .spawn(move || {
                 let mut n = 0u64;
+                // The key string is interned once and each beat encodes
+                // into this persistent scratch: zero allocations per
+                // beat, and a ctl-prefixed key the exchange exempts
+                // from data-frame accounting — heartbeats ride outside
+                // the batched waves, so liveness latency is unchanged
+                // by `batch_ops`.
+                let mut scratch: Vec<u8> = Vec::with_capacity(64);
                 while !stop.load(Ordering::Relaxed) {
                     if !stalled.load(Ordering::Relaxed) {
                         n += 1;
                         // A failed put means the trainer is going away;
                         // the control loop notices on its own.
-                        let _ = t.put(&key, Value::Scalar(n as f64));
+                        let _ = t.put_interned(&mut scratch, &key, Value::Scalar(n as f64));
                     }
                     std::thread::sleep(period);
                 }

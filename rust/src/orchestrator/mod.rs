@@ -272,6 +272,43 @@ impl Client {
             ClientBackend::Remote(t) => transported(t.kind(), t.delete(key.name())),
         }
     }
+
+    /// Batched put: every item lands atomically-per-key in one logical
+    /// op — one grouped-by-shard store pass in process, ONE wire frame
+    /// per worker block on remote transports (the PR-9 coalescing
+    /// unit).  Interned [`Key`] handles keep the inproc path free of
+    /// per-key string allocation.
+    pub fn put_many(&self, items: Vec<(Key, Value)>) {
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.put_many(items),
+            ClientBackend::Remote(t) => {
+                let wire: Vec<(String, Value)> = items
+                    .into_iter()
+                    .map(|(k, v)| (k.name().to_string(), v))
+                    .collect();
+                transported(t.kind(), t.put_many(wire));
+            }
+        }
+    }
+
+    /// Blocking batched take: wait until **any** of `keys` holds a
+    /// value, then atomically consume **all** present ones, returned as
+    /// `(index, value)` in ascending index order (empty = timeout).
+    /// One wire frame per call on remote transports; exactly-once per
+    /// key on every backend.
+    pub fn take_many<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Vec<(usize, Value)> {
+        match &self.backend {
+            ClientBackend::Inproc(store) => store.take_many_wait(keys, timeout),
+            ClientBackend::Remote(t) => {
+                let names: Vec<&str> = keys.iter().map(|k| k.name()).collect();
+                transported(t.kind(), t.take_many(&names, timeout))
+            }
+        }
+    }
 }
 
 /// The transport-spanning face of [`store::Subscription`], returned by
@@ -308,6 +345,16 @@ impl ClientSub {
         match &mut self.inner {
             ClientSubInner::Inproc(s) => s.wait_take(timeout),
             ClientSubInner::Remote(kind, s) => transported(kind, s.wait_take(timeout)),
+        }
+    }
+
+    /// Batched [`ClientSub::wait_take`]: block for the first delivery,
+    /// then drain up to `max - 1` more without blocking (one wire frame
+    /// per call on remote transports).  Empty vec = timeout.
+    pub fn wait_take_many(&mut self, timeout: Duration, max: usize) -> Vec<(usize, Value)> {
+        match &mut self.inner {
+            ClientSubInner::Inproc(s) => s.wait_take_many(timeout, max),
+            ClientSubInner::Remote(kind, s) => transported(kind, s.wait_take_many(timeout, max)),
         }
     }
 

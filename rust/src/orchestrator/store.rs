@@ -236,6 +236,18 @@ pub struct StoreStats {
     /// O(E), where the per-event subscription rebuild it replaced cost
     /// O(E) registry ops per *event* (O(E²) per wave).
     pub sub_ops: AtomicU64,
+    /// Data-plane request frames decoded by the exchange server against
+    /// this store.  Control-plane traffic (`__relexi:ctl:*` keys —
+    /// heartbeats, hello/begin/stop) and connection management
+    /// (Bye/ShmOpen/Clear) are exempt, so this is the PR-9 acceptance
+    /// counter: a batched rollout wave over `W` worker blocks and `T`
+    /// steps must advance it by O(W·T), where the per-key wire pattern
+    /// costs O(E·T).  Stays 0 in inproc/threads mode (no frames exist).
+    pub frames: AtomicU64,
+    /// Keys moved through batched multi-key ops (`put_many` /
+    /// `take_many` / `wait_take_many`), on any backend.  0 means the
+    /// per-key path served every op (the `batch_ops = off` A/B leg).
+    pub batched_keys: AtomicU64,
 }
 
 /// Snapshot of the counters.
@@ -249,6 +261,8 @@ pub struct StatsSnapshot {
     pub bytes_out: u64,
     pub waiters_created: u64,
     pub sub_ops: u64,
+    pub frames: u64,
+    pub batched_keys: u64,
 }
 
 /// A parked multi-key subscriber: `put` pushes the hit index into the
@@ -442,6 +456,122 @@ impl ShardedStore {
         if self.wake == WakeMode::SeqLock {
             drop(inner);
             self.multi.bump();
+        }
+    }
+
+    /// Batched [`ShardedStore::put`]: hash every key outside any lock,
+    /// sort by shard, and take each shard's lock exactly **once** for
+    /// its whole group (vs once per key for a put loop).  Per-key
+    /// semantics are identical — same waiter delivery, same single-key
+    /// condvar wake, same seq-lock bump — so batched and per-key paths
+    /// are observably equivalent except for lock traffic.
+    pub fn put_many<K: KeyLike>(&self, items: Vec<(K, Value)>) {
+        if items.is_empty() {
+            return;
+        }
+        self.stats.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
+        self.stats
+            .batched_keys
+            .fetch_add(items.len() as u64, Ordering::Relaxed);
+        let mut staged: Vec<(usize, u64, Arc<str>, Value)> = items
+            .into_iter()
+            .map(|(k, v)| {
+                let h = k.hash64();
+                (self.shard_index(h), h, k.shared_name(), v)
+            })
+            .collect();
+        staged.sort_by_key(|e| e.0);
+        let mut it = staged.into_iter().peekable();
+        while let Some(si) = it.peek().map(|e| e.0) {
+            let shard = &self.shards[si];
+            let mut inner = shard.inner.lock().unwrap();
+            while let Some((_, h, name, value)) = it.next_if(|e| e.0 == si) {
+                self.stats
+                    .bytes_in
+                    .fetch_add(value.size_bytes() as u64, Ordering::Relaxed);
+                inner.map.insert(name, value);
+                if let Some(ws) = inner.waiters.get(&h) {
+                    for (w, idx) in ws {
+                        w.inbox.lock().unwrap().push_back(*idx);
+                        w.cv.notify_one();
+                    }
+                }
+            }
+            shard.cv.notify_all();
+        }
+        if self.wake == WakeMode::SeqLock {
+            self.multi.bump();
+        }
+    }
+
+    /// Non-blocking batched take: atomically consume every present key
+    /// of `keys` (one shard lock per group, like
+    /// [`ShardedStore::put_many`]) and return `(index, value)` pairs in
+    /// ascending index order.  Exactly-once holds per key: removal
+    /// happens under the key's shard lock, so racing batched or
+    /// single-key takers split the stream without loss or duplication.
+    pub fn take_many<K: KeyLike + ?Sized>(&self, keys: &[&K]) -> Vec<(usize, Value)> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        self.stats.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        self.stats
+            .batched_keys
+            .fetch_add(keys.len() as u64, Ordering::Relaxed);
+        let mut order: Vec<(usize, usize)> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, k)| (self.shard_index(k.hash64()), i))
+            .collect();
+        order.sort_unstable();
+        let mut out = Vec::new();
+        let mut p = 0;
+        while p < order.len() {
+            let si = order[p].0;
+            let mut inner = self.shards[si].inner.lock().unwrap();
+            while p < order.len() && order[p].0 == si {
+                let i = order[p].1;
+                if let Some(v) = inner.map.remove(keys[i].name()) {
+                    self.count_hit(&v);
+                    out.push((i, v));
+                }
+                p += 1;
+            }
+        }
+        out.sort_unstable_by_key(|e| e.0);
+        out
+    }
+
+    /// Blocking batched take: wait until **any** of `keys` is present,
+    /// then atomically consume **all** present ones (the batched
+    /// worker's one-wait-per-step primitive).  Returns an empty vec on
+    /// timeout.  A waiter that is woken but finds its values stolen by
+    /// a racing taker simply re-parks — only the grouped
+    /// [`ShardedStore::take_many`] pass consumes, so exactly-once
+    /// transfers from the store unchanged.
+    pub fn take_many_wait<K: KeyLike + ?Sized>(
+        &self,
+        keys: &[&K],
+        timeout: Duration,
+    ) -> Vec<(usize, Value)> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let got = self.take_many(keys);
+            if !got.is_empty() {
+                return got;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            // Park non-consumingly until any key is put; the registration
+            // scan inside wait_any re-checks presence under each shard
+            // lock, so a put landing between the take above and this
+            // wait is observed, never lost.
+            let _ = self.wait_any(keys, deadline - now);
         }
     }
 
@@ -791,9 +921,17 @@ impl ShardedStore {
             bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
             waiters_created: self.stats.waiters_created.load(Ordering::Relaxed),
             sub_ops: self.stats.sub_ops.load(Ordering::Relaxed),
+            frames: self.stats.frames.load(Ordering::Relaxed),
+            batched_keys: self.stats.batched_keys.load(Ordering::Relaxed),
         }
     }
 
+    /// Count one data-plane request frame (called by the exchange
+    /// server per decoded request; see [`StoreStats::frames`] for the
+    /// control-plane exemptions the caller applies).
+    pub(crate) fn note_frame(&self) {
+        self.stats.frames.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// A persistent, incrementally-updated multi-key subscription.
@@ -940,6 +1078,46 @@ impl Subscription {
                 return Some((tag, v));
             }
         }
+    }
+
+    /// Batched [`Subscription::wait_take`]: block until the first
+    /// delivery, then drain up to `max - 1` further queued deliveries
+    /// without blocking again.  Every returned `(tag, value)` passes
+    /// the same current-key honor + authoritative store re-check as
+    /// `wait_take`, so exactly-once consumption holds under racing
+    /// takers, retargeted tags and `delete`/`clear`; stale deliveries
+    /// are skipped, never returned.  Empty vec = timeout.
+    pub fn wait_take_many(&mut self, timeout: Duration, max: usize) -> Vec<(usize, Value)> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let Some(first) = self.wait_take(timeout) else {
+            return out;
+        };
+        out.push(first);
+        while out.len() < max {
+            let Some(tag) = self.waiter.inbox.lock().unwrap().pop_front() else {
+                break;
+            };
+            let Some(Some((si, _h, name))) = self.slots.get(tag) else {
+                continue;
+            };
+            let hit = {
+                let mut inner = self.store.shards[*si].inner.lock().unwrap();
+                inner.map.remove(&**name)
+            };
+            if let Some(v) = hit {
+                self.store.stats.gets.fetch_add(1, Ordering::Relaxed);
+                self.store.count_hit(&v);
+                out.push((tag, v));
+            }
+        }
+        self.store
+            .stats
+            .batched_keys
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        out
     }
 }
 

@@ -93,6 +93,18 @@ pub enum Request {
     /// has created and sized the segment file at `path`; the server
     /// maps it (and the client then unlinks it).
     ShmOpen { path: String, ring_bytes: u64 },
+    /// Batched put: all items land in one grouped-by-shard store pass
+    /// (one frame per worker block per step, the PR-9 coalescing unit).
+    PutMany { items: Vec<(String, Value)> },
+    /// Blocking batched take: wait until **any** of `keys` is present,
+    /// then atomically consume **all** present ones.  The response
+    /// carries `(index into keys, value)` pairs; an empty list means
+    /// the timeout elapsed with nothing present.
+    TakeMany { keys: Vec<String>, timeout_ms: u64 },
+    /// Batched wait on this connection's server-side [`Subscription`]:
+    /// block for the first delivery, then drain up to `max` queued
+    /// deliveries without blocking again.
+    SubWaitMany { timeout_ms: u64, max: u32 },
 }
 
 /// A server response frame.
@@ -104,6 +116,9 @@ pub enum Response {
     Maybe(Option<Value>),
     /// `Option<(index-or-tag, Value)>` results (wait_any/sub_wait).
     Hit(Option<(u64, Value)>),
+    /// `(index-or-tag, Value)` lists (take_many/sub_wait_many); empty
+    /// means the timeout elapsed with nothing to deliver.
+    Many(Vec<(u64, Value)>),
     Error(String),
 }
 
@@ -167,6 +182,27 @@ impl Request {
                 w_str(out, path);
                 w_u64(out, *ring_bytes);
             }
+            Request::PutMany { items } => {
+                out.push(14);
+                w_u32(out, items.len() as u32);
+                for (k, v) in items {
+                    w_str(out, k);
+                    v.encode_into(out);
+                }
+            }
+            Request::TakeMany { keys, timeout_ms } => {
+                out.push(15);
+                w_u32(out, keys.len() as u32);
+                for k in keys {
+                    w_str(out, k);
+                }
+                w_u64(out, *timeout_ms);
+            }
+            Request::SubWaitMany { timeout_ms, max } => {
+                out.push(16);
+                w_u64(out, *timeout_ms);
+                w_u32(out, *max);
+            }
         }
     }
 
@@ -215,6 +251,33 @@ impl Request {
                 path: r_str(buf, &mut pos)?,
                 ring_bytes: r_u64(buf, &mut pos)?,
             },
+            14 => {
+                let n = r_u32(buf, &mut pos)? as usize;
+                ensure!(n <= 1 << 16, "put_many claims {n} items");
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = r_str(buf, &mut pos)?;
+                    let v = Value::decode_from(buf, &mut pos)?;
+                    items.push((k, v));
+                }
+                Request::PutMany { items }
+            }
+            15 => {
+                let n = r_u32(buf, &mut pos)? as usize;
+                ensure!(n <= 1 << 16, "take_many claims {n} keys");
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(r_str(buf, &mut pos)?);
+                }
+                Request::TakeMany {
+                    keys,
+                    timeout_ms: r_u64(buf, &mut pos)?,
+                }
+            }
+            16 => Request::SubWaitMany {
+                timeout_ms: r_u64(buf, &mut pos)?,
+                max: r_u32(buf, &mut pos)?,
+            },
             other => bail!("unknown request opcode {other}"),
         };
         ensure!(pos == buf.len(), "trailing bytes in request frame");
@@ -242,6 +305,14 @@ impl Response {
                 out.push(131);
                 out.push(h.is_some() as u8);
                 if let Some((idx, v)) = h {
+                    w_u64(out, *idx);
+                    v.encode_into(out);
+                }
+            }
+            Response::Many(hits) => {
+                out.push(132);
+                w_u32(out, hits.len() as u32);
+                for (idx, v) in hits {
                     w_u64(out, *idx);
                     v.encode_into(out);
                 }
@@ -280,6 +351,16 @@ impl Response {
                 } else {
                     Response::Hit(None)
                 }
+            }
+            132 => {
+                let n = r_u32(buf, &mut pos)? as usize;
+                ensure!(n <= 1 << 16, "many response claims {n} hits");
+                let mut hits = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let idx = r_u64(buf, &mut pos)?;
+                    hits.push((idx, Value::decode_from(buf, &mut pos)?));
+                }
+                Response::Many(hits)
             }
             255 => Response::Error(r_str(buf, &mut pos)?),
             other => bail!("unknown response opcode {other}"),
@@ -331,6 +412,15 @@ fn try_extract(accum: &mut Vec<u8>, out: &mut Vec<u8>) -> Result<bool> {
 trait Conn: Send {
     /// Write one frame (length prefix + payload).
     fn send(&mut self, payload: &[u8]) -> Result<()>;
+    /// Burst-write several frames back-to-back — one vectored-style
+    /// buffer assembly and one syscall on tcp, one ring pass on shm.
+    /// The default loops over `send`.
+    fn send_many(&mut self, payloads: &[&[u8]]) -> Result<()> {
+        for p in payloads {
+            self.send(p)?;
+        }
+        Ok(())
+    }
     /// Receive one frame into `out`.  `Ok(true)` = frame delivered,
     /// `Ok(false)` = timed out, `Err` = disconnected or protocol error.
     fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool>;
@@ -340,6 +430,10 @@ struct TcpConn {
     stream: TcpStream,
     accum: Vec<u8>,
     scratch: Box<[u8; 64 * 1024]>,
+    /// Reusable send-side assembly buffer: prefix + payload (or a whole
+    /// frame burst) leave in ONE `write_all` instead of one syscall per
+    /// piece.
+    wbuf: Vec<u8>,
 }
 
 impl TcpConn {
@@ -349,6 +443,7 @@ impl TcpConn {
             stream,
             accum: Vec::new(),
             scratch: Box::new([0u8; 64 * 1024]),
+            wbuf: Vec::new(),
         })
     }
 
@@ -363,10 +458,21 @@ impl TcpConn {
 impl Conn for TcpConn {
     fn send(&mut self, payload: &[u8]) -> Result<()> {
         ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
-        self.stream
-            .write_all(&(payload.len() as u32).to_le_bytes())
-            .context("tcp write")?;
-        self.stream.write_all(payload).context("tcp write")?;
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.wbuf.extend_from_slice(payload);
+        self.stream.write_all(&self.wbuf).context("tcp write")?;
+        Ok(())
+    }
+
+    fn send_many(&mut self, payloads: &[&[u8]]) -> Result<()> {
+        self.wbuf.clear();
+        for p in payloads {
+            ensure!(p.len() <= MAX_FRAME, "frame too large: {}", p.len());
+            self.wbuf.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            self.wbuf.extend_from_slice(p);
+        }
+        self.stream.write_all(&self.wbuf).context("tcp write")?;
         Ok(())
     }
 
@@ -688,15 +794,11 @@ impl ShmConn {
             Err(e) => bail!("shm bootstrap socket error: {e}"),
         }
     }
-}
 
-#[cfg(unix)]
-impl Conn for ShmConn {
-    fn send(&mut self, payload: &[u8]) -> Result<()> {
-        ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
-        self.tx_buf.clear();
-        self.tx_buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        self.tx_buf.extend_from_slice(payload);
+    /// Stream the assembled `tx_buf` into the ring (chunked to whatever
+    /// space the consumer frees), with stall detection + liveness
+    /// probing.
+    fn drain_tx(&mut self) -> Result<()> {
         let mut buf = &self.tx_buf[..];
         let mut bo = Backoff::new();
         let deadline = Instant::now() + SHM_STALL_LIMIT;
@@ -719,6 +821,30 @@ impl Conn for ShmConn {
             }
         }
         Ok(())
+    }
+}
+
+#[cfg(unix)]
+impl Conn for ShmConn {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        ensure!(payload.len() <= MAX_FRAME, "frame too large: {}", payload.len());
+        self.tx_buf.clear();
+        self.tx_buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.tx_buf.extend_from_slice(payload);
+        self.drain_tx()
+    }
+
+    fn send_many(&mut self, payloads: &[&[u8]]) -> Result<()> {
+        // Multi-frame burst: all frames enter the ring back-to-back in
+        // one streaming pass (the consumer sees them contiguously, no
+        // per-frame wakeup gaps).
+        self.tx_buf.clear();
+        for p in payloads {
+            ensure!(p.len() <= MAX_FRAME, "frame too large: {}", p.len());
+            self.tx_buf.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            self.tx_buf.extend_from_slice(p);
+        }
+        self.drain_tx()
     }
 
     fn recv(&mut self, out: &mut Vec<u8>, timeout: Duration) -> Result<bool> {
@@ -776,6 +902,44 @@ pub trait Transport: Send + Sync {
     fn wait(&self, key: &str, timeout: Duration, take: bool) -> Result<Option<Value>>;
     fn wait_any(&self, keys: &[&str], timeout: Duration, take: bool)
         -> Result<Option<(usize, Value)>>;
+    /// Batched put: every item lands atomically-per-key in one logical
+    /// op.  Remote transports send ONE frame (chunked only if the
+    /// encoding would exceed [`MAX_FRAME`]); the default is the per-key
+    /// loop, so per-key and batched paths stay observably equivalent.
+    fn put_many(&self, items: Vec<(String, Value)>) -> Result<()> {
+        for (k, v) in items {
+            self.put(&k, v)?;
+        }
+        Ok(())
+    }
+    /// Blocking batched take (see [`ShardedStore::take_many_wait`]):
+    /// wait until any key is present, consume all present ones, return
+    /// `(index, value)` pairs in ascending index order (empty =
+    /// timeout).  One frame on remote transports.
+    fn take_many(&self, keys: &[&str], timeout: Duration) -> Result<Vec<(usize, Value)>> {
+        // Default: one blocking wait for the first hit, then a
+        // non-blocking sweep of the rest — same observable result.
+        let Some(hit) = self.wait_any(keys, timeout, true)? else {
+            return Ok(Vec::new());
+        };
+        let mut out = vec![hit];
+        for (i, k) in keys.iter().enumerate() {
+            if i != out[0].0 {
+                if let Some(v) = self.take(k)? {
+                    out.push((i, v));
+                }
+            }
+        }
+        out.sort_unstable_by_key(|e| e.0);
+        Ok(out)
+    }
+    /// `put` through a caller-held scratch buffer and pre-interned key
+    /// (the heartbeat fast path: zero allocations per beat on remote
+    /// transports).  The default ignores the scratch.
+    fn put_interned(&self, scratch: &mut Vec<u8>, key: &str, value: Value) -> Result<()> {
+        let _ = scratch;
+        self.put(key, value)
+    }
     /// A persistent tag-addressed subscription (see
     /// [`Subscription`]); remote transports pin one connection per
     /// subscription with a server-side `Subscription` behind it.
@@ -787,6 +951,16 @@ pub trait TransportSub: Send {
     fn add(&mut self, tag: usize, key: &str) -> Result<()>;
     fn remove(&mut self, tag: usize) -> Result<()>;
     fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>>;
+    /// Batched wait (see [`Subscription::wait_take_many`]): block for
+    /// the first delivery, then drain up to `max - 1` more without
+    /// blocking.  One frame per call on remote transports; the default
+    /// degrades to a single `wait_take`.
+    fn wait_take_many(&mut self, timeout: Duration, max: usize) -> Result<Vec<(usize, Value)>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        Ok(self.wait_take(timeout)?.into_iter().collect())
+    }
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -850,6 +1024,13 @@ impl Transport for InprocTransport {
             self.store.wait_any(keys, timeout)
         })
     }
+    fn put_many(&self, items: Vec<(String, Value)>) -> Result<()> {
+        self.store.put_many(items);
+        Ok(())
+    }
+    fn take_many(&self, keys: &[&str], timeout: Duration) -> Result<Vec<(usize, Value)>> {
+        Ok(self.store.take_many_wait(keys, timeout))
+    }
     fn subscribe(&self) -> Result<Box<dyn TransportSub>> {
         Ok(Box::new(InprocSub(Subscription::new(self.store.clone()))))
     }
@@ -868,6 +1049,9 @@ impl TransportSub for InprocSub {
     }
     fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>> {
         Ok(self.0.wait_take(timeout))
+    }
+    fn wait_take_many(&mut self, timeout: Duration, max: usize) -> Result<Vec<(usize, Value)>> {
+        Ok(self.0.wait_take_many(timeout, max))
     }
     fn len(&self) -> usize {
         self.0.len()
@@ -957,6 +1141,13 @@ pub struct RemoteTransport {
     connect_retries: u32,
     fault: TransportFault,
     pool: Mutex<Vec<Box<dyn Conn>>>,
+    /// The persistent per-worker data connection: quick (non-blocking)
+    /// ops and batched bursts ride one long-lived pipe instead of
+    /// checking a connection out of the pool per op.  `try_lock` only —
+    /// a contended quick op falls back to the pooled path rather than
+    /// serializing, and blocking ops (`wait`/`wait_any`/`take_many`)
+    /// never use it, so a server-side wait can't wedge the data plane.
+    data: Mutex<Option<Box<dyn Conn>>>,
 }
 
 impl RemoteTransport {
@@ -989,6 +1180,7 @@ impl RemoteTransport {
             connect_retries,
             fault,
             pool: Mutex::new(Vec::new()),
+            data: Mutex::new(None),
         });
         let c = t.dial()?;
         t.pool.lock().unwrap().push(c);
@@ -1062,9 +1254,39 @@ impl RemoteTransport {
     /// [`RetryPolicy`] backoff, so a restarting exchange is waited out
     /// instead of failed fast.
     fn rpc(&self, req: &Request, deadline: Duration) -> Result<Response> {
+        let drop_first = self.fault.on_frame();
+        self.rpc_pooled(req, deadline, drop_first)
+    }
+
+    /// [`Self::rpc`] on the persistent data connection (dialed lazily,
+    /// replaced on error).  Contention or a faulted pipe falls back to
+    /// the pooled path, so quick ops are never slower than the per-op
+    /// checkout pattern they replace.
+    fn rpc_quick(&self, req: &Request, deadline: Duration) -> Result<Response> {
+        let drop_first = self.fault.on_frame();
+        if !drop_first {
+            if let Ok(mut slot) = self.data.try_lock() {
+                if slot.is_none() {
+                    if let Ok(c) = self.dial() {
+                        *slot = Some(c);
+                    }
+                }
+                if let Some(conn) = slot.as_mut() {
+                    let mut frame = Vec::new();
+                    req.encode_into(&mut frame);
+                    match Self::rpc_on(conn, &frame, deadline) {
+                        Ok(resp) => return Ok(resp),
+                        Err(_) => *slot = None, // dead pipe: retry pooled below
+                    }
+                }
+            }
+        }
+        self.rpc_pooled(req, deadline, drop_first)
+    }
+
+    fn rpc_pooled(&self, req: &Request, deadline: Duration, mut drop_first: bool) -> Result<Response> {
         let mut frame = Vec::new();
         req.encode_into(&mut frame);
-        let mut drop_first = self.fault.on_frame();
         let mut last = None;
         for attempt in 0..2 {
             // First attempt reuses a pooled connection; the retry always
@@ -1104,6 +1326,72 @@ impl RemoteTransport {
         );
         Response::decode(&buf)
     }
+
+    /// Burst-send pre-encoded frames and collect their pipelined
+    /// responses in order (one vectored write on tcp, one ring pass on
+    /// shm).
+    fn burst_on(conn: &mut Box<dyn Conn>, frames: &[Vec<u8>], deadline: Duration) -> Result<Vec<Response>> {
+        let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+        conn.send_many(&refs)?;
+        let mut out = Vec::with_capacity(frames.len());
+        let mut buf = Vec::new();
+        for _ in frames {
+            ensure!(
+                conn.recv(&mut buf, deadline)?,
+                "exchange did not answer within {deadline:?}"
+            );
+            out.push(Response::decode(&buf)?);
+        }
+        Ok(out)
+    }
+
+    /// A burst with the same retry shape as [`Self::rpc_quick`]:
+    /// persistent data connection first, then the pooled
+    /// single-retry-on-fresh-connection path.  Only idempotent frames
+    /// (puts) may ride a burst — a whole-burst retry re-applies them
+    /// harmlessly.
+    fn burst(&self, frames: &[Vec<u8>]) -> Result<Vec<Response>> {
+        let mut drop_first = self.fault.on_frame();
+        if !drop_first {
+            if let Ok(mut slot) = self.data.try_lock() {
+                if slot.is_none() {
+                    if let Ok(c) = self.dial() {
+                        *slot = Some(c);
+                    }
+                }
+                if let Some(conn) = slot.as_mut() {
+                    match Self::burst_on(conn, frames, RPC_TIMEOUT) {
+                        Ok(r) => return Ok(r),
+                        Err(_) => *slot = None,
+                    }
+                }
+            }
+        }
+        let mut last = None;
+        for attempt in 0..2 {
+            let conn = if attempt == 0 { self.checkout() } else { self.dial() };
+            let mut conn = match conn {
+                Ok(c) => c,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            if drop_first {
+                drop_first = false;
+                last = Some(anyhow::anyhow!("injected frame drop (fault plan)"));
+                continue;
+            }
+            match Self::burst_on(&mut conn, frames, RPC_TIMEOUT) {
+                Ok(r) => {
+                    self.pool.lock().unwrap().push(conn);
+                    return Ok(r);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap().context(format!("{} exchange burst failed", self.kind)))
+    }
 }
 
 fn ms(timeout: Duration) -> u64 {
@@ -1142,25 +1430,33 @@ fn expect_hit(resp: Response) -> Result<Option<(usize, Value)>> {
     }
 }
 
+fn expect_many(resp: Response) -> Result<Vec<(usize, Value)>> {
+    match resp {
+        Response::Many(hits) => Ok(hits.into_iter().map(|(i, v)| (i as usize, v)).collect()),
+        Response::Error(msg) => bail!("exchange error: {msg}"),
+        other => bail!("unexpected exchange reply {other:?}"),
+    }
+}
+
 impl Transport for RemoteTransport {
     fn kind(&self) -> &'static str {
         self.kind
     }
     fn put(&self, key: &str, value: Value) -> Result<()> {
         self.fault.on_put();
-        expect_unit(self.rpc(&Request::Put { key: key.to_string(), value }, RPC_TIMEOUT)?)
+        expect_unit(self.rpc_quick(&Request::Put { key: key.to_string(), value }, RPC_TIMEOUT)?)
     }
     fn get(&self, key: &str) -> Result<Option<Value>> {
-        expect_maybe(self.rpc(&Request::Get { key: key.to_string() }, RPC_TIMEOUT)?)
+        expect_maybe(self.rpc_quick(&Request::Get { key: key.to_string() }, RPC_TIMEOUT)?)
     }
     fn take(&self, key: &str) -> Result<Option<Value>> {
-        expect_maybe(self.rpc(&Request::Take { key: key.to_string() }, RPC_TIMEOUT)?)
+        expect_maybe(self.rpc_quick(&Request::Take { key: key.to_string() }, RPC_TIMEOUT)?)
     }
     fn exists(&self, key: &str) -> Result<bool> {
-        expect_bool(self.rpc(&Request::Exists { key: key.to_string() }, RPC_TIMEOUT)?)
+        expect_bool(self.rpc_quick(&Request::Exists { key: key.to_string() }, RPC_TIMEOUT)?)
     }
     fn delete(&self, key: &str) -> Result<bool> {
-        expect_bool(self.rpc(&Request::Delete { key: key.to_string() }, RPC_TIMEOUT)?)
+        expect_bool(self.rpc_quick(&Request::Delete { key: key.to_string() }, RPC_TIMEOUT)?)
     }
     fn clear(&self) -> Result<()> {
         expect_unit(self.rpc(&Request::Clear, RPC_TIMEOUT)?)
@@ -1181,6 +1477,79 @@ impl Transport for RemoteTransport {
             take,
         };
         expect_hit(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn put_many(&self, items: Vec<(String, Value)>) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        for _ in 0..items.len() {
+            self.fault.on_put();
+        }
+        // Chunk so every encoded frame stays within MAX_FRAME (a lone
+        // item is bounded exactly like a plain Put, so a singleton
+        // chunk is always legal), then send the chunks as one burst.
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut chunk: Vec<(String, Value)> = Vec::new();
+        let mut chunk_bytes = 0usize;
+        for (k, v) in items {
+            let cost = k.len() + v.size_bytes() + 64;
+            if !chunk.is_empty() && (chunk_bytes + cost > MAX_PAYLOAD || chunk.len() >= 1 << 16) {
+                let mut f = Vec::new();
+                Request::PutMany { items: std::mem::take(&mut chunk) }.encode_into(&mut f);
+                frames.push(f);
+                chunk_bytes = 0;
+            }
+            chunk_bytes += cost;
+            chunk.push((k, v));
+        }
+        if !chunk.is_empty() {
+            let mut f = Vec::new();
+            Request::PutMany { items: chunk }.encode_into(&mut f);
+            frames.push(f);
+        }
+        for resp in self.burst(&frames)? {
+            expect_unit(resp)?;
+        }
+        Ok(())
+    }
+    fn take_many(&self, keys: &[&str], timeout: Duration) -> Result<Vec<(usize, Value)>> {
+        let req = Request::TakeMany {
+            keys: keys.iter().map(|k| k.to_string()).collect(),
+            timeout_ms: ms(timeout),
+        };
+        expect_many(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn put_interned(&self, scratch: &mut Vec<u8>, key: &str, value: Value) -> Result<()> {
+        self.fault.on_put();
+        let drop_first = self.fault.on_frame();
+        // Encode a Put frame straight into the caller's scratch — no
+        // String key, no fresh frame buffer, so a steady-state caller
+        // (the heartbeat thread) allocates nothing per call.
+        scratch.clear();
+        scratch.push(1); // Request::Put opcode
+        wire::w_str(scratch, key);
+        value.encode_into(scratch);
+        if !drop_first {
+            if let Ok(mut slot) = self.data.try_lock() {
+                if slot.is_none() {
+                    if let Ok(c) = self.dial() {
+                        *slot = Some(c);
+                    }
+                }
+                if let Some(conn) = slot.as_mut() {
+                    match Self::rpc_on(conn, scratch, RPC_TIMEOUT) {
+                        Ok(resp) => return expect_unit(resp),
+                        Err(_) => *slot = None,
+                    }
+                }
+            }
+        }
+        // Cold path (contended / dead pipe): pooled retry.
+        expect_unit(self.rpc_pooled(
+            &Request::Put { key: key.to_string(), value },
+            RPC_TIMEOUT,
+            drop_first,
+        )?)
     }
     fn subscribe(&self) -> Result<Box<dyn TransportSub>> {
         Ok(Box::new(RemoteSub {
@@ -1226,6 +1595,16 @@ impl TransportSub for RemoteSub {
     fn wait_take(&mut self, timeout: Duration) -> Result<Option<(usize, Value)>> {
         let req = Request::SubWait { timeout_ms: ms(timeout) };
         expect_hit(self.rpc(&req, timeout + RPC_GRACE)?)
+    }
+    fn wait_take_many(&mut self, timeout: Duration, max: usize) -> Result<Vec<(usize, Value)>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        let req = Request::SubWaitMany {
+            timeout_ms: ms(timeout),
+            max: max.min(1 << 16) as u32,
+        };
+        expect_many(self.rpc(&req, timeout + RPC_GRACE)?)
     }
     fn len(&self) -> usize {
         self.tags.len()
@@ -1346,6 +1725,36 @@ fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>, stop: Arc<AtomicBool>
     }
 }
 
+/// Control-plane key prefix (heartbeats, hello/begin/stop handshakes)
+/// exempt from the data-plane frame counter.
+const CTL_PREFIX: &str = "__relexi:ctl:";
+
+fn is_ctl(key: &str) -> bool {
+    key.starts_with(CTL_PREFIX)
+}
+
+/// Should this request bump [`crate::orchestrator::store::StoreStats::frames`]?
+/// Connection management and pure control-plane traffic are exempt so
+/// the counter isolates the rollout data exchange — the O(W·T)
+/// frames-per-wave CI invariant.
+fn counts_as_data_frame(req: &Request) -> bool {
+    match req {
+        Request::Bye | Request::ShmOpen { .. } | Request::Clear => false,
+        Request::Put { key, .. }
+        | Request::Get { key }
+        | Request::Take { key }
+        | Request::Exists { key }
+        | Request::Delete { key }
+        | Request::Wait { key, .. }
+        | Request::SubAdd { key, .. } => !is_ctl(key),
+        Request::WaitAny { keys, .. } | Request::TakeMany { keys, .. } => {
+            !keys.iter().all(|k| is_ctl(k))
+        }
+        Request::PutMany { items } => !items.iter().all(|(k, _)| is_ctl(k)),
+        Request::SubRemove { .. } | Request::SubWait { .. } | Request::SubWaitMany { .. } => true,
+    }
+}
+
 fn serve_conn_inner(
     mut conn: ServerConn,
     store: Arc<ShardedStore>,
@@ -1373,6 +1782,9 @@ fn serve_conn_inner(
                 bail!("bad request frame: {e:#}");
             }
         };
+        if counts_as_data_frame(&req) {
+            store.note_frame();
+        }
         // The shm upgrade swaps the pipe itself, so it is handled
         // outside the plain request->response match.
         if let Request::ShmOpen { path, ring_bytes } = &req {
@@ -1432,6 +1844,40 @@ fn serve_conn_inner(
                 Some(s) => {
                     let hit = sliced_wait(timeout_ms, &stop, |slice| s.wait_take(slice));
                     Response::Hit(hit.map(|(t, v)| (t as u64, v)))
+                }
+                None => Response::Error("no subscription on this connection".into()),
+            },
+            Request::PutMany { items } => {
+                store.put_many(items);
+                Response::Unit
+            }
+            Request::TakeMany { keys, timeout_ms } => {
+                let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+                let hits = sliced_wait(timeout_ms, &stop, |slice| {
+                    // Each inner grouped take is atomic, so slicing
+                    // never splits or double-delivers a batch.
+                    let got = store.take_many_wait(&refs, slice);
+                    if got.is_empty() {
+                        None
+                    } else {
+                        Some(got)
+                    }
+                })
+                .unwrap_or_default();
+                Response::Many(hits.into_iter().map(|(i, v)| (i as u64, v)).collect())
+            }
+            Request::SubWaitMany { timeout_ms, max } => match &mut sub {
+                Some(s) => {
+                    let hits = sliced_wait(timeout_ms, &stop, |slice| {
+                        let got = s.wait_take_many(slice, max as usize);
+                        if got.is_empty() {
+                            None
+                        } else {
+                            Some(got)
+                        }
+                    })
+                    .unwrap_or_default();
+                    Response::Many(hits.into_iter().map(|(t, v)| (t as u64, v)).collect())
                 }
                 None => Response::Error("no subscription on this connection".into()),
             },
@@ -1555,6 +2001,20 @@ mod tests {
         round_trip_req(Request::SubWait { timeout_ms: 0 });
         round_trip_req(Request::Bye);
         round_trip_req(Request::ShmOpen { path: "/tmp/x.seg".into(), ring_bytes: 1 << 20 });
+        round_trip_req(Request::PutMany { items: vec![] });
+        round_trip_req(Request::PutMany {
+            items: vec![
+                ("a".into(), Value::Scalar(1.5)),
+                ("b".into(), Value::tensor(vec![2], vec![3.0, 4.0])),
+                ("".into(), Value::Flag(false)),
+            ],
+        });
+        round_trip_req(Request::TakeMany { keys: vec![], timeout_ms: 0 });
+        round_trip_req(Request::TakeMany {
+            keys: vec!["x".into(), "y".into()],
+            timeout_ms: u64::MAX,
+        });
+        round_trip_req(Request::SubWaitMany { timeout_ms: 250, max: u32::MAX });
     }
 
     fn round_trip_resp(resp: Response) {
@@ -1578,6 +2038,11 @@ mod tests {
         round_trip_resp(Response::Maybe(Some(Value::tensor(vec![1, 3], vec![0.0; 3]))));
         round_trip_resp(Response::Hit(None));
         round_trip_resp(Response::Hit(Some((42, Value::Flag(true)))));
+        round_trip_resp(Response::Many(vec![]));
+        round_trip_resp(Response::Many(vec![
+            (0, Value::Scalar(-2.5)),
+            (u64::MAX, Value::tensor(vec![1, 2], vec![5.0, 6.0])),
+        ]));
         round_trip_resp(Response::Error("boom".into()));
     }
 
@@ -1645,6 +2110,45 @@ mod tests {
         assert_eq!((tag, v.as_scalar()), (3, Some(9.0)));
         sub.remove(3).unwrap();
         assert_eq!(sub.len(), 0);
+
+        // Batched ops: one PutMany frame + one TakeMany frame, grouped
+        // server-side, exactly-once per key.
+        let f0 = store.stats().frames;
+        t.put_many(vec![
+            ("m:0".into(), Value::Scalar(1.0)),
+            ("m:1".into(), Value::Scalar(2.0)),
+            ("m:2".into(), Value::Scalar(3.0)),
+        ])
+        .unwrap();
+        let hits = t.take_many(&["m:0", "m:1", "m:2"], Duration::from_secs(5)).unwrap();
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(!t.exists("m:1").unwrap(), "take_many consumed");
+        assert_eq!(store.stats().frames - f0, 3, "PutMany + TakeMany + exists frames");
+        assert!(store.stats().batched_keys >= 6);
+
+        // Control-plane puts (heartbeats) are exempt from the
+        // data-frame counter.
+        let f1 = store.stats().frames;
+        let mut scratch = Vec::new();
+        t.put_interned(&mut scratch, "__relexi:ctl:hb:w0", Value::Scalar(1.0)).unwrap();
+        t.put_interned(&mut scratch, "__relexi:ctl:hb:w0", Value::Scalar(2.0)).unwrap();
+        assert_eq!(store.stats().frames, f1, "ctl puts never count as data frames");
+        assert_eq!(store.get("__relexi:ctl:hb:w0").unwrap().as_scalar(), Some(2.0));
+
+        // Batched subscription drain (first hit blocks, rest drain).
+        let mut sub2 = t.subscribe().unwrap();
+        sub2.add(0, "sm:a").unwrap();
+        sub2.add(1, "sm:b").unwrap();
+        store.put("sm:a", Value::Scalar(1.0));
+        store.put("sm:b", Value::Scalar(2.0));
+        let mut got = sub2.wait_take_many(Duration::from_secs(5), 8).unwrap();
+        while got.len() < 2 {
+            got.extend(sub2.wait_take_many(Duration::from_secs(5), 8).unwrap());
+        }
+        let mut tags: Vec<usize> = got.iter().map(|(t, _)| *t).collect();
+        tags.sort_unstable();
+        assert_eq!(tags, vec![0, 1]);
 
         t.put("c", Value::Scalar(0.0)).unwrap();
         t.clear().unwrap();

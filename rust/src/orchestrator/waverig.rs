@@ -9,7 +9,7 @@
 
 use super::store::Subscription;
 use super::transport::{InprocTransport, RemoteTransport, Transport};
-use super::{Client, ExchangeServer, Orchestrator, Value};
+use super::{Client, ExchangeServer, Key, Orchestrator, Value};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -38,6 +38,9 @@ pub struct WaveRig {
     wave: Vec<usize>,
     act: Vec<f32>,
     handles: Vec<JoinHandle<Result<()>>>,
+    /// Batched mode (PR-9): env indices per worker block.  Empty in
+    /// per-key mode.
+    blocks: Vec<Vec<usize>>,
     /// Exchange serving the remote kinds; must outlive the env threads
     /// (joined in `Drop`'s body, before fields drop).
     _server: Option<ExchangeServer>,
@@ -48,6 +51,30 @@ impl WaveRig {
     /// `state_floats[e]` sizes env `e`'s per-wave state tensor;
     /// `act_floats` sizes the trainer's per-wave action tensor.
     pub fn start(kind: &str, state_floats: &[usize], act_floats: usize) -> Result<WaveRig> {
+        Self::start_inner(kind, state_floats, act_floats, None)
+    }
+
+    /// The wave-coalesced variant (PR-9 `batch_ops`): `n_blocks`
+    /// block threads each publish ONE `put_many` of all their envs'
+    /// states per wave and drain their actions through batched takes,
+    /// while the trainer scatters each block's action wave as one
+    /// `put_many` — the worker-process wire pattern, measurable A/B
+    /// against [`WaveRig::start`] on the same transport.
+    pub fn start_batched(
+        kind: &str,
+        state_floats: &[usize],
+        act_floats: usize,
+        n_blocks: usize,
+    ) -> Result<WaveRig> {
+        Self::start_inner(kind, state_floats, act_floats, Some(n_blocks))
+    }
+
+    fn start_inner(
+        kind: &str,
+        state_floats: &[usize],
+        act_floats: usize,
+        n_blocks: Option<usize>,
+    ) -> Result<WaveRig> {
         let orch = Orchestrator::launch(8);
         let server = if kind == "inproc" {
             None
@@ -62,14 +89,41 @@ impl WaveRig {
             Some(s) => RemoteTransport::connect(kind, &s.addr().to_string(), 3)?,
         };
         let mut handles = Vec::with_capacity(state_floats.len());
-        for (e, &floats) in state_floats.iter().enumerate() {
-            let t = transport.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("wave-env-{e}"))
-                    .spawn(move || env_loop(t, e, floats))
-                    .context("spawn wave env thread")?,
-            );
+        let mut blocks: Vec<Vec<usize>> = Vec::new();
+        match n_blocks {
+            None => {
+                for (e, &floats) in state_floats.iter().enumerate() {
+                    let t = transport.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("wave-env-{e}"))
+                            .spawn(move || env_loop(t, e, floats))
+                            .context("spawn wave env thread")?,
+                    );
+                }
+            }
+            Some(nb) => {
+                // Contiguous near-even blocks, like the worker plan.
+                let nb = nb.clamp(1, state_floats.len().max(1));
+                for b in 0..nb {
+                    let start = b * state_floats.len() / nb;
+                    let end = (b + 1) * state_floats.len() / nb;
+                    if start == end {
+                        continue;
+                    }
+                    let envs: Vec<usize> = (start..end).collect();
+                    let floats: Vec<usize> = envs.iter().map(|&e| state_floats[e]).collect();
+                    let t = transport.clone();
+                    let thread_envs = envs.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("wave-block-{b}"))
+                            .spawn(move || block_loop(t, thread_envs, floats))
+                            .context("spawn wave block thread")?,
+                    );
+                    blocks.push(envs);
+                }
+            }
         }
         let mut sub = Subscription::new(orch.store().clone());
         for e in 0..state_floats.len() {
@@ -81,6 +135,7 @@ impl WaveRig {
             wave: vec![0; state_floats.len()],
             act: vec![0.5f32; act_floats.max(1)],
             handles,
+            blocks,
             _server: server,
             orch,
         })
@@ -94,16 +149,48 @@ impl WaveRig {
     /// Serve one full wave: consume `E` states in arrival order through
     /// the persistent subscription, answer each with an action, and
     /// re-register that env's next state key — the collector's exact
-    /// per-wave store traffic.
+    /// per-wave store traffic.  In batched mode the states drain
+    /// through `wait_take_many` and the actions scatter as one
+    /// `put_many` per block.
     pub fn run_wave(&mut self) {
-        for _ in 0..self.wave.len() {
-            let (e, state) = self.sub.wait_take(WAVE_TIMEOUT).expect("wave stalled");
-            debug_assert!(state.as_tensor().is_some());
-            self.trainer.put_tensor(
-                &action_key(e, self.wave[e]),
-                vec![self.act.len()],
-                self.act.clone(),
+        if self.blocks.is_empty() {
+            for _ in 0..self.wave.len() {
+                let (e, state) = self.sub.wait_take(WAVE_TIMEOUT).expect("wave stalled");
+                debug_assert!(state.as_tensor().is_some());
+                self.trainer.put_tensor(
+                    &action_key(e, self.wave[e]),
+                    vec![self.act.len()],
+                    self.act.clone(),
+                );
+                self.wave[e] += 1;
+                self.sub.add(e, &state_key(e, self.wave[e]));
+            }
+            return;
+        }
+        let n = self.wave.len();
+        let mut arrived = 0usize;
+        while arrived < n {
+            let hits = self.sub.wait_take_many(WAVE_TIMEOUT, n - arrived);
+            assert!(!hits.is_empty(), "wave stalled");
+            for (_, state) in &hits {
+                debug_assert!(state.as_tensor().is_some());
+            }
+            arrived += hits.len();
+        }
+        for block in &self.blocks {
+            self.trainer.put_many(
+                block
+                    .iter()
+                    .map(|&e| {
+                        (
+                            Key::new(action_key(e, self.wave[e])),
+                            Value::tensor(vec![self.act.len()], self.act.clone()),
+                        )
+                    })
+                    .collect(),
             );
+        }
+        for e in 0..n {
             self.wave[e] += 1;
             self.sub.add(e, &state_key(e, self.wave[e]));
         }
@@ -123,6 +210,51 @@ impl Drop for WaveRig {
         }
         self.orch.clear();
     }
+}
+
+/// One block thread (batched mode): publish every env's state as ONE
+/// `put_many` per wave, then drain the block's actions through batched
+/// takes.  A Flag anywhere is the rig's stop sentinel — finish the
+/// drain, then exit.
+fn block_loop(t: Arc<dyn Transport>, envs: Vec<usize>, floats: Vec<usize>) -> Result<()> {
+    let states: Vec<Vec<f32>> = floats.iter().map(|&f| vec![1.0f32; f.max(1)]).collect();
+    for w in 0.. {
+        t.put_many(
+            envs.iter()
+                .zip(&states)
+                .map(|(&e, s)| (state_key(e, w), Value::tensor(vec![s.len()], s.clone())))
+                .collect(),
+        )?;
+        let keys: Vec<String> = envs.iter().map(|&e| action_key(e, w)).collect();
+        let mut taken = vec![false; envs.len()];
+        let mut missing = envs.len();
+        let mut stop = false;
+        while missing > 0 {
+            let mut map: Vec<usize> = Vec::with_capacity(missing);
+            let mut refs: Vec<&str> = Vec::with_capacity(missing);
+            for (i, k) in keys.iter().enumerate() {
+                if !taken[i] {
+                    map.push(i);
+                    refs.push(k.as_str());
+                }
+            }
+            let got = t.take_many(&refs, WAVE_TIMEOUT)?;
+            if got.is_empty() {
+                return Ok(()); // wedge bound hit: the rig is going away
+            }
+            for (ri, v) in got {
+                if matches!(v, Value::Flag(_)) {
+                    stop = true;
+                }
+                taken[map[ri]] = true;
+                missing -= 1;
+            }
+        }
+        if stop {
+            return Ok(());
+        }
+    }
+    Ok(())
 }
 
 /// One env thread: publish the wave's state, block for the action (a
@@ -163,5 +295,30 @@ mod tests {
         rig.run_wave();
         rig.run_wave();
         assert_eq!(rig.wave, vec![2, 2]);
+    }
+
+    #[test]
+    fn batched_tcp_rig_coalesces_waves_and_stops_cleanly() {
+        // 4 envs in 2 blocks: each wave must move through the batched
+        // PutMany/TakeMany path and count batched keys on the server.
+        let mut rig = WaveRig::start_batched("tcp", &[32, 32, 32, 32], 4, 2).unwrap();
+        for _ in 0..3 {
+            rig.run_wave();
+        }
+        assert_eq!(rig.wave, vec![3, 3, 3, 3]);
+        let stats = rig.orch.store().stats();
+        assert!(
+            stats.batched_keys > 0,
+            "batched rig must use the batched ops"
+        );
+        drop(rig); // must not hang
+    }
+
+    #[test]
+    fn batched_inproc_rig_matches_wave_count() {
+        let mut rig = WaveRig::start_batched("inproc", &[16, 16, 16], 4, 2).unwrap();
+        rig.run_wave();
+        rig.run_wave();
+        assert_eq!(rig.wave, vec![2, 2, 2]);
     }
 }

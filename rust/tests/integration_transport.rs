@@ -26,7 +26,7 @@ use relexi::orchestrator::protocol::{ctl_begin_key, ctl_hello_key, encode_begin}
 use relexi::orchestrator::transport::{
     frame_len, InprocTransport, RemoteTransport, Request, Response, Transport, MAX_FRAME,
 };
-use relexi::orchestrator::{Orchestrator, Protocol, Value};
+use relexi::orchestrator::{Orchestrator, Protocol, StatsSnapshot, Value};
 use relexi::rl::Episode;
 use relexi::runtime::stub_policy;
 use relexi::util::Rng;
@@ -71,6 +71,26 @@ fn sample_requests() -> Vec<Request> {
             path: "/dev/shm/relexi-test".into(),
             ring_bytes: 1 << 20,
         },
+        Request::PutMany { items: vec![] },
+        Request::PutMany {
+            items: vec![
+                ("m:0".into(), Value::tensor(vec![3], vec![1.0, -0.0, 2.5])),
+                ("".into(), Value::Flag(false)),
+                ("m:2".into(), Value::bytes(vec![255, 0, 7])),
+            ],
+        },
+        Request::TakeMany {
+            keys: vec![],
+            timeout_ms: 0,
+        },
+        Request::TakeMany {
+            keys: vec!["a".into(), "b".into()],
+            timeout_ms: u64::MAX,
+        },
+        Request::SubWaitMany {
+            timeout_ms: 250,
+            max: u32::MAX,
+        },
     ]
 }
 
@@ -84,6 +104,11 @@ fn sample_responses() -> Vec<Response> {
         Response::Maybe(Some(Value::Flag(true))),
         Response::Hit(None),
         Response::Hit(Some((9, Value::tensor(vec![4], vec![1.0, 2.0, 3.0, 4.0])))),
+        Response::Many(vec![]),
+        Response::Many(vec![
+            (0, Value::Scalar(1.5)),
+            (u64::MAX, Value::tensor(vec![2], vec![-1.0, f32::MAX])),
+        ]),
         Response::Error("boom".into()),
     ]
 }
@@ -259,6 +284,84 @@ fn conformance(t: &Arc<dyn Transport>) {
         "each value must be delivered exactly once"
     );
 
+    // Batched puts/takes (PR-9): one logical op covers many keys, with
+    // per-key visibility identical to the per-key loop, hits ascending.
+    t.put_many(vec![
+        ("c:m:0".into(), Value::Scalar(0.5)),
+        ("c:m:1".into(), Value::tensor(vec![2], vec![1.0, -2.0])),
+        ("c:m:2".into(), Value::Flag(true)),
+    ])
+    .unwrap();
+    assert!(t.exists("c:m:1").unwrap(), "put_many key visible per-key");
+    let hits = t
+        .take_many(&["c:m:0", "c:m:miss", "c:m:1", "c:m:2"], Duration::from_secs(5))
+        .unwrap();
+    assert_eq!(
+        hits.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        vec![0, 2, 3],
+        "take_many returns present keys ascending"
+    );
+    match &hits[0].1 {
+        Value::Scalar(x) => assert_eq!(*x, 0.5),
+        v => panic!("take_many value altered: {v:?}"),
+    }
+    assert!(t.get("c:m:0").unwrap().is_none(), "take_many consumes");
+    assert!(
+        t.take_many(&["c:m:0", "c:m:1"], Duration::from_millis(50))
+            .unwrap()
+            .is_empty(),
+        "empty take_many is a timeout, not a hit"
+    );
+    // A blocked take_many must wake on a later put.
+    let waker = {
+        let t = t.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            t.put_many(vec![("c:m:late".into(), Value::Scalar(9.0))]).unwrap();
+        })
+    };
+    let late = t.take_many(&["c:m:late"], Duration::from_secs(10)).unwrap();
+    assert_eq!(late.len(), 1, "take_many wakes on a late batched put");
+    waker.join().unwrap();
+
+    // Exactly-once take_many under racing consumers: two threads race
+    // batched takes over one key set; every value must land in exactly
+    // one of them.
+    const N_BATCH: usize = 12;
+    let bkeys: Vec<String> = (0..N_BATCH).map(|i| format!("c:mrace:{i}")).collect();
+    let bhits: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let takers: Vec<_> = (0..2)
+        .map(|w| {
+            let t = t.clone();
+            let keys = bkeys.clone();
+            let hits = bhits.clone();
+            std::thread::Builder::new()
+                .name(format!("conf-taker-{w}"))
+                .spawn(move || loop {
+                    let refs: Vec<&str> = keys.iter().map(|k| k.as_str()).collect();
+                    let got = t.take_many(&refs, Duration::from_millis(500)).unwrap();
+                    if got.is_empty() {
+                        return; // quiet for 500 ms: producer done
+                    }
+                    hits.lock().unwrap().extend(got.into_iter().map(|(i, _)| i));
+                })
+                .unwrap()
+        })
+        .collect();
+    for (i, k) in bkeys.iter().enumerate() {
+        t.put(k, Value::Scalar(i as f64)).unwrap();
+    }
+    for h in takers {
+        h.join().unwrap();
+    }
+    let mut seen = bhits.lock().unwrap().clone();
+    seen.sort_unstable();
+    assert_eq!(
+        seen,
+        (0..N_BATCH).collect::<Vec<_>>(),
+        "each value must be taken by exactly one batched taker"
+    );
+
     // Subscription add/remove deltas: only registered tags fire, a
     // removed tag never fires, delivery retires the registration.
     let mut sub = t.subscribe().unwrap();
@@ -283,6 +386,76 @@ fn conformance(t: &Arc<dyn Transport>) {
         Some((1, Value::Scalar(x))) => assert_eq!(x, 4.0),
         other => panic!("re-added subscription delivered {other:?}"),
     }
+
+    // Batched subscription drain: a wave of puts comes back through
+    // wait_take_many, each delivery exactly once, max respected.
+    sub.add(20, "c:sm:a").unwrap();
+    sub.add(21, "c:sm:b").unwrap();
+    sub.add(22, "c:sm:c").unwrap();
+    t.put_many(vec![
+        ("c:sm:a".into(), Value::Scalar(1.0)),
+        ("c:sm:b".into(), Value::Scalar(2.0)),
+        ("c:sm:c".into(), Value::Scalar(3.0)),
+    ])
+    .unwrap();
+    let mut tags: Vec<usize> = Vec::new();
+    while tags.len() < 3 {
+        let got = sub.wait_take_many(Duration::from_secs(5), 2).unwrap();
+        assert!(!got.is_empty(), "subscribed wave must be delivered");
+        assert!(got.len() <= 2, "wait_take_many must honor max");
+        tags.extend(got.into_iter().map(|(tag, _)| tag));
+    }
+    tags.sort_unstable();
+    assert_eq!(tags, vec![20, 21, 22], "each delivery exactly once");
+    assert!(
+        sub.wait_take_many(Duration::from_millis(200), 4).unwrap().is_empty(),
+        "drained subscription has nothing left"
+    );
+
+    // Exactly-once wait_take_many under RACING subscriptions: two
+    // independent subscriptions register the same keys; the store wakes
+    // both, but the authoritative take must hand each value to exactly
+    // one of them.
+    const N_SUBRACE: usize = 10;
+    let srhits: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let racers: Vec<_> = (0..2)
+        .map(|w| {
+            let t = t.clone();
+            let hits = srhits.clone();
+            std::thread::Builder::new()
+                .name(format!("conf-subracer-{w}"))
+                .spawn(move || {
+                    let mut sub = t.subscribe().unwrap();
+                    for i in 0..N_SUBRACE {
+                        sub.add(i, &format!("c:sr:{i}")).unwrap();
+                    }
+                    loop {
+                        let got = sub.wait_take_many(Duration::from_millis(500), N_SUBRACE).unwrap();
+                        if got.is_empty() {
+                            return; // quiet for 500 ms: producer done
+                        }
+                        hits.lock().unwrap().extend(got.into_iter().map(|(tag, _)| tag));
+                    }
+                })
+                .unwrap()
+        })
+        .collect();
+    t.put_many(
+        (0..N_SUBRACE)
+            .map(|i| (format!("c:sr:{i}"), Value::Scalar(i as f64)))
+            .collect(),
+    )
+    .unwrap();
+    for h in racers {
+        h.join().unwrap();
+    }
+    let mut seen = srhits.lock().unwrap().clone();
+    seen.sort_unstable();
+    assert_eq!(
+        seen,
+        (0..N_SUBRACE).collect::<Vec<_>>(),
+        "racing batched subscriptions must split the wave exactly once"
+    );
 
     // put/clear race: concurrent writers against repeated clears must
     // neither panic nor wedge, and a final clear leaves nothing behind.
@@ -386,8 +559,10 @@ fn assert_episodes_identical(a: &[Episode], b: &[Episode]) {
 
 /// Two sampling iterations (construction wave + steady-state wave) on a
 /// freshly built pool, returning both full rollouts (episodes plus the
-/// supervision report the chaos tests inspect).
-fn two_iterations_rollouts(cfg: RunConfig, seed: u64) -> (Rollouts, Rollouts) {
+/// supervision report the chaos tests inspect) and the trainer store's
+/// cumulative counters (`frames` / `batched_keys` — the PR-9 wire-shape
+/// invariant).
+fn two_iterations_with_stats(cfg: RunConfig, seed: u64) -> (Rollouts, Rollouts, StatsSnapshot) {
     let n_envs = cfg.rl.n_envs;
     let orch = Orchestrator::launch(cfg.hpc.db_shards);
     let mut pool = EnvPool::from_config(cfg, None, &orch).unwrap();
@@ -400,6 +575,12 @@ fn two_iterations_rollouts(cfg: RunConfig, seed: u64) -> (Rollouts, Rollouts) {
         .collect_with(&orch, &Protocol::new("lb1"), stub_policy, &mut rng, false, n_envs)
         .unwrap();
     orch.clear();
+    let stats = orch.store().stats();
+    (r0, r1, stats)
+}
+
+fn two_iterations_rollouts(cfg: RunConfig, seed: u64) -> (Rollouts, Rollouts) {
+    let (r0, r1, _) = two_iterations_with_stats(cfg, seed);
     (r0, r1)
 }
 
@@ -428,6 +609,8 @@ fn tcp_loopback_worker_processes_match_inproc_bitwise() {
     // over the inproc transport, once with real `relexi env-worker` OS
     // processes dialing the loopback-TCP exchange — same seed, and every
     // observation, action, log-prob, value and reward bit-identical.
+    // Since PR-9 the processes leg runs the wave-coalesced batched
+    // exchange by default, so this is also the batched bit-identity gate.
     let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 41);
     let (tcp0, tcp1) = two_iterations(burgers8_procs_cfg(), 41);
 
@@ -435,6 +618,50 @@ fn tcp_loopback_worker_processes_match_inproc_bitwise() {
     assert_episodes_identical(&inproc1, &tcp1);
     // Pool drop on the processes side must have reaped its workers; the
     // bounded-teardown test below covers the trainer-death path.
+}
+
+#[test]
+fn tcp_loopback_batched_and_perkey_legs_match_and_coalesce_frames() {
+    // PR-9 acceptance: both `batch_ops` legs of the loopback-TCP pool
+    // reproduce the in-process episodes bitwise at the same seed, and
+    // the exchange's frame counters prove the wire-shape claim — the
+    // batched leg moves the same waves in a small fraction of the data
+    // frames (O(W·T) vs O(E·T·ops)) and is the only leg with batched
+    // keys on the wire.
+    let (in0, in1) = two_iterations(burgers8_cfg(), 53);
+
+    let batched_cfg = burgers8_procs_cfg(); // batch_ops defaults on
+    assert!(batched_cfg.orchestrator.batch_ops);
+    let (b0, b1, bstats) = two_iterations_with_stats(batched_cfg, 53);
+
+    let mut perkey_cfg = burgers8_procs_cfg();
+    perkey_cfg.orchestrator.batch_ops = false;
+    let (p0, p1, pstats) = two_iterations_with_stats(perkey_cfg, 53);
+
+    assert_episodes_identical(&in0, &b0.episodes);
+    assert_episodes_identical(&in1, &b1.episodes);
+    assert_episodes_identical(&in0, &p0.episodes);
+    assert_episodes_identical(&in1, &p1.episodes);
+
+    assert_eq!(
+        pstats.batched_keys, 0,
+        "per-key leg must not touch the batched path"
+    );
+    assert!(
+        bstats.batched_keys > 0,
+        "batched leg must move its waves through put_many/take_many"
+    );
+    assert!(
+        bstats.frames > 0,
+        "remote exchange must count data frames"
+    );
+    assert!(
+        bstats.frames * 2 < pstats.frames,
+        "wave coalescing must cut data frames at least in half \
+         (batched {} vs per-key {})",
+        bstats.frames,
+        pstats.frames
+    );
 }
 
 // ------------------------------------------------------------- chaos
@@ -447,6 +674,10 @@ fn chaos_killed_worker_recovers_bit_identical() {
     // child exit within a heartbeat slice, respawn a generation-1
     // worker, replay the recorded action prefix, and finish BOTH waves
     // bit-identical to the fault-free in-process run at the same seed.
+    // Since PR-9 the worker runs the batched exchange by default, and
+    // the put counter ticks per LOGICAL put inside `put_many` — so the
+    // kill lands mid-batch and the block's ENTIRE in-flight batch frame
+    // is lost, the batched equivalent of losing one per-key put.
     let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 43);
 
     let mut cfg = burgers8_procs_cfg();
@@ -460,6 +691,28 @@ fn chaos_killed_worker_recovers_bit_identical() {
         "fault plan should have killed worker 0 at least once (reports: {:?} / {:?})",
         r0.supervision,
         r1.supervision
+    );
+    assert!(r0.supervision.dropped_envs.is_empty(), "no block may be dropped");
+    assert!(r1.supervision.dropped_envs.is_empty(), "no block may be dropped");
+    assert_episodes_identical(&inproc0, &r0.episodes);
+    assert_episodes_identical(&inproc1, &r1.episodes);
+}
+
+#[test]
+fn chaos_killed_worker_recovers_bit_identical_perkey() {
+    // The same mid-wave kill with `batch_ops = off`: the A/B baseline
+    // path must keep the PR-8 fault-tolerance guarantees it always had.
+    let (inproc0, inproc1) = two_iterations(burgers8_cfg(), 43);
+
+    let mut cfg = burgers8_procs_cfg();
+    cfg.orchestrator.batch_ops = false;
+    cfg.fault.plan = "killput:w0@25".to_string();
+    cfg.fault.max_respawns = 2;
+    let (r0, r1) = two_iterations_rollouts(cfg, 43);
+
+    assert!(
+        r0.supervision.respawns + r1.supervision.respawns >= 1,
+        "fault plan should have killed worker 0 at least once"
     );
     assert!(r0.supervision.dropped_envs.is_empty(), "no block may be dropped");
     assert!(r1.supervision.dropped_envs.is_empty(), "no block may be dropped");

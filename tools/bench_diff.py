@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json files (emitted by rust/src/util/bench.rs
+``Bench::write_json``) into a markdown table.
+
+The intended A/B loop for PR-9 style perf work: run a bench binary on
+the baseline commit and on the candidate, then::
+
+    python3 tools/bench_diff.py BENCH_db.baseline.json BENCH_db.json
+
+Rows are matched by label.  ``speedup`` is baseline_mean / candidate_mean
+(>1 means the candidate is faster); ``delta`` is the relative change of
+the candidate mean vs baseline.  Labels present in only one file are
+listed in their own sections so bench-suite growth (new ``wave-batched/*``
+or ``put_many`` rows) is visible rather than silently dropped.
+
+Stdlib only — no third-party deps (the image has none to spare).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict[str, dict]:
+    """Load a BENCH_*.json into {label: result-dict}, preserving order."""
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    results = doc.get("results", [])
+    out: dict[str, dict] = {}
+    for r in results:
+        label = r.get("label")
+        if not isinstance(label, str) or "mean_s" not in r:
+            raise ValueError(f"{path}: malformed result entry: {r!r}")
+        if label in out:
+            # Repeated labels (e.g. a bench run twice): keep the last,
+            # matching "most recent measurement wins".
+            pass
+        out[label] = r
+    return out
+
+
+def fmt_s(s: float) -> str:
+    """Human duration, mirroring bench.rs fmt_duration."""
+    if s >= 1.0:
+        return f"{s:.3f} s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.3f} ms"
+    if s >= 1e-6:
+        return f"{s * 1e6:.3f} µs"
+    return f"{s * 1e9:.1f} ns"
+
+
+def markdown_table(header: list[str], rows: list[list[str]]) -> str:
+    width = [len(h) for h in header]
+    for row in rows:
+        for i, c in enumerate(row):
+            width[i] = max(width[i], len(c))
+    def fmt_row(cells: list[str]) -> str:
+        return "|" + "|".join(f" {c:<{w}} " for c, w in zip(cells, width)) + "|"
+    lines = [fmt_row(header)]
+    lines.append("|" + "|".join("-" * (w + 2) for w in width) + "|")
+    lines.extend(fmt_row(r) for r in rows)
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_*.json files into a markdown table."
+    )
+    ap.add_argument("baseline", help="baseline BENCH_*.json")
+    ap.add_argument("candidate", help="candidate BENCH_*.json")
+    ap.add_argument(
+        "--metric",
+        choices=["mean_s", "median_s", "min_s"],
+        default="mean_s",
+        help="which statistic to compare (default: mean_s)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.0,
+        metavar="PCT",
+        help="only show rows whose |delta| exceeds PCT percent "
+        "(default 0: show everything)",
+    )
+    ap.add_argument(
+        "--fail-above",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 1 if any common row regresses by more than PCT percent "
+        "(for CI gating)",
+    )
+    args = ap.parse_args(argv)
+
+    base = load(args.baseline)
+    cand = load(args.candidate)
+    metric = args.metric
+
+    rows: list[list[str]] = []
+    worst_regression = 0.0
+    for label, b in base.items():
+        c = cand.get(label)
+        if c is None:
+            continue
+        bs, cs = float(b[metric]), float(c[metric])
+        if bs <= 0.0 or cs <= 0.0:
+            continue
+        delta = (cs - bs) / bs * 100.0
+        worst_regression = max(worst_regression, delta)
+        if abs(delta) < args.threshold:
+            continue
+        rows.append(
+            [
+                label,
+                fmt_s(bs),
+                fmt_s(cs),
+                f"{bs / cs:.2f}x",
+                f"{delta:+.1f}%",
+            ]
+        )
+
+    print(f"## bench diff — {args.baseline} vs {args.candidate} ({metric})\n")
+    if rows:
+        print(
+            markdown_table(
+                ["label", "baseline", "candidate", "speedup", "delta"], rows
+            )
+        )
+    else:
+        print("(no common rows above threshold)")
+
+    only_base = [l for l in base if l not in cand]
+    only_cand = [l for l in cand if l not in base]
+    if only_base:
+        print("\n### only in baseline\n")
+        for l in only_base:
+            print(f"- `{l}` ({fmt_s(float(base[l][metric]))})")
+    if only_cand:
+        print("\n### only in candidate\n")
+        for l in only_cand:
+            print(f"- `{l}` ({fmt_s(float(cand[l][metric]))})")
+
+    if args.fail_above is not None and worst_regression > args.fail_above:
+        print(
+            f"\nFAIL: worst regression {worst_regression:+.1f}% exceeds "
+            f"--fail-above {args.fail_above}%",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
