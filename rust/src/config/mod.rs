@@ -508,6 +508,40 @@ impl Default for FaultConfig {
     }
 }
 
+/// Telemetry section (`[telemetry]`): the run-wide tracing subsystem
+/// (`util::telemetry`).  When `enabled`, every process records spans /
+/// events / latency histograms into per-thread lock-free rings, env-worker
+/// processes ship theirs over the store ctl plane at iteration end, and the
+/// trainer writes one merged Chrome-trace JSON plus a `TELEMETRY_{run}.json`
+/// summary.  The `RELEXI_LOG` environment variable overrides `log_level`;
+/// recording is designed to allocate nothing in steady state, so the
+/// exchange alloc gates hold with telemetry on or off.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Master switch for span/event/histogram recording.  Logging via
+    /// `tlog!` works regardless (it is gated only by `log_level`).
+    pub enabled: bool,
+    /// Records per thread ring; on overflow the oldest records are dropped
+    /// and counted (`dropped_records` in the summary).
+    pub buffer_capacity: usize,
+    /// `tlog!` threshold: "error" | "warn" | "info" | "debug".
+    pub log_level: String,
+    /// Merged Chrome-trace output path; `""` = `TRACE_{case}.json` in the
+    /// working directory (next to the `BENCH_*.json` artifacts).
+    pub trace_path: String,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            buffer_capacity: 65_536,
+            log_level: "info".to_string(),
+            trace_path: String::new(),
+        }
+    }
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -519,6 +553,7 @@ pub struct RunConfig {
     pub hpc: HpcConfig,
     pub orchestrator: OrchestratorConfig,
     pub fault: FaultConfig,
+    pub telemetry: TelemetryConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
     /// Output directory for metrics/checkpoints.
@@ -536,6 +571,7 @@ impl Default for RunConfig {
             hpc: HpcConfig::default(),
             orchestrator: OrchestratorConfig::default(),
             fault: FaultConfig::default(),
+            telemetry: TelemetryConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs/out".to_string(),
         }
@@ -709,6 +745,13 @@ impl RunConfig {
         cfg.fault.max_respawns =
             t.int_or("fault.max_respawns", cfg.fault.max_respawns as i64)? as usize;
         cfg.fault.plan = t.str_or("fault.plan", &cfg.fault.plan)?;
+
+        let tel = &mut cfg.telemetry;
+        tel.enabled = t.bool_or("telemetry.enabled", tel.enabled)?;
+        tel.buffer_capacity =
+            t.int_or("telemetry.buffer_capacity", tel.buffer_capacity as i64)? as usize;
+        tel.log_level = t.str_or("telemetry.log_level", &tel.log_level)?;
+        tel.trace_path = t.str_or("telemetry.trace_path", &tel.trace_path)?;
 
         cfg.artifacts_dir = t.str_or("paths.artifacts", &cfg.artifacts_dir)?;
         cfg.out_dir = t.str_or("paths.out", &cfg.out_dir)?;
@@ -905,6 +948,17 @@ impl RunConfig {
         if let Err(e) = crate::coordinator::supervise::FaultPlan::parse(&self.fault.plan) {
             anyhow::bail!("invalid fault.plan {:?}: {e:#}", self.fault.plan);
         }
+        let tel = &self.telemetry;
+        anyhow::ensure!(
+            crate::util::telemetry::Level::parse(&tel.log_level).is_some(),
+            "unknown telemetry.log_level {:?} (expected error|warn|info|debug)",
+            tel.log_level
+        );
+        anyhow::ensure!(
+            tel.buffer_capacity >= 1024,
+            "telemetry.buffer_capacity {} too small (need >= 1024 records)",
+            tel.buffer_capacity
+        );
         Ok(())
     }
 
@@ -1101,6 +1155,12 @@ impl RunConfig {
         let _ = writeln!(o, "[fault]");
         let _ = writeln!(o, "max_respawns = {}", f.max_respawns);
         let _ = writeln!(o, "plan = {}", q(&f.plan));
+        let tel = &self.telemetry;
+        let _ = writeln!(o, "[telemetry]");
+        let _ = writeln!(o, "enabled = {}", tel.enabled);
+        let _ = writeln!(o, "buffer_capacity = {}", tel.buffer_capacity);
+        let _ = writeln!(o, "log_level = {}", q(&tel.log_level));
+        let _ = writeln!(o, "trace_path = {}", q(&tel.trace_path));
         let _ = writeln!(o, "[paths]");
         let _ = writeln!(o, "artifacts = {}", q(&self.artifacts_dir));
         let _ = writeln!(o, "out = {}", q(&self.out_dir));
@@ -1443,6 +1503,8 @@ mod tests {
              bind = \"127.0.0.1:7700\"\nworker_bin = \"target/release/relexi\"\n\
              poll_timeout_s = 45.5\nheartbeat_period_ms = 250\nheartbeat_expiry_ms = 2000\n\
              [fault]\nmax_respawns = 1\nplan = \"killput:w0@40;hbstall:w1@2\"\n\
+             [telemetry]\nenabled = true\nbuffer_capacity = 4096\n\
+             log_level = \"debug\"\ntrace_path = \"out/trace.json\"\n\
              [paths]\nartifacts = \"art\"\nout = \"runs/x\"\n",
         )
         .unwrap();
@@ -1456,6 +1518,28 @@ mod tests {
         let d = RunConfig::default();
         let back = RunConfig::from_toml(&Toml::parse(&d.to_toml_string()).unwrap()).unwrap();
         assert_eq!(format!("{d:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_rejects_bad_values() {
+        let doc = Toml::parse(
+            "[telemetry]\nenabled = true\nbuffer_capacity = 2048\nlog_level = \"warn\"\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.buffer_capacity, 2048);
+        assert_eq!(cfg.telemetry.log_level, "warn");
+        assert_eq!(cfg.telemetry.trace_path, "");
+        // Defaults: disabled, info level.
+        let d = RunConfig::default();
+        assert!(!d.telemetry.enabled);
+        assert_eq!(d.telemetry.log_level, "info");
+        // Invalid level / undersized ring are rejected at validate time.
+        let doc = Toml::parse("[telemetry]\nlog_level = \"loud\"\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[telemetry]\nbuffer_capacity = 8\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -68,7 +68,8 @@ use super::supervise::{HeartbeatMonitor, SupervisionReport};
 use crate::config::RunConfig;
 use crate::launcher::{plan_worker_processes, WorkerPlan};
 use crate::orchestrator::protocol::{
-    ctl_begin_key, ctl_hb_key, ctl_hello_key, encode_begin, CTL_STOP_KEY,
+    ctl_begin_key, ctl_hb_key, ctl_hello_key, ctl_tel_key, encode_begin, CTL_STOP_KEY,
+    CTL_TEL_FLUSH_KEY,
 };
 use crate::orchestrator::{
     Client, EnvKeys, ExchangeServer, Key, Orchestrator, Protocol, TensorPool, Value,
@@ -272,6 +273,9 @@ pub struct EnvPool {
     /// Shared exchange-allocation counter (this pool + every worker's
     /// observation pool).
     exchange_allocs: Arc<AtomicU64>,
+    /// Trainer-side monotonic µs of the latest begin-key put per process
+    /// worker (the trace merger's causality clamp); empty in threads mode.
+    last_begin_put_us: Vec<u64>,
 }
 
 impl EnvPool {
@@ -432,7 +436,12 @@ impl EnvPool {
         // by the episode records until the rollouts drop — that sum is
         // the action pool's steady-state working set (and its cap).
         let act_cap = n_actions_of.iter().sum::<usize>() + 2;
+        let n_proc_workers = match &workers {
+            Workers::Processes(p) => p.plan.n_procs,
+            Workers::Threads => 0,
+        };
         Ok(EnvPool {
+            last_begin_put_us: vec![0u64; n_proc_workers],
             batch_obs: vec![0f32; n_envs * obs_len],
             act_pool: TensorPool::new(exchange_allocs.clone(), act_cap),
             act_shape: Arc::from(vec![n_agents]),
@@ -550,6 +559,7 @@ impl EnvPool {
         F: FnMut(&[f32], usize) -> Result<PolicyOut>,
     {
         let t_start = Instant::now();
+        let _sp_wave = crate::span!("wave.collect");
         let n_envs = self.cfg.rl.n_envs;
         let chunk = self.obs_len;
         let trainer = orch.client();
@@ -668,7 +678,10 @@ impl EnvPool {
                     self.batch_obs[k * chunk..(k + 1) * chunk].copy_from_slice(obs);
                 }
                 let tp = Instant::now();
-                let out = forward(&self.batch_obs[..n_act * chunk], n_act * self.n_agents)?;
+                let out = {
+                    let _sp = crate::span!("wave.policy");
+                    forward(&self.batch_obs[..n_act * chunk], n_act * self.n_agents)?
+                };
                 policy_time += tp.elapsed().as_secs_f64();
                 anyhow::ensure!(
                     out.mean.len() == n_act * self.n_agents
@@ -720,6 +733,8 @@ impl EnvPool {
                 // Scatter the staged wave: one `put_many` per worker
                 // block, envs ascending within each frame.
                 if !act_wave.is_empty() {
+                    let _sp = crate::span!("wave.scatter");
+                    crate::tcount!("wave.scatter_actions", act_wave.len() as u64);
                     let mut group: Vec<(Key, Value)> = Vec::with_capacity(act_wave.len());
                     let mut cur_w = block_of[act_wave_envs[0]];
                     for (env, kv) in act_wave_envs.drain(..).zip(act_wave.drain(..)) {
@@ -767,7 +782,9 @@ impl EnvPool {
                                 continue;
                             }
                             report.detect_s.push(monitor.stale_for(w, now));
-                            eprintln!(
+                            crate::tevent!("supervise.detect", w as u64);
+                            crate::tlog!(
+                                warn,
                                 "[supervise] worker {w} {} mid-wave; recovering",
                                 if child_dead {
                                     "process exited"
@@ -810,6 +827,8 @@ impl EnvPool {
                                             &ctl_begin_key(w),
                                             encode_begin(rproto.run_tag(), &envs),
                                         );
+                                        self.last_begin_put_us[w] =
+                                            crate::util::telemetry::now_us();
                                         // Retarget the block's live
                                         // subscriptions into the replay
                                         // namespace (`add` on a tag
@@ -843,7 +862,8 @@ impl EnvPool {
                                         break true;
                                     }
                                     Err(e) => {
-                                        eprintln!(
+                                        crate::tlog!(
+                                            error,
                                             "[supervise] respawn of worker {w} failed: {e:#}"
                                         );
                                     }
@@ -852,7 +872,9 @@ impl EnvPool {
                             if recovered {
                                 monitor.arm(w, Instant::now());
                                 report.recover_s.push(t_rec.elapsed().as_secs_f64());
-                                eprintln!(
+                                crate::tevent!("supervise.recover", w as u64);
+                                crate::tlog!(
+                                    warn,
                                     "[supervise] worker {w} respawned (budget {}/{})",
                                     p.respawns_used[w], self.cfg.fault.max_respawns
                                 );
@@ -889,7 +911,8 @@ impl EnvPool {
                                         }
                                     }
                                 }
-                                eprintln!(
+                                crate::tlog!(
+                                    error,
                                     "[supervise] worker {w} dropped after exhausting \
                                      max_respawns = {}; envs {start}..{} finish short",
                                     self.cfg.fault.max_respawns,
@@ -908,7 +931,12 @@ impl EnvPool {
                     }
                 }
                 let wait = if procs.is_some() { slice } else { poll_to };
+                let t_wait = crate::util::telemetry::enabled().then(Instant::now);
                 if let Some(hit) = sub.wait_take(wait) {
+                    if let Some(t0) = t_wait {
+                        crate::util::telemetry::HistId::Exchange
+                            .observe_us(t0.elapsed().as_micros() as u64);
+                    }
                     break hit;
                 }
                 anyhow::ensure!(
@@ -1205,7 +1233,11 @@ impl EnvPool {
                         continue;
                     }
                     if matches!(p.children[w].try_wait(), Ok(Some(_))) {
-                        eprintln!("[supervise] worker {w} died between waves; respawning");
+                        crate::tevent!("supervise.detect", w as u64);
+                        crate::tlog!(
+                            warn,
+                            "[supervise] worker {w} died between waves; respawning"
+                        );
                         let recovered = loop {
                             if p.respawns_used[w] >= self.cfg.fault.max_respawns {
                                 break false;
@@ -1215,7 +1247,10 @@ impl EnvPool {
                             match p.respawn_process(&self.cfg, &self.abort_client, w) {
                                 Ok(()) => break true,
                                 Err(e) => {
-                                    eprintln!("[supervise] respawn of worker {w} failed: {e:#}");
+                                    crate::tlog!(
+                                        error,
+                                        "[supervise] respawn of worker {w} failed: {e:#}"
+                                    );
                                 }
                             }
                         };
@@ -1223,23 +1258,71 @@ impl EnvPool {
                             let _ = p.children[w].kill();
                             let _ = p.children[w].wait();
                             p.dropped[w] = true;
-                            eprintln!(
+                            crate::tlog!(
+                                error,
                                 "[supervise] worker {w} dropped after exhausting \
                                  max_respawns = {}",
                                 self.cfg.fault.max_respawns
                             );
                             continue;
                         }
+                        crate::tevent!("supervise.recover", w as u64);
                     }
                     let (start, count) = p.block(w);
                     let envs: Vec<(usize, u64)> =
                         (start..start + count).map(|i| (i, seeds[i])).collect();
                     self.abort_client
                         .put_bytes(&ctl_begin_key(w), encode_begin(proto.run_tag(), &envs));
+                    self.last_begin_put_us[w] = crate::util::telemetry::now_us();
                 }
             }
         }
         Ok(seeds)
+    }
+
+    /// Ask every live env-worker process to ship its telemetry buffers
+    /// and collect the blobs: bump the flush scalar (read non-consuming
+    /// worker-side, so one key serves every worker), then take each
+    /// worker's blob off its `ctl:tel` key.  Returns
+    /// `(worker, blob, begin_put_us)` triples — the begin timestamp is
+    /// the trainer-side half of the clock-alignment handshake the trace
+    /// merger clamps worker offsets with.  Empty in threads mode (the
+    /// trainer's own rings already hold everything) or with telemetry
+    /// off.  Telemetry keys live under the ctl prefix, so none of this
+    /// moves the store's data-frame or batched-key counters.
+    pub fn gather_worker_telemetry(&mut self, iteration: u64) -> Vec<(usize, Vec<u8>, u64)> {
+        if !crate::util::telemetry::enabled() {
+            return Vec::new();
+        }
+        let p = match &self.workers {
+            Workers::Processes(p) => p,
+            Workers::Threads => return Vec::new(),
+        };
+        self.abort_client
+            .put_scalar(CTL_TEL_FLUSH_KEY, iteration as f64 + 1.0);
+        let wait = poll_timeout(&self.cfg).min(Duration::from_secs(5));
+        let mut blobs = Vec::new();
+        for w in 0..p.plan.n_procs {
+            if p.dropped[w] {
+                continue;
+            }
+            match self.abort_client.poll_take(&ctl_tel_key(w), wait) {
+                Some(Value::Bytes(b)) => {
+                    blobs.push((w, b.to_vec(), self.last_begin_put_us[w]));
+                }
+                Some(_) => {
+                    crate::tlog!(warn, "worker {w} telemetry blob has unexpected type");
+                }
+                None => {
+                    crate::tlog!(
+                        warn,
+                        "worker {w} telemetry blob did not arrive within {:?}",
+                        wait
+                    );
+                }
+            }
+        }
+        blobs
     }
 
     /// Empty per-env episodes tagged with their scenario variants.

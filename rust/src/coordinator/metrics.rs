@@ -28,6 +28,13 @@ pub struct IterationMetrics {
     /// Mean normalized return per scenario variant (empty when the pool
     /// is homogeneous); console-only, the CSV schema stays fixed.
     pub variant_returns: Vec<(String, f64)>,
+    /// Exchange-wait latency percentiles over this iteration, from the
+    /// telemetry histogram snapshot diff (0 with telemetry off).
+    pub exchange_p50_ms: f64,
+    pub exchange_p99_ms: f64,
+    /// Wire frames the exchange served during this iteration (0 for the
+    /// in-process transport or with telemetry off).
+    pub frames: u64,
 }
 
 /// Collects records and mirrors them to CSV + console.
@@ -36,7 +43,7 @@ pub struct MetricsLog {
     csv: Option<CsvWriter>,
 }
 
-const HEADER: [&str; 12] = [
+const HEADER: [&str; 15] = [
     "iteration",
     "return_mean",
     "return_min",
@@ -49,6 +56,9 @@ const HEADER: [&str; 12] = [
     "loss",
     "clip_frac",
     "approx_kl",
+    "exchange_p50_ms",
+    "exchange_p99_ms",
+    "frames",
 ];
 
 impl MetricsLog {
@@ -104,6 +114,9 @@ impl MetricsLog {
                 format!("{}", m.loss),
                 format!("{}", m.clip_frac),
                 format!("{}", m.approx_kl),
+                format!("{}", m.exchange_p50_ms),
+                format!("{}", m.exchange_p99_ms),
+                m.frames.to_string(),
             ])?;
         }
         self.history.push(m);
@@ -149,13 +162,18 @@ mod tests {
                 iteration: 7,
                 return_mean: 0.25,
                 test_return: Some(0.3),
+                exchange_p50_ms: 1.5,
+                frames: 42,
                 ..Default::default()
             })
             .unwrap();
         }
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("iteration,"));
+        assert!(text.contains("exchange_p50_ms,exchange_p99_ms,frames"));
         assert!(text.contains("7,0.25"));
         assert!(text.contains("0.3"));
+        assert!(text.contains("1.5"));
+        assert!(text.contains(",42"));
     }
 }

@@ -10,6 +10,7 @@
 use super::envpool::EnvPool;
 use super::evaluate::{eval_policy_in, EvalResult};
 use super::metrics::{IterationMetrics, MetricsLog};
+use super::supervise::SupervisionReport;
 use crate::config::RunConfig;
 use crate::orchestrator::{Orchestrator, Protocol, WakeMode};
 use crate::rl::{flatten, max_return, CfdEnv};
@@ -106,6 +107,17 @@ impl TrainingLoop {
         let out_dir = PathBuf::from(&self.cfg.out_dir);
         std::fs::create_dir_all(&out_dir)?;
 
+        // Telemetry state for the run: the cross-process trace merger,
+        // the accumulated supervision record, and the Exchange-histogram
+        // / frame-counter baselines the per-iteration CSV deltas diff
+        // against.  All inert when `[telemetry] enabled = false`.
+        let tel_on = crate::util::telemetry::enabled();
+        let mut merger = crate::util::telemetry::TraceMerger::new();
+        let mut sup_acc = SupervisionReport::default();
+        let mut exch_prev =
+            crate::util::telemetry::snapshot_hist(crate::util::telemetry::HistId::Exchange);
+        let mut frames_prev = self.orch.stats().frames;
+
         for it in 0..self.cfg.rl.iterations {
             // --- sampling phase (Algorithm 1, lines 4-13) ---------------
             let proto = Protocol::new(&format!("it{it}"));
@@ -118,6 +130,43 @@ impl TrainingLoop {
                 false,
             )?;
             self.orch.clear(); // drop this iteration's keys
+
+            // --- telemetry: iteration deltas + worker buffer gather -----
+            let (exchange_p50_ms, exchange_p99_ms, frames) = if tel_on {
+                let snap = crate::util::telemetry::snapshot_hist(
+                    crate::util::telemetry::HistId::Exchange,
+                );
+                let d = snap.since(&exch_prev);
+                exch_prev = snap;
+                let f = self.orch.stats().frames;
+                let df = f.saturating_sub(frames_prev);
+                frames_prev = f;
+                (
+                    d.percentile_us(0.5) as f64 / 1e3,
+                    d.percentile_us(0.99) as f64 / 1e3,
+                    df,
+                )
+            } else {
+                (0.0, 0.0, 0)
+            };
+            if tel_on {
+                // Drain our own rings every iteration so they never wrap
+                // between merges, then pull each worker's shipped blob
+                // (the flush key must go out after `clear()` or it would
+                // be dropped with the iteration's data keys).
+                merger.absorb_local();
+                for (w, blob, begin_us) in self.pool.gather_worker_telemetry(it as u64) {
+                    if let Err(e) = merger.absorb_blob(&blob, begin_us) {
+                        crate::tlog!(warn, "worker {w} telemetry blob rejected: {e:#}");
+                    }
+                }
+            }
+            sup_acc.respawns += rollouts.supervision.respawns;
+            sup_acc
+                .dropped_envs
+                .extend(&rollouts.supervision.dropped_envs);
+            sup_acc.detect_s.extend(&rollouts.supervision.detect_s);
+            sup_acc.recover_s.extend(&rollouts.supervision.recover_s);
 
             // Normalize per episode: heterogeneous variants may run
             // different horizons, so each return is scaled by its own
@@ -205,11 +254,124 @@ impl TrainingLoop {
                 clip_frac: clip_acc / n_mb.max(1) as f64,
                 approx_kl: kl_acc / n_mb.max(1) as f64,
                 variant_returns,
+                exchange_p50_ms,
+                exchange_p99_ms,
+                frames,
             })?;
         }
 
         // Final checkpoint.
         self.save_checkpoint(&out_dir.join("policy_final.bin"))?;
+
+        if tel_on {
+            self.finish_telemetry(&mut merger, &sup_acc)?;
+        }
+        Ok(())
+    }
+
+    /// End-of-run telemetry consolidation: drain the trainer's remaining
+    /// rings, write the merged Chrome-trace JSON (Perfetto-loadable) and
+    /// the `TELEMETRY_{run}.json` aggregate folding in the store / pool /
+    /// backend / supervision counters, and print one summary block.
+    fn finish_telemetry(
+        &mut self,
+        merger: &mut crate::util::telemetry::TraceMerger,
+        sup: &SupervisionReport,
+    ) -> Result<()> {
+        merger.absorb_local();
+        let run = self.cfg.case.name.clone();
+        let trace_path = if self.cfg.telemetry.trace_path.is_empty() {
+            PathBuf::from(format!("TRACE_{run}.json"))
+        } else {
+            PathBuf::from(&self.cfg.telemetry.trace_path)
+        };
+        if let Some(dir) = trace_path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&trace_path, merger.chrome_trace_json())?;
+
+        let st = self.orch.stats();
+        let pc = self.pool.counters();
+        // Empty-slice-safe aggregates: NaN/-inf would corrupt the JSON.
+        let agg = |v: &[f64]| -> (f64, f64) {
+            if v.is_empty() {
+                (0.0, 0.0)
+            } else {
+                (
+                    v.iter().sum::<f64>() / v.len() as f64,
+                    v.iter().cloned().fold(0.0, f64::max),
+                )
+            }
+        };
+        let (detect_mean, detect_max) = agg(&sup.detect_s);
+        let (recover_mean, recover_max) = agg(&sup.recover_s);
+        let mut extra: Vec<(&str, Vec<(String, f64)>)> = vec![
+            (
+                "store",
+                vec![
+                    ("puts".to_string(), st.puts as f64),
+                    ("gets".to_string(), st.gets as f64),
+                    ("hits".to_string(), st.hits as f64),
+                    ("bytes_in".to_string(), st.bytes_in as f64),
+                    ("bytes_out".to_string(), st.bytes_out as f64),
+                    ("sub_ops".to_string(), st.sub_ops as f64),
+                    ("frames".to_string(), st.frames as f64),
+                    ("batched_keys".to_string(), st.batched_keys as f64),
+                ],
+            ),
+            (
+                "pool",
+                vec![
+                    ("threads_spawned".to_string(), pc.threads_spawned as f64),
+                    ("envs_built".to_string(), pc.envs_built as f64),
+                    ("grids_built".to_string(), pc.grids_built as f64),
+                    ("iterations".to_string(), pc.iterations as f64),
+                    ("exchange_allocs".to_string(), pc.exchange_allocs as f64),
+                ],
+            ),
+            (
+                "supervision",
+                vec![
+                    ("respawns".to_string(), sup.respawns as f64),
+                    ("dropped_envs".to_string(), sup.dropped_envs.len() as f64),
+                    ("incidents".to_string(), sup.detect_s.len() as f64),
+                    ("detect_s_mean".to_string(), detect_mean),
+                    ("detect_s_max".to_string(), detect_max),
+                    ("recover_s_mean".to_string(), recover_mean),
+                    ("recover_s_max".to_string(), recover_max),
+                ],
+            ),
+        ];
+        let batch = self.pool.backend().batch_stats();
+        if !batch.is_empty() {
+            extra.push((
+                "batch",
+                batch.iter().map(|&(k, v)| (k.to_string(), v as f64)).collect(),
+            ));
+        }
+        let summary = merger.summary();
+        std::fs::write(format!("TELEMETRY_{run}.json"), summary.to_json(&run, &extra))?;
+
+        println!(
+            "\n[telemetry] run {run}: {} process(es), {} dropped record(s) -> {} + TELEMETRY_{run}.json",
+            summary.n_procs,
+            summary.dropped_records,
+            trace_path.display()
+        );
+        for r in &summary.spans {
+            println!(
+                "[telemetry]   span {:<24} n {:>8}  p50 {:>9}us  p99 {:>9}us  max {:>9}us",
+                r.name, r.count, r.p50_us, r.p99_us, r.max_us
+            );
+        }
+        for r in summary.hists.iter().filter(|r| r.count > 0) {
+            println!(
+                "[telemetry]   hist {:<24} n {:>8}  p50 {:>9}us  p99 {:>9}us",
+                r.name, r.count, r.p50_us, r.p99_us
+            );
+        }
         Ok(())
     }
 

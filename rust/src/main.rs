@@ -112,6 +112,12 @@ fn default_truth_path(cfg: &RunConfig) -> String {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    relexi::util::telemetry::init(
+        cfg.telemetry.enabled,
+        cfg.telemetry.buffer_capacity,
+        &cfg.telemetry.log_level,
+        "trainer",
+    );
     // Only the LES backend consumes the 3D DNS truth package; other
     // backends (burgers) generate their own ground truth from the config.
     let truth = if cfg.rl.backend == "les" {
@@ -296,7 +302,8 @@ fn cmd_scaling(args: &Args) -> Result<()> {
 fn cmd_env_worker(args: &Args) -> Result<()> {
     use relexi::coordinator::{FaultPlan, WorkerHost};
     use relexi::orchestrator::protocol::{
-        ctl_begin_key, ctl_hb_key, ctl_hello_key, decode_begin, CTL_STOP_KEY,
+        ctl_begin_key, ctl_hb_key, ctl_hello_key, ctl_tel_key, decode_begin, CTL_STOP_KEY,
+        CTL_TEL_FLUSH_KEY,
     };
     use relexi::orchestrator::{Client, RemoteTransport, TransportFault, Value};
     use std::sync::atomic::{AtomicBool, Ordering};
@@ -324,6 +331,12 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
     let env_start = args.get_parse("env-start", 0usize)?;
     let env_count = args.get_parse("env-count", cfg.rl.n_envs)?;
     let generation = args.get_parse("generation", 0u32)?;
+    relexi::util::telemetry::init(
+        cfg.telemetry.enabled,
+        cfg.telemetry.buffer_capacity,
+        &cfg.telemetry.log_level,
+        &relexi::util::telemetry::worker_label(worker_id),
+    );
 
     let plan = FaultPlan::from_env_or(&cfg.fault.plan)?;
     let fault = TransportFault::new(
@@ -378,12 +391,18 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
     let kill_at = plan.kill_wave(worker_id, generation);
     let stall_at = plan.hbstall_wave(worker_id, generation);
     let begin_key = ctl_begin_key(worker_id);
+    let tel_key = ctl_tel_key(worker_id);
+    // Last telemetry-flush scalar this worker answered: the trainer bumps
+    // the (non-consumed, one-per-run) flush key each iteration; NaN never
+    // equals anything, so the first observation always ships.
+    let mut tel_flushed = f64::NAN;
     let mut wave: u64 = 0;
     loop {
-        // The stop flag is read non-consuming (one flag serves every
-        // worker); the begin command is taken exactly once below.
+        // The stop and telemetry-flush flags are read non-consuming (one
+        // key serves every worker); the begin command is taken exactly
+        // once below.
         match transport.wait_any(
-            &[begin_key.as_str(), CTL_STOP_KEY],
+            &[begin_key.as_str(), CTL_STOP_KEY, CTL_TEL_FLUSH_KEY],
             Duration::from_millis(500),
             false,
         ) {
@@ -392,7 +411,7 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
                     // Fault directive: die before touching this wave's
                     // begin message (it stays in the store; the
                     // supervisor's respawn path clears it).
-                    eprintln!("[fault] kill: worker {worker_id} exiting at wave {wave}");
+                    relexi::tlog!(warn, "[fault] kill: worker {worker_id} exiting at wave {wave}");
                     break;
                 }
                 if stall_at.is_some_and(|sw| wave >= sw) {
@@ -400,6 +419,7 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
                 }
                 match transport.take(&begin_key) {
                     Ok(Some(Value::Bytes(b))) => {
+                        relexi::util::telemetry::note_begin_recv();
                         let (tag, envs) = decode_begin(&b)?;
                         host.begin(&tag, &envs)?;
                         wave += 1;
@@ -408,18 +428,41 @@ fn cmd_env_worker(args: &Args) -> Result<()> {
                     // the next wait re-observes whatever is there.
                     Ok(_) => continue,
                     Err(e) => {
-                        eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+                        relexi::tlog!(
+                            warn,
+                            "env-worker {worker_id}: exchange lost ({e:#}); exiting"
+                        );
                         break;
                     }
                 }
             }
-            Ok(Some(_)) => break, // stop flag posted: clean shutdown
+            Ok(Some((2, v))) => {
+                // Telemetry flush: ship this process's buffers once per
+                // bump; an already-answered bump waits out a short tick
+                // (the key stays put, so this arm would otherwise spin).
+                match v.as_scalar() {
+                    Some(s) if s != tel_flushed => {
+                        tel_flushed = s;
+                        client.put_bytes(&tel_key, relexi::util::telemetry::serialize_process());
+                    }
+                    _ => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+            Ok(Some(_)) => {
+                // Stop flag posted: clean shutdown.  Ship the tail of the
+                // telemetry buffers first (best-effort; the trainer may
+                // already be gone).
+                if relexi::util::telemetry::enabled() {
+                    client.put_bytes(&tel_key, relexi::util::telemetry::serialize_process());
+                }
+                break;
+            }
             Ok(None) => continue, // timeout tick; poll again
             Err(e) => {
                 // RemoteTransport already retried the dial + one fresh
                 // reconnect per op; a surfaced error means the trainer
                 // is gone.  Exit cleanly rather than spin.
-                eprintln!("env-worker {worker_id}: exchange lost ({e:#}); exiting");
+                relexi::tlog!(warn, "env-worker {worker_id}: exchange lost ({e:#}); exiting");
                 break;
             }
         }

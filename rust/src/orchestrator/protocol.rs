@@ -63,6 +63,20 @@ pub fn ctl_hb_key(worker: usize) -> String {
 /// Shared stop flag for all env-worker processes (see [`ctl_begin_key`]).
 pub const CTL_STOP_KEY: &str = "__relexi:ctl:stop";
 
+/// Telemetry blob key for worker `w`: the worker serializes its span rings
+/// and histograms (`util::telemetry::serialize_process`) and puts them here
+/// when the trainer bumps [`CTL_TEL_FLUSH_KEY`]; the trainer takes the blob
+/// and merges it into the run-wide trace.  Ctl-prefixed, so exempt from the
+/// `frames`/`batched_keys` wave accounting like every other control key.
+pub fn ctl_tel_key(worker: usize) -> String {
+    format!("__relexi:ctl:tel:w{worker}")
+}
+
+/// Telemetry flush signal: a scalar the trainer bumps after each
+/// iteration's `clear()`; workers read it non-destructively (like
+/// [`CTL_STOP_KEY`]) and ship their buffers when the value advances.
+pub const CTL_TEL_FLUSH_KEY: &str = "__relexi:ctl:tel:flush";
+
 /// Encode one iteration's begin message for a worker process: the run
 /// tag plus `(global env index, rng seed)` per hosted env.  The seed is
 /// [`crate::util::rng::Rng::split_seed`] output, so the worker rebuilds
@@ -262,6 +276,10 @@ mod tests {
         assert!(ctl_begin_key(3).starts_with("__relexi:ctl:"));
         assert!(ctl_hb_key(3).starts_with("__relexi:ctl:hb:"));
         assert!(CTL_STOP_KEY.starts_with("__relexi:ctl:"));
+        assert_ne!(ctl_tel_key(0), ctl_tel_key(1));
+        assert_ne!(ctl_tel_key(0), CTL_TEL_FLUSH_KEY);
+        assert!(ctl_tel_key(2).starts_with("__relexi:ctl:tel:"));
+        assert!(CTL_TEL_FLUSH_KEY.starts_with("__relexi:ctl:tel:"));
     }
 
     #[test]

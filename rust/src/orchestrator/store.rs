@@ -433,6 +433,7 @@ impl ShardedStore {
     /// waiters registered on this key (hit index handed over directly) or
     /// every subscriber via the sequence lock.
     pub fn put<K: KeyLike + ?Sized>(&self, key: &K, value: Value) {
+        let _t = crate::util::telemetry::HistId::StorePut.timer();
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats
             .bytes_in
@@ -469,6 +470,7 @@ impl ShardedStore {
         if items.is_empty() {
             return;
         }
+        let _t = crate::util::telemetry::HistId::StorePutMany.timer();
         self.stats.puts.fetch_add(items.len() as u64, Ordering::Relaxed);
         self.stats
             .batched_keys
@@ -514,6 +516,7 @@ impl ShardedStore {
         if keys.is_empty() {
             return Vec::new();
         }
+        let _t = crate::util::telemetry::HistId::StoreTakeMany.timer();
         self.stats.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
         self.stats
             .batched_keys
@@ -578,6 +581,7 @@ impl ShardedStore {
     /// Fetch the value, if present.  Tensor/byte payloads are shared —
     /// the returned clone is a refcount bump, not a deep copy.
     pub fn get<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
+        let _t = crate::util::telemetry::HistId::StoreGet.timer();
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
         let inner = self.shard_at(key.hash64()).inner.lock().unwrap();
         let v = inner.map.get(key.name()).cloned();
@@ -589,6 +593,7 @@ impl ShardedStore {
 
     /// Atomically fetch and remove (consume a message).
     pub fn take<K: KeyLike + ?Sized>(&self, key: &K) -> Option<Value> {
+        let _t = crate::util::telemetry::HistId::StoreTake.timer();
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.shard_at(key.hash64()).inner.lock().unwrap();
         let v = inner.map.remove(key.name());

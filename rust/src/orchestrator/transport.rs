@@ -1108,7 +1108,7 @@ impl TransportFault {
         if let Some(k) = self.kill_after_puts {
             let n = self.puts.fetch_add(1, Ordering::Relaxed) + 1;
             if n >= k {
-                eprintln!("[fault] killput: aborting process after {n} puts");
+                crate::tlog!(warn, "[fault] killput: aborting process after {n} puts");
                 std::process::abort();
             }
         }
@@ -1274,6 +1274,7 @@ impl RemoteTransport {
                 if let Some(conn) = slot.as_mut() {
                     let mut frame = Vec::new();
                     req.encode_into(&mut frame);
+                    crate::tevent!("net.send", frame.len());
                     match Self::rpc_on(conn, &frame, deadline) {
                         Ok(resp) => return Ok(resp),
                         Err(_) => *slot = None, // dead pipe: retry pooled below
@@ -1287,6 +1288,7 @@ impl RemoteTransport {
     fn rpc_pooled(&self, req: &Request, deadline: Duration, mut drop_first: bool) -> Result<Response> {
         let mut frame = Vec::new();
         req.encode_into(&mut frame);
+        crate::tevent!("net.send", frame.len());
         let mut last = None;
         for attempt in 0..2 {
             // First attempt reuses a pooled connection; the retry always
@@ -1331,6 +1333,7 @@ impl RemoteTransport {
     /// responses in order (one vectored write on tcp, one ring pass on
     /// shm).
     fn burst_on(conn: &mut Box<dyn Conn>, frames: &[Vec<u8>], deadline: Duration) -> Result<Vec<Response>> {
+        crate::tevent!("net.send_burst", frames.iter().map(|f| f.len()).sum::<usize>());
         let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
         conn.send_many(&refs)?;
         let mut out = Vec::with_capacity(frames.len());
@@ -1670,7 +1673,7 @@ fn accept_loop(listener: TcpListener, store: Arc<ShardedStore>, stop: Arc<Atomic
                     .spawn(move || serve_conn(stream, store, stop))
                 {
                     Ok(h) => handlers.push(h),
-                    Err(e) => eprintln!("exchange: spawn handler failed: {e}"),
+                    Err(e) => crate::tlog!(error, "exchange: spawn handler failed: {e}"),
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -1720,7 +1723,7 @@ fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>, stop: Arc<AtomicBool>
     if let Err(e) = serve_conn_inner(ServerConn::Tcp(tcp), store, stop) {
         let msg = format!("{e:#}");
         if !msg.contains("connection closed") && !msg.contains("peer closed") {
-            eprintln!("exchange: connection error: {msg}");
+            crate::tlog!(warn, "exchange: connection error: {msg}");
         }
     }
 }
@@ -1755,6 +1758,31 @@ fn counts_as_data_frame(req: &Request) -> bool {
     }
 }
 
+/// Record one telemetry instant per served data frame, named by request
+/// kind, with the wire size as payload.  Called at exactly the
+/// [`counts_as_data_frame`] site, so in a merged trace the per-wave frame
+/// event count equals `StoreStats.frames` by construction.  Each arm is its
+/// own macro expansion so the name interning stays per-site static (no
+/// locks, no allocation on the hot path).
+fn record_frame_event(req: &Request, bytes: usize) {
+    match req {
+        Request::Put { .. } => crate::tevent!("frame.put", bytes),
+        Request::Get { .. } => crate::tevent!("frame.get", bytes),
+        Request::Take { .. } => crate::tevent!("frame.take", bytes),
+        Request::Exists { .. } => crate::tevent!("frame.exists", bytes),
+        Request::Delete { .. } => crate::tevent!("frame.delete", bytes),
+        Request::Wait { .. } => crate::tevent!("frame.wait", bytes),
+        Request::WaitAny { .. } => crate::tevent!("frame.wait_any", bytes),
+        Request::SubAdd { .. } => crate::tevent!("frame.sub_add", bytes),
+        Request::SubRemove { .. } => crate::tevent!("frame.sub_remove", bytes),
+        Request::SubWait { .. } => crate::tevent!("frame.sub_wait", bytes),
+        Request::SubWaitMany { .. } => crate::tevent!("frame.sub_wait_many", bytes),
+        Request::PutMany { .. } => crate::tevent!("frame.put_many", bytes),
+        Request::TakeMany { .. } => crate::tevent!("frame.take_many", bytes),
+        Request::Bye | Request::ShmOpen { .. } | Request::Clear => {}
+    }
+}
+
 fn serve_conn_inner(
     mut conn: ServerConn,
     store: Arc<ShardedStore>,
@@ -1784,6 +1812,7 @@ fn serve_conn_inner(
         };
         if counts_as_data_frame(&req) {
             store.note_frame();
+            record_frame_event(&req, req_buf.len());
         }
         // The shm upgrade swaps the pipe itself, so it is handled
         // outside the plain request->response match.

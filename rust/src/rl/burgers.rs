@@ -732,10 +732,15 @@ impl CfdEnv for BurgersEnv {
             st.pending -= wave.len();
             drop(st);
 
-            pool::global().parallel_chunks_mut(&mut wave, 1, |_, item| {
-                let it = &mut item[0];
-                it.out = it.ctx.advance_and_score();
-            });
+            {
+                let _sp = crate::span!("burgers.wave");
+                let _t = crate::util::telemetry::HistId::WaveAssembly.timer();
+                crate::tcount!("burgers.wave_envs", wave.len());
+                pool::global().parallel_chunks_mut(&mut wave, 1, |_, item| {
+                    let it = &mut item[0];
+                    it.out = it.ctx.advance_and_score();
+                });
+            }
 
             // Publish counters before the results so any step that has
             // returned is already reflected in them.
@@ -853,6 +858,15 @@ impl BurgersBackend {
 impl CfdBackend for BurgersBackend {
     fn name(&self) -> &str {
         "burgers"
+    }
+
+    fn batch_stats(&self) -> Vec<(&'static str, u64)> {
+        let c = self.batch.counters();
+        vec![
+            ("waves", c.waves as u64),
+            ("envs_stepped", c.envs_stepped as u64),
+            ("max_wave", c.max_wave as u64),
+        ]
     }
 
     fn make_env(&self, rv: &ResolvedVariant) -> Result<Box<dyn CfdEnv>> {

@@ -132,6 +132,13 @@ pub trait CfdBackend: Send + Sync {
     /// Build one environment for a resolved variant, applying its
     /// init-family restriction if set.
     fn make_env(&self, rv: &ResolvedVariant) -> Result<Box<dyn CfdEnv>>;
+
+    /// Backend-internal counters for the end-of-run telemetry summary
+    /// (e.g. the Burgers wave-batcher's wave/env counts).  Empty by
+    /// default: most backends have nothing run-wide to report.
+    fn batch_stats(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
 }
 
 /// The paper's 3D spectral HIT case as a backend: one shared `Arc<Grid>`

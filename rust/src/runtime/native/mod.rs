@@ -291,6 +291,8 @@ impl NativePolicy {
 
     /// Evaluate mean/value heads on `n_samples` observations.
     pub fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+        let _sp = crate::span!("policy.forward");
+        let _t = crate::util::telemetry::HistId::PolicyForward.timer();
         anyhow::ensure!(n_samples > 0, "empty forward batch");
         anyhow::ensure!(
             theta.len() == self.layout.total,
@@ -406,6 +408,8 @@ impl NativeTrainer {
     /// static.  [`NativeTrainer::loss_and_grad`] stays batch-size
     /// agnostic for gradient checks and diagnostics.
     pub fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics> {
+        let _sp = crate::span!("train.minibatch");
+        let _t = crate::util::telemetry::HistId::TrainMinibatch.timer();
         anyhow::ensure!(
             mb.act.len() == self.spec.minibatch,
             "minibatch size {} != {}",

@@ -130,6 +130,8 @@ impl PolicyRuntime {
     /// (`obs.len() == n_samples * features()`), chunking over the
     /// compiled batch sizes and zero-padding the tail chunk.
     pub fn forward(&self, theta: &[f32], obs: &[f32], n_samples: usize) -> Result<PolicyOut> {
+        let _sp = crate::span!("policy.forward");
+        let _t = crate::util::telemetry::HistId::PolicyForward.timer();
         anyhow::ensure!(
             obs.len() == n_samples * self.feat,
             "obs len {} != {n_samples} x {}",

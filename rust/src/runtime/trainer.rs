@@ -117,6 +117,8 @@ impl TrainerRuntime {
     /// Apply one compiled PPO+Adam step on a minibatch of exactly
     /// `self.minibatch` samples.
     pub fn train_minibatch(&mut self, mb: &Minibatch) -> Result<TrainMetrics> {
+        let _sp = crate::span!("train.minibatch");
+        let _t = crate::util::telemetry::HistId::TrainMinibatch.timer();
         let b = self.minibatch;
         anyhow::ensure!(mb.act.len() == b, "minibatch size {} != {b}", mb.act.len());
         anyhow::ensure!(mb.obs.len() == b * self.feat);

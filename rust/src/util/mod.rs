@@ -12,5 +12,6 @@ pub mod retry;
 pub mod rng;
 pub mod simd;
 pub mod stats;
+pub mod telemetry;
 
 pub use rng::Rng;

@@ -1,0 +1,1454 @@
+//! Run-wide telemetry: lock-free per-thread span/event rings, log-bucketed
+//! latency histograms, a leveled `tlog!` logger, and a cross-process trace
+//! merger that emits one Chrome-trace-event JSON (Perfetto-loadable) per run.
+//!
+//! Design constraints (PR 10):
+//!
+//! * **Near-zero cost when disabled.** Every recording entry point first does
+//!   a single relaxed load of a global `AtomicBool`; when `[telemetry]
+//!   enabled = false` no clock is read, no ring is touched, no allocation
+//!   happens.  `span!` expands to an `Option<SpanGuard>` that is `None`.
+//! * **Zero steady-state allocation when enabled.** A thread's ring buffer
+//!   is allocated once, on that thread's first record (warm-up); span names
+//!   are `&'static str`s interned once per *call site* through a per-site
+//!   `static AtomicU32` cache, so the hot path writes one 32-byte POD record
+//!   into a preallocated slot and bumps an atomic head.  The steady-state
+//!   alloc gates therefore stay green with telemetry off AND on.
+//! * **No external deps.** Wire format is hand-rolled little-endian (binio
+//!   style); the trace/summary JSON is hand-written like `util::bench`.
+//!
+//! Concurrency: each ring has exactly one writer (its owning thread) and is
+//! drained by the process's telemetry collector (trainer main thread, or the
+//! env-worker control thread).  The drain uses the same seqlock discipline as
+//! the store's waiter path: snapshot `head`, volatile-read the slots, re-read
+//! `head`, and discard any record the writer may have overwritten mid-read.
+//! Records are plain integers (names are interned ids, not pointers), so a
+//! torn read is harmless garbage that the index check throws away.
+//!
+//! Cross-process story: env-worker processes record locally and ship their
+//! rings over the store ctl plane (`__relexi:ctl:tel:wK`, exempt from the
+//! `frames`/`batched_keys` accounting) when the trainer bumps the flush key
+//! at iteration end.  The merger maps each worker's monotonic timestamps onto
+//! the trainer's timeline using the wall-clock anchor captured at `init` and
+//! clamps with the begin-key handshake (a worker cannot have *received* a
+//! begin before the trainer *put* it), then writes all processes into a
+//! single trace.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------------
+
+/// Master switch for span/event/histogram recording.  One relaxed load on
+/// every entry point; everything downstream is skipped when false.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Current log level for `tlog!` (independent of the tracing switch: logging
+/// works even when tracing is off).
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Ring capacity (records per thread), fixed at ring creation.
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(65_536);
+
+/// Monotonic epoch all of this process's timestamps are relative to.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Wall-clock (unix µs) captured at the same moment as `EPOCH`; the coarse
+/// cross-process alignment anchor.
+static WALL_ANCHOR_US: AtomicU64 = AtomicU64::new(0);
+
+/// Process label for logs and the merged trace ("trainer", "w3", ...).
+static PROC_LABEL: OnceLock<String> = OnceLock::new();
+
+/// Monotonic µs of the latest begin-key receipt (env workers only); ships in
+/// the blob header as the causality clamp for clock alignment.
+static BEGIN_RECV_US: AtomicU64 = AtomicU64::new(0);
+
+/// Sequential thread ids for ring/trace labeling.
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// Interned span/event names; a record stores `index + 1` (0 = unset).
+static NAMES: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+/// Every ring ever created in this process (rings outlive their threads).
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+
+/// Initialize telemetry for this process.  Idempotent on the label/epoch;
+/// the switches are plain stores so tests may re-init.  `RELEXI_LOG`
+/// overrides the configured log level when set to a valid level name.
+pub fn init(enabled: bool, ring_capacity: usize, log_level: &str, proc_label: &str) {
+    let level = match std::env::var("RELEXI_LOG") {
+        Ok(v) => Level::parse(&v).or_else(|| Level::parse(log_level)),
+        Err(_) => Level::parse(log_level),
+    }
+    .unwrap_or(Level::Info);
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+    RING_CAPACITY.store(ring_capacity.max(16), Ordering::Relaxed);
+    let _ = PROC_LABEL.set(proc_label.to_string());
+    // Capture the monotonic epoch and the wall anchor back-to-back so the
+    // pair describes the same instant (within a few ns).
+    let _ = EPOCH.set(Instant::now());
+    WALL_ANCHOR_US.store(unix_now_us(), Ordering::Relaxed);
+    ENABLED.store(enabled, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotonic µs since this process's telemetry epoch.
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+fn unix_now_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// This process's label ("trainer", "w0", ...); "-" before `init`.
+pub fn proc_label() -> &'static str {
+    PROC_LABEL.get().map(|s| s.as_str()).unwrap_or("-")
+}
+
+/// Record the receipt of a begin key (env workers call this from the control
+/// loop); the value ships in the telemetry blob as the causality clamp.
+pub fn note_begin_recv() {
+    BEGIN_RECV_US.store(now_us().max(1), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Leveled logging
+// ---------------------------------------------------------------------------
+
+/// Log severity for `tlog!`.  Ordered so that `level <= configured` emits.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+#[inline]
+pub fn log_enabled(level: Level) -> bool {
+    (level as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one structured stderr line: `[relexi LEVEL proc] message`.  The
+/// prefix makes multi-process stderr greppable by worker id.
+pub fn log_emit(level: Level, args: fmt::Arguments<'_>) {
+    eprintln!("[relexi {} {}] {}", level.tag(), proc_label(), args);
+}
+
+/// Leveled log macro: `tlog!(warn, "worker {w} died")`.  The level is a
+/// lowercase ident; emission is gated on `[telemetry] log_level` /
+/// `RELEXI_LOG`, independent of the tracing switch.
+#[macro_export]
+macro_rules! tlog {
+    (error, $($arg:tt)*) => { $crate::tlog!(@ $crate::util::telemetry::Level::Error, $($arg)*) };
+    (warn,  $($arg:tt)*) => { $crate::tlog!(@ $crate::util::telemetry::Level::Warn,  $($arg)*) };
+    (info,  $($arg:tt)*) => { $crate::tlog!(@ $crate::util::telemetry::Level::Info,  $($arg)*) };
+    (debug, $($arg:tt)*) => { $crate::tlog!(@ $crate::util::telemetry::Level::Debug, $($arg)*) };
+    (@ $lvl:expr, $($arg:tt)*) => {{
+        if $crate::util::telemetry::log_enabled($lvl) {
+            $crate::util::telemetry::log_emit($lvl, format_args!($($arg)*));
+        }
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Name interning
+// ---------------------------------------------------------------------------
+
+/// Intern a call site's name once; later hits are a single relaxed load.
+/// The site cache lives in a `static` the macros expand inline, so the lock
+/// is taken exactly once per call site per process lifetime (warm-up).
+pub fn intern_site(site: &AtomicU32, name: &'static str) -> u32 {
+    let id = site.load(Ordering::Relaxed);
+    if id != 0 {
+        return id;
+    }
+    let mut names = NAMES.lock().unwrap();
+    // Another thread may have won the race for this same site.
+    let id = site.load(Ordering::Relaxed);
+    if id != 0 {
+        return id;
+    }
+    names.push(name);
+    let id = names.len() as u32;
+    site.store(id, Ordering::Relaxed);
+    id
+}
+
+fn names_snapshot() -> Vec<String> {
+    NAMES.lock().unwrap().iter().map(|s| s.to_string()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Records and rings
+// ---------------------------------------------------------------------------
+
+pub const KIND_SPAN: u8 = 0;
+pub const KIND_INSTANT: u8 = 1;
+pub const KIND_COUNTER: u8 = 2;
+
+/// One telemetry record: 32 bytes of plain integers (no pointers, so a torn
+/// seqlock read is discardable garbage, never UB-prone).
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C)]
+pub struct Record {
+    /// Span start / event time, µs since the process epoch.
+    pub t_us: u64,
+    /// Event payload (byte count, wave size, worker id, ...).
+    pub a: u64,
+    /// Span duration in µs (0 for instants/counters).
+    pub dur_us: u32,
+    /// Interned name id (see `intern_site`).
+    pub name_id: u32,
+    pub kind: u8,
+    _pad: [u8; 7],
+}
+
+impl Record {
+    fn new(t_us: u64, a: u64, dur_us: u32, name_id: u32, kind: u8) -> Record {
+        Record { t_us, a, dur_us, name_id, kind, _pad: [0; 7] }
+    }
+}
+
+/// Single-writer ring buffer of records.  The owning thread writes; the
+/// process's collector drains with the seqlock discipline described in the
+/// module docs.  `shipped` is the collector's watermark so per-iteration
+/// drains are incremental.
+pub struct Ring {
+    slots: Box<[UnsafeCell<Record>]>,
+    head: AtomicU64,
+    shipped: AtomicU64,
+    tid: u32,
+    label: String,
+}
+
+// SAFETY: the slots are raced intentionally under the seqlock protocol; see
+// the module docs.  All fields of `Record` are plain integers.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn new(capacity: usize, tid: u32, label: String) -> Ring {
+        let zero = Record::new(0, 0, 0, 0, KIND_SPAN);
+        Ring {
+            slots: (0..capacity.max(16)).map(|_| UnsafeCell::new(zero)).collect(),
+            head: AtomicU64::new(0),
+            shipped: AtomicU64::new(0),
+            tid,
+            label,
+        }
+    }
+
+    #[inline]
+    fn push(&self, rec: Record) {
+        let cap = self.slots.len() as u64;
+        let h = self.head.load(Ordering::Relaxed);
+        // SAFETY: single writer (the owning thread); readers tolerate torn
+        // slots via the head re-check in `drain`.
+        unsafe {
+            std::ptr::write_volatile(self.slots[(h % cap) as usize].get(), rec);
+        }
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Drain records written since the last drain.  Returns the surviving
+    /// records (oldest first) and how many were dropped — either overwritten
+    /// before this drain (wraparound) or discarded as potentially torn.
+    fn drain(&self) -> (Vec<Record>, u64) {
+        let cap = self.slots.len() as u64;
+        let h1 = self.head.load(Ordering::Acquire);
+        let from = self.shipped.load(Ordering::Relaxed);
+        let start = from.max(h1.saturating_sub(cap));
+        let mut out = Vec::with_capacity((h1 - start) as usize);
+        for idx in start..h1 {
+            // SAFETY: volatile POD read; torn results are filtered below.
+            out.push(unsafe { std::ptr::read_volatile(self.slots[(idx % cap) as usize].get()) });
+        }
+        // Any record the writer might have overwritten while we read is
+        // suspect; keep only indices still safely inside the window.
+        let h2 = self.head.load(Ordering::Acquire);
+        let safe_from = h2.saturating_sub(cap);
+        let torn = safe_from.saturating_sub(start) as usize;
+        if torn > 0 {
+            out.drain(..torn.min(out.len()));
+        }
+        let dropped = (start - from) + torn as u64;
+        self.shipped.store(h1, Ordering::Relaxed);
+        (out, dropped)
+    }
+}
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+fn make_ring() -> Arc<Ring> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let label = std::thread::current()
+        .name()
+        .map(|n| n.to_string())
+        .unwrap_or_else(|| format!("t{tid}"));
+    let ring = Arc::new(Ring::new(RING_CAPACITY.load(Ordering::Relaxed), tid, label));
+    REGISTRY.lock().unwrap().push(ring.clone());
+    ring
+}
+
+#[inline]
+fn push_record(rec: Record) {
+    LOCAL_RING.with(|cell| cell.get_or_init(make_ring).push(rec));
+}
+
+/// One ring's drained contents, for serialization or local merging.
+pub struct RingDrain {
+    pub tid: u32,
+    pub label: String,
+    pub dropped: u64,
+    pub records: Vec<Record>,
+}
+
+/// Drain every ring in this process (incremental since the last drain).
+pub fn drain_all() -> Vec<RingDrain> {
+    let rings: Vec<Arc<Ring>> = REGISTRY.lock().unwrap().clone();
+    rings
+        .iter()
+        .map(|r| {
+            let (records, dropped) = r.drain();
+            RingDrain { tid: r.tid, label: r.label.clone(), dropped, records }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Spans and events
+// ---------------------------------------------------------------------------
+
+/// RAII span guard: records one `KIND_SPAN` record (start + duration) on
+/// drop.  Only constructed when telemetry is enabled.
+pub struct SpanGuard {
+    name_id: u32,
+    start_us: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = now_us().saturating_sub(self.start_us).min(u32::MAX as u64) as u32;
+        push_record(Record::new(self.start_us, 0, dur, self.name_id, KIND_SPAN));
+    }
+}
+
+#[inline]
+pub fn span_site(site: &AtomicU32, name: &'static str) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    Some(SpanGuard { name_id: intern_site(site, name), start_us: now_us() })
+}
+
+#[inline]
+pub fn event_site(site: &AtomicU32, name: &'static str, a: u64, kind: u8) {
+    if !enabled() {
+        return;
+    }
+    let id = intern_site(site, name);
+    push_record(Record::new(now_us(), a, 0, id, kind));
+}
+
+/// Open a named span for the enclosing scope:
+/// `let _sp = span!("wave.collect");`
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {{
+        static __TEL_SITE: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+        $crate::util::telemetry::span_site(&__TEL_SITE, $name)
+    }};
+}
+
+/// Record an instant event with a payload: `tevent!("frame.put", bytes)`.
+#[macro_export]
+macro_rules! tevent {
+    ($name:literal, $a:expr) => {{
+        static __TEL_SITE: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+        $crate::util::telemetry::event_site(
+            &__TEL_SITE,
+            $name,
+            $a as u64,
+            $crate::util::telemetry::KIND_INSTANT,
+        )
+    }};
+}
+
+/// Record a counter/gauge sample: `tcount!("wave.envs", n)`.  Rendered as a
+/// Chrome `"C"` (counter) event so Perfetto plots it as a time series.
+#[macro_export]
+macro_rules! tcount {
+    ($name:literal, $a:expr) => {{
+        static __TEL_SITE: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+        $crate::util::telemetry::event_site(
+            &__TEL_SITE,
+            $name,
+            $a as u64,
+            $crate::util::telemetry::KIND_COUNTER,
+        )
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Latency histograms
+// ---------------------------------------------------------------------------
+
+/// The instrumented latency distributions.  Enum-indexed into a static
+/// table so recording is a couple of relaxed `fetch_add`s.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum HistId {
+    StorePut = 0,
+    StoreGet = 1,
+    StoreTake = 2,
+    StorePutMany = 3,
+    StoreTakeMany = 4,
+    Exchange = 5,
+    PolicyForward = 6,
+    TrainMinibatch = 7,
+    WaveAssembly = 8,
+}
+
+pub const N_HISTS: usize = 9;
+
+pub const HIST_NAMES: [&str; N_HISTS] = [
+    "store.put",
+    "store.get",
+    "store.take",
+    "store.put_many",
+    "store.take_many",
+    "exchange.wait",
+    "policy.forward",
+    "train.minibatch",
+    "burgers.wave_assembly",
+];
+
+/// 256 log buckets over µs: exact below 16 µs, then 4 sub-buckets per
+/// octave (~19% relative resolution) up to u64::MAX.
+pub const N_BUCKETS: usize = 256;
+
+struct HistCell {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_U64: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const HIST_ZERO: HistCell = HistCell {
+    buckets: [ZERO_U64; N_BUCKETS],
+    count: AtomicU64::new(0),
+    sum_us: AtomicU64::new(0),
+};
+
+static HISTS: [HistCell; N_HISTS] = [HIST_ZERO; N_HISTS];
+
+/// Map a µs value to its bucket index.
+pub fn bucket_index(us: u64) -> usize {
+    if us < 16 {
+        us as usize
+    } else {
+        let o = 63 - us.leading_zeros() as u64; // >= 4
+        let sub = (us >> (o - 2)) & 3;
+        (16 + (o - 4) * 4 + sub) as usize
+    }
+}
+
+/// Inclusive lower bound of a bucket, in µs.
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < 16 {
+        idx as u64
+    } else {
+        let o = 4 + (idx - 16) as u64 / 4;
+        let sub = (idx - 16) as u64 % 4;
+        (4 + sub) << (o - 2)
+    }
+}
+
+impl HistId {
+    #[inline]
+    pub fn observe_us(self, us: u64) {
+        if !enabled() {
+            return;
+        }
+        let h = &HISTS[self as usize];
+        h.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        h.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Start timing an operation; records on guard drop.  `None` (free)
+    /// when telemetry is disabled.
+    #[inline]
+    pub fn timer(self) -> HistTimer {
+        if enabled() {
+            HistTimer(Some((self, Instant::now())))
+        } else {
+            HistTimer(None)
+        }
+    }
+}
+
+/// RAII histogram timer from [`HistId::timer`].
+pub struct HistTimer(Option<(HistId, Instant)>);
+
+impl Drop for HistTimer {
+    fn drop(&mut self) {
+        if let Some((id, t0)) = self.0.take() {
+            id.observe_us(t0.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+/// Sparse point-in-time copy of one histogram.
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    /// Non-zero buckets as `(bucket_index, count)`.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistSnapshot {
+    /// Counts accumulated since `earlier` (which must be an older snapshot
+    /// of the same histogram).
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut dense = [0u64; N_BUCKETS];
+        for &(i, c) in &self.buckets {
+            dense[i as usize] = c;
+        }
+        for &(i, c) in &earlier.buckets {
+            dense[i as usize] = dense[i as usize].saturating_sub(c);
+        }
+        HistSnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            buckets: dense
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| (i as u32, c))
+                .collect(),
+        }
+    }
+
+    /// Approximate percentile (0.0..=1.0) in µs: the floor of the bucket
+    /// holding the p-th sample.  0 when empty.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        let mut sorted = self.buckets.clone();
+        sorted.sort_unstable_by_key(|&(i, _)| i);
+        for (i, c) in sorted {
+            seen += c;
+            if seen >= target {
+                return bucket_floor(i as usize);
+            }
+        }
+        bucket_floor(N_BUCKETS - 1)
+    }
+}
+
+/// Snapshot one histogram's current state.
+pub fn snapshot_hist(id: HistId) -> HistSnapshot {
+    let h = &HISTS[id as usize];
+    let buckets = h
+        .buckets
+        .iter()
+        .enumerate()
+        .filter_map(|(i, b)| {
+            let c = b.load(Ordering::Relaxed);
+            (c > 0).then_some((i as u32, c))
+        })
+        .collect();
+    HistSnapshot {
+        count: h.count.load(Ordering::Relaxed),
+        sum_us: h.sum_us.load(Ordering::Relaxed),
+        buckets,
+    }
+}
+
+/// Snapshot all histograms, indexed by `HistId as usize`.
+pub fn snapshot_all_hists() -> Vec<HistSnapshot> {
+    const IDS: [HistId; N_HISTS] = [
+        HistId::StorePut,
+        HistId::StoreGet,
+        HistId::StoreTake,
+        HistId::StorePutMany,
+        HistId::StoreTakeMany,
+        HistId::Exchange,
+        HistId::PolicyForward,
+        HistId::TrainMinibatch,
+        HistId::WaveAssembly,
+    ];
+    IDS.iter().map(|&id| snapshot_hist(id)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Wire format: ship a process's telemetry over the store ctl plane
+// ---------------------------------------------------------------------------
+
+const BLOB_MAGIC: &[u8; 4] = b"RTL1";
+
+fn w_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn w_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn w_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn w_str(b: &mut Vec<u8>, s: &str) {
+    w_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("telemetry blob truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+}
+
+/// Serialize everything recorded in this process since the last call:
+/// header (wall anchor, begin-recv clamp), the interned name table, every
+/// ring's new records, and cumulative histogram state.
+pub fn serialize_process() -> Vec<u8> {
+    let drains = drain_all();
+    // Names are locked AFTER the drain so every id in the records resolves.
+    let names = names_snapshot();
+    let mut b = Vec::with_capacity(4096);
+    b.extend_from_slice(BLOB_MAGIC);
+    w_str(&mut b, proc_label());
+    w_u64(&mut b, WALL_ANCHOR_US.load(Ordering::Relaxed));
+    w_u64(&mut b, BEGIN_RECV_US.load(Ordering::Relaxed));
+    w_u32(&mut b, names.len() as u32);
+    for n in &names {
+        w_str(&mut b, n);
+    }
+    w_u32(&mut b, drains.len() as u32);
+    for d in &drains {
+        w_u32(&mut b, d.tid);
+        w_str(&mut b, &d.label);
+        w_u64(&mut b, d.dropped);
+        w_u32(&mut b, d.records.len() as u32);
+        for r in &d.records {
+            w_u64(&mut b, r.t_us);
+            w_u64(&mut b, r.a);
+            w_u32(&mut b, r.dur_us);
+            w_u32(&mut b, r.name_id);
+            w_u8(&mut b, r.kind);
+        }
+    }
+    let hists = snapshot_all_hists();
+    w_u32(&mut b, hists.len() as u32);
+    for h in &hists {
+        w_u64(&mut b, h.count);
+        w_u64(&mut b, h.sum_us);
+        w_u32(&mut b, h.buckets.len() as u32);
+        for &(i, c) in &h.buckets {
+            w_u32(&mut b, i);
+            w_u64(&mut b, c);
+        }
+    }
+    b
+}
+
+/// A parsed process blob (one `serialize_process` payload).
+pub struct ProcBlob {
+    pub label: String,
+    pub wall_anchor_us: u64,
+    pub begin_recv_us: u64,
+    pub names: Vec<String>,
+    pub rings: Vec<RingDrain>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+pub fn parse_blob(bytes: &[u8]) -> Result<ProcBlob> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != BLOB_MAGIC {
+        bail!("not a telemetry blob (bad magic)");
+    }
+    let label = r.str()?;
+    let wall_anchor_us = r.u64()?;
+    let begin_recv_us = r.u64()?;
+    let n_names = r.u32()? as usize;
+    let mut names = Vec::with_capacity(n_names);
+    for _ in 0..n_names {
+        names.push(r.str()?);
+    }
+    let n_rings = r.u32()? as usize;
+    let mut rings = Vec::with_capacity(n_rings);
+    for _ in 0..n_rings {
+        let tid = r.u32()?;
+        let rlabel = r.str()?;
+        let dropped = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t_us = r.u64()?;
+            let a = r.u64()?;
+            let dur_us = r.u32()?;
+            let name_id = r.u32()?;
+            let kind = r.u8()?;
+            records.push(Record::new(t_us, a, dur_us, name_id, kind));
+        }
+        rings.push(RingDrain { tid, label: rlabel, dropped, records });
+    }
+    let n_hists = r.u32()? as usize;
+    let mut hists = Vec::with_capacity(n_hists);
+    for _ in 0..n_hists {
+        let count = r.u64()?;
+        let sum_us = r.u64()?;
+        let nb = r.u32()? as usize;
+        let mut buckets = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            let i = r.u32()?;
+            let c = r.u64()?;
+            buckets.push((i, c));
+        }
+        hists.push(HistSnapshot { count, sum_us, buckets });
+    }
+    Ok(ProcBlob { label, wall_anchor_us, begin_recv_us, names, rings, hists })
+}
+
+// ---------------------------------------------------------------------------
+// Trace merger
+// ---------------------------------------------------------------------------
+
+/// Normalized event on the trainer timeline.
+struct Ev {
+    ts_us: u64,
+    dur_us: u32,
+    kind: u8,
+    name: u32, // merger-local name id
+    a: u64,
+}
+
+struct ThreadEvents {
+    tid: u32,
+    label: String,
+    events: Vec<Ev>,
+}
+
+struct ProcEvents {
+    label: String,
+    threads: Vec<ThreadEvents>,
+    /// Latest cumulative histogram state shipped by this process.
+    hists: Vec<HistSnapshot>,
+    dropped: u64,
+}
+
+/// Merges per-process telemetry blobs onto the trainer's timeline and emits
+/// the Chrome-trace JSON plus an aggregate summary.
+pub struct TraceMerger {
+    names: Vec<String>,
+    name_ids: HashMap<String, u32>,
+    procs: Vec<ProcEvents>,
+}
+
+impl Default for TraceMerger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceMerger {
+    pub fn new() -> TraceMerger {
+        TraceMerger { names: Vec::new(), name_ids: HashMap::new(), procs: Vec::new() }
+    }
+
+    fn name_id(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.name_ids.get(name) {
+            return id;
+        }
+        self.names.push(name.to_string());
+        let id = self.names.len() as u32 - 1;
+        self.name_ids.insert(name.to_string(), id);
+        id
+    }
+
+    fn proc_slot(&mut self, label: &str) -> usize {
+        if let Some(i) = self.procs.iter().position(|p| p.label == label) {
+            return i;
+        }
+        self.procs.push(ProcEvents {
+            label: label.to_string(),
+            threads: Vec::new(),
+            hists: Vec::new(),
+            dropped: 0,
+        });
+        self.procs.len() - 1
+    }
+
+    fn absorb_rings(
+        &mut self,
+        slot: usize,
+        names: &[String],
+        rings: Vec<RingDrain>,
+        offset_us: i64,
+    ) {
+        for d in rings {
+            let mapped: Vec<Ev> = d
+                .records
+                .iter()
+                .map(|r| {
+                    let raw = names
+                        .get(r.name_id.wrapping_sub(1) as usize)
+                        .map(|s| s.as_str())
+                        .unwrap_or("?");
+                    let name = self.name_id(raw);
+                    let ts = (r.t_us as i64 + offset_us).max(0) as u64;
+                    Ev { ts_us: ts, dur_us: r.dur_us, kind: r.kind, name, a: r.a }
+                })
+                .collect();
+            let p = &mut self.procs[slot];
+            p.dropped += d.dropped;
+            match p.threads.iter_mut().find(|t| t.tid == d.tid) {
+                Some(t) => t.events.extend(mapped),
+                None => p.threads.push(ThreadEvents { tid: d.tid, label: d.label, events: mapped }),
+            }
+        }
+    }
+
+    /// Drain and absorb this process's own rings (offset 0).  Call once per
+    /// iteration on the trainer so rings never wrap between merges.
+    pub fn absorb_local(&mut self) {
+        let rings = drain_all();
+        let names = names_snapshot();
+        let slot = self.proc_slot(&proc_label().to_string());
+        self.absorb_rings(slot, &names, rings, 0);
+    }
+
+    /// Absorb a worker's shipped blob.  `trainer_begin_put_us` is the
+    /// trainer's monotonic µs when it put the latest begin key for this
+    /// worker (0 = unknown): the causality clamp — the worker cannot have
+    /// received that begin earlier than the trainer put it.
+    pub fn absorb_blob(&mut self, bytes: &[u8], trainer_begin_put_us: u64) -> Result<()> {
+        let blob = parse_blob(bytes)?;
+        let trainer_anchor = WALL_ANCHOR_US.load(Ordering::Relaxed) as i64;
+        let mut offset = blob.wall_anchor_us as i64 - trainer_anchor;
+        if blob.begin_recv_us > 0 && trainer_begin_put_us > 0 {
+            offset = offset.max(trainer_begin_put_us as i64 - blob.begin_recv_us as i64);
+        }
+        let slot = self.proc_slot(&blob.label);
+        self.procs[slot].hists = blob.hists;
+        self.absorb_rings(slot, &blob.names, blob.rings, offset);
+        Ok(())
+    }
+
+    /// Render the merged timeline as Chrome trace events (JSON array),
+    /// globally sorted by timestamp.  pid 0 is the trainer (first absorbed
+    /// process); workers follow in absorb order.
+    pub fn chrome_trace_json(&self) -> String {
+        let mut lines: Vec<(u64, String)> = Vec::new();
+        let mut meta: Vec<String> = Vec::new();
+        for (pid, p) in self.procs.iter().enumerate() {
+            meta.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\"args\":{{\"name\":{}}}}}",
+                json_str(&p.label)
+            ));
+            for t in &p.threads {
+                meta.push(format!(
+                    "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\"name\":\"thread_name\",\"args\":{{\"name\":{}}}}}",
+                    t.tid,
+                    json_str(&t.label)
+                ));
+                for e in &t.events {
+                    let name = json_str(&self.names[e.name as usize]);
+                    let line = match e.kind {
+                        KIND_SPAN => format!(
+                            "{{\"name\":{name},\"ph\":\"X\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"dur\":{}}}",
+                            t.tid, e.ts_us, e.dur_us
+                        ),
+                        KIND_COUNTER => format!(
+                            "{{\"name\":{name},\"ph\":\"C\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"args\":{{\"value\":{}}}}}",
+                            t.tid, e.ts_us, e.a
+                        ),
+                        _ => format!(
+                            "{{\"name\":{name},\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{},\"ts\":{},\"args\":{{\"a\":{}}}}}",
+                            t.tid, e.ts_us, e.a
+                        ),
+                    };
+                    lines.push((e.ts_us, line));
+                }
+            }
+        }
+        lines.sort_by_key(|&(ts, _)| ts);
+        let mut out = String::from("[\n");
+        let mut first = true;
+        for m in meta.into_iter().chain(lines.into_iter().map(|(_, l)| l)) {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&m);
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Aggregate the merged records: per-span-name duration stats, per-event
+    /// totals, and per-histogram percentiles (trainer's live histograms plus
+    /// the latest shipped state of every worker).
+    pub fn summary(&self) -> Summary {
+        let mut spans: HashMap<u32, Vec<u64>> = HashMap::new();
+        let mut events: HashMap<u32, (u64, u64)> = HashMap::new();
+        let mut counters: HashMap<u32, (u64, u64)> = HashMap::new();
+        let mut dropped = 0u64;
+        for p in &self.procs {
+            dropped += p.dropped;
+            for t in &p.threads {
+                for e in &t.events {
+                    match e.kind {
+                        KIND_SPAN => spans.entry(e.name).or_default().push(e.dur_us as u64),
+                        KIND_COUNTER => {
+                            let c = counters.entry(e.name).or_insert((0, 0));
+                            c.0 += 1;
+                            c.1 += e.a;
+                        }
+                        _ => {
+                            let c = events.entry(e.name).or_insert((0, 0));
+                            c.0 += 1;
+                            c.1 += e.a;
+                        }
+                    }
+                }
+            }
+        }
+        let mut span_rows: Vec<SpanAgg> = spans
+            .into_iter()
+            .map(|(name, mut durs)| {
+                durs.sort_unstable();
+                let total: u64 = durs.iter().sum();
+                let pick = |p: f64| durs[((p * (durs.len() - 1) as f64).round() as usize).min(durs.len() - 1)];
+                SpanAgg {
+                    name: self.names[name as usize].clone(),
+                    count: durs.len() as u64,
+                    total_us: total,
+                    p50_us: pick(0.50),
+                    p99_us: pick(0.99),
+                    max_us: *durs.last().unwrap(),
+                }
+            })
+            .collect();
+        span_rows.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        let to_rows = |m: HashMap<u32, (u64, u64)>| {
+            let mut rows: Vec<(String, u64, u64)> = m
+                .into_iter()
+                .map(|(name, (count, sum))| (self.names[name as usize].clone(), count, sum))
+                .collect();
+            rows.sort_by(|a, b| a.0.cmp(&b.0));
+            rows
+        };
+        // Trainer histograms are live statics; workers shipped theirs.
+        let mut hists: Vec<HistAgg> = Vec::new();
+        let local = snapshot_all_hists();
+        for (i, name) in HIST_NAMES.iter().enumerate() {
+            let mut dense = [0u64; N_BUCKETS];
+            let mut count = 0u64;
+            let mut sum_us = 0u64;
+            let mut add = |h: &HistSnapshot| {
+                count += h.count;
+                sum_us += h.sum_us;
+                for &(bi, c) in &h.buckets {
+                    dense[bi as usize] += c;
+                }
+            };
+            add(&local[i]);
+            for p in &self.procs {
+                if p.label != proc_label() {
+                    if let Some(h) = p.hists.get(i) {
+                        add(h);
+                    }
+                }
+            }
+            let snap = HistSnapshot {
+                count,
+                sum_us,
+                buckets: dense
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(bi, &c)| (bi as u32, c))
+                    .collect(),
+            };
+            hists.push(HistAgg {
+                name: name.to_string(),
+                count,
+                sum_us,
+                p50_us: snap.percentile_us(0.50),
+                p99_us: snap.percentile_us(0.99),
+            });
+        }
+        Summary {
+            spans: span_rows,
+            events: to_rows(events),
+            counters: to_rows(counters),
+            hists,
+            dropped_records: dropped,
+            n_procs: self.procs.len() as u64,
+        }
+    }
+}
+
+/// Aggregated statistics for one span name across the whole run.
+pub struct SpanAgg {
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Aggregated histogram row (merged across processes).
+pub struct HistAgg {
+    pub name: String,
+    pub count: u64,
+    pub sum_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// Run-wide aggregate emitted as `TELEMETRY_{run}.json`.
+pub struct Summary {
+    pub spans: Vec<SpanAgg>,
+    /// `(name, count, sum_of_payload)` for instant events.
+    pub events: Vec<(String, u64, u64)>,
+    /// `(name, count, sum_of_values)` for counter samples.
+    pub counters: Vec<(String, u64, u64)>,
+    pub hists: Vec<HistAgg>,
+    pub dropped_records: u64,
+    pub n_procs: u64,
+}
+
+impl Summary {
+    /// Render as JSON, with caller-supplied extra numeric sections (store /
+    /// pool / batch / supervision counters) appended verbatim.
+    pub fn to_json(&self, run: &str, extra_sections: &[(&str, Vec<(String, f64)>)]) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"run\": {},\n", json_str(run)));
+        s.push_str(&format!("  \"processes\": {},\n", self.n_procs));
+        s.push_str(&format!("  \"dropped_records\": {},\n", self.dropped_records));
+        s.push_str("  \"spans\": [\n");
+        for (i, r) in self.spans.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"count\": {}, \"total_us\": {}, \"p50_us\": {}, \"p99_us\": {}, \"max_us\": {}}}{}\n",
+                json_str(&r.name), r.count, r.total_us, r.p50_us, r.p99_us, r.max_us,
+                if i + 1 < self.spans.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"hists\": [\n");
+        for (i, r) in self.hists.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"count\": {}, \"sum_us\": {}, \"p50_us\": {}, \"p99_us\": {}}}{}\n",
+                json_str(&r.name), r.count, r.sum_us, r.p50_us, r.p99_us,
+                if i + 1 < self.hists.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"events\": [\n");
+        for (i, (name, count, sum)) in self.events.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"count\": {}, \"sum\": {}}}{}\n",
+                json_str(name),
+                count,
+                sum,
+                if i + 1 < self.events.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"counters\": [\n");
+        for (i, (name, count, sum)) in self.counters.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"count\": {}, \"sum\": {}}}{}\n",
+                json_str(name),
+                count,
+                sum,
+                if i + 1 < self.counters.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]");
+        for (section, rows) in extra_sections {
+            s.push_str(&format!(",\n  {}: {{", json_str(section)));
+            for (i, (k, v)) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "{}\"{}\": {}",
+                    if i == 0 { "" } else { ", " },
+                    k,
+                    fmt_f64(*v)
+                ));
+            }
+            s.push('}');
+        }
+        s.push_str("\n}\n");
+        s
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse `"__relexi:ctl:tel:wK"`-shipped blob sender label "wK" to a worker
+/// index, used by tests and the gather path.
+pub fn worker_label(w: usize) -> String {
+    format!("w{w}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math_floor_is_consistent() {
+        // floor(idx(v)) <= v, and v < floor(idx(v)+1) for every probe.
+        let probes: Vec<u64> = (0..64)
+            .flat_map(|o| {
+                let base = 1u64 << o.min(62);
+                vec![base, base + 1, base + base / 3, base * 2 - 1]
+            })
+            .chain(0..40)
+            .collect();
+        for &v in &probes {
+            let idx = bucket_index(v);
+            assert!(idx < N_BUCKETS, "idx {idx} out of range for {v}");
+            assert!(bucket_floor(idx) <= v, "floor({idx})={} > {v}", bucket_floor(idx));
+            if idx + 1 < N_BUCKETS {
+                assert!(
+                    v < bucket_floor(idx + 1),
+                    "{v} >= next floor {}",
+                    bucket_floor(idx + 1)
+                );
+            }
+        }
+        // Bucket index is monotone in the value.
+        let mut last = 0;
+        for v in 0..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i >= last);
+            last = i;
+        }
+    }
+
+    #[test]
+    fn bucket_floor_is_strictly_increasing() {
+        for i in 1..N_BUCKETS {
+            assert!(bucket_floor(i) > bucket_floor(i - 1), "bucket {i} not increasing");
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_drops_oldest_and_counts() {
+        let ring = Ring::new(32, 0, "test".into());
+        for k in 0..37u64 {
+            ring.push(Record::new(k, k, 0, 1, KIND_INSTANT));
+        }
+        let (records, dropped) = ring.drain();
+        assert_eq!(dropped, 5, "oldest 5 of 37 must be dropped at capacity 32");
+        assert_eq!(records.len(), 32);
+        // Survivors are the newest 32, oldest first.
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.t_us, 5 + i as u64);
+        }
+        // Incremental drain: nothing new yet.
+        let (records, dropped) = ring.drain();
+        assert!(records.is_empty());
+        assert_eq!(dropped, 0);
+        ring.push(Record::new(99, 0, 0, 1, KIND_INSTANT));
+        let (records, dropped) = ring.drain();
+        assert_eq!(records.len(), 1);
+        assert_eq!(dropped, 0);
+        assert_eq!(records[0].t_us, 99);
+    }
+
+    #[test]
+    fn hist_percentiles_from_known_values() {
+        let mut dense = [0u64; N_BUCKETS];
+        // 99 samples at ~100us, 1 sample at ~100ms.
+        dense[bucket_index(100)] = 99;
+        dense[bucket_index(100_000)] = 1;
+        let snap = HistSnapshot {
+            count: 100,
+            sum_us: 99 * 100 + 100_000,
+            buckets: dense
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| (i as u32, c))
+                .collect(),
+        };
+        let p50 = snap.percentile_us(0.50);
+        let p99 = snap.percentile_us(0.99);
+        let p999 = snap.percentile_us(0.999);
+        assert!(p50 >= 64 && p50 <= 100, "p50 {p50} should bracket 100us");
+        assert!(p99 >= 64 && p99 <= 100, "p99 {p99} should still be in the 100us bucket");
+        assert!(p999 >= 65_536, "p99.9 {p999} should land in the 100ms bucket");
+    }
+
+    #[test]
+    fn hist_snapshot_diff_subtracts() {
+        let early = HistSnapshot { count: 5, sum_us: 500, buckets: vec![(20, 5)] };
+        let late = HistSnapshot { count: 8, sum_us: 1100, buckets: vec![(20, 5), (24, 3)] };
+        let d = late.since(&early);
+        assert_eq!(d.count, 3);
+        assert_eq!(d.sum_us, 600);
+        assert_eq!(d.buckets, vec![(24, 3)]);
+    }
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn blob_roundtrip_preserves_records_and_names() {
+        // Build a blob by hand (serialize_process drains *global* state,
+        // which other tests share; the wire format is what's under test).
+        let mut b = Vec::new();
+        b.extend_from_slice(BLOB_MAGIC);
+        w_str(&mut b, "w7");
+        w_u64(&mut b, 1_000_000); // wall anchor
+        w_u64(&mut b, 42); // begin recv
+        w_u32(&mut b, 2);
+        w_str(&mut b, "wave.step");
+        w_str(&mut b, "frame.put");
+        w_u32(&mut b, 1); // one ring
+        w_u32(&mut b, 3); // tid
+        w_str(&mut b, "ctl");
+        w_u64(&mut b, 7); // dropped
+        w_u32(&mut b, 2); // two records
+        for (t, a, dur, id, kind) in
+            [(10u64, 0u64, 5u32, 1u32, KIND_SPAN), (20, 4096, 0, 2, KIND_INSTANT)]
+        {
+            w_u64(&mut b, t);
+            w_u64(&mut b, a);
+            w_u32(&mut b, dur);
+            w_u32(&mut b, id);
+            w_u8(&mut b, kind);
+        }
+        w_u32(&mut b, 1); // one hist
+        w_u64(&mut b, 9);
+        w_u64(&mut b, 900);
+        w_u32(&mut b, 1);
+        w_u32(&mut b, 22);
+        w_u64(&mut b, 9);
+
+        let blob = parse_blob(&b).unwrap();
+        assert_eq!(blob.label, "w7");
+        assert_eq!(blob.wall_anchor_us, 1_000_000);
+        assert_eq!(blob.begin_recv_us, 42);
+        assert_eq!(blob.names, vec!["wave.step", "frame.put"]);
+        assert_eq!(blob.rings.len(), 1);
+        assert_eq!(blob.rings[0].tid, 3);
+        assert_eq!(blob.rings[0].dropped, 7);
+        assert_eq!(blob.rings[0].records.len(), 2);
+        assert_eq!(blob.rings[0].records[1].a, 4096);
+        assert_eq!(blob.hists[0].count, 9);
+        assert_eq!(blob.hists[0].buckets, vec![(22, 9)]);
+
+        // Truncation must error, not panic.
+        assert!(parse_blob(&b[..b.len() - 3]).is_err());
+        assert!(parse_blob(b"RTLX").is_err());
+    }
+
+    #[test]
+    fn merger_aligns_clamps_and_sorts() {
+        let mut m = TraceMerger::new();
+        // Local process (the "trainer" in this test): absorb a hand-built
+        // ring at offset 0 via the blob path with anchor == local anchor.
+        let anchor = WALL_ANCHOR_US.load(Ordering::Relaxed);
+        let mk_blob = |label: &str, wall: u64, begin_recv: u64, t0: u64| {
+            let mut b = Vec::new();
+            b.extend_from_slice(BLOB_MAGIC);
+            w_str(&mut b, label);
+            w_u64(&mut b, wall);
+            w_u64(&mut b, begin_recv);
+            w_u32(&mut b, 1);
+            w_str(&mut b, "wave.step");
+            w_u32(&mut b, 1);
+            w_u32(&mut b, 0);
+            w_str(&mut b, "main");
+            w_u64(&mut b, 0);
+            w_u32(&mut b, 1);
+            w_u64(&mut b, t0);
+            w_u64(&mut b, 0);
+            w_u32(&mut b, 10);
+            w_u32(&mut b, 1);
+            w_u8(&mut b, KIND_SPAN);
+            w_u32(&mut b, 0); // no hists
+            b
+        };
+        // Worker clock identical to trainer's, but its "begin recv" (t=5)
+        // precedes the trainer's put (t=1000): the clamp must shift it.
+        m.absorb_blob(&mk_blob("w0", anchor, 5, 5), 1000).unwrap();
+        let json = m.chrome_trace_json();
+        // Clamp: offset = max(0, 1000 - 5) = 995, so ts = 5 + 995 = 1000.
+        assert!(json.contains("\"ts\":1000"), "clamped ts missing: {json}");
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"wave.step\""));
+        // Events are globally sorted by ts.
+        let mut last = 0u64;
+        for part in json.split("\"ts\":").skip(1) {
+            let ts: u64 =
+                part.split(|c: char| !c.is_ascii_digit()).next().unwrap().parse().unwrap();
+            assert!(ts >= last, "trace not sorted: {ts} after {last}");
+            last = ts;
+        }
+        let summary = m.summary();
+        let wave = summary.spans.iter().find(|s| s.name == "wave.step").unwrap();
+        assert_eq!(wave.count, 1);
+        assert_eq!(wave.total_us, 10);
+        let json = summary.to_json("test", &[("store", vec![("frames".into(), 3.0)])]);
+        assert!(json.contains("\"store\": {\"frames\": 3}"), "{json}");
+    }
+
+    #[test]
+    fn summary_json_is_parseable() {
+        let m = TraceMerger::new();
+        let s = m.summary().to_json("run", &[("pool", vec![("hits".into(), 1.5)])]);
+        crate::util::binio::Json::parse(&s).expect("summary JSON must parse");
+    }
+
+    #[test]
+    fn disabled_sites_record_nothing() {
+        // Regardless of what other tests did, force-disable and verify the
+        // macro entry points bail before touching rings.
+        let was = ENABLED.swap(false, Ordering::Relaxed);
+        let before: u64 = REGISTRY.lock().unwrap().iter().map(|r| r.head.load(Ordering::Relaxed)).sum();
+        {
+            let _sp = crate::span!("tel.test.noop");
+            crate::tevent!("tel.test.noop_ev", 1);
+            HistId::StorePut.observe_us(10);
+        }
+        let after: u64 = REGISTRY.lock().unwrap().iter().map(|r| r.head.load(Ordering::Relaxed)).sum();
+        assert_eq!(before, after, "disabled telemetry must not record");
+        ENABLED.store(was, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn enabled_sites_record_spans_and_events() {
+        // Run in a dedicated thread so this test's ring is its own.
+        let was = ENABLED.swap(true, Ordering::Relaxed);
+        let drained = std::thread::Builder::new()
+            .name("tel-test".into())
+            .spawn(|| {
+                {
+                    let _sp = crate::span!("tel.test.span");
+                    crate::tevent!("tel.test.event", 123);
+                    crate::tcount!("tel.test.count", 7);
+                }
+                LOCAL_RING.with(|c| c.get_or_init(make_ring).drain())
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        ENABLED.store(was, Ordering::Relaxed);
+        let (records, dropped) = drained;
+        assert_eq!(dropped, 0);
+        // Event + counter land before the span (span records on drop).
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0].kind, KIND_INSTANT);
+        assert_eq!(records[0].a, 123);
+        assert_eq!(records[1].kind, KIND_COUNTER);
+        assert_eq!(records[1].a, 7);
+        assert_eq!(records[2].kind, KIND_SPAN);
+        // The span encloses the events: start <= event ts <= start + dur.
+        assert!(records[2].t_us <= records[0].t_us);
+        assert!(records[0].t_us <= records[2].t_us + records[2].dur_us as u64);
+    }
+}

@@ -258,6 +258,60 @@ fn steady_state_exchange_allocates_nothing() {
 }
 
 #[test]
+fn steady_state_exchange_allocates_nothing_with_telemetry_on() {
+    // PR-10 twin of the gate above: the instrumented hot path — wave
+    // spans, exchange-wait histogram, frame events — must not cost the
+    // exchange its zero-alloc steady state.  Telemetry's own ring
+    // buffers warm up at thread registration (iteration 0 at the
+    // latest) and are excluded from `exchange_allocs` by construction;
+    // this proves the instrumentation doesn't push tensor traffic off
+    // the pooled path.  The switch is process-wide but only this
+    // binary's pool counters are asserted on, so parallel tests are
+    // unaffected.
+    relexi::util::telemetry::init(true, 65_536, "error", "trainer");
+    let mut cfg = tiny_cfg(3);
+    cfg.orchestrator.transport = "inproc".to_string();
+    let n_envs = cfg.rl.n_envs;
+    let orch = Orchestrator::launch(cfg.hpc.db_shards);
+    let mut pool = EnvPool::new(cfg, tiny_truth(22), &orch).unwrap();
+    let mut rng = Rng::new(9);
+
+    let mut allocs_after = Vec::new();
+    for it in 0..4 {
+        let proto = Protocol::new(&format!("zt{it}"));
+        let r = pool
+            .collect_with(&orch, &proto, stub_policy, &mut rng, false, n_envs)
+            .unwrap();
+        assert_eq!(r.episodes.len(), n_envs);
+        orch.clear();
+        allocs_after.push(pool.counters().exchange_allocs);
+    }
+
+    // Prove the gate exercised the telemetry-ON path: the wave spans
+    // must actually have been recorded.
+    assert!(relexi::util::telemetry::enabled());
+    let mut merger = relexi::util::telemetry::TraceMerger::new();
+    merger.absorb_local();
+    let summary = merger.summary();
+    let collect = summary
+        .spans
+        .iter()
+        .find(|s| s.name == "wave.collect")
+        .expect("wave.collect spans must be recorded with telemetry on");
+    assert!(collect.count >= 4, "one span per iteration: {}", collect.count);
+
+    assert!(allocs_after[0] > 0, "pools must warm up during iteration 0");
+    for it in 1..4 {
+        assert_eq!(
+            allocs_after[it],
+            allocs_after[0],
+            "iteration {it} allocated exchange buffers in steady state with telemetry on: {allocs_after:?}"
+        );
+    }
+    relexi::util::telemetry::init(false, 65_536, "error", "trainer");
+}
+
+#[test]
 fn collection_wave_subscription_ops_are_linear() {
     // The PR-4 acceptance counter: the event-driven collector holds one
     // persistent store subscription per sampling phase and applies only

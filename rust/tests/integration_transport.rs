@@ -780,6 +780,196 @@ fn max_respawns_exhaustion_degrades_to_short_wave() {
     orch.clear();
 }
 
+// ----------------------------------------------------- telemetry smoke
+
+#[test]
+fn tcp_loopback_telemetry_merged_trace_is_valid_and_bit_identical() {
+    // PR-10 acceptance: a full `relexi train` over loopback-TCP worker
+    // processes with `[telemetry] enabled = true` must (a) train
+    // bit-identically to the telemetry-off run at the same seed, and
+    // (b) emit ONE merged Chrome-trace JSON spanning the trainer and
+    // both env-worker processes — valid JSON, events globally sorted by
+    // timestamp, spans properly nested per (pid, tid), and the frame
+    // instant-events equal to the exchange's `StoreStats.frames`.
+    // Runs in child processes so the process-wide telemetry switch
+    // cannot interact with concurrently running tests.
+    use relexi::util::binio::Json;
+    use std::collections::{HashMap, HashSet};
+    use std::path::PathBuf;
+
+    let dir = std::env::temp_dir().join(format!("relexi_telemetry_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let run_train = |telemetry: bool, sub: &str| -> PathBuf {
+        let work = dir.join(sub);
+        std::fs::create_dir_all(&work).unwrap();
+        let mut cfg = burgers8_procs_cfg();
+        cfg.runtime.backend = "native".to_string();
+        cfg.rl.iterations = 2;
+        cfg.rl.eval_every = 0;
+        cfg.rl.minibatch = 32;
+        cfg.out_dir = work.join("out").to_string_lossy().into_owned();
+        cfg.telemetry.enabled = telemetry;
+        cfg.telemetry.log_level = "warn".to_string();
+        let cfg_path = work.join("config.toml");
+        std::fs::write(&cfg_path, cfg.to_toml_string()).unwrap();
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_relexi"))
+            .arg("train")
+            .arg("--config")
+            .arg(&cfg_path)
+            .current_dir(&work)
+            .output()
+            .expect("spawn relexi train");
+        assert!(
+            out.status.success(),
+            "train (telemetry={telemetry}) failed:\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        work
+    };
+
+    let off = run_train(false, "off");
+    let on = run_train(true, "on");
+
+    // (a) Telemetry must not perturb the run: bit-identical final
+    // checkpoint, and identical deterministic CSV columns (the trailing
+    // exchange_p50/p99/frames columns legitimately differ).
+    let ck_off = std::fs::read(off.join("out/policy_final.bin")).unwrap();
+    let ck_on = std::fs::read(on.join("out/policy_final.bin")).unwrap();
+    assert_eq!(ck_off, ck_on, "telemetry-on training must be bit-identical");
+    let csv_off = std::fs::read_to_string(off.join("out/training.csv")).unwrap();
+    let csv_on = std::fs::read_to_string(on.join("out/training.csv")).unwrap();
+    assert_eq!(csv_off.lines().count(), csv_on.lines().count());
+    // Deterministic columns only: returns and PPO diagnostics (the
+    // *_time_s columns are wall clock, and the trailing exchange columns
+    // are the telemetry deltas themselves).
+    let det = [0usize, 1, 2, 3, 4, 9, 10, 11];
+    for (a, b) in csv_off.lines().zip(csv_on.lines()) {
+        let ca: Vec<&str> = a.split(',').collect();
+        let cb: Vec<&str> = b.split(',').collect();
+        for &i in &det {
+            assert_eq!(ca[i], cb[i], "deterministic CSV column {i} must match");
+        }
+    }
+
+    // (b) Exactly one merged trace + one aggregate, only in the
+    // telemetry-on run's working directory.
+    let find = |work: &PathBuf, prefix: &str| -> Vec<PathBuf> {
+        std::fs::read_dir(work)
+            .unwrap()
+            .filter_map(|e| {
+                let p = e.unwrap().path();
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(prefix) && n.ends_with(".json"))
+                    .then_some(p)
+            })
+            .collect()
+    };
+    assert!(find(&off, "TRACE_").is_empty(), "telemetry-off run must not trace");
+    assert!(find(&off, "TELEMETRY_").is_empty());
+    let traces = find(&on, "TRACE_");
+    let tels = find(&on, "TELEMETRY_");
+    assert_eq!(traces.len(), 1, "exactly one merged trace: {traces:?}");
+    assert_eq!(tels.len(), 1, "exactly one telemetry aggregate: {tels:?}");
+
+    let trace =
+        Json::parse(&std::fs::read_to_string(&traces[0]).unwrap()).expect("trace is valid JSON");
+    let events = trace.arr().expect("chrome trace is a JSON array");
+    assert!(!events.is_empty());
+
+    // Process coverage: trainer + both env-worker processes in ONE file.
+    let mut procs: HashSet<String> = HashSet::new();
+    for e in events {
+        if e.get("ph").unwrap().str().unwrap() == "M"
+            && e.get("name").unwrap().str().unwrap() == "process_name"
+        {
+            procs.insert(e.get("args").unwrap().get("name").unwrap().str().unwrap().to_string());
+        }
+    }
+    for want in ["trainer", "w0", "w1"] {
+        assert!(procs.contains(want), "trace must span {want}: got {procs:?}");
+    }
+
+    // Global timestamp order, per-(pid,tid) span nesting, frame events.
+    let mut last_ts = f64::MIN;
+    let mut spans_by_thread: HashMap<(i64, i64), Vec<(f64, f64, String)>> = HashMap::new();
+    let mut frame_events = 0u64;
+    let mut span_names: HashSet<String> = HashSet::new();
+    for e in events {
+        let ph = e.get("ph").unwrap().str().unwrap();
+        if ph == "M" {
+            continue;
+        }
+        let ts = e.get("ts").unwrap().num().unwrap();
+        assert!(ts >= last_ts, "trace events must be globally sorted by ts");
+        last_ts = ts;
+        let pid = e.get("pid").unwrap().num().unwrap() as i64;
+        let tid = e.get("tid").unwrap().num().unwrap() as i64;
+        let name = e.get("name").unwrap().str().unwrap();
+        match ph {
+            "X" => {
+                let dur = e.get("dur").unwrap().num().unwrap();
+                assert!(dur >= 0.0);
+                span_names.insert(name.to_string());
+                spans_by_thread
+                    .entry((pid, tid))
+                    .or_default()
+                    .push((ts, dur, name.to_string()));
+            }
+            "i" => {
+                if name.starts_with("frame.") {
+                    frame_events += 1;
+                }
+            }
+            "C" => {}
+            other => panic!("unexpected trace phase {other:?}"),
+        }
+    }
+    // Spans on one thread come from nested RAII guards, so as intervals
+    // they must strictly nest (never partially overlap).  Sort by
+    // (start asc, duration desc) — at equal starts the enclosing span
+    // comes first — and stack-check the intervals.
+    for ((pid, tid), mut spans) in spans_by_thread {
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<f64> = Vec::new();
+        for (ts, dur, name) in spans {
+            while stack.last().is_some_and(|&end| end <= ts) {
+                stack.pop();
+            }
+            if let Some(&end) = stack.last() {
+                assert!(
+                    ts + dur <= end,
+                    "span {name} [{ts}, {}] on {pid}/{tid} escapes its enclosing span (ends {end})",
+                    ts + dur
+                );
+            }
+            stack.push(ts + dur);
+        }
+    }
+    for want in ["wave.collect", "wave.policy", "train.minibatch", "burgers.wave"] {
+        assert!(span_names.contains(want), "missing span {want}: {span_names:?}");
+    }
+
+    let tel =
+        Json::parse(&std::fs::read_to_string(&tels[0]).unwrap()).expect("aggregate is valid JSON");
+    assert!(tel.get("processes").unwrap().num().unwrap() >= 3.0);
+    let frames = tel.get("store").unwrap().get("frames").unwrap().num().unwrap() as u64;
+    assert!(frames > 0, "remote exchange must have counted data frames");
+    assert_eq!(
+        frame_events, frames,
+        "frame instant-events in the merged trace must equal StoreStats.frames"
+    );
+    // The aggregate folds in the satellite counter sections.
+    for section in ["pool", "supervision", "batch"] {
+        tel.get(section).unwrap_or_else(|_| panic!("aggregate missing section {section:?}"));
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ------------------------------------------------------- worker teardown
 
 #[test]

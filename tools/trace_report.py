@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Render a TELEMETRY_*.json run summary (emitted by
+``rust/src/util/telemetry.rs`` at the end of a telemetry-enabled run)
+into markdown phase tables.
+
+Typical use, after ``relexi train`` with ``[telemetry] enabled = true``::
+
+    python3 tools/trace_report.py TELEMETRY_24dof.json
+
+Sections rendered:
+
+* **spans** — per-phase wall-clock breakdown (count, total, p50/p99/max)
+  sorted by total time, with each phase's share of the total span time;
+* **latency histograms** — the store-op / exchange / policy histogram
+  percentiles;
+* **events / counters** — instant-event and counter totals (frame kinds
+  with byte volumes, supervision incidents, ...);
+* **run counters** — the store/pool/supervision/batch sections the
+  trainer folds in at consolidation.
+
+The per-process interactive view is the matching TRACE_*.json — load it
+in Perfetto (https://ui.perfetto.dev) or chrome://tracing; this tool is
+the CI-artifact-friendly text twin.
+
+Stdlib only — no third-party deps (the image has none to spare).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "spans" not in doc:
+        raise ValueError(f"{path}: not a TELEMETRY_*.json summary")
+    return doc
+
+
+def fmt_us(us: float) -> str:
+    """Human duration from microseconds."""
+    if us >= 1e6:
+        return f"{us / 1e6:.3f} s"
+    if us >= 1e3:
+        return f"{us / 1e3:.3f} ms"
+    return f"{us:.0f} µs"
+
+
+def fmt_count(n: float) -> str:
+    if n >= 1e9:
+        return f"{n / 1e9:.2f}G"
+    if n >= 1e6:
+        return f"{n / 1e6:.2f}M"
+    if n >= 1e3:
+        return f"{n / 1e3:.1f}k"
+    return f"{n:.0f}"
+
+
+def markdown_table(header: list[str], rows: list[list[str]]) -> str:
+    width = [len(h) for h in header]
+    for row in rows:
+        for i, c in enumerate(row):
+            width[i] = max(width[i], len(c))
+
+    def fmt_row(cells: list[str]) -> str:
+        return "|" + "|".join(f" {c:<{w}} " for c, w in zip(cells, width)) + "|"
+
+    lines = [fmt_row(header)]
+    lines.append("|" + "|".join("-" * (w + 2) for w in width) + "|")
+    lines.extend(fmt_row(r) for r in rows)
+    return "\n".join(lines)
+
+
+def span_table(spans: list[dict]) -> str:
+    total_all = sum(float(s.get("total_us", 0)) for s in spans) or 1.0
+    rows = []
+    for s in sorted(spans, key=lambda s: -float(s.get("total_us", 0))):
+        total = float(s.get("total_us", 0))
+        rows.append(
+            [
+                s["name"],
+                fmt_count(float(s.get("count", 0))),
+                fmt_us(total),
+                f"{total / total_all * 100.0:.1f}%",
+                fmt_us(float(s.get("p50_us", 0))),
+                fmt_us(float(s.get("p99_us", 0))),
+                fmt_us(float(s.get("max_us", 0))),
+            ]
+        )
+    return markdown_table(
+        ["span", "count", "total", "share", "p50", "p99", "max"], rows
+    )
+
+
+def hist_table(hists: list[dict]) -> str:
+    rows = []
+    for h in hists:
+        count = float(h.get("count", 0))
+        if count == 0:
+            continue
+        total = float(h.get("sum_us", 0))
+        rows.append(
+            [
+                h["name"],
+                fmt_count(count),
+                fmt_us(total),
+                fmt_us(total / count),
+                fmt_us(float(h.get("p50_us", 0))),
+                fmt_us(float(h.get("p99_us", 0))),
+            ]
+        )
+    return markdown_table(["histogram", "count", "total", "mean", "p50", "p99"], rows)
+
+
+def event_table(events: list[dict], sum_label: str) -> str:
+    rows = []
+    for e in sorted(events, key=lambda e: -float(e.get("count", 0))):
+        rows.append(
+            [
+                e["name"],
+                fmt_count(float(e.get("count", 0))),
+                fmt_count(float(e.get("sum", 0))),
+            ]
+        )
+    return markdown_table(["name", "count", sum_label], rows)
+
+
+def report(path: str, doc: dict) -> None:
+    run = doc.get("run", "?")
+    print(f"## telemetry report — {run} ({path})\n")
+    print(
+        f"processes: {doc.get('processes', '?')}   "
+        f"dropped records: {doc.get('dropped_records', '?')}\n"
+    )
+
+    spans = doc.get("spans", [])
+    if spans:
+        print("### spans\n")
+        print(span_table(spans))
+        print()
+    hists = [h for h in doc.get("hists", []) if float(h.get("count", 0)) > 0]
+    if hists:
+        print("### latency histograms\n")
+        print(hist_table(hists))
+        print()
+    events = doc.get("events", [])
+    if events:
+        print("### events\n")
+        print(event_table(events, "sum (payload)"))
+        print()
+    counters = doc.get("counters", [])
+    if counters:
+        print("### counters\n")
+        print(event_table(counters, "sum (values)"))
+        print()
+
+    sections = [
+        (name, doc[name])
+        for name in ("store", "pool", "supervision", "batch")
+        if isinstance(doc.get(name), dict)
+    ]
+    if sections:
+        print("### run counters\n")
+        rows = [
+            [name, key, fmt_count(float(val))]
+            for name, kv in sections
+            for key, val in kv.items()
+        ]
+        print(markdown_table(["section", "counter", "value"], rows))
+        print()
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Render TELEMETRY_*.json summaries into markdown tables."
+    )
+    ap.add_argument(
+        "summaries", nargs="+", metavar="TELEMETRY_JSON", help="TELEMETRY_*.json files"
+    )
+    args = ap.parse_args(argv)
+
+    status = 0
+    for path in args.summaries:
+        try:
+            doc = load(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            status = 1
+            continue
+        report(path, doc)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
